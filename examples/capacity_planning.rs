@@ -1,0 +1,37 @@
+//! Capacity planning (Fig 12 style): how many GPUs does EconoServe need
+//! to match a DistServe deployment's goodput?
+//!
+//!     cargo run --release --example capacity_planning
+
+use econoserve::cluster::{min_replicas_for_goodput, DistServeConfig, DistServeSim};
+use econoserve::figures::common;
+
+fn main() {
+    let trace = "sharegpt";
+    for model in ["opt-13b", "llama-33b"] {
+        let cfg = common::cfg(model, trace);
+        let rate = common::capacity_estimate(&cfg, trace) * 0.8;
+        let items = common::workload(&cfg, trace, rate, 45.0, 42);
+
+        let dcfg = DistServeConfig::homogeneous(cfg.profile.clone(), &cfg);
+        let dist = DistServeSim::new(dcfg).run(&items, 600.0);
+        let dist_gpus = 2 * cfg.profile.gpus_per_replica;
+        println!(
+            "{model}: DistServe goodput {:.2} req/s on {} GPUs (transfer {:.1}% of JCT)",
+            dist.goodput,
+            dist_gpus,
+            dist.transfer_share * 100.0
+        );
+        match min_replicas_for_goodput(&cfg, "econoserve", trace, &items, false, dist.goodput, 4, 600.0)
+        {
+            Some(k) => {
+                let gpus = k as u32 * cfg.profile.gpus_per_replica;
+                println!(
+                    "  EconoServe matches it with {gpus} GPU(s): {:.0}% fewer\n",
+                    (1.0 - gpus as f64 / dist_gpus as f64) * 100.0
+                );
+            }
+            None => println!("  EconoServe cannot match within 4 replicas\n"),
+        }
+    }
+}

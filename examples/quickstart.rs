@@ -1,0 +1,42 @@
+//! Quickstart: simulate EconoServe on a ShareGPT-like workload and print
+//! the summary — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use econoserve::config::{ModelProfile, SystemConfig};
+use econoserve::coordinator::{harness, RunLimits};
+use econoserve::trace::{TraceGen, TraceSpec};
+
+fn main() {
+    // 1. Pick a hardware/model profile and tune the paper's knobs.
+    let mut cfg = SystemConfig::new(ModelProfile::opt_13b());
+    cfg.padding_ratio = 0.15; // ShareGPT sweet spot (§2.3)
+    cfg.reserve_frac = 0.03;
+    cfg.t_p = 0.05; // SLO constants (see figures::common::cfg for the
+    cfg.t_g = 0.022; // calibrated derivation)
+
+    // 2. Generate a workload calibrated to the paper's Table 2 stats.
+    let spec = TraceSpec::sharegpt();
+    let gen = TraceGen::new(spec);
+    let items = gen.generate_for(60.0, 2.0, cfg.profile.max_total_len, 42);
+    println!("workload: {} requests over 60s @ 2 req/s", items.len());
+
+    // 3. Run the EconoServe scheduler on the calibrated engine.
+    let res = harness::simulate(&cfg, "econoserve", "sharegpt", &items, false, RunLimits::for_time(600.0));
+    let s = &res.summary;
+    println!(
+        "done {}/{} | throughput {:.2} req/s | mean JCT {:.2}s | SSR {:.0}% | \
+         GPU {:.0}% KVC {:.0}%",
+        s.n_done,
+        s.n_total,
+        s.throughput_rps,
+        s.mean_jct,
+        s.ssr * 100.0,
+        s.gpu_util * 100.0,
+        s.kvc_util * 100.0
+    );
+
+    // 4. Compare against vLLM in one line.
+    let v = harness::simulate(&cfg, "vllm", "sharegpt", &items, false, RunLimits::for_time(600.0));
+    println!("vLLM baseline: JCT {:.2}s, SSR {:.0}%", v.summary.mean_jct, v.summary.ssr * 100.0);
+}

@@ -1,0 +1,28 @@
+//! Trace explorer: generate the synthetic Alpaca / ShareGPT / BookCorpus
+//! traces and verify their statistics against the paper's Table 2.
+//!
+//!     cargo run --release --example trace_explorer
+
+use econoserve::trace::{self, TraceGen, TraceSpec};
+
+fn main() {
+    println!("{:<12} {:>9} {:>9} {:>9} | {:>9} {:>9} {:>9} | {:>8}", "trace", "in_avg", "in_min", "in_max", "out_avg", "out_min", "out_max", "rate");
+    for spec in TraceSpec::all() {
+        let gen = TraceGen::new(spec);
+        let items = gen.generate(20_000, spec.default_rate, 4096, 42);
+        let s = trace::stats(&items);
+        println!(
+            "{:<12} {:>9.1} {:>9} {:>9} | {:>9.1} {:>9} {:>9} | {:>8.2}",
+            spec.name, s.in_avg, s.in_min, s.in_max, s.out_avg, s.out_min, s.out_max, s.rate
+        );
+        println!(
+            "{:<12} {:>9.1} {:>9} {:>9} | {:>9.1} {:>9} {:>9} | {:>8.2}  (paper)",
+            "", spec.input.avg, spec.input.min, spec.input.max, spec.output.avg, spec.output.min, spec.output.max, spec.default_rate
+        );
+    }
+    // Show a CDF of same-RL prediction groups (precondition of Fig 2).
+    println!("\nCSV export: target/alpaca.csv");
+    let gen = TraceGen::new(TraceSpec::alpaca());
+    let items = gen.generate(1000, 36.0, 4096, 1);
+    let _ = trace::save_csv(&items, "target/alpaca.csv");
+}

@@ -1,0 +1,216 @@
+"""AOT compiler: lower the L2 model to HLO-text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, NOT ``lowered.compile().serialize()`` —
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The HLO text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/gen_hlo.py).
+
+Outputs (under --out-dir, default ../artifacts):
+
+  manifest.json     — model config, parameter table (name/shape/offset),
+                      artifact descriptions with exact input/output orders.
+  weights.bin       — all parameters as little-endian f32, concatenated in
+                      manifest order.
+  prefill.hlo.txt   — prefill(params..., tokens[1,P], lens[1])
+                      -> (logits[1,V], k[L,1,H,T,hd], v[L,1,H,T,hd])
+  decode.hlo.txt    — decode_step(params..., k, v, lens[B], tokens[B])
+                      -> (logits[B,V], k, v)
+  insert.hlo.txt    — insert_slot(k, v, k_new, v_new, slot)
+                      -> (k, v)
+  golden.json       — a deterministic prompt + the greedy tokens the
+                      python stack produces; rust integration tests replay
+                      it through the artifacts and compare.
+
+Params are passed as a *tuple of leaves* (not a dict) so the HLO parameter
+order is exactly the manifest order, independent of pytree key sorting.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: every program here has a SINGLE array output, so
+    # the HLO root is that array and PJRT returns one plain (non-tuple)
+    # buffer — the property the rust runtime's on-device chaining needs.
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifacts(cfg: M.ModelConfig, params):
+    """Lower the packed-state entry points. Returns {filename: hlo_text}.
+
+    Every program has a SINGLE array output (see model.py's packed-state
+    docs): PJRT returns single-leaf buffers the rust runtime can chain on
+    device without host round-trips.
+    """
+    names = list(params.keys())
+    leaves = tuple(params[n] for n in names)
+    specs = tuple(jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves)
+
+    def prefill_flat(*args):
+        ps = dict(zip(names, args[: len(names)]))
+        tokens, lens = args[len(names) :]
+        return M.prefill_packed(cfg, ps, tokens, lens)
+
+    def decode_flat(*args):
+        ps = dict(zip(names, args[: len(names)]))
+        state, lens, tokens = args[len(names) :]
+        return M.decode_packed(cfg, ps, state, lens, tokens)
+
+    i32 = jnp.int32
+    f32 = jnp.float32
+    tok_spec = jax.ShapeDtypeStruct((1, cfg.max_prompt), i32)
+    len1_spec = jax.ShapeDtypeStruct((1,), i32)
+    state_1 = jax.ShapeDtypeStruct((M.state_elems(cfg, 1),), f32)
+    state_b = jax.ShapeDtypeStruct((M.state_elems(cfg, cfg.decode_slots),), f32)
+    lens_b = jax.ShapeDtypeStruct((cfg.decode_slots,), i32)
+    toks_b = jax.ShapeDtypeStruct((cfg.decode_slots,), i32)
+    slot_spec = jax.ShapeDtypeStruct((), i32)
+
+    return {
+        "prefill.hlo.txt": to_hlo_text(
+            jax.jit(prefill_flat).lower(*specs, tok_spec, len1_spec)
+        ),
+        "decode.hlo.txt": to_hlo_text(
+            jax.jit(decode_flat).lower(*specs, state_b, lens_b, toks_b)
+        ),
+        "insert.hlo.txt": to_hlo_text(
+            jax.jit(lambda sb, s1, slot: M.insert_packed(cfg, sb, s1, slot)).lower(
+                state_b, state_1, slot_spec
+            )
+        ),
+        "logits_1.hlo.txt": to_hlo_text(
+            jax.jit(lambda s: M.read_logits(cfg, s, 1)).lower(state_1)
+        ),
+        "logits_b.hlo.txt": to_hlo_text(
+            jax.jit(lambda s: M.read_logits(cfg, s, cfg.decode_slots)).lower(state_b)
+        ),
+    }
+
+
+def golden_prompt(cfg: M.ModelConfig, seed: int = 7, length: int | None = None):
+    """Deterministic pseudo-prompt in [1, vocab) (0 is reserved for pad)."""
+    length = length or min(12, cfg.max_prompt)
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(1, cfg.vocab, size=(length,), dtype=np.int32)
+    return toks
+
+
+def build(preset: str, out_dir: pathlib.Path, golden_steps: int = 8) -> dict:
+    cfg = M.presets()[preset]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    # --- weights.bin + parameter table --------------------------------
+    names = list(params.keys())
+    table = []
+    offset = 0
+    with open(out_dir / "weights.bin", "wb") as f:
+        for n in names:
+            arr = np.asarray(params[n], dtype=np.float32)
+            f.write(arr.tobytes())  # little-endian on all supported hosts
+            table.append({"name": n, "shape": list(arr.shape), "offset": offset,
+                          "elems": int(arr.size)})
+            offset += int(arr.size)
+
+    # --- HLO artifacts -------------------------------------------------
+    hlos = lower_artifacts(cfg, params)
+    for fname, text in hlos.items():
+        (out_dir / fname).write_text(text)
+
+    # --- golden transcript ---------------------------------------------
+    toks = golden_prompt(cfg)
+    padded = np.zeros((1, cfg.max_prompt), np.int32)
+    padded[0, : len(toks)] = toks
+    lens = jnp.asarray([len(toks)], jnp.int32)
+    gen = M.greedy_generate(cfg, params, jnp.asarray(padded), lens, golden_steps)
+    logits, _, _ = M.prefill(cfg, params, jnp.asarray(padded), lens)
+    golden = {
+        "prompt": toks.tolist(),
+        "prompt_len": int(len(toks)),
+        "steps": golden_steps,
+        "generated": np.asarray(gen)[0].tolist(),
+        "prefill_logits_l2": float(jnp.sqrt(jnp.sum(logits**2))),
+        "prefill_logits_first8": np.asarray(logits)[0, :8].tolist(),
+    }
+    (out_dir / "golden.json").write_text(json.dumps(golden, indent=1))
+
+    manifest = {
+        "preset": preset,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "max_prompt": cfg.max_prompt,
+            "decode_slots": cfg.decode_slots,
+            "head_dim": cfg.head_dim,
+            "param_count": M.param_count(cfg),
+        },
+        "params": table,
+        "artifacts": {
+            "prefill": {
+                "file": "prefill.hlo.txt",
+                "inputs": names + ["tokens[1,max_prompt] i32", "lens[1] i32"],
+                "outputs": ["state_1 (packed kv+logits, f32)"],
+            },
+            "decode": {
+                "file": "decode.hlo.txt",
+                "inputs": names + ["state_b", "lens[slots] i32", "tokens[slots] i32"],
+                "outputs": ["state_b"],
+            },
+            "insert": {
+                "file": "insert.hlo.txt",
+                "inputs": ["state_b", "state_1", "slot i32"],
+                "outputs": ["state_b"],
+            },
+            "logits_1": {"file": "logits_1.hlo.txt", "inputs": ["state_1"], "outputs": ["logits[1,vocab]"]},
+            "logits_b": {"file": "logits_b.hlo.txt", "inputs": ["state_b"], "outputs": ["logits[slots,vocab]"]},
+            "state_elems_1": M.state_elems(cfg, 1),
+            "state_elems_b": M.state_elems(cfg, cfg.decode_slots),
+        },
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=list(M.presets()))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--golden-steps", type=int, default=8)
+    ap.add_argument(
+        "--attention",
+        default="pallas",
+        choices=["pallas", "ref"],
+        help="attention impl lowered into the artifacts (see model.ATTENTION_IMPL)",
+    )
+    args = ap.parse_args()
+    M.ATTENTION_IMPL = args.attention
+    manifest = build(args.preset, pathlib.Path(args.out_dir), args.golden_steps)
+    cfgd = manifest["config"]
+    print(
+        f"AOT ok: preset={manifest['preset']} params={cfgd['param_count']:,} "
+        f"artifacts -> {args.out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""L1 kernel micro-bench + structural report (EXPERIMENTS.md §Perf L1).
+
+Usage:  cd python && python -m compile.bench_kernels
+
+IMPORTANT: the Pallas kernels run under interpret=True here (the CPU PJRT
+backend cannot execute Mosaic custom-calls), so the wallclock numbers are
+NOT a TPU proxy — they only quantify the CPU-serving cost of the faithful
+artifacts vs the numerically-pinned fused-jnp path (aot.py --attention).
+The structural section (VMEM residency / MXU alignment) is what argues
+real-TPU viability.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as A
+from .kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def timeit(fn, *args, iters=10):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(
+        fn(*args)
+    )
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    print("== structural report (real-TPU viability) ==")
+    for b, h, p, d, t in [(8, 4, 64, 64, 160), (8, 32, 2048, 128, 4096)]:
+        rep = A.vmem_report(b=b, h=h, p=p, d=d, t=t)
+        print(
+            f"  B={b} H={h} P={p} D={d} T={t}: decode {rep['decode_bytes_per_program']/1024:.0f} KiB"
+            f" / prefill {rep['prefill_bytes_per_program']/1024:.0f} KiB per program"
+            f" (budget {rep['vmem_budget_bytes']//(1024*1024)} MiB;"
+            f" programs {rep['decode_programs']}/{rep['prefill_programs']})"
+        )
+
+    print("\n== CPU wallclock: interpret-mode pallas vs fused jnp oracle ==")
+    shapes = [(8, 4, 160, 64), (8, 8, 512, 64)]
+    for b, h, t, d in shapes:
+        q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, h, t, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, h, t, d)), jnp.float32)
+        lens = jnp.asarray(rng.integers(1, t, size=(b,)), jnp.int32)
+        tp = timeit(jax.jit(lambda *a: A.decode_attention(*a)), q, k, v, lens)
+        tr = timeit(jax.jit(lambda *a: R.ref_decode_attention(*a)), q, k, v, lens)
+        print(
+            f"  decode B={b} H={h} T={t} D={d}: pallas(interpret) {tp*1e3:8.2f} ms"
+            f" | jnp-ref {tr*1e3:8.2f} ms | ratio {tp/tr:6.1f}x"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Pallas attention kernels (L1) for the EconoServe serving stack.
+
+Two kernels, both flash-attention style (online softmax, never materialize
+the full score matrix):
+
+  * ``decode_attention``  — one new query token per sequence against a
+    padded KV cache. This is the per-iteration hot spot of the *generation
+    tasks* (GTs) in the paper.
+  * ``prefill_attention`` — causal attention over a padded prompt. This is
+    the hot spot of the *prompt-processing tasks* (PTs).
+
+TPU adaptation of the paper's GPU hot path (see DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging HBM->shared
+memory, the HBM->VMEM schedule is expressed through BlockSpecs (one
+(batch, head) — and for prefill, query-tile — program instance per grid
+step) and an inner ``fori_loop`` over KV tiles sized for VMEM residency.
+Matmul shapes keep the head dim as the 128-lane minor axis so the MXU sees
+well-formed (tile x D) x (D) / (tile x D) contractions; accumulation is
+always f32 regardless of the input dtype.
+
+Kernels MUST be run with ``interpret=True`` on this image: CPU PJRT cannot
+execute Mosaic custom-calls. Correctness is pinned to the pure-jnp oracle
+in ref.py by python/tests/test_kernel.py (hypothesis sweeps shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# KV-tile length. 128 keeps the second-minor dimension MXU/VPU aligned and
+# bounds per-step VMEM at (KV_TILE x D) x 2 (K and V) x 4B — for D=128 that
+# is 128KiB, far under the ~16MiB VMEM budget, leaving room for
+# double-buffering on real hardware.
+KV_TILE = 128
+# Query-tile length for prefill.
+Q_TILE = 64
+
+
+def _pad_axis(x, axis, multiple):
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``."""
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Decode kernel
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, *, kv_tiles, scale):
+    """One (batch, head) program instance: q [1,1,D] vs cache [1,1,T,D]."""
+    q = q_ref[0, 0, :].astype(jnp.float32)  # [D]
+    seq_len = lens_ref[0]
+
+    def body(i, carry):
+        m, s, acc = carry
+        start = i * KV_TILE
+        k = pl.load(k_ref, (0, 0, pl.dslice(start, KV_TILE), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.dslice(start, KV_TILE), slice(None)))
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        scores = jnp.dot(k, q) * scale  # [KV_TILE]
+        idx = start + jax.lax.iota(jnp.int32, KV_TILE)
+        mask = idx < seq_len
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores))
+        # Guard: in a fully-masked tile m_new may still be NEG_INF, and
+        # exp(NEG_INF - NEG_INF) = 1 would pollute the sums. Re-mask.
+        p = jnp.where(mask, jnp.exp(scores - m_new), 0.0)  # [KV_TILE]
+        corr = jnp.exp(m - m_new)
+        s_new = s * corr + jnp.sum(p)
+        acc_new = acc * corr + jnp.dot(p, v)  # [D]
+        return m_new, s_new, acc_new
+
+    d = q_ref.shape[-1]
+    m0 = jnp.float32(NEG_INF)
+    s0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    _, s, acc = jax.lax.fori_loop(0, kv_tiles, body, (m0, s0, acc0))
+    out = acc / jnp.maximum(s, 1e-30)
+    out = jnp.where(seq_len > 0, out, 0.0)
+    o_ref[0, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k, v, lens, *, interpret=True):
+    """Flash-decode attention. Shapes/semantics match ref.ref_decode_attention.
+
+    q: [B,H,D]; k,v: [B,H,T,D]; lens: [B] int32 -> out [B,H,D].
+    """
+    b, h, d = q.shape
+    k = _pad_axis(k, 2, KV_TILE)
+    v = _pad_axis(v, 2, KV_TILE)
+    t = k.shape[2]
+    kv_tiles = t // KV_TILE
+    scale = 1.0 / float(d) ** 0.5
+    kernel = functools.partial(_decode_kernel, kv_tiles=kv_tiles, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),  # lens
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),  # q
+            pl.BlockSpec((1, 1, t, d), lambda i, j: (i, j, 0, 0)),  # k
+            pl.BlockSpec((1, 1, t, d), lambda i, j: (i, j, 0, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(lens.astype(jnp.int32), q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Prefill kernel
+# ---------------------------------------------------------------------------
+
+
+def _prefill_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, *, kv_tiles, scale):
+    """One (batch, head, q-tile) instance: q tile [Q_TILE,D] vs cache tiles."""
+    qt = pl.program_id(2)
+    q = q_ref[0, 0, :, :].astype(jnp.float32)  # [Q_TILE, D]
+    seq_len = lens_ref[0]
+    q_idx = qt * Q_TILE + jax.lax.iota(jnp.int32, Q_TILE)  # global q rows
+
+    def body(i, carry):
+        m, s, acc = carry
+        start = i * KV_TILE
+        k = pl.load(k_ref, (0, 0, pl.dslice(start, KV_TILE), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.dslice(start, KV_TILE), slice(None)))
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        scores = jnp.dot(q, k.T) * scale  # [Q_TILE, KV_TILE]
+        k_idx = start + jax.lax.iota(jnp.int32, KV_TILE)
+        mask = (k_idx[None, :] <= q_idx[:, None]) & (k_idx[None, :] < seq_len)
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))  # [Q_TILE]
+        p = jnp.where(mask, jnp.exp(scores - m_new[:, None]), 0.0)
+        corr = jnp.exp(m - m_new)  # [Q_TILE]
+        s_new = s * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jnp.dot(p, v)  # [Q_TILE, D]
+        return m_new, s_new, acc_new
+
+    d = q_ref.shape[-1]
+    m0 = jnp.full((Q_TILE,), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((Q_TILE,), jnp.float32)
+    acc0 = jnp.zeros((Q_TILE, d), jnp.float32)
+    # Causal structure: only KV tiles whose start <= last row of this q tile
+    # can contribute. Bounding the loop count by the q-tile index skips the
+    # strictly-upper-triangular tile pairs entirely (the intra-tile boundary
+    # is handled by the mask), halving prefill FLOPs exactly as the paper's
+    # chunked-prefill baselines do.
+    tiles_needed = jnp.minimum(
+        kv_tiles, ((qt + 1) * Q_TILE + KV_TILE - 1) // KV_TILE
+    )
+    _, s, acc = jax.lax.fori_loop(0, tiles_needed, body, (m0, s0, acc0))
+    out = acc / jnp.maximum(s, 1e-30)[:, None]
+    out = jnp.where((q_idx < seq_len)[:, None], out, 0.0)
+    o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prefill_attention(q, k, v, lens, *, interpret=True):
+    """Flash prefill attention. Matches ref.ref_prefill_attention.
+
+    q,k,v: [B,H,P,D]; lens: [B] int32 -> out [B,H,P,D].
+    """
+    b, h, p, d = q.shape
+    qp = _pad_axis(q, 2, Q_TILE)
+    kp = _pad_axis(k, 2, KV_TILE)
+    vp = _pad_axis(v, 2, KV_TILE)
+    p_pad = qp.shape[2]
+    t_pad = kp.shape[2]
+    kv_tiles = t_pad // KV_TILE
+    scale = 1.0 / float(d) ** 0.5
+    kernel = functools.partial(_prefill_kernel, kv_tiles=kv_tiles, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, p_pad // Q_TILE),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, t: (i,)),
+            pl.BlockSpec((1, 1, Q_TILE, d), lambda i, j, t: (i, j, t, 0)),
+            pl.BlockSpec((1, 1, t_pad, d), lambda i, j, t: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t_pad, d), lambda i, j, t: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q_TILE, d), lambda i, j, t: (i, j, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, p_pad, d), q.dtype),
+        interpret=interpret,
+    )(lens.astype(jnp.int32), qp, kp, vp)
+    return out[:, :, :p, :]
+
+
+def vmem_report(b, h, p, d, t):
+    """Estimate per-program VMEM residency (bytes, f32) for both kernels.
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to argue real-TPU viability:
+    interpret-mode wallclock is NOT a TPU proxy, so we reason about the
+    memory schedule instead.
+    """
+    dec = (d + 2 * KV_TILE * d + d) * 4  # q + k/v tile + acc
+    pre = (Q_TILE * d + 2 * KV_TILE * d + Q_TILE * d + 3 * Q_TILE) * 4
+    return {
+        "decode_bytes_per_program": dec,
+        "prefill_bytes_per_program": pre,
+        "decode_programs": b * h,
+        "prefill_programs": b * h * ((p + Q_TILE - 1) // Q_TILE),
+        "vmem_budget_bytes": 16 * 1024 * 1024,
+    }

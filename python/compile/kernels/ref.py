@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracles for the Pallas attention kernels.
+
+These are the ground truth the Pallas kernels (attention.py) are validated
+against in python/tests/test_kernel.py. They are intentionally written in
+the most direct way possible (full materialized score matrices, explicit
+masking) so that they are easy to audit, even though they are memory-hungry.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_decode_attention(q, k, v, lens):
+    """Single-token (decode-step) attention against a padded KV cache.
+
+    Args:
+      q:    [B, H, D]     query for the one new token of each sequence.
+      k:    [B, H, T, D]  key cache, padded to T along the time axis.
+      v:    [B, H, T, D]  value cache.
+      lens: [B] int32     number of valid cache entries per sequence
+                          (INCLUDING the new token, whose K/V has already
+                          been written at position lens-1).
+
+    Returns:
+      out: [B, H, D] attention output. Rows with lens == 0 return zeros.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhd,bhtd->bht", q, k) * scale
+    t = jnp.arange(k.shape[2])[None, None, :]
+    valid = t < lens[:, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    # Safe softmax: subtract running max; fully-masked rows become uniform
+    # garbage, so zero them out explicitly afterwards.
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = jnp.where(valid, w, 0.0)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    w = w / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bht,bhtd->bhd", w, v)
+    alive = (lens > 0)[:, None, None]
+    return jnp.where(alive, out, 0.0).astype(q.dtype)
+
+
+def ref_prefill_attention(q, k, v, lens):
+    """Causal self-attention over a padded prompt.
+
+    Args:
+      q, k, v: [B, H, P, D] packed projections of the padded prompt.
+      lens:    [B] int32    true prompt lengths (positions >= lens are pad).
+
+    Returns:
+      out: [B, H, P, D]; rows at padded positions are zeroed.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    p = q.shape[2]
+    qi = jnp.arange(p)[:, None]
+    ki = jnp.arange(p)[None, :]
+    causal = ki <= qi  # [P, P]
+    inlen = ki < lens[:, None, None, None]  # [B,1,1,P]
+    mask = causal[None, None, :, :] & inlen
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = jnp.where(mask, w, 0.0)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    w = w / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v)
+    qvalid = (jnp.arange(p)[None, None, :, None] < lens[:, None, None, None])
+    return jnp.where(qvalid, out, 0.0).astype(q.dtype)

@@ -1,0 +1,371 @@
+"""L2: OPT-style decoder-only transformer with an explicit KV cache.
+
+Three jit-able entry points are AOT-lowered by aot.py into HLO-text
+artifacts the rust runtime executes:
+
+  * ``prefill``      — process a padded prompt batch, return last-token
+                       logits plus freshly written KV caches.
+  * ``decode_step``  — one generation iteration for a fixed-slot batch:
+                       append one token per live slot, return next-token
+                       logits and updated caches.
+  * ``insert_slot``  — splice a prefilled (B=1) cache into one slot of the
+                       decode batch cache (continuous batching: PTs become
+                       GTs without any host round-trip of KV data).
+
+The attention hot spot calls the L1 Pallas kernels (kernels/attention.py);
+everything else is plain jnp so XLA fuses it. Architecture follows OPT
+(pre-LN, learned positions, ReLU FFN) scaled down to serve on the CPU PJRT
+backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.attention import decode_attention, prefill_attention
+
+# Attention implementation used when building artifacts:
+#  * "pallas" (default) — the L1 Pallas kernels under interpret=True. This
+#    is the faithful three-layer stack; on a real TPU the same kernels
+#    compile to Mosaic. Interpret mode lowers to sequential per-(b,h)
+#    while-loops, which the CPU backend executes slowly.
+#  * "ref" — the pure-jnp oracle (one fused softmax-attention einsum):
+#    numerically validated against the Pallas kernels by pytest, and ~10x
+#    faster under CPU PJRT. Used for the fast CPU serving artifacts
+#    (aot.py --attention ref); see EXPERIMENTS.md §Perf.
+ATTENTION_IMPL = "pallas"
+
+
+def _decode_attn(q, k, v, lens):
+    if ATTENTION_IMPL == "ref":
+        return kref.ref_decode_attention(q, k, v, lens)
+    return decode_attention(q, k, v, lens)
+
+
+def _prefill_attn(q, k, v, lens):
+    if ATTENTION_IMPL == "ref":
+        return kref.ref_prefill_attention(q, k, v, lens)
+    return prefill_attention(q, k, v, lens)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters. ``presets()`` has the shipped configurations."""
+
+    vocab: int = 1024
+    d_model: int = 256
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 1024
+    max_seq: int = 160  # KV-cache time extent (prompt + response)
+    max_prompt: int = 64  # padded prompt length for the prefill artifact
+    decode_slots: int = 8  # fixed batch slots for the decode artifact
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def presets() -> dict:
+    return {
+        # ~3.9M params: the end-to-end real-serving demo model.
+        "tiny": ModelConfig(),
+        # ~0.9M params: fast CI configuration.
+        "micro": ModelConfig(
+            vocab=512, d_model=128, n_heads=4, n_layers=2, d_ff=512,
+            max_seq=96, max_prompt=32, decode_slots=4,
+        ),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize parameters as a flat dict (stable iteration order).
+
+    A flat dict keyed by name keeps the AOT manifest (weights.bin layout)
+    self-describing: rust reads names/shapes from manifest.json and uploads
+    one device buffer per entry, in this exact order.
+    """
+    n = cfg.n_layers
+    keys = jax.random.split(key, 4 + 12 * n)
+    ki = iter(range(len(keys)))
+    s = 0.02
+
+    def norm(shape):
+        return (jax.random.normal(keys[next(ki)], shape) * s).astype(jnp.float32)
+
+    params = {
+        "embed": norm((cfg.vocab, cfg.d_model)),
+        "pos_embed": norm((cfg.max_seq, cfg.d_model)),
+    }
+    d, f = cfg.d_model, cfg.d_ff
+    for i in range(n):
+        p = f"layer{i}."
+        params[p + "ln1_g"] = jnp.ones((d,), jnp.float32)
+        params[p + "ln1_b"] = jnp.zeros((d,), jnp.float32)
+        params[p + "wq"] = norm((d, d))
+        params[p + "wk"] = norm((d, d))
+        params[p + "wv"] = norm((d, d))
+        params[p + "wo"] = norm((d, d))
+        params[p + "ln2_g"] = jnp.ones((d,), jnp.float32)
+        params[p + "ln2_b"] = jnp.zeros((d,), jnp.float32)
+        params[p + "w1"] = norm((d, f))
+        params[p + "b1"] = jnp.zeros((f,), jnp.float32)
+        params[p + "w2"] = norm((f, d))
+        params[p + "b2"] = jnp.zeros((d,), jnp.float32)
+    params["lnf_g"] = jnp.ones((d,), jnp.float32)
+    params["lnf_b"] = jnp.zeros((d,), jnp.float32)
+    params["lm_head"] = norm((d, cfg.vocab))
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(shapes):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+    return total
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads):
+    # [B, T, D] -> [B, H, T, hd]
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    # [B, H, T, hd] -> [B, T, D]
+    b, h, t, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+
+
+def empty_cache(cfg: ModelConfig, batch: int):
+    """Zeroed KV caches: k, v of shape [L, B, H, max_seq, head_dim]."""
+    shape = (cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def prefill(cfg: ModelConfig, params, tokens, lens):
+    """Process a padded prompt batch.
+
+    Args:
+      tokens: [B, P] int32, zero-padded prompts (P == cfg.max_prompt).
+      lens:   [B] int32 true prompt lengths.
+
+    Returns:
+      logits: [B, vocab] — logits at each sequence's LAST valid position
+              (the request's first generated token comes from these).
+      k_cache, v_cache: [L, B, H, max_seq, hd] with positions [0, lens)
+              written and the rest zero.
+    """
+    b, p = tokens.shape
+    h = cfg.n_heads
+    x = params["embed"][tokens] + params["pos_embed"][:p][None, :, :]
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        y = _layer_norm(x, params[pre + "ln1_g"], params[pre + "ln1_b"])
+        q = _split_heads(y @ params[pre + "wq"], h)  # [B,H,P,hd]
+        k = _split_heads(y @ params[pre + "wk"], h)
+        v = _split_heads(y @ params[pre + "wv"], h)
+        attn = _prefill_attn(q, k, v, lens)
+        x = x + _merge_heads(attn) @ params[pre + "wo"]
+        y = _layer_norm(x, params[pre + "ln2_g"], params[pre + "ln2_b"])
+        y = jax.nn.relu(y @ params[pre + "w1"] + params[pre + "b1"])
+        x = x + y @ params[pre + "w2"] + params[pre + "b2"]
+        pad_t = cfg.max_seq - p
+        ks.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad_t), (0, 0))))
+        vs.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad_t), (0, 0))))
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits_all = x @ params["lm_head"]  # [B, P, V]
+    last = jnp.maximum(lens - 1, 0)
+    logits = jnp.take_along_axis(logits_all, last[:, None, None], axis=1)[:, 0, :]
+    # Zero cache rows beyond each sequence's length so insert_slot can
+    # splice caches without leaking pad-position garbage.
+    t_idx = jnp.arange(cfg.max_seq)
+    valid = (t_idx[None, :] < lens[:, None])[None, :, None, :, None]
+    k_cache = jnp.stack(ks) * valid
+    v_cache = jnp.stack(vs) * valid
+    return logits, k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params, k_cache, v_cache, lens, tokens):
+    """One generation iteration over the fixed decode slots.
+
+    Args:
+      k_cache, v_cache: [L, B, H, T, hd] current caches.
+      lens:   [B] int32 — sequence length per slot BEFORE this step
+              (== the position the new token's K/V is written at). 0 marks
+              a dead slot: it flows through the same HLO but its cache is
+              left untouched and its logits are ignored upstream.
+      tokens: [B] int32 — token to feed per slot.
+
+    Returns:
+      (logits [B, vocab], k_cache, v_cache). The artifact is pure: lens are
+      incremented by the rust coordinator, not here.
+    """
+    b = tokens.shape[0]
+    h = cfg.n_heads
+    pos = jnp.minimum(lens, cfg.max_seq - 1)
+    x = params["embed"][tokens] + params["pos_embed"][pos]  # [B, D]
+    alive_b = lens > 0  # [B] bool
+    alive = alive_b[:, None].astype(jnp.float32)
+
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        y = _layer_norm(x, params[pre + "ln1_g"], params[pre + "ln1_b"])
+        q = (y @ params[pre + "wq"]).reshape(b, h, cfg.head_dim)
+        k = (y @ params[pre + "wk"]).reshape(b, h, cfg.head_dim)
+        v = (y @ params[pre + "wv"]).reshape(b, h, cfg.head_dim)
+        # Write this token's K/V at position `pos`, only for live slots.
+        onehot = (jnp.arange(cfg.max_seq)[None, :] == pos[:, None]) & alive_b[:, None]
+        onehot = onehot.astype(jnp.float32)[:, None, :, None]  # [B,1,T,1]
+        k_layer = k_cache[i] * (1.0 - onehot) + onehot * k[:, :, None, :]
+        v_layer = v_cache[i] * (1.0 - onehot) + onehot * v[:, :, None, :]
+        new_k.append(k_layer)
+        new_v.append(v_layer)
+        # Attend over lens+1 valid entries (the one just written included).
+        attn = _decode_attn(q, k_layer, v_layer, lens + alive_b)
+        x = x + (attn.reshape(b, -1) @ params[pre + "wo"]) * alive
+        y = _layer_norm(x, params[pre + "ln2_g"], params[pre + "ln2_b"])
+        y = jax.nn.relu(y @ params[pre + "w1"] + params[pre + "b1"])
+        x = x + (y @ params[pre + "w2"] + params[pre + "b2"]) * alive
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["lm_head"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def insert_slot(cfg: ModelConfig, k_cache, v_cache, k_new, v_new, slot):
+    """Splice a prefilled B=1 cache into decode-batch slot ``slot``.
+
+    k_cache/v_cache: [L, B, H, T, hd]; k_new/v_new: [L, 1, H, T, hd];
+    slot: [] int32. Returns updated caches.
+    """
+    k = jax.lax.dynamic_update_slice(k_cache, k_new, (0, slot, 0, 0, 0))
+    v = jax.lax.dynamic_update_slice(v_cache, v_new, (0, slot, 0, 0, 0))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Convenience wrappers used by aot.py and the python tests
+# ---------------------------------------------------------------------------
+
+
+# ---------------------------------------------------------------------------
+# Packed-state entry points (what aot.py actually lowers).
+#
+# PJRT (via the rust `xla` crate / xla_extension 0.5.1) returns a tuple
+# root as ONE tuple buffer that cannot be split on-device, and flattens
+# tuple *parameters* — so multi-output programs force a host round-trip of
+# the KV caches every step. Instead every program here takes and returns a
+# SINGLE flat f32 state vector:
+#
+#   state[b] = concat(k.ravel(), v.ravel(), logits.ravel())
+#     k, v: [L, b, H, max_seq, hd]    logits: [b, vocab]
+#
+# so the rust runtime chains steps entirely on device and only reads the
+# (tiny) logits slice back via the read_logits program.
+# ---------------------------------------------------------------------------
+
+
+def kv_elems(cfg: ModelConfig, batch: int) -> int:
+    return cfg.n_layers * batch * cfg.n_heads * cfg.max_seq * cfg.head_dim
+
+
+def state_elems(cfg: ModelConfig, batch: int) -> int:
+    return 2 * kv_elems(cfg, batch) + batch * cfg.vocab
+
+
+def pack_state(cfg: ModelConfig, k, v, logits):
+    return jnp.concatenate([k.ravel(), v.ravel(), logits.ravel()])
+
+
+def unpack_state(cfg: ModelConfig, state, batch: int):
+    n = kv_elems(cfg, batch)
+    shape = (cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    k = state[:n].reshape(shape)
+    v = state[n : 2 * n].reshape(shape)
+    logits = state[2 * n :].reshape(batch, cfg.vocab)
+    return k, v, logits
+
+
+def prefill_packed(cfg: ModelConfig, params, tokens, lens):
+    """tokens [1,P], lens [1] -> state vector for a B=1 slot."""
+    logits, k, v = prefill(cfg, params, tokens, lens)
+    return pack_state(cfg, k, v, logits)
+
+
+def decode_packed(cfg: ModelConfig, params, state, lens, tokens):
+    """One decode iteration over the packed B=decode_slots state."""
+    b = cfg.decode_slots
+    k, v, _ = unpack_state(cfg, state, b)
+    logits, k2, v2 = decode_step(cfg, params, k, v, lens, tokens)
+    return pack_state(cfg, k2, v2, logits)
+
+
+def insert_packed(cfg: ModelConfig, state_b, state_1, slot):
+    """Splice a prefilled B=1 state into slot `slot` of the batch state.
+
+    The batch state's logits block is preserved (the slot's first-token
+    logits were already read from the B=1 state by the caller).
+    """
+    b = cfg.decode_slots
+    kb, vb, lb = unpack_state(cfg, state_b, b)
+    k1, v1, _ = unpack_state(cfg, state_1, 1)
+    kb, vb = insert_slot(cfg, kb, vb, k1, v1, slot)
+    return pack_state(cfg, kb, vb, lb)
+
+
+def read_logits(cfg: ModelConfig, state, batch: int):
+    """Extract the logits block from a packed state."""
+    n = 2 * kv_elems(cfg, batch)
+    return state[n:].reshape(batch, cfg.vocab)
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    def fn(params, tokens, lens):
+        return prefill(cfg, params, tokens, lens)
+
+    return fn
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def fn(params, k_cache, v_cache, lens, tokens):
+        return decode_step(cfg, params, k_cache, v_cache, lens, tokens)
+
+    return fn
+
+
+def make_insert_fn(cfg: ModelConfig):
+    def fn(k_cache, v_cache, k_new, v_new, slot):
+        return insert_slot(cfg, k_cache, v_cache, k_new, v_new, slot)
+
+    return fn
+
+
+def greedy_generate(cfg: ModelConfig, params, tokens, lens, steps: int):
+    """Reference autoregressive loop (python-side oracle for the rust path)."""
+    logits, k, v = prefill(cfg, params, tokens, lens)
+    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [cur]
+    cur_lens = lens
+    for _ in range(steps - 1):
+        logits, k, v = decode_step(cfg, params, k, v, cur_lens, cur)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cur_lens = cur_lens + 1
+        out.append(cur)
+    return jnp.stack(out, axis=1)  # [B, steps]

@@ -1,0 +1,78 @@
+"""AOT pipeline tests: manifest/weights/golden consistency (micro preset)."""
+
+import json
+import pathlib
+import struct
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = pathlib.Path(tempfile.mkdtemp(prefix="econoserve_aot_"))
+    manifest = aot.build("micro", out, golden_steps=4)
+    return out, manifest
+
+
+def test_manifest_param_table_matches_weights(built):
+    out, manifest = built
+    total_elems = sum(p["elems"] for p in manifest["params"])
+    size = (out / "weights.bin").stat().st_size
+    assert size == total_elems * 4
+    assert manifest["config"]["param_count"] == total_elems
+    # Offsets are contiguous.
+    off = 0
+    for p in manifest["params"]:
+        assert p["offset"] == off
+        off += p["elems"]
+
+
+def test_hlo_artifacts_nonempty_and_parseable_header(built):
+    out, _ = built
+    for name in ["prefill.hlo.txt", "decode.hlo.txt", "insert.hlo.txt"]:
+        text = (out / name).read_text()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_golden_matches_reload(built):
+    out, manifest = built
+    golden = json.loads((out / "golden.json").read_text())
+    assert len(golden["generated"]) == golden["steps"]
+    # Rebuild params from weights.bin and re-run greedy generation — must
+    # reproduce the golden transcript (proves weights.bin is faithful).
+    cfg = M.presets()["micro"]
+    raw = (out / "weights.bin").read_bytes()
+    floats = np.frombuffer(raw, dtype="<f4")
+    params = {}
+    for p in manifest["params"]:
+        n = p["elems"]
+        params[p["name"]] = np.asarray(floats[p["offset"]:p["offset"] + n]).reshape(p["shape"])
+    import jax.numpy as jnp
+
+    params = {k: jnp.asarray(v) for k, v in params.items()}
+    toks = np.zeros((1, cfg.max_prompt), np.int32)
+    toks[0, : golden["prompt_len"]] = golden["prompt"]
+    gen = M.greedy_generate(
+        cfg, params, jnp.asarray(toks), jnp.asarray([golden["prompt_len"]], jnp.int32),
+        golden["steps"],
+    )
+    assert np.asarray(gen)[0].tolist() == golden["generated"]
+
+
+def test_weights_little_endian_f32(built):
+    out, manifest = built
+    raw = (out / "weights.bin").read_bytes()
+    # First tensor is the embedding; spot-check one value against struct.
+    first = struct.unpack("<f", raw[:4])[0]
+    floats = np.frombuffer(raw[:4], dtype="<f4")
+    assert first == floats[0]
+    assert manifest["params"][0]["name"] == "embed"

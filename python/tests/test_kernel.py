@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; fixed regression cases pin the edge
+conditions (empty sequences, single token, full cache, tile boundaries).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5
+    )
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    h=st.integers(1, 4),
+    t=st.integers(1, 300),
+    d=st.sampled_from([16, 32, 64, 128]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    data=st.data(),
+)
+def test_decode_matches_ref_hypothesis(b, h, t, d, dtype, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    q = _rand(rng, (b, h, d), dtype)
+    k = _rand(rng, (b, h, t, d), dtype)
+    v = _rand(rng, (b, h, t, d), dtype)
+    lens = jnp.asarray(rng.integers(0, t + 1, size=(b,)), jnp.int32)
+    out = A.decode_attention(q, k, v, lens)
+    ref = R.ref_decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("lens", [[0], [1], [128], [129], [200]])
+def test_decode_edge_lengths(lens):
+    rng = np.random.default_rng(1)
+    t = 200
+    q = _rand(rng, (1, 2, 32), jnp.float32)
+    k = _rand(rng, (1, 2, t, 32), jnp.float32)
+    v = _rand(rng, (1, 2, t, 32), jnp.float32)
+    l = jnp.asarray(lens, jnp.int32)
+    out = A.decode_attention(q, k, v, l)
+    ref = R.ref_decode_attention(q, k, v, l)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_zero_len_returns_zeros():
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (2, 2, 16), jnp.float32)
+    k = _rand(rng, (2, 2, 64, 16), jnp.float32)
+    v = _rand(rng, (2, 2, 64, 16), jnp.float32)
+    out = A.decode_attention(q, k, v, jnp.asarray([0, 5], jnp.int32))
+    assert np.all(np.asarray(out)[0] == 0.0)
+    assert not np.all(np.asarray(out)[1] == 0.0)
+
+
+def test_decode_ignores_cache_beyond_len():
+    """Garbage beyond lens must not affect the output."""
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (1, 1, 16), jnp.float32)
+    k = _rand(rng, (1, 1, 64, 16), jnp.float32)
+    v = _rand(rng, (1, 1, 64, 16), jnp.float32)
+    lens = jnp.asarray([10], jnp.int32)
+    out1 = A.decode_attention(q, k, v, lens)
+    k2 = k.at[:, :, 10:, :].set(1e6)
+    v2 = v.at[:, :, 10:, :].set(-1e6)
+    out2 = A.decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Prefill kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    p=st.integers(1, 200),
+    d=st.sampled_from([16, 32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    data=st.data(),
+)
+def test_prefill_matches_ref_hypothesis(b, h, p, d, dtype, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    q = _rand(rng, (b, h, p, d), dtype)
+    k = _rand(rng, (b, h, p, d), dtype)
+    v = _rand(rng, (b, h, p, d), dtype)
+    lens = jnp.asarray(rng.integers(0, p + 1, size=(b,)), jnp.int32)
+    out = A.prefill_attention(q, k, v, lens)
+    ref = R.ref_prefill_attention(q, k, v, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("p,lens", [(64, 64), (64, 1), (65, 65), (128, 100), (130, 130)])
+def test_prefill_tile_boundaries(p, lens):
+    rng = np.random.default_rng(4)
+    q = _rand(rng, (1, 2, p, 32), jnp.float32)
+    k = _rand(rng, (1, 2, p, 32), jnp.float32)
+    v = _rand(rng, (1, 2, p, 32), jnp.float32)
+    l = jnp.asarray([lens], jnp.int32)
+    out = A.prefill_attention(q, k, v, l)
+    ref = R.ref_prefill_attention(q, k, v, l)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+def test_prefill_causality():
+    """Changing future tokens must not change past rows."""
+    rng = np.random.default_rng(5)
+    p = 32
+    q = _rand(rng, (1, 1, p, 16), jnp.float32)
+    k = _rand(rng, (1, 1, p, 16), jnp.float32)
+    v = _rand(rng, (1, 1, p, 16), jnp.float32)
+    lens = jnp.asarray([p], jnp.int32)
+    out1 = A.prefill_attention(q, k, v, lens)
+    k2 = k.at[:, :, 20:, :].add(3.0)
+    v2 = v.at[:, :, 20:, :].add(-2.0)
+    out2 = A.prefill_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(
+        np.asarray(out1)[:, :, :20], np.asarray(out2)[:, :, :20], atol=1e-6
+    )
+    assert not np.allclose(np.asarray(out1)[:, :, 20:], np.asarray(out2)[:, :, 20:])
+
+
+def test_prefill_first_row_attends_self_only():
+    rng = np.random.default_rng(6)
+    p = 8
+    q = _rand(rng, (1, 1, p, 16), jnp.float32)
+    k = _rand(rng, (1, 1, p, 16), jnp.float32)
+    v = _rand(rng, (1, 1, p, 16), jnp.float32)
+    out = A.prefill_attention(q, k, v, jnp.asarray([p], jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(out)[0, 0, 0], np.asarray(v)[0, 0, 0], atol=1e-5
+    )
+
+
+def test_vmem_report_within_budget():
+    rep = A.vmem_report(b=8, h=32, p=2048, d=128, t=4096)
+    assert rep["decode_bytes_per_program"] < rep["vmem_budget_bytes"]
+    assert rep["prefill_bytes_per_program"] < rep["vmem_budget_bytes"]

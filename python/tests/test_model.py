@@ -1,0 +1,206 @@
+"""L2 correctness: model shapes, KV-cache semantics, decode/prefill agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.presets()["micro"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _prompt(rng, b, lens):
+    toks = np.zeros((b, CFG.max_prompt), np.int32)
+    for i, l in enumerate(lens):
+        toks[i, :l] = rng.integers(1, CFG.vocab, size=(l,))
+    return jnp.asarray(toks), jnp.asarray(lens, jnp.int32)
+
+
+def test_param_count_matches_manifest(params):
+    total = sum(int(np.asarray(v).size) for v in params.values())
+    assert total == M.param_count(CFG)
+
+
+def test_prefill_shapes(params):
+    rng = np.random.default_rng(0)
+    toks, lens = _prompt(rng, 2, [5, 17])
+    logits, k, v = M.prefill(CFG, params, toks, lens)
+    assert logits.shape == (2, CFG.vocab)
+    assert k.shape == (CFG.n_layers, 2, CFG.n_heads, CFG.max_seq, CFG.head_dim)
+    assert v.shape == k.shape
+
+
+def test_prefill_cache_zero_beyond_len(params):
+    rng = np.random.default_rng(1)
+    toks, lens = _prompt(rng, 2, [5, 17])
+    _, k, v = M.prefill(CFG, params, toks, lens)
+    assert np.all(np.asarray(k)[:, 0, :, 5:, :] == 0.0)
+    assert np.all(np.asarray(v)[:, 1, :, 17:, :] == 0.0)
+    assert not np.all(np.asarray(k)[:, 0, :, :5, :] == 0.0)
+
+
+def test_prefill_logits_independent_of_padding(params):
+    """Same prompt with different pad content must give identical logits."""
+    rng = np.random.default_rng(2)
+    toks, lens = _prompt(rng, 1, [9])
+    logits1, _, _ = M.prefill(CFG, params, toks, lens)
+    toks2 = np.asarray(toks).copy()
+    toks2[0, 9:] = 7  # garbage in the pad region
+    logits2, _, _ = M.prefill(CFG, params, jnp.asarray(toks2), lens)
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2), atol=1e-5)
+
+
+def test_decode_step_extends_cache(params):
+    rng = np.random.default_rng(3)
+    b = CFG.decode_slots
+    toks = jnp.asarray(rng.integers(1, CFG.vocab, size=(b,)), jnp.int32)
+    k, v = M.empty_cache(CFG, b)
+    lens = jnp.asarray([3] + [0] * (b - 1), jnp.int32)
+    # Slot 0 alive with 3 tokens of (zero) history; others dead.
+    logits, k2, v2 = M.decode_step(CFG, params, k, v, lens, toks)
+    assert logits.shape == (b, CFG.vocab)
+    # Slot 0 position 3 written:
+    assert not np.all(np.asarray(k2)[:, 0, :, 3, :] == 0.0)
+    # Dead slot caches untouched (still zero):
+    assert np.all(np.asarray(k2)[:, 1:, :, :, :] == 0.0)
+
+
+def test_decode_agrees_with_prefill(params):
+    """Teacher-forcing the prompt through decode_step must reproduce the
+    prefill last-token logits (the autoregressive consistency invariant)."""
+    rng = np.random.default_rng(4)
+    l = 6
+    toks, lens = _prompt(rng, 1, [l])
+    logits_pf, _, _ = M.prefill(CFG, params, toks, lens)
+
+    b = CFG.decode_slots
+    k, v = M.empty_cache(CFG, b)
+    cur_lens = jnp.zeros((b,), jnp.int32)
+    seq = np.asarray(toks)[0, :l]
+    logits = None
+    for i, t in enumerate(seq):
+        step_toks = jnp.zeros((b,), jnp.int32).at[0].set(int(t))
+        step_lens = cur_lens.at[0].set(i)
+        # lens=0 means dead; first token of a live sequence needs lens>0
+        # convention: we mark slot 0 alive by passing i (position), but
+        # position 0 with lens 0 would read as dead — so the decode path
+        # is only used from position >= 1; position 0 is exercised via a
+        # 1-token prefill.
+        if i == 0:
+            one = jnp.asarray([[int(t)] + [0] * (CFG.max_prompt - 1)], jnp.int32)
+            lg, k1, v1 = M.prefill(CFG, params, one, jnp.asarray([1], jnp.int32))
+            k = M.insert_slot(CFG, k, v, k1, v1, jnp.int32(0))[0]
+            v = M.insert_slot(CFG, k, v, k1, v1, jnp.int32(0))[1]
+            logits = lg
+            continue
+        lg, k, v = M.decode_step(CFG, params, k, v, step_lens, step_toks)
+        logits = lg[0:1]
+    np.testing.assert_allclose(
+        np.asarray(logits_pf), np.asarray(logits), atol=1e-3, rtol=1e-3
+    )
+
+
+def test_insert_slot_places_cache(params):
+    rng = np.random.default_rng(5)
+    toks, lens = _prompt(rng, 1, [4])
+    _, k1, v1 = M.prefill(CFG, params, toks, lens)
+    kb, vb = M.empty_cache(CFG, CFG.decode_slots)
+    k2, v2 = M.insert_slot(CFG, kb, vb, k1, v1, jnp.int32(2))
+    np.testing.assert_allclose(
+        np.asarray(k2)[:, 2], np.asarray(k1)[:, 0], atol=0
+    )
+    assert np.all(np.asarray(k2)[:, 0] == 0.0)
+
+
+def test_greedy_generate_deterministic(params):
+    rng = np.random.default_rng(6)
+    toks, lens = _prompt(rng, 1, [8])
+    g1 = M.greedy_generate(CFG, params, toks, lens, 5)
+    g2 = M.greedy_generate(CFG, params, toks, lens, 5)
+    assert np.array_equal(np.asarray(g1), np.asarray(g2))
+    assert g1.shape == (1, 5)
+    assert np.all(np.asarray(g1) >= 0) and np.all(np.asarray(g1) < CFG.vocab)
+
+
+# ---------------------------------------------------------------------------
+# Packed-state wrappers (what the AOT artifacts actually lower)
+# ---------------------------------------------------------------------------
+
+
+def test_pack_unpack_roundtrip(params):
+    rng = np.random.default_rng(11)
+    b = CFG.decode_slots
+    k, v = M.empty_cache(CFG, b)
+    k = k + 1.5
+    v = v - 0.5
+    logits = jnp.asarray(rng.standard_normal((b, CFG.vocab)), jnp.float32)
+    state = M.pack_state(CFG, k, v, logits)
+    assert state.shape == (M.state_elems(CFG, b),)
+    k2, v2, l2 = M.unpack_state(CFG, state, b)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(k2))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(l2))
+
+
+def test_packed_prefill_matches_unpacked(params):
+    rng = np.random.default_rng(12)
+    toks, lens = _prompt(rng, 1, [7])
+    logits, k, v = M.prefill(CFG, params, toks, lens)
+    state = M.prefill_packed(CFG, params, toks, lens)
+    k2, v2, l2 = M.unpack_state(CFG, state, 1)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(l2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(k2), atol=1e-6)
+
+
+def test_packed_decode_matches_unpacked(params):
+    rng = np.random.default_rng(13)
+    b = CFG.decode_slots
+    toks, plens = _prompt(rng, 1, [5])
+    state1 = M.prefill_packed(CFG, params, toks, plens)
+    kb, vb = M.empty_cache(CFG, b)
+    lb = jnp.zeros((b, CFG.vocab), jnp.float32)
+    state_b = M.pack_state(CFG, kb, vb, lb)
+    state_b = M.insert_packed(CFG, state_b, state1, jnp.int32(0))
+    lens = jnp.zeros((b,), jnp.int32).at[0].set(5)
+    step_toks = jnp.zeros((b,), jnp.int32).at[0].set(42)
+    out_state = M.decode_packed(CFG, params, state_b, lens, step_toks)
+    k2, v2, l2 = M.unpack_state(CFG, out_state, b)
+    # Reference: unpacked path.
+    kb2, vb2, _ = M.unpack_state(CFG, state_b, b)
+    ref_logits, ref_k, ref_v = M.decode_step(CFG, params, kb2, vb2, lens, step_toks)
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(ref_logits), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(k2), np.asarray(ref_k), atol=1e-6)
+
+
+def test_read_logits_slices_correctly(params):
+    rng = np.random.default_rng(14)
+    toks, lens = _prompt(rng, 1, [6])
+    state = M.prefill_packed(CFG, params, toks, lens)
+    l = M.read_logits(CFG, state, 1)
+    ref, _, _ = M.prefill(CFG, params, toks, lens)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(ref), atol=1e-6)
+
+
+def test_ref_attention_impl_close_to_pallas(params):
+    """The --attention ref artifacts must stay numerically pinned to the
+    pallas path (the §Perf optimization's correctness condition)."""
+    rng = np.random.default_rng(15)
+    toks, lens = _prompt(rng, 1, [9])
+    logits_pallas, _, _ = M.prefill(CFG, params, toks, lens)
+    old = M.ATTENTION_IMPL
+    try:
+        M.ATTENTION_IMPL = "ref"
+        logits_ref, _, _ = M.prefill(CFG, params, toks, lens)
+    finally:
+        M.ATTENTION_IMPL = old
+    np.testing.assert_allclose(
+        np.asarray(logits_pallas), np.asarray(logits_ref), atol=2e-4, rtol=2e-4
+    )

@@ -1,0 +1,57 @@
+//! EXTENSION (the paper's §6 future work): "whether EconoServe would lead
+//! to imbalances in processing speeds of PTs and GTs, and how it affects
+//! the performance."
+//!
+//! We measure, per trace and load level, the PT-side and GT-side token
+//! processing rates, the idle prompt-KV share, and the resulting JCT —
+//! quantifying the imbalance the decoupled design can create and how the
+//! PT-intake gate (`gt_stage_frac`) trades it off.
+
+use econoserve::figures::common;
+use econoserve::util::bench::BenchOut;
+use econoserve::util::stats::Table;
+
+fn main() {
+    let mut out = BenchOut::new("ext_pt_gt_balance");
+    let fast = std::env::var("FAST").is_ok();
+    let duration = if fast { 20.0 } else { 60.0 };
+
+    for trace in ["alpaca", "sharegpt"] {
+        let mut t = Table::new(&[
+            "load_x",
+            "stage_frac",
+            "pt_tok_rate",
+            "gt_tok_rate",
+            "waiting_kv_%",
+            "jct_s",
+            "tput_rps",
+        ]);
+        for load in [0.6, 1.0, 1.4] {
+            for stage in [0.02, 0.05, 0.15] {
+                let mut cfg = common::cfg("opt-13b", trace);
+                cfg.gt_stage_frac = stage;
+                let rate = common::capacity_estimate(&cfg, trace) * load;
+                let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+                let (res, world) =
+                    common::run_world(&cfg, "econoserve", trace, &items, false, 1200.0);
+                let span = res.end_time.max(1e-9);
+                let pt_tokens: u64 =
+                    world.recs.iter().map(|r| r.prompt_done as u64).sum();
+                let gt_tokens: u64 = world.recs.iter().map(|r| r.generated as u64).sum();
+                t.rowf(
+                    &format!("{load}@{stage}"),
+                    &[
+                        stage,
+                        pt_tokens as f64 / span,
+                        gt_tokens as f64 / span,
+                        world.col.brk_waiting_held.mean() * 100.0,
+                        res.summary.mean_jct,
+                        res.summary.throughput_rps,
+                    ],
+                );
+            }
+        }
+        out.section(&format!("{trace}: PT/GT processing balance"), t);
+    }
+    out.finish();
+}

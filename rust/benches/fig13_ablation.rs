@@ -1,0 +1,6 @@
+//! Paper figure driver: see econoserve::figures::fig13.
+//! Run with `cargo bench --bench fig13_ablation` (add FAST=1 for a quick pass).
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    econoserve::figures::fig13::run(fast);
+}

@@ -1,0 +1,6 @@
+//! Paper figure driver: see econoserve::figures::fig14.
+//! Run with `cargo bench --bench fig14_overhead` (add FAST=1 for a quick pass).
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    econoserve::figures::fig14::run(fast);
+}

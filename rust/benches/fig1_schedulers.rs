@@ -1,0 +1,6 @@
+//! Paper figure driver: see econoserve::figures::fig1.
+//! Run with `cargo bench --bench fig1_schedulers` (add FAST=1 for a quick pass).
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    econoserve::figures::fig1::run(fast);
+}

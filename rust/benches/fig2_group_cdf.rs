@@ -1,0 +1,6 @@
+//! Paper figure driver: see econoserve::figures::fig2.
+//! Run with `cargo bench --bench fig2_group_cdf` (add FAST=1 for a quick pass).
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    econoserve::figures::fig2::run_fig(fast);
+}

@@ -1,0 +1,6 @@
+//! Paper figure driver: see econoserve::figures::fig5.
+//! Run with `cargo bench --bench fig5_misprediction` (add FAST=1 for a quick pass).
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    econoserve::figures::fig5::run(fast);
+}

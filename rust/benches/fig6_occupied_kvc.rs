@@ -1,0 +1,6 @@
+//! Paper figure driver: see econoserve::figures::fig6.
+//! Run with `cargo bench --bench fig6_occupied_kvc` (add FAST=1 for a quick pass).
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    econoserve::figures::fig6::run(fast);
+}

@@ -1,0 +1,6 @@
+//! Paper figure driver: see econoserve::figures::fig9.
+//! Run with `cargo bench --bench fig9_latency_vs_rate` (add FAST=1 for a quick pass).
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    econoserve::figures::fig9::run(fast);
+}

@@ -1,0 +1,56 @@
+//! Micro-benchmark: batch-formation (Scheduler::step) latency per system
+//! at a deep queue — backs Fig 14 and the §Perf L3 target (<= 50 µs at
+//! 1k-deep queues for EconoServe).
+use econoserve::core::world::World;
+use econoserve::engine::{Engine, SimEngine};
+use econoserve::figures::common;
+use econoserve::util::bench::{black_box, time_fn};
+use std::time::Duration;
+
+fn main() {
+    let cfg = common::cfg("opt-13b", "sharegpt");
+    println!("scheduler step latency at ~1k-deep queue (sharegpt, opt-13b):");
+    for sys in ["orca", "fastserve", "vllm", "sarathi", "multires", "sync_coupled", "econoserve"] {
+        // Build a world mid-overload: 1000 queued requests.
+        let items = common::workload(&cfg, "sharegpt", 1000.0, 1.0, 7);
+        let pred = common_pred(&cfg);
+        let mut world = World::new(cfg.clone(), &items, pred);
+        world.clock = 2.0;
+        world.drain_arrivals();
+        let mut sched = econoserve::sched::by_name(sys).unwrap();
+        let engine = SimEngine::new();
+        // Warm the system into steady state: run some iterations.
+        for _ in 0..50 {
+            let b = sched.step(&mut world);
+            if b.is_empty() {
+                world.clock += 0.05;
+                continue;
+            }
+            let (d, u) = engine.iteration_cost(&b, &world);
+            world.execute_iteration(&b, d, u);
+        }
+        let mut res = time_fn(
+            || {
+                let b = sched.step(&mut world);
+                if !b.is_empty() {
+                    let (d, u) = engine.iteration_cost(&b, &world);
+                    world.execute_iteration(&b, d, u);
+                }
+                black_box(());
+            },
+            200,
+            Duration::from_millis(300),
+        );
+        println!("  {}", res.report(sys));
+    }
+}
+
+fn common_pred(
+    cfg: &econoserve::config::SystemConfig,
+) -> Box<dyn econoserve::predictor::Predictor> {
+    Box::new(econoserve::predictor::SimPredictor::for_trace(
+        "sharegpt",
+        cfg.block_size,
+        cfg.seed,
+    ))
+}

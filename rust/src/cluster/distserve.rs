@@ -1,0 +1,448 @@
+//! DistServe [24]: prefill/decode disaggregation across two GPU instances
+//! with KV-cache transfer between them.
+//!
+//! The prefill instance batches whole prompts FCFS up to its TFS; finished
+//! prompts stream their KV cache to the decode instance over the
+//! interconnect (Ethernet in the paper's §2/§4 setting — the transfer
+//! takes `kv_bytes(prompt) / bandwidth + latency` and is OVERLAPPED with
+//! other work, but delays the request's decode start; Observation 6).
+//! The decode instance runs vLLM-style continuous batching with
+//! block-allocation.
+//!
+//! Each instance has its own KVC pool and its own clock; the simulation
+//! advances whichever instance is earliest (two-server discrete-event).
+
+use std::collections::VecDeque;
+
+use crate::config::{ModelProfile, SystemConfig};
+use crate::core::{ReqId, Time};
+use crate::kvc::{BlockPool, Priority};
+use crate::metrics::{Collector, Summary};
+use crate::trace::TraceItem;
+use crate::util::stats::Samples;
+
+#[derive(Debug, Clone)]
+pub struct DistServeConfig {
+    /// Profile of the prefill instance (H100 in the heterogeneous setting).
+    pub prefill: ModelProfile,
+    /// Profile of the decode instance.
+    pub decode: ModelProfile,
+    /// Interconnect bandwidth (bytes/s). Paper §2: 100 Gb/s Ethernet.
+    pub net_bw: f64,
+    /// Per-transfer fixed latency (s).
+    pub net_lat: f64,
+    pub slo_scale: f64,
+    /// Mean service constants for the SLO formula (match the single-GPU
+    /// calibration so SLOs are comparable across systems).
+    pub t_p: Time,
+    pub t_g: Time,
+}
+
+impl DistServeConfig {
+    pub fn homogeneous(profile: ModelProfile, base: &SystemConfig) -> Self {
+        DistServeConfig {
+            prefill: profile.clone(),
+            decode: profile,
+            net_bw: 100e9 / 8.0, // 100 Gb/s
+            net_lat: 0.5e-3,
+            slo_scale: base.slo_scale,
+            t_p: base.t_p,
+            t_g: base.t_g,
+        }
+    }
+
+    pub fn heterogeneous(a100: ModelProfile, base: &SystemConfig) -> Self {
+        let mut c = Self::homogeneous(a100.clone(), base);
+        c.prefill = a100.h100_scaled();
+        c
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum St {
+    WaitPrefill,
+    Prefilling,
+    Transferring { ready_at: Time },
+    WaitDecode,
+    Decoding,
+    Done { at: Time },
+}
+
+struct Rec {
+    it: TraceItem,
+    deadline: Time,
+    st: St,
+    generated: u32,
+    first_emit: Option<Time>,
+    last_emit: Option<Time>,
+    tbt: (f64, u32),
+    exec_start: Option<Time>,
+}
+
+/// Simulation result for one DistServe pair.
+pub struct DistResult {
+    pub summary: Summary,
+    /// Mean transfer time share of JCT (Observation 6: ~7%).
+    pub transfer_share: f64,
+    /// Per-instance utilizations.
+    pub prefill_gpu_util: f64,
+    pub prefill_kvc_util: f64,
+    pub decode_gpu_util: f64,
+    pub decode_kvc_util: f64,
+    pub prefill_fwd: f64,
+    pub decode_fwd: f64,
+    /// Goodput: SLO-satisfying completions per second.
+    pub goodput: f64,
+}
+
+pub struct DistServeSim {
+    pub cfg: DistServeConfig,
+}
+
+impl DistServeSim {
+    pub fn new(cfg: DistServeConfig) -> Self {
+        DistServeSim { cfg }
+    }
+
+    /// Analytic iteration cost on `profile` (same roofline as engine::sim).
+    fn iter_cost(profile: &ModelProfile, fwd: u32, context: f64) -> (f64, f64) {
+        let attn = 4.0 * profile.hidden as f64 * context * profile.n_layers as f64;
+        let compute = (profile.flops_per_token() * fwd as f64 + attn) / profile.peak_flops;
+        let kv = profile.kv_bytes_per_token() as f64 * context;
+        let memory = (profile.weight_bytes + kv) / profile.mem_bw;
+        let dur = profile.iter_overhead + compute.max(memory);
+        (dur, (compute / dur).clamp(0.0, 1.0))
+    }
+
+    pub fn run(&self, items: &[TraceItem], max_sim_time: f64) -> DistResult {
+        let cfg = &self.cfg;
+        let mut recs: Vec<Rec> = items
+            .iter()
+            .map(|it| Rec {
+                it: *it,
+                deadline: it.arrival
+                    + cfg.slo_scale * (cfg.t_p + cfg.t_g * it.true_rl as f64),
+                st: St::WaitPrefill,
+                generated: 0,
+                first_emit: None,
+                last_emit: None,
+                tbt: (0.0, 0),
+                exec_start: None,
+            })
+            .collect();
+
+        let mut p_pool =
+            BlockPool::new(cfg.prefill.kvc_tokens(), 32, 0);
+        let mut d_pool = BlockPool::new(cfg.decode.kvc_tokens(), 32, 0);
+        let mut p_clock = 0.0f64;
+        let mut d_clock = 0.0f64;
+        let mut p_queue: VecDeque<ReqId> = VecDeque::new();
+        let mut d_queue: VecDeque<ReqId> = VecDeque::new();
+        let mut d_running: Vec<ReqId> = Vec::new();
+        let mut arrivals: VecDeque<ReqId> = (0..recs.len()).collect();
+
+        let mut col_p = Collector::new();
+        let mut col_d = Collector::new();
+        let mut transfer_time_total = 0.0;
+        let end_of_arrivals = items.last().map(|i| i.arrival).unwrap_or(0.0);
+
+        let done = |recs: &Vec<Rec>| recs.iter().all(|r| matches!(r.st, St::Done { .. }));
+        let mut guard = 0u64;
+        while !done(&recs) && guard < 60_000_000 {
+            guard += 1;
+            let now = p_clock.min(d_clock);
+            if now > max_sim_time {
+                break;
+            }
+            // Feed arrivals visible at `now`.
+            while let Some(&id) = arrivals.front() {
+                if recs[id].it.arrival <= now {
+                    arrivals.pop_front();
+                    p_queue.push_back(id);
+                } else {
+                    break;
+                }
+            }
+            // Promote finished transfers whose ready time has passed.
+            for (id, r) in recs.iter_mut().enumerate() {
+                if let St::Transferring { ready_at } = r.st {
+                    if ready_at <= d_clock {
+                        r.st = St::WaitDecode;
+                        d_queue.push_back(id);
+                    }
+                }
+            }
+
+            if p_clock <= d_clock {
+                // --- Prefill instance iteration ---
+                // Admit FCFS prompts up to TFS.
+                let mut batch: Vec<ReqId> = Vec::new();
+                let mut fwd = 0u32;
+                while let Some(&id) = p_queue.front() {
+                    let plen = recs[id].it.prompt_len;
+                    if fwd + plen > cfg.prefill.tfs && fwd > 0 {
+                        break;
+                    }
+                    if p_pool.alloc_tokens(id, plen, Priority::Reserved).is_err() {
+                        break;
+                    }
+                    p_queue.pop_front();
+                    recs[id].exec_start.get_or_insert(p_clock);
+                    recs[id].st = St::Prefilling;
+                    batch.push(id);
+                    fwd += plen;
+                    if fwd >= cfg.prefill.tfs {
+                        break;
+                    }
+                }
+                if batch.is_empty() {
+                    // Idle: advance to next input for this instance.
+                    let next_arrival = arrivals
+                        .front()
+                        .map(|&id| recs[id].it.arrival)
+                        .unwrap_or(f64::INFINITY);
+                    let target = next_arrival.max(p_clock + 1e-4);
+                    if target.is_infinite() {
+                        p_clock = f64::INFINITY.min(max_sim_time + 1.0);
+                    } else {
+                        p_clock = target;
+                    }
+                    continue;
+                }
+                let context: f64 = batch.iter().map(|&id| recs[id].it.prompt_len as f64 * 0.5).sum();
+                let (dur, util) = Self::iter_cost(&cfg.prefill, fwd, context);
+                for &id in &batch {
+                    p_pool.write_tokens(id, recs[id].it.prompt_len);
+                }
+                p_clock += dur;
+                col_p.record_iteration(
+                    p_clock,
+                    dur,
+                    fwd,
+                    util,
+                    p_pool.utilization(),
+                    p_pool.allocation_ratio(),
+                    0,
+                );
+                // Each finished prompt emits its first token here, then
+                // streams KV to the decode instance.
+                for &id in &batch {
+                    recs[id].generated = 1;
+                    recs[id].first_emit = Some(p_clock);
+                    recs[id].last_emit = Some(p_clock);
+                    let bytes = recs[id].it.prompt_len as f64
+                        * cfg.decode.kv_bytes_per_token() as f64;
+                    let t_x = bytes / cfg.net_bw + cfg.net_lat;
+                    transfer_time_total += t_x;
+                    if recs[id].it.true_rl <= 1 {
+                        recs[id].st = St::Done { at: p_clock };
+                    } else {
+                        recs[id].st = St::Transferring { ready_at: p_clock + t_x };
+                    }
+                    p_pool.release(id);
+                }
+            } else {
+                // --- Decode instance iteration ---
+                d_running.retain(|&id| !matches!(recs[id].st, St::Done { .. }));
+                // Admit transferred requests (block-alloc for their context).
+                while let Some(&id) = d_queue.front() {
+                    let need = recs[id].it.prompt_len + 2;
+                    if d_pool.alloc_tokens(id, need, Priority::Reserved).is_err() {
+                        break;
+                    }
+                    d_pool.write_tokens(id, recs[id].it.prompt_len);
+                    d_queue.pop_front();
+                    recs[id].st = St::Decoding;
+                    d_running.push(id);
+                }
+                if d_running.is_empty() {
+                    let next_ready = recs
+                        .iter()
+                        .filter_map(|r| match r.st {
+                            St::Transferring { ready_at } => Some(ready_at),
+                            _ => None,
+                        })
+                        .fold(f64::INFINITY, f64::min);
+                    if next_ready.is_finite() {
+                        d_clock = next_ready.max(d_clock + 1e-4);
+                    } else if p_clock.is_finite() && !done(&recs) {
+                        d_clock = (p_clock + 1e-4).max(d_clock + 1e-4);
+                    } else {
+                        d_clock = max_sim_time + 1.0;
+                    }
+                    continue;
+                }
+                // Grow each sequence by one token (swapless: preempt-free
+                // decode pool sized by admission gate above; on growth
+                // failure the latest request is bounced back to the queue).
+                let mut i = 0;
+                while i < d_running.len() {
+                    let id = d_running[i];
+                    let ctx = recs[id].it.prompt_len + recs[id].generated;
+                    match d_pool.ensure_capacity(id, ctx + 1, Priority::Reserved) {
+                        Ok(_) => i += 1,
+                        Err(_) => {
+                            let victim = *d_running.last().unwrap();
+                            d_running.pop();
+                            d_pool.release(victim);
+                            recs[victim].st = St::WaitDecode;
+                            d_queue.push_front(victim);
+                            col_d.preemptions += 1;
+                            if victim == id {
+                                break;
+                            }
+                        }
+                    }
+                }
+                let fwd = d_running.len() as u32;
+                let context: f64 = d_running
+                    .iter()
+                    .map(|&id| (recs[id].it.prompt_len + recs[id].generated) as f64)
+                    .sum();
+                let (dur, util) = Self::iter_cost(&cfg.decode, fwd, context);
+                d_clock += dur;
+                let mut completed = 0;
+                for &id in &d_running {
+                    d_pool.write_tokens(id, 1);
+                    let r = &mut recs[id];
+                    r.generated += 1;
+                    if let Some(last) = r.last_emit {
+                        r.tbt.0 += d_clock - last;
+                        r.tbt.1 += 1;
+                    }
+                    r.last_emit = Some(d_clock);
+                    if r.generated >= r.it.true_rl {
+                        r.st = St::Done { at: d_clock };
+                        d_pool.release(id);
+                        completed += 1;
+                    }
+                }
+                col_d.record_iteration(
+                    d_clock,
+                    dur,
+                    fwd,
+                    util,
+                    d_pool.utilization(),
+                    d_pool.allocation_ratio(),
+                    completed,
+                );
+            }
+        }
+
+        // Summarize.
+        let end = p_clock.min(d_clock).max(end_of_arrivals).min(max_sim_time);
+        let mut jct = Samples::new();
+        let mut tbt = Samples::new();
+        let mut norm = Samples::new();
+        let mut n_done = 0usize;
+        let mut slo_ok = 0usize;
+        let mut tokens = 0u64;
+        for r in &recs {
+            if let St::Done { at } = r.st {
+                n_done += 1;
+                let j = at - r.it.arrival;
+                jct.push(j);
+                norm.push(j / r.it.true_rl.max(1) as f64);
+                if at <= r.deadline {
+                    slo_ok += 1;
+                }
+                tokens += r.generated as u64;
+                if r.tbt.1 > 0 {
+                    tbt.push(r.tbt.0 / r.tbt.1 as f64);
+                }
+            }
+        }
+        let span = end.max(1e-9);
+        let summary = Summary {
+            n_total: recs.len(),
+            n_done,
+            throughput_rps: n_done as f64 / span,
+            throughput_tps: tokens as f64 / span,
+            mean_jct: jct.mean(),
+            p5_jct: jct.p5(),
+            p95_jct: jct.p95(),
+            norm_latency: norm.mean(),
+            ssr: slo_ok as f64 / recs.len().max(1) as f64,
+            mean_tbt: tbt.mean(),
+            p5_tbt: tbt.p5(),
+            p95_tbt: tbt.p95(),
+            kvc_util: (col_p.kvc_util.mean() + col_d.kvc_util.mean()) / 2.0,
+            kvc_alloc: (col_p.kvc_alloc.mean() + col_d.kvc_alloc.mean()) / 2.0,
+            gpu_util: (col_p.gpu_util.mean() + col_d.gpu_util.mean()) / 2.0,
+            avg_forward_size: (col_p.forward_size.mean() + col_d.forward_size.mean()) / 2.0,
+            preemptions: col_d.preemptions,
+            iterations: col_p.iterations + col_d.iterations,
+            ..Default::default()
+        };
+        DistResult {
+            transfer_share: if n_done > 0 {
+                (transfer_time_total / n_done as f64) / summary.mean_jct.max(1e-9)
+            } else {
+                0.0
+            },
+            prefill_gpu_util: col_p.gpu_util.mean(),
+            prefill_kvc_util: col_p.kvc_util.mean(),
+            decode_gpu_util: col_d.gpu_util.mean(),
+            decode_kvc_util: col_d.kvc_util.mean(),
+            prefill_fwd: col_p.forward_size.mean(),
+            decode_fwd: col_d.forward_size.mean(),
+            goodput: slo_ok as f64 / span,
+            summary,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::trace::{TraceGen, TraceSpec};
+
+    fn base() -> SystemConfig {
+        let mut c = SystemConfig::new(ModelProfile::opt_13b());
+        c.t_p = 0.1;
+        c.t_g = 0.025;
+        c
+    }
+
+    #[test]
+    fn completes_and_reports() {
+        let base = base();
+        let cfg = DistServeConfig::homogeneous(ModelProfile::opt_13b(), &base);
+        let gen = TraceGen::new(TraceSpec::sharegpt());
+        let items = gen.generate(60, 2.0, 4096, 3);
+        let res = DistServeSim::new(cfg).run(&items, 1e6);
+        assert_eq!(res.summary.n_done, 60);
+        assert!(res.summary.mean_jct > 0.0);
+        assert!(res.transfer_share > 0.0 && res.transfer_share < 0.5, "{}", res.transfer_share);
+    }
+
+    #[test]
+    fn decode_instance_underutilizes_gpu() {
+        // Observation 6: decode machine has low GPU utilization.
+        let base = base();
+        let cfg = DistServeConfig::homogeneous(ModelProfile::opt_13b(), &base);
+        let gen = TraceGen::new(TraceSpec::sharegpt());
+        let items = gen.generate(80, 4.0, 4096, 5);
+        let res = DistServeSim::new(cfg).run(&items, 1e6);
+        assert!(
+            res.decode_gpu_util < res.prefill_gpu_util,
+            "decode {} vs prefill {}",
+            res.decode_gpu_util,
+            res.prefill_gpu_util
+        );
+        assert!(res.prefill_fwd > res.decode_fwd);
+    }
+
+    #[test]
+    fn heterogeneous_prefill_is_faster() {
+        let base = base();
+        let homo = DistServeConfig::homogeneous(ModelProfile::opt_13b(), &base);
+        let het = DistServeConfig::heterogeneous(ModelProfile::opt_13b(), &base);
+        let gen = TraceGen::new(TraceSpec::sharegpt());
+        let items = gen.generate(50, 3.0, 4096, 7);
+        let r1 = DistServeSim::new(homo).run(&items, 1e6);
+        let r2 = DistServeSim::new(het).run(&items, 1e6);
+        assert!(r2.summary.mean_jct <= r1.summary.mean_jct * 1.05);
+    }
+}

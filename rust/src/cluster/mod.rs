@@ -1,0 +1,8 @@
+//! Multi-GPU serving: the DistServe [24] disaggregated baseline and the
+//! replicated-EconoServe capacity model used for Fig 12.
+
+pub mod distserve;
+pub mod replicas;
+
+pub use distserve::{DistServeConfig, DistServeSim};
+pub use replicas::{min_replicas_for_goodput, replicated_run};

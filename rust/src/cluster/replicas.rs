@@ -1,0 +1,123 @@
+//! Replicated single-GPU serving and the Fig 12 min-GPU search.
+//!
+//! EconoServe (and the other single-engine schedulers) scale out by
+//! running one replica per `gpus_per_replica` GPUs and load-balancing
+//! requests across replicas (shortest-queue in the paper's homogeneous
+//! setup; round-robin here — equivalent for Poisson arrivals).
+
+use crate::config::SystemConfig;
+use crate::coordinator::{harness, RunLimits};
+use crate::metrics::Summary;
+use crate::trace::TraceItem;
+
+/// Run `system` on `k` replicas, splitting `items` round-robin. Returns
+/// (aggregate goodput req/s, mean of per-replica summaries).
+pub fn replicated_run(
+    cfg: &SystemConfig,
+    system: &str,
+    trace: &str,
+    items: &[TraceItem],
+    oracle: bool,
+    k: usize,
+    max_sim_time: f64,
+) -> (f64, Vec<Summary>) {
+    assert!(k >= 1);
+    let mut shards: Vec<Vec<TraceItem>> = vec![Vec::new(); k];
+    for (i, it) in items.iter().enumerate() {
+        shards[i % k].push(*it);
+    }
+    let mut goodput = 0.0;
+    let mut summaries = Vec::with_capacity(k);
+    for shard in shards {
+        if shard.is_empty() {
+            continue;
+        }
+        let res = harness::simulate(
+            cfg,
+            system,
+            trace,
+            &shard,
+            oracle,
+            RunLimits::for_time(max_sim_time),
+        );
+        let span = res.end_time.max(1e-9);
+        // Goodput = SLO-satisfying completions per second.
+        goodput += res.summary.ssr * shard.len() as f64 / span;
+        summaries.push(res.summary);
+    }
+    (goodput, summaries)
+}
+
+/// Minimum number of GPUs `system` needs to reach `target_goodput`
+/// (binary search over replica count; each replica occupies
+/// `cfg.profile.gpus_per_replica` GPUs).
+pub fn min_replicas_for_goodput(
+    cfg: &SystemConfig,
+    system: &str,
+    trace: &str,
+    items: &[TraceItem],
+    oracle: bool,
+    target_goodput: f64,
+    max_replicas: usize,
+    max_sim_time: f64,
+) -> Option<usize> {
+    let feasible = |k: usize| -> bool {
+        let (g, _) = replicated_run(cfg, system, trace, items, oracle, k, max_sim_time);
+        g >= target_goodput
+    };
+    if !feasible(max_replicas) {
+        return None;
+    }
+    let (mut lo, mut hi) = (1usize, max_replicas);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelProfile;
+    use crate::trace::{TraceGen, TraceSpec};
+
+    #[test]
+    fn more_replicas_more_goodput_under_load() {
+        let mut cfg = SystemConfig::new(ModelProfile::opt_13b());
+        cfg.t_p = 0.1;
+        cfg.t_g = 0.025;
+        let gen = TraceGen::new(TraceSpec::sharegpt());
+        // Overload one replica.
+        let items = gen.generate(300, 12.0, 4096, 11);
+        let (g1, _) = replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 1, 300.0);
+        let (g3, _) = replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 3, 300.0);
+        assert!(g3 > g1, "g1={g1} g3={g3}");
+    }
+
+    #[test]
+    fn search_finds_minimum() {
+        let mut cfg = SystemConfig::new(ModelProfile::opt_13b());
+        cfg.t_p = 0.1;
+        cfg.t_g = 0.025;
+        let gen = TraceGen::new(TraceSpec::sharegpt());
+        let items = gen.generate(200, 8.0, 4096, 13);
+        let (g2, _) = replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 2, 300.0);
+        let k = min_replicas_for_goodput(
+            &cfg,
+            "econoserve",
+            "sharegpt",
+            &items,
+            true,
+            g2 * 0.9,
+            4,
+            300.0,
+        )
+        .expect("target must be feasible with 4 replicas");
+        assert!(k <= 2, "k={k}");
+    }
+}

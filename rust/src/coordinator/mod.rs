@@ -1,0 +1,187 @@
+//! The coordinator: the per-iteration control loop of Algorithm 1, shared
+//! by the simulation drivers and (via the same `Scheduler`/`Engine`
+//! seams) the real PJRT serving path.
+//!
+//! Loop per iteration:
+//!  1. drain arrivals into the inbox,
+//!  2. let the scheduler form a batch (measuring its wall-clock cost and
+//!     charging it to the simulation clock scaled by
+//!     `cfg.sched_time_scale` — so MultiRes's O(n²) scan really shows up
+//!     in Fig 14, from measured code rather than a constant),
+//!  3. price the batch with the engine,
+//!  4. apply the iteration to the world,
+//!  5. repeat until everything completed or limits hit.
+
+use std::time::Instant;
+
+use crate::core::world::World;
+use crate::engine::Engine;
+use crate::metrics::{summarize, Summary};
+use crate::sched::Scheduler;
+
+/// Stop conditions for a run.
+#[derive(Debug, Clone, Copy)]
+pub struct RunLimits {
+    /// Simulated seconds (requests arriving after this still count as
+    /// unfinished for SSR).
+    pub max_sim_time: f64,
+    pub max_iterations: u64,
+}
+
+impl Default for RunLimits {
+    fn default() -> Self {
+        RunLimits { max_sim_time: f64::INFINITY, max_iterations: 50_000_000 }
+    }
+}
+
+impl RunLimits {
+    pub fn for_time(t: f64) -> Self {
+        RunLimits { max_sim_time: t, ..Default::default() }
+    }
+}
+
+/// Outcome of a full run.
+pub struct RunResult {
+    pub summary: Summary,
+    /// Simulated end time.
+    pub end_time: f64,
+    /// Wall-clock seconds the run took (host side).
+    pub wall_time: f64,
+}
+
+/// Drive `world` with `sched` and `engine` until completion or limits.
+pub fn run(
+    world: &mut World,
+    sched: &mut dyn Scheduler,
+    engine: &dyn Engine,
+    limits: RunLimits,
+) -> RunResult {
+    let wall_start = Instant::now();
+    let mut iters = 0u64;
+    // Stall detection: if no batch executes for this much SIMULATED time
+    // while work remains, the scheduler is stuck (bug), not waiting.
+    const STALL_HORIZON: f64 = 120.0;
+    let mut last_progress = 0.0f64;
+
+    loop {
+        if world.all_done() || world.clock >= limits.max_sim_time || iters >= limits.max_iterations
+        {
+            break;
+        }
+        world.drain_arrivals();
+
+        let t0 = Instant::now();
+        let batch = sched.step(world);
+        let sched_wall = t0.elapsed().as_secs_f64();
+        let charged = sched_wall * world.cfg.sched_time_scale;
+
+        if batch.is_empty() {
+            // Nothing runnable. Fast-forward: to the next arrival if it is
+            // sooner than the idle quantum, else by the idle quantum —
+            // schedulers may be waiting on non-arrival wakeups such as
+            // prediction readiness (§3.3.2 predictor latency).
+            assert!(
+                world.clock - last_progress < STALL_HORIZON,
+                "{}: no batch executed for {STALL_HORIZON}s sim time ({} inbox, {} done/{})",
+                sched.name(),
+                world.inbox.len(),
+                world.n_done(),
+                world.recs.len()
+            );
+            let idle_step = world.clock + 0.05;
+            world.clock = match world.next_arrival() {
+                Some(t) if t > world.clock => t.min(idle_step),
+                _ => idle_step,
+            };
+            continue;
+        }
+        last_progress = world.clock;
+
+        world.col.record_sched(charged);
+        world.clock += charged;
+
+        let (dur, util) = engine.iteration_cost(&batch, world);
+        world.execute_iteration(&batch, dur, util);
+        iters += 1;
+    }
+
+    let end_time = world.clock;
+    RunResult {
+        summary: summarize(&world.recs, &world.col, end_time),
+        end_time,
+        wall_time: wall_start.elapsed().as_secs_f64(),
+    }
+}
+
+/// Convenience: build world + scheduler + sim engine from names and run.
+pub mod harness {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::engine::SimEngine;
+    use crate::predictor::{OraclePredictor, Predictor, SimPredictor};
+    use crate::trace::TraceItem;
+
+    /// Predictor selection for experiment drivers.
+    pub fn predictor_for(cfg: &SystemConfig, trace: &str, oracle: bool) -> Box<dyn Predictor> {
+        if oracle {
+            Box::new(OraclePredictor::new(cfg.block_size))
+        } else {
+            Box::new(SimPredictor::for_trace(trace, cfg.block_size, cfg.seed))
+        }
+    }
+
+    /// One full simulated run of `system` over `items`.
+    pub fn simulate(
+        cfg: &SystemConfig,
+        system: &str,
+        trace: &str,
+        items: &[TraceItem],
+        oracle: bool,
+        limits: RunLimits,
+    ) -> RunResult {
+        let pred = predictor_for(cfg, trace, oracle);
+        let mut world = World::new(cfg.clone(), items, pred);
+        let mut sched = crate::sched::by_name(system)
+            .unwrap_or_else(|| panic!("unknown system '{system}'"));
+        let engine = SimEngine::new();
+        let res = run(&mut world, sched.as_mut(), &engine, limits);
+        if std::env::var("ECONO_DEBUG").is_ok() {
+            eprintln!(
+                "[kvc breakdown] running-written {:.1}% | running-unwritten {:.1}% | waiting-held {:.1}%",
+                world.col.brk_running_written.mean() * 100.0,
+                world.col.brk_running_unwritten.mean() * 100.0,
+                world.col.brk_waiting_held.mean() * 100.0
+            );
+        }
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelProfile, SystemConfig};
+    use crate::trace::{TraceGen, TraceSpec};
+
+    #[test]
+    fn orca_runs_small_alpaca_slice() {
+        let cfg = SystemConfig::new(ModelProfile::opt_13b());
+        let gen = TraceGen::new(TraceSpec::alpaca());
+        let items = gen.generate(100, 20.0, cfg.profile.max_total_len, 1);
+        let res = harness::simulate(&cfg, "orca", "alpaca", &items, true, RunLimits::default());
+        assert_eq!(res.summary.n_done, 100);
+        assert!(res.summary.mean_jct > 0.0);
+        assert!(res.summary.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn time_limit_respected() {
+        let cfg = SystemConfig::new(ModelProfile::opt_13b());
+        let gen = TraceGen::new(TraceSpec::alpaca());
+        let items = gen.generate(5000, 50.0, cfg.profile.max_total_len, 2);
+        let res =
+            harness::simulate(&cfg, "orca", "alpaca", &items, true, RunLimits::for_time(5.0));
+        assert!(res.end_time <= 6.0, "end={}", res.end_time);
+        assert!(res.summary.n_done < 5000);
+    }
+}

@@ -1,0 +1,298 @@
+//! Core domain types: requests, task phases, SLOs, and the simulation clock.
+//!
+//! Terminology follows the paper:
+//!  * **PT** — prompt-processing task (prefill). Compute-intensive.
+//!  * **GT** — (token-)generation task (decode). Memory(KVC)-intensive.
+//!  * **RL** — response length, in tokens. The *true* RL comes from the
+//!    trace; schedulers only see the predictor's (padded) estimate.
+//!  * **KVC** — key-value cache, measured in tokens here (block-granular
+//!    allocation lives in [`crate::kvc`]).
+
+pub mod world;
+
+/// Simulation time in seconds.
+pub type Time = f64;
+
+/// Request identifier == index into `World::reqs`.
+pub type ReqId = usize;
+
+/// A user request as it enters the system.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: ReqId,
+    /// Absolute arrival time (seconds since experiment start).
+    pub arrival: Time,
+    /// Prompt length in tokens.
+    pub prompt_len: u32,
+    /// Ground-truth response length in tokens (>= 1; the first response
+    /// token is produced by the PT itself, per ORCA-style iteration flow).
+    pub true_rl: u32,
+    /// Absolute JCT deadline: `arrival + slo_scale * (t_p + t_g * true_rl)`
+    /// following the paper's SLO definition (§4, after [36]).
+    pub deadline: Time,
+}
+
+impl Request {
+    pub fn total_len(&self) -> u32 {
+        self.prompt_len + self.true_rl
+    }
+}
+
+/// Lifecycle phase of a request. Transitions:
+///
+/// ```text
+/// PtQueued -> Prefilling -> GtQueued -> Decoding -> Done
+///                  ^            ^           |
+///                  |            +-- Preempted (offload-free or swapped)
+///                  +-- (chunked prefill re-enters Prefilling)
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting in the PT queue (prompt not fully processed).
+    PtQueued,
+    /// At least one prompt chunk is in flight or processed, not all.
+    Prefilling,
+    /// Prompt fully processed; waiting in the GT queue for decode service.
+    /// (In decoupled schedulers this is a real queue; in coupled ones the
+    /// request usually passes through instantly.)
+    GtQueued,
+    /// In the running batch, generating tokens.
+    Decoding,
+    /// Paused: KVC allocation failed (vLLM-style swap) or a time-synced
+    /// group returned with this member unfinished (offload-free).
+    Preempted,
+    /// Completed; response returned to the user.
+    Done,
+}
+
+/// Mutable per-request simulation record.
+#[derive(Debug, Clone)]
+pub struct ReqRec {
+    pub req: Request,
+    pub phase: Phase,
+    /// Prompt tokens already processed (chunked prefill may take several
+    /// iterations to reach `prompt_len`).
+    pub prompt_done: u32,
+    /// Response tokens generated so far.
+    pub generated: u32,
+    /// Current (padded) RL prediction visible to schedulers. Re-prediction
+    /// after an under-provision updates this (see §3.3.2 Misprediction).
+    pub predicted_rl: u32,
+    /// `generated` value at the time of the last (re)prediction; the
+    /// *remaining* predicted tokens are `predicted_rl - (generated - base)`.
+    pub predicted_base: u32,
+    /// KVC tokens this request currently HOLDS (its own allocation;
+    /// excludes space borrowed from a host via KVC pipelining).
+    pub kvc_held: u32,
+    /// Timestamping for metrics.
+    pub first_token_at: Option<Time>,
+    pub exec_start_at: Option<Time>,
+    pub done_at: Option<Time>,
+    pub last_emit_at: Option<Time>,
+    /// Accumulated time spent preempted.
+    pub preempt_total: f64,
+    pub preempted_since: Option<Time>,
+    /// Number of preemptions suffered.
+    pub preempt_count: u32,
+    /// Sum of inter-token gaps and gap count (for mean TBT).
+    pub tbt_sum: f64,
+    pub tbt_n: u32,
+    /// Tokens offloaded to CPU memory while preempted (0 for offload-free).
+    pub swapped_tokens: u32,
+    /// KV tokens dropped by an offload-free preemption that must be
+    /// recomputed (as prefill work) before decoding can resume.
+    pub lost_kv: u32,
+    /// `generated` value when the current GT span was scheduled; the
+    /// host's write head within its span is `generated - gt_span_base`.
+    pub gt_span_base: u32,
+    /// Length (tokens) of the currently allocated GT span (exact-alloc).
+    pub gt_span_len: u32,
+}
+
+impl ReqRec {
+    pub fn new(req: Request) -> Self {
+        ReqRec {
+            req,
+            phase: Phase::PtQueued,
+            prompt_done: 0,
+            generated: 0,
+            predicted_rl: 0,
+            predicted_base: 0,
+            kvc_held: 0,
+            first_token_at: None,
+            exec_start_at: None,
+            done_at: None,
+            last_emit_at: None,
+            preempt_total: 0.0,
+            preempted_since: None,
+            preempt_count: 0,
+            tbt_sum: 0.0,
+            tbt_n: 0,
+            swapped_tokens: 0,
+            lost_kv: 0,
+            gt_span_base: 0,
+            gt_span_len: 0,
+        }
+    }
+
+    /// Tokens of context this request has in the KVC *right now* (prompt
+    /// processed so far + tokens generated). This is what attention reads.
+    pub fn context_tokens(&self) -> u32 {
+        self.prompt_done + self.generated
+    }
+
+    /// Remaining predicted response tokens under the current prediction.
+    pub fn predicted_remaining(&self) -> u32 {
+        let gen_since = self.generated.saturating_sub(self.predicted_base);
+        self.predicted_rl.saturating_sub(gen_since)
+    }
+
+    /// True remaining tokens (oracle view; used by the engine to decide
+    /// actual completion, never exposed to schedulers except Oracle mode).
+    pub fn true_remaining(&self) -> u32 {
+        self.req.true_rl.saturating_sub(self.generated)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    pub fn jct(&self) -> Option<f64> {
+        self.done_at.map(|d| d - self.req.arrival)
+    }
+
+    /// Mean time-between-tokens over the emitted response.
+    pub fn mean_tbt(&self) -> Option<f64> {
+        if self.tbt_n == 0 {
+            None
+        } else {
+            Some(self.tbt_sum / self.tbt_n as f64)
+        }
+    }
+
+    pub fn met_slo(&self) -> bool {
+        match self.done_at {
+            Some(d) => d <= self.req.deadline,
+            None => false,
+        }
+    }
+}
+
+/// One unit of work inside an iteration batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchTask {
+    /// Process `chunk` prompt tokens of request `id` (chunked prefill:
+    /// Sarathi/FastGen split long prompts; others use chunk == prompt_len).
+    Prefill { id: ReqId, chunk: u32 },
+    /// Generate one token for request `id`.
+    Decode { id: ReqId },
+}
+
+impl BatchTask {
+    pub fn id(&self) -> ReqId {
+        match self {
+            BatchTask::Prefill { id, .. } | BatchTask::Decode { id } => *id,
+        }
+    }
+
+    /// Contribution to the forward size (token count) of the iteration.
+    pub fn forward_tokens(&self) -> u32 {
+        match self {
+            BatchTask::Prefill { chunk, .. } => *chunk,
+            BatchTask::Decode { .. } => 1,
+        }
+    }
+}
+
+/// The batch a scheduler submits for one iteration.
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    pub tasks: Vec<BatchTask>,
+    /// Extra time charged to this iteration beyond the compute cost
+    /// (KV swap-in from CPU memory, KV transfer, ...).
+    pub extra_time: f64,
+}
+
+impl Batch {
+    pub fn forward_size(&self) -> u32 {
+        self.tasks.iter().map(|t| t.forward_tokens()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn decode_count(&self) -> usize {
+        self.tasks.iter().filter(|t| matches!(t, BatchTask::Decode { .. })).count()
+    }
+
+    pub fn prefill_tokens(&self) -> u32 {
+        self.tasks
+            .iter()
+            .map(|t| match t {
+                BatchTask::Prefill { chunk, .. } => *chunk,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request { id: 0, arrival: 1.0, prompt_len: 10, true_rl: 5, deadline: 9.0 }
+    }
+
+    #[test]
+    fn rec_context_and_remaining() {
+        let mut r = ReqRec::new(req());
+        r.predicted_rl = 8;
+        r.prompt_done = 10;
+        r.generated = 3;
+        assert_eq!(r.context_tokens(), 13);
+        assert_eq!(r.predicted_remaining(), 5);
+        assert_eq!(r.true_remaining(), 2);
+    }
+
+    #[test]
+    fn repredicted_remaining_uses_base() {
+        let mut r = ReqRec::new(req());
+        r.generated = 6;
+        r.predicted_base = 6; // re-predicted after 6 tokens
+        r.predicted_rl = 4; // new prediction: 4 more
+        assert_eq!(r.predicted_remaining(), 4);
+        r.generated = 9;
+        assert_eq!(r.predicted_remaining(), 1);
+    }
+
+    #[test]
+    fn batch_forward_size() {
+        let b = Batch {
+            tasks: vec![
+                BatchTask::Prefill { id: 0, chunk: 128 },
+                BatchTask::Decode { id: 1 },
+                BatchTask::Decode { id: 2 },
+            ],
+            extra_time: 0.0,
+        };
+        assert_eq!(b.forward_size(), 130);
+        assert_eq!(b.decode_count(), 2);
+        assert_eq!(b.prefill_tokens(), 128);
+    }
+
+    #[test]
+    fn slo_met_only_when_done_before_deadline() {
+        let mut r = ReqRec::new(req());
+        assert!(!r.met_slo());
+        r.done_at = Some(8.0);
+        assert!(r.met_slo());
+        r.done_at = Some(9.5);
+        assert!(!r.met_slo());
+    }
+}

@@ -1,0 +1,640 @@
+//! The simulation world: request records, arrival feed, KVC pool, KVC-
+//! pipelining registry, metrics, and the shared iteration-execution
+//! semantics every scheduler drives.
+//!
+//! Division of labour:
+//!  * **Schedulers** decide *what* runs (batch formation), own all KVC
+//!    *allocation* decisions, and react to the events of the previous
+//!    iteration (requeue, preempt, rescue with reserve, ...).
+//!  * **World::execute_iteration** applies the physics: token writes,
+//!    completions, TBT/JCT timestamps, KVC-pipelining overrun eviction,
+//!    and guest transfer when a host finishes early. These semantics are
+//!    identical across schedulers, so they live here.
+
+use std::collections::VecDeque;
+
+use super::{Batch, BatchTask, Phase, ReqId, ReqRec, Request, Time};
+use crate::config::SystemConfig;
+use crate::kvc::pipeline::PipeRegistry;
+use crate::kvc::{BlockPool, Priority};
+use crate::metrics::Collector;
+use crate::predictor::Predictor;
+use crate::trace::TraceItem;
+
+/// Events produced by the last executed iteration, consumed by the
+/// scheduler at the next `step`.
+#[derive(Debug, Default, Clone)]
+pub struct Events {
+    /// PTs whose prompt finished this iteration (they emitted their first
+    /// token and are now GTs awaiting decode service).
+    pub finished_prefill: Vec<ReqId>,
+    /// Requests that truly completed (KVC already released).
+    pub completed: Vec<ReqId>,
+    /// GTs that reached their predicted RL but are NOT done —
+    /// under-provisioned; the scheduler must rescue or preempt them.
+    pub reached_prediction: Vec<ReqId>,
+    /// Guests force-evicted because their host's write head caught up
+    /// (already preempted offload-free by the world).
+    pub evicted_guests: Vec<ReqId>,
+    /// Requests whose recompute (lost KV) finished this iteration and can
+    /// decode again.
+    pub recompute_done: Vec<ReqId>,
+}
+
+impl Events {
+    fn clear(&mut self) {
+        self.finished_prefill.clear();
+        self.completed.clear();
+        self.reached_prediction.clear();
+        self.evicted_guests.clear();
+        self.recompute_done.clear();
+    }
+}
+
+/// How a preemption treats the victim's KV data (config::PreemptMode is the
+/// *policy*; this is the mechanism chosen for one specific preemption).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptKind {
+    /// Swap KV to CPU memory (vLLM): swap-in cost charged on resume.
+    Swap,
+    /// Drop KV; recompute later as prefill work.
+    DropRecompute,
+}
+
+pub struct World {
+    pub cfg: SystemConfig,
+    pub clock: Time,
+    pub recs: Vec<ReqRec>,
+    pub pool: BlockPool,
+    pub pipes: PipeRegistry,
+    pub col: Collector,
+    /// Arrived requests not yet picked up by the scheduler.
+    pub inbox: VecDeque<ReqId>,
+    /// Future arrivals, next at the BACK (sorted descending by arrival).
+    future: Vec<ReqId>,
+    pub events: Events,
+    /// Time each request's RL prediction becomes available.
+    pub pred_ready: Vec<Time>,
+    /// The RL predictor (kept for re-prediction after under-provision,
+    /// §3.3.2: the predictor "undergoes continual retraining" and is
+    /// re-consulted when a request outruns its prediction).
+    predictor: Box<dyn Predictor>,
+}
+
+impl World {
+    /// Build a world from trace items; predictions (padded) are assigned
+    /// via `predictor` and deadlines via the cfg SLO formula.
+    pub fn new(cfg: SystemConfig, items: &[TraceItem], mut predictor: Box<dyn Predictor>) -> Self {
+        let mut recs = Vec::with_capacity(items.len());
+        let mut pred_ready = Vec::with_capacity(items.len());
+        for (id, it) in items.iter().enumerate() {
+            let deadline = it.arrival + cfg.slo_budget(it.true_rl);
+            let req = Request {
+                id,
+                arrival: it.arrival,
+                prompt_len: it.prompt_len.max(1),
+                true_rl: it.true_rl.max(1),
+                deadline,
+            };
+            let mut rec = ReqRec::new(req);
+            let raw = predictor.predict_raw(id, it.true_rl.max(1));
+            rec.predicted_rl = cfg.pad_prediction(raw);
+            recs.push(rec);
+            pred_ready.push(it.arrival + predictor.latency());
+        }
+        let mut future: Vec<ReqId> = (0..recs.len()).collect();
+        future.sort_by(|a, b| recs[*b].req.arrival.partial_cmp(&recs[*a].req.arrival).unwrap());
+        let pool = BlockPool::new(cfg.kvc_tokens(), cfg.block_size, cfg.reserve_tokens());
+        World {
+            cfg,
+            clock: 0.0,
+            recs,
+            pool,
+            pipes: PipeRegistry::new(),
+            col: Collector::new(),
+            inbox: VecDeque::new(),
+            future,
+            events: Events::default(),
+            pred_ready,
+            predictor,
+        }
+    }
+
+    /// Re-predict the REMAINING response length of an under-provisioned
+    /// request (padded + quantized like the initial prediction). Updates
+    /// the record and returns the new remaining prediction.
+    pub fn re_predict(&mut self, id: ReqId) -> u32 {
+        let rec = &self.recs[id];
+        let true_remaining = rec.true_remaining().max(1);
+        let raw = self.predictor.predict_raw(id, true_remaining);
+        let padded = self.cfg.pad_prediction(raw);
+        let rec = &mut self.recs[id];
+        rec.predicted_base = rec.generated;
+        rec.predicted_rl = padded;
+        padded
+    }
+
+    /// Take (consume) the last iteration's events. Schedulers MUST use
+    /// this rather than reading `events` in place: a step that produces an
+    /// empty batch skips `execute_iteration`, so in-place events would be
+    /// re-processed on the next step.
+    pub fn take_events(&mut self) -> Events {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Move arrivals with `arrival <= clock` into the inbox. Returns how
+    /// many arrived.
+    pub fn drain_arrivals(&mut self) -> usize {
+        let mut n = 0;
+        while let Some(&id) = self.future.last() {
+            if self.recs[id].req.arrival <= self.clock {
+                self.future.pop();
+                self.inbox.push_back(id);
+                n += 1;
+            } else {
+                break;
+            }
+        }
+        n
+    }
+
+    /// Next future arrival time (for idle fast-forward).
+    pub fn next_arrival(&self) -> Option<Time> {
+        self.future.last().map(|id| self.recs[*id].req.arrival)
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.future.is_empty()
+            && self.inbox.is_empty()
+            && self.recs.iter().all(|r| r.is_done())
+    }
+
+    pub fn n_done(&self) -> usize {
+        self.recs.iter().filter(|r| r.is_done()).count()
+    }
+
+    // ------------------------------------------------------------------
+    // Scheduler-facing helpers
+    // ------------------------------------------------------------------
+
+    /// Mark the start of service (first time any chunk of the request is
+    /// put in a batch).
+    pub fn mark_exec_start(&mut self, id: ReqId) {
+        let now = self.clock;
+        let rec = &mut self.recs[id];
+        if rec.exec_start_at.is_none() {
+            rec.exec_start_at = Some(now);
+        }
+        if let Some(since) = rec.preempted_since.take() {
+            rec.preempt_total += now - since;
+        }
+    }
+
+    /// Preempt a running/queued GT. Swap releases its pool allocation and
+    /// records swapped bytes; DropRecompute releases and queues recompute
+    /// work. (Guests are detached by the caller via `pipes`.)
+    pub fn preempt(&mut self, id: ReqId, kind: PreemptKind) {
+        let now = self.clock;
+        let written = self.pool.written_tokens(id);
+        let guest_written =
+            self.pool.alloc_of(id).map(|a| a.guest_written).unwrap_or(0);
+        self.pool.release(id);
+        let rec = &mut self.recs[id];
+        rec.phase = Phase::Preempted;
+        rec.preempted_since.get_or_insert(now);
+        rec.preempt_count += 1;
+        rec.kvc_held = 0;
+        match kind {
+            PreemptKind::Swap => {
+                rec.swapped_tokens = written + guest_written;
+                self.col.swap_preemptions += 1;
+            }
+            PreemptKind::DropRecompute => {
+                rec.lost_kv = written + guest_written;
+            }
+        }
+        self.col.preemptions += 1;
+    }
+
+    /// Swap-in cost (seconds) for a swapped-out request (vLLM restore).
+    pub fn swap_in_cost(&self, id: ReqId) -> f64 {
+        let bytes =
+            self.recs[id].swapped_tokens as f64 * self.cfg.profile.kv_bytes_per_token() as f64;
+        bytes / self.cfg.pcie_bw
+    }
+
+    /// KVC tokens a *queued* task currently occupies (Fig 6 / the Ordering
+    /// method's second factor): processed prompt chunks + generated tokens
+    /// still resident (not lost/swapped).
+    pub fn occupied_kvc(&self, id: ReqId) -> u32 {
+        self.pool.written_tokens(id)
+            + self.pool.alloc_of(id).map(|a| a.guest_written).unwrap_or(0)
+    }
+
+    // ------------------------------------------------------------------
+    // Iteration execution (shared physics)
+    // ------------------------------------------------------------------
+
+    /// Apply one iteration of `batch` lasting `dur` seconds with the given
+    /// engine-computed GPU utilization. Populates `self.events`.
+    pub fn execute_iteration(&mut self, batch: &Batch, dur: f64, gpu_util: f64) {
+        self.events.clear();
+        let end = self.clock + dur;
+
+        for task in &batch.tasks {
+            match *task {
+                BatchTask::Prefill { id, chunk } => {
+                    debug_assert!(chunk > 0);
+                    if self.recs[id].lost_kv > 0 {
+                        // Recompute pass for offload-free-preempted KV.
+                        let applied = chunk.min(self.recs[id].lost_kv);
+                        self.recs[id].lost_kv -= applied;
+                        self.write_kv(id, applied);
+                        if self.recs[id].lost_kv == 0 {
+                            self.events.recompute_done.push(id);
+                            self.recs[id].phase = Phase::Decoding;
+                        }
+                        continue;
+                    }
+                    let applied = {
+                        let rec = &mut self.recs[id];
+                        rec.phase = Phase::Prefilling;
+                        let applied = chunk.min(rec.req.prompt_len - rec.prompt_done);
+                        debug_assert_eq!(applied, chunk, "prefill chunk beyond prompt");
+                        rec.prompt_done += applied;
+                        applied
+                    };
+                    self.write_kv(id, applied);
+                    let finished = {
+                        let rec = &mut self.recs[id];
+                        if rec.prompt_done == rec.req.prompt_len {
+                            // PT emits the first response token (ORCA flow).
+                            rec.generated = 1;
+                            rec.first_token_at = Some(end);
+                            rec.last_emit_at = Some(end);
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    if finished {
+                        if self.recs[id].generated >= self.recs[id].req.true_rl {
+                            self.complete(id, end);
+                        } else {
+                            self.recs[id].phase = Phase::GtQueued;
+                            self.events.finished_prefill.push(id);
+                        }
+                    }
+                }
+                BatchTask::Decode { id } => {
+                    // Write the KV of the previously generated token, then
+                    // produce the next one.
+                    self.write_kv(id, 1);
+                    let done = {
+                        let rec = &mut self.recs[id];
+                        rec.phase = Phase::Decoding;
+                        rec.generated += 1;
+                        if let Some(last) = rec.last_emit_at {
+                            rec.tbt_sum += end - last;
+                            rec.tbt_n += 1;
+                        }
+                        rec.last_emit_at = Some(end);
+                        if rec.first_token_at.is_none() {
+                            rec.first_token_at = Some(end);
+                        }
+                        rec.generated >= rec.req.true_rl
+                    };
+                    if done {
+                        self.complete(id, end);
+                    } else if self.recs[id].predicted_remaining() == 0 {
+                        self.events.reached_prediction.push(id);
+                    }
+                }
+            }
+        }
+
+        // Host write-head vs guest overrun sweep. Runs after all tasks so
+        // an eviction decision cannot be clobbered by the guest's own
+        // decode task later in the same batch.
+        for task in &batch.tasks {
+            if let BatchTask::Decode { id } = *task {
+                if self.recs[id].is_done() {
+                    continue;
+                }
+                let head = self.recs[id].generated - self.recs[id].gt_span_base;
+                let over = self.pipes.overrun_guests(id, head);
+                for g in over {
+                    self.evict_guest(g);
+                }
+            }
+        }
+
+        let completed_count = self.events.completed.len();
+        self.clock = end;
+        // Sparse allocation-breakdown sampling (diagnostics for the KVC
+        // economy; cheap: every 32nd iteration).
+        if self.col.iterations % 32 == 0 {
+            let cap = self.pool.capacity_tokens() as f64;
+            let mut run_w = 0u64;
+            let mut run_a = 0u64;
+            let mut wait_h = 0u64;
+            for rec in &self.recs {
+                let alloc = self.pool.allocated_tokens(rec.req.id) as u64;
+                let written = self.pool.written_tokens(rec.req.id) as u64;
+                match rec.phase {
+                    Phase::Decoding => {
+                        run_w += written;
+                        run_a += alloc;
+                    }
+                    Phase::Prefilling => {
+                        run_w += written;
+                        run_a += alloc;
+                        // A partially processed (chunked) prompt occupies
+                        // KVC while the rest of the prompt waits (Fig 6).
+                        if rec.prompt_done > 0 && rec.prompt_done < rec.req.prompt_len {
+                            self.col.occ_chunked_pt.push(written as f64);
+                        }
+                    }
+                    Phase::GtQueued | Phase::Preempted => {
+                        wait_h += alloc;
+                        if written > 0 {
+                            if rec.preempt_count == 0 {
+                                self.col.occ_new_gt.push(written as f64);
+                            } else {
+                                self.col.occ_preempted_gt.push(written as f64);
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            self.col.brk_running_written.add(self.clock, dur, run_w as f64 / cap);
+            self.col
+                .brk_running_unwritten
+                .add(self.clock, dur, run_a.saturating_sub(run_w) as f64 / cap);
+            self.col.brk_waiting_held.add(self.clock, dur, wait_h as f64 / cap);
+        }
+        let kvc_util = self.pool.utilization();
+        let kvc_alloc = self.pool.allocation_ratio();
+        self.col.record_iteration(
+            self.clock,
+            dur,
+            batch.forward_size(),
+            gpu_util,
+            kvc_util,
+            kvc_alloc,
+            completed_count,
+        );
+    }
+
+    /// Route a KV write to the request's own allocation or, for a hosted
+    /// guest, to borrowed space.
+    fn write_kv(&mut self, id: ReqId, n: u32) {
+        if self.pipes.is_guest(id) {
+            self.pool.write_guest_tokens(id, n);
+        } else {
+            self.pool.write_tokens(id, n);
+        }
+        self.recs[id].kvc_held = self.occupied_kvc(id);
+    }
+
+    fn complete(&mut self, id: ReqId, at: Time) {
+        // Live direct guests of this host must be re-homed or evicted
+        // before the host's blocks are freed.
+        let guests = self.pipes.remove_host(id);
+        for g in guests {
+            if self.recs[g].is_done() {
+                continue;
+            }
+            let moved = self.pool.alloc_of(g).map(|a| a.guest_written).unwrap_or(0);
+            let need = moved + self.recs[g].predicted_remaining() + 1;
+            if self.pool.alloc_tokens(g, need, Priority::Reserved).is_ok() {
+                // Transferred to its own allocation; guest-written tokens
+                // move with it (modelled as a block copy, costless here —
+                // cudaMemcpyAsync overlap in the real system).
+                self.pool.clear_guest_tokens(g);
+                if moved > 0 {
+                    self.pool.write_tokens(g, moved);
+                }
+            } else {
+                self.evict_guest(g);
+            }
+        }
+        if self.pipes.is_guest(id) {
+            self.pipes.release_guest(id);
+        }
+        self.pool.release(id);
+        let rec = &mut self.recs[id];
+        rec.phase = Phase::Done;
+        rec.done_at = Some(at);
+        rec.kvc_held = 0;
+        self.events.completed.push(id);
+    }
+
+    /// Force-evict a hosted guest whose backing disappeared (host head
+    /// overrun or host early completion without transfer capacity).
+    /// Offload-free: its generated-token KV is dropped for recompute; its
+    /// own (prompt) allocation is kept.
+    fn evict_guest(&mut self, g: ReqId) {
+        self.pipes.release_guest(g);
+        let guest_written = self.pool.clear_guest_tokens(g);
+        let now = self.clock;
+        let rec = &mut self.recs[g];
+        rec.lost_kv += guest_written;
+        rec.phase = Phase::Preempted;
+        rec.preempted_since.get_or_insert(now);
+        rec.preempt_count += 1;
+        self.col.preemptions += 1;
+        self.col.pipeline_evictions += 1;
+        self.events.evicted_guests.push(g);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelProfile;
+    use crate::predictor::OraclePredictor;
+
+    fn mini_cfg() -> SystemConfig {
+        let mut profile = ModelProfile::opt_13b();
+        profile.kvc_bytes = 819_200 * 2048; // 2048 tokens of KVC
+        let mut cfg = SystemConfig::new(profile);
+        cfg.block_size = 32;
+        cfg.reserve_frac = 0.05;
+        cfg
+    }
+
+    fn item(arrival: f64, p: u32, r: u32) -> TraceItem {
+        TraceItem { arrival, prompt_len: p, true_rl: r }
+    }
+
+    fn world(items: &[TraceItem]) -> World {
+        let cfg = mini_cfg();
+        let pred = Box::new(OraclePredictor::new(1));
+        World::new(cfg, items, pred)
+    }
+
+    #[test]
+    fn arrivals_flow_into_inbox() {
+        let mut w = world(&[item(0.0, 10, 5), item(1.0, 10, 5), item(2.0, 10, 5)]);
+        w.clock = 1.5;
+        assert_eq!(w.drain_arrivals(), 2);
+        assert_eq!(w.inbox.len(), 2);
+        assert_eq!(w.next_arrival(), Some(2.0));
+    }
+
+    #[test]
+    fn prefill_then_decode_completes() {
+        let mut w = world(&[item(0.0, 8, 3)]);
+        w.drain_arrivals();
+        w.pool.alloc_tokens(0, 8 + 4, Priority::Normal).unwrap();
+        // Prefill whole prompt.
+        let b = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 8 }], extra_time: 0.0 };
+        w.execute_iteration(&b, 0.01, 0.9);
+        assert_eq!(w.events.finished_prefill, vec![0]);
+        assert_eq!(w.recs[0].generated, 1);
+        assert!(w.recs[0].first_token_at.is_some());
+        // Two decode steps complete rl=3.
+        let d = Batch { tasks: vec![BatchTask::Decode { id: 0 }], extra_time: 0.0 };
+        w.execute_iteration(&d, 0.01, 0.5);
+        assert!(w.events.completed.is_empty());
+        w.execute_iteration(&d, 0.01, 0.5);
+        assert!(w.recs[0].is_done());
+        assert_eq!(w.pool.allocated_tokens(0), 0, "KVC released on completion");
+        assert!((w.recs[0].jct().unwrap() - 0.03).abs() < 1e-9);
+        assert_eq!(w.recs[0].tbt_n, 2);
+    }
+
+    #[test]
+    fn chunked_prefill_needs_two_iterations() {
+        let mut w = world(&[item(0.0, 100, 2)]);
+        w.drain_arrivals();
+        w.pool.alloc_tokens(0, 101, Priority::Normal).unwrap();
+        let b1 = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 60 }], extra_time: 0.0 };
+        w.execute_iteration(&b1, 0.01, 1.0);
+        assert!(w.events.finished_prefill.is_empty());
+        assert_eq!(w.recs[0].prompt_done, 60);
+        let b2 = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 40 }], extra_time: 0.0 };
+        w.execute_iteration(&b2, 0.01, 1.0);
+        assert_eq!(w.events.finished_prefill, vec![0]);
+    }
+
+    #[test]
+    fn underprediction_raises_event() {
+        let mut w = world(&[item(0.0, 4, 10)]);
+        // Oracle predicts 10, but force a bad prediction:
+        w.recs[0].predicted_rl = 3;
+        w.drain_arrivals();
+        w.pool.alloc_tokens(0, 4 + 4, Priority::Normal).unwrap();
+        let b = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 4 }], extra_time: 0.0 };
+        w.execute_iteration(&b, 0.01, 1.0);
+        let d = Batch { tasks: vec![BatchTask::Decode { id: 0 }], extra_time: 0.0 };
+        w.execute_iteration(&d, 0.01, 1.0); // generated=2
+        assert!(w.events.reached_prediction.is_empty());
+        w.execute_iteration(&d, 0.01, 1.0); // generated=3 == predicted
+        assert_eq!(w.events.reached_prediction, vec![0]);
+    }
+
+    #[test]
+    fn swap_preempt_and_cost() {
+        let mut w = world(&[item(0.0, 32, 5)]);
+        w.drain_arrivals();
+        w.pool.alloc_tokens(0, 33, Priority::Normal).unwrap();
+        let b = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 32 }], extra_time: 0.0 };
+        w.execute_iteration(&b, 0.01, 1.0);
+        w.preempt(0, PreemptKind::Swap);
+        assert_eq!(w.recs[0].phase, Phase::Preempted);
+        assert_eq!(w.recs[0].swapped_tokens, 32);
+        assert_eq!(w.pool.allocated_tokens(0), 0);
+        assert!(w.swap_in_cost(0) > 0.0);
+    }
+
+    #[test]
+    fn offload_free_preempt_requires_recompute() {
+        let mut w = world(&[item(0.0, 16, 8)]);
+        w.drain_arrivals();
+        w.pool.alloc_tokens(0, 24, Priority::Normal).unwrap();
+        let b = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 16 }], extra_time: 0.0 };
+        w.execute_iteration(&b, 0.01, 1.0);
+        let d = Batch { tasks: vec![BatchTask::Decode { id: 0 }], extra_time: 0.0 };
+        w.execute_iteration(&d, 0.01, 1.0); // generated=2, written=17
+        w.preempt(0, PreemptKind::DropRecompute);
+        assert_eq!(w.recs[0].lost_kv, 17);
+        // Resume: re-alloc and recompute in one chunk.
+        w.pool.alloc_tokens(0, 17 + 7, Priority::Normal).unwrap();
+        let r = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 17 }], extra_time: 0.0 };
+        w.execute_iteration(&r, 0.01, 1.0);
+        assert_eq!(w.events.recompute_done, vec![0]);
+        assert_eq!(w.recs[0].generated, 2, "generation progress preserved");
+        // Decoding continues to completion.
+        for _ in 0..6 {
+            w.execute_iteration(&d, 0.01, 1.0);
+        }
+        assert!(w.recs[0].is_done());
+    }
+
+    #[test]
+    fn guest_completes_before_host_head() {
+        // Host: rl 16 (span 16). Guest: rl 6 placed at offset 8.
+        let mut w = world(&[item(0.0, 4, 16), item(0.0, 4, 6)]);
+        w.drain_arrivals();
+        w.pool.alloc_tokens(0, 4 + 17, Priority::Normal).unwrap();
+        w.pool.alloc_tokens(1, 4, Priority::Normal).unwrap(); // prompt only
+        let b = Batch {
+            tasks: vec![
+                BatchTask::Prefill { id: 0, chunk: 4 },
+                BatchTask::Prefill { id: 1, chunk: 4 },
+            ],
+            extra_time: 0.0,
+        };
+        w.execute_iteration(&b, 0.01, 1.0);
+        // Schedule both as GTs; 1 is guest of 0 at offset 8.
+        w.recs[0].gt_span_base = 1;
+        w.recs[1].gt_span_base = 1;
+        w.pipes.add_guest(1, 0, 8, 8);
+        let d = Batch { tasks: vec![BatchTask::Decode { id: 0 }, BatchTask::Decode { id: 1 }], extra_time: 0.0 };
+        for _ in 0..5 {
+            w.execute_iteration(&d, 0.01, 1.0);
+        }
+        // Guest done at generated=6 (5 decodes after first token).
+        assert!(w.recs[1].is_done());
+        assert_eq!(w.col.pipeline_evictions, 0);
+        // Host continues alone.
+        let d0 = Batch { tasks: vec![BatchTask::Decode { id: 0 }], extra_time: 0.0 };
+        for _ in 0..10 {
+            w.execute_iteration(&d0, 0.01, 1.0);
+        }
+        assert!(w.recs[0].is_done());
+    }
+
+    #[test]
+    fn overrunning_guest_gets_evicted() {
+        let mut w = world(&[item(0.0, 4, 16), item(0.0, 4, 12)]);
+        w.drain_arrivals();
+        w.pool.alloc_tokens(0, 4 + 17, Priority::Normal).unwrap();
+        w.pool.alloc_tokens(1, 4, Priority::Normal).unwrap();
+        let b = Batch {
+            tasks: vec![
+                BatchTask::Prefill { id: 0, chunk: 4 },
+                BatchTask::Prefill { id: 1, chunk: 4 },
+            ],
+            extra_time: 0.0,
+        };
+        w.execute_iteration(&b, 0.01, 1.0);
+        w.recs[0].gt_span_base = 1;
+        w.recs[1].gt_span_base = 1;
+        // Guest rl=12 wrongly placed at offset 4: host head passes 4 soon.
+        w.pipes.add_guest(1, 0, 4, 8);
+        let d = Batch { tasks: vec![BatchTask::Decode { id: 0 }, BatchTask::Decode { id: 1 }], extra_time: 0.0 };
+        for _ in 0..5 {
+            w.execute_iteration(&d, 0.01, 1.0);
+            if !w.events.evicted_guests.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(w.recs[1].phase, Phase::Preempted);
+        assert!(w.recs[1].lost_kv > 0);
+        assert!(w.col.pipeline_evictions >= 1);
+    }
+}

@@ -1,0 +1,21 @@
+//! Execution engines: something that can price (or actually run) one
+//! iteration of a batch.
+//!
+//! * [`SimEngine`] — analytic roofline cost model calibrated from the
+//!   profile (A100-class numbers); powers every paper-figure driver.
+//! * [`crate::runtime::PjrtEngine`] — the real path: executes the AOT
+//!   HLO artifacts on the PJRT CPU client (see `runtime/`).
+
+pub mod sim;
+
+pub use sim::SimEngine;
+
+use crate::core::world::World;
+use crate::core::Batch;
+
+/// Anything that can execute/price one iteration.
+pub trait Engine {
+    /// Returns `(duration_seconds, gpu_compute_utilization)` for running
+    /// `batch` given the current world state. Must NOT mutate the world.
+    fn iteration_cost(&self, batch: &Batch, world: &World) -> (f64, f64);
+}

@@ -1,0 +1,137 @@
+//! Shared experiment plumbing: calibrated configs, rate grids, run
+//! helpers with access to the final World (for figure-specific
+//! instrumentation).
+
+use crate::config::{ModelProfile, SystemConfig};
+use crate::coordinator::{run, RunLimits, RunResult};
+use crate::core::world::World;
+use crate::engine::SimEngine;
+use crate::predictor::{OraclePredictor, Predictor, SimPredictor};
+use crate::trace::{TraceGen, TraceItem, TraceSpec};
+
+/// The paper's three models.
+pub fn models() -> [&'static str; 3] {
+    ["opt-13b", "llama-33b", "opt-175b"]
+}
+
+/// The paper's three traces.
+pub fn traces() -> [&'static str; 3] {
+    ["alpaca", "sharegpt", "bookcorpus"]
+}
+
+/// SystemConfig with the paper's per-trace sweet spots (§2.3, Fig 15) and
+/// SLO constants derived from the cost model.
+pub fn cfg(model: &str, trace: &str) -> SystemConfig {
+    let profile = ModelProfile::by_name(model).unwrap_or_else(|| panic!("model {model}"));
+    let mut cfg = SystemConfig::new(profile);
+    match trace {
+        "alpaca" => {
+            cfg.padding_ratio = 0.10;
+            cfg.reserve_frac = 0.02;
+            cfg.buffer_frac = 0.15;
+        }
+        "sharegpt" => {
+            cfg.padding_ratio = 0.15;
+            cfg.reserve_frac = 0.03;
+            cfg.buffer_frac = 0.15;
+        }
+        "bookcorpus" => {
+            cfg.padding_ratio = 0.20;
+            cfg.reserve_frac = 0.04;
+            cfg.buffer_frac = 0.10;
+        }
+        _ => {}
+    }
+    let spec = TraceSpec::by_name(trace).unwrap_or_else(TraceSpec::sharegpt);
+    cfg.t_p = cfg.profile.flops_per_token() * spec.input.avg / cfg.profile.peak_flops
+        + cfg.profile.iter_overhead;
+    cfg.t_g = cfg.profile.weight_bytes / cfg.profile.mem_bw + cfg.profile.iter_overhead;
+    cfg
+}
+
+/// Crude capacity estimate (req/s) for scaling rate grids across models
+/// and traces: min of the compute and KVC rooflines.
+pub fn capacity_estimate(cfg: &SystemConfig, trace: &str) -> f64 {
+    let spec = TraceSpec::by_name(trace).unwrap();
+    let total_tokens = spec.input.avg + spec.output.avg;
+    let compute_cap = cfg.profile.peak_flops / (cfg.profile.flops_per_token() * total_tokens);
+    // KVC: avg resident footprint ~ prompt + RL/2; service time ~ RL * t_g.
+    let footprint = spec.input.avg + spec.output.avg / 2.0;
+    let service = spec.output.avg * cfg.t_g;
+    let kvc_cap = cfg.profile.kvc_tokens() as f64 / footprint / service;
+    compute_cap.min(kvc_cap)
+}
+
+/// A rate grid spanning under- to over-load for (model, trace).
+pub fn rate_grid(cfg: &SystemConfig, trace: &str, points: usize) -> Vec<f64> {
+    let cap = capacity_estimate(cfg, trace);
+    (1..=points).map(|i| cap * 0.25 * i as f64).collect()
+}
+
+/// Generate the standard workload for (cfg, trace) at `rate` for
+/// `duration` simulated seconds.
+pub fn workload(cfg: &SystemConfig, trace: &str, rate: f64, duration: f64, seed: u64) -> Vec<TraceItem> {
+    let gen = TraceGen::new(TraceSpec::by_name(trace).unwrap());
+    gen.generate_for(duration, rate, cfg.profile.max_total_len, seed)
+}
+
+/// Run a system and return both the result and the final world (for
+/// figure-specific post-processing).
+pub fn run_world(
+    cfg: &SystemConfig,
+    system: &str,
+    trace: &str,
+    items: &[TraceItem],
+    oracle: bool,
+    max_time: f64,
+) -> (RunResult, World) {
+    let pred: Box<dyn Predictor> = if oracle {
+        Box::new(OraclePredictor::new(cfg.block_size))
+    } else {
+        Box::new(SimPredictor::for_trace(trace, cfg.block_size, cfg.seed))
+    };
+    let mut world = World::new(cfg.clone(), items, pred);
+    let mut sched =
+        crate::sched::by_name(system).unwrap_or_else(|| panic!("unknown system {system}"));
+    let engine = SimEngine::new();
+    let res = run(&mut world, sched.as_mut(), &engine, RunLimits::for_time(max_time));
+    (res, world)
+}
+
+/// Default experiment duration (simulated seconds) — short enough that
+/// all figures regenerate in minutes, long enough for steady state.
+pub const DURATION: f64 = 90.0;
+
+/// Default drain allowance after arrivals stop.
+pub const MAX_TIME: f64 = 900.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_estimates_ordered_by_model_size() {
+        let c13 = capacity_estimate(&cfg("opt-13b", "sharegpt"), "sharegpt");
+        let c175 = capacity_estimate(&cfg("opt-175b", "sharegpt"), "sharegpt");
+        assert!(c13 > 0.0 && c175 > 0.0);
+    }
+
+    #[test]
+    fn rate_grid_monotone() {
+        let c = cfg("opt-13b", "alpaca");
+        let g = rate_grid(&c, "alpaca", 6);
+        assert_eq!(g.len(), 6);
+        for w in g.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn run_world_smoke() {
+        let c = cfg("opt-13b", "alpaca");
+        let items = workload(&c, "alpaca", 5.0, 10.0, 1);
+        let (res, world) = run_world(&c, "vllm", "alpaca", &items, true, 200.0);
+        assert_eq!(res.summary.n_done, items.len());
+        assert!(world.all_done());
+    }
+}

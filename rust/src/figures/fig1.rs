@@ -1,0 +1,90 @@
+//! Figure 1: comparison of schedulers (§2.2 motivation study).
+//!
+//! Reproduces, per trace with RLs pre-known (Oracle, as in the paper's
+//! first measurement): (a) throughput, (b) KVC utilization, (c) forward
+//! size, (d) KVC allocation-failure %, (e) JCT decomposition, and
+//! (f) the completed-requests-per-iteration distribution that motivates
+//! the GT-domination observation.
+
+use super::common::{self, DURATION, MAX_TIME};
+use crate::util::bench::BenchOut;
+use crate::util::stats::Table;
+
+/// The §2 schedulers (EconoServe ladder entries renamed as in Fig 1).
+pub fn systems() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("SRTF", "srtf"),
+        ("ORCA", "orca"),
+        ("FastServe", "fastserve"),
+        ("vLLM", "vllm"),
+        ("Sarathi-Serve", "sarathi"),
+        ("MultiRes", "multires"),
+        ("SyncCoupled", "sync_coupled"),
+        ("SyncDecoupled", "econoserve-sdo"),
+    ]
+}
+
+pub fn run(fast: bool) {
+    let mut out = BenchOut::new("fig1");
+    let duration = if fast { 30.0 } else { DURATION };
+
+    for trace in common::traces() {
+        let cfg = common::cfg("opt-13b", trace);
+        // 80% of estimated capacity: "some requests are queued while a
+        // batch is processing" (§2.1).
+        let rate = common::capacity_estimate(&cfg, trace) * 0.8;
+        let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+
+        let mut main_t = Table::new(&[
+            "scheduler",
+            "tput_rps",
+            "kvc_util_%",
+            "fwd_size",
+            "alloc_fail_%",
+            "gpu_util_%",
+        ]);
+        let mut jct_t = Table::new(&[
+            "scheduler",
+            "jct_s",
+            "wait_s",
+            "exec_s",
+            "preempt_s",
+            "sched_s",
+        ]);
+        let mut citer_t = Table::new(&["scheduler", "c0_%", "c1_%", "c2_%", "c3+_%"]);
+
+        for (label, sys) in systems() {
+            let (res, world) = common::run_world(&cfg, sys, trace, &items, true, MAX_TIME);
+            let s = &res.summary;
+            main_t.rowf(
+                label,
+                &[
+                    s.throughput_rps,
+                    s.kvc_util * 100.0,
+                    s.avg_forward_size,
+                    s.alloc_failure_frac * 100.0,
+                    s.gpu_util * 100.0,
+                ],
+            );
+            jct_t.rowf(
+                label,
+                &[s.mean_jct, s.mean_wait, s.mean_exec, s.mean_preempt, s.mean_sched_share],
+            );
+            // (f) completed-per-iteration histogram.
+            let hist = &world.col.completions_per_iter;
+            let total: u64 = hist.iter().sum::<u64>().max(1);
+            let pct = |i: usize| -> f64 {
+                if i < 3 {
+                    *hist.get(i).unwrap_or(&0) as f64 / total as f64 * 100.0
+                } else {
+                    hist.iter().skip(3).sum::<u64>() as f64 / total as f64 * 100.0
+                }
+            };
+            citer_t.rowf(label, &[pct(0), pct(1), pct(2), pct(3)]);
+        }
+        out.section(&format!("{trace} (rate {rate:.2}/s): throughput/utilization"), main_t);
+        out.section(&format!("{trace}: JCT decomposition (e)"), jct_t);
+        out.section(&format!("{trace}: completions per iteration (f)"), citer_t);
+    }
+    out.finish();
+}

@@ -1,0 +1,51 @@
+//! Figure 10: SLO satisfaction ratio (SSR) per model and trace, at a
+//! moderately loaded operating point, for the Fig 9 systems + Oracle.
+
+use super::common::{self, MAX_TIME};
+use crate::cluster::{DistServeConfig, DistServeSim};
+use crate::util::bench::BenchOut;
+use crate::util::stats::Table;
+
+pub fn run(fast: bool) {
+    let mut out = BenchOut::new("fig10");
+    let duration = if fast { 30.0 } else { 60.0 };
+    let models: &[&str] = if fast { &["opt-13b"] } else { &["opt-13b", "llama-33b", "opt-175b"] };
+
+    for trace in common::traces() {
+        let mut t = Table::new(&[
+            "model",
+            "ORCA",
+            "vLLM",
+            "Sarathi",
+            "DistServe",
+            "EconoServe",
+            "Oracle",
+        ]);
+        for model in models {
+            let cfg = common::cfg(model, trace);
+            let rate = common::capacity_estimate(&cfg, trace) * 0.7;
+            let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+            let ssr = |sys: &str, oracle: bool| -> f64 {
+                common::run_world(&cfg, sys, trace, &items, oracle, MAX_TIME).0.summary.ssr
+                    * 100.0
+            };
+            let dist = {
+                let dcfg = DistServeConfig::homogeneous(cfg.profile.clone(), &cfg);
+                DistServeSim::new(dcfg).run(&items, MAX_TIME).summary.ssr * 100.0
+            };
+            t.rowf(
+                model,
+                &[
+                    ssr("orca", false),
+                    ssr("vllm", false),
+                    ssr("sarathi", false),
+                    dist,
+                    ssr("econoserve", false),
+                    ssr("econoserve", true),
+                ],
+            );
+        }
+        out.section(&format!("{trace}: SSR (%)"), t);
+    }
+    out.finish();
+}

@@ -1,0 +1,44 @@
+//! Figure 11: average KVC and GPU utilization vs request rate on
+//! ShareGPT for each model, across the Fig 9 systems.
+
+use super::common::{self, MAX_TIME};
+use crate::cluster::{DistServeConfig, DistServeSim};
+use crate::util::bench::BenchOut;
+use crate::util::stats::Table;
+
+pub fn run(fast: bool) {
+    let mut out = BenchOut::new("fig11");
+    let duration = if fast { 30.0 } else { 60.0 };
+    let models: &[&str] = if fast { &["opt-13b"] } else { &["opt-13b", "llama-33b", "opt-175b"] };
+    let trace = "sharegpt";
+    let points = if fast { 3 } else { 5 };
+
+    for model in models {
+        let cfg = common::cfg(model, trace);
+        let grid = common::rate_grid(&cfg, trace, points);
+        let mut kvc_t = Table::new(&["rate_rps", "ORCA", "vLLM", "Sarathi", "DistServe", "EconoServe"]);
+        let mut gpu_t = Table::new(&["rate_rps", "ORCA", "vLLM", "Sarathi", "DistServe", "EconoServe"]);
+        for rate in grid {
+            let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+            let mut kvc_row = vec![format!("{rate:.2}")];
+            let mut gpu_row = vec![format!("{rate:.2}")];
+            for sys in ["orca", "vllm", "sarathi", "distserve", "econoserve"] {
+                let (kvc, gpu) = if sys == "distserve" {
+                    let dcfg = DistServeConfig::homogeneous(cfg.profile.clone(), &cfg);
+                    let r = DistServeSim::new(dcfg).run(&items, MAX_TIME);
+                    (r.summary.kvc_util, r.summary.gpu_util)
+                } else {
+                    let s = common::run_world(&cfg, sys, trace, &items, false, MAX_TIME).0.summary;
+                    (s.kvc_util, s.gpu_util)
+                };
+                kvc_row.push(format!("{:.1}", kvc * 100.0));
+                gpu_row.push(format!("{:.1}", gpu * 100.0));
+            }
+            kvc_t.row(&kvc_row);
+            gpu_t.row(&gpu_row);
+        }
+        out.section(&format!("{model}/{trace}: KVC utilization (%) vs rate"), kvc_t);
+        out.section(&format!("{model}/{trace}: GPU utilization (%) vs rate"), gpu_t);
+    }
+    out.finish();
+}

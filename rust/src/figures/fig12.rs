@@ -1,0 +1,100 @@
+//! Figure 12: number of GPUs EconoServe needs to match DistServe's
+//! goodput, across homogeneous, heterogeneous (H100 prefill) and
+//! large-scale (Vidur-style analytic scaling) settings.
+
+use super::common::{self, MAX_TIME};
+use crate::cluster::{min_replicas_for_goodput, DistServeConfig, DistServeSim};
+use crate::config::ModelProfile;
+use crate::util::bench::BenchOut;
+use crate::util::stats::Table;
+
+pub fn run(fast: bool) {
+    let mut out = BenchOut::new("fig12");
+    let duration = if fast { 30.0 } else { 60.0 };
+    let trace = "sharegpt";
+    let models: &[&str] = if fast { &["opt-13b"] } else { &["opt-13b", "llama-33b"] };
+
+    for het in [false, true] {
+        let mut t = Table::new(&[
+            "model",
+            "dist_goodput_rps",
+            "dist_gpus",
+            "econo_gpus",
+            "saved_%",
+        ]);
+        for model in models {
+            let cfg = common::cfg(model, trace);
+            let rate = common::capacity_estimate(&cfg, trace) * 0.8;
+            let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+            let dcfg = if het {
+                DistServeConfig::heterogeneous(cfg.profile.clone(), &cfg)
+            } else {
+                DistServeConfig::homogeneous(cfg.profile.clone(), &cfg)
+            };
+            let dist = DistServeSim::new(dcfg).run(&items, MAX_TIME);
+            let dist_gpus = 2 * cfg.profile.gpus_per_replica as usize;
+            let econo = min_replicas_for_goodput(
+                &cfg,
+                "econoserve",
+                trace,
+                &items,
+                false,
+                dist.goodput,
+                4,
+                MAX_TIME,
+            );
+            let econo_gpus =
+                econo.map(|k| k * cfg.profile.gpus_per_replica as usize).unwrap_or(0);
+            t.rowf(
+                model,
+                &[
+                    dist.goodput,
+                    dist_gpus as f64,
+                    econo_gpus as f64,
+                    if econo_gpus > 0 {
+                        (1.0 - econo_gpus as f64 / dist_gpus as f64) * 100.0
+                    } else {
+                        f64::NAN
+                    },
+                ],
+            );
+        }
+        out.section(
+            if het { "heterogeneous (H100 prefill + A100 decode)" } else { "homogeneous (A100+A100)" },
+            t,
+        );
+    }
+
+    // Large-scale: one pair vs one replica, scaled analytically to 4000
+    // GPUs (the paper itself uses the Vidur simulator here).
+    let profile = ModelProfile::by_name("llama3-8b").unwrap();
+    let mut cfg = common::cfg("opt-13b", trace);
+    cfg.profile = profile;
+    let rate = common::capacity_estimate(&cfg, trace) * 0.8;
+    let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+    let dcfg = DistServeConfig::homogeneous(cfg.profile.clone(), &cfg);
+    let dist = DistServeSim::new(dcfg).run(&items, MAX_TIME);
+    let per_pair = dist.goodput; // goodput per 2 GPUs
+    let target_total = per_pair * 2000.0; // 2000 prefill + 2000 decode GPUs
+    let (econo_goodput, _) = crate::cluster::replicated_run(
+        &cfg,
+        "econoserve",
+        trace,
+        &items,
+        false,
+        1,
+        MAX_TIME,
+    );
+    let econo_gpus_needed = (target_total / econo_goodput.max(1e-9)).ceil();
+    let mut t = Table::new(&["setting", "dist_gpus", "econo_gpus", "saved_%"]);
+    t.rowf(
+        "llama3-8b @4000 GPUs",
+        &[
+            4000.0,
+            econo_gpus_needed,
+            (1.0 - econo_gpus_needed / 4000.0) * 100.0,
+        ],
+    );
+    out.section("large-scale analytic scaling (Vidur substitute)", t);
+    out.finish();
+}

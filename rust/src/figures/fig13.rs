@@ -1,0 +1,40 @@
+//! Figure 13: ablation study — EconoServe-D / -SD / -SDO / full / Oracle
+//! on JCT, TBT, SSR and throughput.
+
+use super::common::{self, MAX_TIME};
+use crate::util::bench::BenchOut;
+use crate::util::stats::Table;
+
+pub fn variants() -> Vec<(&'static str, &'static str, bool)> {
+    vec![
+        ("EconoServe-D", "econoserve-d", false),
+        ("EconoServe-SD", "econoserve-sd", false),
+        ("EconoServe-SDO", "econoserve-sdo", false),
+        ("EconoServe", "econoserve", false),
+        ("Oracle", "econoserve", true),
+    ]
+}
+
+pub fn run(fast: bool) {
+    let mut out = BenchOut::new("fig13");
+    let duration = if fast { 30.0 } else { 60.0 };
+    let models: &[&str] = if fast { &["opt-13b"] } else { &["opt-13b", "llama-33b", "opt-175b"] };
+
+    for model in models {
+        for trace in common::traces() {
+            let cfg = common::cfg(model, trace);
+            let rate = common::capacity_estimate(&cfg, trace) * 0.8;
+            let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+            let mut t = Table::new(&["variant", "jct_s", "tbt_s", "ssr_%", "tput_rps"]);
+            for (label, sys, oracle) in variants() {
+                let s = common::run_world(&cfg, sys, trace, &items, oracle, MAX_TIME).0.summary;
+                t.rowf(
+                    label,
+                    &[s.mean_jct, s.mean_tbt, s.ssr * 100.0, s.throughput_rps],
+                );
+            }
+            out.section(&format!("{model} / {trace}"), t);
+        }
+    }
+    out.finish();
+}

@@ -1,0 +1,56 @@
+//! Figure 14: scheduling-time overhead of each system — measured from the
+//! actual batch-formation code (wall-clock per `Scheduler::step`, charged
+//! to the simulation at `sched_time_scale`), reported as overhead share
+//! and mean per-iteration scheduling time.
+
+use super::common::{self, MAX_TIME};
+use crate::util::bench::BenchOut;
+use crate::util::stats::Table;
+
+pub fn systems() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("ORCA", "orca"),
+        ("FastServe", "fastserve"),
+        ("vLLM", "vllm"),
+        ("Sarathi", "sarathi"),
+        ("MultiRes", "multires"),
+        ("SyncCoupled", "sync_coupled"),
+        ("EconoServe-D", "econoserve-d"),
+        ("EconoServe-SD", "econoserve-sd"),
+        ("EconoServe-SDO", "econoserve-sdo"),
+        ("EconoServe", "econoserve"),
+    ]
+}
+
+pub fn run(fast: bool) {
+    let mut out = BenchOut::new("fig14");
+    let duration = if fast { 30.0 } else { 60.0 };
+
+    for trace in common::traces() {
+        let cfg = common::cfg("opt-13b", trace);
+        // Load high enough that queues are deep (scheduling work visible).
+        let rate = common::capacity_estimate(&cfg, trace) * 1.2;
+        let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+        let mut t = Table::new(&[
+            "scheduler",
+            "sched_overhead_%",
+            "mean_step_us",
+            "iterations",
+            "jct_s",
+        ]);
+        for (label, sys) in systems() {
+            let s = common::run_world(&cfg, sys, trace, &items, false, MAX_TIME).0.summary;
+            t.rowf(
+                label,
+                &[
+                    s.sched_overhead_frac * 100.0,
+                    s.sched_time_mean / cfg.sched_time_scale * 1e6, // native rust µs
+                    s.iterations as f64,
+                    s.mean_jct,
+                ],
+            );
+        }
+        out.section(&format!("{trace}: scheduling overhead"), t);
+    }
+    out.finish();
+}

@@ -1,0 +1,48 @@
+//! Figure 15: sensitivity of EconoServe (OPT-13B) to the SLO scale,
+//! padding ratio, reserved-KVC share, and KVCPipe buffer — normalized
+//! JCT / throughput / SSR per setting.
+
+use super::common::{self, MAX_TIME};
+use crate::util::bench::BenchOut;
+use crate::util::stats::Table;
+
+fn sweep<F: Fn(&mut crate::config::SystemConfig, f64)>(
+    out: &mut BenchOut,
+    title: &str,
+    values: &[f64],
+    fast: bool,
+    apply: F,
+) {
+    let duration = if fast { 30.0 } else { 60.0 };
+    for trace in common::traces() {
+        let mut t = Table::new(&["value", "jct_s", "tput_rps", "ssr_%"]);
+        for &v in values {
+            let mut cfg = common::cfg("opt-13b", trace);
+            apply(&mut cfg, v);
+            let rate = common::capacity_estimate(&cfg, trace) * 0.8;
+            let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+            let s = common::run_world(&cfg, "econoserve", trace, &items, false, MAX_TIME)
+                .0
+                .summary;
+            t.rowf(&format!("{v}"), &[s.mean_jct, s.throughput_rps, s.ssr * 100.0]);
+        }
+        out.section(&format!("{title} — {trace}"), t);
+    }
+}
+
+pub fn run(fast: bool) {
+    let mut out = BenchOut::new("fig15");
+    sweep(&mut out, "(a) SLO scale", &[0.5, 1.0, 1.5, 2.0, 2.5], fast, |c, v| {
+        c.slo_scale = v;
+    });
+    sweep(&mut out, "(b) padding ratio", &[0.0, 0.1, 0.15, 0.2, 0.3], fast, |c, v| {
+        c.padding_ratio = v;
+    });
+    sweep(&mut out, "(c) reserved KVC frac", &[0.01, 0.02, 0.03, 0.04, 0.08], fast, |c, v| {
+        c.reserve_frac = v;
+    });
+    sweep(&mut out, "(d) KVCPipe buffer frac", &[0.05, 0.10, 0.15, 0.20, 0.30], fast, |c, v| {
+        c.buffer_frac = v;
+    });
+    out.finish();
+}

@@ -1,0 +1,56 @@
+//! Figure 2: CDF of the number of requests per same-RL group in
+//! SyncCoupled batching — the observation (O2) that makes time-synced
+//! batching viable.
+
+use super::common::{self, DURATION, MAX_TIME};
+use crate::coordinator::{run, RunLimits};
+use crate::core::world::World;
+use crate::engine::SimEngine;
+use crate::predictor::SimPredictor;
+use crate::sched::sync_coupled::SyncCoupled;
+use crate::util::bench::BenchOut;
+use crate::util::stats::{Samples, Table};
+
+pub fn run_fig(fast: bool) {
+    let mut out = BenchOut::new("fig2");
+    let duration = if fast { 30.0 } else { DURATION };
+
+    let mut table = Table::new(&["trace", "p25", "p50", "p75", "p90", "max", ">=4_frac_%", ">=12_frac_%"]);
+    for trace in common::traces() {
+        let cfg = common::cfg("opt-13b", trace);
+        // Deep queues are what create groups; the paper's Table 2 rates are
+        // heavily overloaded, so measure at 2x the estimated capacity.
+        let rate = common::capacity_estimate(&cfg, trace) * 2.0;
+        let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+        let pred = Box::new(SimPredictor::for_trace(trace, cfg.block_size, cfg.seed));
+        let mut world = World::new(cfg.clone(), &items, pred);
+        let mut sched = SyncCoupled::new();
+        let engine = SimEngine::new();
+        let _ = run(&mut world, &mut sched, &engine, RunLimits::for_time(MAX_TIME));
+
+        let mut sizes = Samples::new();
+        sizes.extend(sched.group_sizes.iter().map(|g| *g as f64));
+        // Request-weighted fractions (the paper reports "% of requests in
+        // groups with >= k members").
+        let total_reqs: u32 = sched.group_sizes.iter().sum();
+        let reqs_ge = |k: u32| -> f64 {
+            sched.group_sizes.iter().filter(|g| **g >= k).map(|g| *g).sum::<u32>() as f64
+                / total_reqs.max(1) as f64
+                * 100.0
+        };
+        table.rowf(
+            trace,
+            &[
+                sizes.percentile(25.0),
+                sizes.p50(),
+                sizes.percentile(75.0),
+                sizes.percentile(90.0),
+                sizes.percentile(100.0),
+                reqs_ge(4),
+                reqs_ge(12),
+            ],
+        );
+    }
+    out.section("same-RL group sizes (SyncCoupled)", table);
+    out.finish();
+}

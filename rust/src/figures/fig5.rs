@@ -1,0 +1,83 @@
+//! Figure 5: RL misprediction effects at the sweet-spot padding.
+//!  (a) over-/under-provisioned KVC share per request;
+//!  (b) preemption-time share of JCT for the three under-provision
+//!      recovery strategies: offload-based preemption, offload-free
+//!      preemption, and reserved-KVC-first.
+
+use super::common::{self, DURATION, MAX_TIME};
+use crate::config::PreemptMode;
+use crate::predictor::{Predictor, SimPredictor};
+use crate::trace::{TraceGen, TraceSpec};
+use crate::util::bench::BenchOut;
+use crate::util::stats::Table;
+
+/// (a): analytic sampling of the calibrated predictor.
+fn provision_split(trace: &str, padding: f64) -> (f64, f64, f64) {
+    let mut p = SimPredictor::for_trace(trace, 32, 7);
+    let gen = TraceGen::new(TraceSpec::by_name(trace).unwrap());
+    let items = gen.generate(20_000, 10.0, 4096, 11);
+    let (mut over_sum, mut under_cnt, mut alloc_sum) = (0.0, 0usize, 0.0);
+    for (i, it) in items.iter().enumerate() {
+        let padded = (p.predict_raw(i, it.true_rl) as f64 * (1.0 + padding)).ceil();
+        alloc_sum += padded;
+        if padded < it.true_rl as f64 {
+            under_cnt += 1;
+        } else {
+            over_sum += padded - it.true_rl as f64;
+        }
+    }
+    let over_pct = over_sum / alloc_sum * 100.0; // over-provisioned share of allocated KVC
+    let under_pct = under_cnt as f64 / items.len() as f64 * 100.0;
+    (over_pct, under_pct, alloc_sum / items.len() as f64)
+}
+
+pub fn run(fast: bool) {
+    let mut out = BenchOut::new("fig5");
+    let duration = if fast { 30.0 } else { DURATION };
+
+    // (a) over/under-provisioning at sweet-spot padding.
+    let mut a = Table::new(&["trace", "over_%_of_alloc", "under_%_of_reqs", "mean_alloc_tok"]);
+    for (trace, pad) in [("alpaca", 0.10), ("sharegpt", 0.15), ("bookcorpus", 0.20)] {
+        let (over, under, alloc) = provision_split(trace, pad);
+        a.rowf(trace, &[over, under, alloc]);
+    }
+    out.section("(a) provisioning split at sweet-spot padding", a);
+
+    // (b) preemption-time share of JCT (preempted requests only) per
+    // recovery strategy, on ShareGPT.
+    let mut b = Table::new(&["strategy", "preempt_share_of_jct_%", "preempted_reqs", "mean_jct_s"]);
+    for (label, mode) in [
+        ("offload-swap", PreemptMode::OffloadSwap),
+        ("offload-free", PreemptMode::OffloadFree),
+        ("reserved-then-free", PreemptMode::ReservedThenFree),
+    ] {
+        let mut cfg = common::cfg("opt-13b", "sharegpt");
+        cfg.preempt_mode = mode;
+        let rate = common::capacity_estimate(&cfg, "sharegpt") * 0.8;
+        let items = common::workload(&cfg, "sharegpt", rate, duration, cfg.seed);
+        let (_res, world) =
+            common::run_world(&cfg, "econoserve-sdo", "sharegpt", &items, false, MAX_TIME);
+        let mut share_sum = 0.0;
+        let mut n = 0usize;
+        let mut jct_sum = 0.0;
+        for r in &world.recs {
+            if r.preempt_count > 0 {
+                if let Some(j) = r.jct() {
+                    share_sum += r.preempt_total / j.max(1e-9);
+                    jct_sum += j;
+                    n += 1;
+                }
+            }
+        }
+        b.rowf(
+            label,
+            &[
+                if n > 0 { share_sum / n as f64 * 100.0 } else { 0.0 },
+                n as f64,
+                if n > 0 { jct_sum / n as f64 } else { 0.0 },
+            ],
+        );
+    }
+    out.section("(b) preemption-time share by recovery strategy (sharegpt)", b);
+    out.finish();
+}

@@ -1,0 +1,47 @@
+//! Figure 6: occupied KVC of queued tasks — newly transitioned GTs,
+//! preempted GTs, and chunked prompts (Observation 5: occupancy varies
+//! widely, so prioritize big holders to free KVC earlier).
+
+use super::common::{self, DURATION, MAX_TIME};
+use crate::util::bench::BenchOut;
+use crate::util::stats::Table;
+
+pub fn run(fast: bool) {
+    let mut out = BenchOut::new("fig6");
+    let duration = if fast { 30.0 } else { DURATION };
+
+    let mut t = Table::new(&[
+        "trace",
+        "category",
+        "n_samples",
+        "p5_tok",
+        "p50_tok",
+        "p95_tok",
+        "mean_tok",
+    ]);
+    for trace in common::traces() {
+        let cfg = common::cfg("opt-13b", trace);
+        // Slight overload so queues (and preemptions) exist.
+        let rate = common::capacity_estimate(&cfg, trace) * 1.1;
+        let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+        let (_res, world) = common::run_world(&cfg, "econoserve", trace, &items, false, MAX_TIME);
+        for (cat, samples) in [
+            ("new-GT", world.col.occ_new_gt.clone()),
+            ("preempted-GT", world.col.occ_preempted_gt.clone()),
+            ("chunked-PT", world.col.occ_chunked_pt.clone()),
+        ] {
+            let mut s = samples;
+            t.row(&[
+                trace.to_string(),
+                cat.to_string(),
+                s.len().to_string(),
+                format!("{:.0}", s.p5()),
+                format!("{:.0}", s.p50()),
+                format!("{:.0}", s.p95()),
+                format!("{:.0}", s.mean()),
+            ]);
+        }
+    }
+    out.section("occupied KVC of queued tasks", t);
+    out.finish();
+}

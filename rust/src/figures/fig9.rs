@@ -1,0 +1,59 @@
+//! Figure 9: normalized latency vs request rate for all models and
+//! traces, comparing ORCA / vLLM / Sarathi-Serve / DistServe (2x GPUs) /
+//! EconoServe. The paper's headline sustainable-rate comparison.
+
+use super::common::{self, MAX_TIME};
+use crate::cluster::{DistServeConfig, DistServeSim};
+use crate::util::bench::BenchOut;
+use crate::util::stats::Table;
+
+pub fn systems() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("ORCA", "orca"),
+        ("vLLM", "vllm"),
+        ("Sarathi", "sarathi"),
+        ("DistServe", "distserve"),
+        ("EconoServe", "econoserve"),
+    ]
+}
+
+pub fn run(fast: bool) {
+    let mut out = BenchOut::new("fig9");
+    let duration = if fast { 30.0 } else { 60.0 };
+    let models: &[&str] = if fast { &["opt-13b"] } else { &["opt-13b", "llama-33b", "opt-175b"] };
+    let points = if fast { 4 } else { 6 };
+
+    for model in models {
+        for trace in common::traces() {
+            let cfg = common::cfg(model, trace);
+            let grid = common::rate_grid(&cfg, trace, points);
+            let mut t = Table::new(&{
+                let mut h = vec!["rate_rps"];
+                h.extend(systems().iter().map(|(l, _)| *l));
+                h
+            });
+            for rate in grid {
+                let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+                let mut cells = vec![format!("{rate:.2}")];
+                for (_, sys) in systems() {
+                    let nl = if sys == "distserve" {
+                        let dcfg = DistServeConfig::homogeneous(cfg.profile.clone(), &cfg);
+                        DistServeSim::new(dcfg).run(&items, MAX_TIME).summary.norm_latency
+                    } else {
+                        common::run_world(&cfg, sys, trace, &items, false, MAX_TIME)
+                            .0
+                            .summary
+                            .norm_latency
+                    };
+                    cells.push(format!("{nl:.4}"));
+                }
+                t.row(&cells);
+            }
+            out.section(
+                &format!("{model} / {trace}: normalized latency (s/token) vs rate"),
+                t,
+            );
+        }
+    }
+    out.finish();
+}

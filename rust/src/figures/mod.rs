@@ -1,0 +1,25 @@
+//! Paper-figure reproduction drivers.
+//!
+//! One submodule per figure of the paper's evaluation; each prints the
+//! figure's rows/series as tables (stdout) and CSVs (bench_out/) via
+//! [`crate::util::bench::BenchOut`]. The `benches/` binaries are thin
+//! wrappers so `cargo bench` regenerates every figure.
+//!
+//! Experiment scales are chosen so the full set runs in minutes on a
+//! laptop while preserving the paper's qualitative shapes (who wins, by
+//! roughly what factor, where crossovers fall). EXPERIMENTS.md records a
+//! paper-vs-measured comparison for each.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig9;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;

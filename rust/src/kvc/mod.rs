@@ -1,0 +1,373 @@
+//! KV-cache (KVC) management: block pool, allocation policies, reservation,
+//! and the accounting that backs the paper's utilization metrics.
+//!
+//! All capacity is measured in **tokens**; physical allocation is
+//! **block-granular** (`block_size` tokens per block, 32 by default) like
+//! vLLM's PagedAttention, so every policy shares one [`BlockPool`]:
+//!
+//!  * **max-allocation** (ORCA/FastServe): allocate `prompt + max_rl`
+//!    upfront — call [`BlockPool::alloc_tokens`] with the max total length.
+//!  * **block-allocation** (vLLM/Sarathi): allocate one block at a time as
+//!    the sequence grows — [`BlockPool::ensure_capacity`] per token; it can
+//!    FAIL mid-execution, which is exactly the paper's "KVC allocation
+//!    failure" (Fig 1d).
+//!  * **exact-allocation** (MultiRes/EconoServe): allocate
+//!    `prompt + padded predicted RL` when the task is scheduled.
+//!
+//! KVC **pipelining** (§3.2) is layered on top in [`pipeline`]: hosted GTs
+//! write into a host's allocated-but-unused second half, adding *written*
+//! tokens without adding *allocated* blocks.
+
+pub mod pipeline;
+
+use std::collections::HashMap;
+
+use crate::core::ReqId;
+
+/// Why an allocation request could not be satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocError {
+    /// Not enough unreserved free blocks.
+    OutOfBlocks { needed: u32, free: u32 },
+}
+
+/// Per-request allocation record.
+#[derive(Debug, Clone, Default)]
+pub struct Alloc {
+    /// Blocks owned by this request.
+    pub blocks: u32,
+    /// Tokens actually written into owned blocks (<= blocks * block_size).
+    pub written: u32,
+    /// Tokens written into *borrowed* (pipelined) space — accounted here
+    /// for utilization but occupying a host's blocks.
+    pub guest_written: u32,
+}
+
+/// Block-granular KVC pool with a PT reservation carve-out.
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    block_size: u32,
+    total_blocks: u32,
+    free_blocks: u32,
+    /// Blocks set aside for PTs / under-provision rescue (§3.3). Normal
+    /// allocations cannot dip below this many free blocks; reserved
+    /// allocations can.
+    reserved_blocks: u32,
+    allocs: HashMap<ReqId, Alloc>,
+    /// Cumulative counters for metrics.
+    pub alloc_failures: u64,
+    pub alloc_calls: u64,
+}
+
+/// Whether an allocation may consume the PT reservation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    Normal,
+    /// May use the reserved carve-out (PT admission; under-provision rescue).
+    Reserved,
+}
+
+impl BlockPool {
+    pub fn new(capacity_tokens: u32, block_size: u32, reserve_tokens: u32) -> Self {
+        assert!(block_size > 0);
+        let total_blocks = capacity_tokens / block_size;
+        let reserved_blocks = (reserve_tokens + block_size - 1) / block_size;
+        assert!(reserved_blocks <= total_blocks, "reservation exceeds capacity");
+        BlockPool {
+            block_size,
+            total_blocks,
+            free_blocks: total_blocks,
+            reserved_blocks,
+            allocs: HashMap::new(),
+            alloc_failures: 0,
+            alloc_calls: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> u32 {
+        self.block_size
+    }
+
+    pub fn capacity_tokens(&self) -> u32 {
+        self.total_blocks * self.block_size
+    }
+
+    pub fn free_tokens(&self, prio: Priority) -> u32 {
+        let free = match prio {
+            Priority::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
+            Priority::Reserved => self.free_blocks,
+        };
+        free * self.block_size
+    }
+
+    pub fn reserve_tokens(&self) -> u32 {
+        self.reserved_blocks * self.block_size
+    }
+
+    #[allow(dead_code)]
+    fn blocks_for(&self, tokens: u32) -> u32 {
+        (tokens + self.block_size - 1) / self.block_size
+    }
+
+    /// Allocate capacity for `tokens` more tokens for `id` (cumulative:
+    /// extends the existing allocation). Fails atomically.
+    pub fn alloc_tokens(&mut self, id: ReqId, tokens: u32, prio: Priority) -> Result<(), AllocError> {
+        self.alloc_calls += 1;
+        let entry = self.allocs.entry(id).or_default();
+        let capacity_now = entry.blocks * self.block_size;
+        let needed_tokens = (entry.written + tokens).saturating_sub(capacity_now);
+        let needed = (needed_tokens + self.block_size - 1) / self.block_size;
+        let available = match prio {
+            Priority::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
+            Priority::Reserved => self.free_blocks,
+        };
+        if needed > available {
+            self.alloc_failures += 1;
+            return Err(AllocError::OutOfBlocks { needed, free: available });
+        }
+        entry.blocks += needed;
+        self.free_blocks -= needed;
+        Ok(())
+    }
+
+    /// Ensure `id` can hold `total_tokens` written tokens, growing
+    /// block-by-block (vLLM block-allocation). Returns blocks newly added.
+    pub fn ensure_capacity(
+        &mut self,
+        id: ReqId,
+        total_tokens: u32,
+        prio: Priority,
+    ) -> Result<u32, AllocError> {
+        self.alloc_calls += 1;
+        let entry = self.allocs.entry(id).or_default();
+        let have = entry.blocks;
+        let need_total = (total_tokens + self.block_size - 1) / self.block_size;
+        if need_total <= have {
+            return Ok(0);
+        }
+        let needed = need_total - have;
+        let available = match prio {
+            Priority::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
+            Priority::Reserved => self.free_blocks,
+        };
+        if needed > available {
+            self.alloc_failures += 1;
+            return Err(AllocError::OutOfBlocks { needed, free: available });
+        }
+        entry.blocks += needed;
+        self.free_blocks -= needed;
+        Ok(needed)
+    }
+
+    /// Record `n` tokens written into `id`'s own allocation. Panics if the
+    /// allocation cannot hold them (callers must allocate first) — this is
+    /// the invariant the property tests drive.
+    pub fn write_tokens(&mut self, id: ReqId, n: u32) {
+        let bs = self.block_size;
+        let entry = self.allocs.get_mut(&id).expect("write to unallocated request");
+        assert!(
+            entry.written + n <= entry.blocks * bs,
+            "KVC overflow for req {id}: written {} + {n} > capacity {}",
+            entry.written,
+            entry.blocks * bs,
+        );
+        entry.written += n;
+    }
+
+    /// Record `n` tokens written into space borrowed from a host (KVCPipe).
+    pub fn write_guest_tokens(&mut self, id: ReqId, n: u32) {
+        let entry = self.allocs.entry(id).or_default();
+        entry.guest_written += n;
+    }
+
+    /// Remove and return `id`'s guest-written token count (the tokens no
+    /// longer occupy the host's blocks: either dropped on eviction, or
+    /// being converted into the request's own allocation).
+    pub fn clear_guest_tokens(&mut self, id: ReqId) -> u32 {
+        match self.allocs.get_mut(&id) {
+            Some(a) => std::mem::take(&mut a.guest_written),
+            None => 0,
+        }
+    }
+
+    /// Restore `n` written tokens after a swap-in (the KV data returned
+    /// from CPU memory). Requires capacity to already be allocated.
+    pub fn restore_written(&mut self, id: ReqId, n: u32) {
+        let bs = self.block_size;
+        let entry = self.allocs.get_mut(&id).expect("restore to unallocated request");
+        assert!(
+            entry.written + n <= entry.blocks * bs,
+            "swap-in restore overflow for req {id}"
+        );
+        entry.written += n;
+    }
+
+    /// Release `id`'s whole allocation, returning (blocks, written tokens).
+    pub fn release(&mut self, id: ReqId) -> (u32, u32) {
+        match self.allocs.remove(&id) {
+            Some(a) => {
+                self.free_blocks += a.blocks;
+                debug_assert!(self.free_blocks <= self.total_blocks);
+                (a.blocks, a.written)
+            }
+            None => (0, 0),
+        }
+    }
+
+    /// Shrink `id`'s allocation to exactly fit its written tokens (used
+    /// when a time-synced group returns and over-provisioned space is
+    /// reclaimed).
+    pub fn trim_to_written(&mut self, id: ReqId) -> u32 {
+        let Some(entry) = self.allocs.get_mut(&id) else { return 0 };
+        let need = (entry.written + self.block_size - 1) / self.block_size;
+        let excess = entry.blocks.saturating_sub(need);
+        entry.blocks -= excess;
+        self.free_blocks += excess;
+        excess
+    }
+
+    pub fn alloc_of(&self, id: ReqId) -> Option<&Alloc> {
+        self.allocs.get(&id)
+    }
+
+    pub fn allocated_tokens(&self, id: ReqId) -> u32 {
+        self.allocs.get(&id).map(|a| a.blocks * self.block_size).unwrap_or(0)
+    }
+
+    pub fn written_tokens(&self, id: ReqId) -> u32 {
+        self.allocs.get(&id).map(|a| a.written).unwrap_or(0)
+    }
+
+    /// Total tokens written across all live requests (own + guest) — the
+    /// numerator of the paper's KVC-utilization metric.
+    pub fn total_written(&self) -> u64 {
+        self.allocs.values().map(|a| (a.written + a.guest_written) as u64).sum()
+    }
+
+    /// Total allocated capacity in tokens (Σ blocks × block_size).
+    pub fn total_allocated(&self) -> u64 {
+        (self.total_blocks - self.free_blocks) as u64 * self.block_size as u64
+    }
+
+    /// KVC utilization: written tokens / total capacity (what gpustat-style
+    /// sampling sees: memory actually holding KV data).
+    pub fn utilization(&self) -> f64 {
+        self.total_written() as f64 / (self.capacity_tokens() as f64).max(1.0)
+    }
+
+    /// Allocation ratio: allocated / capacity (1.0 == "fully allocated").
+    pub fn allocation_ratio(&self) -> f64 {
+        self.total_allocated() as f64 / (self.capacity_tokens() as f64).max(1.0)
+    }
+
+    /// Internal consistency check (used by tests and debug assertions).
+    pub fn check_invariants(&self) {
+        let owned: u32 = self.allocs.values().map(|a| a.blocks).sum();
+        assert_eq!(owned + self.free_blocks, self.total_blocks, "block accounting leak");
+        for (id, a) in &self.allocs {
+            assert!(
+                a.written <= a.blocks * self.block_size,
+                "req {id} wrote past its allocation"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> BlockPool {
+        BlockPool::new(1024, 32, 64) // 32 blocks, 2 reserved
+    }
+
+    #[test]
+    fn capacity_and_reserve_rounding() {
+        let p = BlockPool::new(1000, 32, 50);
+        assert_eq!(p.capacity_tokens(), 31 * 32); // 1000/32 = 31 blocks
+        assert_eq!(p.reserve_tokens(), 2 * 32); // ceil(50/32) = 2 blocks
+    }
+
+    #[test]
+    fn exact_alloc_and_write() {
+        let mut p = pool();
+        p.alloc_tokens(1, 100, Priority::Normal).unwrap();
+        assert_eq!(p.allocated_tokens(1), 128); // 4 blocks
+        p.write_tokens(1, 100);
+        assert_eq!(p.written_tokens(1), 100);
+        p.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "KVC overflow")]
+    fn write_past_allocation_panics() {
+        let mut p = pool();
+        p.alloc_tokens(1, 32, Priority::Normal).unwrap();
+        p.write_tokens(1, 33);
+    }
+
+    #[test]
+    fn normal_cannot_touch_reserve() {
+        let mut p = pool();
+        // 32 blocks total, 2 reserved -> 30 usable = 960 tokens.
+        assert!(p.alloc_tokens(1, 960, Priority::Normal).is_ok());
+        assert!(p.alloc_tokens(2, 32, Priority::Normal).is_err());
+        assert!(p.alloc_tokens(2, 32, Priority::Reserved).is_ok());
+        assert_eq!(p.alloc_failures, 1);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn ensure_capacity_grows_blockwise() {
+        let mut p = pool();
+        assert_eq!(p.ensure_capacity(1, 1, Priority::Normal).unwrap(), 1);
+        p.write_tokens(1, 1);
+        // Tokens 2..=32 need no new block.
+        assert_eq!(p.ensure_capacity(1, 32, Priority::Normal).unwrap(), 0);
+        assert_eq!(p.ensure_capacity(1, 33, Priority::Normal).unwrap(), 1);
+        assert_eq!(p.allocated_tokens(1), 64);
+    }
+
+    #[test]
+    fn release_returns_blocks() {
+        let mut p = pool();
+        p.alloc_tokens(1, 500, Priority::Normal).unwrap();
+        let before = p.free_tokens(Priority::Reserved);
+        let (blocks, _) = p.release(1);
+        assert_eq!(blocks, 16); // ceil(500/32)
+        assert_eq!(p.free_tokens(Priority::Reserved), before + 16 * 32);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn trim_reclaims_overprovision() {
+        let mut p = pool();
+        p.alloc_tokens(1, 320, Priority::Normal).unwrap(); // 10 blocks
+        p.write_tokens(1, 40); // only 2 blocks worth
+        let freed = p.trim_to_written(1);
+        assert_eq!(freed, 8);
+        assert_eq!(p.allocated_tokens(1), 64);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn utilization_counts_guest_writes() {
+        let mut p = pool();
+        p.alloc_tokens(1, 128, Priority::Normal).unwrap();
+        p.write_tokens(1, 64);
+        p.write_guest_tokens(2, 32); // hosted GT: no blocks of its own
+        assert_eq!(p.total_written(), 96);
+        assert_eq!(p.total_allocated(), 128);
+    }
+
+    #[test]
+    fn alloc_is_atomic_on_failure() {
+        let mut p = pool();
+        p.alloc_tokens(1, 900, Priority::Normal).unwrap();
+        let free_before = p.free_tokens(Priority::Normal);
+        assert!(p.alloc_tokens(2, 500, Priority::Normal).is_err());
+        assert_eq!(p.free_tokens(Priority::Normal), free_before);
+        assert_eq!(p.allocated_tokens(2), 0);
+        p.check_invariants();
+    }
+}

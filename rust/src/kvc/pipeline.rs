@@ -1,0 +1,252 @@
+//! KVC pipelining (§3.2): "Russian nesting dolls" sharing of allocated but
+//! not-yet-used KVC space.
+//!
+//! A **hosting** GT with an allocated span of `L` tokens lends its second
+//! half `[L/2, L)` to a **hosted** (guest) GT whose predicted RL is at most
+//! `L/2 - b` (`b` = safety buffer against under-prediction). Because the
+//! batch is time-synced (every GT writes one token per iteration), the
+//! guest finishes and releases the space no later than the host's write
+//! head arrives. Each half can recursively host further guests at `L/4-b`,
+//! `L/8-b`, ... (Fig 7b).
+//!
+//! This registry tracks the host/guest tree and detects the failure case:
+//! an under-predicted guest still alive when the host's head reaches its
+//! start offset must be **evicted** (preempted; copy-on-write to host
+//! memory per the paper).
+
+use std::collections::HashMap;
+
+use crate::core::ReqId;
+
+/// A guest's placement inside its host's span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostSlot {
+    pub host: ReqId,
+    /// Offset in tokens from the host's span start.
+    pub offset: u32,
+    /// Slot length in tokens (the guest may use up to this many).
+    pub len: u32,
+}
+
+/// A candidate slot produced by [`candidate_slots`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slot {
+    pub offset: u32,
+    pub len: u32,
+    /// Nesting depth (1 = direct second half, 2 = quarter, ...).
+    pub depth: u32,
+}
+
+/// Enumerate the nested lending slots of a span of `span_len` tokens.
+///
+/// Depth d contributes 2^(d-1) slots of length span_len / 2^d: the second
+/// half of every depth-(d-1) sub-interval. A guest fits slot s iff its
+/// predicted RL <= s.len - buffer. Enumeration stops when slots get
+/// shorter than `min_len` (no GT could fit) or `max_depth` is reached.
+pub fn candidate_slots(span_len: u32, min_len: u32, max_depth: u32) -> Vec<Slot> {
+    let mut out = Vec::new();
+    // Sub-intervals at the current depth, as (offset, len) pairs. Depth 0
+    // is the whole span; lending splits each interval in half and lends
+    // the right half.
+    let mut intervals = vec![(0u32, span_len)];
+    for depth in 1..=max_depth {
+        let mut next = Vec::with_capacity(intervals.len() * 2);
+        for (off, len) in intervals {
+            let half = len / 2;
+            if half < min_len.max(1) {
+                continue;
+            }
+            out.push(Slot { offset: off + half, len: half, depth });
+            // Both halves can be subdivided further: the left stays owned
+            // by the same writer, the right belongs to the new guest.
+            next.push((off, half));
+            next.push((off + half, half));
+        }
+        if next.is_empty() {
+            break;
+        }
+        intervals = next;
+    }
+    out
+}
+
+/// Host/guest relationship tracker.
+#[derive(Debug, Default, Clone)]
+pub struct PipeRegistry {
+    guests_by_host: HashMap<ReqId, Vec<ReqId>>,
+    slot_of: HashMap<ReqId, HostSlot>,
+    /// Cumulative eviction count (under-predicted guests) for metrics.
+    pub evictions: u64,
+}
+
+impl PipeRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `guest` occupying `[offset, offset+len)` of `host`'s span.
+    /// Panics if the guest already has a slot (one host per guest).
+    pub fn add_guest(&mut self, guest: ReqId, host: ReqId, offset: u32, len: u32) {
+        assert!(guest != host, "request cannot host itself");
+        let prev = self.slot_of.insert(guest, HostSlot { host, offset, len });
+        assert!(prev.is_none(), "guest {guest} already hosted");
+        self.guests_by_host.entry(host).or_default().push(guest);
+    }
+
+    pub fn host_of(&self, guest: ReqId) -> Option<HostSlot> {
+        self.slot_of.get(&guest).copied()
+    }
+
+    pub fn guests_of(&self, host: ReqId) -> &[ReqId] {
+        self.guests_by_host.get(&host).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn is_guest(&self, id: ReqId) -> bool {
+        self.slot_of.contains_key(&id)
+    }
+
+    pub fn guest_count(&self) -> usize {
+        self.slot_of.len()
+    }
+
+    /// Remove a guest (it completed or was evicted). Returns its slot.
+    pub fn release_guest(&mut self, guest: ReqId) -> Option<HostSlot> {
+        let slot = self.slot_of.remove(&guest)?;
+        if let Some(v) = self.guests_by_host.get_mut(&slot.host) {
+            v.retain(|g| *g != guest);
+            if v.is_empty() {
+                self.guests_by_host.remove(&slot.host);
+            }
+        }
+        Some(slot)
+    }
+
+    /// The host's write head advanced to `head` tokens within its span:
+    /// return the guests whose slots the head has reached — they must be
+    /// evicted NOW (still alive == under-predicted). Does not remove them;
+    /// the caller decides (preempt + release_guest).
+    pub fn overrun_guests(&self, host: ReqId, head: u32) -> Vec<ReqId> {
+        self.guests_of(host)
+            .iter()
+            .copied()
+            .filter(|g| {
+                let s = self.slot_of[g];
+                head > s.offset
+            })
+            .collect()
+    }
+
+    /// The host is going away (completed / preempted / trimmed): detach and
+    /// return all its DIRECT guests. Transitive guests keep their (now
+    /// dangling) hosts — callers cascade by calling this per released host.
+    pub fn remove_host(&mut self, host: ReqId) -> Vec<ReqId> {
+        let guests = self.guests_by_host.remove(&host).unwrap_or_default();
+        for g in &guests {
+            self.slot_of.remove(g);
+        }
+        guests
+    }
+
+    /// Internal consistency (for tests): every slot's host lists it back.
+    pub fn check_invariants(&self) {
+        for (guest, slot) in &self.slot_of {
+            assert!(
+                self.guests_by_host.get(&slot.host).map(|v| v.contains(guest)).unwrap_or(false),
+                "guest {guest} not in host {} list",
+                slot.host
+            );
+            assert!(slot.len > 0);
+        }
+        for (host, guests) in &self.guests_by_host {
+            for g in guests {
+                assert_eq!(self.slot_of[g].host, *host);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_follow_fig7_layout() {
+        // Span of 32: depth 1 -> [16,32); depth 2 -> [8,16) and [24,32).
+        let slots = candidate_slots(32, 4, 3);
+        assert!(slots.contains(&Slot { offset: 16, len: 16, depth: 1 }));
+        assert!(slots.contains(&Slot { offset: 8, len: 8, depth: 2 }));
+        assert!(slots.contains(&Slot { offset: 24, len: 8, depth: 2 }));
+        // Depth 3: quarters of each half.
+        assert!(slots.contains(&Slot { offset: 4, len: 4, depth: 3 }));
+        assert!(slots.contains(&Slot { offset: 28, len: 4, depth: 3 }));
+    }
+
+    #[test]
+    fn slots_respect_min_len() {
+        let slots = candidate_slots(32, 16, 5);
+        assert_eq!(slots, vec![Slot { offset: 16, len: 16, depth: 1 }]);
+    }
+
+    #[test]
+    fn slots_disjoint_per_branch() {
+        // All depth-d slots must be pairwise disjoint.
+        let slots = candidate_slots(64, 1, 4);
+        for a in &slots {
+            for b in &slots {
+                if a == b {
+                    continue;
+                }
+                let a_end = a.offset + a.len;
+                let b_end = b.offset + b.len;
+                let disjoint = a_end <= b.offset || b_end <= a.offset;
+                let nested = (a.offset >= b.offset && a_end <= b_end)
+                    || (b.offset >= a.offset && b_end <= a_end);
+                assert!(disjoint || nested, "{a:?} vs {b:?} overlap without nesting");
+            }
+        }
+    }
+
+    #[test]
+    fn add_release_roundtrip() {
+        let mut r = PipeRegistry::new();
+        r.add_guest(2, 1, 16, 16);
+        r.add_guest(3, 1, 8, 8);
+        r.check_invariants();
+        assert_eq!(r.guests_of(1), &[2, 3]);
+        assert_eq!(r.host_of(2), Some(HostSlot { host: 1, offset: 16, len: 16 }));
+        let slot = r.release_guest(2).unwrap();
+        assert_eq!(slot.offset, 16);
+        assert_eq!(r.guests_of(1), &[3]);
+        r.check_invariants();
+    }
+
+    #[test]
+    fn overrun_detection() {
+        let mut r = PipeRegistry::new();
+        r.add_guest(2, 1, 16, 16);
+        assert!(r.overrun_guests(1, 16).is_empty()); // head AT offset: ok
+        assert_eq!(r.overrun_guests(1, 17), vec![2]); // head past: evict
+    }
+
+    #[test]
+    fn remove_host_orphans_direct_guests() {
+        let mut r = PipeRegistry::new();
+        r.add_guest(2, 1, 16, 16);
+        r.add_guest(3, 2, 8, 8); // nested inside guest 2
+        let orphans = r.remove_host(1);
+        assert_eq!(orphans, vec![2]);
+        // 3 still registered under 2 (cascade is caller's job).
+        assert!(r.is_guest(3));
+        let orphans2 = r.remove_host(2);
+        assert_eq!(orphans2, vec![3]);
+        r.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "already hosted")]
+    fn double_hosting_panics() {
+        let mut r = PipeRegistry::new();
+        r.add_guest(2, 1, 16, 16);
+        r.add_guest(2, 3, 8, 8);
+    }
+}

@@ -1,0 +1,36 @@
+//! # EconoServe
+//!
+//! Reproduction of *"EconoServe: Maximizing Multi-Resource Utilization with
+//! SLO Guarantees in LLM Serving"* (Shen & Sen, 2024) as a three-layer
+//! Rust + JAX + Pallas serving stack:
+//!
+//!  * **L3 (this crate)** — the paper's contribution: the EconoServe
+//!    scheduler (SyncDecoupled batching + KVC pipelining + task Ordering)
+//!    plus every baseline it is evaluated against (ORCA, SRTF, FastServe,
+//!    vLLM, Sarathi-Serve, MultiRes, DistServe), a block-granular KVC
+//!    manager, trace generators, an RL-prediction model, a calibrated
+//!    discrete-event engine for the paper's figures, and a PJRT runtime
+//!    that serves a real (small) transformer end-to-end.
+//!  * **L2 (python/compile/model.py)** — OPT-style decoder with explicit
+//!    KV cache, AOT-lowered to HLO text at build time.
+//!  * **L1 (python/compile/kernels/)** — Pallas flash-attention kernels
+//!    (prefill + decode), validated against a pure-jnp oracle.
+//!
+//! Start with [`coordinator::Coordinator`] for the serving loop, or the
+//! `examples/` directory for end-to-end usage.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod figures;
+pub mod ordering;
+pub mod sched;
+pub mod core;
+pub mod kvc;
+pub mod metrics;
+pub mod predictor;
+pub mod runtime;
+pub mod server;
+pub mod trace;
+pub mod util;

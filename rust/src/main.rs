@@ -1,0 +1,405 @@
+//! EconoServe launcher.
+//!
+//! Subcommands:
+//!   simulate  — run a scheduler over a synthetic trace on the calibrated
+//!               engine and print the summary (the paper's single-GPU setup).
+//!   serve     — load the AOT artifacts and serve a generated workload on
+//!               the REAL model via PJRT (python-free request path).
+//!   trace     — generate/inspect traces (Table 2 self-check).
+//!   capacity  — Fig 12-style min-GPU search vs DistServe.
+//!
+//! Run `econoserve <subcommand> --help` for options.
+
+use econoserve::cluster::{min_replicas_for_goodput, DistServeConfig, DistServeSim};
+use econoserve::config::{ModelProfile, SystemConfig};
+use econoserve::coordinator::{harness, RunLimits};
+use econoserve::server::{RealServer, ServeRequest};
+use econoserve::trace::{self, TraceGen, TraceSpec};
+use econoserve::util::cli::Cli;
+use econoserve::util::rng::Rng;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = args.collect();
+    let code = match cmd.as_str() {
+        "simulate" => cmd_simulate(rest),
+        "serve" => cmd_serve(rest),
+        "trace" => cmd_trace(rest),
+        "capacity" => cmd_capacity(rest),
+        "figures" => cmd_figures(rest),
+        _ => {
+            eprintln!(
+                "usage: econoserve <simulate|serve|trace|capacity|figures> [options]\n\
+                 try: econoserve simulate --help"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn calibrated_cfg(model: &str, trace_name: &str) -> SystemConfig {
+    let profile = ModelProfile::by_name(model)
+        .unwrap_or_else(|| panic!("unknown model '{model}'"));
+    let mut cfg = SystemConfig::new(profile);
+    // Trace-specific sweet spots from the paper (§2.3, Fig 15).
+    match trace_name {
+        "alpaca" => {
+            cfg.padding_ratio = 0.10;
+            cfg.reserve_frac = 0.02;
+            cfg.buffer_frac = 0.15;
+        }
+        "sharegpt" => {
+            cfg.padding_ratio = 0.15;
+            cfg.reserve_frac = 0.03;
+            cfg.buffer_frac = 0.15;
+        }
+        "bookcorpus" => {
+            cfg.padding_ratio = 0.20;
+            cfg.reserve_frac = 0.04;
+            cfg.buffer_frac = 0.10;
+        }
+        _ => {}
+    }
+    // SLO constants from the cost model (prefill of an average prompt,
+    // decode token at typical batch size).
+    let spec = TraceSpec::by_name(trace_name).unwrap_or_else(TraceSpec::sharegpt);
+    // t_p: prefill of an average prompt (compute-bound estimate);
+    // t_g: one decode iteration (weight streaming dominates) — the latency
+    // a token experiences regardless of batch co-travellers.
+    cfg.t_p = cfg.profile.flops_per_token() * spec.input.avg / cfg.profile.peak_flops
+        + cfg.profile.iter_overhead;
+    cfg.t_g = cfg.profile.weight_bytes / cfg.profile.mem_bw + cfg.profile.iter_overhead;
+    cfg
+}
+
+fn cmd_simulate(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("econoserve simulate", "simulate a scheduler over a synthetic trace")
+        .opt("system", "econoserve", "scheduler (see sched::all_systems; plus 'distserve')")
+        .opt("model", "opt-13b", "model profile: opt-13b | llama-33b | opt-175b")
+        .opt("trace", "sharegpt", "trace: alpaca | sharegpt | bookcorpus")
+        .opt("rate", "0", "arrival rate req/s (0 = trace default)")
+        .opt("duration", "120", "trace duration, simulated seconds")
+        .opt("seed", "42", "rng seed")
+        .flag("oracle", "use ground-truth response lengths");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let trace_name = a.get("trace");
+    let cfg = calibrated_cfg(a.get("model"), trace_name);
+    let spec = TraceSpec::by_name(trace_name).expect("unknown trace");
+    let rate = if a.f64("rate") > 0.0 { a.f64("rate") } else { spec.default_rate };
+    let gen = TraceGen::new(spec);
+    let items =
+        gen.generate_for(a.f64("duration"), rate, cfg.profile.max_total_len, a.u64("seed"));
+    println!(
+        "simulate: system={} model={} trace={trace_name} rate={rate}/s n={} oracle={}",
+        a.get("system"),
+        cfg.profile.name,
+        items.len(),
+        a.bool("oracle")
+    );
+    let sys = a.get("system");
+    if sys == "distserve" {
+        let dcfg = DistServeConfig::homogeneous(cfg.profile.clone(), &cfg);
+        let res = DistServeSim::new(dcfg).run(&items, a.f64("duration") * 10.0);
+        print_summary(&res.summary, res.summary.n_total);
+        println!("  transfer share of JCT: {:.1}%", res.transfer_share * 100.0);
+        return 0;
+    }
+    let res = harness::simulate(
+        &cfg,
+        sys,
+        trace_name,
+        &items,
+        a.bool("oracle"),
+        RunLimits::for_time(a.f64("duration") * 10.0),
+    );
+    print_summary(&res.summary, items.len());
+    println!("  wall time: {:.2}s ({} iterations)", res.wall_time, res.summary.iterations);
+    0
+}
+
+// (allocation breakdown printed via ECONO_DEBUG inside harness if needed)
+
+fn print_summary(s: &econoserve::metrics::Summary, n: usize) {
+    println!(
+        "  done {}/{n}  throughput {:.2} req/s ({:.0} tok/s)\n  \
+         JCT mean {:.3}s [p5 {:.3} p95 {:.3}]  norm-latency {:.4} s/token\n  \
+         SSR {:.1}%  TBT mean {:.4}s  wait {:.3}s exec {:.3}s preempt {:.3}s\n  \
+         GPU util {:.1}%  KVC util {:.1}% (alloc {:.1}%)  fwd {:.0} tok  \
+         alloc-fail {:.1}%  preemptions {}",
+        s.n_done,
+        s.throughput_rps,
+        s.throughput_tps,
+        s.mean_jct,
+        s.p5_jct,
+        s.p95_jct,
+        s.norm_latency,
+        s.ssr * 100.0,
+        s.mean_tbt,
+        s.mean_wait,
+        s.mean_exec,
+        s.mean_preempt,
+        s.gpu_util * 100.0,
+        s.kvc_util * 100.0,
+        s.kvc_alloc * 100.0,
+        s.avg_forward_size,
+        s.alloc_failure_frac * 100.0,
+        s.preemptions,
+    );
+}
+
+fn cmd_serve(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("econoserve serve", "serve a workload on the REAL model via PJRT")
+        .opt("artifacts", "artifacts", "AOT artifacts directory")
+        .opt("listen", "", "start the HTTP front-end on this address (e.g. 127.0.0.1:8080) instead of the batch demo")
+        .opt("requests", "32", "number of requests")
+        .opt("prompt-len", "24", "mean prompt length (tokens)")
+        .opt("max-new", "48", "mean response length (tokens)")
+        .opt("seed", "7", "rng seed");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let listen = a.get("listen").to_string();
+    if !listen.is_empty() {
+        match econoserve::server::http::HttpServer::start(&listen, a.get("artifacts")) {
+            Ok(srv) => {
+                println!(
+                    "serving on http://{}\n  POST /v1/generate {{\"prompt\": [ids], \"max_new_tokens\": n}}\n  GET  /v1/stats | GET /health",
+                    srv.addr
+                );
+                // Run until killed.
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(3600));
+                }
+            }
+            Err(e) => {
+                eprintln!("failed to start server: {e:#}");
+                return 1;
+            }
+        }
+    }
+    let model = match econoserve::runtime::PjrtModel::load(a.get("artifacts")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e:#}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    println!(
+        "loaded {} params, slots={}, max_seq={}",
+        model.dims.param_count, model.dims.decode_slots, model.dims.max_seq
+    );
+    let dims = model.dims.clone();
+    let mut server = RealServer::new(model);
+    let mut rng = Rng::new(a.u64("seed"));
+    let n = a.usize("requests");
+    for id in 0..n {
+        let plen = rng.range_usize(4, (a.usize("prompt-len") * 2).min(dims.max_prompt));
+        let rl = rng.range_usize(4, a.usize("max-new") * 2).min(dims.max_seq - plen - 2);
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| rng.range_u64(1, dims.vocab as u64 - 1) as i32).collect();
+        server.submit(ServeRequest {
+            id: id as u64,
+            prompt,
+            max_new_tokens: rl.max(1),
+            predicted_rl: rl as u32,
+            slo_budget: f64::INFINITY,
+        });
+    }
+    if let Err(e) = server.run_to_completion() {
+        eprintln!("serving failed: {e:#}");
+        return 1;
+    }
+    let st = server.stats();
+    println!(
+        "served {} requests: {:.2} req/s, {:.1} tok/s\n\
+         latency mean {:.3}s p95 {:.3}s  ttft {:.3}s  tbt {:.4}s\n\
+         decode iterations {}  mean batch occupancy {:.2}/{}",
+        st.completed,
+        st.throughput_rps,
+        st.throughput_tps,
+        st.mean_latency,
+        st.p95_latency,
+        st.mean_ttft,
+        st.mean_tbt,
+        st.decode_iterations,
+        st.mean_batch_occupancy,
+        dims.decode_slots,
+    );
+    0
+}
+
+fn cmd_trace(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("econoserve trace", "generate / inspect synthetic traces")
+        .opt("trace", "sharegpt", "alpaca | sharegpt | bookcorpus")
+        .opt("n", "10000", "number of requests")
+        .opt("rate", "0", "arrival rate (0 = default)")
+        .opt("seed", "42", "rng seed")
+        .opt("out", "", "write CSV to this path");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let spec = TraceSpec::by_name(a.get("trace")).expect("unknown trace");
+    let rate = if a.f64("rate") > 0.0 { a.f64("rate") } else { spec.default_rate };
+    let gen = TraceGen::new(spec);
+    let items = gen.generate(a.usize("n"), rate, 4096, a.u64("seed"));
+    let s = trace::stats(&items);
+    println!(
+        "{}: n={} | input avg {:.1} [{}..{}] (paper {:.1} [{}..{}]) | \
+         output avg {:.1} [{}..{}] (paper {:.1} [{}..{}]) | rate {:.2}/s",
+        spec.name,
+        s.n,
+        s.in_avg,
+        s.in_min,
+        s.in_max,
+        spec.input.avg,
+        spec.input.min,
+        spec.input.max,
+        s.out_avg,
+        s.out_min,
+        s.out_max,
+        spec.output.avg,
+        spec.output.min,
+        spec.output.max,
+        s.rate
+    );
+    let out = a.get("out");
+    if !out.is_empty() {
+        if let Err(e) = trace::save_csv(&items, out) {
+            eprintln!("write {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out}");
+    }
+    0
+}
+
+fn cmd_capacity(argv: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "econoserve capacity",
+        "min GPUs for EconoServe to match DistServe goodput (Fig 12)",
+    )
+    .opt("model", "opt-13b", "model profile")
+    .opt("rate", "4", "arrival rate req/s")
+    .opt("duration", "120", "trace duration (simulated s)")
+    .opt("seed", "42", "rng seed")
+    .flag("heterogeneous", "H100 prefill + A100 decode for DistServe");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = calibrated_cfg(a.get("model"), "sharegpt");
+    let gen = TraceGen::new(TraceSpec::sharegpt());
+    let items = gen.generate_for(
+        a.f64("duration"),
+        a.f64("rate"),
+        cfg.profile.max_total_len,
+        a.u64("seed"),
+    );
+    let dcfg = if a.bool("heterogeneous") {
+        DistServeConfig::heterogeneous(cfg.profile.clone(), &cfg)
+    } else {
+        DistServeConfig::homogeneous(cfg.profile.clone(), &cfg)
+    };
+    let dist = DistServeSim::new(dcfg).run(&items, a.f64("duration") * 10.0);
+    let dist_gpus = 2 * cfg.profile.gpus_per_replica;
+    println!(
+        "DistServe: goodput {:.2} req/s on {} GPUs (SSR {:.1}%)",
+        dist.goodput,
+        dist_gpus,
+        dist.summary.ssr * 100.0
+    );
+    match min_replicas_for_goodput(
+        &cfg,
+        "econoserve",
+        "sharegpt",
+        &items,
+        false,
+        dist.goodput,
+        8,
+        a.f64("duration") * 10.0,
+    ) {
+        Some(k) => {
+            let gpus = k * cfg.profile.gpus_per_replica as usize;
+            println!(
+                "EconoServe: {k} replica(s) = {gpus} GPU(s) for the same goodput \
+                 ({:.0}% fewer than DistServe)",
+                (1.0 - gpus as f64 / dist_gpus as f64) * 100.0
+            );
+        }
+        None => println!("EconoServe: target goodput not reachable within 8 replicas"),
+    }
+    0
+}
+
+fn cmd_figures(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("econoserve figures", "regenerate paper figures (same drivers as cargo bench)")
+        .opt("only", "", "comma list of figures to run, e.g. 1,9,13 (default: all)")
+        .flag("fast", "reduced durations/grids");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let fast = a.bool("fast");
+    let only: Vec<String> = a.str_list("only");
+    let want = |id: &str| only.is_empty() || only.iter().any(|x| x == id);
+    use econoserve::figures as f;
+    if want("1") {
+        f::fig1::run(fast);
+    }
+    if want("2") {
+        f::fig2::run_fig(fast);
+    }
+    if want("4") {
+        f::fig4::run(fast);
+    }
+    if want("5") {
+        f::fig5::run(fast);
+    }
+    if want("6") {
+        f::fig6::run(fast);
+    }
+    if want("9") {
+        f::fig9::run(fast);
+    }
+    if want("10") {
+        f::fig10::run(fast);
+    }
+    if want("11") {
+        f::fig11::run(fast);
+    }
+    if want("12") {
+        f::fig12::run(fast);
+    }
+    if want("13") {
+        f::fig13::run(fast);
+    }
+    if want("14") {
+        f::fig14::run(fast);
+    }
+    if want("15") {
+        f::fig15::run(fast);
+    }
+    0
+}

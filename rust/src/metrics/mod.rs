@@ -1,0 +1,322 @@
+//! Metrics: per-iteration utilization sampling, counters, and the summary
+//! statistics every paper figure is built from.
+
+use crate::core::{ReqRec, Time};
+use crate::util::stats::Samples;
+
+/// Time-bucketed utilization sampling (the paper samples gpustat at 1 s).
+#[derive(Debug, Clone)]
+pub struct UtilSampler {
+    bucket: f64,
+    /// (sum of dur-weighted value, sum of dur) per bucket.
+    acc: Vec<(f64, f64)>,
+}
+
+impl UtilSampler {
+    pub fn new(bucket: f64) -> Self {
+        UtilSampler { bucket, acc: Vec::new() }
+    }
+
+    pub fn add(&mut self, t: Time, dur: f64, value: f64) {
+        let idx = (t / self.bucket) as usize;
+        if idx >= self.acc.len() {
+            self.acc.resize(idx + 1, (0.0, 0.0));
+        }
+        self.acc[idx].0 += value * dur;
+        self.acc[idx].1 += dur;
+    }
+
+    /// Time-weighted mean across all buckets.
+    pub fn mean(&self) -> f64 {
+        let (num, den) = self
+            .acc
+            .iter()
+            .fold((0.0, 0.0), |(n, d), (bn, bd)| (n + bn, d + bd));
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-bucket series (bucket start time, mean value).
+    pub fn series(&self) -> Vec<(f64, f64)> {
+        self.acc
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, d))| *d > 0.0)
+            .map(|(i, (n, d))| (i as f64 * self.bucket, n / d))
+            .collect()
+    }
+}
+
+/// Collector the engine/coordinator feeds during a run.
+#[derive(Debug, Clone)]
+pub struct Collector {
+    pub kvc_util: UtilSampler,
+    pub kvc_alloc: UtilSampler,
+    pub gpu_util: UtilSampler,
+    pub forward_size: UtilSampler,
+    /// Histogram of completed-requests-per-iteration (Fig 1f); index =
+    /// completions, value = iteration count.
+    pub completions_per_iter: Vec<u64>,
+    pub iterations: u64,
+    pub sched_time_total: f64,
+    pub sched_time_samples: Samples,
+    pub preemptions: u64,
+    pub swap_preemptions: u64,
+    pub pipeline_evictions: u64,
+    /// Requests that suffered >= 1 KVC allocation failure.
+    pub alloc_failed_reqs: std::collections::HashSet<usize>,
+    /// Total busy (iteration) time, for GPU-time accounting.
+    pub busy_time: f64,
+    /// Allocation breakdown samplers (sampled sparsely): tokens allocated
+    /// to RUNNING requests that are written / unwritten, and tokens held
+    /// by WAITING (queued/preempted) requests.
+    pub brk_running_written: UtilSampler,
+    pub brk_running_unwritten: UtilSampler,
+    pub brk_waiting_held: UtilSampler,
+    /// Occupied-KVC samples of QUEUED tasks by category (Fig 6): fresh
+    /// GTs (never preempted), preempted GTs, and chunked prompts.
+    pub occ_new_gt: Samples,
+    pub occ_preempted_gt: Samples,
+    pub occ_chunked_pt: Samples,
+}
+
+impl Default for Collector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Collector {
+            kvc_util: UtilSampler::new(1.0),
+            kvc_alloc: UtilSampler::new(1.0),
+            gpu_util: UtilSampler::new(1.0),
+            forward_size: UtilSampler::new(1.0),
+            completions_per_iter: Vec::new(),
+            iterations: 0,
+            sched_time_total: 0.0,
+            sched_time_samples: Samples::new(),
+            preemptions: 0,
+            swap_preemptions: 0,
+            pipeline_evictions: 0,
+            alloc_failed_reqs: std::collections::HashSet::new(),
+            busy_time: 0.0,
+            brk_running_written: UtilSampler::new(1.0),
+            brk_running_unwritten: UtilSampler::new(1.0),
+            brk_waiting_held: UtilSampler::new(1.0),
+            occ_new_gt: Samples::new(),
+            occ_preempted_gt: Samples::new(),
+            occ_chunked_pt: Samples::new(),
+        }
+    }
+
+    pub fn record_iteration(
+        &mut self,
+        t: Time,
+        dur: f64,
+        forward: u32,
+        gpu_util: f64,
+        kvc_util: f64,
+        kvc_alloc: f64,
+        completed: usize,
+    ) {
+        self.iterations += 1;
+        self.busy_time += dur;
+        self.forward_size.add(t, dur, forward as f64);
+        self.gpu_util.add(t, dur, gpu_util);
+        self.kvc_util.add(t, dur, kvc_util);
+        self.kvc_alloc.add(t, dur, kvc_alloc);
+        if completed >= self.completions_per_iter.len() {
+            self.completions_per_iter.resize(completed + 1, 0);
+        }
+        self.completions_per_iter[completed] += 1;
+    }
+
+    pub fn record_sched(&mut self, dur: f64) {
+        self.sched_time_total += dur;
+        self.sched_time_samples.push(dur);
+    }
+}
+
+/// End-of-run summary over completed requests (the figure drivers' input).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n_total: usize,
+    pub n_done: usize,
+    /// Requests completed per second of simulated wall time.
+    pub throughput_rps: f64,
+    /// Generated tokens per second.
+    pub throughput_tps: f64,
+    pub mean_jct: f64,
+    pub p5_jct: f64,
+    pub p95_jct: f64,
+    /// Mean of per-request JCT / output length (vLLM's normalized latency).
+    pub norm_latency: f64,
+    /// SLO satisfaction ratio over ALL requests (unfinished = violated).
+    pub ssr: f64,
+    pub mean_tbt: f64,
+    pub p5_tbt: f64,
+    pub p95_tbt: f64,
+    /// JCT decomposition (means over completed requests).
+    pub mean_wait: f64,
+    pub mean_exec: f64,
+    pub mean_preempt: f64,
+    pub mean_sched_share: f64,
+    /// Time-weighted utilizations.
+    pub kvc_util: f64,
+    pub kvc_alloc: f64,
+    pub gpu_util: f64,
+    pub avg_forward_size: f64,
+    /// Fraction of requests that hit >= 1 KVC allocation failure.
+    pub alloc_failure_frac: f64,
+    pub preemptions: u64,
+    pub pipeline_evictions: u64,
+    /// Scheduling overhead as a fraction of total busy time.
+    pub sched_overhead_frac: f64,
+    pub sched_time_mean: f64,
+    pub iterations: u64,
+}
+
+/// Build the summary from request records + collector at `end_time`.
+pub fn summarize(recs: &[ReqRec], col: &Collector, end_time: Time) -> Summary {
+    let mut jct = Samples::new();
+    let mut tbt = Samples::new();
+    let mut norm = Samples::new();
+    let mut wait = Samples::new();
+    let mut exec = Samples::new();
+    let mut preempt = Samples::new();
+    let mut tokens = 0u64;
+    let mut n_done = 0usize;
+    let mut slo_ok = 0usize;
+
+    for r in recs {
+        if let Some(j) = r.jct() {
+            n_done += 1;
+            jct.push(j);
+            norm.push(j / r.req.true_rl.max(1) as f64);
+            if r.met_slo() {
+                slo_ok += 1;
+            }
+            tokens += r.generated as u64;
+            if let Some(t) = r.mean_tbt() {
+                tbt.push(t);
+            }
+            let w = r.exec_start_at.map(|s| s - r.req.arrival).unwrap_or(0.0);
+            wait.push(w);
+            preempt.push(r.preempt_total);
+            exec.push((j - w - r.preempt_total).max(0.0));
+        }
+    }
+
+    let span = end_time.max(1e-9);
+    let mut s = Summary {
+        n_total: recs.len(),
+        n_done,
+        throughput_rps: n_done as f64 / span,
+        throughput_tps: tokens as f64 / span,
+        mean_jct: jct.mean(),
+        p5_jct: jct.p5(),
+        p95_jct: jct.p95(),
+        norm_latency: norm.mean(),
+        ssr: slo_ok as f64 / recs.len().max(1) as f64,
+        mean_tbt: tbt.mean(),
+        p5_tbt: tbt.p5(),
+        p95_tbt: tbt.p95(),
+        mean_wait: wait.mean(),
+        mean_exec: exec.mean(),
+        mean_preempt: preempt.mean(),
+        mean_sched_share: if n_done > 0 { col.sched_time_total / n_done as f64 } else { 0.0 },
+        kvc_util: col.kvc_util.mean(),
+        kvc_alloc: col.kvc_alloc.mean(),
+        gpu_util: col.gpu_util.mean(),
+        avg_forward_size: col.forward_size.mean(),
+        alloc_failure_frac: col.alloc_failed_reqs.len() as f64 / recs.len().max(1) as f64,
+        preemptions: col.preemptions,
+        pipeline_evictions: col.pipeline_evictions,
+        sched_overhead_frac: col.sched_time_total / (col.busy_time + col.sched_time_total).max(1e-9),
+        sched_time_mean: 0.0,
+        iterations: col.iterations,
+    };
+    let mut sched = col.sched_time_samples.clone();
+    s.sched_time_mean = sched.mean();
+    let _ = sched.p95();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Request, ReqRec};
+
+    fn done_rec(id: usize, arrival: f64, done: f64, rl: u32, deadline: f64) -> ReqRec {
+        let mut r = ReqRec::new(Request { id, arrival, prompt_len: 10, true_rl: rl, deadline });
+        r.generated = rl;
+        r.done_at = Some(done);
+        r.exec_start_at = Some(arrival + 0.5);
+        r.phase = crate::core::Phase::Done;
+        r
+    }
+
+    #[test]
+    fn util_sampler_time_weighted() {
+        let mut u = UtilSampler::new(1.0);
+        u.add(0.0, 1.0, 1.0);
+        u.add(0.5, 3.0, 0.0);
+        assert!((u.mean() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn util_series_buckets() {
+        let mut u = UtilSampler::new(1.0);
+        u.add(0.2, 0.5, 0.8);
+        u.add(2.3, 0.5, 0.4);
+        let s = u.series();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].0, 0.0);
+        assert_eq!(s[1].0, 2.0);
+    }
+
+    #[test]
+    fn summary_basics() {
+        let recs = vec![
+            done_rec(0, 0.0, 2.0, 10, 3.0),  // met SLO
+            done_rec(1, 1.0, 9.0, 20, 4.0),  // missed SLO
+        ];
+        let col = Collector::new();
+        let s = summarize(&recs, &col, 10.0);
+        assert_eq!(s.n_done, 2);
+        assert!((s.ssr - 0.5).abs() < 1e-12);
+        assert!((s.mean_jct - 5.0).abs() < 1e-12);
+        assert!((s.throughput_rps - 0.2).abs() < 1e-12);
+        // norm latency: (2/10 + 8/20)/2 = 0.3
+        assert!((s.norm_latency - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unfinished_requests_count_against_ssr() {
+        let mut recs = vec![done_rec(0, 0.0, 1.0, 10, 2.0)];
+        recs.push(ReqRec::new(Request {
+            id: 1,
+            arrival: 0.0,
+            prompt_len: 5,
+            true_rl: 5,
+            deadline: 1.0,
+        }));
+        let s = summarize(&recs, &Collector::new(), 10.0);
+        assert_eq!(s.n_done, 1);
+        assert!((s.ssr - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completions_histogram() {
+        let mut c = Collector::new();
+        c.record_iteration(0.0, 0.01, 100, 0.9, 0.5, 0.6, 0);
+        c.record_iteration(0.01, 0.01, 100, 0.9, 0.5, 0.6, 3);
+        assert_eq!(c.completions_per_iter[0], 1);
+        assert_eq!(c.completions_per_iter[3], 1);
+    }
+}

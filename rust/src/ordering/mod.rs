@@ -1,0 +1,158 @@
+//! Prompt and Generation Task Ordering (§3.4).
+//!
+//! Tasks are ordered by three bucketed factors, in priority order:
+//!  1. **SLO deadline slack** (ascending): ranges 0–0.5 s, 0.5–2 s, > 2 s
+//!     (the paper's example ranges);
+//!  2. **occupied KVC** (descending, bucketed): run big KVC holders first
+//!     so their space frees earlier (Observation 5);
+//!  3. **length** (descending): predicted RL for GTs / prompt length for
+//!     PTs, so tasks that fill the remaining resource gap are found fast.
+//!
+//! [`best_fit_leq`] is the paper's "binary search to find a task with the
+//! predicted RL or prompt length close to the required length".
+
+use crate::core::world::World;
+use crate::core::ReqId;
+
+/// Composite sort key: smaller = higher priority.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct OrderKey {
+    pub deadline_bucket: u8,
+    /// Negated bucketed occupied-KVC (so larger occupancy sorts first).
+    pub neg_kvc_bucket: i32,
+    /// Negated length (longer first).
+    pub neg_len: i64,
+    /// Tie-break for determinism.
+    pub id: ReqId,
+}
+
+/// Deadline slack buckets (seconds until the JCT deadline).
+pub fn deadline_bucket(slack: f64) -> u8 {
+    if slack < 0.5 {
+        0
+    } else if slack < 2.0 {
+        1
+    } else {
+        2
+    }
+}
+
+/// Occupied-KVC bucket width in tokens (two vLLM blocks of 32 by default;
+/// buckets keep factor 2 from overriding factor 1 on noise).
+pub const KVC_BUCKET: u32 = 256;
+
+/// Key for a task; `len` is predicted RL (GT) or prompt length (PT).
+pub fn order_key(world: &World, id: ReqId, len: u32) -> OrderKey {
+    let rec = &world.recs[id];
+    let slack = rec.req.deadline - world.clock;
+    OrderKey {
+        deadline_bucket: deadline_bucket(slack),
+        neg_kvc_bucket: -((world.occupied_kvc(id) / KVC_BUCKET) as i32),
+        neg_len: -(len as i64),
+        id,
+    }
+}
+
+/// Sort `ids` in scheduling-priority order (stable, deterministic).
+pub fn sort_pts(world: &World, ids: &mut [ReqId]) {
+    ids.sort_by_key(|&id| {
+        let len = world.recs[id].req.prompt_len - world.recs[id].prompt_done;
+        order_key(world, id, len)
+    });
+}
+
+pub fn sort_gts(world: &World, ids: &mut [ReqId]) {
+    ids.sort_by_key(|&id| order_key(world, id, world.recs[id].predicted_remaining()));
+}
+
+/// Binary search over a **descending-length-sorted** slice of (len, idx)
+/// pairs: the first entry with `len <= cap` (i.e. the largest that fits).
+/// Returns the position in `pairs`, or None if nothing fits.
+pub fn best_fit_leq(pairs: &[(u32, usize)], cap: u32) -> Option<usize> {
+    if pairs.is_empty() {
+        return None;
+    }
+    // pairs sorted descending by len: find first index with len <= cap.
+    let (mut lo, mut hi) = (0usize, pairs.len());
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if pairs[mid].0 > cap {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    if lo < pairs.len() {
+        Some(lo)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelProfile, SystemConfig};
+    use crate::predictor::OraclePredictor;
+    use crate::trace::TraceItem;
+
+    fn world(items: &[TraceItem]) -> World {
+        let cfg = SystemConfig::new(ModelProfile::opt_13b());
+        let p = Box::new(OraclePredictor::new(1));
+        World::new(cfg, items, p)
+    }
+
+    #[test]
+    fn deadline_buckets() {
+        assert_eq!(deadline_bucket(0.1), 0);
+        assert_eq!(deadline_bucket(1.0), 1);
+        assert_eq!(deadline_bucket(10.0), 2);
+        assert_eq!(deadline_bucket(-3.0), 0); // overdue = most urgent
+    }
+
+    #[test]
+    fn urgent_tasks_first_then_big_kvc_then_long() {
+        let mut w = world(&[
+            TraceItem { arrival: 0.0, prompt_len: 100, true_rl: 10 }, // long, lax
+            TraceItem { arrival: 0.0, prompt_len: 10, true_rl: 10 },  // short, lax
+            TraceItem { arrival: 0.0, prompt_len: 50, true_rl: 10 },  // urgent
+        ]);
+        // Force deadlines: id 2 nearly due, others far out.
+        w.recs[0].req.deadline = w.clock + 100.0;
+        w.recs[1].req.deadline = w.clock + 100.0;
+        w.recs[2].req.deadline = w.clock + 0.1;
+        let mut ids = vec![0, 1, 2];
+        sort_pts(&w, &mut ids);
+        assert_eq!(ids[0], 2, "urgent first");
+        assert_eq!(ids[1], 0, "then longest prompt");
+        assert_eq!(ids[2], 1);
+    }
+
+    #[test]
+    fn occupied_kvc_beats_length() {
+        let mut w = world(&[
+            TraceItem { arrival: 0.0, prompt_len: 500, true_rl: 10 },
+            TraceItem { arrival: 0.0, prompt_len: 10, true_rl: 10 },
+        ]);
+        // Give id 1 a big resident KVC footprint (e.g. preempted GT).
+        w.pool.alloc_tokens(1, 600, crate::kvc::Priority::Reserved).unwrap();
+        w.pool.write_tokens(1, 600);
+        w.recs[0].req.deadline = w.clock + 100.0;
+        w.recs[1].req.deadline = w.clock + 100.0;
+        let mut ids = vec![0, 1];
+        sort_pts(&w, &mut ids);
+        assert_eq!(ids[0], 1, "bigger KVC holder first despite shorter prompt");
+    }
+
+    #[test]
+    fn best_fit_binary_search() {
+        // Descending lengths.
+        let pairs = vec![(512u32, 0usize), (256, 1), (128, 2), (64, 3), (16, 4)];
+        assert_eq!(best_fit_leq(&pairs, 1024), Some(0));
+        assert_eq!(best_fit_leq(&pairs, 300), Some(1));
+        assert_eq!(best_fit_leq(&pairs, 128), Some(2));
+        assert_eq!(best_fit_leq(&pairs, 100), Some(3));
+        assert_eq!(best_fit_leq(&pairs, 10), None);
+        assert_eq!(best_fit_leq(&[], 10), None);
+    }
+}

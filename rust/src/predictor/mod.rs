@@ -1,0 +1,192 @@
+//! Response-length (RL) prediction (§2.3, §3.3.2).
+//!
+//! The paper fine-tunes OPT-13B with LoRA to predict a request's RL from
+//! its prompt, reporting 77.5% / 73.2% / 69.8% accuracy at the per-trace
+//! sweet-spot padding ratios and the under/over-provision splits of
+//! Fig 5a. That model (and its GPUs) are not available here, so
+//! [`SimPredictor`] reproduces the predictor's *error process*: a
+//! multiplicative log-normal error around the true RL with per-trace
+//! sigma calibrated so that, after sweet-spot padding, the fraction of
+//! under-provisioned requests matches Fig 5a:
+//!
+//! ```text
+//! P(under) = P(pred * (1+pad) < true) = Phi(-ln(1+pad) / sigma)
+//! alpaca:     9.30% under @ pad 0.10  => sigma ~ 0.072
+//! sharegpt:  13.42% under @ pad 0.15  => sigma ~ 0.127
+//! bookcorpus:21.92% under @ pad 0.20  => sigma ~ 0.235
+//! ```
+//!
+//! Predictions are quantized up to the KVC block size: allocation is
+//! block-granular anyway, and quantization is what makes same-RL GT
+//! groups (Fig 2) non-trivial. [`OraclePredictor`] returns the truth
+//! (the paper's *Oracle* variant).
+
+use crate::core::ReqId;
+use crate::util::rng::Rng;
+
+/// A raw RL prediction for one request (pre-padding).
+pub trait Predictor: Send {
+    /// Predict the response length for request `id` whose true RL is
+    /// `true_rl`. Implementations must be deterministic per (seed, id).
+    fn predict_raw(&mut self, id: ReqId, true_rl: u32) -> u32;
+
+    /// Latency of one prediction (the paper measures ~0.921 s on its
+    /// separate 4-GPU predictor server; overlapped with queueing/prefill).
+    fn latency(&self) -> f64 {
+        0.0
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Log-normal-error predictor calibrated per trace.
+pub struct SimPredictor {
+    sigma: f64,
+    /// Multiplicative bias (1.0 = unbiased in log space).
+    bias: f64,
+    quantum: u32,
+    latency: f64,
+    rng: Rng,
+    /// Accuracy accounting: predictions within +/-1 quantum of truth.
+    pub n_pred: u64,
+    pub n_close: u64,
+}
+
+impl SimPredictor {
+    pub fn new(sigma: f64, quantum: u32, seed: u64) -> Self {
+        SimPredictor {
+            sigma,
+            bias: 1.0,
+            quantum: quantum.max(1),
+            latency: 0.921,
+            rng: Rng::new(seed ^ 0x9E1D),
+            n_pred: 0,
+            n_close: 0,
+        }
+    }
+
+    /// Per-trace calibration (see module docs).
+    pub fn for_trace(trace: &str, quantum: u32, seed: u64) -> Self {
+        let sigma = match trace {
+            "alpaca" => 0.072,
+            "sharegpt" => 0.127,
+            "bookcorpus" => 0.235,
+            _ => 0.15,
+        };
+        Self::new(sigma, quantum, seed)
+    }
+
+    fn quantize(&self, x: f64) -> u32 {
+        let q = self.quantum as f64;
+        ((x / q).ceil() * q).max(q) as u32
+    }
+}
+
+impl Predictor for SimPredictor {
+    fn predict_raw(&mut self, _id: ReqId, true_rl: u32) -> u32 {
+        let noise = (self.rng.normal() * self.sigma).exp() * self.bias;
+        let pred = self.quantize(true_rl as f64 * noise);
+        self.n_pred += 1;
+        if pred.abs_diff(self.quantize(true_rl as f64)) <= self.quantum {
+            self.n_close += 1;
+        }
+        pred
+    }
+
+    fn latency(&self) -> f64 {
+        self.latency
+    }
+
+    fn name(&self) -> &'static str {
+        "sim-lora"
+    }
+}
+
+/// Perfect predictor (the paper's Oracle upper bound).
+pub struct OraclePredictor {
+    quantum: u32,
+}
+
+impl OraclePredictor {
+    pub fn new(quantum: u32) -> Self {
+        OraclePredictor { quantum: quantum.max(1) }
+    }
+}
+
+impl Predictor for OraclePredictor {
+    fn predict_raw(&mut self, _id: ReqId, true_rl: u32) -> u32 {
+        let q = self.quantum;
+        true_rl.div_ceil(q) * q
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_quantizes_up() {
+        let mut o = OraclePredictor::new(32);
+        assert_eq!(o.predict_raw(0, 1), 32);
+        assert_eq!(o.predict_raw(0, 32), 32);
+        assert_eq!(o.predict_raw(0, 33), 64);
+    }
+
+    #[test]
+    fn sim_predictor_underprovision_rate_matches_calibration() {
+        // With sigma=0.127 and padding 15%, ~13.4% of requests should be
+        // under-provisioned (padded prediction below truth).
+        let mut p = SimPredictor::for_trace("sharegpt", 1, 7);
+        let pad = 1.15;
+        let true_rl = 300u32;
+        let n = 100_000;
+        let mut under = 0;
+        for i in 0..n {
+            let pred = p.predict_raw(i, true_rl);
+            if (pred as f64 * pad) < true_rl as f64 {
+                under += 1;
+            }
+        }
+        let frac = under as f64 / n as f64;
+        assert!((0.10..0.17).contains(&frac), "under-provision frac {frac}");
+    }
+
+    #[test]
+    fn predictions_quantized() {
+        let mut p = SimPredictor::new(0.1, 32, 1);
+        for i in 0..100 {
+            let v = p.predict_raw(i, 100);
+            assert_eq!(v % 32, 0);
+            assert!(v >= 32);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = SimPredictor::new(0.2, 32, 5);
+        let mut b = SimPredictor::new(0.2, 32, 5);
+        for i in 0..50 {
+            assert_eq!(a.predict_raw(i, 123), b.predict_raw(i, 123));
+        }
+    }
+
+    #[test]
+    fn grouping_exists_after_quantization() {
+        // Fig 2 precondition: quantized predictions collide often enough
+        // to form same-RL groups.
+        let mut p = SimPredictor::for_trace("sharegpt", 32, 11);
+        let mut rng = Rng::new(3);
+        let mut counts = std::collections::HashMap::new();
+        for i in 0..1000 {
+            let true_rl = (rng.log_normal(5.5, 0.7)).clamp(19.0, 991.0) as u32;
+            let v = p.predict_raw(i, true_rl);
+            *counts.entry(v).or_insert(0u32) += 1;
+        }
+        let multi = counts.values().filter(|c| **c >= 4).count();
+        assert!(multi >= 5, "expected many groups with >=4 members, got {multi}");
+    }
+}

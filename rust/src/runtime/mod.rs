@@ -1,0 +1,307 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and serve the real (small) transformer from
+//! rust. Python never runs on this path.
+//!
+//! Artifacts (see aot.py's module docs for the exact layouts):
+//!  * `manifest.json` — model config + parameter table + state sizes.
+//!  * `weights.bin`   — little-endian f32 parameters, manifest order.
+//!  * `prefill.hlo.txt` / `decode.hlo.txt` / `insert.hlo.txt` /
+//!    `logits_1.hlo.txt` / `logits_b.hlo.txt` — packed-state programs
+//!    (single flat f32 output each; see model.py).
+//!  * `golden.json`   — deterministic transcript for integration tests.
+//!
+//! Weights are uploaded to device buffers ONCE and reused via
+//! `execute_b`. The serving state (KV caches + logits, packed into one
+//! flat array per program) chains on-device between steps; only the
+//! logits block is read back per iteration (EXPERIMENTS.md §Perf).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model dimensions parsed from manifest.json.
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub max_prompt: usize,
+    pub decode_slots: usize,
+    pub head_dim: usize,
+    pub param_count: usize,
+    /// Packed-state lengths (f32 elements) for B=1 and B=decode_slots.
+    pub state_elems_1: usize,
+    pub state_elems_b: usize,
+}
+
+/// Golden transcript for end-to-end validation.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub prompt: Vec<i32>,
+    pub prompt_len: usize,
+    pub steps: usize,
+    pub generated: Vec<i32>,
+    pub prefill_logits_l2: f64,
+}
+
+fn jerr(e: String) -> anyhow::Error {
+    anyhow!(e)
+}
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+pub fn load_manifest(dir: &Path) -> Result<(ModelDims, Vec<(String, Vec<usize>)>)> {
+    let m = Json::parse_file(dir.join("manifest.json")).map_err(jerr)?;
+    let c = m.at(&["config"]).map_err(jerr)?;
+    let get = |k: &str| -> Result<usize> {
+        c.get(k)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest config missing '{k}'"))
+    };
+    let dims = ModelDims {
+        vocab: get("vocab")?,
+        d_model: get("d_model")?,
+        n_heads: get("n_heads")?,
+        n_layers: get("n_layers")?,
+        max_seq: get("max_seq")?,
+        max_prompt: get("max_prompt")?,
+        decode_slots: get("decode_slots")?,
+        head_dim: get("head_dim")?,
+        param_count: get("param_count")?,
+        state_elems_1: m
+            .at(&["artifacts", "state_elems_1"])
+            .map_err(jerr)?
+            .as_usize()
+            .ok_or_else(|| anyhow!("bad state_elems_1"))?,
+        state_elems_b: m
+            .at(&["artifacts", "state_elems_b"])
+            .map_err(jerr)?
+            .as_usize()
+            .ok_or_else(|| anyhow!("bad state_elems_b"))?,
+    };
+    let mut params = Vec::new();
+    for p in m.at(&["params"]).map_err(jerr)?.as_arr().unwrap_or(&[]) {
+        let name = p
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("param missing name"))?
+            .to_string();
+        let shape: Vec<usize> = p
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("param missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        params.push((name, shape));
+    }
+    Ok((dims, params))
+}
+
+pub fn load_golden(dir: &Path) -> Result<Golden> {
+    let g = Json::parse_file(dir.join("golden.json")).map_err(jerr)?;
+    let ints = |k: &str| -> Result<Vec<i32>> {
+        Ok(g.get(k)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("golden missing '{k}'"))?
+            .iter()
+            .map(|x| x.as_i64().unwrap_or(0) as i32)
+            .collect())
+    };
+    Ok(Golden {
+        prompt: ints("prompt")?,
+        prompt_len: g.get("prompt_len").and_then(|v| v.as_usize()).unwrap_or(0),
+        steps: g.get("steps").and_then(|v| v.as_usize()).unwrap_or(0),
+        generated: ints("generated")?,
+        prefill_logits_l2: g
+            .get("prefill_logits_l2")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0),
+    })
+}
+
+/// The loaded model: compiled executables + device-resident weights and
+/// packed serving state.
+///
+/// Every AOT program has a SINGLE flat f32 output (see model.py's
+/// packed-state docs): PJRT hands back one plain buffer per step, so the
+/// KV state chains on-device across prefill -> insert -> decode and only
+/// the logits block (a few KB) is read to the host per iteration.
+pub struct PjrtModel {
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    insert_exe: xla::PjRtLoadedExecutable,
+    logits_1_exe: xla::PjRtLoadedExecutable,
+    logits_b_exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::PjRtBuffer>,
+    pub dims: ModelDims,
+    /// Packed decode-batch state [2*L*B*H*T*hd kv | B*V logits], on device.
+    state_b: xla::PjRtBuffer,
+    pub dir: PathBuf,
+}
+
+impl PjrtModel {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let (dims, params) = load_manifest(&dir)?;
+
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(xerr)
+            .with_context(|| format!("parsing {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(xerr).with_context(|| format!("compiling {name}"))
+        };
+        let prefill_exe = compile("prefill.hlo.txt")?;
+        let decode_exe = compile("decode.hlo.txt")?;
+        let insert_exe = compile("insert.hlo.txt")?;
+        let logits_1_exe = compile("logits_1.hlo.txt")?;
+        let logits_b_exe = compile("logits_b.hlo.txt")?;
+
+        // Upload weights once.
+        let bytes = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("reading {}/weights.bin", dir.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("weights.bin not a multiple of 4 bytes");
+        }
+        let mut floats = vec![0f32; bytes.len() / 4];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            floats[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        let mut weights = Vec::with_capacity(params.len());
+        let mut off = 0usize;
+        for (name, shape) in &params {
+            let n: usize = shape.iter().product();
+            let slice = floats
+                .get(off..off + n)
+                .ok_or_else(|| anyhow!("weights.bin too short at {name}"))?;
+            let buf = client
+                .buffer_from_host_buffer::<f32>(slice, shape, None)
+                .map_err(xerr)
+                .with_context(|| format!("uploading {name}"))?;
+            weights.push(buf);
+            off += n;
+        }
+        if off != floats.len() {
+            bail!("weights.bin has {} extra floats", floats.len() - off);
+        }
+
+        // Zeroed packed batch state on device.
+        let zeros = vec![0f32; dims.state_elems_b];
+        let state_b = client
+            .buffer_from_host_buffer::<f32>(&zeros, &[dims.state_elems_b], None)
+            .map_err(xerr)?;
+
+        Ok(PjrtModel {
+            client,
+            prefill_exe,
+            decode_exe,
+            insert_exe,
+            logits_1_exe,
+            logits_b_exe,
+            weights,
+            dims,
+            state_b,
+            dir,
+        })
+    }
+
+    /// Execute `exe` with the resident weight buffers followed by `tmp`
+    /// extra inputs; returns the single output buffer on device.
+    fn exec_with_weights(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        tmp: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let mut refs: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        refs.extend(tmp.iter().copied());
+        let mut out = exe.execute_b(&refs).map_err(xerr)?;
+        Ok(out.remove(0).remove(0))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer::<i32>(data, dims, None).map_err(xerr)
+    }
+
+    /// Read the logits block of a packed state to the host.
+    fn read_logits(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        state: &xla::PjRtBuffer,
+    ) -> Result<Vec<f32>> {
+        let mut out = exe.execute_b(&[state]).map_err(xerr)?;
+        let buf = out.remove(0).remove(0);
+        buf.to_literal_sync().map_err(xerr)?.to_vec::<f32>().map_err(xerr)
+    }
+
+    /// Run prefill on ONE prompt. Returns (logits[vocab], state_1 buffer)
+    /// — the packed B=1 state stays on device, ready for `insert`.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, xla::PjRtBuffer)> {
+        let p = self.dims.max_prompt;
+        if prompt.is_empty() || prompt.len() > p {
+            bail!("prompt length {} out of range 1..={p}", prompt.len());
+        }
+        let mut padded = vec![0i32; p];
+        padded[..prompt.len()].copy_from_slice(prompt);
+        let tokens = self.upload_i32(&padded, &[1, p])?;
+        let lens = self.upload_i32(&[prompt.len() as i32], &[1])?;
+        let state_1 = self.exec_with_weights(&self.prefill_exe, &[&tokens, &lens])?;
+        let logits = self.read_logits(&self.logits_1_exe, &state_1)?;
+        Ok((logits, state_1))
+    }
+
+    /// Splice a prefilled B=1 state into decode slot `slot`. Pure
+    /// device-to-device: no KV bytes touch the host.
+    pub fn insert(&mut self, state_1: &xla::PjRtBuffer, slot: usize) -> Result<()> {
+        // NOTE: R0 scalars must go through buffer_from_host_buffer with
+        // empty dims — buffer_from_host_literal on an R0 literal crashes
+        // xla_extension 0.5.1 ("Unhandled primitive type").
+        let slot_buf = self.upload_i32(&[slot as i32], &[])?;
+        let args: Vec<&xla::PjRtBuffer> = vec![&self.state_b, state_1, &slot_buf];
+        let mut out = self.insert_exe.execute_b(&args).map_err(xerr)?;
+        self.state_b = out.remove(0).remove(0);
+        Ok(())
+    }
+
+    /// One decode iteration over the slot batch. `lens[i] == 0` marks a
+    /// dead slot. Returns per-slot logits (garbage rows for dead slots).
+    pub fn decode_step(&mut self, lens: &[i32], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        let b = self.dims.decode_slots;
+        if lens.len() != b || tokens.len() != b {
+            bail!("lens/tokens must have {b} entries");
+        }
+        let lens_buf = self.upload_i32(lens, &[b])?;
+        let toks_buf = self.upload_i32(tokens, &[b])?;
+        self.state_b =
+            self.exec_with_weights(&self.decode_exe, &[&self.state_b, &lens_buf, &toks_buf])?;
+        let flat = self.read_logits(&self.logits_b_exe, &self.state_b)?;
+        let vocab = self.dims.vocab;
+        Ok(flat.chunks(vocab).map(|c| c.to_vec()).collect())
+    }
+
+    /// Greedy argmax over a logits row.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+// NOTE: correctness of this runtime against the python stack is pinned by
+// tests/pjrt_golden.rs (integration test: replays golden.json through the
+// artifacts and compares greedy tokens).

@@ -1,0 +1,842 @@
+//! ECONOSERVE (§3): the paper's scheduler, with its ablation ladder.
+//!
+//! Components (each gated by a flag so the §4 variants fall out):
+//!
+//!  * **Decoupling** (always on — variant `-D` baseline): separate PT and
+//!    GT waiting queues. GTs are responsible for *fully allocating the
+//!    KVC* (exact-allocation of the padded predicted RL); PTs are
+//!    responsible for *filling the GPU* up to the target forward size,
+//!    drawing KVC from the PT reservation. PTs can therefore be added in
+//!    EVERY iteration (Fig 8b), fixing the GT-domination issue.
+//!  * **Time-synced batching** (`synced`, `-SD`): the GT queue is grouped
+//!    by (padded, quantized) predicted RL; whole groups are admitted and
+//!    complete together, so scheduling is per-group (low overhead).
+//!    Under-provisioned members first try the reserved KVC, then are
+//!    re-grouped at a re-predicted RL with their KV kept resident
+//!    (offload-free, Observation 4).
+//!  * **Ordering** (`ordering`, `-SDO`): both queues ordered by (deadline
+//!    bucket ↑, occupied KVC ↓, length ↓) with binary-search gap filling
+//!    (§3.4).
+//!  * **KVC pipelining** (`pipe`, full system): each admitted hosting GT
+//!    lends the second half of its span to a guest GT whose predicted RL
+//!    fits `span/2 − b`, recursively (§3.2, Fig 7). Guests consume NO new
+//!    KVC blocks. The buffer `b` is `buffer_frac × hosting RL`.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use super::Scheduler;
+use crate::config::PreemptMode;
+use crate::core::world::World;
+use crate::core::{Batch, BatchTask, Phase, ReqId};
+use crate::kvc::Priority;
+use crate::ordering::best_fit_leq;
+
+pub struct EconoServe {
+    synced: bool,
+    ordering: bool,
+    pipe: bool,
+    /// Waiting PTs (not yet started prefilling).
+    pt_queue: Vec<ReqId>,
+    /// PTs currently prefilling (chunked), in admission order. Also holds
+    /// preempted GTs doing KV recompute.
+    running_pts: VecDeque<ReqId>,
+    /// Waiting GTs: predicted remaining RL -> FIFO queue.
+    gt_groups: BTreeMap<u32, VecDeque<ReqId>>,
+    /// GTs currently decoding (hosts and guests alike).
+    running_gts: Vec<ReqId>,
+    /// Group sizes admitted together (Fig 2 instrumentation).
+    pub group_sizes: Vec<u32>,
+    /// Count of GTs rescued by the reserve vs re-queued (Fig 5b).
+    pub reserve_rescues: u64,
+    pub requeues: u64,
+    /// Guests placed by KVC pipelining (instrumentation).
+    pub guests_placed: u64,
+    /// Admission retry gate: skip the O(queue) group scan when nothing
+    /// changed since the last failed attempt (keeps the per-iteration
+    /// scheduling cost O(running), the paper's low-overhead claim).
+    gate: AdmitGate,
+}
+
+#[derive(Default)]
+struct AdmitGate {
+    /// (free tokens, queue version, clock) at the last failed admission.
+    failed_at: Option<(u32, u64, f64)>,
+    version: u64,
+}
+
+impl EconoServe {
+    fn with_flags(synced: bool, ordering: bool, pipe: bool) -> Self {
+        EconoServe {
+            synced,
+            ordering,
+            pipe,
+            pt_queue: Vec::new(),
+            running_pts: VecDeque::new(),
+            gt_groups: BTreeMap::new(),
+            running_gts: Vec::new(),
+            group_sizes: Vec::new(),
+            reserve_rescues: 0,
+            requeues: 0,
+            guests_placed: 0,
+            gate: AdmitGate::default(),
+        }
+    }
+
+    /// `UnsyncedDecoupled`: decoupling + exact-allocation only.
+    pub fn variant_d() -> Self {
+        Self::with_flags(false, false, false)
+    }
+
+    /// `SyncDecoupled`: + time-synced GT groups.
+    pub fn variant_sd() -> Self {
+        Self::with_flags(true, false, false)
+    }
+
+    /// + task Ordering.
+    pub fn variant_sdo() -> Self {
+        Self::with_flags(true, true, false)
+    }
+
+    /// Full system: + KVC pipelining.
+    pub fn full() -> Self {
+        Self::with_flags(true, true, true)
+    }
+
+    fn enqueue_gt(&mut self, world: &World, id: ReqId) {
+        let rl = world.recs[id].predicted_remaining().max(1);
+        self.gt_groups.entry(rl).or_default().push_back(id);
+        self.gate.version += 1;
+    }
+
+    /// Handle the previous iteration's events.
+    fn process_events(&mut self, world: &mut World) {
+        let events = world.take_events();
+        self.running_gts.retain(|id| !world.recs[*id].is_done());
+        self.running_pts.retain(|id| !world.recs[*id].is_done());
+
+        // PTs that finished prefilling become queued GTs.
+        let finished: Vec<ReqId> = events.finished_prefill.clone();
+        for id in finished {
+            if let Some(pos) = self.running_pts.iter().position(|x| *x == id) {
+                self.running_pts.remove(pos);
+            }
+            self.enqueue_gt(world, id);
+        }
+
+        // Recompute done: the GT resumes decoding.
+        let recomputed: Vec<ReqId> = events.recompute_done.clone();
+        for id in recomputed {
+            if let Some(pos) = self.running_pts.iter().position(|x| *x == id) {
+                self.running_pts.remove(pos);
+            }
+            debug_assert!(!self.running_gts.contains(&id), "dup push at recompute_done for {id}");
+            self.running_gts.push(id);
+        }
+
+        // Under-provisioned GTs (§3.3.2): reserve first, then offload-free
+        // re-queue at the re-predicted remaining RL. A GT can appear both
+        // here and in evicted_guests within one iteration — handle once.
+        let mut handled: std::collections::HashSet<ReqId> = std::collections::HashSet::new();
+        let under: Vec<ReqId> = events.reached_prediction.clone();
+        for id in under {
+            if world.recs[id].is_done() || !handled.insert(id) {
+                continue;
+            }
+            let new_rem = world.re_predict(id);
+            let use_reserve = matches!(
+                world.cfg.preempt_mode,
+                PreemptMode::ReservedThenFree | PreemptMode::OffloadSwap
+            );
+            let rescued = use_reserve
+                && !world.pipes.is_guest(id)
+                && world.pool.alloc_tokens(id, new_rem + 1, Priority::Reserved).is_ok();
+            if rescued {
+                self.reserve_rescues += 1;
+                // Span extends; guests were placed against the OLD span, so
+                // their offsets stay valid (the head only moves forward).
+                world.recs[id].gt_span_len += new_rem;
+            } else {
+                // Offload-free: stop decoding, KEEP the written KV resident
+                // (trim over-provisioned blocks), re-enter the GT queue.
+                if let Some(pos) = self.running_gts.iter().position(|x| *x == id) {
+                    self.running_gts.remove(pos);
+                }
+                // Guests lose their borrowed space (host keeps running).
+                if world.pipes.is_guest(id) {
+                    world.pipes.release_guest(id);
+                    let dropped = world.pool.clear_guest_tokens(id);
+                    world.recs[id].lost_kv += dropped;
+                } else {
+                    // Detach this host's guests first: they keep decoding in
+                    // space that remains allocated? No — the host's blocks
+                    // are being trimmed, so re-home or evict its guests.
+                    self.detach_guests_for_trim(world, id);
+                    world.pool.trim_to_written(id);
+                }
+                let now = world.clock;
+                let rec = &mut world.recs[id];
+                rec.phase = Phase::GtQueued;
+                rec.preempted_since.get_or_insert(now);
+                rec.preempt_count += 1;
+                world.col.preemptions += 1;
+                self.requeues += 1;
+                self.enqueue_gt(world, id);
+            }
+        }
+
+        // Evicted guests re-enter the GT queue (they carry lost_kv that is
+        // recomputed when they are re-admitted).
+        let evicted: Vec<ReqId> = events.evicted_guests.clone();
+        for id in evicted {
+            if world.recs[id].is_done() || !handled.insert(id) {
+                continue;
+            }
+            if let Some(pos) = self.running_gts.iter().position(|x| *x == id) {
+                self.running_gts.remove(pos);
+            }
+            world.re_predict(id);
+            self.enqueue_gt(world, id);
+        }
+    }
+
+    /// Re-home or evict the direct guests of `host` before its unused
+    /// span is trimmed away.
+    fn detach_guests_for_trim(&mut self, world: &mut World, host: ReqId) {
+        let guests = world.pipes.remove_host(host);
+        for g in guests {
+            if world.recs[g].is_done() {
+                continue;
+            }
+            let moved = world.pool.alloc_of(g).map(|a| a.guest_written).unwrap_or(0);
+            let need = moved + world.recs[g].predicted_remaining() + 1;
+            if world.pool.alloc_tokens(g, need, Priority::Reserved).is_ok() {
+                world.pool.clear_guest_tokens(g);
+                if moved > 0 {
+                    world.pool.write_tokens(g, moved);
+                }
+            } else {
+                // Same as a world eviction: drop guest KV, re-queue.
+                if let Some(pos) = self.running_gts.iter().position(|x| *x == g) {
+                    self.running_gts.remove(pos);
+                }
+                let dropped = world.pool.clear_guest_tokens(g);
+                let now = world.clock;
+                let rec = &mut world.recs[g];
+                rec.lost_kv += dropped;
+                rec.phase = Phase::GtQueued;
+                rec.preempted_since.get_or_insert(now);
+                rec.preempt_count += 1;
+                world.col.preemptions += 1;
+                world.col.pipeline_evictions += 1;
+                self.enqueue_gt(world, g);
+            }
+        }
+    }
+
+    /// Admit one GT from a group: exact-alloc its remaining span
+    /// (+ pending recompute work). Returns false on KVC exhaustion.
+    fn admit_gt(&mut self, world: &mut World, id: ReqId) -> bool {
+        let rec = &world.recs[id];
+        let remaining = rec.predicted_remaining().max(1);
+        let need = rec.lost_kv + remaining + 1;
+        if world.pool.alloc_tokens(id, need, Priority::Normal).is_err() {
+            return false;
+        }
+        world.mark_exec_start(id);
+        let rec = &mut world.recs[id];
+        rec.gt_span_base = rec.generated;
+        rec.gt_span_len = remaining;
+        if rec.lost_kv > 0 {
+            // Needs recompute first: treat like prefill work.
+            self.running_pts.push_front(id);
+        } else {
+            rec.phase = Phase::Decoding;
+            debug_assert!(!self.running_gts.contains(&id), "dup push at admit_gt for {id}");
+            self.running_gts.push(id);
+        }
+        true
+    }
+
+    /// Time-synced group admission: pick groups (ordered or FCFS-oldest),
+    /// admit members until the KVC is fully allocated; split when needed.
+    fn admit_gt_groups(&mut self, world: &mut World) {
+        // Retry gate: if the last attempt failed and neither the free
+        // space, the queue, nor (materially) the clock has changed, the
+        // scan would fail again — skip it.
+        if let Some((free, ver, at)) = self.gate.failed_at {
+            if world.pool.free_tokens(Priority::Normal) == free
+                && ver == self.gate.version
+                && world.clock - at < 0.05
+            {
+                return;
+            }
+        }
+        let mut any_admitted = false;
+        let mut tried: std::collections::BTreeSet<u32> = std::collections::BTreeSet::new();
+        loop {
+            if self.gt_groups.is_empty() || self.gt_groups.keys().all(|k| tried.contains(k)) {
+                break;
+            }
+            // Choose the next group.
+            let key = if self.ordering {
+                // Highest-priority member across group heads, honoring the
+                // 3-factor order; then prefer the LONGEST RL group (factor 3)
+                // via best-fit against the available KVC.
+                let avail = world.pool.free_tokens(Priority::Normal);
+                let mut pairs: Vec<(u32, usize)> = self
+                    .gt_groups
+                    .keys()
+                    .filter(|rl| !tried.contains(rl))
+                    .map(|rl| (*rl, *rl as usize))
+                    .collect();
+                pairs.sort_by(|a, b| b.0.cmp(&a.0)); // descending RL
+                match best_fit_leq(&pairs, avail.saturating_sub(1)) {
+                    Some(pos) => pairs[pos].0,
+                    None => break,
+                }
+            } else {
+                // FCFS: group whose head arrived earliest.
+                match self
+                    .gt_groups
+                    .iter()
+                    .filter(|(rl, _)| !tried.contains(rl))
+                    .min_by(|(_, a), (_, b)| {
+                        let ta = world.recs[*a.front().unwrap()].req.arrival;
+                        let tb = world.recs[*b.front().unwrap()].req.arrival;
+                        ta.partial_cmp(&tb).unwrap()
+                    })
+                    .map(|(rl, _)| *rl)
+                {
+                    Some(rl) => rl,
+                    None => break,
+                }
+            };
+
+            let mut admitted = 0u32;
+            let mut kvc_full = false;
+            let mut hosts: Vec<ReqId> = Vec::new();
+            // Admit every READY member of the group (prediction available —
+            // the predictor runs concurrently with waiting/prefill,
+            // §3.3.2); unready members stay queued without head-of-line
+            // blocking the rest of the group or other groups.
+            let mut idx = 0;
+            while idx < self.gt_groups.get(&key).map(|q| q.len()).unwrap_or(0) {
+                let cand = self.gt_groups[&key][idx];
+                if world.pred_ready[cand] > world.clock {
+                    idx += 1;
+                    continue;
+                }
+                if !self.admit_gt(world, cand) {
+                    kvc_full = true;
+                    break;
+                }
+                self.gt_groups.get_mut(&key).unwrap().remove(idx);
+                hosts.push(cand);
+                admitted += 1;
+            }
+            if admitted > 0 {
+                self.group_sizes.push(admitted);
+            }
+            self.gt_groups.retain(|_, q| !q.is_empty());
+            // Groups whose every member is merely "not ready yet" must not
+            // stop admission of other groups; only KVC exhaustion does.
+            tried.insert(key);
+
+            // Newly admitted hosts lend immediately via the same
+            // frontier pass (lend_running_spans runs again below when the
+            // queue still has candidates).
+            let _ = hosts;
+
+            any_admitted |= admitted > 0;
+            if kvc_full {
+                break; // KVC fully allocated
+            }
+            if self.gt_groups.keys().all(|k| tried.contains(k)) {
+                break; // nothing admissible remains
+            }
+        }
+        self.gate.failed_at = if any_admitted || self.gt_groups.is_empty() {
+            None
+        } else {
+            Some((
+                world.pool.free_tokens(Priority::Normal),
+                self.gate.version,
+                world.clock,
+            ))
+        };
+    }
+
+    /// Continuous lending (KVCPipe, §3.2 generalized): every running GT
+    /// (hosts AND guests — nesting falls out naturally) lends the unused
+    /// tail of its span to queued GTs, RIGHT-ALIGNED: a guest of length g
+    /// goes at [frontier - g, frontier), where `frontier` is the lowest
+    /// offset already lent. Safety is the same invariant as Fig 7 — the
+    /// guest finishes after g iterations while the writer's head needs
+    /// gap - g >= g + b more iterations to reach it (g <= gap/2 - b) —
+    /// but right-alignment keeps the remaining gap contiguous, so a span
+    /// keeps absorbing guests as its head advances, packing far more of
+    /// the allocated-but-unwritten space than midpoint halving.
+    fn lend_running_spans(&mut self, world: &mut World) {
+        if self.gt_groups.is_empty() {
+            return;
+        }
+        let writers: Vec<ReqId> = self.running_gts.clone();
+        for writer in writers {
+            if self.gt_groups.is_empty() {
+                break;
+            }
+            if world.recs[writer].lost_kv > 0 || world.recs[writer].is_done() {
+                continue;
+            }
+            let head = world.recs[writer].generated - world.recs[writer].gt_span_base;
+            let span = world.recs[writer].gt_span_len;
+            let mut frontier = world
+                .pipes
+                .guests_of(writer)
+                .iter()
+                .filter_map(|g| world.pipes.host_of(*g).map(|s| s.offset))
+                .min()
+                .unwrap_or(span);
+            loop {
+                let gap = frontier.saturating_sub(head);
+                let b_tok = (world.cfg.buffer_frac * gap as f64).ceil() as u32;
+                let target = (gap / 2).saturating_sub(b_tok);
+                if target < 4 {
+                    break;
+                }
+                let candidate = self
+                    .gt_groups
+                    .range(..=target)
+                    .rev()
+                    .find_map(|(rl, q)| {
+                        q.iter()
+                            .position(|&id| {
+                                world.pred_ready[id] <= world.clock
+                                    && world.recs[id].lost_kv == 0
+                                    && !world.recs[id].is_done()
+                            })
+                            .map(|pos| (*rl, pos))
+                    });
+                let Some((rl, pos)) = candidate else { break };
+                let guest = self.gt_groups.get_mut(&rl).unwrap().remove(pos).unwrap();
+                if self.gt_groups[&rl].is_empty() {
+                    self.gt_groups.remove(&rl);
+                }
+                frontier -= rl;
+                world.pipes.add_guest(guest, writer, frontier, rl);
+                self.guests_placed += 1;
+                self.gate.version += 1;
+                world.mark_exec_start(guest);
+                let rec = &mut world.recs[guest];
+                rec.gt_span_base = rec.generated;
+                rec.gt_span_len = rl;
+                rec.phase = Phase::Decoding;
+                debug_assert!(!self.running_gts.contains(&guest));
+                self.running_gts.push(guest);
+            }
+        }
+    }
+
+    /// Unsynced GT admission (variant -D): individual exact-allocations in
+    /// queue order.
+    fn admit_gts_unsynced(&mut self, world: &mut World) {
+        let mut ids: Vec<ReqId> =
+            self.gt_groups.values().flat_map(|q| q.iter().copied()).collect();
+        ids.sort_by(|a, b| {
+            world.recs[*a].req.arrival.partial_cmp(&world.recs[*b].req.arrival).unwrap()
+        });
+        for id in ids {
+            if world.pred_ready[id] > world.clock {
+                continue;
+            }
+            if !self.admit_gt(world, id) {
+                break;
+            }
+            let rl = world.recs[id].predicted_remaining().max(1);
+            // Remove from its group queue.
+            for (_, q) in self.gt_groups.iter_mut() {
+                if let Some(pos) = q.iter().position(|x| *x == id) {
+                    q.remove(pos);
+                    break;
+                }
+            }
+            let _ = rl;
+        }
+        self.gt_groups.retain(|_, q| !q.is_empty());
+    }
+
+    /// PT admission: fill the GPU to TFS with prompt chunks, drawing KVC
+    /// from the reservation (and beyond, if free).
+    fn admit_pts(&mut self, world: &mut World, batch: &mut Batch) {
+        let tfs = world.cfg.profile.tfs;
+        let mut used = batch.forward_size();
+
+        // Continue in-flight prefills (and recomputes) first.
+        let inflight: Vec<ReqId> = self.running_pts.iter().copied().collect();
+        for id in inflight {
+            if used >= tfs {
+                break;
+            }
+            let rec = &world.recs[id];
+            let left = if rec.lost_kv > 0 {
+                rec.lost_kv
+            } else {
+                rec.req.prompt_len - rec.prompt_done
+            };
+            let chunk = left.min(tfs - used);
+            if chunk == 0 {
+                continue;
+            }
+            if rec.lost_kv == 0
+                && world.pool.alloc_tokens(id, chunk, Priority::Reserved).is_err()
+            {
+                world.col.alloc_failed_reqs.insert(id);
+                continue;
+            }
+            batch.tasks.push(BatchTask::Prefill { id, chunk });
+            used += chunk;
+        }
+
+        // Admit new PTs — but only while the GT queue's idle prompt KV
+        // stays within the PT reservation. Prefilling beyond that point
+        // converts pool capacity into idle waiting-GT KV (the GT queue
+        // cannot drain faster than completions), strangling throughput;
+        // keeping the backlog in the PT queue costs no KVC.
+        let waiting_held: u32 = self
+            .gt_groups
+            .values()
+            .flatten()
+            .map(|&id| world.occupied_kvc(id))
+            .sum();
+        let stage_cap = ((world.cfg.kvc_tokens() as f64 * world.cfg.gt_stage_frac) as u32)
+            .max(world.pool.reserve_tokens());
+        if waiting_held > stage_cap {
+            return;
+        }
+        // Selection is a repeated linear min-scan (we admit only a handful
+        // per iteration, so this is cheaper than re-sorting every step).
+        while used < tfs && !self.pt_queue.is_empty() {
+            let pos = if self.ordering {
+                (0..self.pt_queue.len())
+                    .min_by_key(|&i| {
+                        let id = self.pt_queue[i];
+                        let rec = &world.recs[id];
+                        crate::ordering::order_key(
+                            world,
+                            id,
+                            rec.req.prompt_len - rec.prompt_done,
+                        )
+                    })
+                    .unwrap()
+            } else {
+                0 // FCFS (queue is in arrival order)
+            };
+            let id = self.pt_queue[pos];
+            let rec = &world.recs[id];
+            let left = rec.req.prompt_len - rec.prompt_done;
+            let chunk = left.min(tfs - used);
+            if chunk == 0 {
+                break;
+            }
+            if world.pool.alloc_tokens(id, chunk, Priority::Reserved).is_err() {
+                break; // KVC exhausted even with the reservation
+            }
+            self.pt_queue.remove(pos);
+            world.mark_exec_start(id);
+            self.running_pts.push_back(id);
+            batch.tasks.push(BatchTask::Prefill { id, chunk });
+            used += chunk;
+        }
+    }
+}
+
+impl Drop for EconoServe {
+    fn drop(&mut self) {
+        if std::env::var("ECONO_DEBUG").is_ok() {
+            eprintln!(
+                "[econoserve debug] rescues={} requeues={} guests={} groups_left={} pts_left={}",
+                self.reserve_rescues,
+                self.requeues,
+                self.guests_placed,
+                self.gt_groups.values().map(|q| q.len()).sum::<usize>(),
+                self.pt_queue.len(),
+            );
+        }
+    }
+}
+
+impl Scheduler for EconoServe {
+    fn name(&self) -> &'static str {
+        match (self.synced, self.ordering, self.pipe) {
+            (false, _, _) => "econoserve-d",
+            (true, false, _) => "econoserve-sd",
+            (true, true, false) => "econoserve-sdo",
+            (true, true, true) => "econoserve",
+        }
+    }
+
+    fn step(&mut self, world: &mut World) -> Batch {
+        while let Some(id) = world.inbox.pop_front() {
+            self.pt_queue.push(id);
+        }
+        self.process_events(world);
+
+        // ② KVC pipelining FIRST: queued GTs whose predicted RL fits the
+        // unused tail of a running host's span ride along for free. Doing
+        // this before direct admission means short-RL GTs consume NO new
+        // blocks, leaving the pool for long GTs and PTs — this is what
+        // lifts effective packing density back to block-allocation levels
+        // (§3.2's purpose).
+        if self.pipe {
+            self.lend_running_spans(world);
+        }
+
+        // ① Fill KVC with GTs.
+        if self.synced {
+            self.admit_gt_groups(world);
+        } else {
+            self.admit_gts_unsynced(world);
+        }
+        if self.pipe {
+            // Freshly admitted hosts have whole spans to lend.
+            self.lend_running_spans(world);
+        }
+
+        // Order GT queue state doesn't affect the running set; build batch.
+        let mut batch = Batch::default();
+        for &id in &self.running_gts {
+            batch.tasks.push(BatchTask::Decode { id });
+        }
+
+        // ③ Fill the GPU with PTs up to TFS.
+        self.admit_pts(world, &mut batch);
+
+        // Pressure-relief valve: queued GTs keep their prompt KV resident
+        // (Observation 5 makes that a feature), but under sustained
+        // overload the whole pool can end up held by WAITING GTs, leaving
+        // nothing schedulable. If that happens, offload-free-drop the KV
+        // of the largest waiting holder (recomputed on admission) so the
+        // head group can fit — the same §3.3.2 mechanism applied as a
+        // deadlock guard.
+        if batch.is_empty() && !self.gt_groups.is_empty() {
+            let victim = self
+                .gt_groups
+                .values()
+                .flat_map(|q| q.iter().copied())
+                .filter(|id| world.pool.written_tokens(*id) > 0)
+                .max_by_key(|id| world.pool.written_tokens(*id));
+            if let Some(v) = victim {
+                let (_, written) = world.pool.release(v);
+                world.recs[v].lost_kv += written;
+                world.col.preemptions += 1;
+                self.requeues += 1;
+            }
+        }
+
+        #[cfg(debug_assertions)]
+        {
+            let mut seen = std::collections::HashSet::new();
+            for t in &batch.tasks {
+                assert!(
+                    seen.insert(t.id()),
+                    "duplicate task for req {} in batch: task={t:?} in_gts={} in_pts={} in_groups={}",
+                    t.id(),
+                    self.running_gts.iter().filter(|x| **x == t.id()).count(),
+                    self.running_pts.iter().filter(|x| **x == t.id()).count(),
+                    self.gt_groups.values().flatten().filter(|x| **x == t.id()).count(),
+                );
+                assert!(
+                    world.pool.alloc_of(t.id()).is_some() || world.pipes.is_guest(t.id()),
+                    "req {} batched without allocation (phase {:?})",
+                    t.id(),
+                    world.recs[t.id()].phase
+                );
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelProfile, SystemConfig};
+    use crate::coordinator::{run, RunLimits};
+    use crate::engine::{Engine, SimEngine};
+    use crate::predictor::{OraclePredictor, SimPredictor};
+    use crate::trace::TraceItem;
+
+    fn world(items: &[TraceItem], kvc_tokens: u64, oracle: bool) -> World {
+        let mut profile = ModelProfile::opt_13b();
+        profile.kvc_bytes = 819_200 * kvc_tokens;
+        let mut cfg = SystemConfig::new(profile);
+        cfg.padding_ratio = 0.10;
+        cfg.reserve_frac = 0.05;
+        if oracle {
+            World::new(cfg, items, Box::new(OraclePredictor::new(32)))
+        } else {
+            World::new(cfg, items, Box::new(SimPredictor::for_trace("sharegpt", 32, 7)))
+        }
+    }
+
+    fn drive(w: &mut World, s: &mut EconoServe, iters: usize) {
+        let e = SimEngine::new();
+        for _ in 0..iters {
+            w.drain_arrivals();
+            let b = s.step(w);
+            if b.is_empty() {
+                if let Some(t) = w.next_arrival() {
+                    w.clock = t;
+                    continue;
+                }
+                break;
+            }
+            let (d, u) = e.iteration_cost(&b, w);
+            w.execute_iteration(&b, d, u);
+        }
+    }
+
+    #[test]
+    fn pts_added_every_iteration_with_reserve() {
+        // Saturate KVC with GTs, then check a late PT still gets prefilled
+        // (the decoupling + reservation headline property, Fig 8b).
+        let mut items: Vec<TraceItem> = (0..40)
+            .map(|i| TraceItem { arrival: i as f64 * 1e-3, prompt_len: 32, true_rl: 200 })
+            .collect();
+        items.push(TraceItem { arrival: 1.0, prompt_len: 64, true_rl: 8 });
+        let mut w = world(&items, 4096, true);
+        let mut s = EconoServe::full();
+        let e = SimEngine::new();
+        let mut late_pt_prefilled_alongside_decodes = false;
+        for _ in 0..3000 {
+            w.drain_arrivals();
+            let b = s.step(&mut w);
+            if b.is_empty() {
+                match w.next_arrival() {
+                    Some(t) => {
+                        w.clock = t;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            if w.clock >= 1.0
+                && b.decode_count() > 0
+                && b.tasks.iter().any(|t| matches!(t, BatchTask::Prefill { id: 40, .. }))
+            {
+                late_pt_prefilled_alongside_decodes = true;
+            }
+            let (d, u) = e.iteration_cost(&b, &w);
+            w.execute_iteration(&b, d, u);
+            if w.all_done() {
+                break;
+            }
+        }
+        assert!(late_pt_prefilled_alongside_decodes, "PT never joined a decode iteration");
+        assert!(w.all_done());
+    }
+
+    #[test]
+    fn same_rl_gts_form_groups() {
+        let items: Vec<TraceItem> = (0..12)
+            .map(|i| TraceItem { arrival: i as f64 * 1e-3, prompt_len: 16, true_rl: 60 })
+            .collect();
+        let mut w = world(&items, 8192, true);
+        let mut s = EconoServe::variant_sd();
+        drive(&mut w, &mut s, 4000);
+        assert!(w.all_done());
+        assert!(
+            s.group_sizes.iter().any(|g| *g >= 4),
+            "expected a multi-member group, got {:?}",
+            s.group_sizes
+        );
+    }
+
+    #[test]
+    fn kvc_pipelining_hosts_guests() {
+        // Long-RL hosts admitted first; short-RL guests should ride along
+        // without new allocations.
+        let mut items: Vec<TraceItem> = (0..6)
+            .map(|i| TraceItem { arrival: i as f64 * 1e-4, prompt_len: 16, true_rl: 256 })
+            .collect();
+        for i in 0..6 {
+            items.push(TraceItem {
+                arrival: 0.01 + i as f64 * 1e-4,
+                prompt_len: 16,
+                true_rl: 60, // fits 256/2 - b
+            });
+        }
+        let mut w = world(&items, 3000, true);
+        let mut s = EconoServe::full();
+        let e = SimEngine::new();
+        let mut saw_guest = false;
+        for _ in 0..5000 {
+            w.drain_arrivals();
+            let b = s.step(&mut w);
+            if w.pipes.guest_count() > 0 {
+                saw_guest = true;
+            }
+            if b.is_empty() {
+                match w.next_arrival() {
+                    Some(t) => {
+                        w.clock = t;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            let (d, u) = e.iteration_cost(&b, &w);
+            w.execute_iteration(&b, d, u);
+            if w.all_done() {
+                break;
+            }
+        }
+        assert!(saw_guest, "pipelining never hosted a guest");
+        assert!(w.all_done());
+        assert_eq!(w.col.pipeline_evictions, 0, "oracle predictions => no evictions");
+    }
+
+    #[test]
+    fn underprediction_rescued_or_requeued() {
+        let items: Vec<TraceItem> = (0..30)
+            .map(|i| TraceItem {
+                arrival: i as f64 * 0.01,
+                prompt_len: 24,
+                true_rl: 40 + (i as u32 % 11) * 29,
+            })
+            .collect();
+        let mut w = world(&items, 4096, false); // noisy predictor
+        let mut s = EconoServe::full();
+        let e = SimEngine::new();
+        let res = run(&mut w, &mut s, &e, RunLimits::default());
+        assert_eq!(res.summary.n_done, 30);
+        assert!(
+            s.reserve_rescues + s.requeues > 0,
+            "noisy predictions must trigger misprediction handling"
+        );
+    }
+
+    #[test]
+    fn all_variants_complete() {
+        let items: Vec<TraceItem> = (0..25)
+            .map(|i| TraceItem {
+                arrival: i as f64 * 0.02,
+                prompt_len: 16 + (i as u32 % 5) * 24,
+                true_rl: 10 + (i as u32 % 7) * 20,
+            })
+            .collect();
+        for mk in [
+            EconoServe::variant_d as fn() -> EconoServe,
+            EconoServe::variant_sd,
+            EconoServe::variant_sdo,
+            EconoServe::full,
+        ] {
+            let mut w = world(&items, 8192, true);
+            let mut s = mk();
+            let e = SimEngine::new();
+            let res = run(&mut w, &mut s, &e, RunLimits::default());
+            assert_eq!(res.summary.n_done, 25, "variant {} incomplete", s.name());
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Schedulers: the paper's EconoServe and every baseline it is compared
+//! against (Table 1 / §2.2).
+//!
+//! A scheduler is called once per iteration boundary. It consumes the
+//! events of the previous iteration from `world.events`, mutates its own
+//! queue state, performs all KVC allocation, and returns the next batch.
+//!
+//! | module        | system            | allocation | batching             |
+//! |---------------|-------------------|------------|----------------------|
+//! | `orca`        | ORCA [11]         | max        | FCFS, fixed batch    |
+//! | `srtf`        | SRTF baseline     | max        | preemptive shortest  |
+//! | `fastserve`   | FastServe [12]    | max        | 5-level MLFQ         |
+//! | `vllm`        | vLLM [13]         | block      | FCFS + swap preempt  |
+//! | `sarathi`     | Sarathi-Serve [15]| block      | chunked prefill, TFS |
+//! | `multires`    | MultiRes [32]     | exact      | O(n²) dual-resource  |
+//! | `sync_coupled`| SyncCoupled (§2.2)| exact      | same-RL groups       |
+//! | `econoserve`  | EconoServe (§3)   | exact      | SyncDecoupled (+O,+P)|
+//!
+//! DistServe (disaggregated prefill/decode) lives in [`crate::cluster`]
+//! because it spans two engines.
+
+pub mod econoserve;
+pub mod fastserve;
+pub mod multires;
+pub mod orca;
+pub mod sarathi;
+pub mod srtf;
+pub mod sync_coupled;
+pub mod vllm;
+
+use crate::core::world::World;
+use crate::core::Batch;
+
+/// Iteration-level scheduler interface.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Form the batch for the next iteration. `world.events` holds the
+    /// previous iteration's outcomes; implementations own queue state and
+    /// all KVC allocation decisions.
+    fn step(&mut self, world: &mut World) -> Batch;
+}
+
+/// Construct a scheduler by system name (the figure drivers' registry).
+/// `block_size` is used by schedulers that need a grouping quantum.
+pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    let s: Box<dyn Scheduler> = match name {
+        "orca" => Box::new(orca::Orca::new(8)),
+        "orca16" => Box::new(orca::Orca::new(16)),
+        "srtf" => Box::new(srtf::Srtf::new(8)),
+        "fastserve" => Box::new(fastserve::FastServe::new(8, 5)),
+        "vllm" => Box::new(vllm::Vllm::new()),
+        "sarathi" => Box::new(sarathi::Sarathi::new()),
+        "multires" => Box::new(multires::MultiRes::new()),
+        "sync_coupled" => Box::new(sync_coupled::SyncCoupled::new()),
+        // EconoServe ablation ladder (§4 Compared Methods).
+        "econoserve-d" => Box::new(econoserve::EconoServe::variant_d()),
+        "econoserve-sd" => Box::new(econoserve::EconoServe::variant_sd()),
+        "econoserve-sdo" => Box::new(econoserve::EconoServe::variant_sdo()),
+        "econoserve" => Box::new(econoserve::EconoServe::full()),
+        _ => return None,
+    };
+    Some(s)
+}
+
+/// All single-GPU system names in the paper's comparison order.
+pub fn all_systems() -> &'static [&'static str] {
+    &[
+        "orca",
+        "srtf",
+        "fastserve",
+        "vllm",
+        "sarathi",
+        "multires",
+        "sync_coupled",
+        "econoserve-d",
+        "econoserve-sd",
+        "econoserve-sdo",
+        "econoserve",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_systems() {
+        for name in all_systems() {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

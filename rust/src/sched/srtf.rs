@@ -1,0 +1,135 @@
+//! SRTF baseline (§2.1 "Schedulers" item 2): shortest-remaining-time-first
+//! at iteration level with **max-allocation**. Preemptive: each iteration
+//! the `batch_size` requests with the least predicted remaining work run;
+//! paused requests keep their (max) allocation, mirroring the KVC pressure
+//! the paper attributes to this family.
+
+use super::Scheduler;
+use crate::core::world::World;
+use crate::core::{Batch, BatchTask, Phase, ReqId};
+use crate::kvc::Priority;
+
+pub struct Srtf {
+    batch_size: usize,
+    /// Admitted (holding a max-allocation), not yet completed.
+    admitted: Vec<ReqId>,
+}
+
+impl Srtf {
+    pub fn new(batch_size: usize) -> Self {
+        Srtf { batch_size, admitted: Vec::new() }
+    }
+
+    /// Remaining service estimate: unprocessed prompt tokens + predicted
+    /// remaining response tokens.
+    fn remaining(world: &World, id: ReqId) -> u64 {
+        let rec = &world.recs[id];
+        (rec.req.prompt_len - rec.prompt_done) as u64 + rec.predicted_remaining() as u64
+    }
+}
+
+impl Scheduler for Srtf {
+    fn name(&self) -> &'static str {
+        "srtf"
+    }
+
+    fn step(&mut self, world: &mut World) -> Batch {
+        self.admitted.retain(|id| !world.recs[*id].is_done());
+
+        // Admit whatever fits (admission itself is not size-limited; the
+        // BATCH each iteration is).
+        while let Some(&head) = world.inbox.front() {
+            let max_alloc = world.cfg.profile.max_total_len;
+            if world.pool.alloc_tokens(head, max_alloc, Priority::Reserved).is_err() {
+                break;
+            }
+            world.inbox.pop_front();
+            self.admitted.push(head);
+        }
+
+        // Pick the batch_size shortest-remaining admitted requests.
+        self.admitted.sort_by_key(|&id| Srtf::remaining(world, id));
+        let mut batch = Batch::default();
+        for &id in self.admitted.iter().take(self.batch_size) {
+            world.mark_exec_start(id);
+            let rec = &world.recs[id];
+            if rec.prompt_done < rec.req.prompt_len {
+                batch
+                    .tasks
+                    .push(BatchTask::Prefill { id, chunk: rec.req.prompt_len - rec.prompt_done });
+            } else {
+                batch.tasks.push(BatchTask::Decode { id });
+            }
+        }
+        // Paused (not selected) requests are "preempted" in paper terms but
+        // keep their allocation; track pause spans for metrics.
+        for &id in self.admitted.iter().skip(self.batch_size) {
+            let now = world.clock;
+            let rec = &mut world.recs[id];
+            if rec.phase == Phase::Decoding || rec.phase == Phase::Prefilling {
+                rec.phase = Phase::Preempted;
+                rec.preempted_since.get_or_insert(now);
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelProfile, SystemConfig};
+    use crate::engine::{Engine, SimEngine};
+    use crate::predictor::OraclePredictor;
+    use crate::trace::TraceItem;
+
+    fn world(items: &[TraceItem]) -> World {
+        let mut profile = ModelProfile::opt_13b();
+        profile.max_total_len = 256;
+        profile.kvc_bytes = 819_200 * 4096;
+        let cfg = SystemConfig::new(profile);
+        let p = Box::new(OraclePredictor::new(1));
+        World::new(cfg, items, p)
+    }
+
+    #[test]
+    fn shortest_runs_first() {
+        let mut w = world(&[
+            TraceItem { arrival: 0.0, prompt_len: 64, true_rl: 100 },
+            TraceItem { arrival: 0.0, prompt_len: 8, true_rl: 4 },
+        ]);
+        w.drain_arrivals();
+        let mut s = Srtf::new(1);
+        let b = s.step(&mut w);
+        assert_eq!(b.tasks.len(), 1);
+        assert_eq!(b.tasks[0].id(), 1, "short job must be chosen");
+    }
+
+    #[test]
+    fn all_complete_eventually() {
+        let items: Vec<TraceItem> = (0..10)
+            .map(|i| TraceItem {
+                arrival: i as f64 * 0.01,
+                prompt_len: 10 + (i as u32 % 3) * 20,
+                true_rl: 3 + (i as u32 % 5) * 10,
+            })
+            .collect();
+        let mut w = world(&items);
+        let mut s = Srtf::new(4);
+        let e = SimEngine::new();
+        for _ in 0..10_000 {
+            w.drain_arrivals();
+            let b = s.step(&mut w);
+            if b.is_empty() {
+                if let Some(t) = w.next_arrival() {
+                    w.clock = t;
+                    continue;
+                }
+                break;
+            }
+            let (dur, util) = e.iteration_cost(&b, &w);
+            w.execute_iteration(&b, dur, util);
+        }
+        assert!(w.all_done());
+    }
+}

@@ -1,0 +1,294 @@
+//! Minimal HTTP/1.1 front-end for the real-model server (std-only: the
+//! offline registry has no hyper/axum/tokio).
+//!
+//! Endpoints:
+//!   POST /v1/generate   {"prompt": [int token ids], "max_new_tokens": n}
+//!                       -> {"id", "tokens", "ttft_s", "latency_s", "tbt_s"}
+//!   GET  /v1/stats      -> aggregate ServeStats snapshot
+//!   GET  /health        -> 200 "ok"
+//!
+//! Architecture: one acceptor thread per connection (serving concurrency
+//! is bounded by the model's decode slots anyway), all requests funneled
+//! to the single engine thread that owns the PJRT model — the same
+//! decoupled PT-queue / slot-batch structure as `RealServer`, with
+//! per-request oneshot response channels.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{RealServer, ServeRequest, ServeResponse, ServeStats};
+use crate::runtime::PjrtModel;
+use crate::util::json::{obj, Json};
+
+enum EngineCmd {
+    Generate(ServeRequest, mpsc::Sender<ServeResponse>),
+    Stats(mpsc::Sender<ServeStats>),
+    Shutdown,
+}
+
+/// Handle to a running HTTP server (engine thread + acceptor thread).
+pub struct HttpServer {
+    pub addr: std::net::SocketAddr,
+    tx: mpsc::Sender<EngineCmd>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    engine_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve
+    /// the model from `artifacts_dir`.
+    pub fn start(addr: &str, artifacts_dir: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+
+        let (tx, rx) = mpsc::channel::<EngineCmd>();
+
+        // Engine thread: owns the model (PjRtModel is !Send — the PJRT
+        // client handle is thread-affine in the xla crate — so it is
+        // LOADED on the engine thread), runs the slot-batch loop.
+        let dir = artifacts_dir.to_string();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let engine_handle = std::thread::spawn(move || {
+            let model = match PjrtModel::load(&dir) {
+                Ok(m) => {
+                    let _ = ready_tx.send(Ok(()));
+                    m
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            engine_loop(model, rx)
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during load"))?
+            .with_context(|| format!("loading artifacts from {artifacts_dir}"))?;
+
+        // Acceptor thread: parses HTTP, forwards to the engine.
+        let tx_accept = tx.clone();
+        let accept_handle = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                let tx = tx_accept.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, tx);
+                });
+            }
+        });
+
+        Ok(HttpServer { addr: local, tx, accept_handle: Some(accept_handle), engine_handle: Some(engine_handle) })
+    }
+
+    /// Stop the engine (the acceptor thread dies with the process; tests
+    /// only need the engine drained).
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(EngineCmd::Shutdown);
+        if let Some(h) = self.engine_handle.take() {
+            let _ = h.join();
+        }
+        drop(self.accept_handle.take());
+    }
+}
+
+/// Engine loop: interleave admission of queued generate commands with
+/// decode iterations; reply on each request's channel as it completes.
+fn engine_loop(model: PjrtModel, rx: mpsc::Receiver<EngineCmd>) {
+    let mut server = RealServer::new(model);
+    let mut waiters: Vec<(u64, mpsc::Sender<ServeResponse>)> = Vec::new();
+    let next_id = AtomicU64::new(1);
+    let mut replied = 0usize;
+
+    loop {
+        // Drain pending commands without blocking; block only when idle.
+        let idle = server.idle();
+        loop {
+            let cmd = if idle && waiters.is_empty() {
+                match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => return,
+                }
+            };
+            match cmd {
+                EngineCmd::Generate(mut req, reply) => {
+                    req.id = next_id.fetch_add(1, Ordering::Relaxed);
+                    waiters.push((req.id, reply));
+                    server.submit(req);
+                }
+                EngineCmd::Stats(reply) => {
+                    let _ = reply.send(server.stats());
+                }
+                EngineCmd::Shutdown => return,
+            }
+            if !(idle && waiters.is_empty()) {
+                break;
+            }
+        }
+
+        let _ = server.tick();
+
+        // Deliver any newly completed responses.
+        let responses = server.responses();
+        while replied < responses.len() {
+            let r = responses[replied].clone();
+            if let Some(pos) = waiters.iter().position(|(id, _)| *id == r.id) {
+                let (_, ch) = waiters.swap_remove(pos);
+                let _ = ch.send(r);
+            }
+            replied += 1;
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineCmd>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    // Headers (we only need Content-Length).
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+
+    let (status, payload) = route(&method, &path, &body, &tx)
+        .unwrap_or_else(|e| (400, obj([("error", Json::from(format!("{e:#}")))])));
+    respond(stream, status, &payload.to_string())
+}
+
+fn route(
+    method: &str,
+    path: &str,
+    body: &[u8],
+    tx: &mpsc::Sender<EngineCmd>,
+) -> Result<(u16, Json)> {
+    match (method, path) {
+        ("GET", "/health") => Ok((200, Json::from("ok"))),
+        ("GET", "/v1/stats") => {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(EngineCmd::Stats(rtx)).map_err(|_| anyhow!("engine down"))?;
+            let s = rrx.recv().map_err(|_| anyhow!("engine down"))?;
+            Ok((
+                200,
+                obj([
+                    ("completed", Json::from(s.completed)),
+                    ("throughput_rps", Json::from(s.throughput_rps)),
+                    ("throughput_tps", Json::from(s.throughput_tps)),
+                    ("mean_latency_s", Json::from(s.mean_latency)),
+                    ("p95_latency_s", Json::from(s.p95_latency)),
+                    ("mean_ttft_s", Json::from(s.mean_ttft)),
+                    ("mean_tbt_s", Json::from(s.mean_tbt)),
+                    ("decode_iterations", Json::from(s.decode_iterations as usize)),
+                    ("mean_batch_occupancy", Json::from(s.mean_batch_occupancy)),
+                ]),
+            ))
+        }
+        ("POST", "/v1/generate") => {
+            let text = std::str::from_utf8(body).context("body not utf-8")?;
+            let j = Json::parse(text).map_err(|e| anyhow!("bad json: {e}"))?;
+            let prompt: Vec<i32> = j
+                .get("prompt")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("missing 'prompt' (array of token ids)"))?
+                .iter()
+                .map(|x| x.as_i64().unwrap_or(0) as i32)
+                .collect();
+            if prompt.is_empty() {
+                return Err(anyhow!("'prompt' must be non-empty"));
+            }
+            let max_new =
+                j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32).max(1);
+            let slo = j.get("slo_budget_s").and_then(|v| v.as_f64()).unwrap_or(f64::INFINITY);
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(EngineCmd::Generate(
+                ServeRequest {
+                    id: 0, // assigned by the engine
+                    prompt,
+                    max_new_tokens: max_new,
+                    predicted_rl: max_new as u32,
+                    slo_budget: slo,
+                },
+                rtx,
+            ))
+            .map_err(|_| anyhow!("engine down"))?;
+            let r = rrx.recv().map_err(|_| anyhow!("engine down"))?;
+            Ok((
+                200,
+                obj([
+                    ("id", Json::from(r.id as usize)),
+                    ("tokens", Json::Arr(r.tokens.iter().map(|t| Json::from(*t as usize)).collect())),
+                    ("ttft_s", Json::from(r.ttft)),
+                    ("latency_s", Json::from(r.latency)),
+                    ("tbt_s", Json::from(r.mean_tbt)),
+                ]),
+            ))
+        }
+        _ => Ok((404, obj([("error", Json::from("not found"))]))),
+    }
+}
+
+fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Tiny blocking HTTP client for tests/examples (same std-only rationale).
+pub fn http_request(addr: &std::net::SocketAddr, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad response: {buf}"))?;
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Ok((status, body))
+}
+
+/// Shared server handle for concurrent client tests.
+pub type SharedServer = Arc<Mutex<HttpServer>>;

@@ -1,0 +1,359 @@
+//! Serving front-end over the real PJRT model: continuous slot-based
+//! batching with decoupled PT/GT handling, driven either synchronously
+//! (open-loop replay, used by examples/serve_real_model.rs) or as a
+//! background worker thread with request/response channels.
+//!
+//! This is the "real" counterpart of the simulation coordinator: requests
+//! queue as PTs, are prefilled one at a time (B=1 prefill artifact),
+//! spliced into a free decode slot (`insert` artifact — KV never leaves
+//! the device layout), and then advance one token per decode iteration
+//! together with every other live slot (continuous batching). Slots are
+//! the real engine's KVC granularity; the EconoServe ordering policy
+//! picks which queued PT gets a freed slot.
+
+pub mod http;
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::PjrtModel;
+use crate::util::stats::Samples;
+
+/// One serving request (token ids in; the demo model has no tokenizer —
+/// callers supply ids in [1, vocab)).
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Stop after this many generated tokens (the trace's true RL).
+    pub max_new_tokens: usize,
+    /// Predicted RL (for ordering); 0 = unknown.
+    pub predicted_rl: u32,
+    /// Deadline in seconds from submission (SLO); inf = none.
+    pub slo_budget: f64,
+}
+
+/// Completed response with timing.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Time to first token (s).
+    pub ttft: f64,
+    /// End-to-end latency (s).
+    pub latency: f64,
+    /// Mean time between tokens (s).
+    pub mean_tbt: f64,
+    pub met_slo: bool,
+}
+
+struct Slot {
+    req: ServeRequest,
+    submitted: Instant,
+    first_token_at: Option<Instant>,
+    last_token_at: Instant,
+    tbt: Samples,
+    tokens: Vec<i32>,
+    /// Context length inside the slot (prompt + generated).
+    len: usize,
+    /// Hard cap on `len` (max_seq guard).
+    len_cap: usize,
+}
+
+/// Aggregate serving stats.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub completed: usize,
+    pub throughput_rps: f64,
+    pub throughput_tps: f64,
+    pub mean_latency: f64,
+    pub p95_latency: f64,
+    pub mean_ttft: f64,
+    pub mean_tbt: f64,
+    pub ssr: f64,
+    pub decode_iterations: u64,
+    pub mean_batch_occupancy: f64,
+}
+
+pub struct RealServer {
+    model: PjrtModel,
+    waiting: VecDeque<(Instant, ServeRequest)>,
+    slots: Vec<Option<Slot>>,
+    responses: Vec<ServeResponse>,
+    decode_iters: u64,
+    occupancy_sum: u64,
+    started: Instant,
+}
+
+impl RealServer {
+    pub fn new(model: PjrtModel) -> Self {
+        let n = model.dims.decode_slots;
+        RealServer {
+            model,
+            waiting: VecDeque::new(),
+            slots: (0..n).map(|_| None).collect(),
+            responses: Vec::new(),
+            decode_iters: 0,
+            occupancy_sum: 0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn submit(&mut self, req: ServeRequest) {
+        self.waiting.push_back((Instant::now(), req));
+    }
+
+    fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    /// Admit queued PTs into free slots (prefill + insert). The queue is
+    /// ordered EconoServe-style: longer prompts first within the same
+    /// deadline bucket (slots are uniform so the occupied-KVC factor is
+    /// constant here).
+    fn admit(&mut self) -> Result<()> {
+        while let Some(slot_idx) = self.free_slot() {
+            if self.waiting.is_empty() {
+                break;
+            }
+            // Ordering: ascending deadline bucket, then longest prompt.
+            let now = Instant::now();
+            let best = (0..self.waiting.len())
+                .min_by_key(|&i| {
+                    let (t0, r) = &self.waiting[i];
+                    let slack = r.slo_budget - now.duration_since(*t0).as_secs_f64();
+                    let bucket = crate::ordering::deadline_bucket(slack);
+                    (bucket, usize::MAX - r.prompt.len())
+                })
+                .unwrap();
+            let (t0, req) = self.waiting.remove(best).unwrap();
+            let prompt: Vec<i32> =
+                req.prompt.iter().copied().take(self.model.dims.max_prompt).collect();
+            let (logits, state_1) = self.model.prefill(&prompt)?;
+            self.model.insert(&state_1, slot_idx)?;
+            let first = PjrtModel::argmax(&logits);
+            let now = Instant::now();
+            let len = prompt.len();
+            let len_cap = (self.model.dims.max_seq - 1).min(len + req.max_new_tokens);
+            self.slots[slot_idx] = Some(Slot {
+                len,
+                len_cap,
+                req,
+                submitted: t0,
+                first_token_at: Some(now),
+                last_token_at: now,
+                tbt: Samples::new(),
+                tokens: vec![first],
+            });
+        }
+        Ok(())
+    }
+
+    /// One decode iteration across all live slots. Returns completions.
+    fn decode_once(&mut self) -> Result<usize> {
+        let b = self.model.dims.decode_slots;
+        let mut lens = vec![0i32; b];
+        let mut toks = vec![0i32; b];
+        let mut any = false;
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(slot) = s {
+                lens[i] = slot.len as i32;
+                toks[i] = *slot.tokens.last().unwrap();
+                any = true;
+            }
+        }
+        if !any {
+            return Ok(0);
+        }
+        let logits = self.model.decode_step(&lens, &toks)?;
+        self.decode_iters += 1;
+        self.occupancy_sum += self.slots.iter().filter(|s| s.is_some()).count() as u64;
+        let now = Instant::now();
+        let mut done = 0usize;
+        for i in 0..b {
+            let Some(slot) = self.slots[i].as_mut() else { continue };
+            let tok = PjrtModel::argmax(&logits[i]);
+            slot.tokens.push(tok);
+            slot.len += 1;
+            slot.tbt.push(now.duration_since(slot.last_token_at).as_secs_f64());
+            slot.last_token_at = now;
+            let finished =
+                slot.tokens.len() >= slot.req.max_new_tokens || slot.len + 1 >= slot.len_cap.max(2);
+            if finished {
+                let slot = self.slots[i].take().unwrap();
+                let latency = now.duration_since(slot.submitted).as_secs_f64();
+                self.responses.push(ServeResponse {
+                    id: slot.req.id,
+                    ttft: slot
+                        .first_token_at
+                        .map(|t| t.duration_since(slot.submitted).as_secs_f64())
+                        .unwrap_or(0.0),
+                    latency,
+                    mean_tbt: slot.tbt.mean(),
+                    met_slo: latency <= slot.req.slo_budget,
+                    tokens: slot.tokens,
+                });
+                done += 1;
+            }
+        }
+        Ok(done)
+    }
+
+    /// True when no request is queued or in flight.
+    pub fn idle(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none()) && self.waiting.is_empty()
+    }
+
+    /// One engine tick: admit queued PTs, then one decode iteration.
+    /// Returns the number of requests completed this tick.
+    pub fn tick(&mut self) -> Result<usize> {
+        self.admit()?;
+        self.decode_once()
+    }
+
+    /// Run until the queue and all slots drain. Returns responses.
+    pub fn run_to_completion(&mut self) -> Result<&[ServeResponse]> {
+        self.started = Instant::now();
+        loop {
+            self.admit()?;
+            if self.slots.iter().all(|s| s.is_none()) && self.waiting.is_empty() {
+                break;
+            }
+            self.decode_once()?;
+        }
+        Ok(&self.responses)
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let span = self.started.elapsed().as_secs_f64().max(1e-9);
+        let mut lat = Samples::new();
+        let mut ttft = Samples::new();
+        let mut tbt = Samples::new();
+        let mut tokens = 0usize;
+        let mut ok = 0usize;
+        for r in &self.responses {
+            lat.push(r.latency);
+            ttft.push(r.ttft);
+            tbt.push(r.mean_tbt);
+            tokens += r.tokens.len();
+            ok += r.met_slo as usize;
+        }
+        ServeStats {
+            completed: self.responses.len(),
+            throughput_rps: self.responses.len() as f64 / span,
+            throughput_tps: tokens as f64 / span,
+            mean_latency: lat.mean(),
+            p95_latency: lat.p95(),
+            mean_ttft: ttft.mean(),
+            mean_tbt: tbt.mean(),
+            ssr: if self.responses.is_empty() { 0.0 } else { ok as f64 / self.responses.len() as f64 },
+            decode_iterations: self.decode_iters,
+            mean_batch_occupancy: if self.decode_iters > 0 {
+                self.occupancy_sum as f64 / self.decode_iters as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    pub fn responses(&self) -> &[ServeResponse] {
+        &self.responses
+    }
+}
+
+/// Commands for the threaded front-end.
+enum Cmd {
+    Submit(ServeRequest),
+    Drain,
+}
+
+/// Handle to a server running on a background thread (Python-free request
+/// path: the thread owns the PJRT model).
+pub struct ServerHandle {
+    tx: mpsc::Sender<Cmd>,
+    rx_done: mpsc::Receiver<(Vec<ServeResponse>, ServeStats)>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Spawn a worker thread that loads the model from `artifacts_dir`.
+    pub fn spawn(artifacts_dir: String) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (tx_done, rx_done) = mpsc::channel();
+        let join = std::thread::spawn(move || {
+            let model = match PjrtModel::load(&artifacts_dir) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("server: failed to load model: {e:#}");
+                    return;
+                }
+            };
+            let mut server = RealServer::new(model);
+            loop {
+                // Drain pending commands without blocking, then do work.
+                let mut drain_requested = false;
+                loop {
+                    match rx.try_recv() {
+                        Ok(Cmd::Submit(r)) => server.submit(r),
+                        Ok(Cmd::Drain) => {
+                            drain_requested = true;
+                            break;
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => return,
+                    }
+                }
+                let _ = server.admit();
+                let idle = server.slots.iter().all(|s| s.is_none());
+                if !idle {
+                    let _ = server.decode_once();
+                } else if drain_requested {
+                    let _ = tx_done.send((server.responses.clone(), server.stats()));
+                    return;
+                } else {
+                    // Nothing to do: block for the next command.
+                    match rx.recv() {
+                        Ok(Cmd::Submit(r)) => server.submit(r),
+                        Ok(Cmd::Drain) => {
+                            let _ = tx_done.send((server.responses.clone(), server.stats()));
+                            return;
+                        }
+                        Err(_) => return,
+                    }
+                }
+                if drain_requested {
+                    // Finish remaining work, then report.
+                    while !(server.slots.iter().all(|s| s.is_none())
+                        && server.waiting.is_empty())
+                    {
+                        let _ = server.admit();
+                        let _ = server.decode_once();
+                    }
+                    let _ = tx_done.send((server.responses.clone(), server.stats()));
+                    return;
+                }
+            }
+        });
+        Ok(ServerHandle { tx, rx_done, join: Some(join) })
+    }
+
+    pub fn submit(&self, req: ServeRequest) {
+        let _ = self.tx.send(Cmd::Submit(req));
+    }
+
+    /// Finish all outstanding work and return (responses, stats).
+    pub fn drain(mut self) -> Result<(Vec<ServeResponse>, ServeStats)> {
+        let _ = self.tx.send(Cmd::Drain);
+        let out = self
+            .rx_done
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server thread terminated unexpectedly"))?;
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,134 @@
+//! In-tree benchmarking kit (the offline registry has no criterion).
+//!
+//! Two pieces:
+//!  * [`time_fn`] / [`Bencher`] — warmup + timed iterations with mean /
+//!    p50 / p95 reporting, used by the micro-benches (scheduler hot path).
+//!  * [`BenchOut`] — uniform result sink for the paper-figure drivers:
+//!    prints the table to stdout AND writes `bench_out/<name>.csv` +
+//!    `.json` so EXPERIMENTS.md entries can be regenerated mechanically.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{Samples, Table};
+
+/// Time `f` for at least `min_iters` iterations / `min_time`, after warmup.
+pub fn time_fn(mut f: impl FnMut(), min_iters: usize, min_time: Duration) -> BenchResult {
+    // Warmup: 10% of min_iters, at least 3.
+    for _ in 0..(min_iters / 10).max(3) {
+        f();
+    }
+    let mut samples = Samples::new();
+    let start = Instant::now();
+    let mut iters = 0usize;
+    while iters < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        iters += 1;
+        if iters > 10_000_000 {
+            break;
+        }
+    }
+    BenchResult { samples }
+}
+
+pub struct BenchResult {
+    pub samples: Samples,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.samples.mean() * 1e9
+    }
+
+    pub fn report(&mut self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={} p50={} p95={}",
+            self.samples.len(),
+            fmt_ns(self.samples.mean() * 1e9),
+            fmt_ns(self.samples.p50() * 1e9),
+            fmt_ns(self.samples.p95() * 1e9),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Result sink for figure drivers: stdout table + bench_out/ CSV artifacts.
+pub struct BenchOut {
+    name: String,
+    sections: Vec<(String, Table)>,
+}
+
+impl BenchOut {
+    pub fn new(name: &str) -> Self {
+        BenchOut { name: name.to_string(), sections: vec![] }
+    }
+
+    pub fn section(&mut self, title: &str, table: Table) {
+        println!("\n== {} :: {} ==", self.name, title);
+        print!("{}", table.render());
+        self.sections.push((title.to_string(), table));
+    }
+
+    /// Write all sections to bench_out/<name>__<section>.csv.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("bench_out");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        for (title, table) in &self.sections {
+            let slug: String = title
+                .chars()
+                .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+                .collect();
+            let path = dir.join(format!("{}__{}.csv", self.name, slug));
+            let _ = std::fs::write(path, table.to_csv());
+        }
+        println!("\n[{}] wrote {} csv file(s) to bench_out/", self.name, self.sections.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures() {
+        let mut acc = 0u64;
+        let mut res = time_fn(
+            || {
+                acc = black_box(acc.wrapping_add(1));
+            },
+            100,
+            Duration::from_millis(1),
+        );
+        assert!(res.samples.len() >= 100);
+        assert!(res.mean_ns() >= 0.0);
+        let rep = res.report("noop");
+        assert!(rep.contains("mean="));
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(2500.0), "2.50µs");
+        assert_eq!(fmt_ns(3.5e6), "3.50ms");
+        assert_eq!(fmt_ns(1.2e9), "1.20s");
+    }
+}

@@ -1,0 +1,221 @@
+//! Tiny CLI argument parser (the offline registry has no clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated keys,
+//! and positional arguments, with auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    positional: Vec<String>,
+}
+
+pub struct Cli {
+    program: &'static str,
+    about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli { program, about, specs: vec![] }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_flag { "" } else { " <value>" };
+            let def = match spec.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if spec.is_flag => String::new(),
+                None => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{}{kind}\n      {}{def}\n", spec.name, spec.help));
+        }
+        s
+    }
+
+    /// Parse `argv` (without the program name). Exits with usage on --help.
+    pub fn parse(&self, argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                print!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", self.usage()))?;
+                let val = if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{key} is a flag, no value allowed"));
+                    }
+                    "true".to_string()
+                } else {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} requires a value"))?,
+                    }
+                };
+                args.values.entry(key).or_default().push(val);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        // Fill defaults, check required.
+        for spec in &self.specs {
+            if !args.values.contains_key(spec.name) {
+                match (spec.default, spec.is_flag) {
+                    (Some(d), _) => {
+                        args.values.insert(spec.name.to_string(), vec![d.to_string()]);
+                    }
+                    (None, true) => {
+                        args.values.insert(spec.name.to_string(), vec!["false".to_string()]);
+                    }
+                    (None, false) => {
+                        return Err(format!("missing required --{}\n{}", spec.name, self.usage()))
+                    }
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env(&self) -> Result<Args, String> {
+        self.parse(std::env::args().skip(1))
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("option --{key} was not declared"))
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.values.get(key).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn f64(&self, key: &str) -> f64 {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be a number"))
+    }
+
+    pub fn usize(&self, key: &str) -> usize {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+
+    pub fn u64(&self, key: &str) -> u64 {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list of f64.
+    pub fn f64_list(&self, key: &str) -> Vec<f64> {
+        self.get(key)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad number '{s}'")))
+            .collect()
+    }
+
+    pub fn str_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("rate", "1.5", "arrival rate")
+            .req("trace", "trace name")
+            .flag("verbose", "chatty")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = cli().parse(sv(&["--trace", "alpaca", "--rate=3", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get("trace"), "alpaca");
+        assert_eq!(a.f64("rate"), 3.0);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(sv(&["--trace", "x"])).unwrap();
+        assert_eq!(a.f64("rate"), 1.5);
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(sv(&["--rate", "2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(sv(&["--trace", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = cli().parse(sv(&["--trace", "a,b", "--rate=1,2.5,3"])).unwrap();
+        assert_eq!(a.f64_list("rate"), vec![1.0, 2.5, 3.0]);
+        assert_eq!(a.str_list("trace"), vec!["a", "b"]);
+    }
+}

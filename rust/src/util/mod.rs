@@ -1,0 +1,13 @@
+//! Self-contained substrate utilities.
+//!
+//! The offline crate registry carries only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (clap, serde, criterion, proptest,
+//! rand, tokio) are unavailable. Everything the system needs from them is
+//! implemented here, scoped to exactly what this project uses.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

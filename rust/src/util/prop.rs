@@ -1,0 +1,118 @@
+//! Minimal property-testing kit (the offline registry has no proptest).
+//!
+//! `run_prop(name, cases, |rng| ...)` runs the closure `cases` times with
+//! independent deterministic RNGs. On failure it retries with the same seed
+//! to confirm, then panics with the seed so the case can be replayed:
+//!
+//! ```text
+//! PROP_SEED=0xDEADBEEF cargo test kvc_prop_never_double_allocates
+//! ```
+//!
+//! There is no shrinking; generators should therefore bias toward small
+//! sizes (use [`sized`] helpers) so failures are readable directly.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` random cases. Panics with the replay seed on failure.
+pub fn run_prop(name: &str, cases: usize, mut f: impl FnMut(&mut Rng)) {
+    // Fixed master seed by default => CI-stable; override via PROP_SEED to
+    // replay a specific failing case, or PROP_CASES to crank coverage.
+    let (replay, master_seed) = match std::env::var("PROP_SEED") {
+        Ok(s) => {
+            let s = s.trim_start_matches("0x").to_string();
+            (true, u64::from_str_radix(&s, 16).expect("PROP_SEED must be hex"))
+        }
+        Err(_) => (false, 0x5EED_0000_0000_0000 ^ fxhash(name)),
+    };
+    let cases = std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+
+    if replay {
+        let mut rng = Rng::new(master_seed);
+        f(&mut rng);
+        return;
+    }
+
+    let mut meta = Rng::new(master_seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case}/{cases}: {msg}\n\
+                 replay with: PROP_SEED={case_seed:#018x}"
+            );
+        }
+    }
+}
+
+/// Stable hash of the property name to decorrelate master seeds.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Generator helper: a size in [1, max] biased toward small values
+/// (geometric-ish), so failures stay small without shrinking.
+pub fn sized(rng: &mut Rng, max: usize) -> usize {
+    let r = rng.f64();
+    let x = (r * r * max as f64) as usize; // quadratic bias toward 0
+    x.clamp(1, max.max(1))
+}
+
+/// Generator helper: a Vec of length in [1, max_len] built by `g`.
+pub fn vec_of<T>(rng: &mut Rng, max_len: usize, mut g: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let n = sized(rng, max_len);
+    (0..n).map(|_| g(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("always_true", 50, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with: PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        run_prop("always_false", 10, |rng| {
+            // Fail on a specific draw so some cases pass first.
+            assert!(rng.f64() < 0.5, "draw too large");
+        });
+    }
+
+    #[test]
+    fn sized_within_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let s = sized(&mut rng, 20);
+            assert!((1..=20).contains(&s));
+        }
+    }
+
+    #[test]
+    fn vec_of_builds() {
+        let mut rng = Rng::new(2);
+        let v = vec_of(&mut rng, 10, |r| r.range_u64(0, 5));
+        assert!(!v.is_empty() && v.len() <= 10);
+    }
+}

@@ -1,0 +1,264 @@
+//! Statistics helpers: summaries, percentiles, CDFs, and fixed-width table
+//! printing used by the paper-figure bench drivers.
+
+/// Online accumulator for mean/min/max/count.
+#[derive(Debug, Clone, Default)]
+pub struct Acc {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Acc {
+    pub fn new() -> Self {
+        Acc { n: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Sample container with percentile queries (sorts lazily on demand).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    data: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.data.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
+        self.data.extend(xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f64>() / self.data.len() as f64
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.data.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, p in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = p / 100.0 * (self.data.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.data[lo] * (1.0 - frac) + self.data[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p5(&mut self) -> f64 {
+        self.percentile(5.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Empirical CDF evaluated at `points.len()` equally spaced quantiles;
+    /// returns (value, cumulative_fraction) pairs for figure export.
+    pub fn cdf(&mut self, points: usize) -> Vec<(f64, f64)> {
+        if self.data.is_empty() {
+            return vec![];
+        }
+        self.ensure_sorted();
+        (0..points)
+            .map(|i| {
+                let frac = (i + 1) as f64 / points as f64;
+                let idx = ((frac * self.data.len() as f64).ceil() as usize).min(self.data.len()) - 1;
+                (self.data[idx], frac)
+            })
+            .collect()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+/// Fixed-width ASCII table used by the figure drivers to print the paper's
+/// rows/series in a uniform format (also mirrored to CSV by benchkit).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, label: &str, values: &[f64]) {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| format_sig(*v, 4)));
+        self.row(&cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format with `sig` significant digits (for table cells).
+pub fn format_sig(x: f64, sig: usize) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let decimals = (sig as i32 - 1 - mag).max(0) as usize;
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acc_basics() {
+        let mut a = Acc::new();
+        for x in [1.0, 2.0, 3.0] {
+            a.add(x);
+        }
+        assert_eq!(a.mean(), 2.0);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 3.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        s.extend((1..=100).map(|x| x as f64));
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p95() - 95.05).abs() < 0.01);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let mut s = Samples::new();
+        s.push(7.0);
+        assert_eq!(s.p50(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut s = Samples::new();
+        s.extend([5.0, 1.0, 3.0, 2.0, 4.0]);
+        let cdf = s.cdf(5);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(cdf.last().unwrap().0, 5.0);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new(&["sys", "jct", "tp"]);
+        t.rowf("vllm", &[1.2345678, 100.0]);
+        let s = t.render();
+        assert!(s.contains("vllm"));
+        assert!(t.to_csv().starts_with("sys,jct,tp\n"));
+    }
+
+    #[test]
+    fn sig_format() {
+        assert_eq!(format_sig(1234.5678, 4), "1235");
+        assert_eq!(format_sig(0.0012345, 4), "0.001234");
+        assert_eq!(format_sig(0.0, 4), "0");
+    }
+}

@@ -1,0 +1,60 @@
+//! End-to-end HTTP serving test: boot the std-only HTTP front-end on the
+//! real PJRT model, issue concurrent generate requests, check stats.
+//! Requires `make artifacts` (skips loudly otherwise).
+
+use econoserve::server::http::{http_request, HttpServer};
+
+fn artifacts() -> Option<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir.to_string_lossy().into_owned())
+    } else {
+        eprintln!("SKIP http_serving: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn generate_and_stats_roundtrip() {
+    let Some(dir) = artifacts() else { return };
+    let server = HttpServer::start("127.0.0.1:0", &dir).expect("start server");
+    let addr = server.addr;
+
+    // Health check.
+    let (code, body) = http_request(&addr, "GET", "/health", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("ok"));
+
+    // Three concurrent generate requests (exercises slot batching).
+    let mut handles = Vec::new();
+    for i in 0..3 {
+        handles.push(std::thread::spawn(move || {
+            let req = format!(
+                r#"{{"prompt": [{}, {}, {}], "max_new_tokens": 6}}"#,
+                10 + i,
+                20 + i,
+                30 + i
+            );
+            http_request(&addr, "POST", "/v1/generate", &req).unwrap()
+        }));
+    }
+    for h in handles {
+        let (code, body) = h.join().unwrap();
+        assert_eq!(code, 200, "{body}");
+        assert!(body.contains("\"tokens\""), "{body}");
+        assert!(body.contains("\"latency_s\""), "{body}");
+    }
+
+    // Stats reflect the completions.
+    let (code, body) = http_request(&addr, "GET", "/v1/stats", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("\"completed\":3"), "{body}");
+
+    // Bad requests are rejected, not crashed.
+    let (code, _) = http_request(&addr, "POST", "/v1/generate", "{}").unwrap();
+    assert_eq!(code, 400);
+    let (code, _) = http_request(&addr, "GET", "/nope", "").unwrap();
+    assert_eq!(code, 404);
+
+    server.shutdown();
+}

@@ -1,0 +1,84 @@
+//! Integration test: the rust PJRT runtime must reproduce the python
+//! stack's golden transcript (greedy decode) from the AOT artifacts.
+//!
+//! Requires `make artifacts` (skipped with a loud message otherwise).
+
+use econoserve::runtime::{load_golden, PjrtModel};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP pjrt_golden: run `make artifacts` first ({:?} missing)", dir);
+        None
+    }
+}
+
+#[test]
+fn golden_transcript_matches_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let golden = load_golden(&dir).expect("golden.json");
+    let mut model = PjrtModel::load(&dir).expect("load artifacts");
+
+    // Prefill the golden prompt.
+    let (logits, state_1) = model.prefill(&golden.prompt).expect("prefill");
+    let l2: f64 = logits.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt();
+    let rel = (l2 - golden.prefill_logits_l2).abs() / golden.prefill_logits_l2.max(1e-9);
+    assert!(rel < 1e-3, "prefill logits L2 {l2} vs python {}", golden.prefill_logits_l2);
+
+    // Greedy decode must reproduce the exact token ids.
+    model.insert(&state_1, 0).expect("insert");
+    let b = model.dims.decode_slots;
+    let mut lens = vec![0i32; b];
+    let mut toks = vec![0i32; b];
+    let mut cur = PjrtModel::argmax(&logits);
+    let mut got = vec![cur];
+    let mut len = golden.prompt_len as i32;
+    for _ in 1..golden.steps {
+        lens[0] = len;
+        toks[0] = cur;
+        let logits = model.decode_step(&lens, &toks).expect("decode");
+        cur = PjrtModel::argmax(&logits[0]);
+        got.push(cur);
+        len += 1;
+    }
+    assert_eq!(got, golden.generated, "greedy tokens diverge from python");
+}
+
+#[test]
+fn dead_slots_do_not_disturb_live_ones() {
+    let Some(dir) = artifacts_dir() else { return };
+    let golden = load_golden(&dir).expect("golden.json");
+    let mut model = PjrtModel::load(&dir).expect("load artifacts");
+
+    // Run the same transcript but with a second live slot occupied by a
+    // different prompt: slot 0's tokens must be unchanged.
+    let (logits0, s0) = model.prefill(&golden.prompt).expect("prefill 0");
+    let other: Vec<i32> = golden.prompt.iter().map(|t| (t % 97) + 1).collect();
+    let (logits1, s1) = model.prefill(&other).expect("prefill 1");
+    model.insert(&s0, 0).expect("insert 0");
+    model.insert(&s1, 1).expect("insert 1");
+
+    let b = model.dims.decode_slots;
+    let mut lens = vec![0i32; b];
+    let mut toks = vec![0i32; b];
+    let mut cur0 = PjrtModel::argmax(&logits0);
+    let mut cur1 = PjrtModel::argmax(&logits1);
+    let mut got = vec![cur0];
+    let mut len0 = golden.prompt_len as i32;
+    let mut len1 = other.len() as i32;
+    for _ in 1..golden.steps {
+        lens[0] = len0;
+        toks[0] = cur0;
+        lens[1] = len1;
+        toks[1] = cur1;
+        let logits = model.decode_step(&lens, &toks).expect("decode");
+        cur0 = PjrtModel::argmax(&logits[0]);
+        cur1 = PjrtModel::argmax(&logits[1]);
+        got.push(cur0);
+        len0 += 1;
+        len1 += 1;
+    }
+    assert_eq!(got, golden.generated, "batch interference detected");
+}
