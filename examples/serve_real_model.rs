@@ -5,11 +5,14 @@
 //!
 //!     cargo run --release --example serve_real_model
 //!
-//! Reports per-request latency, TTFT, TBT and throughput; recorded in
-//! EXPERIMENTS.md §End-to-end.
+//! Demonstrates the unified request-lifecycle API: admission-controlled
+//! `submit(SubmitOptions) -> RequestHandle`, per-token streaming events,
+//! and structured `FinishReason` terminals. Reports per-request latency,
+//! TTFT, TBT and throughput; recorded in EXPERIMENTS.md §End-to-end.
 
+use econoserve::api::{FinishReason, StreamEvent, SubmitOptions};
 use econoserve::runtime::PjrtModel;
-use econoserve::server::{RealServer, ServeRequest};
+use econoserve::server::RealServer;
 use econoserve::trace::{TraceGen, TraceSpec};
 use econoserve::util::rng::Rng;
 
@@ -33,21 +36,18 @@ fn main() -> anyhow::Result<()> {
     let gen = TraceGen::new(TraceSpec::sharegpt());
     let items = gen.generate(n, 4.0, (dims.max_seq - 8) as u32, 7);
     let mut rng = Rng::new(11);
-    let scale = |len: u32, cap: usize| -> usize {
-        ((len as usize).min(cap)).max(2)
-    };
-    for (i, it) in items.iter().enumerate() {
+    let scale = |len: u32, cap: usize| -> usize { ((len as usize).min(cap)).max(2) };
+    let mut handles = Vec::new();
+    for it in items.iter() {
         let plen = scale(it.prompt_len, dims.max_prompt);
         let rl = scale(it.true_rl, dims.max_seq - plen - 2);
         let prompt: Vec<i32> =
             (0..plen).map(|_| rng.range_u64(1, dims.vocab as u64 - 1) as i32).collect();
-        server.submit(ServeRequest {
-            id: i as u64,
-            prompt,
-            max_new_tokens: rl,
-            predicted_rl: rl as u32,
-            slo_budget: 60.0,
-        });
+        let opts = SubmitOptions::new(prompt, rl).with_predicted_rl(rl as u32).with_slo(60.0);
+        match server.submit(opts) {
+            Ok(h) => handles.push(h),
+            Err(e) => eprintln!("rejected at admission: {e}"),
+        }
     }
 
     server.run_to_completion()?;
@@ -70,9 +70,30 @@ fn main() -> anyhow::Result<()> {
         st.mean_batch_occupancy,
         dims.decode_slots
     );
+
+    // Consume one handle's event stream to show per-token streaming: the
+    // events were pushed as each decode iteration produced its token.
+    if let Some(h) = handles.into_iter().next() {
+        let id = h.id();
+        let mut tokens = 0usize;
+        let mut finish = FinishReason::Error;
+        for ev in h {
+            match ev {
+                StreamEvent::Token(_) => tokens += 1,
+                StreamEvent::Finished(c) => finish = c.finish,
+            }
+        }
+        println!("  req {id}: {tokens} streamed token events, finish={finish}");
+    }
     // A few sample generations to show real tokens flow end to end.
-    for r in server.responses().iter().take(3) {
-        println!("  req {} -> {} tokens, first 8: {:?}", r.id, r.tokens.len(), &r.tokens[..r.tokens.len().min(8)]);
+    for c in server.finished().iter().take(3) {
+        println!(
+            "  req {} -> {} tokens ({}), first 8: {:?}",
+            c.id,
+            c.tokens.len(),
+            c.finish,
+            &c.tokens[..c.tokens.len().min(8)]
+        );
     }
     Ok(())
 }

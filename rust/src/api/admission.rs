@@ -1,0 +1,180 @@
+//! Admission control: the bounded front door both serving paths share.
+//!
+//! Production SLO-aware systems shed load at admission rather than let an
+//! unbounded queue convert overload into universal deadline misses. The
+//! controller applies, in order:
+//!  1. request validation (non-empty prompt, positive token budget,
+//!     prompt within the prefill window) — HTTP 400;
+//!  2. a bound on requests in flight (queued + executing) — HTTP 429;
+//!  3. SLO-infeasibility: a request whose budget is below its best-case
+//!     service time on an idle engine can never meet its deadline, so
+//!     admitting it only burns capacity other requests could use —
+//!     HTTP 503.
+
+use super::error::ServeError;
+use super::types::SubmitOptions;
+
+/// Front-door limits. `Copy` so experiment drivers can embed it in their
+/// run configs.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Maximum requests in flight (waiting + executing); 0 = unbounded.
+    pub max_inflight: usize,
+    /// Longest admissible prompt in tokens; 0 = no check (the engine
+    /// substitutes its prefill window when it builds the controller).
+    pub max_prompt: usize,
+    /// Estimated seconds per generated token on an otherwise idle engine,
+    /// used for the SLO-infeasibility check; 0 disables it.
+    pub est_token_time: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { max_inflight: 256, max_prompt: 0, est_token_time: 0.0 }
+    }
+}
+
+/// Stateless admission decisions over an [`AdmissionConfig`].
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionController { cfg }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Low-level decision from request shape alone — the simulation path
+    /// uses this directly since it has no `SubmitOptions`.
+    /// `slo_budget` is seconds of slack until the deadline.
+    pub fn decide(
+        &self,
+        inflight: usize,
+        prompt_len: usize,
+        max_new_tokens: usize,
+        slo_budget: f64,
+    ) -> Result<(), ServeError> {
+        if prompt_len == 0 {
+            return Err(ServeError::InvalidRequest("'prompt' must be non-empty".into()));
+        }
+        if max_new_tokens == 0 {
+            return Err(ServeError::InvalidRequest("'max_new_tokens' must be >= 1".into()));
+        }
+        if self.cfg.max_prompt > 0 && prompt_len > self.cfg.max_prompt {
+            return Err(ServeError::PromptTooLong { len: prompt_len, max: self.cfg.max_prompt });
+        }
+        if self.cfg.max_inflight > 0 && inflight >= self.cfg.max_inflight {
+            return Err(ServeError::QueueFull { inflight, limit: self.cfg.max_inflight });
+        }
+        if self.cfg.est_token_time > 0.0 && slo_budget.is_finite() {
+            let needed_s = max_new_tokens as f64 * self.cfg.est_token_time;
+            if needed_s > slo_budget {
+                return Err(ServeError::SloInfeasible { needed_s, budget_s: slo_budget });
+            }
+        }
+        Ok(())
+    }
+
+    /// Admission decision for one submission given the engine's current
+    /// in-flight count. The SLO-feasibility estimate uses the client's
+    /// predicted RL when provided (the budget cap is only an upper
+    /// bound on the true response length), falling back to the budget.
+    pub fn check(&self, inflight: usize, opts: &SubmitOptions) -> Result<(), ServeError> {
+        let est_tokens = if opts.predicted_rl > 0 {
+            (opts.predicted_rl as usize).min(opts.max_new_tokens)
+        } else {
+            opts.max_new_tokens
+        };
+        // Shape validation still uses the real token budget (a zero
+        // budget is invalid regardless of the prediction).
+        if opts.max_new_tokens == 0 {
+            return Err(ServeError::InvalidRequest("'max_new_tokens' must be >= 1".into()));
+        }
+        self.decide(inflight, opts.prompt.len(), est_tokens, opts.slo_budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(max_inflight: usize, max_prompt: usize, est: f64) -> AdmissionController {
+        AdmissionController::new(AdmissionConfig {
+            max_inflight,
+            max_prompt,
+            est_token_time: est,
+        })
+    }
+
+    #[test]
+    fn validates_request_shape() {
+        let c = ctl(8, 16, 0.0);
+        assert!(matches!(
+            c.decide(0, 0, 4, f64::INFINITY),
+            Err(ServeError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            c.decide(0, 4, 0, f64::INFINITY),
+            Err(ServeError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            c.decide(0, 17, 4, f64::INFINITY),
+            Err(ServeError::PromptTooLong { len: 17, max: 16 })
+        ));
+        assert!(c.decide(0, 16, 4, f64::INFINITY).is_ok());
+    }
+
+    #[test]
+    fn bounds_inflight_queue() {
+        let c = ctl(2, 0, 0.0);
+        assert!(c.decide(0, 4, 4, f64::INFINITY).is_ok());
+        assert!(c.decide(1, 4, 4, f64::INFINITY).is_ok());
+        assert!(matches!(
+            c.decide(2, 4, 4, f64::INFINITY),
+            Err(ServeError::QueueFull { inflight: 2, limit: 2 })
+        ));
+        // Unbounded when limit is 0.
+        assert!(ctl(0, 0, 0.0).decide(10_000, 4, 4, f64::INFINITY).is_ok());
+    }
+
+    #[test]
+    fn sheds_infeasible_slo() {
+        let c = ctl(0, 0, 0.01); // 10 ms/token best case
+        // 100 tokens need >= 1 s; a 0.5 s budget can never be met.
+        assert!(matches!(
+            c.decide(0, 4, 100, 0.5),
+            Err(ServeError::SloInfeasible { .. })
+        ));
+        assert!(c.decide(0, 4, 100, 2.0).is_ok());
+        // Best-effort requests (infinite budget) are never shed on SLO.
+        assert!(c.decide(0, 4, 100, f64::INFINITY).is_ok());
+    }
+
+    #[test]
+    fn check_uses_submit_options() {
+        use crate::api::types::SubmitOptions;
+        let c = ctl(1, 8, 0.0);
+        let opts = SubmitOptions::new(vec![1, 2], 4);
+        assert!(c.check(0, &opts).is_ok());
+        assert!(matches!(c.check(1, &opts), Err(ServeError::QueueFull { .. })));
+    }
+
+    #[test]
+    fn check_prefers_predicted_rl_for_slo_estimate() {
+        use crate::api::types::SubmitOptions;
+        let c = ctl(0, 0, 0.01); // 10 ms/token best case
+        // Budget cap says 400 tokens (4 s best case), prediction says 20
+        // (0.2 s): a 1 s SLO is feasible under the prediction.
+        let opts = SubmitOptions::new(vec![1], 400).with_predicted_rl(20).with_slo(1.0);
+        assert!(c.check(0, &opts).is_ok());
+        // Without a prediction the full budget is assumed and the same
+        // SLO is shed as infeasible.
+        let opts = SubmitOptions::new(vec![1], 400).with_predicted_rl(0).with_slo(1.0);
+        assert!(matches!(c.check(0, &opts), Err(ServeError::SloInfeasible { .. })));
+    }
+}

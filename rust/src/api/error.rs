@@ -1,0 +1,130 @@
+//! Structured serving-error taxonomy with a stable HTTP mapping.
+
+use super::types::FinishReason;
+
+/// Why the serving front-end refused or failed a request. Every variant
+/// has a stable `kind()` string (machine-readable) and an HTTP status.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Malformed request: bad JSON, missing fields, empty prompt, zero
+    /// token budget. HTTP 400.
+    InvalidRequest(String),
+    /// Prompt exceeds the engine's prefill window. HTTP 400.
+    PromptTooLong { len: usize, max: usize },
+    /// Admission queue at capacity — load shed. HTTP 429.
+    QueueFull { inflight: usize, limit: usize },
+    /// The SLO budget cannot be met even on an idle engine, so admitting
+    /// the request would only waste capacity. HTTP 503.
+    SloInfeasible { needed_s: f64, budget_s: f64 },
+    /// The request was cancelled before completion. HTTP 499 (nginx's
+    /// "client closed request" convention).
+    Cancelled,
+    /// The engine thread is gone. HTTP 503.
+    EngineDown,
+    /// Unexpected engine-side failure. HTTP 500.
+    Internal(String),
+}
+
+impl ServeError {
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServeError::InvalidRequest(_) | ServeError::PromptTooLong { .. } => 400,
+            ServeError::QueueFull { .. } => 429,
+            ServeError::SloInfeasible { .. } | ServeError::EngineDown => 503,
+            ServeError::Cancelled => 499,
+            ServeError::Internal(_) => 500,
+        }
+    }
+
+    /// Stable machine-readable discriminator for clients.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::InvalidRequest(_) => "invalid_request",
+            ServeError::PromptTooLong { .. } => "prompt_too_long",
+            ServeError::QueueFull { .. } => "queue_full",
+            ServeError::SloInfeasible { .. } => "slo_infeasible",
+            ServeError::Cancelled => "cancelled",
+            ServeError::EngineDown => "engine_down",
+            ServeError::Internal(_) => "internal",
+        }
+    }
+
+    /// The terminal lifecycle state this error corresponds to.
+    pub fn finish_reason(&self) -> FinishReason {
+        match self {
+            ServeError::Cancelled => FinishReason::Cancelled,
+            ServeError::InvalidRequest(_)
+            | ServeError::PromptTooLong { .. }
+            | ServeError::QueueFull { .. }
+            | ServeError::SloInfeasible { .. } => FinishReason::Rejected,
+            ServeError::EngineDown | ServeError::Internal(_) => FinishReason::Error,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            ServeError::PromptTooLong { len, max } => {
+                write!(f, "prompt of {len} tokens exceeds the {max}-token prefill window")
+            }
+            ServeError::QueueFull { inflight, limit } => {
+                write!(f, "admission queue full ({inflight} in flight, limit {limit})")
+            }
+            ServeError::SloInfeasible { needed_s, budget_s } => write!(
+                f,
+                "SLO budget {budget_s:.3}s is below the {needed_s:.3}s best-case service time"
+            ),
+            ServeError::Cancelled => write!(f, "request cancelled"),
+            ServeError::EngineDown => write!(f, "engine unavailable"),
+            ServeError::Internal(msg) => write!(f, "internal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_status_mapping() {
+        assert_eq!(ServeError::InvalidRequest("x".into()).http_status(), 400);
+        assert_eq!(ServeError::PromptTooLong { len: 9, max: 8 }.http_status(), 400);
+        assert_eq!(ServeError::QueueFull { inflight: 4, limit: 4 }.http_status(), 429);
+        assert_eq!(
+            ServeError::SloInfeasible { needed_s: 2.0, budget_s: 1.0 }.http_status(),
+            503
+        );
+        assert_eq!(ServeError::Cancelled.http_status(), 499);
+        assert_eq!(ServeError::EngineDown.http_status(), 503);
+        assert_eq!(ServeError::Internal("x".into()).http_status(), 500);
+    }
+
+    #[test]
+    fn kinds_are_stable_and_distinct() {
+        let kinds = [
+            ServeError::InvalidRequest("x".into()).kind(),
+            ServeError::PromptTooLong { len: 9, max: 8 }.kind(),
+            ServeError::QueueFull { inflight: 4, limit: 4 }.kind(),
+            ServeError::SloInfeasible { needed_s: 2.0, budget_s: 1.0 }.kind(),
+            ServeError::Cancelled.kind(),
+            ServeError::EngineDown.kind(),
+            ServeError::Internal("x".into()).kind(),
+        ];
+        let set: std::collections::BTreeSet<_> = kinds.iter().collect();
+        assert_eq!(set.len(), kinds.len());
+    }
+
+    #[test]
+    fn rejections_map_to_rejected_finish() {
+        assert_eq!(
+            ServeError::QueueFull { inflight: 1, limit: 1 }.finish_reason(),
+            FinishReason::Rejected
+        );
+        assert_eq!(ServeError::Cancelled.finish_reason(), FinishReason::Cancelled);
+        assert_eq!(ServeError::EngineDown.finish_reason(), FinishReason::Error);
+    }
+}

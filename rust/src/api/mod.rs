@@ -1,0 +1,60 @@
+//! Unified request-lifecycle serving API shared by both back-ends.
+//!
+//! EconoServe has two engines: the calibrated discrete-event simulator
+//! (driven by [`crate::coordinator`]) and the real PJRT model server
+//! ([`crate::server`]). Before this module existed they spoke different
+//! dialects — the simulator's `Scheduler::step(world) -> Batch` seam
+//! versus the real server's blocking submit/drain channels — so clients
+//! could not stream tokens, cancel a request, or be load-shed, and the
+//! paper's ordering policy only ran on the simulated path.
+//!
+//! This module defines the request lifecycle once, as a typed state
+//! machine, and both engines implement it:
+//!
+//! ```text
+//!                submit(SubmitOptions)
+//!                        |
+//!            AdmissionController::check
+//!              /                    \
+//!          Err(ServeError)        Ok(RequestHandle)
+//!          [Rejected: 4xx/5xx]        |
+//!                                  Queued ----cancel----> Finished(Cancelled)
+//!                                     |
+//!                        ordering::QueuePolicy picks
+//!                                     |
+//!                                  Running --per token--> StreamEvent::Token
+//!                                   |   \----cancel/drop-> Finished(Cancelled)
+//!                                   |
+//!                        StreamEvent::Finished(Completion)
+//!                        [Complete | LengthCap | Error]
+//! ```
+//!
+//! The pieces:
+//!  * [`SubmitOptions`] — everything a client states up front: prompt,
+//!    token budget, predicted RL (for ordering), SLO budget, priority.
+//!  * [`AdmissionController`] — the bounded front door: queue-depth and
+//!    SLO-infeasibility shedding, shared by the HTTP server and the
+//!    simulation coordinator (`run_admitted`).
+//!  * [`RequestHandle`] — a channel-backed iterator of [`StreamEvent`]s:
+//!    one [`TokenEvent`] per generated token, then a terminal
+//!    [`Completion`] carrying the [`FinishReason`].
+//!  * [`CancelToken`] — cooperative cancellation; the engine frees the
+//!    request's decode slot at the next iteration boundary. Dropping the
+//!    receiving half of a handle (e.g. an HTTP client disconnect) cancels
+//!    implicitly; [`RequestHandle::detach`] opts out for fire-and-forget
+//!    submission.
+//!  * [`ServeError`] — the structured error taxonomy, each variant with a
+//!    stable `kind()` string and an HTTP status mapping.
+//!
+//! This module is engine-agnostic and std-only: it compiles (and is
+//! tested) without the PJRT backend.
+
+pub mod admission;
+pub mod error;
+pub mod stream;
+pub mod types;
+
+pub use admission::{AdmissionConfig, AdmissionController};
+pub use error::ServeError;
+pub use stream::{channel, CancelToken, EventSink, RequestHandle};
+pub use types::{Completion, FinishReason, StreamEvent, SubmitOptions, TokenEvent};

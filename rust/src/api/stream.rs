@@ -1,0 +1,237 @@
+//! Channel-backed token streaming and cooperative cancellation.
+//!
+//! [`channel`] creates the two halves of one request's event stream: the
+//! engine keeps the [`EventSink`] (inside its queue entry / decode slot)
+//! and pushes a [`StreamEvent`] per generated token; the client keeps the
+//! [`RequestHandle`] and consumes events as a blocking iterator.
+//!
+//! Cancellation is cooperative and flows both ways:
+//!  * client → engine: [`RequestHandle::cancel`] (or any clone of its
+//!    [`CancelToken`]) raises a flag the engine checks at every iteration
+//!    boundary, freeing the decode slot mid-generation;
+//!  * implicit: if the receiving half is dropped (an HTTP client
+//!    disconnect), the engine's next `send_token` fails and the request
+//!    is treated as cancelled — unless the handle was [`detach`]ed
+//!    first, which marks the request fire-and-forget.
+//!
+//! [`detach`]: RequestHandle::detach
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use super::error::ServeError;
+use super::types::{Completion, StreamEvent, TokenEvent};
+
+/// Shared lifecycle flags between the handle and the engine sink.
+#[derive(Debug, Default)]
+struct Flags {
+    cancelled: AtomicBool,
+    detached: AtomicBool,
+}
+
+/// Cloneable cancellation signal for one request. Cheap to clone and
+/// `Send`, so a watchdog thread (or an HTTP connection handler) can
+/// cancel while another thread consumes the stream.
+#[derive(Debug, Clone)]
+pub struct CancelToken(Arc<Flags>);
+
+impl CancelToken {
+    pub fn cancel(&self) {
+        self.0.cancelled.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.cancelled.load(Ordering::Acquire)
+    }
+}
+
+/// Create the event stream for one request: engine-side sink + client
+/// handle.
+pub fn channel(id: u64) -> (EventSink, RequestHandle) {
+    let flags = Arc::new(Flags::default());
+    let (tx, rx) = mpsc::channel();
+    (
+        EventSink { tx, flags: flags.clone() },
+        RequestHandle { id, rx, flags },
+    )
+}
+
+/// Engine-side half: pushes events toward the client.
+pub struct EventSink {
+    tx: mpsc::Sender<StreamEvent>,
+    flags: Arc<Flags>,
+}
+
+impl EventSink {
+    /// True once the client cancelled; the engine should free the slot at
+    /// the next iteration boundary.
+    pub fn cancelled(&self) -> bool {
+        self.flags.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Deliver one token. Returns `false` when the client is gone (the
+    /// receiving half was dropped without `detach`), which the engine
+    /// must treat as a cancellation; the flag is raised as a side effect
+    /// so subsequent `cancelled()` checks agree.
+    pub fn send_token(&self, index: u32, token: i32) -> bool {
+        if self.tx.send(StreamEvent::Token(TokenEvent { index, token })).is_ok() {
+            return true;
+        }
+        if self.flags.detached.load(Ordering::Acquire) {
+            return true; // fire-and-forget: discard tokens, keep generating
+        }
+        self.flags.cancelled.store(true, Ordering::Release);
+        false
+    }
+
+    /// Deliver the terminal event. Send failures are ignored: a departed
+    /// client cannot observe its own completion.
+    pub fn finish(&self, completion: Completion) {
+        let _ = self.tx.send(StreamEvent::Finished(completion));
+    }
+}
+
+/// Client-side half: a channel-backed iterator over one request's
+/// [`StreamEvent`]s. The stream ends with exactly one
+/// [`StreamEvent::Finished`]; iteration then yields `None` once the
+/// engine releases its sink.
+pub struct RequestHandle {
+    id: u64,
+    rx: mpsc::Receiver<StreamEvent>,
+    flags: Arc<Flags>,
+}
+
+impl RequestHandle {
+    /// Engine-assigned request id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation; the engine frees the request's slot at the
+    /// next iteration boundary and finishes the stream with
+    /// `FinishReason::Cancelled`.
+    pub fn cancel(&self) {
+        self.flags.cancelled.store(true, Ordering::Release);
+    }
+
+    /// A cloneable cancellation token for cross-thread cancellation.
+    pub fn cancel_token(&self) -> CancelToken {
+        CancelToken(self.flags.clone())
+    }
+
+    /// Blocking receive of the next event; `None` when the stream ended.
+    pub fn recv(&self) -> Option<StreamEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<StreamEvent> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Mark the request fire-and-forget and drop the receiving half:
+    /// generation continues, tokens are discarded, and the completion is
+    /// recorded engine-side only.
+    pub fn detach(self) {
+        self.flags.detached.store(true, Ordering::Release);
+    }
+
+    /// Block until the terminal event and return it, discarding token
+    /// events (the [`Completion`] carries the full token list anyway).
+    /// `Err(EngineDown)` if the engine died without finishing the stream.
+    pub fn wait(self) -> Result<Completion, ServeError> {
+        loop {
+            match self.rx.recv() {
+                Ok(StreamEvent::Finished(c)) => return Ok(c),
+                Ok(StreamEvent::Token(_)) => continue,
+                Err(_) => return Err(ServeError::EngineDown),
+            }
+        }
+    }
+}
+
+impl Iterator for RequestHandle {
+    type Item = StreamEvent;
+
+    fn next(&mut self) -> Option<StreamEvent> {
+        self.rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::types::FinishReason;
+
+    fn completion(id: u64, finish: FinishReason) -> Completion {
+        Completion {
+            id,
+            finish,
+            tokens: vec![7],
+            ttft_s: 0.01,
+            latency_s: 0.02,
+            mean_tbt_s: 0.005,
+            met_slo: finish.is_success(),
+        }
+    }
+
+    #[test]
+    fn tokens_then_finish_flow_through() {
+        let (sink, handle) = channel(3);
+        assert!(sink.send_token(0, 11));
+        assert!(sink.send_token(1, 12));
+        sink.finish(completion(3, FinishReason::Complete));
+        drop(sink);
+        let events: Vec<StreamEvent> = handle.collect();
+        assert_eq!(events.len(), 3);
+        match &events[0] {
+            StreamEvent::Token(t) => assert_eq!((t.index, t.token), (0, 11)),
+            other => panic!("expected token, got {other:?}"),
+        }
+        match &events[2] {
+            StreamEvent::Finished(c) => assert_eq!(c.finish, FinishReason::Complete),
+            other => panic!("expected finish, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancel_is_visible_to_sink_from_any_clone() {
+        let (sink, handle) = channel(1);
+        assert!(!sink.cancelled());
+        let token = handle.cancel_token();
+        token.cancel();
+        assert!(sink.cancelled());
+        assert!(token.is_cancelled());
+    }
+
+    #[test]
+    fn dropped_handle_cancels_on_next_send() {
+        let (sink, handle) = channel(1);
+        drop(handle);
+        assert!(!sink.cancelled(), "drop alone is not observed until a send");
+        assert!(!sink.send_token(0, 5), "send to a dropped handle must fail");
+        assert!(sink.cancelled(), "failed send raises the cancel flag");
+    }
+
+    #[test]
+    fn detached_handle_does_not_cancel() {
+        let (sink, handle) = channel(1);
+        handle.detach();
+        assert!(sink.send_token(0, 5), "detached: send failures are ignored");
+        assert!(!sink.cancelled());
+    }
+
+    #[test]
+    fn wait_returns_completion_or_engine_down() {
+        let (sink, handle) = channel(9);
+        sink.send_token(0, 1);
+        sink.finish(completion(9, FinishReason::LengthCap));
+        let c = handle.wait().unwrap();
+        assert_eq!(c.id, 9);
+        assert_eq!(c.finish, FinishReason::LengthCap);
+
+        let (sink2, handle2) = channel(10);
+        drop(sink2); // engine died without finishing
+        assert!(matches!(handle2.wait(), Err(ServeError::EngineDown)));
+    }
+}

@@ -1,0 +1,155 @@
+//! Request-lifecycle value types: what goes in ([`SubmitOptions`]), what
+//! streams out ([`StreamEvent`]/[`TokenEvent`]), and how a request ends
+//! ([`FinishReason`]/[`Completion`]).
+
+/// Everything a client specifies when submitting one generation request.
+///
+/// The demo model has no tokenizer — callers supply token ids in
+/// `[1, vocab)`.
+#[derive(Debug, Clone)]
+pub struct SubmitOptions {
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Stop after this many generated tokens (the trace's true RL).
+    pub max_new_tokens: usize,
+    /// Predicted response length, used by ordering (GT factors) and as
+    /// the SLO-feasibility service estimate at admission; 0 = unknown
+    /// (admission then assumes the full `max_new_tokens` budget).
+    pub predicted_rl: u32,
+    /// Seconds from submission to the JCT deadline (SLO); `INFINITY` =
+    /// best-effort.
+    pub slo_budget: f64,
+    /// Explicit priority class, 0 = most urgent. Ranks above every other
+    /// ordering factor (deadline slack, occupied KVC, length).
+    pub priority: u8,
+}
+
+impl SubmitOptions {
+    /// Best-effort request: no SLO, default priority, predicted RL taken
+    /// from the token budget.
+    pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        SubmitOptions {
+            prompt,
+            max_new_tokens,
+            predicted_rl: max_new_tokens as u32,
+            slo_budget: f64::INFINITY,
+            priority: 0,
+        }
+    }
+
+    pub fn with_slo(mut self, budget_s: f64) -> Self {
+        self.slo_budget = budget_s;
+        self
+    }
+
+    pub fn with_predicted_rl(mut self, rl: u32) -> Self {
+        self.predicted_rl = rl;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// How a request's lifecycle ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full `max_new_tokens` budget.
+    Complete,
+    /// Hit the engine's context-length cap before the token budget.
+    LengthCap,
+    /// Cancelled by the client (explicitly or by dropping the handle /
+    /// connection) before completion.
+    Cancelled,
+    /// Shed by the [`super::AdmissionController`] — never serviced.
+    Rejected,
+    /// Engine-side failure.
+    Error,
+}
+
+impl FinishReason {
+    /// True for the terminal states that delivered a usable response.
+    pub fn is_success(self) -> bool {
+        matches!(self, FinishReason::Complete | FinishReason::LengthCap)
+    }
+
+    /// Stable wire name (HTTP responses, logs).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Complete => "complete",
+            FinishReason::LengthCap => "length_cap",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Rejected => "rejected",
+            FinishReason::Error => "error",
+        }
+    }
+}
+
+impl std::fmt::Display for FinishReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One generated token, delivered as it is produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenEvent {
+    /// 0-based index in the generated sequence (0 = the token the prefill
+    /// itself emits, ORCA-style).
+    pub index: u32,
+    pub token: i32,
+}
+
+/// Terminal record of one request, with timing.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub finish: FinishReason,
+    /// All tokens generated before the terminal state (partial output for
+    /// `Cancelled`).
+    pub tokens: Vec<i32>,
+    /// Time to first token (s); 0 if none was produced.
+    pub ttft_s: f64,
+    /// Submission-to-terminal latency (s).
+    pub latency_s: f64,
+    /// Mean time between tokens (s).
+    pub mean_tbt_s: f64,
+    /// Finished successfully within its SLO budget.
+    pub met_slo: bool,
+}
+
+/// What a [`super::RequestHandle`] yields: a stream of tokens, closed by
+/// exactly one `Finished`.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    Token(TokenEvent),
+    Finished(Completion),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_reason_success_and_names() {
+        assert!(FinishReason::Complete.is_success());
+        assert!(FinishReason::LengthCap.is_success());
+        assert!(!FinishReason::Cancelled.is_success());
+        assert!(!FinishReason::Rejected.is_success());
+        assert!(!FinishReason::Error.is_success());
+        assert_eq!(FinishReason::LengthCap.as_str(), "length_cap");
+        assert_eq!(FinishReason::Cancelled.to_string(), "cancelled");
+    }
+
+    #[test]
+    fn submit_options_builder() {
+        let o = SubmitOptions::new(vec![1, 2, 3], 8).with_slo(2.5).with_priority(3);
+        assert_eq!(o.prompt.len(), 3);
+        assert_eq!(o.max_new_tokens, 8);
+        assert_eq!(o.predicted_rl, 8);
+        assert_eq!(o.slo_budget, 2.5);
+        assert_eq!(o.priority, 3);
+    }
+}

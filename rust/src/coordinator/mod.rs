@@ -14,6 +14,7 @@
 
 use std::time::Instant;
 
+use crate::api::AdmissionController;
 use crate::core::world::World;
 use crate::engine::Engine;
 use crate::metrics::{summarize, Summary};
@@ -47,17 +48,37 @@ pub struct RunResult {
     pub end_time: f64,
     /// Wall-clock seconds the run took (host side).
     pub wall_time: f64,
+    /// Requests shed by admission control (0 unless `run_admitted` is
+    /// used with a controller).
+    pub rejected: usize,
 }
 
-/// Drive `world` with `sched` and `engine` until completion or limits.
+/// Drive `world` with `sched` and `engine` until completion or limits,
+/// admitting every arrival (the paper's setup).
 pub fn run(
     world: &mut World,
     sched: &mut dyn Scheduler,
     engine: &dyn Engine,
     limits: RunLimits,
 ) -> RunResult {
+    run_admitted(world, sched, engine, limits, None)
+}
+
+/// As [`run`], but with the same [`AdmissionController`] front door the
+/// real serving path uses: each new arrival is admitted or shed before
+/// the scheduler ever sees it (queue-depth bound + SLO infeasibility).
+/// Shed requests complete immediately as SLO misses and are counted in
+/// `RunResult::rejected`.
+pub fn run_admitted(
+    world: &mut World,
+    sched: &mut dyn Scheduler,
+    engine: &dyn Engine,
+    limits: RunLimits,
+    admission: Option<&AdmissionController>,
+) -> RunResult {
     let wall_start = Instant::now();
     let mut iters = 0u64;
+    let mut rejected = 0usize;
     // Stall detection: if no batch executes for this much SIMULATED time
     // while work remains, the scheduler is stuck (bug), not waiting.
     const STALL_HORIZON: f64 = 120.0;
@@ -68,7 +89,10 @@ pub fn run(
         {
             break;
         }
-        world.drain_arrivals();
+        let newly = world.drain_arrivals();
+        if let Some(adm) = admission {
+            rejected += shed_new_arrivals(world, adm, newly);
+        }
 
         let t0 = Instant::now();
         let batch = sched.step(world);
@@ -110,7 +134,50 @@ pub fn run(
         summary: summarize(&world.recs, &world.col, end_time),
         end_time,
         wall_time: wall_start.elapsed().as_secs_f64(),
+        rejected,
     }
+}
+
+/// Apply the admission decision to the `newly` arrivals at the tail of
+/// the inbox. The in-flight count matches the real path's definition —
+/// every admitted request still in the system (queued anywhere, incl.
+/// scheduler-internal queues, or executing), not just the coordinator
+/// inbox. The SLO budget is the remaining slack to the deadline; the
+/// service estimate uses the PREDICTED response length — the controller,
+/// like the scheduler, never sees the true RL.
+fn shed_new_arrivals(world: &mut World, adm: &AdmissionController, newly: usize) -> usize {
+    if newly == 0 {
+        return 0;
+    }
+    // Arrived-and-unfinished requests, including the new arrivals
+    // themselves; subtract the latter to get the load ahead of them.
+    let in_system = world
+        .recs
+        .iter()
+        .filter(|r| r.req.arrival <= world.clock && !r.is_done())
+        .count();
+    let mut inflight = in_system - newly;
+    let mut shed = 0usize;
+    let mut i = world.inbox.len() - newly;
+    while i < world.inbox.len() {
+        let id = world.inbox[i];
+        let rec = &world.recs[id];
+        let decision = adm.decide(
+            inflight,
+            rec.req.prompt_len as usize,
+            rec.predicted_rl.max(1) as usize,
+            rec.req.deadline - world.clock,
+        );
+        if decision.is_err() {
+            world.inbox.remove(i);
+            world.reject(id);
+            shed += 1;
+        } else {
+            inflight += 1;
+            i += 1;
+        }
+    }
+    shed
 }
 
 /// Convenience: build world + scheduler + sim engine from names and run.
@@ -172,6 +239,46 @@ mod tests {
         assert_eq!(res.summary.n_done, 100);
         assert!(res.summary.mean_jct > 0.0);
         assert!(res.summary.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn admission_sheds_overload_and_run_completes() {
+        use crate::api::{AdmissionConfig, AdmissionController};
+        use crate::engine::SimEngine;
+        use crate::predictor::OraclePredictor;
+
+        let cfg = SystemConfig::new(ModelProfile::opt_13b());
+        let gen = TraceGen::new(TraceSpec::alpaca());
+        // A hard burst: everything arrives at t=0, far beyond a depth-8
+        // queue bound.
+        let mut items = gen.generate(80, 20.0, cfg.profile.max_total_len, 3);
+        for it in &mut items {
+            it.arrival = 0.0;
+        }
+        let n = items.len();
+        let pred = Box::new(OraclePredictor::new(cfg.block_size));
+        let mut world = crate::core::world::World::new(cfg, &items, pred);
+        let mut sched = crate::sched::by_name("orca").unwrap();
+        let adm = AdmissionController::new(AdmissionConfig {
+            max_inflight: 8,
+            max_prompt: 0,
+            est_token_time: 0.0,
+        });
+        let res = run_admitted(
+            &mut world,
+            sched.as_mut(),
+            &SimEngine::new(),
+            RunLimits::default(),
+            Some(&adm),
+        );
+        assert!(res.rejected > 0, "burst must overflow the depth-8 bound");
+        assert_eq!(
+            res.summary.n_done + res.rejected,
+            n,
+            "every request either completes or is shed"
+        );
+        // Shed requests count against SSR (they are SLO misses).
+        assert!(res.summary.ssr <= res.summary.n_done as f64 / n as f64 + 1e-9);
     }
 
     #[test]

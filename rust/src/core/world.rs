@@ -163,6 +163,19 @@ impl World {
         self.future.last().map(|id| self.recs[*id].req.arrival)
     }
 
+    /// Load-shed a queued request before it receives any service (the
+    /// admission-control front door of `coordinator::run_admitted`). The
+    /// request leaves the system immediately; `done_at` stays `None`, so
+    /// it is excluded from latency stats and counts as an SLO miss.
+    pub fn reject(&mut self, id: ReqId) {
+        let rec = &mut self.recs[id];
+        debug_assert!(
+            matches!(rec.phase, Phase::PtQueued),
+            "reject() is only valid before any service"
+        );
+        rec.phase = Phase::Done;
+    }
+
     pub fn all_done(&self) -> bool {
         self.future.is_empty()
             && self.inbox.is_empty()

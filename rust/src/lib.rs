@@ -16,9 +16,37 @@
 //!  * **L1 (python/compile/kernels/)** — Pallas flash-attention kernels
 //!    (prefill + decode), validated against a pure-jnp oracle.
 //!
-//! Start with [`coordinator::Coordinator`] for the serving loop, or the
-//! `examples/` directory for end-to-end usage.
+//! ## Two engines, one request lifecycle
+//!
+//! The crate serves through two back-ends that share one front door
+//! (see `docs/API.md` for the full tour):
+//!
+//!  * the **simulation engine** — [`coordinator`] drives a
+//!    [`sched::Scheduler`] over a [`core::world::World`] on the
+//!    calibrated [`engine::SimEngine`]; this is what reproduces the
+//!    paper's figures. `coordinator::run_admitted` applies the same
+//!    admission control as the real path.
+//!  * the **real engine** — [`server::RealServer`] batches requests over
+//!    decode slots of the PJRT model ([`runtime::PjrtModel`]), fronted
+//!    by a std-only HTTP server ([`server::http`]) with per-token
+//!    streaming (`POST /v1/stream`) and blocking generation
+//!    (`POST /v1/generate`).
+//!
+//! Both speak the typed request lifecycle of [`api`]: admission-checked
+//! submission ([`api::SubmitOptions`] → [`api::AdmissionController`]),
+//! channel-backed token streaming ([`api::RequestHandle`] yielding
+//! [`api::StreamEvent`]s), cooperative cancellation
+//! ([`api::CancelToken`], freeing the decode slot mid-generation), and a
+//! structured terminal state ([`api::FinishReason`] /
+//! [`api::Completion`] / [`api::ServeError`]). Queue ordering on both
+//! paths is the single shared EconoServe §3.4 implementation in
+//! [`ordering`] ([`ordering::QueuePolicy`], selectable by name).
+//!
+//! Start with [`coordinator`] for the simulated serving loop, [`api`]
+//! for the client-facing request lifecycle, or the `examples/` directory
+//! for end-to-end usage.
 
+pub mod api;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
@@ -30,7 +58,9 @@ pub mod core;
 pub mod kvc;
 pub mod metrics;
 pub mod predictor;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod trace;
 pub mod util;

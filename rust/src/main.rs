@@ -13,7 +13,9 @@
 use econoserve::cluster::{min_replicas_for_goodput, DistServeConfig, DistServeSim};
 use econoserve::config::{ModelProfile, SystemConfig};
 use econoserve::coordinator::{harness, RunLimits};
-use econoserve::server::{RealServer, ServeRequest};
+use econoserve::api::{AdmissionConfig, SubmitOptions};
+use econoserve::ordering::QueuePolicy;
+use econoserve::server::{RealServer, ServerConfig};
 use econoserve::trace::{self, TraceGen, TraceSpec};
 use econoserve::util::cli::Cli;
 use econoserve::util::rng::Rng;
@@ -162,6 +164,8 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("requests", "32", "number of requests")
         .opt("prompt-len", "24", "mean prompt length (tokens)")
         .opt("max-new", "48", "mean response length (tokens)")
+        .opt("ordering", "econoserve", "queue ordering policy: econoserve | fcfs")
+        .opt("max-inflight", "256", "admission bound on requests in flight (0 = unbounded)")
         .opt("seed", "7", "rng seed");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -170,13 +174,30 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
             return 2;
         }
     };
+    let Some(ordering) = QueuePolicy::by_name(a.get("ordering")) else {
+        eprintln!(
+            "unknown ordering '{}' (expected one of {:?})",
+            a.get("ordering"),
+            QueuePolicy::names()
+        );
+        return 2;
+    };
+    let server_cfg = ServerConfig {
+        ordering,
+        admission: AdmissionConfig { max_inflight: a.usize("max-inflight"), ..Default::default() },
+    };
     let listen = a.get("listen").to_string();
     if !listen.is_empty() {
-        match econoserve::server::http::HttpServer::start(&listen, a.get("artifacts")) {
+        match econoserve::server::http::HttpServer::start_with(
+            &listen,
+            a.get("artifacts"),
+            server_cfg,
+        ) {
             Ok(srv) => {
                 println!(
-                    "serving on http://{}\n  POST /v1/generate {{\"prompt\": [ids], \"max_new_tokens\": n}}\n  GET  /v1/stats | GET /health",
-                    srv.addr
+                    "serving on http://{} (ordering={})\n  POST /v1/generate {{\"prompt\": [ids], \"max_new_tokens\": n}}\n  POST /v1/stream   same body, chunked NDJSON token stream\n  GET  /v1/stats | GET /v1/info | GET /health",
+                    srv.addr,
+                    ordering.name()
                 );
                 // Run until killed.
                 loop {
@@ -201,21 +222,19 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         model.dims.param_count, model.dims.decode_slots, model.dims.max_seq
     );
     let dims = model.dims.clone();
-    let mut server = RealServer::new(model);
+    let mut server = RealServer::with_config(model, server_cfg);
     let mut rng = Rng::new(a.u64("seed"));
     let n = a.usize("requests");
-    for id in 0..n {
+    for _ in 0..n {
         let plen = rng.range_usize(4, (a.usize("prompt-len") * 2).min(dims.max_prompt));
         let rl = rng.range_usize(4, a.usize("max-new") * 2).min(dims.max_seq - plen - 2);
         let prompt: Vec<i32> =
             (0..plen).map(|_| rng.range_u64(1, dims.vocab as u64 - 1) as i32).collect();
-        server.submit(ServeRequest {
-            id: id as u64,
-            prompt,
-            max_new_tokens: rl.max(1),
-            predicted_rl: rl as u32,
-            slo_budget: f64::INFINITY,
-        });
+        match server.submit(SubmitOptions::new(prompt, rl.max(1)).with_predicted_rl(rl as u32)) {
+            // Fire-and-forget: completions are read from the server.
+            Ok(handle) => handle.detach(),
+            Err(e) => eprintln!("rejected: {e}"),
+        }
     }
     if let Err(e) = server.run_to_completion() {
         eprintln!("serving failed: {e:#}");
@@ -223,10 +242,12 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
     }
     let st = server.stats();
     println!(
-        "served {} requests: {:.2} req/s, {:.1} tok/s\n\
+        "served {} requests ({} rejected, {} cancelled): {:.2} req/s, {:.1} tok/s\n\
          latency mean {:.3}s p95 {:.3}s  ttft {:.3}s  tbt {:.4}s\n\
          decode iterations {}  mean batch occupancy {:.2}/{}",
         st.completed,
+        st.rejected,
+        st.cancelled,
         st.throughput_rps,
         st.throughput_tps,
         st.mean_latency,

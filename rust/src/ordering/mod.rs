@@ -10,20 +10,106 @@
 //!
 //! [`best_fit_leq`] is the paper's "binary search to find a task with the
 //! predicted RL or prompt length close to the required length".
+//!
+//! The policy is engine-agnostic: [`QueuePolicy`] computes the same
+//! composite key from a [`QueuedTask`] view, so the simulation scheduler
+//! (via [`order_key`]/[`sort_pts`]/[`sort_gts`]) and the real PJRT
+//! serving path ([`crate::server`]) share ONE EconoServe ordering
+//! implementation. The real path selects a policy by name
+//! (`QueuePolicy::by_name`), mirroring `crate::sched::by_name`.
+
+use std::cmp::Reverse;
 
 use crate::core::world::World;
 use crate::core::ReqId;
 
-/// Composite sort key: smaller = higher priority.
+/// Composite sort key: smaller = higher priority. Descending factors use
+/// [`Reverse`] so the intent is visible in the type rather than hidden in
+/// negation arithmetic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct OrderKey {
+    /// Explicit client priority class (0 = most urgent; simulation
+    /// requests all use 0, so it is inert there).
+    pub priority: u8,
     pub deadline_bucket: u8,
-    /// Negated bucketed occupied-KVC (so larger occupancy sorts first).
-    pub neg_kvc_bucket: i32,
-    /// Negated length (longer first).
-    pub neg_len: i64,
-    /// Tie-break for determinism.
-    pub id: ReqId,
+    /// Bucketed occupied-KVC, larger occupancy first (Observation 5).
+    pub kvc_bucket: Reverse<u32>,
+    /// Length, longer first.
+    pub len: Reverse<u32>,
+    /// Tie-break for determinism (request id / submission order).
+    pub tie: u64,
+}
+
+/// Engine-agnostic view of one queued task, the input both serving paths
+/// feed to a [`QueuePolicy`].
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedTask {
+    /// Submission order: the FCFS key and the deterministic tie-break.
+    pub seq: u64,
+    /// Explicit priority class (0 = most urgent).
+    pub priority: u8,
+    /// Seconds until the task's deadline (negative = overdue).
+    pub slack: f64,
+    /// KVC tokens the task already occupies.
+    pub occupied_kvc: u32,
+    /// Prompt length (PT) or predicted remaining RL (GT).
+    pub len: u32,
+}
+
+/// Queue-ordering policy for a serving front-end. `Fcfs` is the baseline;
+/// `EconoServe` is the paper's §3.4 three-factor ordering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    Fcfs,
+    EconoServe,
+}
+
+impl QueuePolicy {
+    /// Policy registry by name (the real-path analogue of
+    /// `sched::by_name`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "fcfs" => Some(QueuePolicy::Fcfs),
+            "econoserve" => Some(QueuePolicy::EconoServe),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QueuePolicy::Fcfs => "fcfs",
+            QueuePolicy::EconoServe => "econoserve",
+        }
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["fcfs", "econoserve"]
+    }
+
+    /// The composite key for one queued task (smaller = run sooner).
+    pub fn key(self, t: &QueuedTask) -> OrderKey {
+        match self {
+            QueuePolicy::Fcfs => OrderKey {
+                priority: t.priority,
+                deadline_bucket: 0,
+                kvc_bucket: Reverse(0),
+                len: Reverse(0),
+                tie: t.seq,
+            },
+            QueuePolicy::EconoServe => OrderKey {
+                priority: t.priority,
+                deadline_bucket: deadline_bucket(t.slack),
+                kvc_bucket: Reverse(t.occupied_kvc / KVC_BUCKET),
+                len: Reverse(t.len),
+                tie: t.seq,
+            },
+        }
+    }
+
+    /// Index of the task to run next, `None` on an empty queue.
+    pub fn select(self, queue: &[QueuedTask]) -> Option<usize> {
+        (0..queue.len()).min_by_key(|&i| self.key(&queue[i]))
+    }
 }
 
 /// Deadline slack buckets (seconds until the JCT deadline).
@@ -41,16 +127,18 @@ pub fn deadline_bucket(slack: f64) -> u8 {
 /// buckets keep factor 2 from overriding factor 1 on noise).
 pub const KVC_BUCKET: u32 = 256;
 
-/// Key for a task; `len` is predicted RL (GT) or prompt length (PT).
+/// Key for a simulated task; `len` is predicted RL (GT) or prompt length
+/// (PT). Routes through [`QueuePolicy::EconoServe`] so both engines rank
+/// with the identical key function.
 pub fn order_key(world: &World, id: ReqId, len: u32) -> OrderKey {
     let rec = &world.recs[id];
-    let slack = rec.req.deadline - world.clock;
-    OrderKey {
-        deadline_bucket: deadline_bucket(slack),
-        neg_kvc_bucket: -((world.occupied_kvc(id) / KVC_BUCKET) as i32),
-        neg_len: -(len as i64),
-        id,
-    }
+    QueuePolicy::EconoServe.key(&QueuedTask {
+        seq: id as u64,
+        priority: 0,
+        slack: rec.req.deadline - world.clock,
+        occupied_kvc: world.occupied_kvc(id),
+        len,
+    })
 }
 
 /// Sort `ids` in scheduling-priority order (stable, deterministic).
@@ -142,6 +230,63 @@ mod tests {
         let mut ids = vec![0, 1];
         sort_pts(&w, &mut ids);
         assert_eq!(ids[0], 1, "bigger KVC holder first despite shorter prompt");
+    }
+
+    fn task(seq: u64, slack: f64, len: u32) -> QueuedTask {
+        QueuedTask { seq, priority: 0, slack, occupied_kvc: 0, len }
+    }
+
+    #[test]
+    fn policy_registry_by_name() {
+        assert_eq!(QueuePolicy::by_name("fcfs"), Some(QueuePolicy::Fcfs));
+        assert_eq!(QueuePolicy::by_name("econoserve"), Some(QueuePolicy::EconoServe));
+        assert_eq!(QueuePolicy::by_name("nope"), None);
+        for name in QueuePolicy::names() {
+            assert_eq!(QueuePolicy::by_name(name).unwrap().name(), *name);
+        }
+    }
+
+    #[test]
+    fn fcfs_selects_in_submission_order() {
+        let q = [task(5, 0.1, 9), task(2, 100.0, 1), task(7, 0.0, 50)];
+        assert_eq!(QueuePolicy::Fcfs.select(&q), Some(1));
+        assert_eq!(QueuePolicy::Fcfs.select(&[]), None);
+    }
+
+    #[test]
+    fn econoserve_selects_urgent_then_longest() {
+        // Same lax deadline bucket: the longer prompt wins (this is the
+        // Reverse(len) factor, previously an usize::MAX subtraction hack
+        // on the real path).
+        let q = [task(0, 100.0, 10), task(1, 100.0, 80), task(2, 100.0, 40)];
+        assert_eq!(QueuePolicy::EconoServe.select(&q), Some(1));
+        // An urgent task beats a longer lax one.
+        let q = [task(0, 100.0, 80), task(1, 0.1, 4)];
+        assert_eq!(QueuePolicy::EconoServe.select(&q), Some(1));
+    }
+
+    #[test]
+    fn explicit_priority_ranks_above_deadline() {
+        let urgent_low_pri = QueuedTask { seq: 0, priority: 1, slack: 0.1, occupied_kvc: 0, len: 4 };
+        let lax_high_pri = QueuedTask { seq: 1, priority: 0, slack: 100.0, occupied_kvc: 0, len: 4 };
+        assert_eq!(QueuePolicy::EconoServe.select(&[urgent_low_pri, lax_high_pri]), Some(1));
+    }
+
+    #[test]
+    fn policy_key_matches_sim_order_key() {
+        // The simulated path's order_key and the real path's policy key
+        // are the same function: identical inputs -> identical key.
+        let w = world(&[TraceItem { arrival: 0.0, prompt_len: 50, true_rl: 10 }]);
+        let rec = &w.recs[0];
+        let via_world = order_key(&w, 0, 50);
+        let via_policy = QueuePolicy::EconoServe.key(&QueuedTask {
+            seq: 0,
+            priority: 0,
+            slack: rec.req.deadline - w.clock,
+            occupied_kvc: w.occupied_kvc(0),
+            len: 50,
+        });
+        assert_eq!(via_world, via_policy);
     }
 
     #[test]

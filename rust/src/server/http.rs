@@ -1,32 +1,47 @@
 //! Minimal HTTP/1.1 front-end for the real-model server (std-only: the
-//! offline registry has no hyper/axum/tokio).
+//! offline registry has no hyper/axum/tokio), speaking the unified
+//! request-lifecycle API of [`crate::api`].
 //!
 //! Endpoints:
-//!   POST /v1/generate   {"prompt": [int token ids], "max_new_tokens": n}
-//!                       -> {"id", "tokens", "ttft_s", "latency_s", "tbt_s"}
+//!   POST /v1/generate   {"prompt": [ids], "max_new_tokens": n,
+//!                        "slo_budget_s": s?, "priority": p?}
+//!                       -> {"id", "tokens", "finish", "met_slo",
+//!                           "ttft_s", "latency_s", "tbt_s"}
+//!   POST /v1/stream     same body; chunked NDJSON response: one
+//!                       {"index", "token"} object per generated token,
+//!                       then a terminal {"done": true, "finish", ...}.
+//!                       Dropping the connection cancels the request and
+//!                       frees its decode slot.
 //!   GET  /v1/stats      -> aggregate ServeStats snapshot
+//!   GET  /v1/info       -> model dims (decode_slots, max_prompt, ...)
 //!   GET  /health        -> 200 "ok"
+//!
+//! Errors are structured: {"error": msg, "kind": stable_kind} with the
+//! [`ServeError`] status mapping (400 bad request, 404 unknown route,
+//! 429 queue full, 503 SLO-infeasible/engine down).
 //!
 //! Architecture: one acceptor thread per connection (serving concurrency
 //! is bounded by the model's decode slots anyway), all requests funneled
-//! to the single engine thread that owns the PJRT model — the same
-//! decoupled PT-queue / slot-batch structure as `RealServer`, with
-//! per-request oneshot response channels.
+//! to the single engine thread that owns the PJRT model. The engine
+//! replies to a submission immediately with a `RequestHandle` (or a
+//! rejection); the connection thread then consumes the handle's event
+//! stream while the engine keeps batching.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::mpsc;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::{RealServer, ServeRequest, ServeResponse, ServeStats};
-use crate::runtime::PjrtModel;
+use super::{RealServer, ServeStats, ServerConfig};
+use crate::api::{RequestHandle, ServeError, StreamEvent, SubmitOptions};
+use crate::runtime::{ModelDims, PjrtModel};
 use crate::util::json::{obj, Json};
 
 enum EngineCmd {
-    Generate(ServeRequest, mpsc::Sender<ServeResponse>),
+    Submit(SubmitOptions, mpsc::Sender<Result<RequestHandle, ServeError>>),
     Stats(mpsc::Sender<ServeStats>),
+    Info(mpsc::Sender<ModelDims>),
     Shutdown,
 }
 
@@ -40,8 +55,14 @@ pub struct HttpServer {
 
 impl HttpServer {
     /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve
-    /// the model from `artifacts_dir`.
+    /// the model from `artifacts_dir` with the default front door.
     pub fn start(addr: &str, artifacts_dir: &str) -> Result<Self> {
+        Self::start_with(addr, artifacts_dir, ServerConfig::default())
+    }
+
+    /// As [`start`](Self::start), with an explicit ordering policy and
+    /// admission configuration.
+    pub fn start_with(addr: &str, artifacts_dir: &str, cfg: ServerConfig) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
 
@@ -63,7 +84,7 @@ impl HttpServer {
                     return;
                 }
             };
-            engine_loop(model, rx)
+            engine_loop(RealServer::with_config(model, cfg), rx)
         });
         ready_rx
             .recv()
@@ -82,7 +103,12 @@ impl HttpServer {
             }
         });
 
-        Ok(HttpServer { addr: local, tx, accept_handle: Some(accept_handle), engine_handle: Some(engine_handle) })
+        Ok(HttpServer {
+            addr: local,
+            tx,
+            accept_handle: Some(accept_handle),
+            engine_handle: Some(engine_handle),
+        })
     }
 
     /// Stop the engine (the acceptor thread dies with the process; tests
@@ -96,19 +122,15 @@ impl HttpServer {
     }
 }
 
-/// Engine loop: interleave admission of queued generate commands with
-/// decode iterations; reply on each request's channel as it completes.
-fn engine_loop(model: PjrtModel, rx: mpsc::Receiver<EngineCmd>) {
-    let mut server = RealServer::new(model);
-    let mut waiters: Vec<(u64, mpsc::Sender<ServeResponse>)> = Vec::new();
-    let next_id = AtomicU64::new(1);
-    let mut replied = 0usize;
-
+/// Engine loop: interleave admission of submitted requests with decode
+/// iterations. Token delivery runs over each request's own handle
+/// channel, so this loop never blocks on a slow client.
+fn engine_loop(mut server: RealServer, rx: mpsc::Receiver<EngineCmd>) {
     loop {
         // Drain pending commands without blocking; block only when idle.
         let idle = server.idle();
         loop {
-            let cmd = if idle && waiters.is_empty() {
+            let cmd = if idle {
                 match rx.recv() {
                     Ok(c) => c,
                     Err(_) => return,
@@ -121,34 +143,83 @@ fn engine_loop(model: PjrtModel, rx: mpsc::Receiver<EngineCmd>) {
                 }
             };
             match cmd {
-                EngineCmd::Generate(mut req, reply) => {
-                    req.id = next_id.fetch_add(1, Ordering::Relaxed);
-                    waiters.push((req.id, reply));
-                    server.submit(req);
+                EngineCmd::Submit(opts, reply) => {
+                    let _ = reply.send(server.submit(opts));
                 }
                 EngineCmd::Stats(reply) => {
                     let _ = reply.send(server.stats());
                 }
+                EngineCmd::Info(reply) => {
+                    let _ = reply.send(server.dims().clone());
+                }
                 EngineCmd::Shutdown => return,
             }
-            if !(idle && waiters.is_empty()) {
+            if !server.idle() {
                 break;
             }
         }
-
-        let _ = server.tick();
-
-        // Deliver any newly completed responses.
-        let responses = server.responses();
-        while replied < responses.len() {
-            let r = responses[replied].clone();
-            if let Some(pos) = waiters.iter().position(|(id, _)| *id == r.id) {
-                let (_, ch) = waiters.swap_remove(pos);
-                let _ = ch.send(r);
-            }
-            replied += 1;
+        if let Err(e) = server.tick() {
+            // Unrecoverable engine fault: terminate every in-flight
+            // stream (clients see FinishReason::Error, not a hang) and
+            // exit; subsequent submissions get EngineDown from the
+            // dropped command channel.
+            eprintln!("engine: fatal tick error: {e:#}");
+            server.fail_all();
+            return;
         }
     }
+}
+
+/// Parse a generate/stream request body into [`SubmitOptions`].
+fn parse_submit(body: &[u8]) -> Result<SubmitOptions, ServeError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ServeError::InvalidRequest("body is not utf-8".into()))?;
+    let j = Json::parse(text).map_err(|e| ServeError::InvalidRequest(format!("bad json: {e}")))?;
+    let prompt: Vec<i32> = j
+        .get("prompt")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| ServeError::InvalidRequest("missing 'prompt' (array of token ids)".into()))?
+        .iter()
+        .map(|x| x.as_i64().unwrap_or(0) as i32)
+        .collect();
+    let max_new = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
+    let slo = j.get("slo_budget_s").and_then(|v| v.as_f64()).unwrap_or(f64::INFINITY);
+    let priority = j.get("priority").and_then(|v| v.as_usize()).unwrap_or(0).min(255) as u8;
+    let predicted =
+        j.get("predicted_rl").and_then(|v| v.as_usize()).unwrap_or(max_new) as u32;
+    Ok(SubmitOptions {
+        prompt,
+        max_new_tokens: max_new,
+        predicted_rl: predicted,
+        slo_budget: slo,
+        priority,
+    })
+}
+
+fn submit_to_engine(
+    tx: &mpsc::Sender<EngineCmd>,
+    body: &[u8],
+) -> Result<RequestHandle, ServeError> {
+    let opts = parse_submit(body)?;
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(EngineCmd::Submit(opts, rtx)).map_err(|_| ServeError::EngineDown)?;
+    rrx.recv().map_err(|_| ServeError::EngineDown)?
+}
+
+fn error_json(e: &ServeError) -> Json {
+    obj([("error", Json::from(e.to_string())), ("kind", Json::from(e.kind()))])
+}
+
+fn completion_json(c: &crate::api::Completion) -> Json {
+    obj([
+        ("id", Json::from(c.id as usize)),
+        ("finish", Json::from(c.finish.as_str())),
+        ("tokens", Json::Arr(c.tokens.iter().map(|t| Json::from(*t as usize)).collect())),
+        ("met_slo", Json::Bool(c.met_slo)),
+        ("ttft_s", Json::from(c.ttft_s)),
+        ("latency_s", Json::from(c.latency_s)),
+        ("tbt_s", Json::from(c.mean_tbt_s)),
+    ])
 }
 
 fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineCmd>) -> Result<()> {
@@ -178,9 +249,67 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineCmd>) -> Result<()> {
         reader.read_exact(&mut body)?;
     }
 
-    let (status, payload) = route(&method, &path, &body, &tx)
-        .unwrap_or_else(|e| (400, obj([("error", Json::from(format!("{e:#}")))])));
+    // Streaming endpoint: the response is written incrementally, so it
+    // cannot go through the buffered route/respond pair below.
+    if method == "POST" && path == "/v1/stream" {
+        return match submit_to_engine(&tx, &body) {
+            Ok(handle) => stream_response(stream, handle),
+            Err(e) => respond(stream, e.http_status(), &error_json(&e).to_string()),
+        };
+    }
+
+    let (status, payload) = route(&method, &path, &body, &tx).unwrap_or_else(|e| {
+        let err = ServeError::Internal(format!("{e:#}"));
+        (err.http_status(), error_json(&err))
+    });
     respond(stream, status, &payload.to_string())
+}
+
+/// Write one chunked-transfer NDJSON event stream: a chunk per token,
+/// then a terminal completion chunk. A failed write means the client is
+/// gone — cancel the request so the engine frees its slot.
+fn stream_response(mut stream: TcpStream, handle: RequestHandle) -> Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    let write_chunk = |stream: &mut TcpStream, data: &str| -> std::io::Result<()> {
+        write!(stream, "{:x}\r\n{data}\r\n", data.len())?;
+        stream.flush()
+    };
+    let cancel = handle.cancel_token();
+    for event in handle {
+        let (line, last) = match &event {
+            StreamEvent::Token(t) => (
+                obj([
+                    ("index", Json::from(t.index as usize)),
+                    ("token", Json::from(t.token as usize)),
+                ])
+                .to_string(),
+                false,
+            ),
+            StreamEvent::Finished(c) => {
+                let mut o = completion_json(c);
+                if let Json::Obj(m) = &mut o {
+                    m.insert("done".into(), Json::Bool(true));
+                }
+                (o.to_string(), true)
+            }
+        };
+        if write_chunk(&mut stream, &(line + "\n")).is_err() {
+            // Client disconnected mid-stream: cancel so the engine frees
+            // the decode slot at the next iteration boundary.
+            cancel.cancel();
+            return Ok(());
+        }
+        if last {
+            break;
+        }
+    }
+    let _ = write!(stream, "0\r\n\r\n");
+    let _ = stream.flush();
+    Ok(())
 }
 
 fn route(
@@ -199,58 +328,54 @@ fn route(
                 200,
                 obj([
                     ("completed", Json::from(s.completed)),
+                    ("cancelled", Json::from(s.cancelled)),
+                    ("rejected", Json::from(s.rejected)),
                     ("throughput_rps", Json::from(s.throughput_rps)),
                     ("throughput_tps", Json::from(s.throughput_tps)),
                     ("mean_latency_s", Json::from(s.mean_latency)),
                     ("p95_latency_s", Json::from(s.p95_latency)),
                     ("mean_ttft_s", Json::from(s.mean_ttft)),
                     ("mean_tbt_s", Json::from(s.mean_tbt)),
+                    ("ssr", Json::from(s.ssr)),
                     ("decode_iterations", Json::from(s.decode_iterations as usize)),
                     ("mean_batch_occupancy", Json::from(s.mean_batch_occupancy)),
                 ]),
             ))
         }
-        ("POST", "/v1/generate") => {
-            let text = std::str::from_utf8(body).context("body not utf-8")?;
-            let j = Json::parse(text).map_err(|e| anyhow!("bad json: {e}"))?;
-            let prompt: Vec<i32> = j
-                .get("prompt")
-                .and_then(|v| v.as_arr())
-                .ok_or_else(|| anyhow!("missing 'prompt' (array of token ids)"))?
-                .iter()
-                .map(|x| x.as_i64().unwrap_or(0) as i32)
-                .collect();
-            if prompt.is_empty() {
-                return Err(anyhow!("'prompt' must be non-empty"));
-            }
-            let max_new =
-                j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32).max(1);
-            let slo = j.get("slo_budget_s").and_then(|v| v.as_f64()).unwrap_or(f64::INFINITY);
+        ("GET", "/v1/info") => {
             let (rtx, rrx) = mpsc::channel();
-            tx.send(EngineCmd::Generate(
-                ServeRequest {
-                    id: 0, // assigned by the engine
-                    prompt,
-                    max_new_tokens: max_new,
-                    predicted_rl: max_new as u32,
-                    slo_budget: slo,
-                },
-                rtx,
-            ))
-            .map_err(|_| anyhow!("engine down"))?;
-            let r = rrx.recv().map_err(|_| anyhow!("engine down"))?;
+            tx.send(EngineCmd::Info(rtx)).map_err(|_| anyhow!("engine down"))?;
+            let d = rrx.recv().map_err(|_| anyhow!("engine down"))?;
             Ok((
                 200,
                 obj([
-                    ("id", Json::from(r.id as usize)),
-                    ("tokens", Json::Arr(r.tokens.iter().map(|t| Json::from(*t as usize)).collect())),
-                    ("ttft_s", Json::from(r.ttft)),
-                    ("latency_s", Json::from(r.latency)),
-                    ("tbt_s", Json::from(r.mean_tbt)),
+                    ("vocab", Json::from(d.vocab)),
+                    ("decode_slots", Json::from(d.decode_slots)),
+                    ("max_prompt", Json::from(d.max_prompt)),
+                    ("max_seq", Json::from(d.max_seq)),
+                    ("n_layers", Json::from(d.n_layers)),
+                    ("param_count", Json::from(d.param_count)),
                 ]),
             ))
         }
-        _ => Ok((404, obj([("error", Json::from("not found"))]))),
+        ("POST", "/v1/generate") => match submit_to_engine(tx, body) {
+            Ok(handle) => match handle.wait() {
+                Ok(c) if c.finish == crate::api::FinishReason::Error => {
+                    let e = ServeError::Internal("engine failed mid-generation".into());
+                    Ok((e.http_status(), error_json(&e)))
+                }
+                Ok(c) => Ok((200, completion_json(&c))),
+                Err(e) => Ok((e.http_status(), error_json(&e))),
+            },
+            Err(e) => Ok((e.http_status(), error_json(&e))),
+        },
+        _ => Ok((
+            404,
+            obj([
+                ("error", Json::from(format!("no route {method} {path}"))),
+                ("kind", Json::from("not_found")),
+            ]),
+        )),
     }
 }
 
@@ -259,6 +384,10 @@ fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        429 => "Too Many Requests",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Error",
     };
     write!(
@@ -271,7 +400,12 @@ fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
 }
 
 /// Tiny blocking HTTP client for tests/examples (same std-only rationale).
-pub fn http_request(addr: &std::net::SocketAddr, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+pub fn http_request(
+    addr: &std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr)?;
     write!(
         stream,
@@ -290,5 +424,75 @@ pub fn http_request(addr: &std::net::SocketAddr, method: &str, path: &str, body:
     Ok((status, body))
 }
 
-/// Shared server handle for concurrent client tests.
-pub type SharedServer = Arc<Mutex<HttpServer>>;
+/// Incremental chunked-response reader for the `/v1/stream` endpoint.
+/// Dropping it mid-stream closes the connection, which the server treats
+/// as a cancellation.
+pub struct ChunkStream {
+    reader: BufReader<TcpStream>,
+    pub status: u16,
+}
+
+impl ChunkStream {
+    /// Open a streaming request and parse the response head. The body
+    /// chunks are then pulled one at a time via [`next_chunk`].
+    ///
+    /// [`next_chunk`]: Self::next_chunk
+    pub fn open(addr: &std::net::SocketAddr, path: &str, body: &str) -> Result<Self> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        write!(
+            stream,
+            "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )?;
+        stream.flush()?;
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad status line: {status_line}"))?;
+        let mut chunked = false;
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let line = line.trim().to_ascii_lowercase();
+            if line.is_empty() {
+                break;
+            }
+            if line.starts_with("transfer-encoding:") && line.contains("chunked") {
+                chunked = true;
+            }
+        }
+        if status == 200 && !chunked {
+            return Err(anyhow!("expected a chunked response"));
+        }
+        Ok(ChunkStream { reader, status })
+    }
+
+    /// Next body chunk as a string; `None` on the terminating 0-chunk or
+    /// a closed connection.
+    pub fn next_chunk(&mut self) -> Option<String> {
+        let mut size_line = String::new();
+        self.reader.read_line(&mut size_line).ok()?;
+        let size = usize::from_str_radix(size_line.trim(), 16).ok()?;
+        if size == 0 {
+            return None;
+        }
+        let mut data = vec![0u8; size + 2]; // chunk + trailing CRLF
+        self.reader.read_exact(&mut data).ok()?;
+        data.truncate(size);
+        String::from_utf8(data).ok()
+    }
+
+    /// Drain the rest of the stream, returning all remaining chunks.
+    pub fn collect_remaining(mut self) -> Vec<String> {
+        let mut out = Vec::new();
+        while let Some(c) = self.next_chunk() {
+            out.push(c);
+        }
+        out
+    }
+}

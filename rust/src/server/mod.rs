@@ -1,15 +1,24 @@
 //! Serving front-end over the real PJRT model: continuous slot-based
 //! batching with decoupled PT/GT handling, driven either synchronously
 //! (open-loop replay, used by examples/serve_real_model.rs) or as a
-//! background worker thread with request/response channels.
+//! background worker thread, or over HTTP ([`http`]).
 //!
-//! This is the "real" counterpart of the simulation coordinator: requests
-//! queue as PTs, are prefilled one at a time (B=1 prefill artifact),
-//! spliced into a free decode slot (`insert` artifact — KV never leaves
-//! the device layout), and then advance one token per decode iteration
-//! together with every other live slot (continuous batching). Slots are
-//! the real engine's KVC granularity; the EconoServe ordering policy
-//! picks which queued PT gets a freed slot.
+//! This is the "real" counterpart of the simulation coordinator, speaking
+//! the shared request-lifecycle API of [`crate::api`]: requests enter
+//! through [`RealServer::submit`] (admission-controlled, returning a
+//! streaming [`RequestHandle`]), queue as PTs, are prefilled one at a
+//! time (B=1 prefill artifact), spliced into a free decode slot (`insert`
+//! artifact — KV never leaves the device layout), and then advance one
+//! token per decode iteration together with every other live slot
+//! (continuous batching). Every generated token is pushed to the
+//! request's handle as it is produced; cancellation (explicit, or a
+//! dropped handle/connection) frees the slot at the next iteration
+//! boundary.
+//!
+//! Slots are the real engine's KVC granularity; which queued PT gets a
+//! freed slot is decided by the same [`crate::ordering::QueuePolicy`]
+//! the simulation scheduler uses — one EconoServe ordering
+//! implementation, two engines.
 
 pub mod http;
 
@@ -19,41 +28,46 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::api::{
+    channel, AdmissionConfig, AdmissionController, Completion, EventSink, FinishReason,
+    RequestHandle, ServeError, SubmitOptions,
+};
+use crate::ordering::{QueuePolicy, QueuedTask};
 use crate::runtime::PjrtModel;
 use crate::util::stats::Samples;
 
-/// One serving request (token ids in; the demo model has no tokenizer —
-/// callers supply ids in [1, vocab)).
+/// Front-door configuration for the real serving path.
 #[derive(Debug, Clone)]
-pub struct ServeRequest {
-    pub id: u64,
-    pub prompt: Vec<i32>,
-    /// Stop after this many generated tokens (the trace's true RL).
-    pub max_new_tokens: usize,
-    /// Predicted RL (for ordering); 0 = unknown.
-    pub predicted_rl: u32,
-    /// Deadline in seconds from submission (SLO); inf = none.
-    pub slo_budget: f64,
+pub struct ServerConfig {
+    /// Queue-ordering policy for slot admission (`QueuePolicy::by_name`).
+    pub ordering: QueuePolicy,
+    pub admission: AdmissionConfig,
 }
 
-/// Completed response with timing.
-#[derive(Debug, Clone)]
-pub struct ServeResponse {
-    pub id: u64,
-    pub tokens: Vec<i32>,
-    /// Time to first token (s).
-    pub ttft: f64,
-    /// End-to-end latency (s).
-    pub latency: f64,
-    /// Mean time between tokens (s).
-    pub mean_tbt: f64,
-    pub met_slo: bool,
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            ordering: QueuePolicy::EconoServe,
+            admission: AdmissionConfig::default(),
+        }
+    }
 }
 
-struct Slot {
-    req: ServeRequest,
+/// A submitted request waiting for a decode slot.
+struct Pending {
+    id: u64,
     submitted: Instant,
-    first_token_at: Option<Instant>,
+    opts: SubmitOptions,
+    sink: EventSink,
+}
+
+/// A request occupying a decode slot.
+struct Slot {
+    id: u64,
+    opts: SubmitOptions,
+    sink: EventSink,
+    submitted: Instant,
+    first_token_at: Instant,
     last_token_at: Instant,
     tbt: Samples,
     tokens: Vec<i32>,
@@ -66,7 +80,12 @@ struct Slot {
 /// Aggregate serving stats.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Successful terminals only (`Complete` | `LengthCap`).
     pub completed: usize,
+    /// Requests cancelled mid-flight (explicitly or by client departure).
+    pub cancelled: usize,
+    /// Requests shed by the admission controller.
+    pub rejected: usize,
     pub throughput_rps: f64,
     pub throughput_tps: f64,
     pub mean_latency: f64,
@@ -80,80 +99,220 @@ pub struct ServeStats {
 
 pub struct RealServer {
     model: PjrtModel,
-    waiting: VecDeque<(Instant, ServeRequest)>,
+    cfg: ServerConfig,
+    admission: AdmissionController,
+    waiting: VecDeque<Pending>,
     slots: Vec<Option<Slot>>,
-    responses: Vec<ServeResponse>,
+    finished: Vec<Completion>,
+    n_rejected: usize,
     decode_iters: u64,
     occupancy_sum: u64,
-    started: Instant,
+    /// Throughput time base: anchored at the FIRST submit (not at
+    /// construction, not at `run_to_completion`), so stats are correct
+    /// for tick-/thread-driven use too.
+    first_submit: Option<Instant>,
+    next_id: u64,
 }
 
 impl RealServer {
     pub fn new(model: PjrtModel) -> Self {
+        Self::with_config(model, ServerConfig::default())
+    }
+
+    pub fn with_config(model: PjrtModel, cfg: ServerConfig) -> Self {
         let n = model.dims.decode_slots;
+        // The engine's prefill window is the authoritative prompt cap: a
+        // looser configured cap would let prompts through that
+        // PjrtModel::prefill rejects.
+        let mut adm = cfg.admission;
+        adm.max_prompt = if adm.max_prompt == 0 {
+            model.dims.max_prompt
+        } else {
+            adm.max_prompt.min(model.dims.max_prompt)
+        };
         RealServer {
+            admission: AdmissionController::new(adm),
             model,
+            cfg,
             waiting: VecDeque::new(),
             slots: (0..n).map(|_| None).collect(),
-            responses: Vec::new(),
+            finished: Vec::new(),
+            n_rejected: 0,
             decode_iters: 0,
             occupancy_sum: 0,
-            started: Instant::now(),
+            first_submit: None,
+            next_id: 1,
         }
     }
 
-    pub fn submit(&mut self, req: ServeRequest) {
-        self.waiting.push_back((Instant::now(), req));
+    /// Requests waiting for a slot.
+    pub fn queue_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Occupied decode slots.
+    pub fn live_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Requests in flight (waiting + executing) — the admission bound.
+    pub fn inflight(&self) -> usize {
+        self.queue_len() + self.live_slots()
+    }
+
+    /// Submit one request through admission control. On acceptance the
+    /// returned handle streams a `StreamEvent::Token` per generated token
+    /// and ends with `StreamEvent::Finished`; on rejection the request
+    /// never enters the queue.
+    pub fn submit(&mut self, opts: SubmitOptions) -> Result<RequestHandle, ServeError> {
+        if let Err(e) = self.admission.check(self.inflight(), &opts) {
+            self.n_rejected += 1;
+            return Err(e);
+        }
+        self.first_submit.get_or_insert_with(Instant::now);
+        let id = self.next_id;
+        self.next_id += 1;
+        let (sink, handle) = channel(id);
+        self.waiting.push_back(Pending { id, submitted: Instant::now(), opts, sink });
+        Ok(handle)
     }
 
     fn free_slot(&self) -> Option<usize> {
         self.slots.iter().position(|s| s.is_none())
     }
 
-    /// Admit queued PTs into free slots (prefill + insert). The queue is
-    /// ordered EconoServe-style: longer prompts first within the same
-    /// deadline bucket (slots are uniform so the occupied-KVC factor is
-    /// constant here).
-    fn admit(&mut self) -> Result<()> {
-        while let Some(slot_idx) = self.free_slot() {
-            if self.waiting.is_empty() {
-                break;
+    /// Retire a request that never reached a slot.
+    fn finish_pending(&mut self, p: Pending, finish: FinishReason) {
+        let c = Completion {
+            id: p.id,
+            finish,
+            tokens: Vec::new(),
+            ttft_s: 0.0,
+            latency_s: p.submitted.elapsed().as_secs_f64(),
+            mean_tbt_s: 0.0,
+            met_slo: false,
+        };
+        p.sink.finish(c.clone());
+        self.finished.push(c);
+    }
+
+    /// Retire a slot-holding request, freeing the slot.
+    fn finish_slot(&mut self, idx: usize, finish: FinishReason, now: Instant) {
+        let slot = self.slots[idx].take().expect("finish_slot on empty slot");
+        let Slot { id, opts, sink, submitted, first_token_at, tbt, tokens, .. } = slot;
+        let latency_s = now.duration_since(submitted).as_secs_f64();
+        let c = Completion {
+            id,
+            finish,
+            ttft_s: first_token_at.duration_since(submitted).as_secs_f64(),
+            latency_s,
+            mean_tbt_s: tbt.mean(),
+            met_slo: finish.is_success() && latency_s <= opts.slo_budget,
+            tokens,
+        };
+        sink.finish(c.clone());
+        self.finished.push(c);
+    }
+
+    /// Retire cancelled requests: waiting entries are dropped without
+    /// spending a prefill, and cancelled slots are freed so admission can
+    /// hand them out in the SAME tick.
+    fn sweep_cancelled(&mut self) {
+        let mut i = 0;
+        while i < self.waiting.len() {
+            if self.waiting[i].sink.cancelled() {
+                let p = self.waiting.remove(i).unwrap();
+                self.finish_pending(p, FinishReason::Cancelled);
+            } else {
+                i += 1;
             }
-            // Ordering: ascending deadline bucket, then longest prompt.
-            let now = Instant::now();
-            let best = (0..self.waiting.len())
-                .min_by_key(|&i| {
-                    let (t0, r) = &self.waiting[i];
-                    let slack = r.slo_budget - now.duration_since(*t0).as_secs_f64();
-                    let bucket = crate::ordering::deadline_bucket(slack);
-                    (bucket, usize::MAX - r.prompt.len())
-                })
-                .unwrap();
-            let (t0, req) = self.waiting.remove(best).unwrap();
-            let prompt: Vec<i32> =
-                req.prompt.iter().copied().take(self.model.dims.max_prompt).collect();
-            let (logits, state_1) = self.model.prefill(&prompt)?;
+        }
+        let now = Instant::now();
+        for idx in 0..self.slots.len() {
+            if self.slots[idx].as_ref().is_some_and(|s| s.sink.cancelled()) {
+                self.finish_slot(idx, FinishReason::Cancelled, now);
+            }
+        }
+    }
+
+    /// Admit queued PTs into free slots (prefill + insert). Which PT gets
+    /// the slot is the configured `ordering` policy's choice — EconoServe
+    /// by default: ascending deadline bucket, then longest prompt (the
+    /// occupied-KVC factor is constant here because slots are uniform).
+    fn admit(&mut self) -> Result<()> {
+        self.sweep_cancelled();
+        // Snapshot the queue view once per admission pass (slack drift
+        // within one pass is microseconds); the snapshot and `waiting`
+        // are kept index-aligned as entries are removed.
+        let now = Instant::now();
+        let mut queue: Vec<QueuedTask> = self
+            .waiting
+            .iter()
+            .map(|p| QueuedTask {
+                seq: p.id,
+                priority: p.opts.priority,
+                slack: p.opts.slo_budget - now.duration_since(p.submitted).as_secs_f64(),
+                occupied_kvc: 0,
+                len: p.opts.prompt.len() as u32,
+            })
+            .collect();
+        while let Some(slot_idx) = self.free_slot() {
+            let Some(best) = self.cfg.ordering.select(&queue) else { break };
+            queue.remove(best);
+            let p = self.waiting.remove(best).unwrap();
+            if p.sink.cancelled() {
+                self.finish_pending(p, FinishReason::Cancelled);
+                continue;
+            }
+            let (logits, state_1) = self.model.prefill(&p.opts.prompt)?;
             self.model.insert(&state_1, slot_idx)?;
             let first = PjrtModel::argmax(&logits);
             let now = Instant::now();
-            let len = prompt.len();
-            let len_cap = (self.model.dims.max_seq - 1).min(len + req.max_new_tokens);
-            self.slots[slot_idx] = Some(Slot {
-                len,
-                len_cap,
-                req,
-                submitted: t0,
-                first_token_at: Some(now),
+            let len = p.opts.prompt.len();
+            let len_cap = (self.model.dims.max_seq - 1).min(len + p.opts.max_new_tokens);
+            let slot = Slot {
+                id: p.id,
+                submitted: p.submitted,
+                sink: p.sink,
+                opts: p.opts,
+                first_token_at: now,
                 last_token_at: now,
                 tbt: Samples::new(),
                 tokens: vec![first],
-            });
+                len,
+                len_cap,
+            };
+            let delivered = slot.sink.send_token(0, first);
+            // The prefill itself emits the first response token, so a
+            // 1-token budget (or an exhausted context) finishes here
+            // without spending a decode iteration.
+            let finish = if !delivered {
+                // Client left while queued: free the slot right away.
+                Some(FinishReason::Cancelled)
+            } else if slot.tokens.len() >= slot.opts.max_new_tokens {
+                Some(FinishReason::Complete)
+            } else if slot.len + 1 >= slot.len_cap.max(2) {
+                Some(FinishReason::LengthCap)
+            } else {
+                None
+            };
+            self.slots[slot_idx] = Some(slot);
+            if let Some(reason) = finish {
+                self.finish_slot(slot_idx, reason, now);
+            }
         }
         Ok(())
     }
 
-    /// One decode iteration across all live slots. Returns completions.
+    /// One decode iteration across all live slots. Returns the number of
+    /// SUCCESSFUL completions this iteration.
     fn decode_once(&mut self) -> Result<usize> {
+        // Cancellation sweep first: a cancelled slot is freed at this
+        // iteration boundary instead of consuming another model step
+        // (admit() sweeps too, so tick() reuses freed slots immediately;
+        // this covers direct decode_once drivers).
+        self.sweep_cancelled();
+
         let b = self.model.dims.decode_slots;
         let mut lens = vec![0i32; b];
         let mut toks = vec![0i32; b];
@@ -174,29 +333,29 @@ impl RealServer {
         let now = Instant::now();
         let mut done = 0usize;
         for i in 0..b {
-            let Some(slot) = self.slots[i].as_mut() else { continue };
-            let tok = PjrtModel::argmax(&logits[i]);
-            slot.tokens.push(tok);
-            slot.len += 1;
-            slot.tbt.push(now.duration_since(slot.last_token_at).as_secs_f64());
-            slot.last_token_at = now;
-            let finished =
-                slot.tokens.len() >= slot.req.max_new_tokens || slot.len + 1 >= slot.len_cap.max(2);
-            if finished {
-                let slot = self.slots[i].take().unwrap();
-                let latency = now.duration_since(slot.submitted).as_secs_f64();
-                self.responses.push(ServeResponse {
-                    id: slot.req.id,
-                    ttft: slot
-                        .first_token_at
-                        .map(|t| t.duration_since(slot.submitted).as_secs_f64())
-                        .unwrap_or(0.0),
-                    latency,
-                    mean_tbt: slot.tbt.mean(),
-                    met_slo: latency <= slot.req.slo_budget,
-                    tokens: slot.tokens,
-                });
-                done += 1;
+            let finish = {
+                let Some(slot) = self.slots[i].as_mut() else { continue };
+                let tok = PjrtModel::argmax(&logits[i]);
+                slot.tokens.push(tok);
+                slot.len += 1;
+                slot.tbt.push(now.duration_since(slot.last_token_at).as_secs_f64());
+                slot.last_token_at = now;
+                let delivered = slot.sink.send_token(slot.tokens.len() as u32 - 1, tok);
+                if !delivered || slot.sink.cancelled() {
+                    Some(FinishReason::Cancelled)
+                } else if slot.tokens.len() >= slot.opts.max_new_tokens {
+                    Some(FinishReason::Complete)
+                } else if slot.len + 1 >= slot.len_cap.max(2) {
+                    Some(FinishReason::LengthCap)
+                } else {
+                    None
+                }
+            };
+            if let Some(reason) = finish {
+                if reason.is_success() {
+                    done += 1;
+                }
+                self.finish_slot(i, reason, now);
             }
         }
         Ok(done)
@@ -214,42 +373,57 @@ impl RealServer {
         self.decode_once()
     }
 
-    /// Run until the queue and all slots drain. Returns responses.
-    pub fn run_to_completion(&mut self) -> Result<&[ServeResponse]> {
-        self.started = Instant::now();
+    /// Run until the queue and all slots drain. Returns all terminal
+    /// records (including cancellations).
+    pub fn run_to_completion(&mut self) -> Result<&[Completion]> {
         loop {
             self.admit()?;
-            if self.slots.iter().all(|s| s.is_none()) && self.waiting.is_empty() {
+            if self.idle() {
                 break;
             }
             self.decode_once()?;
         }
-        Ok(&self.responses)
+        Ok(&self.finished)
     }
 
     pub fn stats(&self) -> ServeStats {
-        let span = self.started.elapsed().as_secs_f64().max(1e-9);
+        let span = self
+            .first_submit
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
         let mut lat = Samples::new();
         let mut ttft = Samples::new();
         let mut tbt = Samples::new();
         let mut tokens = 0usize;
         let mut ok = 0usize;
-        for r in &self.responses {
-            lat.push(r.latency);
-            ttft.push(r.ttft);
-            tbt.push(r.mean_tbt);
-            tokens += r.tokens.len();
-            ok += r.met_slo as usize;
+        let mut completed = 0usize;
+        let mut cancelled = 0usize;
+        for c in &self.finished {
+            match c.finish {
+                FinishReason::Complete | FinishReason::LengthCap => {
+                    completed += 1;
+                    lat.push(c.latency_s);
+                    ttft.push(c.ttft_s);
+                    tbt.push(c.mean_tbt_s);
+                    tokens += c.tokens.len();
+                    ok += c.met_slo as usize;
+                }
+                FinishReason::Cancelled => cancelled += 1,
+                FinishReason::Rejected | FinishReason::Error => {}
+            }
         }
         ServeStats {
-            completed: self.responses.len(),
-            throughput_rps: self.responses.len() as f64 / span,
+            completed,
+            cancelled,
+            rejected: self.n_rejected,
+            throughput_rps: completed as f64 / span,
             throughput_tps: tokens as f64 / span,
             mean_latency: lat.mean(),
             p95_latency: lat.p95(),
             mean_ttft: ttft.mean(),
             mean_tbt: tbt.mean(),
-            ssr: if self.responses.is_empty() { 0.0 } else { ok as f64 / self.responses.len() as f64 },
+            ssr: if completed == 0 { 0.0 } else { ok as f64 / completed as f64 },
             decode_iterations: self.decode_iters,
             mean_batch_occupancy: if self.decode_iters > 0 {
                 self.occupancy_sum as f64 / self.decode_iters as f64
@@ -259,14 +433,35 @@ impl RealServer {
         }
     }
 
-    pub fn responses(&self) -> &[ServeResponse] {
-        &self.responses
+    /// Terminate every in-flight request with `FinishReason::Error` (the
+    /// engine hit an unrecoverable fault): clients blocked on their
+    /// handles observe a terminal event instead of hanging forever.
+    pub fn fail_all(&mut self) {
+        while let Some(p) = self.waiting.pop_front() {
+            self.finish_pending(p, FinishReason::Error);
+        }
+        let now = Instant::now();
+        for idx in 0..self.slots.len() {
+            if self.slots[idx].is_some() {
+                self.finish_slot(idx, FinishReason::Error, now);
+            }
+        }
+    }
+
+    /// All terminal records so far (successes and cancellations).
+    pub fn finished(&self) -> &[Completion] {
+        &self.finished
+    }
+
+    /// Model dimensions (for clients sizing prompts against the window).
+    pub fn dims(&self) -> &crate::runtime::ModelDims {
+        &self.model.dims
     }
 }
 
 /// Commands for the threaded front-end.
 enum Cmd {
-    Submit(ServeRequest),
+    Submit(SubmitOptions, mpsc::Sender<Result<RequestHandle, ServeError>>),
     Drain,
 }
 
@@ -274,13 +469,17 @@ enum Cmd {
 /// path: the thread owns the PJRT model).
 pub struct ServerHandle {
     tx: mpsc::Sender<Cmd>,
-    rx_done: mpsc::Receiver<(Vec<ServeResponse>, ServeStats)>,
+    rx_done: mpsc::Receiver<(Vec<Completion>, ServeStats)>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
     /// Spawn a worker thread that loads the model from `artifacts_dir`.
     pub fn spawn(artifacts_dir: String) -> Result<Self> {
+        Self::spawn_with(artifacts_dir, ServerConfig::default())
+    }
+
+    pub fn spawn_with(artifacts_dir: String, cfg: ServerConfig) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Cmd>();
         let (tx_done, rx_done) = mpsc::channel();
         let join = std::thread::spawn(move || {
@@ -291,13 +490,15 @@ impl ServerHandle {
                     return;
                 }
             };
-            let mut server = RealServer::new(model);
+            let mut server = RealServer::with_config(model, cfg);
             loop {
                 // Drain pending commands without blocking, then do work.
                 let mut drain_requested = false;
                 loop {
                     match rx.try_recv() {
-                        Ok(Cmd::Submit(r)) => server.submit(r),
+                        Ok(Cmd::Submit(opts, reply)) => {
+                            let _ = reply.send(server.submit(opts));
+                        }
                         Ok(Cmd::Drain) => {
                             drain_requested = true;
                             break;
@@ -306,19 +507,33 @@ impl ServerHandle {
                         Err(mpsc::TryRecvError::Disconnected) => return,
                     }
                 }
-                let _ = server.admit();
+                let fail = |server: &mut RealServer, e: anyhow::Error| {
+                    eprintln!("server: fatal engine error: {e:#}");
+                    server.fail_all();
+                };
+                if let Err(e) = server.admit() {
+                    fail(&mut server, e);
+                    let _ = tx_done.send((server.finished.clone(), server.stats()));
+                    return;
+                }
                 let idle = server.slots.iter().all(|s| s.is_none());
                 if !idle {
-                    let _ = server.decode_once();
+                    if let Err(e) = server.decode_once() {
+                        fail(&mut server, e);
+                        let _ = tx_done.send((server.finished.clone(), server.stats()));
+                        return;
+                    }
                 } else if drain_requested {
-                    let _ = tx_done.send((server.responses.clone(), server.stats()));
+                    let _ = tx_done.send((server.finished.clone(), server.stats()));
                     return;
                 } else {
                     // Nothing to do: block for the next command.
                     match rx.recv() {
-                        Ok(Cmd::Submit(r)) => server.submit(r),
+                        Ok(Cmd::Submit(opts, reply)) => {
+                            let _ = reply.send(server.submit(opts));
+                        }
                         Ok(Cmd::Drain) => {
-                            let _ = tx_done.send((server.responses.clone(), server.stats()));
+                            let _ = tx_done.send((server.finished.clone(), server.stats()));
                             return;
                         }
                         Err(_) => return,
@@ -326,13 +541,13 @@ impl ServerHandle {
                 }
                 if drain_requested {
                     // Finish remaining work, then report.
-                    while !(server.slots.iter().all(|s| s.is_none())
-                        && server.waiting.is_empty())
-                    {
-                        let _ = server.admit();
-                        let _ = server.decode_once();
+                    while !server.idle() {
+                        if server.admit().and_then(|_| server.decode_once()).is_err() {
+                            server.fail_all();
+                            break;
+                        }
                     }
-                    let _ = tx_done.send((server.responses.clone(), server.stats()));
+                    let _ = tx_done.send((server.finished.clone(), server.stats()));
                     return;
                 }
             }
@@ -340,12 +555,16 @@ impl ServerHandle {
         Ok(ServerHandle { tx, rx_done, join: Some(join) })
     }
 
-    pub fn submit(&self, req: ServeRequest) {
-        let _ = self.tx.send(Cmd::Submit(req));
+    /// Submit through the worker's admission controller; the returned
+    /// handle streams tokens as the worker generates them.
+    pub fn submit(&self, opts: SubmitOptions) -> Result<RequestHandle, ServeError> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Cmd::Submit(opts, rtx)).map_err(|_| ServeError::EngineDown)?;
+        rrx.recv().map_err(|_| ServeError::EngineDown)?
     }
 
-    /// Finish all outstanding work and return (responses, stats).
-    pub fn drain(mut self) -> Result<(Vec<ServeResponse>, ServeStats)> {
+    /// Finish all outstanding work and return (completions, stats).
+    pub fn drain(mut self) -> Result<(Vec<Completion>, ServeStats)> {
         let _ = self.tx.send(Cmd::Drain);
         let out = self
             .rx_done

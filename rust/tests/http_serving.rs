@@ -1,8 +1,14 @@
-//! End-to-end HTTP serving test: boot the std-only HTTP front-end on the
-//! real PJRT model, issue concurrent generate requests, check stats.
+//! End-to-end HTTP serving tests: boot the std-only HTTP front-end on the
+//! real PJRT model and exercise the unified request-lifecycle API —
+//! blocking generation, per-token streaming, structured 4xx errors,
+//! admission-control shedding (429), and disconnect-as-cancellation.
 //! Requires `make artifacts` (skips loudly otherwise).
 
-use econoserve::server::http::{http_request, HttpServer};
+use econoserve::api::AdmissionConfig;
+use econoserve::ordering::QueuePolicy;
+use econoserve::server::http::{http_request, ChunkStream, HttpServer};
+use econoserve::server::ServerConfig;
+use econoserve::util::json::Json;
 
 fn artifacts() -> Option<String> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -30,7 +36,7 @@ fn generate_and_stats_roundtrip() {
     for i in 0..3 {
         handles.push(std::thread::spawn(move || {
             let req = format!(
-                r#"{{"prompt": [{}, {}, {}], "max_new_tokens": 6}}"#,
+                r#"{{"prompt": [{}, {}, {}], "max_new_tokens": 6, "slo_budget_s": 300}}"#,
                 10 + i,
                 20 + i,
                 30 + i
@@ -43,6 +49,9 @@ fn generate_and_stats_roundtrip() {
         assert_eq!(code, 200, "{body}");
         assert!(body.contains("\"tokens\""), "{body}");
         assert!(body.contains("\"latency_s\""), "{body}");
+        assert!(body.contains("\"finish\":\"complete\""), "{body}");
+        // A 300 s budget on a 6-token request must be met.
+        assert!(body.contains("\"met_slo\":true"), "{body}");
     }
 
     // Stats reflect the completions.
@@ -50,11 +59,192 @@ fn generate_and_stats_roundtrip() {
     assert_eq!(code, 200);
     assert!(body.contains("\"completed\":3"), "{body}");
 
-    // Bad requests are rejected, not crashed.
-    let (code, _) = http_request(&addr, "POST", "/v1/generate", "{}").unwrap();
-    assert_eq!(code, 400);
-    let (code, _) = http_request(&addr, "GET", "/nope", "").unwrap();
-    assert_eq!(code, 404);
+    // Model info endpoint.
+    let (code, body) = http_request(&addr, "GET", "/v1/info", "").unwrap();
+    assert_eq!(code, 200);
+    let info = Json::parse(&body).unwrap();
+    assert!(info.get("decode_slots").and_then(|v| v.as_usize()).unwrap() >= 1);
+    assert!(info.get("max_prompt").and_then(|v| v.as_usize()).unwrap() >= 1);
+
+    server.shutdown();
+}
+
+#[test]
+fn http_error_paths_are_structured_4xx() {
+    let Some(dir) = artifacts() else { return };
+    let server = HttpServer::start("127.0.0.1:0", &dir).expect("start server");
+    let addr = server.addr;
+
+    let max_prompt = {
+        let (_, body) = http_request(&addr, "GET", "/v1/info", "").unwrap();
+        Json::parse(&body).unwrap().get("max_prompt").and_then(|v| v.as_usize()).unwrap()
+    };
+
+    // Malformed JSON body.
+    let (code, body) = http_request(&addr, "POST", "/v1/generate", "{not json").unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("\"kind\":\"invalid_request\""), "{body}");
+
+    // Missing prompt field.
+    let (code, body) = http_request(&addr, "POST", "/v1/generate", "{}").unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("\"kind\":\"invalid_request\""), "{body}");
+
+    // Empty prompt.
+    let (code, body) =
+        http_request(&addr, "POST", "/v1/generate", r#"{"prompt": []}"#).unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("\"kind\":\"invalid_request\""), "{body}");
+
+    // Prompt over the prefill window.
+    let long: Vec<String> = (0..max_prompt + 1).map(|_| "3".to_string()).collect();
+    let req = format!(r#"{{"prompt": [{}], "max_new_tokens": 2}}"#, long.join(","));
+    let (code, body) = http_request(&addr, "POST", "/v1/generate", &req).unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("\"kind\":\"prompt_too_long\""), "{body}");
+
+    // Unknown route.
+    let (code, body) = http_request(&addr, "GET", "/nope", "").unwrap();
+    assert_eq!(code, 404, "{body}");
+    assert!(body.contains("\"kind\":\"not_found\""), "{body}");
+
+    // The same errors on the streaming endpoint (rejected before any
+    // chunked output starts).
+    let (code, body) = http_request(&addr, "POST", "/v1/stream", "{}").unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("\"kind\":\"invalid_request\""), "{body}");
+
+    server.shutdown();
+}
+
+#[test]
+fn stream_delivers_tokens_incrementally() {
+    let Some(dir) = artifacts() else { return };
+    let server = HttpServer::start("127.0.0.1:0", &dir).expect("start server");
+    let addr = server.addr;
+
+    let mut stream = ChunkStream::open(
+        &addr,
+        "/v1/stream",
+        r#"{"prompt": [5, 6, 7], "max_new_tokens": 6}"#,
+    )
+    .expect("open stream");
+    assert_eq!(stream.status, 200);
+    let chunks = stream.collect_remaining();
+    let token_chunks: Vec<&String> =
+        chunks.iter().filter(|c| c.contains("\"token\"")).collect();
+    let done_pos = chunks.iter().position(|c| c.contains("\"done\":true"));
+    assert!(
+        token_chunks.len() >= 2,
+        "expected >=2 incremental token chunks before completion, got {chunks:?}"
+    );
+    assert_eq!(
+        done_pos,
+        Some(chunks.len() - 1),
+        "terminal chunk must close the stream: {chunks:?}"
+    );
+    // Token indices arrive in order from 0.
+    let first = Json::parse(token_chunks[0].trim()).unwrap();
+    assert_eq!(first.get("index").and_then(|v| v.as_usize()), Some(0));
+    // The terminal chunk is a full completion record.
+    let done = Json::parse(chunks.last().unwrap().trim()).unwrap();
+    assert_eq!(done.get("finish").and_then(|v| v.as_str()), Some("complete"));
+    assert_eq!(done.get("tokens").and_then(|v| v.as_arr()).map(|a| a.len()), Some(6));
+
+    server.shutdown();
+}
+
+#[test]
+fn dropping_stream_connection_cancels_request() {
+    let Some(dir) = artifacts() else { return };
+    let server = HttpServer::start("127.0.0.1:0", &dir).expect("start server");
+    let addr = server.addr;
+
+    // A long request that cannot finish quickly.
+    let mut stream = ChunkStream::open(
+        &addr,
+        "/v1/stream",
+        r#"{"prompt": [9, 8, 7], "max_new_tokens": 100000}"#,
+    )
+    .expect("open stream");
+    assert_eq!(stream.status, 200);
+    assert!(stream.next_chunk().is_some(), "first token arrives");
+    assert!(stream.next_chunk().is_some(), "second token arrives");
+    drop(stream); // disconnect mid-generation
+
+    // The server notices on its next chunk write, cancels, and frees the
+    // slot; the cancellation becomes visible in /v1/stats.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let (code, body) = http_request(&addr, "GET", "/v1/stats", "").unwrap();
+        assert_eq!(code, 200);
+        let cancelled = Json::parse(&body)
+            .unwrap()
+            .get("cancelled")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0);
+        if cancelled >= 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "server never registered the disconnect as a cancellation: {body}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn admission_sheds_load_with_429() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ServerConfig {
+        ordering: QueuePolicy::EconoServe,
+        admission: AdmissionConfig { max_inflight: 2, ..Default::default() },
+    };
+    let server = HttpServer::start_with("127.0.0.1:0", &dir, cfg).expect("start server");
+    let addr = server.addr;
+
+    // 4 long concurrent requests against a 2-request in-flight bound: the
+    // overflow must be shed with a structured 429, not queued.
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        handles.push(std::thread::spawn(move || {
+            let req = format!(
+                r#"{{"prompt": [{}, {}], "max_new_tokens": 48, "slo_budget_s": 300}}"#,
+                20 + i,
+                30 + i
+            );
+            http_request(&addr, "POST", "/v1/generate", &req).unwrap()
+        }));
+    }
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for h in handles {
+        let (code, body) = h.join().unwrap();
+        match code {
+            200 => {
+                ok += 1;
+                // Accepted requests still carry correct SLO accounting.
+                assert!(body.contains("\"met_slo\":true"), "{body}");
+                assert!(body.contains("\"finish\":\"complete\""), "{body}");
+            }
+            429 => {
+                shed += 1;
+                assert!(body.contains("\"kind\":\"queue_full\""), "{body}");
+            }
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    assert!(shed >= 1, "overfilling a 2-deep bound must shed load");
+    assert_eq!(ok + shed, 4);
+
+    // The shed count is recorded in stats.
+    let (_, body) = http_request(&addr, "GET", "/v1/stats", "").unwrap();
+    let stats = Json::parse(&body).unwrap();
+    assert_eq!(stats.get("rejected").and_then(|v| v.as_usize()), Some(shed));
+    assert_eq!(stats.get("completed").and_then(|v| v.as_usize()), Some(ok));
 
     server.shutdown();
 }

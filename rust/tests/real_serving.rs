@@ -1,0 +1,147 @@
+//! Request-lifecycle tests against the real PJRT engine, driven
+//! synchronously through `RealServer::tick` so slot accounting is
+//! deterministic: cancellation frees a decode slot mid-generation and
+//! the freed slot is immediately handed to a queued request; admission
+//! bounds the queue; stats anchor their time base at the first submit.
+//! Requires `make artifacts` (skips loudly otherwise).
+
+use econoserve::api::{AdmissionConfig, FinishReason, StreamEvent, SubmitOptions};
+use econoserve::ordering::QueuePolicy;
+use econoserve::runtime::PjrtModel;
+use econoserve::server::{RealServer, ServerConfig};
+
+fn artifacts() -> Option<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir.to_string_lossy().into_owned())
+    } else {
+        eprintln!("SKIP real_serving: run `make artifacts` first");
+        None
+    }
+}
+
+fn load(dir: &str) -> RealServer {
+    RealServer::new(PjrtModel::load(dir).expect("load artifacts"))
+}
+
+#[test]
+fn cancellation_frees_slot_and_queued_request_is_admitted() {
+    let Some(dir) = artifacts() else { return };
+    let mut server = load(&dir);
+    let slots = server.dims().decode_slots;
+
+    // Fill every decode slot with a long-running request.
+    let mut streams = Vec::new();
+    for i in 0..slots {
+        let opts = SubmitOptions::new(vec![3 + i as i32, 4, 5], 10_000);
+        streams.push(server.submit(opts).expect("admitted"));
+    }
+    server.tick().expect("tick");
+    assert_eq!(server.live_slots(), slots, "all slots busy");
+
+    // One more queues behind the full batch.
+    let queued = server.submit(SubmitOptions::new(vec![9, 9, 9], 4)).expect("admitted");
+    server.tick().expect("tick");
+    assert_eq!(server.queue_len(), 1, "no slot free: the request must wait");
+
+    // Cancel one in-flight stream: its slot is freed at the next
+    // iteration boundary and the queued request takes it.
+    streams[0].cancel();
+    server.tick().expect("tick");
+    assert_eq!(server.queue_len(), 0, "freed slot goes to the queued request");
+    assert_eq!(server.live_slots(), slots, "slot reused, not leaked");
+
+    // The cancelled stream terminates with FinishReason::Cancelled.
+    let cancelled = streams.remove(0);
+    let c = cancelled.wait().expect("terminal event delivered");
+    assert_eq!(c.finish, FinishReason::Cancelled);
+    assert!(!c.met_slo);
+
+    // The queued request (4 tokens) runs to completion in the recycled
+    // slot within a few more iterations.
+    for _ in 0..8 {
+        server.tick().expect("tick");
+    }
+    // Drain the queued handle's buffered events: it must have received
+    // incremental tokens starting at index 0 and a successful terminal.
+    let mut saw_first_token = false;
+    let mut finish = None;
+    while let Some(ev) = queued.try_recv() {
+        match ev {
+            StreamEvent::Token(t) => {
+                if t.index == 0 {
+                    saw_first_token = true;
+                }
+            }
+            StreamEvent::Finished(c) => finish = Some(c.finish),
+        }
+    }
+    assert!(saw_first_token, "queued request streamed from its first token");
+    assert_eq!(finish, Some(FinishReason::Complete));
+
+    // Engine-side accounting agrees.
+    let stats = server.stats();
+    assert_eq!(stats.cancelled, 1);
+    assert!(stats.completed >= 1);
+
+    // Remaining long streams: cancel them so the test ends quickly.
+    for s in &streams {
+        s.cancel();
+    }
+    server.tick().expect("tick");
+    assert_eq!(server.stats().cancelled, 1 + streams.len());
+}
+
+#[test]
+fn admission_bounds_inflight_on_real_path() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ServerConfig {
+        ordering: QueuePolicy::EconoServe,
+        admission: AdmissionConfig { max_inflight: 1, ..Default::default() },
+    };
+    let mut server =
+        RealServer::with_config(PjrtModel::load(&dir).expect("load artifacts"), cfg);
+
+    let first = server.submit(SubmitOptions::new(vec![4, 5], 3)).expect("first fits");
+    let err = server.submit(SubmitOptions::new(vec![6, 7], 3)).expect_err("bound hit");
+    assert_eq!(err.http_status(), 429);
+    assert_eq!(err.kind(), "queue_full");
+    assert_eq!(err.finish_reason(), FinishReason::Rejected);
+
+    server.run_to_completion().expect("drain");
+    let c = first.wait().expect("completion");
+    assert_eq!(c.finish, FinishReason::Complete);
+    let stats = server.stats();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.rejected, 1);
+
+    // The slot is free again: a new request is admitted.
+    assert!(server.submit(SubmitOptions::new(vec![8, 9], 2)).is_ok());
+    server.run_to_completion().expect("drain");
+    assert_eq!(server.stats().completed, 2);
+}
+
+#[test]
+fn stats_time_base_anchors_at_first_submit() {
+    let Some(dir) = artifacts() else { return };
+    let mut server = load(&dir);
+
+    // Idle time before the first submit must NOT count against
+    // throughput (the old code only reset the span inside
+    // run_to_completion, so tick-driven use reported garbage).
+    std::thread::sleep(std::time::Duration::from_secs(2));
+    let h = server.submit(SubmitOptions::new(vec![11, 12, 13], 4)).expect("admitted");
+    // Tick-driven (no run_to_completion): the span anchor still applies.
+    while server.live_slots() > 0 || server.queue_len() > 0 {
+        server.tick().expect("tick");
+    }
+    let c = h.wait().expect("completion");
+    assert_eq!(c.finish, FinishReason::Complete);
+    let stats = server.stats();
+    assert_eq!(stats.completed, 1);
+    assert!(
+        stats.throughput_rps > 1.0 / 1.5,
+        "span must start at first submit, not construction: {} req/s",
+        stats.throughput_rps
+    );
+}

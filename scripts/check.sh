@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command (see ROADMAP.md): release build, tests,
+# and formatting. Run from anywhere; operates on the rust/ crate.
+#
+#   scripts/check.sh            # build + test + fmt --check
+#   SKIP_FMT=1 scripts/check.sh # without the formatting gate
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+if [ -z "${SKIP_FMT:-}" ]; then
+    cargo fmt --check
+fi
+echo "tier-1 check: OK"
