@@ -1,56 +1,143 @@
-//! Micro-benchmark: batch-formation (Scheduler::step) latency per system
-//! at a deep queue — backs Fig 14 and the §Perf L3 target (<= 50 µs at
-//! 1k-deep queues for EconoServe).
+//! Micro-benchmark: batch-formation (`Scheduler::plan`) latency per
+//! sched × alloc combination at a deep queue — backs Fig 14 and the §Perf
+//! L3 target (<= 50 µs at 1k-deep queues for EconoServe).
+//!
+//! Run directly for the human-readable table, or with
+//! `--json <path>` (what `scripts/bench.sh` does) to also emit a single
+//! machine-readable `BENCH_sched.json` with p50/p95 per combination so
+//! the hot-path perf trajectory is tracked across PRs.
+
 use econoserve::core::world::World;
 use econoserve::engine::{Engine, SimEngine};
 use econoserve::figures::common;
+use econoserve::sched::plan_iteration;
 use econoserve::util::bench::{black_box, time_fn};
 use std::time::Duration;
 
-fn main() {
-    let cfg = common::cfg("opt-13b", "sharegpt");
-    println!("scheduler step latency at ~1k-deep queue (sharegpt, opt-13b):");
-    for sys in ["orca", "fastserve", "vllm", "sarathi", "multires", "sync_coupled", "econoserve"] {
-        // Build a world mid-overload: 1000 queued requests.
-        let items = common::workload(&cfg, "sharegpt", 1000.0, 1.0, 7);
-        let pred = common_pred(&cfg);
-        let mut world = World::new(cfg.clone(), &items, pred);
-        world.clock = 2.0;
-        world.drain_arrivals();
-        let mut sched = econoserve::sched::by_name(sys).unwrap();
-        let engine = SimEngine::new();
-        // Warm the system into steady state: run some iterations.
-        for _ in 0..50 {
-            let b = sched.step(&mut world);
-            if b.is_empty() {
-                world.clock += 0.05;
-                continue;
-            }
-            let (d, u) = engine.iteration_cost(&b, &world);
-            world.execute_iteration(&b, d, u);
-        }
-        let mut res = time_fn(
-            || {
-                let b = sched.step(&mut world);
-                if !b.is_empty() {
-                    let (d, u) = engine.iteration_cost(&b, &world);
-                    world.execute_iteration(&b, d, u);
-                }
-                black_box(());
-            },
-            200,
-            Duration::from_millis(300),
-        );
-        println!("  {}", res.report(sys));
+const SCHEDS: [&str; 7] =
+    ["orca", "fastserve", "vllm", "sarathi", "multires", "sync_coupled", "econoserve"];
+
+/// Allocators a scheduler can run under sustained overload. Schedulers
+/// without mid-flight lease growth or a preemption recovery path (the
+/// ORCA family; the exact-allocation group for `block`) need an
+/// admission-complete allocator — those combos are excluded, and the
+/// exclusion is printed rather than silently skipped.
+fn allocs_for(sched: &str) -> &'static [&'static str] {
+    match sched {
+        "orca" | "fastserve" => &["max", "pipelined-max"],
+        "vllm" | "sarathi" => &["block", "exact", "pipelined-block", "pipelined-exact"],
+        _ => &["exact", "pipelined-exact", "max"],
     }
 }
 
-fn common_pred(
-    cfg: &econoserve::config::SystemConfig,
-) -> Box<dyn econoserve::predictor::Predictor> {
-    Box::new(econoserve::predictor::SimPredictor::for_trace(
+struct Row {
+    combo: String,
+    mean_s: f64,
+    p50_s: f64,
+    p95_s: f64,
+    samples: usize,
+}
+
+fn bench_combo(combo: &str) -> Row {
+    let cfg = common::cfg("opt-13b", "sharegpt");
+    // Build a world mid-overload: 1000 queued requests.
+    let items = common::workload(&cfg, "sharegpt", 1000.0, 1.0, 7);
+    let pred = Box::new(econoserve::predictor::SimPredictor::for_trace(
         "sharegpt",
         cfg.block_size,
         cfg.seed,
-    ))
+    ));
+    let mut world = World::new(cfg, &items, pred);
+    let sys = econoserve::sched::by_name(combo).unwrap();
+    world.set_allocator(sys.alloc);
+    let mut sched = sys.sched;
+    world.clock = 2.0;
+    world.drain_arrivals();
+    let engine = SimEngine::new();
+    // Warm the system into steady state: run some iterations.
+    for _ in 0..50 {
+        let b = plan_iteration(&mut world, sched.as_mut());
+        if b.is_empty() {
+            world.clock += 0.05;
+            continue;
+        }
+        let (d, u) = engine.iteration_cost(&b, &world);
+        world.apply_plan(&b, d, u);
+    }
+    let mut res = time_fn(
+        || {
+            let b = plan_iteration(&mut world, sched.as_mut());
+            if !b.is_empty() {
+                let (d, u) = engine.iteration_cost(&b, &world);
+                world.apply_plan(&b, d, u);
+            }
+            black_box(());
+        },
+        100,
+        Duration::from_millis(150),
+    );
+    println!("  {}", res.report(combo));
+    Row {
+        combo: combo.to_string(),
+        mean_s: res.samples.mean(),
+        p50_s: res.samples.p50(),
+        p95_s: res.samples.p95(),
+        samples: res.samples.len(),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let fast = std::env::var("FAST").is_ok();
+
+    println!("scheduler plan latency at ~1k-deep queue (sharegpt, opt-13b), sched x alloc grid:");
+    let mut rows: Vec<Row> = Vec::new();
+    for sched in SCHEDS {
+        // Default pairing first, then the rest of the supported axis.
+        let default = econoserve::sched::default_alloc(sched).unwrap();
+        rows.push(bench_combo(&format!("{sched}+{default}")));
+        if fast {
+            continue;
+        }
+        let supported = allocs_for(sched);
+        for alloc in econoserve::kvc::all_allocators() {
+            if *alloc == default {
+                continue;
+            }
+            if supported.contains(alloc) {
+                rows.push(bench_combo(&format!("{sched}+{alloc}")));
+            } else {
+                println!("  {sched}+{alloc}: skipped (needs admission-complete lease)");
+            }
+        }
+    }
+
+    if let Some(path) = json_path {
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"sched_hotpath\",\n");
+        out.push_str("  \"unit\": \"seconds_per_iteration\",\n");
+        out.push_str("  \"workload\": \"sharegpt opt-13b, 1000 queued requests\",\n");
+        out.push_str("  \"note\": \"plan-formation latency per sched+alloc combo; regenerate with scripts/bench.sh\",\n");
+        out.push_str("  \"pending\": false,\n");
+        out.push_str("  \"combos\": [\n");
+        for (i, r) in rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"system\": \"{}\", \"mean\": {:.9}, \"p50\": {:.9}, \"p95\": {:.9}, \"samples\": {}}}{}\n",
+                r.combo,
+                r.mean_s,
+                r.p50_s,
+                r.p95_s,
+                r.samples,
+                if i + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(&path, out).expect("write bench json");
+        println!("wrote {path}");
+    }
 }

@@ -3,7 +3,7 @@
 //! EconoServe has two engines: the calibrated discrete-event simulator
 //! (driven by [`crate::coordinator`]) and the real PJRT model server
 //! ([`crate::server`]). Before this module existed they spoke different
-//! dialects — the simulator's `Scheduler::step(world) -> Batch` seam
+//! dialects — the simulator's `Scheduler::plan(ctx) -> BatchPlan` seam
 //! versus the real server's blocking submit/drain channels — so clients
 //! could not stream tokens, cancel a request, or be load-shed, and the
 //! paper's ordering policy only ran on the simulated path.

@@ -16,7 +16,7 @@ use std::collections::VecDeque;
 
 use crate::config::{ModelProfile, SystemConfig};
 use crate::core::{ReqId, Time};
-use crate::kvc::{BlockPool, Priority};
+use crate::kvc::{Allocator, BlockAlloc, ReserveClass};
 use crate::metrics::{Collector, Summary};
 use crate::trace::TraceItem;
 use crate::util::stats::Samples;
@@ -131,9 +131,10 @@ impl DistServeSim {
             })
             .collect();
 
-        let mut p_pool =
-            BlockPool::new(cfg.prefill.kvc_tokens(), 32, 0);
-        let mut d_pool = BlockPool::new(cfg.decode.kvc_tokens(), 32, 0);
+        // Both instances speak the first-class allocator API; DistServe's
+        // decode side is vLLM-style, so block-allocation on both.
+        let mut p_pool = BlockAlloc::new(cfg.prefill.kvc_tokens(), 32, 0);
+        let mut d_pool = BlockAlloc::new(cfg.decode.kvc_tokens(), 32, 0);
         let mut p_clock = 0.0f64;
         let mut d_clock = 0.0f64;
         let mut p_queue: VecDeque<ReqId> = VecDeque::new();
@@ -183,7 +184,7 @@ impl DistServeSim {
                     if fwd + plen > cfg.prefill.tfs && fwd > 0 {
                         break;
                     }
-                    if p_pool.alloc_tokens(id, plen, Priority::Reserved).is_err() {
+                    if !p_pool.extend(id, plen, ReserveClass::Reserved).ok() {
                         break;
                     }
                     p_queue.pop_front();
@@ -212,7 +213,7 @@ impl DistServeSim {
                 let context: f64 = batch.iter().map(|&id| recs[id].it.prompt_len as f64 * 0.5).sum();
                 let (dur, util) = Self::iter_cost(&cfg.prefill, fwd, context);
                 for &id in &batch {
-                    p_pool.write_tokens(id, recs[id].it.prompt_len);
+                    p_pool.record_write(id, recs[id].it.prompt_len);
                 }
                 p_clock += dur;
                 col_p.record_iteration(
@@ -247,10 +248,10 @@ impl DistServeSim {
                 // Admit transferred requests (block-alloc for their context).
                 while let Some(&id) = d_queue.front() {
                     let need = recs[id].it.prompt_len + 2;
-                    if d_pool.alloc_tokens(id, need, Priority::Reserved).is_err() {
+                    if !d_pool.extend(id, need, ReserveClass::Reserved).ok() {
                         break;
                     }
-                    d_pool.write_tokens(id, recs[id].it.prompt_len);
+                    d_pool.record_write(id, recs[id].it.prompt_len);
                     d_queue.pop_front();
                     recs[id].st = St::Decoding;
                     d_running.push(id);
@@ -279,18 +280,17 @@ impl DistServeSim {
                 while i < d_running.len() {
                     let id = d_running[i];
                     let ctx = recs[id].it.prompt_len + recs[id].generated;
-                    match d_pool.ensure_capacity(id, ctx + 1, Priority::Reserved) {
-                        Ok(_) => i += 1,
-                        Err(_) => {
-                            let victim = *d_running.last().unwrap();
-                            d_running.pop();
-                            d_pool.release(victim);
-                            recs[victim].st = St::WaitDecode;
-                            d_queue.push_front(victim);
-                            col_d.preemptions += 1;
-                            if victim == id {
-                                break;
-                            }
+                    if d_pool.grow_to(id, ctx + 1, ReserveClass::Reserved).ok() {
+                        i += 1;
+                    } else {
+                        let victim = *d_running.last().unwrap();
+                        d_running.pop();
+                        d_pool.release(victim);
+                        recs[victim].st = St::WaitDecode;
+                        d_queue.push_front(victim);
+                        col_d.preemptions += 1;
+                        if victim == id {
+                            break;
                         }
                     }
                 }
@@ -303,7 +303,7 @@ impl DistServeSim {
                 d_clock += dur;
                 let mut completed = 0;
                 for &id in &d_running {
-                    d_pool.write_tokens(id, 1);
+                    d_pool.record_write(id, 1);
                     let r = &mut recs[id];
                     r.generated += 1;
                     if let Some(last) = r.last_emit {

@@ -18,7 +18,7 @@ use crate::api::AdmissionController;
 use crate::core::world::World;
 use crate::engine::Engine;
 use crate::metrics::{summarize, Summary};
-use crate::sched::Scheduler;
+use crate::sched::{plan_iteration, Scheduler};
 
 /// Stop conditions for a run.
 #[derive(Debug, Clone, Copy)]
@@ -95,11 +95,11 @@ pub fn run_admitted(
         }
 
         let t0 = Instant::now();
-        let batch = sched.step(world);
+        let plan = plan_iteration(world, sched);
         let sched_wall = t0.elapsed().as_secs_f64();
         let charged = sched_wall * world.cfg.sched_time_scale;
 
-        if batch.is_empty() {
+        if plan.is_empty() {
             // Nothing runnable. Fast-forward: to the next arrival if it is
             // sooner than the idle quantum, else by the idle quantum —
             // schedulers may be waiting on non-arrival wakeups such as
@@ -124,8 +124,8 @@ pub fn run_admitted(
         world.col.record_sched(charged);
         world.clock += charged;
 
-        let (dur, util) = engine.iteration_cost(&batch, world);
-        world.execute_iteration(&batch, dur, util);
+        let (dur, util) = engine.iteration_cost(&plan, world);
+        world.apply_plan(&plan, dur, util);
         iters += 1;
     }
 
@@ -197,7 +197,10 @@ pub mod harness {
         }
     }
 
-    /// One full simulated run of `system` over `items`.
+    /// One full simulated run of `system` over `items`. `system` uses the
+    /// registry grammar, so both `"econoserve"` and grid points like
+    /// `"vllm+exact"` work — the resolved allocator is installed into the
+    /// world before the run.
     pub fn simulate(
         cfg: &SystemConfig,
         system: &str,
@@ -208,8 +211,10 @@ pub mod harness {
     ) -> RunResult {
         let pred = predictor_for(cfg, trace, oracle);
         let mut world = World::new(cfg.clone(), items, pred);
-        let mut sched = crate::sched::by_name(system)
+        let sys = crate::sched::by_name(system)
             .unwrap_or_else(|| panic!("unknown system '{system}'"));
+        world.set_allocator(sys.alloc);
+        let mut sched = sys.sched;
         let engine = SimEngine::new();
         let res = run(&mut world, sched.as_mut(), &engine, limits);
         if std::env::var("ECONO_DEBUG").is_ok() {
@@ -258,7 +263,9 @@ mod tests {
         let n = items.len();
         let pred = Box::new(OraclePredictor::new(cfg.block_size));
         let mut world = crate::core::world::World::new(cfg, &items, pred);
-        let mut sched = crate::sched::by_name("orca").unwrap();
+        let sys = crate::sched::by_name("orca").unwrap();
+        world.set_allocator(sys.alloc);
+        let mut sched = sys.sched;
         let adm = AdmissionController::new(AdmissionConfig {
             max_inflight: 8,
             max_prompt: 0,

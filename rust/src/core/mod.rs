@@ -204,16 +204,40 @@ impl BatchTask {
     }
 }
 
-/// The batch a scheduler submits for one iteration.
+/// How a preemption treats the victim's KV data (config::PreemptMode is the
+/// *policy*; this is the mechanism chosen for one specific preemption).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptKind {
+    /// Swap KV to CPU memory (vLLM): swap-in cost charged on resume.
+    Swap,
+    /// Drop KV; recompute later as prefill work.
+    DropRecompute,
+}
+
+/// The typed plan a scheduler returns for one iteration: the tasks to
+/// execute plus a record of the preemptions and guest evictions it
+/// decided through `IterCtx`. Allocation intents are tallied by the
+/// allocator itself and folded into metrics by `World::apply_plan` — the
+/// only code that executes a plan against the KVC.
 #[derive(Debug, Clone, Default)]
-pub struct Batch {
+pub struct BatchPlan {
     pub tasks: Vec<BatchTask>,
     /// Extra time charged to this iteration beyond the compute cost
     /// (KV swap-in from CPU memory, KV transfer, ...).
     pub extra_time: f64,
+    /// Requests this plan preempted (hard: lease released), with the
+    /// mechanism used per victim.
+    pub preempted: Vec<(ReqId, PreemptKind)>,
+    /// Pipelined guests whose borrowed space this plan revoked.
+    pub evicted: Vec<ReqId>,
 }
 
-impl Batch {
+impl BatchPlan {
+    /// Plan containing just `tasks` (test / driver convenience).
+    pub fn of(tasks: Vec<BatchTask>) -> Self {
+        BatchPlan { tasks, ..Default::default() }
+    }
+
     pub fn forward_size(&self) -> u32 {
         self.tasks.iter().map(|t| t.forward_tokens()).sum()
     }
@@ -272,18 +296,16 @@ mod tests {
     }
 
     #[test]
-    fn batch_forward_size() {
-        let b = Batch {
-            tasks: vec![
-                BatchTask::Prefill { id: 0, chunk: 128 },
-                BatchTask::Decode { id: 1 },
-                BatchTask::Decode { id: 2 },
-            ],
-            extra_time: 0.0,
-        };
+    fn batch_plan_forward_size() {
+        let b = BatchPlan::of(vec![
+            BatchTask::Prefill { id: 0, chunk: 128 },
+            BatchTask::Decode { id: 1 },
+            BatchTask::Decode { id: 2 },
+        ]);
         assert_eq!(b.forward_size(), 130);
         assert_eq!(b.decode_count(), 2);
         assert_eq!(b.prefill_tokens(), 128);
+        assert!(b.preempted.is_empty() && b.evicted.is_empty());
     }
 
     #[test]

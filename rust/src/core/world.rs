@@ -1,28 +1,31 @@
-//! The simulation world: request records, arrival feed, KVC pool, KVC-
-//! pipelining registry, metrics, and the shared iteration-execution
-//! semantics every scheduler drives.
+//! The simulation world: request records, arrival feed, the KVC
+//! allocator, metrics, and the shared iteration-execution semantics every
+//! scheduler drives.
 //!
-//! Division of labour:
-//!  * **Schedulers** decide *what* runs (batch formation), own all KVC
-//!    *allocation* decisions, and react to the events of the previous
-//!    iteration (requeue, preempt, rescue with reserve, ...).
-//!  * **World::execute_iteration** applies the physics: token writes,
-//!    completions, TBT/JCT timestamps, KVC-pipelining overrun eviction,
-//!    and guest transfer when a host finishes early. These semantics are
-//!    identical across schedulers, so they live here.
+//! Division of labour (the policy/mechanism split):
+//!  * **Schedulers** decide *what* runs. They see the world through an
+//!    [`IterCtx`]: read-only state views, the previous iteration's
+//!    [`Events`], typed request-state mutators, and an
+//!    `&mut dyn Allocator` — the only path to KVC capacity. They return a
+//!    [`BatchPlan`].
+//!  * **[`World::apply_plan`]** executes the plan's physics: token
+//!    writes, completions, TBT/JCT timestamps, KVC-pipelining overrun
+//!    eviction, guest transfer when a host finishes early, and the
+//!    per-iteration [`crate::kvc::AllocTally`] fold into metrics. It is
+//!    the only code that executes a plan against the pool; schedulers
+//!    never touch block accounting directly.
 
 use std::collections::VecDeque;
 
-use super::{Batch, BatchTask, Phase, ReqId, ReqRec, Request, Time};
+use super::{BatchPlan, BatchTask, Phase, PreemptKind, ReqId, ReqRec, Request, Time};
 use crate::config::SystemConfig;
-use crate::kvc::pipeline::PipeRegistry;
-use crate::kvc::{BlockPool, Priority};
+use crate::kvc::Allocator;
 use crate::metrics::Collector;
 use crate::predictor::Predictor;
 use crate::trace::TraceItem;
 
 /// Events produced by the last executed iteration, consumed by the
-/// scheduler at the next `step`.
+/// scheduler at the next planning step (delivered in [`IterCtx::events`]).
 #[derive(Debug, Default, Clone)]
 pub struct Events {
     /// PTs whose prompt finished this iteration (they emitted their first
@@ -51,22 +54,14 @@ impl Events {
     }
 }
 
-/// How a preemption treats the victim's KV data (config::PreemptMode is the
-/// *policy*; this is the mechanism chosen for one specific preemption).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PreemptKind {
-    /// Swap KV to CPU memory (vLLM): swap-in cost charged on resume.
-    Swap,
-    /// Drop KV; recompute later as prefill work.
-    DropRecompute,
-}
-
 pub struct World {
     pub cfg: SystemConfig,
     pub clock: Time,
     pub recs: Vec<ReqRec>,
-    pub pool: BlockPool,
-    pub pipes: PipeRegistry,
+    /// The KVC allocation mechanism (policy chosen via `set_allocator` /
+    /// the `sched::by_name` registry). Private: schedulers reach it only
+    /// through [`IterCtx::alloc`].
+    kvc: Box<dyn Allocator>,
     pub col: Collector,
     /// Arrived requests not yet picked up by the scheduler.
     pub inbox: VecDeque<ReqId>,
@@ -83,7 +78,9 @@ pub struct World {
 
 impl World {
     /// Build a world from trace items; predictions (padded) are assigned
-    /// via `predictor` and deadlines via the cfg SLO formula.
+    /// via `predictor` and deadlines via the cfg SLO formula. The default
+    /// allocator is `exact`; install the scheduler's pairing with
+    /// [`World::set_allocator`] (the harness does this from the registry).
     pub fn new(cfg: SystemConfig, items: &[TraceItem], mut predictor: Box<dyn Predictor>) -> Self {
         let mut recs = Vec::with_capacity(items.len());
         let mut pred_ready = Vec::with_capacity(items.len());
@@ -104,13 +101,18 @@ impl World {
         }
         let mut future: Vec<ReqId> = (0..recs.len()).collect();
         future.sort_by(|a, b| recs[*b].req.arrival.partial_cmp(&recs[*a].req.arrival).unwrap());
-        let pool = BlockPool::new(cfg.kvc_tokens(), cfg.block_size, cfg.reserve_tokens());
+        let kvc = crate::kvc::by_name(
+            "exact",
+            cfg.kvc_tokens(),
+            cfg.block_size,
+            cfg.reserve_tokens(),
+        )
+        .expect("default allocator");
         World {
             cfg,
             clock: 0.0,
             recs,
-            pool,
-            pipes: PipeRegistry::new(),
+            kvc,
             col: Collector::new(),
             inbox: VecDeque::new(),
             future,
@@ -118,6 +120,42 @@ impl World {
             pred_ready,
             predictor,
         }
+    }
+
+    /// Swap in the KVC allocation policy by registry name (`max`, `block`,
+    /// `exact`, `pipelined-*`). Must happen before any allocation.
+    pub fn set_allocator(&mut self, name: &str) {
+        assert_eq!(
+            self.kvc.total_allocated(),
+            0,
+            "allocator swap after allocations were made"
+        );
+        self.kvc = crate::kvc::by_name(
+            name,
+            self.cfg.kvc_tokens(),
+            self.cfg.block_size,
+            self.cfg.reserve_tokens(),
+        )
+        .unwrap_or_else(|| panic!("unknown allocator '{name}'"));
+    }
+
+    /// Read-only view of the KVC allocator (metrics, figures, tests).
+    pub fn kvc(&self) -> &dyn Allocator {
+        self.kvc.as_ref()
+    }
+
+    /// Mutable allocator access for drivers and tests. Schedulers never
+    /// see a `&mut World`, so this does not leak mechanism to policy.
+    pub fn kvc_mut(&mut self) -> &mut dyn Allocator {
+        self.kvc.as_mut()
+    }
+
+    /// Open the planning context for one iteration: consumes the previous
+    /// iteration's events and exposes the typed scheduler contract.
+    /// Usually called through `sched::plan_iteration`.
+    pub fn begin_iter(&mut self) -> IterCtx<'_> {
+        let events = std::mem::take(&mut self.events);
+        IterCtx { w: self, events, preempted: Vec::new(), evicted: Vec::new() }
     }
 
     /// Re-predict the REMAINING response length of an under-provisioned
@@ -132,14 +170,6 @@ impl World {
         rec.predicted_base = rec.generated;
         rec.predicted_rl = padded;
         padded
-    }
-
-    /// Take (consume) the last iteration's events. Schedulers MUST use
-    /// this rather than reading `events` in place: a step that produces an
-    /// empty batch skips `execute_iteration`, so in-place events would be
-    /// re-processed on the next step.
-    pub fn take_events(&mut self) -> Events {
-        std::mem::take(&mut self.events)
     }
 
     /// Move arrivals with `arrival <= clock` into the inbox. Returns how
@@ -187,7 +217,7 @@ impl World {
     }
 
     // ------------------------------------------------------------------
-    // Scheduler-facing helpers
+    // Request-state mechanism (reached through IterCtx during planning)
     // ------------------------------------------------------------------
 
     /// Mark the start of service (first time any chunk of the request is
@@ -203,15 +233,22 @@ impl World {
         }
     }
 
-    /// Preempt a running/queued GT. Swap releases its pool allocation and
-    /// records swapped bytes; DropRecompute releases and queues recompute
-    /// work. (Guests are detached by the caller via `pipes`.)
-    pub fn preempt(&mut self, id: ReqId, kind: PreemptKind) {
+    /// Preempt a running/queued GT. Swap releases its lease and records
+    /// swapped bytes; DropRecompute releases and queues recompute work.
+    /// Guests orphaned by the release are evicted offload-free and
+    /// returned so the caller (IterCtx records them into the plan) can
+    /// pull them out of its running set.
+    pub fn preempt(&mut self, id: ReqId, kind: PreemptKind) -> Vec<ReqId> {
         let now = self.clock;
-        let written = self.pool.written_tokens(id);
-        let guest_written =
-            self.pool.alloc_of(id).map(|a| a.guest_written).unwrap_or(0);
-        self.pool.release(id);
+        let rel = self.kvc.release(id);
+        let mut orphans = Vec::new();
+        for g in rel.orphans {
+            if !self.recs[g].is_done() {
+                self.orphan_evict(g);
+                orphans.push(g);
+            }
+        }
+        let lost = rel.written + rel.guest_written;
         let rec = &mut self.recs[id];
         rec.phase = Phase::Preempted;
         rec.preempted_since.get_or_insert(now);
@@ -219,14 +256,24 @@ impl World {
         rec.kvc_held = 0;
         match kind {
             PreemptKind::Swap => {
-                rec.swapped_tokens = written + guest_written;
+                rec.swapped_tokens = lost;
                 self.col.swap_preemptions += 1;
             }
             PreemptKind::DropRecompute => {
-                rec.lost_kv = written + guest_written;
+                rec.lost_kv = lost;
             }
         }
         self.col.preemptions += 1;
+        orphans
+    }
+
+    /// A guest whose host vanished mid-plan: same mechanics as
+    /// [`World::evict_guest`] but no event fires (apply_plan clears
+    /// events before execution); the caller is responsible for surfacing
+    /// the eviction — `IterCtx::preempt` records it into the plan's
+    /// eviction list.
+    fn orphan_evict(&mut self, g: ReqId) {
+        self.evict_guest_core(g);
     }
 
     /// Swap-in cost (seconds) for a swapped-out request (vLLM restore).
@@ -240,21 +287,23 @@ impl World {
     /// method's second factor): processed prompt chunks + generated tokens
     /// still resident (not lost/swapped).
     pub fn occupied_kvc(&self, id: ReqId) -> u32 {
-        self.pool.written_tokens(id)
-            + self.pool.alloc_of(id).map(|a| a.guest_written).unwrap_or(0)
+        self.kvc.occupied(id)
     }
 
     // ------------------------------------------------------------------
-    // Iteration execution (shared physics)
+    // Plan execution (shared physics)
     // ------------------------------------------------------------------
 
-    /// Apply one iteration of `batch` lasting `dur` seconds with the given
-    /// engine-computed GPU utilization. Populates `self.events`.
-    pub fn execute_iteration(&mut self, batch: &Batch, dur: f64, gpu_util: f64) {
+    /// Execute `plan` as one iteration lasting `dur` seconds with the
+    /// given engine-computed GPU utilization. Applies token writes and
+    /// completions, sweeps pipelining overruns, folds the allocator's
+    /// per-iteration outcome tally into metrics, and populates
+    /// `self.events` for the next planning step.
+    pub fn apply_plan(&mut self, plan: &BatchPlan, dur: f64, gpu_util: f64) {
         self.events.clear();
         let end = self.clock + dur;
 
-        for task in &batch.tasks {
+        for task in &plan.tasks {
             match *task {
                 BatchTask::Prefill { id, chunk } => {
                     debug_assert!(chunk > 0);
@@ -329,13 +378,13 @@ impl World {
         // Host write-head vs guest overrun sweep. Runs after all tasks so
         // an eviction decision cannot be clobbered by the guest's own
         // decode task later in the same batch.
-        for task in &batch.tasks {
+        for task in &plan.tasks {
             if let BatchTask::Decode { id } = *task {
                 if self.recs[id].is_done() {
                     continue;
                 }
                 let head = self.recs[id].generated - self.recs[id].gt_span_base;
-                let over = self.pipes.overrun_guests(id, head);
+                let over = self.kvc.overrun_guests(id, head);
                 for g in over {
                     self.evict_guest(g);
                 }
@@ -347,13 +396,13 @@ impl World {
         // Sparse allocation-breakdown sampling (diagnostics for the KVC
         // economy; cheap: every 32nd iteration).
         if self.col.iterations % 32 == 0 {
-            let cap = self.pool.capacity_tokens() as f64;
+            let cap = self.kvc.capacity_tokens() as f64;
             let mut run_w = 0u64;
             let mut run_a = 0u64;
             let mut wait_h = 0u64;
             for rec in &self.recs {
-                let alloc = self.pool.allocated_tokens(rec.req.id) as u64;
-                let written = self.pool.written_tokens(rec.req.id) as u64;
+                let alloc = self.kvc.allocated(rec.req.id) as u64;
+                let written = self.kvc.written(rec.req.id) as u64;
                 match rec.phase {
                     Phase::Decoding => {
                         run_w += written;
@@ -387,12 +436,14 @@ impl World {
                 .add(self.clock, dur, run_a.saturating_sub(run_w) as f64 / cap);
             self.col.brk_waiting_held.add(self.clock, dur, wait_h as f64 / cap);
         }
-        let kvc_util = self.pool.utilization();
-        let kvc_alloc = self.pool.allocation_ratio();
+        let kvc_util = self.kvc.utilization();
+        let kvc_alloc = self.kvc.allocation_ratio();
+        let tally = self.kvc.take_tally();
+        self.col.record_alloc_tally(tally);
         self.col.record_iteration(
             self.clock,
             dur,
-            batch.forward_size(),
+            plan.forward_size(),
             gpu_util,
             kvc_util,
             kvc_alloc,
@@ -400,43 +451,27 @@ impl World {
         );
     }
 
-    /// Route a KV write to the request's own allocation or, for a hosted
-    /// guest, to borrowed space.
+    /// Route a KV write through the allocator (own lease, or borrowed
+    /// space for a hosted guest).
     fn write_kv(&mut self, id: ReqId, n: u32) {
-        if self.pipes.is_guest(id) {
-            self.pool.write_guest_tokens(id, n);
-        } else {
-            self.pool.write_tokens(id, n);
-        }
-        self.recs[id].kvc_held = self.occupied_kvc(id);
+        self.kvc.record_write(id, n);
+        self.recs[id].kvc_held = self.kvc.occupied(id);
     }
 
     fn complete(&mut self, id: ReqId, at: Time) {
         // Live direct guests of this host must be re-homed or evicted
         // before the host's blocks are freed.
-        let guests = self.pipes.remove_host(id);
+        let guests = self.kvc.detach_host(id);
         for g in guests {
             if self.recs[g].is_done() {
                 continue;
             }
-            let moved = self.pool.alloc_of(g).map(|a| a.guest_written).unwrap_or(0);
-            let need = moved + self.recs[g].predicted_remaining() + 1;
-            if self.pool.alloc_tokens(g, need, Priority::Reserved).is_ok() {
-                // Transferred to its own allocation; guest-written tokens
-                // move with it (modelled as a block copy, costless here —
-                // cudaMemcpyAsync overlap in the real system).
-                self.pool.clear_guest_tokens(g);
-                if moved > 0 {
-                    self.pool.write_tokens(g, moved);
-                }
-            } else {
+            let need = self.kvc.guest_written(g) + self.recs[g].predicted_remaining() + 1;
+            if !self.kvc.adopt(g, need).ok() {
                 self.evict_guest(g);
             }
         }
-        if self.pipes.is_guest(id) {
-            self.pipes.release_guest(id);
-        }
-        self.pool.release(id);
+        self.kvc.release(id);
         let rec = &mut self.recs[id];
         rec.phase = Phase::Done;
         rec.done_at = Some(at);
@@ -447,19 +482,163 @@ impl World {
     /// Force-evict a hosted guest whose backing disappeared (host head
     /// overrun or host early completion without transfer capacity).
     /// Offload-free: its generated-token KV is dropped for recompute; its
-    /// own (prompt) allocation is kept.
+    /// own (prompt) lease is kept.
     fn evict_guest(&mut self, g: ReqId) {
-        self.pipes.release_guest(g);
-        let guest_written = self.pool.clear_guest_tokens(g);
+        self.evict_guest_core(g);
+        self.events.evicted_guests.push(g);
+    }
+
+    /// Shared guest-eviction bookkeeping (event-firing and planning-time
+    /// orphan paths must never diverge).
+    fn evict_guest_core(&mut self, g: ReqId) {
+        let dropped = self.kvc.drop_guest(g);
         let now = self.clock;
         let rec = &mut self.recs[g];
-        rec.lost_kv += guest_written;
+        rec.lost_kv += dropped;
         rec.phase = Phase::Preempted;
         rec.preempted_since.get_or_insert(now);
         rec.preempt_count += 1;
         self.col.preemptions += 1;
         self.col.pipeline_evictions += 1;
-        self.events.evicted_guests.push(g);
+    }
+}
+
+/// The typed planning context handed to [`crate::sched::Scheduler::plan`]
+/// each iteration: the policy side's ONLY window into the world.
+///
+///  * **Reads** go through [`IterCtx::world`] (the world's public state —
+///    records, clock, config, queues — with the KVC mechanism sealed off).
+///  * **Allocation** goes through [`IterCtx::alloc`], the
+///    `&mut dyn Allocator` of the installed policy.
+///  * **Request-state changes** go through the typed mutators below;
+///    hard preemptions and guest drops are recorded and folded into the
+///    returned [`BatchPlan`].
+pub struct IterCtx<'w> {
+    w: &'w mut World,
+    /// The previous iteration's outcomes, consumed at context creation
+    /// (an empty plan skips `apply_plan`, so events must not linger).
+    pub events: Events,
+    preempted: Vec<(ReqId, PreemptKind)>,
+    evicted: Vec<ReqId>,
+}
+
+impl IterCtx<'_> {
+    /// Read-only view of the whole world state.
+    pub fn world(&self) -> &World {
+        self.w
+    }
+
+    pub fn clock(&self) -> Time {
+        self.w.clock
+    }
+
+    pub fn cfg(&self) -> &SystemConfig {
+        &self.w.cfg
+    }
+
+    pub fn rec(&self, id: ReqId) -> &ReqRec {
+        &self.w.recs[id]
+    }
+
+    /// Mutable access to per-request *scheduling* state (phases, spans,
+    /// predictions). KVC state is only reachable through [`IterCtx::alloc`].
+    pub fn rec_mut(&mut self, id: ReqId) -> &mut ReqRec {
+        &mut self.w.recs[id]
+    }
+
+    /// The installed KVC allocation policy.
+    pub fn alloc(&mut self) -> &mut dyn Allocator {
+        self.w.kvc.as_mut()
+    }
+
+    /// Read-only allocator queries.
+    pub fn kvc(&self) -> &dyn Allocator {
+        self.w.kvc.as_ref()
+    }
+
+    pub fn peek_arrival(&self) -> Option<ReqId> {
+        self.w.inbox.front().copied()
+    }
+
+    pub fn pop_arrival(&mut self) -> Option<ReqId> {
+        self.w.inbox.pop_front()
+    }
+
+    /// Is the RL prediction for `id` available yet (§3.3.2 predictor
+    /// latency)?
+    pub fn pred_ready(&self, id: ReqId) -> bool {
+        self.w.pred_ready[id] <= self.w.clock
+    }
+
+    pub fn mark_exec_start(&mut self, id: ReqId) {
+        self.w.mark_exec_start(id);
+    }
+
+    pub fn re_predict(&mut self, id: ReqId) -> u32 {
+        self.w.re_predict(id)
+    }
+
+    /// Hard preemption: release the victim's lease (swap or drop), with
+    /// the mechanism recorded into the plan. Guests orphaned by the
+    /// release are evicted offload-free, recorded in the plan's eviction
+    /// list, and returned so the scheduler can drop them from its running
+    /// set (only lending schedulers ever see a non-empty list).
+    pub fn preempt(&mut self, id: ReqId, kind: PreemptKind) -> Vec<ReqId> {
+        let orphans = self.w.preempt(id, kind);
+        self.preempted.push((id, kind));
+        self.evicted.extend(orphans.iter().copied());
+        orphans
+    }
+
+    /// Soft pause (SRTF/MLFQ style): the request keeps its lease but sits
+    /// out this iteration.
+    pub fn pause(&mut self, id: ReqId) {
+        let now = self.w.clock;
+        let rec = &mut self.w.recs[id];
+        if matches!(rec.phase, Phase::Decoding | Phase::Prefilling) {
+            rec.phase = Phase::Preempted;
+            rec.preempted_since.get_or_insert(now);
+        }
+    }
+
+    /// Offload-free requeue bookkeeping (§3.3.2): the GT leaves the
+    /// running set but keeps its written KV resident.
+    pub fn requeue_gt(&mut self, id: ReqId) {
+        let now = self.w.clock;
+        let rec = &mut self.w.recs[id];
+        rec.phase = Phase::GtQueued;
+        rec.preempted_since.get_or_insert(now);
+        rec.preempt_count += 1;
+        self.w.col.preemptions += 1;
+    }
+
+    /// Revoke a guest's borrowed space (host trimmed / guest repredicted):
+    /// drops its guest-written KV into `lost_kv` and records the eviction.
+    pub fn evict_guest(&mut self, g: ReqId) -> u32 {
+        let dropped = self.w.kvc.drop_guest(g);
+        self.w.recs[g].lost_kv += dropped;
+        self.evicted.push(g);
+        dropped
+    }
+
+    pub fn swap_in_cost(&self, id: ReqId) -> f64 {
+        self.w.swap_in_cost(id)
+    }
+
+    /// Record that `id` suffered a KVC allocation failure (Fig 1d metric).
+    pub fn note_alloc_failed(&mut self, id: ReqId) {
+        self.w.col.alloc_failed_reqs.insert(id);
+    }
+
+    /// Mutable metrics access for scheduler-owned counters.
+    pub fn metrics_mut(&mut self) -> &mut Collector {
+        &mut self.w.col
+    }
+
+    /// Fold the recorded preemptions/evictions into the finished plan.
+    pub fn finish_into(self, plan: &mut BatchPlan) {
+        plan.preempted.extend(self.preempted);
+        plan.evicted.extend(self.evicted);
     }
 }
 
@@ -467,6 +646,7 @@ impl World {
 mod tests {
     use super::*;
     use crate::config::ModelProfile;
+    use crate::kvc::ReserveClass;
     use crate::predictor::OraclePredictor;
 
     fn mini_cfg() -> SystemConfig {
@@ -488,6 +668,10 @@ mod tests {
         World::new(cfg, items, pred)
     }
 
+    fn extend(w: &mut World, id: ReqId, tokens: u32) {
+        assert!(w.kvc_mut().extend(id, tokens, ReserveClass::Normal).ok());
+    }
+
     #[test]
     fn arrivals_flow_into_inbox() {
         let mut w = world(&[item(0.0, 10, 5), item(1.0, 10, 5), item(2.0, 10, 5)]);
@@ -501,20 +685,20 @@ mod tests {
     fn prefill_then_decode_completes() {
         let mut w = world(&[item(0.0, 8, 3)]);
         w.drain_arrivals();
-        w.pool.alloc_tokens(0, 8 + 4, Priority::Normal).unwrap();
+        extend(&mut w, 0, 8 + 4);
         // Prefill whole prompt.
-        let b = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 8 }], extra_time: 0.0 };
-        w.execute_iteration(&b, 0.01, 0.9);
+        let b = BatchPlan::of(vec![BatchTask::Prefill { id: 0, chunk: 8 }]);
+        w.apply_plan(&b, 0.01, 0.9);
         assert_eq!(w.events.finished_prefill, vec![0]);
         assert_eq!(w.recs[0].generated, 1);
         assert!(w.recs[0].first_token_at.is_some());
         // Two decode steps complete rl=3.
-        let d = Batch { tasks: vec![BatchTask::Decode { id: 0 }], extra_time: 0.0 };
-        w.execute_iteration(&d, 0.01, 0.5);
+        let d = BatchPlan::of(vec![BatchTask::Decode { id: 0 }]);
+        w.apply_plan(&d, 0.01, 0.5);
         assert!(w.events.completed.is_empty());
-        w.execute_iteration(&d, 0.01, 0.5);
+        w.apply_plan(&d, 0.01, 0.5);
         assert!(w.recs[0].is_done());
-        assert_eq!(w.pool.allocated_tokens(0), 0, "KVC released on completion");
+        assert_eq!(w.kvc().allocated(0), 0, "KVC released on completion");
         assert!((w.recs[0].jct().unwrap() - 0.03).abs() < 1e-9);
         assert_eq!(w.recs[0].tbt_n, 2);
     }
@@ -523,13 +707,13 @@ mod tests {
     fn chunked_prefill_needs_two_iterations() {
         let mut w = world(&[item(0.0, 100, 2)]);
         w.drain_arrivals();
-        w.pool.alloc_tokens(0, 101, Priority::Normal).unwrap();
-        let b1 = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 60 }], extra_time: 0.0 };
-        w.execute_iteration(&b1, 0.01, 1.0);
+        extend(&mut w, 0, 101);
+        let b1 = BatchPlan::of(vec![BatchTask::Prefill { id: 0, chunk: 60 }]);
+        w.apply_plan(&b1, 0.01, 1.0);
         assert!(w.events.finished_prefill.is_empty());
         assert_eq!(w.recs[0].prompt_done, 60);
-        let b2 = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 40 }], extra_time: 0.0 };
-        w.execute_iteration(&b2, 0.01, 1.0);
+        let b2 = BatchPlan::of(vec![BatchTask::Prefill { id: 0, chunk: 40 }]);
+        w.apply_plan(&b2, 0.01, 1.0);
         assert_eq!(w.events.finished_prefill, vec![0]);
     }
 
@@ -539,13 +723,13 @@ mod tests {
         // Oracle predicts 10, but force a bad prediction:
         w.recs[0].predicted_rl = 3;
         w.drain_arrivals();
-        w.pool.alloc_tokens(0, 4 + 4, Priority::Normal).unwrap();
-        let b = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 4 }], extra_time: 0.0 };
-        w.execute_iteration(&b, 0.01, 1.0);
-        let d = Batch { tasks: vec![BatchTask::Decode { id: 0 }], extra_time: 0.0 };
-        w.execute_iteration(&d, 0.01, 1.0); // generated=2
+        extend(&mut w, 0, 4 + 4);
+        let b = BatchPlan::of(vec![BatchTask::Prefill { id: 0, chunk: 4 }]);
+        w.apply_plan(&b, 0.01, 1.0);
+        let d = BatchPlan::of(vec![BatchTask::Decode { id: 0 }]);
+        w.apply_plan(&d, 0.01, 1.0); // generated=2
         assert!(w.events.reached_prediction.is_empty());
-        w.execute_iteration(&d, 0.01, 1.0); // generated=3 == predicted
+        w.apply_plan(&d, 0.01, 1.0); // generated=3 == predicted
         assert_eq!(w.events.reached_prediction, vec![0]);
     }
 
@@ -553,13 +737,13 @@ mod tests {
     fn swap_preempt_and_cost() {
         let mut w = world(&[item(0.0, 32, 5)]);
         w.drain_arrivals();
-        w.pool.alloc_tokens(0, 33, Priority::Normal).unwrap();
-        let b = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 32 }], extra_time: 0.0 };
-        w.execute_iteration(&b, 0.01, 1.0);
+        extend(&mut w, 0, 33);
+        let b = BatchPlan::of(vec![BatchTask::Prefill { id: 0, chunk: 32 }]);
+        w.apply_plan(&b, 0.01, 1.0);
         w.preempt(0, PreemptKind::Swap);
         assert_eq!(w.recs[0].phase, Phase::Preempted);
         assert_eq!(w.recs[0].swapped_tokens, 32);
-        assert_eq!(w.pool.allocated_tokens(0), 0);
+        assert_eq!(w.kvc().allocated(0), 0);
         assert!(w.swap_in_cost(0) > 0.0);
     }
 
@@ -567,81 +751,78 @@ mod tests {
     fn offload_free_preempt_requires_recompute() {
         let mut w = world(&[item(0.0, 16, 8)]);
         w.drain_arrivals();
-        w.pool.alloc_tokens(0, 24, Priority::Normal).unwrap();
-        let b = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 16 }], extra_time: 0.0 };
-        w.execute_iteration(&b, 0.01, 1.0);
-        let d = Batch { tasks: vec![BatchTask::Decode { id: 0 }], extra_time: 0.0 };
-        w.execute_iteration(&d, 0.01, 1.0); // generated=2, written=17
+        extend(&mut w, 0, 24);
+        let b = BatchPlan::of(vec![BatchTask::Prefill { id: 0, chunk: 16 }]);
+        w.apply_plan(&b, 0.01, 1.0);
+        let d = BatchPlan::of(vec![BatchTask::Decode { id: 0 }]);
+        w.apply_plan(&d, 0.01, 1.0); // generated=2, written=17
         w.preempt(0, PreemptKind::DropRecompute);
         assert_eq!(w.recs[0].lost_kv, 17);
         // Resume: re-alloc and recompute in one chunk.
-        w.pool.alloc_tokens(0, 17 + 7, Priority::Normal).unwrap();
-        let r = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 17 }], extra_time: 0.0 };
-        w.execute_iteration(&r, 0.01, 1.0);
+        extend(&mut w, 0, 17 + 7);
+        let r = BatchPlan::of(vec![BatchTask::Prefill { id: 0, chunk: 17 }]);
+        w.apply_plan(&r, 0.01, 1.0);
         assert_eq!(w.events.recompute_done, vec![0]);
         assert_eq!(w.recs[0].generated, 2, "generation progress preserved");
         // Decoding continues to completion.
         for _ in 0..6 {
-            w.execute_iteration(&d, 0.01, 1.0);
+            w.apply_plan(&d, 0.01, 1.0);
         }
         assert!(w.recs[0].is_done());
     }
 
     #[test]
     fn guest_completes_before_host_head() {
-        // Host: rl 16 (span 16). Guest: rl 6 placed at offset 8.
+        // Host: rl 16 (span 17). Guest: rl 6 placed at offset 8.
         let mut w = world(&[item(0.0, 4, 16), item(0.0, 4, 6)]);
+        w.set_allocator("pipelined-exact");
         w.drain_arrivals();
-        w.pool.alloc_tokens(0, 4 + 17, Priority::Normal).unwrap();
-        w.pool.alloc_tokens(1, 4, Priority::Normal).unwrap(); // prompt only
-        let b = Batch {
-            tasks: vec![
-                BatchTask::Prefill { id: 0, chunk: 4 },
-                BatchTask::Prefill { id: 1, chunk: 4 },
-            ],
-            extra_time: 0.0,
-        };
-        w.execute_iteration(&b, 0.01, 1.0);
+        extend(&mut w, 0, 4 + 17);
+        extend(&mut w, 1, 4); // prompt only
+        let b = BatchPlan::of(vec![
+            BatchTask::Prefill { id: 0, chunk: 4 },
+            BatchTask::Prefill { id: 1, chunk: 4 },
+        ]);
+        w.apply_plan(&b, 0.01, 1.0);
         // Schedule both as GTs; 1 is guest of 0 at offset 8.
         w.recs[0].gt_span_base = 1;
         w.recs[1].gt_span_base = 1;
-        w.pipes.add_guest(1, 0, 8, 8);
-        let d = Batch { tasks: vec![BatchTask::Decode { id: 0 }, BatchTask::Decode { id: 1 }], extra_time: 0.0 };
+        w.kvc_mut().host_at(1, 0, 8, 8);
+        let d = BatchPlan::of(vec![BatchTask::Decode { id: 0 }, BatchTask::Decode { id: 1 }]);
         for _ in 0..5 {
-            w.execute_iteration(&d, 0.01, 1.0);
+            w.apply_plan(&d, 0.01, 1.0);
         }
         // Guest done at generated=6 (5 decodes after first token).
         assert!(w.recs[1].is_done());
         assert_eq!(w.col.pipeline_evictions, 0);
         // Host continues alone.
-        let d0 = Batch { tasks: vec![BatchTask::Decode { id: 0 }], extra_time: 0.0 };
+        let d0 = BatchPlan::of(vec![BatchTask::Decode { id: 0 }]);
         for _ in 0..10 {
-            w.execute_iteration(&d0, 0.01, 1.0);
+            w.apply_plan(&d0, 0.01, 1.0);
         }
         assert!(w.recs[0].is_done());
+        assert_eq!(w.kvc().guest_count(), 0);
     }
 
     #[test]
     fn overrunning_guest_gets_evicted() {
         let mut w = world(&[item(0.0, 4, 16), item(0.0, 4, 12)]);
+        w.set_allocator("pipelined-exact");
         w.drain_arrivals();
-        w.pool.alloc_tokens(0, 4 + 17, Priority::Normal).unwrap();
-        w.pool.alloc_tokens(1, 4, Priority::Normal).unwrap();
-        let b = Batch {
-            tasks: vec![
-                BatchTask::Prefill { id: 0, chunk: 4 },
-                BatchTask::Prefill { id: 1, chunk: 4 },
-            ],
-            extra_time: 0.0,
-        };
-        w.execute_iteration(&b, 0.01, 1.0);
+        extend(&mut w, 0, 4 + 17);
+        extend(&mut w, 1, 4);
+        let b = BatchPlan::of(vec![
+            BatchTask::Prefill { id: 0, chunk: 4 },
+            BatchTask::Prefill { id: 1, chunk: 4 },
+        ]);
+        w.apply_plan(&b, 0.01, 1.0);
         w.recs[0].gt_span_base = 1;
         w.recs[1].gt_span_base = 1;
         // Guest rl=12 wrongly placed at offset 4: host head passes 4 soon.
-        w.pipes.add_guest(1, 0, 4, 8);
-        let d = Batch { tasks: vec![BatchTask::Decode { id: 0 }, BatchTask::Decode { id: 1 }], extra_time: 0.0 };
+        w.kvc_mut().host_at(1, 0, 4, 8);
+        let d = BatchPlan::of(vec![BatchTask::Decode { id: 0 }, BatchTask::Decode { id: 1 }]);
         for _ in 0..5 {
-            w.execute_iteration(&d, 0.01, 1.0);
+            w.apply_plan(&d, 0.01, 1.0);
             if !w.events.evicted_guests.is_empty() {
                 break;
             }
@@ -649,5 +830,24 @@ mod tests {
         assert_eq!(w.recs[1].phase, Phase::Preempted);
         assert!(w.recs[1].lost_kv > 0);
         assert!(w.col.pipeline_evictions >= 1);
+    }
+
+    #[test]
+    fn iter_ctx_records_preemptions_into_plan() {
+        let mut w = world(&[item(0.0, 8, 8)]);
+        w.drain_arrivals();
+        extend(&mut w, 0, 16);
+        let b = BatchPlan::of(vec![BatchTask::Prefill { id: 0, chunk: 8 }]);
+        w.apply_plan(&b, 0.01, 1.0);
+        let mut ctx = w.begin_iter();
+        assert_eq!(ctx.events.finished_prefill, vec![0]);
+        assert_eq!(ctx.pop_arrival(), None);
+        ctx.preempt(0, PreemptKind::DropRecompute);
+        let mut plan = BatchPlan::default();
+        ctx.finish_into(&mut plan);
+        assert_eq!(plan.preempted, vec![(0, PreemptKind::DropRecompute)]);
+        assert_eq!(w.recs[0].phase, Phase::Preempted);
+        // Events were consumed by the context.
+        assert!(w.events.finished_prefill.is_empty());
     }
 }

@@ -11,11 +11,11 @@ pub mod sim;
 pub use sim::SimEngine;
 
 use crate::core::world::World;
-use crate::core::Batch;
+use crate::core::BatchPlan;
 
 /// Anything that can execute/price one iteration.
 pub trait Engine {
     /// Returns `(duration_seconds, gpu_compute_utilization)` for running
-    /// `batch` given the current world state. Must NOT mutate the world.
-    fn iteration_cost(&self, batch: &Batch, world: &World) -> (f64, f64);
+    /// `plan` given the current world state. Must NOT mutate the world.
+    fn iteration_cost(&self, plan: &BatchPlan, world: &World) -> (f64, f64);
 }

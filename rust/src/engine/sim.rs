@@ -25,7 +25,7 @@
 
 use super::Engine;
 use crate::core::world::World;
-use crate::core::{Batch, BatchTask};
+use crate::core::{BatchPlan, BatchTask};
 
 #[derive(Debug, Clone, Default)]
 pub struct SimEngine;
@@ -37,7 +37,7 @@ impl SimEngine {
 }
 
 impl Engine for SimEngine {
-    fn iteration_cost(&self, batch: &Batch, world: &World) -> (f64, f64) {
+    fn iteration_cost(&self, batch: &BatchPlan, world: &World) -> (f64, f64) {
         let p = &world.cfg.profile;
         let fwd = batch.forward_size() as f64;
         if batch.is_empty() {
@@ -91,15 +91,10 @@ mod tests {
     fn decode_batch8_latency_in_a100_ballpark() {
         let mut w = world_with(8, 100, 50);
         for id in 0..8 {
-            w.pool.alloc_tokens(id, 200, crate::kvc::Priority::Normal).unwrap();
-            w.pool.write_tokens(id, 150); // mid-generation context
             w.recs[id].prompt_done = 100;
             w.recs[id].generated = 50;
         }
-        let b = Batch {
-            tasks: (0..8).map(|id| BatchTask::Decode { id }).collect(),
-            extra_time: 0.0,
-        };
+        let b = BatchPlan::of((0..8).map(|id| BatchTask::Decode { id }).collect());
         let (dur, util) = SimEngine::new().iteration_cost(&b, &w);
         // Memory-bound: ~20-30 ms, low GPU utilization.
         assert!((0.015..0.040).contains(&dur), "dur={dur}");
@@ -109,9 +104,8 @@ mod tests {
     #[test]
     fn prefill_2048_latency_in_a100_ballpark() {
         let mut w = world_with(1, 2048, 10);
-        w.pool.alloc_tokens(0, 2048, crate::kvc::Priority::Normal).unwrap();
         w.recs[0].prompt_done = 2048; // engine only reads prompt_done
-        let b = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 2048 }], extra_time: 0.0 };
+        let b = BatchPlan::of(vec![BatchTask::Prefill { id: 0, chunk: 2048 }]);
         let (dur, util) = SimEngine::new().iteration_cost(&b, &w);
         assert!((0.2..0.6).contains(&dur), "dur={dur}");
         assert!(util > 0.85, "util={util}");
@@ -121,10 +115,9 @@ mod tests {
     fn tfs_is_compute_bound_knee() {
         // At TFS forward tokens, compute should dominate memory clearly.
         let mut w = world_with(1, 2048, 10);
-        w.pool.alloc_tokens(0, 2048, crate::kvc::Priority::Normal).unwrap();
         let tfs = w.cfg.profile.tfs;
         w.recs[0].prompt_done = tfs;
-        let b = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: tfs }], extra_time: 0.0 };
+        let b = BatchPlan::of(vec![BatchTask::Prefill { id: 0, chunk: tfs }]);
         let (_, util) = SimEngine::new().iteration_cost(&b, &w);
         assert!(util > 0.9, "TFS iteration should be compute-bound, util={util}");
     }
@@ -132,11 +125,10 @@ mod tests {
     #[test]
     fn extra_time_added() {
         let w = world_with(1, 10, 10);
-        let b = Batch { tasks: vec![], extra_time: 0.5 };
+        let b = BatchPlan { extra_time: 0.5, ..Default::default() };
         // Empty batch short-circuits; non-empty path:
-        let mut w2 = world_with(1, 10, 10);
-        w2.pool.alloc_tokens(0, 16, crate::kvc::Priority::Normal).unwrap();
-        let b2 = Batch { tasks: vec![BatchTask::Prefill { id: 0, chunk: 10 }], extra_time: 0.5 };
+        let w2 = world_with(1, 10, 10);
+        let b2 = BatchPlan { tasks: vec![BatchTask::Prefill { id: 0, chunk: 10 }], extra_time: 0.5, ..Default::default() };
         let (d0, _) = SimEngine::new().iteration_cost(&b, &w);
         let (d2, _) = SimEngine::new().iteration_cost(&b2, &w2);
         assert!(d2 > 0.5 && d2 < 0.6);
@@ -146,15 +138,12 @@ mod tests {
     #[test]
     fn longer_context_costs_more() {
         let mut w = world_with(2, 100, 50);
-        for id in 0..2 {
-            w.pool.alloc_tokens(id, 4096, crate::kvc::Priority::Normal).unwrap();
-        }
         w.recs[0].prompt_done = 100;
         w.recs[0].generated = 10;
         w.recs[1].prompt_done = 100;
         w.recs[1].generated = 3000;
-        let short = Batch { tasks: vec![BatchTask::Decode { id: 0 }], extra_time: 0.0 };
-        let long = Batch { tasks: vec![BatchTask::Decode { id: 1 }], extra_time: 0.0 };
+        let short = BatchPlan::of(vec![BatchTask::Decode { id: 0 }]);
+        let long = BatchPlan::of(vec![BatchTask::Decode { id: 1 }]);
         let e = SimEngine::new();
         assert!(e.iteration_cost(&long, &w).0 > e.iteration_cost(&short, &w).0);
     }

@@ -91,8 +91,10 @@ pub fn run_world(
         Box::new(SimPredictor::for_trace(trace, cfg.block_size, cfg.seed))
     };
     let mut world = World::new(cfg.clone(), items, pred);
-    let mut sched =
+    let sys =
         crate::sched::by_name(system).unwrap_or_else(|| panic!("unknown system {system}"));
+    world.set_allocator(sys.alloc);
+    let mut sched = sys.sched;
     let engine = SimEngine::new();
     let res = run(&mut world, sched.as_mut(), &engine, RunLimits::for_time(max_time));
     (res, world)

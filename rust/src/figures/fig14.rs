@@ -1,5 +1,5 @@
 //! Figure 14: scheduling-time overhead of each system — measured from the
-//! actual batch-formation code (wall-clock per `Scheduler::step`, charged
+//! actual batch-formation code (wall-clock per `Scheduler::plan`, charged
 //! to the simulation at `sched_time_scale`), reported as overhead share
 //! and mean per-iteration scheduling time.
 

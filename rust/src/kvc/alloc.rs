@@ -1,0 +1,906 @@
+//! The first-class KVC allocator API: the *allocation policy* axis of
+//! Table 1, decoupled from batching policy.
+//!
+//! A [`Allocator`] hands out **leases** over the block pool. The three
+//! base policies size a lease differently at admission ([`Allocator::admit`]):
+//!
+//! | allocator     | admission grant                      | systems (Table 1)   |
+//! |---------------|--------------------------------------|---------------------|
+//! | [`MaxAlloc`]  | the model's max total length         | ORCA, SRTF, FastServe|
+//! | [`BlockAlloc`]| only the immediately-needed tokens   | vLLM, Sarathi-Serve |
+//! | [`ExactAlloc`]| immediate + padded predicted RL + 1  | MultiRes, EconoServe|
+//!
+//! [`Pipelined<A>`] composes §3.2 KVC pipelining over any inner
+//! allocator: a hosting span lends its allocated-but-unwritten tail to
+//! guests, which then consume **no new blocks** ([`AllocOutcome::Hosted`]).
+//! The host/guest registry, guest-write accounting, overrun detection and
+//! eviction mechanics all live here — schedulers only decide *who* lends
+//! to *whom*.
+//!
+//! Every mutating call returns a typed [`AllocOutcome`] and is tallied;
+//! `World::apply_plan` drains the per-iteration tally into the metrics
+//! collector, so allocation behaviour is observable per iteration for
+//! every scheduler × allocator combination.
+
+use std::collections::HashMap;
+
+use super::pipeline::PipeRegistry;
+use super::{AllocError, BlockPool, ReserveClass};
+use crate::core::{ReqId, ReqRec};
+
+/// Typed outcome of an allocation attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocOutcome {
+    /// Capacity secured from the request's own blocks. `tokens` is the
+    /// block-rounded capacity newly taken from the free list (0 when the
+    /// existing lease already covered the request).
+    Granted { tokens: u32 },
+    /// Placed inside another request's span (KVC pipelining): no new
+    /// blocks were consumed.
+    Hosted { host: ReqId, offset: u32, len: u32 },
+    /// Not enough free capacity in the requested class.
+    Exhausted { needed: u32, free: u32 },
+}
+
+impl AllocOutcome {
+    /// True when the request can proceed (granted or hosted).
+    pub fn ok(&self) -> bool {
+        !matches!(self, AllocOutcome::Exhausted { .. })
+    }
+}
+
+/// A request's current lease over the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lease {
+    /// Capacity in tokens (block-rounded).
+    pub grant: u32,
+    /// Class charged by the most recent grant.
+    pub reserve_class: ReserveClass,
+}
+
+/// Sizing inputs for an admission decision — everything any policy on the
+/// allocation axis needs to size a lease.
+#[derive(Debug, Clone, Copy)]
+pub struct Demand {
+    /// Tokens that must be writable right away (prompt remainder, dropped
+    /// KV awaiting recompute, ...).
+    pub immediate: u32,
+    /// Padded predicted remaining response tokens.
+    pub predicted: u32,
+    /// The model's maximum total sequence length (max-allocation bound).
+    pub max_total: u32,
+}
+
+impl Demand {
+    /// Standard demand of a request record: remaining prompt + dropped KV
+    /// as immediate need, predicted remaining RL as the lookahead.
+    pub fn of(rec: &ReqRec, max_total: u32) -> Demand {
+        Demand {
+            immediate: (rec.req.prompt_len - rec.prompt_done) + rec.lost_kv,
+            predicted: rec.predicted_remaining(),
+            max_total,
+        }
+    }
+}
+
+/// What a released lease held.
+#[derive(Debug, Clone, Default)]
+pub struct Released {
+    /// Tokens written into the request's own blocks.
+    pub written: u32,
+    /// Tokens written into borrowed (pipelined) space.
+    pub guest_written: u32,
+    /// Guests that were hosted inside the released span and are now
+    /// detached (their borrowed KV is gone; the caller must preempt them).
+    pub orphans: Vec<ReqId>,
+}
+
+/// Cumulative allocator counters (mechanism-level).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AllocStats {
+    /// Allocation attempts (admit / extend / grow).
+    pub calls: u64,
+    /// Attempts rejected for lack of free capacity.
+    pub failures: u64,
+    /// Writes that outran the lease and were covered by an implicit
+    /// reserve-class grow (only exotic scheduler × allocator combos).
+    pub implicit_grows: u64,
+}
+
+/// Per-iteration outcome tally, drained by `World::apply_plan` into the
+/// metrics collector.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AllocTally {
+    pub granted: u32,
+    pub hosted: u32,
+    pub exhausted: u32,
+}
+
+/// The shared pool-backed mechanism behind the base allocators. Exposed
+/// only so trait default methods can reach it; sizing policy stays in the
+/// concrete [`Allocator`] types.
+#[derive(Debug, Clone)]
+pub struct PoolCore {
+    pool: BlockPool,
+    tally: AllocTally,
+    implicit_grows: u64,
+}
+
+impl PoolCore {
+    pub fn new(capacity_tokens: u32, block_size: u32, reserve_tokens: u32) -> Self {
+        PoolCore {
+            pool: BlockPool::new(capacity_tokens, block_size, reserve_tokens),
+            tally: AllocTally::default(),
+            implicit_grows: 0,
+        }
+    }
+
+    fn outcome(&mut self, res: Result<u32, AllocError>) -> AllocOutcome {
+        let bs = self.pool.block_size();
+        match res {
+            Ok(blocks) => {
+                self.tally.granted += 1;
+                AllocOutcome::Granted { tokens: blocks * bs }
+            }
+            Err(AllocError::OutOfBlocks { needed, free }) => {
+                self.tally.exhausted += 1;
+                AllocOutcome::Exhausted { needed: needed * bs, free: free * bs }
+            }
+        }
+    }
+
+    /// Extend `id`'s lease to cover `more` tokens beyond what it has
+    /// already written.
+    pub fn extend(&mut self, id: ReqId, more: u32, class: ReserveClass) -> AllocOutcome {
+        let res = self.pool.alloc_tokens(id, more, class);
+        self.outcome(res)
+    }
+
+    /// Grow `id`'s lease to hold `total` written tokens (no-op when the
+    /// lease already covers it).
+    pub fn grow_to(&mut self, id: ReqId, total: u32, class: ReserveClass) -> AllocOutcome {
+        let res = self.pool.ensure_capacity(id, total, class);
+        self.outcome(res)
+    }
+
+    /// Record `n` tokens written into `id`'s own lease. A write that
+    /// outruns the lease is covered by an implicit reserve-class grow
+    /// (counted in [`AllocStats::implicit_grows`]); if even the reserve is
+    /// exhausted this panics, preserving the never-write-past-allocation
+    /// invariant.
+    pub fn write_own(&mut self, id: ReqId, n: u32) {
+        let capacity = self.pool.allocated_tokens(id);
+        let written = self.pool.written_tokens(id);
+        if written + n > capacity && self.pool.alloc_tokens(id, n, ReserveClass::Reserved).is_ok()
+        {
+            self.implicit_grows += 1;
+        }
+        self.pool.write_tokens(id, n);
+    }
+
+    pub fn restore(&mut self, id: ReqId, n: u32) {
+        self.pool.restore_written(id, n);
+    }
+
+    pub fn release_own(&mut self, id: ReqId) -> Released {
+        let (_blocks, written) = self.pool.release(id);
+        Released { written, guest_written: 0, orphans: Vec::new() }
+    }
+
+    /// Trim the lease down to its written tokens; returns tokens freed.
+    pub fn shrink_to_written(&mut self, id: ReqId) -> u32 {
+        self.pool.trim_to_written(id) * self.pool.block_size()
+    }
+
+    pub fn take_tally(&mut self) -> AllocTally {
+        std::mem::take(&mut self.tally)
+    }
+
+    pub(crate) fn tally_hosted(&mut self) {
+        self.tally.hosted += 1;
+    }
+
+    pub fn stats(&self) -> AllocStats {
+        AllocStats {
+            calls: self.pool.alloc_calls,
+            failures: self.pool.alloc_failures,
+            implicit_grows: self.implicit_grows,
+        }
+    }
+
+    pub fn free_tokens(&self, class: ReserveClass) -> u32 {
+        self.pool.free_tokens(class)
+    }
+
+    pub fn capacity_tokens(&self) -> u32 {
+        self.pool.capacity_tokens()
+    }
+
+    pub fn reserve_tokens(&self) -> u32 {
+        self.pool.reserve_tokens()
+    }
+
+    pub fn block_size(&self) -> u32 {
+        self.pool.block_size()
+    }
+
+    pub fn allocated(&self, id: ReqId) -> u32 {
+        self.pool.allocated_tokens(id)
+    }
+
+    pub fn written(&self, id: ReqId) -> u32 {
+        self.pool.written_tokens(id)
+    }
+
+    pub fn lease_of(&self, id: ReqId) -> Option<Lease> {
+        self.pool.alloc_of(id).map(|a| Lease {
+            grant: a.blocks * self.pool.block_size(),
+            reserve_class: a.class,
+        })
+    }
+
+    pub fn total_allocated(&self) -> u64 {
+        self.pool.total_allocated()
+    }
+
+    pub fn total_written(&self) -> u64 {
+        self.pool.total_written()
+    }
+
+    pub fn check_invariants(&self) {
+        self.pool.check_invariants();
+    }
+}
+
+/// The first-class KVC allocation API. Policy types decide *how much* to
+/// grant ([`Allocator::admit`]); the shared mechanism in [`PoolCore`]
+/// (and, for hosting, [`Pipelined`]) executes it.
+///
+/// The trait is object-safe: `World` owns a `Box<dyn Allocator>` and
+/// hands it to schedulers through `IterCtx::alloc()`.
+pub trait Allocator {
+    /// Registry name of this allocator (`max`, `block`, `exact`,
+    /// `pipelined-<inner>`).
+    fn name(&self) -> &'static str;
+
+    fn core(&self) -> &PoolCore;
+    fn core_mut(&mut self) -> &mut PoolCore;
+
+    /// Size and take the admission-time lease for `id` — the Table 1
+    /// allocation-policy axis. The grant is *incremental*: capacity beyond
+    /// what `id` has already written (except [`MaxAlloc`], which sizes the
+    /// total lease to the model maximum).
+    fn admit(&mut self, id: ReqId, d: Demand, class: ReserveClass) -> AllocOutcome;
+
+    // ------------------------------------------------------------------
+    // Lease lifecycle (mechanism; shared across policies)
+    // ------------------------------------------------------------------
+
+    /// Extend the lease to cover `more` tokens beyond current written.
+    fn extend(&mut self, id: ReqId, more: u32, class: ReserveClass) -> AllocOutcome {
+        self.core_mut().extend(id, more, class)
+    }
+
+    /// Grow the lease to hold `total` written tokens.
+    fn grow_to(&mut self, id: ReqId, total: u32, class: ReserveClass) -> AllocOutcome {
+        self.core_mut().grow_to(id, total, class)
+    }
+
+    /// Shrink the lease to its written tokens; returns tokens freed.
+    fn shrink_to_written(&mut self, id: ReqId) -> u32 {
+        self.core_mut().shrink_to_written(id)
+    }
+
+    /// Release the whole lease (and, under [`Pipelined`], this request's
+    /// guest role and hosted guests — see [`Released::orphans`]).
+    fn release(&mut self, id: ReqId) -> Released {
+        self.core_mut().release_own(id)
+    }
+
+    /// Record `n` tokens of KV written for `id` (routed to borrowed space
+    /// for pipelined guests).
+    fn record_write(&mut self, id: ReqId, n: u32) {
+        self.core_mut().write_own(id, n);
+    }
+
+    /// Restore swapped-out written tokens after a swap-in.
+    fn restore(&mut self, id: ReqId, n: u32) {
+        self.core_mut().restore(id, n);
+    }
+
+    // ------------------------------------------------------------------
+    // Queries
+    // ------------------------------------------------------------------
+
+    fn free_tokens(&self, class: ReserveClass) -> u32 {
+        self.core().free_tokens(class)
+    }
+
+    fn capacity_tokens(&self) -> u32 {
+        self.core().capacity_tokens()
+    }
+
+    fn reserve_tokens(&self) -> u32 {
+        self.core().reserve_tokens()
+    }
+
+    fn allocated(&self, id: ReqId) -> u32 {
+        self.core().allocated(id)
+    }
+
+    fn written(&self, id: ReqId) -> u32 {
+        self.core().written(id)
+    }
+
+    fn lease_of(&self, id: ReqId) -> Option<Lease> {
+        self.core().lease_of(id)
+    }
+
+    /// Tokens this request holds in the KVC right now: own written plus
+    /// guest-written (pipelined) tokens.
+    fn occupied(&self, id: ReqId) -> u32 {
+        self.written(id) + self.guest_written(id)
+    }
+
+    fn total_allocated(&self) -> u64 {
+        self.core().total_allocated()
+    }
+
+    /// Total written tokens (own + guest) — the numerator of the paper's
+    /// KVC-utilization metric.
+    fn total_written(&self) -> u64 {
+        self.core().total_written()
+    }
+
+    /// KVC utilization: written tokens / capacity (what gpustat-style
+    /// sampling sees: memory actually holding KV data).
+    fn utilization(&self) -> f64 {
+        self.total_written() as f64 / (self.capacity_tokens() as f64).max(1.0)
+    }
+
+    /// Allocation ratio: allocated / capacity (1.0 == fully allocated).
+    fn allocation_ratio(&self) -> f64 {
+        self.total_allocated() as f64 / (self.capacity_tokens() as f64).max(1.0)
+    }
+
+    fn stats(&self) -> AllocStats {
+        self.core().stats()
+    }
+
+    /// Drain the per-iteration outcome tally (called by `apply_plan`).
+    fn take_tally(&mut self) -> AllocTally {
+        self.core_mut().take_tally()
+    }
+
+    fn check_invariants(&self) {
+        self.core().check_invariants();
+    }
+
+    // ------------------------------------------------------------------
+    // KVC pipelining (inert unless wrapped in [`Pipelined`])
+    // ------------------------------------------------------------------
+
+    fn is_guest(&self, _id: ReqId) -> bool {
+        false
+    }
+
+    fn guest_written(&self, _id: ReqId) -> u32 {
+        0
+    }
+
+    fn guest_count(&self) -> usize {
+        0
+    }
+
+    /// Largest guest RL `host` could currently absorb: half the gap
+    /// between its write head and the lending frontier, minus the safety
+    /// buffer (§3.2's invariant). 0 for non-hosting allocators.
+    fn lend_capacity(&self, _host: ReqId, _span: u32, _head: u32, _buffer_frac: f64) -> u32 {
+        0
+    }
+
+    /// Place `guest` (predicted RL `rl`) right-aligned against `host`'s
+    /// lending frontier. Fails unless `rl <= lend_capacity(...)`.
+    fn lend(
+        &mut self,
+        _host: ReqId,
+        _span: u32,
+        _head: u32,
+        _buffer_frac: f64,
+        _guest: ReqId,
+        rl: u32,
+    ) -> AllocOutcome {
+        AllocOutcome::Exhausted { needed: rl, free: 0 }
+    }
+
+    /// Guests whose slot the host's write head (at `head` tokens into its
+    /// span) has overrun — they must be evicted now.
+    fn overrun_guests(&self, _host: ReqId, _head: u32) -> Vec<ReqId> {
+        Vec::new()
+    }
+
+    /// Detach and return all of `host`'s direct guests (their slots are
+    /// gone; guest-written counters survive until `adopt` / `drop_guest`).
+    fn detach_host(&mut self, _host: ReqId) -> Vec<ReqId> {
+        Vec::new()
+    }
+
+    /// Drop `id`'s guest state: remove its slot (if still registered) and
+    /// return the borrowed tokens it had written (now lost).
+    fn drop_guest(&mut self, _id: ReqId) -> u32 {
+        0
+    }
+
+    /// Move a detached guest onto its own lease: extend by `extra`
+    /// (reserve class) and migrate its guest-written tokens in.
+    fn adopt(&mut self, id: ReqId, extra: u32) -> AllocOutcome {
+        self.extend(id, extra, ReserveClass::Reserved)
+    }
+
+    /// Testing / failure-injection hook: register `guest` at an explicit
+    /// slot of `host`'s span, bypassing the safety check.
+    fn host_at(&mut self, _guest: ReqId, _host: ReqId, _offset: u32, _len: u32) {
+        panic!("host_at requires a pipelined allocator");
+    }
+}
+
+macro_rules! base_allocator {
+    ($name:ident, $reg:literal, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Debug, Clone)]
+        pub struct $name {
+            core: PoolCore,
+        }
+
+        impl $name {
+            pub fn new(capacity_tokens: u32, block_size: u32, reserve_tokens: u32) -> Self {
+                $name { core: PoolCore::new(capacity_tokens, block_size, reserve_tokens) }
+            }
+        }
+    };
+}
+
+base_allocator!(
+    MaxAlloc,
+    "max",
+    "Max-allocation (ORCA/SRTF/FastServe): admission leases the model's \
+     maximum total length, so allocation can never fail mid-flight but the \
+     KVC is massively over-provisioned."
+);
+base_allocator!(
+    BlockAlloc,
+    "block",
+    "Block-allocation (vLLM/Sarathi): admission leases only the immediate \
+     need; the lease grows block-by-block and can FAIL mid-execution — the \
+     paper's KVC allocation failure (Fig 1d)."
+);
+base_allocator!(
+    ExactAlloc,
+    "exact",
+    "Exact-allocation (MultiRes/EconoServe): admission leases immediate \
+     need + padded predicted RL + 1, so a correctly-predicted request \
+     never fails mid-flight and never over-provisions by more than the \
+     padding."
+);
+
+impl Allocator for MaxAlloc {
+    fn name(&self) -> &'static str {
+        "max"
+    }
+
+    fn core(&self) -> &PoolCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut PoolCore {
+        &mut self.core
+    }
+
+    fn admit(&mut self, id: ReqId, d: Demand, class: ReserveClass) -> AllocOutcome {
+        self.core.grow_to(id, d.max_total, class)
+    }
+}
+
+impl Allocator for BlockAlloc {
+    fn name(&self) -> &'static str {
+        "block"
+    }
+
+    fn core(&self) -> &PoolCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut PoolCore {
+        &mut self.core
+    }
+
+    fn admit(&mut self, id: ReqId, d: Demand, class: ReserveClass) -> AllocOutcome {
+        self.core.extend(id, d.immediate, class)
+    }
+}
+
+impl Allocator for ExactAlloc {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn core(&self) -> &PoolCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut PoolCore {
+        &mut self.core
+    }
+
+    fn admit(&mut self, id: ReqId, d: Demand, class: ReserveClass) -> AllocOutcome {
+        self.core.extend(id, d.immediate + d.predicted + 1, class)
+    }
+}
+
+/// KVC pipelining (§3.2) as a composable wrapper: any inner allocator
+/// gains the ability to host guests in the allocated-but-unwritten tail
+/// of a running span. Guests write into borrowed space (no new blocks);
+/// the wrapper tracks the host/guest tree, routes their KV writes,
+/// detects write-head overruns and migrates or drops guest KV when a
+/// host goes away.
+#[derive(Debug, Clone)]
+pub struct Pipelined<A> {
+    inner: A,
+    pipes: PipeRegistry,
+    /// Borrowed-space written tokens per guest (survives slot detach until
+    /// the guest is adopted or dropped).
+    guest_written: HashMap<ReqId, u32>,
+}
+
+impl<A: Allocator> Pipelined<A> {
+    pub fn new(inner: A) -> Self {
+        Pipelined { inner, pipes: PipeRegistry::new(), guest_written: HashMap::new() }
+    }
+
+    fn frontier(&self, host: ReqId, span: u32) -> u32 {
+        self.pipes
+            .guests_of(host)
+            .iter()
+            .filter_map(|g| self.pipes.host_of(*g).map(|s| s.offset))
+            .min()
+            .unwrap_or(span)
+    }
+}
+
+impl<A: Allocator> Allocator for Pipelined<A> {
+    fn name(&self) -> &'static str {
+        match self.inner.name() {
+            "max" => "pipelined-max",
+            "block" => "pipelined-block",
+            "exact" => "pipelined-exact",
+            _ => "pipelined",
+        }
+    }
+
+    fn core(&self) -> &PoolCore {
+        self.inner.core()
+    }
+
+    fn core_mut(&mut self) -> &mut PoolCore {
+        self.inner.core_mut()
+    }
+
+    fn admit(&mut self, id: ReqId, d: Demand, class: ReserveClass) -> AllocOutcome {
+        self.inner.admit(id, d, class)
+    }
+
+    fn record_write(&mut self, id: ReqId, n: u32) {
+        if let Some(slot) = self.pipes.host_of(id) {
+            let written = self.guest_written.entry(id).or_insert(0);
+            assert!(
+                *written + n <= slot.len,
+                "pipelined guest {id} overflow: {} + {n} > slot len {}",
+                *written,
+                slot.len
+            );
+            *written += n;
+        } else {
+            self.inner.record_write(id, n);
+        }
+    }
+
+    fn release(&mut self, id: ReqId) -> Released {
+        // Drop this request's own guest role, then orphan its guests.
+        self.pipes.release_guest(id);
+        let guest_written = self.guest_written.remove(&id).unwrap_or(0);
+        let orphans = self.pipes.remove_host(id);
+        let mut rel = self.inner.release(id);
+        rel.guest_written += guest_written;
+        rel.orphans = orphans;
+        rel
+    }
+
+    fn is_guest(&self, id: ReqId) -> bool {
+        self.pipes.is_guest(id)
+    }
+
+    fn guest_written(&self, id: ReqId) -> u32 {
+        self.guest_written.get(&id).copied().unwrap_or(0)
+    }
+
+    fn guest_count(&self) -> usize {
+        self.pipes.guest_count()
+    }
+
+    fn lend_capacity(&self, host: ReqId, span: u32, head: u32, buffer_frac: f64) -> u32 {
+        let gap = self.frontier(host, span).saturating_sub(head);
+        let buffer = (buffer_frac * gap as f64).ceil() as u32;
+        (gap / 2).saturating_sub(buffer)
+    }
+
+    fn lend(
+        &mut self,
+        host: ReqId,
+        span: u32,
+        head: u32,
+        buffer_frac: f64,
+        guest: ReqId,
+        rl: u32,
+    ) -> AllocOutcome {
+        let target = self.lend_capacity(host, span, head, buffer_frac);
+        if rl == 0 || rl > target {
+            self.core_mut().tally.exhausted += 1;
+            return AllocOutcome::Exhausted { needed: rl, free: target };
+        }
+        let offset = self.frontier(host, span) - rl;
+        self.pipes.add_guest(guest, host, offset, rl);
+        self.core_mut().tally_hosted();
+        AllocOutcome::Hosted { host, offset, len: rl }
+    }
+
+    fn overrun_guests(&self, host: ReqId, head: u32) -> Vec<ReqId> {
+        self.pipes.overrun_guests(host, head)
+    }
+
+    fn detach_host(&mut self, host: ReqId) -> Vec<ReqId> {
+        self.pipes.remove_host(host)
+    }
+
+    fn drop_guest(&mut self, id: ReqId) -> u32 {
+        self.pipes.release_guest(id);
+        self.guest_written.remove(&id).unwrap_or(0)
+    }
+
+    fn adopt(&mut self, id: ReqId, extra: u32) -> AllocOutcome {
+        match self.inner.extend(id, extra, ReserveClass::Reserved) {
+            out @ AllocOutcome::Granted { .. } => {
+                // Usually already detached via detach_host; drop any slot
+                // still registered so writes stop routing to guest space.
+                self.pipes.release_guest(id);
+                let moved = self.guest_written.remove(&id).unwrap_or(0);
+                if moved > 0 {
+                    // Modelled as a block copy into the new lease
+                    // (cudaMemcpyAsync overlap in the real system).
+                    self.inner.record_write(id, moved);
+                }
+                out
+            }
+            out => out,
+        }
+    }
+
+    fn total_written(&self) -> u64 {
+        self.inner.total_written() + self.guest_written.values().map(|w| *w as u64).sum::<u64>()
+    }
+
+    fn check_invariants(&self) {
+        self.inner.check_invariants();
+        self.pipes.check_invariants();
+        for (g, w) in &self.guest_written {
+            if let Some(slot) = self.pipes.host_of(*g) {
+                assert!(*w <= slot.len, "guest {g} wrote past its slot");
+            }
+        }
+    }
+
+    fn host_at(&mut self, guest: ReqId, host: ReqId, offset: u32, len: u32) {
+        self.pipes.add_guest(guest, host, offset, len);
+    }
+}
+
+/// Canonical allocator names, in Table 1 order plus the pipelined grid.
+pub fn all_allocators() -> &'static [&'static str] {
+    &["max", "block", "exact", "pipelined-max", "pipelined-block", "pipelined-exact"]
+}
+
+/// Resolve a (possibly user-typed) allocator name to its canonical
+/// `'static` registry entry.
+pub fn canonical_alloc_name(name: &str) -> Option<&'static str> {
+    all_allocators().iter().copied().find(|n| *n == name)
+}
+
+/// Build an allocator by registry name over a pool of `capacity_tokens`.
+pub fn by_name(
+    name: &str,
+    capacity_tokens: u32,
+    block_size: u32,
+    reserve_tokens: u32,
+) -> Option<Box<dyn Allocator>> {
+    let a: Box<dyn Allocator> = match name {
+        "max" => Box::new(MaxAlloc::new(capacity_tokens, block_size, reserve_tokens)),
+        "block" => Box::new(BlockAlloc::new(capacity_tokens, block_size, reserve_tokens)),
+        "exact" => Box::new(ExactAlloc::new(capacity_tokens, block_size, reserve_tokens)),
+        "pipelined-max" => Box::new(Pipelined::new(MaxAlloc::new(
+            capacity_tokens,
+            block_size,
+            reserve_tokens,
+        ))),
+        "pipelined-block" => Box::new(Pipelined::new(BlockAlloc::new(
+            capacity_tokens,
+            block_size,
+            reserve_tokens,
+        ))),
+        "pipelined-exact" => Box::new(Pipelined::new(ExactAlloc::new(
+            capacity_tokens,
+            block_size,
+            reserve_tokens,
+        ))),
+        _ => return None,
+    };
+    Some(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demand(immediate: u32, predicted: u32) -> Demand {
+        Demand { immediate, predicted, max_total: 512 }
+    }
+
+    #[test]
+    fn registry_builds_all() {
+        for name in all_allocators() {
+            let a = by_name(name, 1024, 32, 64).unwrap();
+            assert_eq!(a.name(), *name);
+            assert_eq!(canonical_alloc_name(name), Some(*name));
+        }
+        assert!(by_name("paged", 1024, 32, 0).is_none());
+        assert!(canonical_alloc_name("paged").is_none());
+    }
+
+    #[test]
+    fn max_admits_model_maximum() {
+        let mut a = MaxAlloc::new(2048, 32, 0);
+        let out = a.admit(1, demand(16, 4), ReserveClass::Reserved);
+        assert!(out.ok());
+        assert_eq!(a.allocated(1), 512);
+        // Growth within the max lease is free.
+        assert!(matches!(a.grow_to(1, 500, ReserveClass::Normal), AllocOutcome::Granted { tokens: 0 }));
+        // 2048/512 = 4 leases, then exhaustion.
+        for id in 2..=4 {
+            assert!(a.admit(id, demand(16, 4), ReserveClass::Reserved).ok());
+        }
+        assert!(!a.admit(5, demand(16, 4), ReserveClass::Reserved).ok());
+    }
+
+    #[test]
+    fn block_admits_immediate_only_and_fails_midflight() {
+        let mut a = BlockAlloc::new(160, 32, 0);
+        assert!(a.admit(1, demand(33, 400), ReserveClass::Reserved).ok());
+        assert_eq!(a.allocated(1), 64); // 2 blocks, prediction ignored
+        a.record_write(1, 33);
+        assert!(a.grow_to(1, 96, ReserveClass::Reserved).ok());
+        assert!(a.admit(2, demand(33, 0), ReserveClass::Reserved).ok());
+        // Pool is now full: mid-flight growth fails (Fig 1d).
+        assert!(!a.grow_to(1, 129, ReserveClass::Reserved).ok());
+        assert_eq!(a.stats().failures, 1);
+    }
+
+    #[test]
+    fn exact_admits_prediction_span() {
+        let mut a = ExactAlloc::new(1024, 32, 0);
+        assert!(a.admit(1, demand(20, 40), ReserveClass::Normal).ok());
+        // 20 + 40 + 1 = 61 tokens -> 2 blocks of 32.
+        assert_eq!(a.allocated(1), 64);
+        assert_eq!(a.lease_of(1).unwrap().reserve_class, ReserveClass::Normal);
+    }
+
+    #[test]
+    fn lease_reports_grant_and_class() {
+        let mut a = ExactAlloc::new(1024, 32, 64);
+        assert!(a.lease_of(9).is_none());
+        a.admit(9, demand(10, 10), ReserveClass::Reserved);
+        let lease = a.lease_of(9).unwrap();
+        assert_eq!(lease.grant, 32);
+        assert_eq!(lease.reserve_class, ReserveClass::Reserved);
+        let rel = a.release(9);
+        assert_eq!(rel.written, 0);
+        assert!(a.lease_of(9).is_none());
+    }
+
+    #[test]
+    fn pipelined_hosts_without_new_blocks() {
+        let mut a = Pipelined::new(ExactAlloc::new(1024, 32, 0));
+        // Host: span of 64 tokens.
+        assert!(a.admit(1, demand(0, 63), ReserveClass::Normal).ok());
+        let allocated_before = a.total_allocated();
+        let cap = a.lend_capacity(1, 64, 0, 0.0);
+        assert_eq!(cap, 32);
+        let out = a.lend(1, 64, 0, 0.0, 2, 16);
+        assert_eq!(out, AllocOutcome::Hosted { host: 1, offset: 48, len: 16 });
+        assert_eq!(a.total_allocated(), allocated_before, "guest took no blocks");
+        a.record_write(2, 16);
+        assert_eq!(a.guest_written(2), 16);
+        assert_eq!(a.occupied(2), 16);
+        assert_eq!(a.total_written(), 16);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn pipelined_rejects_oversized_guest() {
+        let mut a = Pipelined::new(ExactAlloc::new(1024, 32, 0));
+        a.admit(1, demand(0, 63), ReserveClass::Normal);
+        assert!(!a.lend(1, 64, 0, 0.0, 2, 40).ok());
+        // Buffer shrinks the lendable target further.
+        assert!(a.lend_capacity(1, 64, 0, 0.2) < a.lend_capacity(1, 64, 0, 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "guest 2 overflow")]
+    fn guest_write_past_slot_panics() {
+        let mut a = Pipelined::new(ExactAlloc::new(1024, 32, 0));
+        a.admit(1, demand(0, 63), ReserveClass::Normal);
+        a.lend(1, 64, 0, 0.0, 2, 16);
+        a.record_write(2, 17);
+    }
+
+    #[test]
+    fn release_orphans_hosted_guests() {
+        let mut a = Pipelined::new(ExactAlloc::new(1024, 32, 0));
+        a.admit(1, demand(0, 63), ReserveClass::Normal);
+        a.lend(1, 64, 0, 0.0, 2, 16);
+        a.record_write(2, 8);
+        let rel = a.release(1);
+        assert_eq!(rel.orphans, vec![2]);
+        assert!(!a.is_guest(2));
+        // The orphan's borrowed tokens are still recorded until dropped.
+        assert_eq!(a.drop_guest(2), 8);
+        assert_eq!(a.total_written(), 0);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn adopt_migrates_guest_tokens() {
+        let mut a = Pipelined::new(ExactAlloc::new(1024, 32, 0));
+        a.admit(1, demand(0, 63), ReserveClass::Normal);
+        a.lend(1, 64, 0, 0.0, 2, 16);
+        a.record_write(2, 8);
+        let orphans = a.detach_host(1);
+        assert_eq!(orphans, vec![2]);
+        assert!(a.adopt(2, 8 + 4).ok());
+        assert_eq!(a.guest_written(2), 0);
+        assert_eq!(a.written(2), 8);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn tally_drains_per_iteration() {
+        let mut a = Pipelined::new(ExactAlloc::new(256, 32, 0));
+        a.admit(1, demand(0, 200), ReserveClass::Normal);
+        a.lend(1, 201, 0, 0.0, 2, 64);
+        assert!(!a.admit(3, demand(300, 0), ReserveClass::Normal).ok());
+        let t = a.take_tally();
+        assert_eq!((t.granted, t.hosted, t.exhausted), (1, 1, 1));
+        let t2 = a.take_tally();
+        assert_eq!((t2.granted, t2.hosted, t2.exhausted), (0, 0, 0));
+    }
+
+    #[test]
+    fn implicit_grow_covers_unplanned_writes() {
+        // A scheduler × allocator combo that never calls grow_to must not
+        // crash: the write is covered from the reserve and counted.
+        let mut a = BlockAlloc::new(1024, 32, 128);
+        a.admit(1, demand(16, 0), ReserveClass::Reserved);
+        a.record_write(1, 16);
+        a.record_write(1, 32); // outruns the 1-block lease
+        assert_eq!(a.stats().implicit_grows, 1);
+        assert_eq!(a.written(1), 48);
+        a.check_invariants();
+    }
+}

@@ -1,24 +1,30 @@
-//! KV-cache (KVC) management: block pool, allocation policies, reservation,
-//! and the accounting that backs the paper's utilization metrics.
+//! KV-cache (KVC) management: the allocation-policy axis of Table 1.
+//!
+//! The module is a policy/mechanism split:
+//!
+//!  * [`alloc`] — the public face: the [`Allocator`] trait (lease-style
+//!    grants, typed [`AllocOutcome`]s) and its implementations
+//!    [`MaxAlloc`] / [`BlockAlloc`] / [`ExactAlloc`] plus the composable
+//!    [`Pipelined`] wrapper that layers §3.2 KVC pipelining over any
+//!    inner allocator. Pick one by name with [`by_name`].
+//!  * [`BlockPool`] (crate-private) — the mechanism: block-granular
+//!    accounting (`block_size` tokens per block, 32 by default, like
+//!    vLLM's PagedAttention) with a reservation carve-out (§3.3).
+//!    Schedulers can no longer reach it; all allocation flows through
+//!    [`Allocator`] handles held by `World`.
+//!  * [`pipeline`] — the host/guest registry behind [`Pipelined`]
+//!    ("Russian nesting dolls" span lending, Fig 7).
 //!
 //! All capacity is measured in **tokens**; physical allocation is
-//! **block-granular** (`block_size` tokens per block, 32 by default) like
-//! vLLM's PagedAttention, so every policy shares one [`BlockPool`]:
-//!
-//!  * **max-allocation** (ORCA/FastServe): allocate `prompt + max_rl`
-//!    upfront — call [`BlockPool::alloc_tokens`] with the max total length.
-//!  * **block-allocation** (vLLM/Sarathi): allocate one block at a time as
-//!    the sequence grows — [`BlockPool::ensure_capacity`] per token; it can
-//!    FAIL mid-execution, which is exactly the paper's "KVC allocation
-//!    failure" (Fig 1d).
-//!  * **exact-allocation** (MultiRes/EconoServe): allocate
-//!    `prompt + padded predicted RL` when the task is scheduled.
-//!
-//! KVC **pipelining** (§3.2) is layered on top in [`pipeline`]: hosted GTs
-//! write into a host's allocated-but-unused second half, adding *written*
-//! tokens without adding *allocated* blocks.
+//! block-granular and rounds up.
 
+pub mod alloc;
 pub mod pipeline;
+
+pub use alloc::{
+    all_allocators, by_name, canonical_alloc_name, AllocOutcome, AllocStats, AllocTally,
+    Allocator, BlockAlloc, Demand, ExactAlloc, Lease, MaxAlloc, Pipelined, PoolCore, Released,
+};
 
 use std::collections::HashMap;
 
@@ -26,26 +32,43 @@ use crate::core::ReqId;
 
 /// Why an allocation request could not be satisfied.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum AllocError {
+pub(crate) enum AllocError {
     /// Not enough unreserved free blocks.
     OutOfBlocks { needed: u32, free: u32 },
 }
 
+/// Which capacity class an allocation may draw from (§3.3: a slice of the
+/// pool is carved out for PT admission and under-provision rescue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReserveClass {
+    /// Cannot dip below the reserved watermark.
+    Normal,
+    /// May consume the reserved carve-out.
+    Reserved,
+}
+
 /// Per-request allocation record.
-#[derive(Debug, Clone, Default)]
-pub struct Alloc {
+#[derive(Debug, Clone)]
+pub(crate) struct Alloc {
     /// Blocks owned by this request.
     pub blocks: u32,
     /// Tokens actually written into owned blocks (<= blocks * block_size).
     pub written: u32,
-    /// Tokens written into *borrowed* (pipelined) space — accounted here
-    /// for utilization but occupying a host's blocks.
-    pub guest_written: u32,
+    /// Class charged by the most recent grant (reported in [`Lease`]).
+    pub class: ReserveClass,
 }
 
-/// Block-granular KVC pool with a PT reservation carve-out.
+impl Default for Alloc {
+    fn default() -> Self {
+        Alloc { blocks: 0, written: 0, class: ReserveClass::Normal }
+    }
+}
+
+/// Block-granular KVC pool with a reservation carve-out. This is the
+/// *mechanism* behind every [`Allocator`]; nothing outside `kvc` touches
+/// it directly.
 #[derive(Debug, Clone)]
-pub struct BlockPool {
+pub(crate) struct BlockPool {
     block_size: u32,
     total_blocks: u32,
     free_blocks: u32,
@@ -57,14 +80,6 @@ pub struct BlockPool {
     /// Cumulative counters for metrics.
     pub alloc_failures: u64,
     pub alloc_calls: u64,
-}
-
-/// Whether an allocation may consume the PT reservation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Priority {
-    Normal,
-    /// May use the reserved carve-out (PT admission; under-provision rescue).
-    Reserved,
 }
 
 impl BlockPool {
@@ -92,10 +107,10 @@ impl BlockPool {
         self.total_blocks * self.block_size
     }
 
-    pub fn free_tokens(&self, prio: Priority) -> u32 {
-        let free = match prio {
-            Priority::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
-            Priority::Reserved => self.free_blocks,
+    pub fn free_tokens(&self, class: ReserveClass) -> u32 {
+        let free = match class {
+            ReserveClass::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
+            ReserveClass::Reserved => self.free_blocks,
         };
         free * self.block_size
     }
@@ -104,30 +119,38 @@ impl BlockPool {
         self.reserved_blocks * self.block_size
     }
 
-    #[allow(dead_code)]
+    /// Blocks needed to hold `tokens` tokens (round up).
     fn blocks_for(&self, tokens: u32) -> u32 {
         (tokens + self.block_size - 1) / self.block_size
     }
 
     /// Allocate capacity for `tokens` more tokens for `id` (cumulative:
-    /// extends the existing allocation). Fails atomically.
-    pub fn alloc_tokens(&mut self, id: ReqId, tokens: u32, prio: Priority) -> Result<(), AllocError> {
+    /// extends the existing allocation). Fails atomically; on success
+    /// returns the number of blocks newly taken from the free list.
+    pub fn alloc_tokens(
+        &mut self,
+        id: ReqId,
+        tokens: u32,
+        class: ReserveClass,
+    ) -> Result<u32, AllocError> {
         self.alloc_calls += 1;
+        let bs = self.block_size;
         let entry = self.allocs.entry(id).or_default();
-        let capacity_now = entry.blocks * self.block_size;
+        let capacity_now = entry.blocks * bs;
         let needed_tokens = (entry.written + tokens).saturating_sub(capacity_now);
-        let needed = (needed_tokens + self.block_size - 1) / self.block_size;
-        let available = match prio {
-            Priority::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
-            Priority::Reserved => self.free_blocks,
+        let needed = (needed_tokens + bs - 1) / bs;
+        let available = match class {
+            ReserveClass::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
+            ReserveClass::Reserved => self.free_blocks,
         };
         if needed > available {
             self.alloc_failures += 1;
             return Err(AllocError::OutOfBlocks { needed, free: available });
         }
         entry.blocks += needed;
+        entry.class = class;
         self.free_blocks -= needed;
-        Ok(())
+        Ok(needed)
     }
 
     /// Ensure `id` can hold `total_tokens` written tokens, growing
@@ -136,25 +159,26 @@ impl BlockPool {
         &mut self,
         id: ReqId,
         total_tokens: u32,
-        prio: Priority,
+        class: ReserveClass,
     ) -> Result<u32, AllocError> {
         self.alloc_calls += 1;
+        let need_total = self.blocks_for(total_tokens);
         let entry = self.allocs.entry(id).or_default();
         let have = entry.blocks;
-        let need_total = (total_tokens + self.block_size - 1) / self.block_size;
         if need_total <= have {
             return Ok(0);
         }
         let needed = need_total - have;
-        let available = match prio {
-            Priority::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
-            Priority::Reserved => self.free_blocks,
+        let available = match class {
+            ReserveClass::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
+            ReserveClass::Reserved => self.free_blocks,
         };
         if needed > available {
             self.alloc_failures += 1;
             return Err(AllocError::OutOfBlocks { needed, free: available });
         }
         entry.blocks += needed;
+        entry.class = class;
         self.free_blocks -= needed;
         Ok(needed)
     }
@@ -172,22 +196,6 @@ impl BlockPool {
             entry.blocks * bs,
         );
         entry.written += n;
-    }
-
-    /// Record `n` tokens written into space borrowed from a host (KVCPipe).
-    pub fn write_guest_tokens(&mut self, id: ReqId, n: u32) {
-        let entry = self.allocs.entry(id).or_default();
-        entry.guest_written += n;
-    }
-
-    /// Remove and return `id`'s guest-written token count (the tokens no
-    /// longer occupy the host's blocks: either dropped on eviction, or
-    /// being converted into the request's own allocation).
-    pub fn clear_guest_tokens(&mut self, id: ReqId) -> u32 {
-        match self.allocs.get_mut(&id) {
-            Some(a) => std::mem::take(&mut a.guest_written),
-            None => 0,
-        }
     }
 
     /// Restore `n` written tokens after a swap-in (the KV data returned
@@ -216,10 +224,13 @@ impl BlockPool {
 
     /// Shrink `id`'s allocation to exactly fit its written tokens (used
     /// when a time-synced group returns and over-provisioned space is
-    /// reclaimed).
+    /// reclaimed). Returns the blocks freed.
     pub fn trim_to_written(&mut self, id: ReqId) -> u32 {
-        let Some(entry) = self.allocs.get_mut(&id) else { return 0 };
-        let need = (entry.written + self.block_size - 1) / self.block_size;
+        let need = match self.allocs.get(&id) {
+            Some(entry) => self.blocks_for(entry.written),
+            None => return 0,
+        };
+        let entry = self.allocs.get_mut(&id).expect("checked above");
         let excess = entry.blocks.saturating_sub(need);
         entry.blocks -= excess;
         self.free_blocks += excess;
@@ -238,26 +249,15 @@ impl BlockPool {
         self.allocs.get(&id).map(|a| a.written).unwrap_or(0)
     }
 
-    /// Total tokens written across all live requests (own + guest) — the
-    /// numerator of the paper's KVC-utilization metric.
+    /// Total tokens written across all live requests (own allocations —
+    /// pipelined guest writes are accounted by [`Pipelined`]).
     pub fn total_written(&self) -> u64 {
-        self.allocs.values().map(|a| (a.written + a.guest_written) as u64).sum()
+        self.allocs.values().map(|a| a.written as u64).sum()
     }
 
     /// Total allocated capacity in tokens (Σ blocks × block_size).
     pub fn total_allocated(&self) -> u64 {
         (self.total_blocks - self.free_blocks) as u64 * self.block_size as u64
-    }
-
-    /// KVC utilization: written tokens / total capacity (what gpustat-style
-    /// sampling sees: memory actually holding KV data).
-    pub fn utilization(&self) -> f64 {
-        self.total_written() as f64 / (self.capacity_tokens() as f64).max(1.0)
-    }
-
-    /// Allocation ratio: allocated / capacity (1.0 == "fully allocated").
-    pub fn allocation_ratio(&self) -> f64 {
-        self.total_allocated() as f64 / (self.capacity_tokens() as f64).max(1.0)
     }
 
     /// Internal consistency check (used by tests and debug assertions).
@@ -291,7 +291,7 @@ mod tests {
     #[test]
     fn exact_alloc_and_write() {
         let mut p = pool();
-        p.alloc_tokens(1, 100, Priority::Normal).unwrap();
+        p.alloc_tokens(1, 100, ReserveClass::Normal).unwrap();
         assert_eq!(p.allocated_tokens(1), 128); // 4 blocks
         p.write_tokens(1, 100);
         assert_eq!(p.written_tokens(1), 100);
@@ -302,7 +302,7 @@ mod tests {
     #[should_panic(expected = "KVC overflow")]
     fn write_past_allocation_panics() {
         let mut p = pool();
-        p.alloc_tokens(1, 32, Priority::Normal).unwrap();
+        p.alloc_tokens(1, 32, ReserveClass::Normal).unwrap();
         p.write_tokens(1, 33);
     }
 
@@ -310,9 +310,9 @@ mod tests {
     fn normal_cannot_touch_reserve() {
         let mut p = pool();
         // 32 blocks total, 2 reserved -> 30 usable = 960 tokens.
-        assert!(p.alloc_tokens(1, 960, Priority::Normal).is_ok());
-        assert!(p.alloc_tokens(2, 32, Priority::Normal).is_err());
-        assert!(p.alloc_tokens(2, 32, Priority::Reserved).is_ok());
+        assert!(p.alloc_tokens(1, 960, ReserveClass::Normal).is_ok());
+        assert!(p.alloc_tokens(2, 32, ReserveClass::Normal).is_err());
+        assert!(p.alloc_tokens(2, 32, ReserveClass::Reserved).is_ok());
         assert_eq!(p.alloc_failures, 1);
         p.check_invariants();
     }
@@ -320,29 +320,29 @@ mod tests {
     #[test]
     fn ensure_capacity_grows_blockwise() {
         let mut p = pool();
-        assert_eq!(p.ensure_capacity(1, 1, Priority::Normal).unwrap(), 1);
+        assert_eq!(p.ensure_capacity(1, 1, ReserveClass::Normal).unwrap(), 1);
         p.write_tokens(1, 1);
         // Tokens 2..=32 need no new block.
-        assert_eq!(p.ensure_capacity(1, 32, Priority::Normal).unwrap(), 0);
-        assert_eq!(p.ensure_capacity(1, 33, Priority::Normal).unwrap(), 1);
+        assert_eq!(p.ensure_capacity(1, 32, ReserveClass::Normal).unwrap(), 0);
+        assert_eq!(p.ensure_capacity(1, 33, ReserveClass::Normal).unwrap(), 1);
         assert_eq!(p.allocated_tokens(1), 64);
     }
 
     #[test]
     fn release_returns_blocks() {
         let mut p = pool();
-        p.alloc_tokens(1, 500, Priority::Normal).unwrap();
-        let before = p.free_tokens(Priority::Reserved);
+        p.alloc_tokens(1, 500, ReserveClass::Normal).unwrap();
+        let before = p.free_tokens(ReserveClass::Reserved);
         let (blocks, _) = p.release(1);
         assert_eq!(blocks, 16); // ceil(500/32)
-        assert_eq!(p.free_tokens(Priority::Reserved), before + 16 * 32);
+        assert_eq!(p.free_tokens(ReserveClass::Reserved), before + 16 * 32);
         p.check_invariants();
     }
 
     #[test]
     fn trim_reclaims_overprovision() {
         let mut p = pool();
-        p.alloc_tokens(1, 320, Priority::Normal).unwrap(); // 10 blocks
+        p.alloc_tokens(1, 320, ReserveClass::Normal).unwrap(); // 10 blocks
         p.write_tokens(1, 40); // only 2 blocks worth
         let freed = p.trim_to_written(1);
         assert_eq!(freed, 8);
@@ -351,23 +351,22 @@ mod tests {
     }
 
     #[test]
-    fn utilization_counts_guest_writes() {
+    fn alloc_is_atomic_on_failure() {
         let mut p = pool();
-        p.alloc_tokens(1, 128, Priority::Normal).unwrap();
-        p.write_tokens(1, 64);
-        p.write_guest_tokens(2, 32); // hosted GT: no blocks of its own
-        assert_eq!(p.total_written(), 96);
-        assert_eq!(p.total_allocated(), 128);
+        p.alloc_tokens(1, 900, ReserveClass::Normal).unwrap();
+        let free_before = p.free_tokens(ReserveClass::Normal);
+        assert!(p.alloc_tokens(2, 500, ReserveClass::Normal).is_err());
+        assert_eq!(p.free_tokens(ReserveClass::Normal), free_before);
+        assert_eq!(p.allocated_tokens(2), 0);
+        p.check_invariants();
     }
 
     #[test]
-    fn alloc_is_atomic_on_failure() {
+    fn alloc_records_reserve_class() {
         let mut p = pool();
-        p.alloc_tokens(1, 900, Priority::Normal).unwrap();
-        let free_before = p.free_tokens(Priority::Normal);
-        assert!(p.alloc_tokens(2, 500, Priority::Normal).is_err());
-        assert_eq!(p.free_tokens(Priority::Normal), free_before);
-        assert_eq!(p.allocated_tokens(2), 0);
-        p.check_invariants();
+        p.alloc_tokens(1, 32, ReserveClass::Reserved).unwrap();
+        assert_eq!(p.alloc_of(1).unwrap().class, ReserveClass::Reserved);
+        p.alloc_tokens(1, 32, ReserveClass::Normal).unwrap();
+        assert_eq!(p.alloc_of(1).unwrap().class, ReserveClass::Normal);
     }
 }

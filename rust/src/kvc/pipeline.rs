@@ -229,6 +229,28 @@ mod tests {
     }
 
     #[test]
+    fn overrun_failure_path_evicts_under_predicted_guest() {
+        // The §3.2 failure case at registry level: a guest still alive
+        // (slot registered) when the host's write head reaches its offset
+        // keeps being reported until the caller evicts it; eviction
+        // (release) then clears the report and the registry stays sound.
+        let mut r = PipeRegistry::new();
+        r.add_guest(2, 1, 8, 8); // under-predicted: still alive at head 9
+        r.add_guest(3, 1, 4, 4); // deeper slot, overrun even earlier
+        for head in 9..12 {
+            let over = r.overrun_guests(1, head);
+            assert!(over.contains(&2) && over.contains(&3), "head={head}: {over:?}");
+        }
+        let slot = r.release_guest(3).unwrap();
+        assert_eq!((slot.offset, slot.len), (4, 4));
+        assert_eq!(r.overrun_guests(1, 9), vec![2], "evicted guest no longer reported");
+        r.release_guest(2);
+        assert!(r.overrun_guests(1, 100).is_empty());
+        assert_eq!(r.guest_count(), 0);
+        r.check_invariants();
+    }
+
+    #[test]
     fn remove_host_orphans_direct_guests() {
         let mut r = PipeRegistry::new();
         r.add_guest(2, 1, 16, 16);

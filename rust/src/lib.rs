@@ -24,8 +24,11 @@
 //!  * the **simulation engine** — [`coordinator`] drives a
 //!    [`sched::Scheduler`] over a [`core::world::World`] on the
 //!    calibrated [`engine::SimEngine`]; this is what reproduces the
-//!    paper's figures. `coordinator::run_admitted` applies the same
-//!    admission control as the real path.
+//!    paper's figures. Batching policy ([`sched`]) and KVC allocation
+//!    policy ([`kvc::Allocator`]) are separate axes, composed by name
+//!    (`sched::by_name("<sched>+<alloc>")`, e.g. `"vllm+exact"`).
+//!    `coordinator::run_admitted` applies the same admission control as
+//!    the real path.
 //!  * the **real engine** — [`server::RealServer`] batches requests over
 //!    decode slots of the PJRT model ([`runtime::PjrtModel`]), fronted
 //!    by a std-only HTTP server ([`server::http`]) with per-token

@@ -78,7 +78,12 @@ fn calibrated_cfg(model: &str, trace_name: &str) -> SystemConfig {
 
 fn cmd_simulate(argv: Vec<String>) -> i32 {
     let cli = Cli::new("econoserve simulate", "simulate a scheduler over a synthetic trace")
-        .opt("system", "econoserve", "scheduler (see sched::all_systems; plus 'distserve')")
+        .opt(
+            "system",
+            "econoserve",
+            "system: '<sched>' or '<sched>+<alloc>' (see sched::all_systems and \
+             kvc::all_allocators, e.g. vllm+exact); plus 'distserve'",
+        )
         .opt("model", "opt-13b", "model profile: opt-13b | llama-33b | opt-175b")
         .opt("trace", "sharegpt", "trace: alpaca | sharegpt | bookcorpus")
         .opt("rate", "0", "arrival rate req/s (0 = trace default)")

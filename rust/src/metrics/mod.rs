@@ -66,6 +66,11 @@ pub struct Collector {
     pub preemptions: u64,
     pub swap_preemptions: u64,
     pub pipeline_evictions: u64,
+    /// Cumulative typed allocation outcomes, folded in per iteration by
+    /// `World::apply_plan` from the allocator's `AllocTally`.
+    pub alloc_granted: u64,
+    pub alloc_hosted: u64,
+    pub alloc_exhausted: u64,
     /// Requests that suffered >= 1 KVC allocation failure.
     pub alloc_failed_reqs: std::collections::HashSet<usize>,
     /// Total busy (iteration) time, for GPU-time accounting.
@@ -103,6 +108,9 @@ impl Collector {
             preemptions: 0,
             swap_preemptions: 0,
             pipeline_evictions: 0,
+            alloc_granted: 0,
+            alloc_hosted: 0,
+            alloc_exhausted: 0,
             alloc_failed_reqs: std::collections::HashSet::new(),
             busy_time: 0.0,
             brk_running_written: UtilSampler::new(1.0),
@@ -139,6 +147,13 @@ impl Collector {
     pub fn record_sched(&mut self, dur: f64) {
         self.sched_time_total += dur;
         self.sched_time_samples.push(dur);
+    }
+
+    /// Fold one iteration's typed allocation outcomes into the counters.
+    pub fn record_alloc_tally(&mut self, tally: crate::kvc::AllocTally) {
+        self.alloc_granted += tally.granted as u64;
+        self.alloc_hosted += tally.hosted as u64;
+        self.alloc_exhausted += tally.exhausted as u64;
     }
 }
 

@@ -181,6 +181,7 @@ pub fn best_fit_leq(pairs: &[(u32, usize)], cap: u32) -> Option<usize> {
 mod tests {
     use super::*;
     use crate::config::{ModelProfile, SystemConfig};
+    use crate::kvc::Allocator;
     use crate::predictor::OraclePredictor;
     use crate::trace::TraceItem;
 
@@ -223,8 +224,11 @@ mod tests {
             TraceItem { arrival: 0.0, prompt_len: 10, true_rl: 10 },
         ]);
         // Give id 1 a big resident KVC footprint (e.g. preempted GT).
-        w.pool.alloc_tokens(1, 600, crate::kvc::Priority::Reserved).unwrap();
-        w.pool.write_tokens(1, 600);
+        assert!(w
+            .kvc_mut()
+            .extend(1, 600, crate::kvc::ReserveClass::Reserved)
+            .ok());
+        w.kvc_mut().record_write(1, 600);
         w.recs[0].req.deadline = w.clock + 100.0;
         w.recs[1].req.deadline = w.clock + 100.0;
         let mut ids = vec![0, 1];

@@ -4,7 +4,7 @@
 //!
 //!  * **Decoupling** (always on — variant `-D` baseline): separate PT and
 //!    GT waiting queues. GTs are responsible for *fully allocating the
-//!    KVC* (exact-allocation of the padded predicted RL); PTs are
+//!    KVC* (exact-allocation leases of the padded predicted RL); PTs are
 //!    responsible for *filling the GPU* up to the target forward size,
 //!    drawing KVC from the PT reservation. PTs can therefore be added in
 //!    EVERY iteration (Fig 8b), fixing the GT-domination issue.
@@ -17,25 +17,29 @@
 //!  * **Ordering** (`ordering`, `-SDO`): both queues ordered by (deadline
 //!    bucket ↑, occupied KVC ↓, length ↓) with binary-search gap filling
 //!    (§3.4).
-//!  * **KVC pipelining** (`pipe`, full system): each admitted hosting GT
-//!    lends the second half of its span to a guest GT whose predicted RL
-//!    fits `span/2 − b`, recursively (§3.2, Fig 7). Guests consume NO new
-//!    KVC blocks. The buffer `b` is `buffer_frac × hosting RL`.
+//!  * **KVC pipelining** (full system): handled on the *allocation axis* —
+//!    the scheduler offers every queued GT to running spans through the
+//!    allocator's lending API; under `pipelined-exact` (the full system's
+//!    default pairing) guests ride in a host's span for free, while the
+//!    plain `exact` allocator (the `-SDO` pairing) lends nothing, so the
+//!    ablation falls out of the registry rather than a scheduler flag.
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
 
 use super::Scheduler;
 use crate::config::PreemptMode;
-use crate::core::world::World;
-use crate::core::{Batch, BatchTask, Phase, ReqId};
-use crate::kvc::Priority;
+use crate::core::world::IterCtx;
+use crate::core::{BatchPlan, BatchTask, Phase, ReqId};
+use crate::kvc::{Allocator, Demand, ReserveClass};
 use crate::ordering::best_fit_leq;
 
 pub struct EconoServe {
+    /// Registry label (the ablation rung; behaviour differences between
+    /// `-SDO` and the full system live on the allocation axis).
+    label: &'static str,
     synced: bool,
     ordering: bool,
-    pipe: bool,
     /// Waiting PTs (not yet started prefilling).
     pt_queue: Vec<ReqId>,
     /// PTs currently prefilling (chunked), in admission order. Also holds
@@ -66,11 +70,11 @@ struct AdmitGate {
 }
 
 impl EconoServe {
-    fn with_flags(synced: bool, ordering: bool, pipe: bool) -> Self {
+    fn with_flags(label: &'static str, synced: bool, ordering: bool) -> Self {
         EconoServe {
+            label,
             synced,
             ordering,
-            pipe,
             pt_queue: Vec::new(),
             running_pts: VecDeque::new(),
             gt_groups: BTreeMap::new(),
@@ -85,48 +89,46 @@ impl EconoServe {
 
     /// `UnsyncedDecoupled`: decoupling + exact-allocation only.
     pub fn variant_d() -> Self {
-        Self::with_flags(false, false, false)
+        Self::with_flags("econoserve-d", false, false)
     }
 
     /// `SyncDecoupled`: + time-synced GT groups.
     pub fn variant_sd() -> Self {
-        Self::with_flags(true, false, false)
+        Self::with_flags("econoserve-sd", true, false)
     }
 
     /// + task Ordering.
     pub fn variant_sdo() -> Self {
-        Self::with_flags(true, true, false)
+        Self::with_flags("econoserve-sdo", true, true)
     }
 
-    /// Full system: + KVC pipelining.
+    /// Full system: + KVC pipelining (via the `pipelined-exact` pairing).
     pub fn full() -> Self {
-        Self::with_flags(true, true, true)
+        Self::with_flags("econoserve", true, true)
     }
 
-    fn enqueue_gt(&mut self, world: &World, id: ReqId) {
-        let rl = world.recs[id].predicted_remaining().max(1);
+    fn enqueue_gt(&mut self, ctx: &IterCtx<'_>, id: ReqId) {
+        let rl = ctx.rec(id).predicted_remaining().max(1);
         self.gt_groups.entry(rl).or_default().push_back(id);
         self.gate.version += 1;
     }
 
     /// Handle the previous iteration's events.
-    fn process_events(&mut self, world: &mut World) {
-        let events = world.take_events();
-        self.running_gts.retain(|id| !world.recs[*id].is_done());
-        self.running_pts.retain(|id| !world.recs[*id].is_done());
+    fn process_events(&mut self, ctx: &mut IterCtx<'_>) {
+        let events = std::mem::take(&mut ctx.events);
+        self.running_gts.retain(|id| !ctx.world().recs[*id].is_done());
+        self.running_pts.retain(|id| !ctx.world().recs[*id].is_done());
 
         // PTs that finished prefilling become queued GTs.
-        let finished: Vec<ReqId> = events.finished_prefill.clone();
-        for id in finished {
+        for id in events.finished_prefill {
             if let Some(pos) = self.running_pts.iter().position(|x| *x == id) {
                 self.running_pts.remove(pos);
             }
-            self.enqueue_gt(world, id);
+            self.enqueue_gt(ctx, id);
         }
 
         // Recompute done: the GT resumes decoding.
-        let recomputed: Vec<ReqId> = events.recompute_done.clone();
-        for id in recomputed {
+        for id in events.recompute_done {
             if let Some(pos) = self.running_pts.iter().position(|x| *x == id) {
                 self.running_pts.remove(pos);
             }
@@ -138,113 +140,95 @@ impl EconoServe {
         // re-queue at the re-predicted remaining RL. A GT can appear both
         // here and in evicted_guests within one iteration — handle once.
         let mut handled: std::collections::HashSet<ReqId> = std::collections::HashSet::new();
-        let under: Vec<ReqId> = events.reached_prediction.clone();
-        for id in under {
-            if world.recs[id].is_done() || !handled.insert(id) {
+        for id in events.reached_prediction {
+            if ctx.rec(id).is_done() || !handled.insert(id) {
                 continue;
             }
-            let new_rem = world.re_predict(id);
+            let new_rem = ctx.re_predict(id);
             let use_reserve = matches!(
-                world.cfg.preempt_mode,
+                ctx.cfg().preempt_mode,
                 PreemptMode::ReservedThenFree | PreemptMode::OffloadSwap
             );
             let rescued = use_reserve
-                && !world.pipes.is_guest(id)
-                && world.pool.alloc_tokens(id, new_rem + 1, Priority::Reserved).is_ok();
+                && !ctx.kvc().is_guest(id)
+                && ctx.alloc().extend(id, new_rem + 1, ReserveClass::Reserved).ok();
             if rescued {
                 self.reserve_rescues += 1;
                 // Span extends; guests were placed against the OLD span, so
                 // their offsets stay valid (the head only moves forward).
-                world.recs[id].gt_span_len += new_rem;
+                ctx.rec_mut(id).gt_span_len += new_rem;
             } else {
                 // Offload-free: stop decoding, KEEP the written KV resident
                 // (trim over-provisioned blocks), re-enter the GT queue.
                 if let Some(pos) = self.running_gts.iter().position(|x| *x == id) {
                     self.running_gts.remove(pos);
                 }
-                // Guests lose their borrowed space (host keeps running).
-                if world.pipes.is_guest(id) {
-                    world.pipes.release_guest(id);
-                    let dropped = world.pool.clear_guest_tokens(id);
-                    world.recs[id].lost_kv += dropped;
+                if ctx.kvc().is_guest(id) {
+                    // Guests lose their borrowed space (host keeps running).
+                    ctx.evict_guest(id);
                 } else {
-                    // Detach this host's guests first: they keep decoding in
-                    // space that remains allocated? No — the host's blocks
-                    // are being trimmed, so re-home or evict its guests.
-                    self.detach_guests_for_trim(world, id);
-                    world.pool.trim_to_written(id);
+                    // Re-home or drop this host's guests first, then trim
+                    // the over-provisioned tail of its own lease.
+                    self.detach_guests_for_trim(ctx, id);
+                    ctx.alloc().shrink_to_written(id);
                 }
-                let now = world.clock;
-                let rec = &mut world.recs[id];
-                rec.phase = Phase::GtQueued;
-                rec.preempted_since.get_or_insert(now);
-                rec.preempt_count += 1;
-                world.col.preemptions += 1;
+                ctx.requeue_gt(id);
                 self.requeues += 1;
-                self.enqueue_gt(world, id);
+                self.enqueue_gt(ctx, id);
             }
         }
 
         // Evicted guests re-enter the GT queue (they carry lost_kv that is
         // recomputed when they are re-admitted).
-        let evicted: Vec<ReqId> = events.evicted_guests.clone();
-        for id in evicted {
-            if world.recs[id].is_done() || !handled.insert(id) {
+        for id in events.evicted_guests {
+            if ctx.rec(id).is_done() || !handled.insert(id) {
                 continue;
             }
             if let Some(pos) = self.running_gts.iter().position(|x| *x == id) {
                 self.running_gts.remove(pos);
             }
-            world.re_predict(id);
-            self.enqueue_gt(world, id);
+            ctx.re_predict(id);
+            self.enqueue_gt(ctx, id);
         }
     }
 
-    /// Re-home or evict the direct guests of `host` before its unused
+    /// Re-home or drop the direct guests of `host` before its unused
     /// span is trimmed away.
-    fn detach_guests_for_trim(&mut self, world: &mut World, host: ReqId) {
-        let guests = world.pipes.remove_host(host);
+    fn detach_guests_for_trim(&mut self, ctx: &mut IterCtx<'_>, host: ReqId) {
+        let guests = ctx.alloc().detach_host(host);
         for g in guests {
-            if world.recs[g].is_done() {
+            if ctx.rec(g).is_done() {
                 continue;
             }
-            let moved = world.pool.alloc_of(g).map(|a| a.guest_written).unwrap_or(0);
-            let need = moved + world.recs[g].predicted_remaining() + 1;
-            if world.pool.alloc_tokens(g, need, Priority::Reserved).is_ok() {
-                world.pool.clear_guest_tokens(g);
-                if moved > 0 {
-                    world.pool.write_tokens(g, moved);
-                }
-            } else {
-                // Same as a world eviction: drop guest KV, re-queue.
-                if let Some(pos) = self.running_gts.iter().position(|x| *x == g) {
-                    self.running_gts.remove(pos);
-                }
-                let dropped = world.pool.clear_guest_tokens(g);
-                let now = world.clock;
-                let rec = &mut world.recs[g];
-                rec.lost_kv += dropped;
-                rec.phase = Phase::GtQueued;
-                rec.preempted_since.get_or_insert(now);
-                rec.preempt_count += 1;
-                world.col.preemptions += 1;
-                world.col.pipeline_evictions += 1;
-                self.enqueue_gt(world, g);
+            let need = ctx.kvc().guest_written(g) + ctx.rec(g).predicted_remaining() + 1;
+            if ctx.alloc().adopt(g, need).ok() {
+                continue; // transferred onto its own lease
             }
+            // Same as a world eviction: drop guest KV, re-queue.
+            if let Some(pos) = self.running_gts.iter().position(|x| *x == g) {
+                self.running_gts.remove(pos);
+            }
+            ctx.evict_guest(g);
+            ctx.requeue_gt(g);
+            ctx.metrics_mut().pipeline_evictions += 1;
+            self.enqueue_gt(ctx, g);
         }
     }
 
     /// Admit one GT from a group: exact-alloc its remaining span
     /// (+ pending recompute work). Returns false on KVC exhaustion.
-    fn admit_gt(&mut self, world: &mut World, id: ReqId) -> bool {
-        let rec = &world.recs[id];
-        let remaining = rec.predicted_remaining().max(1);
-        let need = rec.lost_kv + remaining + 1;
-        if world.pool.alloc_tokens(id, need, Priority::Normal).is_err() {
+    fn admit_gt(&mut self, ctx: &mut IterCtx<'_>, id: ReqId) -> bool {
+        let remaining = ctx.rec(id).predicted_remaining().max(1);
+        let demand = Demand {
+            immediate: ctx.rec(id).lost_kv,
+            predicted: remaining,
+            max_total: ctx.cfg().profile.max_total_len,
+        };
+        if !ctx.alloc().admit(id, demand, ReserveClass::Normal).ok() {
             return false;
         }
-        world.mark_exec_start(id);
-        let rec = &mut world.recs[id];
+        ctx.mark_exec_start(id);
+        let rec = ctx.rec_mut(id);
         rec.gt_span_base = rec.generated;
         rec.gt_span_len = remaining;
         if rec.lost_kv > 0 {
@@ -260,14 +244,14 @@ impl EconoServe {
 
     /// Time-synced group admission: pick groups (ordered or FCFS-oldest),
     /// admit members until the KVC is fully allocated; split when needed.
-    fn admit_gt_groups(&mut self, world: &mut World) {
+    fn admit_gt_groups(&mut self, ctx: &mut IterCtx<'_>) {
         // Retry gate: if the last attempt failed and neither the free
         // space, the queue, nor (materially) the clock has changed, the
         // scan would fail again — skip it.
         if let Some((free, ver, at)) = self.gate.failed_at {
-            if world.pool.free_tokens(Priority::Normal) == free
+            if ctx.kvc().free_tokens(ReserveClass::Normal) == free
                 && ver == self.gate.version
-                && world.clock - at < 0.05
+                && ctx.clock() - at < 0.05
             {
                 return;
             }
@@ -283,7 +267,7 @@ impl EconoServe {
                 // Highest-priority member across group heads, honoring the
                 // 3-factor order; then prefer the LONGEST RL group (factor 3)
                 // via best-fit against the available KVC.
-                let avail = world.pool.free_tokens(Priority::Normal);
+                let avail = ctx.kvc().free_tokens(ReserveClass::Normal);
                 let mut pairs: Vec<(u32, usize)> = self
                     .gt_groups
                     .keys()
@@ -302,8 +286,8 @@ impl EconoServe {
                     .iter()
                     .filter(|(rl, _)| !tried.contains(rl))
                     .min_by(|(_, a), (_, b)| {
-                        let ta = world.recs[*a.front().unwrap()].req.arrival;
-                        let tb = world.recs[*b.front().unwrap()].req.arrival;
+                        let ta = ctx.rec(*a.front().unwrap()).req.arrival;
+                        let tb = ctx.rec(*b.front().unwrap()).req.arrival;
                         ta.partial_cmp(&tb).unwrap()
                     })
                     .map(|(rl, _)| *rl)
@@ -315,7 +299,6 @@ impl EconoServe {
 
             let mut admitted = 0u32;
             let mut kvc_full = false;
-            let mut hosts: Vec<ReqId> = Vec::new();
             // Admit every READY member of the group (prediction available —
             // the predictor runs concurrently with waiting/prefill,
             // §3.3.2); unready members stay queued without head-of-line
@@ -323,16 +306,15 @@ impl EconoServe {
             let mut idx = 0;
             while idx < self.gt_groups.get(&key).map(|q| q.len()).unwrap_or(0) {
                 let cand = self.gt_groups[&key][idx];
-                if world.pred_ready[cand] > world.clock {
+                if !ctx.pred_ready(cand) {
                     idx += 1;
                     continue;
                 }
-                if !self.admit_gt(world, cand) {
+                if !self.admit_gt(ctx, cand) {
                     kvc_full = true;
                     break;
                 }
                 self.gt_groups.get_mut(&key).unwrap().remove(idx);
-                hosts.push(cand);
                 admitted += 1;
             }
             if admitted > 0 {
@@ -342,11 +324,6 @@ impl EconoServe {
             // Groups whose every member is merely "not ready yet" must not
             // stop admission of other groups; only KVC exhaustion does.
             tried.insert(key);
-
-            // Newly admitted hosts lend immediately via the same
-            // frontier pass (lend_running_spans runs again below when the
-            // queue still has candidates).
-            let _ = hosts;
 
             any_admitted |= admitted > 0;
             if kvc_full {
@@ -360,48 +337,41 @@ impl EconoServe {
             None
         } else {
             Some((
-                world.pool.free_tokens(Priority::Normal),
+                ctx.kvc().free_tokens(ReserveClass::Normal),
                 self.gate.version,
-                world.clock,
+                ctx.clock(),
             ))
         };
     }
 
     /// Continuous lending (KVCPipe, §3.2 generalized): every running GT
-    /// (hosts AND guests — nesting falls out naturally) lends the unused
-    /// tail of its span to queued GTs, RIGHT-ALIGNED: a guest of length g
-    /// goes at [frontier - g, frontier), where `frontier` is the lowest
-    /// offset already lent. Safety is the same invariant as Fig 7 — the
-    /// guest finishes after g iterations while the writer's head needs
-    /// gap - g >= g + b more iterations to reach it (g <= gap/2 - b) —
-    /// but right-alignment keeps the remaining gap contiguous, so a span
-    /// keeps absorbing guests as its head advances, packing far more of
-    /// the allocated-but-unwritten space than midpoint halving.
-    fn lend_running_spans(&mut self, world: &mut World) {
+    /// (hosts AND guests — nesting falls out naturally) offers the unused
+    /// tail of its span to queued GTs through the allocator's lending API,
+    /// RIGHT-ALIGNED: a guest of length g goes at [frontier - g, frontier),
+    /// where `frontier` is the lowest offset already lent. Safety is the
+    /// same invariant as Fig 7 — the guest finishes after g iterations
+    /// while the writer's head needs gap - g >= g + b more iterations to
+    /// reach it (g <= gap/2 - b) — but right-alignment keeps the remaining
+    /// gap contiguous, so a span keeps absorbing guests as its head
+    /// advances. Under a non-pipelined allocator `lend_capacity` is 0 and
+    /// this is a no-op — the `-SDO` ablation rung.
+    fn lend_running_spans(&mut self, ctx: &mut IterCtx<'_>) {
         if self.gt_groups.is_empty() {
             return;
         }
+        let buffer_frac = ctx.cfg().buffer_frac;
         let writers: Vec<ReqId> = self.running_gts.clone();
         for writer in writers {
             if self.gt_groups.is_empty() {
                 break;
             }
-            if world.recs[writer].lost_kv > 0 || world.recs[writer].is_done() {
+            if ctx.rec(writer).lost_kv > 0 || ctx.rec(writer).is_done() {
                 continue;
             }
-            let head = world.recs[writer].generated - world.recs[writer].gt_span_base;
-            let span = world.recs[writer].gt_span_len;
-            let mut frontier = world
-                .pipes
-                .guests_of(writer)
-                .iter()
-                .filter_map(|g| world.pipes.host_of(*g).map(|s| s.offset))
-                .min()
-                .unwrap_or(span);
+            let head = ctx.rec(writer).generated - ctx.rec(writer).gt_span_base;
+            let span = ctx.rec(writer).gt_span_len;
             loop {
-                let gap = frontier.saturating_sub(head);
-                let b_tok = (world.cfg.buffer_frac * gap as f64).ceil() as u32;
-                let target = (gap / 2).saturating_sub(b_tok);
+                let target = ctx.kvc().lend_capacity(writer, span, head, buffer_frac);
                 if target < 4 {
                     break;
                 }
@@ -412,9 +382,9 @@ impl EconoServe {
                     .find_map(|(rl, q)| {
                         q.iter()
                             .position(|&id| {
-                                world.pred_ready[id] <= world.clock
-                                    && world.recs[id].lost_kv == 0
-                                    && !world.recs[id].is_done()
+                                ctx.pred_ready(id)
+                                    && ctx.rec(id).lost_kv == 0
+                                    && !ctx.rec(id).is_done()
                             })
                             .map(|pos| (*rl, pos))
                     });
@@ -423,12 +393,16 @@ impl EconoServe {
                 if self.gt_groups[&rl].is_empty() {
                     self.gt_groups.remove(&rl);
                 }
-                frontier -= rl;
-                world.pipes.add_guest(guest, writer, frontier, rl);
+                if !ctx.alloc().lend(writer, span, head, buffer_frac, guest, rl).ok() {
+                    // The mechanism re-checked the invariant and refused:
+                    // put the candidate back and stop lending this span.
+                    self.gt_groups.entry(rl).or_default().push_front(guest);
+                    break;
+                }
                 self.guests_placed += 1;
                 self.gate.version += 1;
-                world.mark_exec_start(guest);
-                let rec = &mut world.recs[guest];
+                ctx.mark_exec_start(guest);
+                let rec = ctx.rec_mut(guest);
                 rec.gt_span_base = rec.generated;
                 rec.gt_span_len = rl;
                 rec.phase = Phase::Decoding;
@@ -438,22 +412,21 @@ impl EconoServe {
         }
     }
 
-    /// Unsynced GT admission (variant -D): individual exact-allocations in
+    /// Unsynced GT admission (variant -D): individual exact leases in
     /// queue order.
-    fn admit_gts_unsynced(&mut self, world: &mut World) {
+    fn admit_gts_unsynced(&mut self, ctx: &mut IterCtx<'_>) {
         let mut ids: Vec<ReqId> =
             self.gt_groups.values().flat_map(|q| q.iter().copied()).collect();
         ids.sort_by(|a, b| {
-            world.recs[*a].req.arrival.partial_cmp(&world.recs[*b].req.arrival).unwrap()
+            ctx.rec(*a).req.arrival.partial_cmp(&ctx.rec(*b).req.arrival).unwrap()
         });
         for id in ids {
-            if world.pred_ready[id] > world.clock {
+            if !ctx.pred_ready(id) {
                 continue;
             }
-            if !self.admit_gt(world, id) {
+            if !self.admit_gt(ctx, id) {
                 break;
             }
-            let rl = world.recs[id].predicted_remaining().max(1);
             // Remove from its group queue.
             for (_, q) in self.gt_groups.iter_mut() {
                 if let Some(pos) = q.iter().position(|x| *x == id) {
@@ -461,16 +434,15 @@ impl EconoServe {
                     break;
                 }
             }
-            let _ = rl;
         }
         self.gt_groups.retain(|_, q| !q.is_empty());
     }
 
     /// PT admission: fill the GPU to TFS with prompt chunks, drawing KVC
     /// from the reservation (and beyond, if free).
-    fn admit_pts(&mut self, world: &mut World, batch: &mut Batch) {
-        let tfs = world.cfg.profile.tfs;
-        let mut used = batch.forward_size();
+    fn admit_pts(&mut self, ctx: &mut IterCtx<'_>, plan: &mut BatchPlan) {
+        let tfs = ctx.cfg().profile.tfs;
+        let mut used = plan.forward_size();
 
         // Continue in-flight prefills (and recomputes) first.
         let inflight: Vec<ReqId> = self.running_pts.iter().copied().collect();
@@ -478,39 +450,34 @@ impl EconoServe {
             if used >= tfs {
                 break;
             }
-            let rec = &world.recs[id];
-            let left = if rec.lost_kv > 0 {
-                rec.lost_kv
-            } else {
-                rec.req.prompt_len - rec.prompt_done
-            };
+            let rec = ctx.rec(id);
+            let lost = rec.lost_kv;
+            let left = if lost > 0 { lost } else { rec.req.prompt_len - rec.prompt_done };
             let chunk = left.min(tfs - used);
             if chunk == 0 {
                 continue;
             }
-            if rec.lost_kv == 0
-                && world.pool.alloc_tokens(id, chunk, Priority::Reserved).is_err()
-            {
-                world.col.alloc_failed_reqs.insert(id);
+            if lost == 0 && !ctx.alloc().extend(id, chunk, ReserveClass::Reserved).ok() {
+                ctx.note_alloc_failed(id);
                 continue;
             }
-            batch.tasks.push(BatchTask::Prefill { id, chunk });
+            plan.tasks.push(BatchTask::Prefill { id, chunk });
             used += chunk;
         }
 
         // Admit new PTs — but only while the GT queue's idle prompt KV
         // stays within the PT reservation. Prefilling beyond that point
-        // converts pool capacity into idle waiting-GT KV (the GT queue
+        // converts KVC capacity into idle waiting-GT KV (the GT queue
         // cannot drain faster than completions), strangling throughput;
         // keeping the backlog in the PT queue costs no KVC.
         let waiting_held: u32 = self
             .gt_groups
             .values()
             .flatten()
-            .map(|&id| world.occupied_kvc(id))
+            .map(|&id| ctx.world().occupied_kvc(id))
             .sum();
-        let stage_cap = ((world.cfg.kvc_tokens() as f64 * world.cfg.gt_stage_frac) as u32)
-            .max(world.pool.reserve_tokens());
+        let stage_cap = ((ctx.cfg().kvc_tokens() as f64 * ctx.cfg().gt_stage_frac) as u32)
+            .max(ctx.kvc().reserve_tokens());
         if waiting_held > stage_cap {
             return;
         }
@@ -521,9 +488,9 @@ impl EconoServe {
                 (0..self.pt_queue.len())
                     .min_by_key(|&i| {
                         let id = self.pt_queue[i];
-                        let rec = &world.recs[id];
+                        let rec = ctx.rec(id);
                         crate::ordering::order_key(
-                            world,
+                            ctx.world(),
                             id,
                             rec.req.prompt_len - rec.prompt_done,
                         )
@@ -533,19 +500,19 @@ impl EconoServe {
                 0 // FCFS (queue is in arrival order)
             };
             let id = self.pt_queue[pos];
-            let rec = &world.recs[id];
+            let rec = ctx.rec(id);
             let left = rec.req.prompt_len - rec.prompt_done;
             let chunk = left.min(tfs - used);
             if chunk == 0 {
                 break;
             }
-            if world.pool.alloc_tokens(id, chunk, Priority::Reserved).is_err() {
+            if !ctx.alloc().extend(id, chunk, ReserveClass::Reserved).ok() {
                 break; // KVC exhausted even with the reservation
             }
             self.pt_queue.remove(pos);
-            world.mark_exec_start(id);
+            ctx.mark_exec_start(id);
             self.running_pts.push_back(id);
-            batch.tasks.push(BatchTask::Prefill { id, chunk });
+            plan.tasks.push(BatchTask::Prefill { id, chunk });
             used += chunk;
         }
     }
@@ -568,68 +535,59 @@ impl Drop for EconoServe {
 
 impl Scheduler for EconoServe {
     fn name(&self) -> &'static str {
-        match (self.synced, self.ordering, self.pipe) {
-            (false, _, _) => "econoserve-d",
-            (true, false, _) => "econoserve-sd",
-            (true, true, false) => "econoserve-sdo",
-            (true, true, true) => "econoserve",
-        }
+        self.label
     }
 
-    fn step(&mut self, world: &mut World) -> Batch {
-        while let Some(id) = world.inbox.pop_front() {
+    fn plan(&mut self, ctx: &mut IterCtx<'_>) -> BatchPlan {
+        while let Some(id) = ctx.pop_arrival() {
             self.pt_queue.push(id);
         }
-        self.process_events(world);
+        self.process_events(ctx);
 
         // ② KVC pipelining FIRST: queued GTs whose predicted RL fits the
         // unused tail of a running host's span ride along for free. Doing
         // this before direct admission means short-RL GTs consume NO new
-        // blocks, leaving the pool for long GTs and PTs — this is what
+        // blocks, leaving capacity for long GTs and PTs — this is what
         // lifts effective packing density back to block-allocation levels
-        // (§3.2's purpose).
-        if self.pipe {
-            self.lend_running_spans(world);
-        }
+        // (§3.2's purpose). A no-op under non-lending allocators.
+        self.lend_running_spans(ctx);
 
         // ① Fill KVC with GTs.
         if self.synced {
-            self.admit_gt_groups(world);
+            self.admit_gt_groups(ctx);
         } else {
-            self.admit_gts_unsynced(world);
+            self.admit_gts_unsynced(ctx);
         }
-        if self.pipe {
-            // Freshly admitted hosts have whole spans to lend.
-            self.lend_running_spans(world);
-        }
+        // Freshly admitted hosts have whole spans to lend.
+        self.lend_running_spans(ctx);
 
-        // Order GT queue state doesn't affect the running set; build batch.
-        let mut batch = Batch::default();
+        // Order GT queue state doesn't affect the running set; build plan.
+        let mut plan = BatchPlan::default();
         for &id in &self.running_gts {
-            batch.tasks.push(BatchTask::Decode { id });
+            plan.tasks.push(BatchTask::Decode { id });
         }
 
         // ③ Fill the GPU with PTs up to TFS.
-        self.admit_pts(world, &mut batch);
+        self.admit_pts(ctx, &mut plan);
 
         // Pressure-relief valve: queued GTs keep their prompt KV resident
         // (Observation 5 makes that a feature), but under sustained
-        // overload the whole pool can end up held by WAITING GTs, leaving
+        // overload the whole KVC can end up held by WAITING GTs, leaving
         // nothing schedulable. If that happens, offload-free-drop the KV
         // of the largest waiting holder (recomputed on admission) so the
         // head group can fit — the same §3.3.2 mechanism applied as a
         // deadlock guard.
-        if batch.is_empty() && !self.gt_groups.is_empty() {
+        if plan.is_empty() && !self.gt_groups.is_empty() {
             let victim = self
                 .gt_groups
                 .values()
                 .flat_map(|q| q.iter().copied())
-                .filter(|id| world.pool.written_tokens(*id) > 0)
-                .max_by_key(|id| world.pool.written_tokens(*id));
+                .filter(|id| ctx.kvc().written(*id) > 0)
+                .max_by_key(|id| ctx.kvc().written(*id));
             if let Some(v) = victim {
-                let (_, written) = world.pool.release(v);
-                world.recs[v].lost_kv += written;
-                world.col.preemptions += 1;
+                let rel = ctx.alloc().release(v);
+                ctx.rec_mut(v).lost_kv += rel.written;
+                ctx.metrics_mut().preemptions += 1;
                 self.requeues += 1;
             }
         }
@@ -637,24 +595,24 @@ impl Scheduler for EconoServe {
         #[cfg(debug_assertions)]
         {
             let mut seen = std::collections::HashSet::new();
-            for t in &batch.tasks {
+            for t in &plan.tasks {
                 assert!(
                     seen.insert(t.id()),
-                    "duplicate task for req {} in batch: task={t:?} in_gts={} in_pts={} in_groups={}",
+                    "duplicate task for req {} in plan: task={t:?} in_gts={} in_pts={} in_groups={}",
                     t.id(),
                     self.running_gts.iter().filter(|x| **x == t.id()).count(),
                     self.running_pts.iter().filter(|x| **x == t.id()).count(),
                     self.gt_groups.values().flatten().filter(|x| **x == t.id()).count(),
                 );
                 assert!(
-                    world.pool.alloc_of(t.id()).is_some() || world.pipes.is_guest(t.id()),
-                    "req {} batched without allocation (phase {:?})",
+                    ctx.kvc().lease_of(t.id()).is_some() || ctx.kvc().is_guest(t.id()),
+                    "req {} batched without a lease (phase {:?})",
                     t.id(),
-                    world.recs[t.id()].phase
+                    ctx.rec(t.id()).phase
                 );
             }
         }
-        batch
+        plan
     }
 }
 
@@ -663,8 +621,10 @@ mod tests {
     use super::*;
     use crate::config::{ModelProfile, SystemConfig};
     use crate::coordinator::{run, RunLimits};
+    use crate::core::world::World;
     use crate::engine::{Engine, SimEngine};
     use crate::predictor::{OraclePredictor, SimPredictor};
+    use crate::sched::plan_iteration;
     use crate::trace::TraceItem;
 
     fn world(items: &[TraceItem], kvc_tokens: u64, oracle: bool) -> World {
@@ -673,18 +633,20 @@ mod tests {
         let mut cfg = SystemConfig::new(profile);
         cfg.padding_ratio = 0.10;
         cfg.reserve_frac = 0.05;
-        if oracle {
+        let mut w = if oracle {
             World::new(cfg, items, Box::new(OraclePredictor::new(32)))
         } else {
             World::new(cfg, items, Box::new(SimPredictor::for_trace("sharegpt", 32, 7)))
-        }
+        };
+        w.set_allocator("pipelined-exact");
+        w
     }
 
     fn drive(w: &mut World, s: &mut EconoServe, iters: usize) {
         let e = SimEngine::new();
         for _ in 0..iters {
             w.drain_arrivals();
-            let b = s.step(w);
+            let b = plan_iteration(w, s);
             if b.is_empty() {
                 if let Some(t) = w.next_arrival() {
                     w.clock = t;
@@ -693,7 +655,7 @@ mod tests {
                 break;
             }
             let (d, u) = e.iteration_cost(&b, w);
-            w.execute_iteration(&b, d, u);
+            w.apply_plan(&b, d, u);
         }
     }
 
@@ -711,7 +673,7 @@ mod tests {
         let mut late_pt_prefilled_alongside_decodes = false;
         for _ in 0..3000 {
             w.drain_arrivals();
-            let b = s.step(&mut w);
+            let b = plan_iteration(&mut w, &mut s);
             if b.is_empty() {
                 match w.next_arrival() {
                     Some(t) => {
@@ -728,7 +690,7 @@ mod tests {
                 late_pt_prefilled_alongside_decodes = true;
             }
             let (d, u) = e.iteration_cost(&b, &w);
-            w.execute_iteration(&b, d, u);
+            w.apply_plan(&b, d, u);
             if w.all_done() {
                 break;
             }
@@ -743,6 +705,7 @@ mod tests {
             .map(|i| TraceItem { arrival: i as f64 * 1e-3, prompt_len: 16, true_rl: 60 })
             .collect();
         let mut w = world(&items, 8192, true);
+        w.set_allocator("exact"); // the -SD rung pairs with plain exact
         let mut s = EconoServe::variant_sd();
         drive(&mut w, &mut s, 4000);
         assert!(w.all_done());
@@ -756,7 +719,7 @@ mod tests {
     #[test]
     fn kvc_pipelining_hosts_guests() {
         // Long-RL hosts admitted first; short-RL guests should ride along
-        // without new allocations.
+        // without new leases.
         let mut items: Vec<TraceItem> = (0..6)
             .map(|i| TraceItem { arrival: i as f64 * 1e-4, prompt_len: 16, true_rl: 256 })
             .collect();
@@ -773,8 +736,8 @@ mod tests {
         let mut saw_guest = false;
         for _ in 0..5000 {
             w.drain_arrivals();
-            let b = s.step(&mut w);
-            if w.pipes.guest_count() > 0 {
+            let b = plan_iteration(&mut w, &mut s);
+            if w.kvc().guest_count() > 0 {
                 saw_guest = true;
             }
             if b.is_empty() {
@@ -787,7 +750,7 @@ mod tests {
                 }
             }
             let (d, u) = e.iteration_cost(&b, &w);
-            w.execute_iteration(&b, d, u);
+            w.apply_plan(&b, d, u);
             if w.all_done() {
                 break;
             }
@@ -795,6 +758,22 @@ mod tests {
         assert!(saw_guest, "pipelining never hosted a guest");
         assert!(w.all_done());
         assert_eq!(w.col.pipeline_evictions, 0, "oracle predictions => no evictions");
+    }
+
+    #[test]
+    fn sdo_rung_with_plain_exact_never_lends() {
+        // The ablation now falls out of the allocation axis: the same
+        // scheduler code under the plain `exact` allocator must place no
+        // guests.
+        let items: Vec<TraceItem> = (0..10)
+            .map(|i| TraceItem { arrival: i as f64 * 1e-3, prompt_len: 16, true_rl: 120 })
+            .collect();
+        let mut w = world(&items, 2048, true);
+        w.set_allocator("exact");
+        let mut s = EconoServe::variant_sdo();
+        drive(&mut w, &mut s, 6000);
+        assert!(w.all_done());
+        assert_eq!(s.guests_placed, 0, "plain exact must not host guests");
     }
 
     #[test]
@@ -818,6 +797,80 @@ mod tests {
     }
 
     #[test]
+    fn evicted_guest_is_requeued_and_completes() {
+        // The §3.2 failure path end-to-end: a guest whose slot the host's
+        // write head overruns is evicted by the world (offload-free), the
+        // scheduler re-queues it from the evicted_guests event, and it
+        // still completes after recompute.
+        let items = vec![
+            TraceItem { arrival: 0.0, prompt_len: 8, true_rl: 64 }, // host
+            TraceItem { arrival: 0.0, prompt_len: 8, true_rl: 40 }, // guest
+        ];
+        let mut w = world(&items, 4096, true);
+        let host = 0;
+        let guest = 1;
+        // Hold the guest back from normal admission until we mis-place it.
+        w.pred_ready[guest] = 1e9;
+        let mut s = EconoServe::full();
+        let e = SimEngine::new();
+        // Prefill both and admit the host as a GT via the normal flow.
+        for _ in 0..4 {
+            w.drain_arrivals();
+            let b = plan_iteration(&mut w, &mut s);
+            if b.is_empty() {
+                w.clock += 0.01;
+                continue;
+            }
+            let (d, u) = e.iteration_cost(&b, &w);
+            w.apply_plan(&b, d, u);
+        }
+        assert!(s.running_gts.contains(&host), "host must be decoding");
+        assert!(!s.running_gts.contains(&guest), "guest must still be queued");
+        // Force the failure: place the guest at an offset the host's head
+        // will overrun long before the guest finishes (an under-predicted
+        // guest in a too-small slot). Mirror the scheduler bookkeeping a
+        // lend would have done.
+        for (_, q) in s.gt_groups.iter_mut() {
+            if let Some(pos) = q.iter().position(|x| *x == guest) {
+                q.remove(pos);
+            }
+        }
+        s.gt_groups.retain(|_, q| !q.is_empty());
+        w.pred_ready[guest] = 0.0; // readmittable after the eviction
+        w.kvc_mut().host_at(guest, host, 2, 8);
+        let base = w.recs[guest].generated;
+        w.recs[guest].gt_span_base = base;
+        w.recs[guest].gt_span_len = 8;
+        w.recs[guest].phase = Phase::Decoding;
+        s.running_gts.push(guest);
+        let mut evicted_seen = false;
+        for _ in 0..4000 {
+            w.drain_arrivals();
+            let b = plan_iteration(&mut w, &mut s);
+            if b.is_empty() {
+                if w.all_done() {
+                    break;
+                }
+                w.clock += 0.01;
+                continue;
+            }
+            let (d, u) = e.iteration_cost(&b, &w);
+            w.apply_plan(&b, d, u);
+            if !w.events.evicted_guests.is_empty() {
+                evicted_seen = true;
+            }
+            if w.all_done() {
+                break;
+            }
+        }
+        assert!(evicted_seen, "host head never overran the mis-placed guest");
+        assert!(w.col.pipeline_evictions >= 1);
+        assert!(w.all_done(), "evicted guest must be re-queued and complete");
+        assert_eq!(w.kvc().guest_count(), 0);
+        assert_eq!(w.kvc().total_allocated(), 0);
+    }
+
+    #[test]
     fn all_variants_complete() {
         let items: Vec<TraceItem> = (0..25)
             .map(|i| TraceItem {
@@ -826,13 +879,14 @@ mod tests {
                 true_rl: 10 + (i as u32 % 7) * 20,
             })
             .collect();
-        for mk in [
-            EconoServe::variant_d as fn() -> EconoServe,
-            EconoServe::variant_sd,
-            EconoServe::variant_sdo,
-            EconoServe::full,
+        for (mk, alloc) in [
+            (EconoServe::variant_d as fn() -> EconoServe, "exact"),
+            (EconoServe::variant_sd, "exact"),
+            (EconoServe::variant_sdo, "exact"),
+            (EconoServe::full, "pipelined-exact"),
         ] {
             let mut w = world(&items, 8192, true);
+            w.set_allocator(alloc);
             let mut s = mk();
             let e = SimEngine::new();
             let res = run(&mut w, &mut s, &e, RunLimits::default());

@@ -1,5 +1,5 @@
 //! FastServe [12]: preemptive scheduling with a skip-join Multi-Level
-//! Feedback Queue (MLFQ) to attack head-of-line blocking, using
+//! Feedback Queue (MLFQ) to attack head-of-line blocking, paired with
 //! **max-allocation** like ORCA.
 //!
 //! Model (faithful to the paper's mechanism at the granularity our
@@ -12,16 +12,16 @@
 //!  * Each iteration runs up to `batch_size` requests from the highest
 //!    non-empty levels; a request that exhausts its level quantum is
 //!    demoted one level.
-//!  * Paused requests keep their max-allocation (FastServe keeps KV
+//!  * Paused requests keep their admission lease (FastServe keeps KV
 //!    resident; its proactive offloading is not modelled — the paper's
 //!    comparison also runs it KV-resident).
 
 use std::collections::VecDeque;
 
 use super::Scheduler;
-use crate::core::world::World;
-use crate::core::{Batch, BatchTask, Phase, ReqId};
-use crate::kvc::Priority;
+use crate::core::world::IterCtx;
+use crate::core::{BatchPlan, BatchTask, ReqId};
+use crate::kvc::{Allocator, Demand, ReserveClass};
 
 pub struct FastServe {
     batch_size: usize,
@@ -47,9 +47,9 @@ impl FastServe {
 
     /// Skip-join: place a new request at the level whose quantum covers
     /// its prefill cost (measured in "iterations" ~ prompt_len / TFS).
-    fn join_level(&self, world: &World, id: ReqId) -> usize {
+    fn join_level(&self, ctx: &IterCtx<'_>, id: ReqId) -> usize {
         let prefill_iters =
-            (world.recs[id].req.prompt_len / world.cfg.profile.tfs.max(1)).max(1);
+            (ctx.rec(id).req.prompt_len / ctx.cfg().profile.tfs.max(1)).max(1);
         let mut lvl = 0;
         while lvl + 1 < self.levels.len() && self.quantum(lvl) < prefill_iters {
             lvl += 1;
@@ -72,23 +72,23 @@ impl Scheduler for FastServe {
         "fastserve"
     }
 
-    fn step(&mut self, world: &mut World) -> Batch {
-        // Admission with max-allocation (head-of-line on KVC exhaustion).
-        while let Some(&head) = world.inbox.front() {
-            let max_alloc = world.cfg.profile.max_total_len;
-            if world.pool.alloc_tokens(head, max_alloc, Priority::Reserved).is_err() {
+    fn plan(&mut self, ctx: &mut IterCtx<'_>) -> BatchPlan {
+        // Admission lease (head-of-line on KVC exhaustion).
+        while let Some(head) = ctx.peek_arrival() {
+            let demand = Demand::of(ctx.rec(head), ctx.cfg().profile.max_total_len);
+            if !ctx.alloc().admit(head, demand, ReserveClass::Reserved).ok() {
                 break;
             }
-            world.inbox.pop_front();
-            let lvl = self.join_level(world, head);
+            ctx.pop_arrival();
+            let lvl = self.join_level(ctx, head);
             self.levels[lvl].push_back(head);
         }
 
         // Drop finished requests from all levels.
         for q in &mut self.levels {
-            q.retain(|id| !world.recs[*id].is_done());
+            q.retain(|id| !ctx.world().recs[*id].is_done());
         }
-        self.service.retain(|(id, _)| !world.recs[*id].is_done());
+        self.service.retain(|(id, _)| !ctx.world().recs[*id].is_done());
 
         // Demote quantum-exhausted requests (done lazily before selection).
         for lvl in 0..self.levels.len().saturating_sub(1) {
@@ -108,7 +108,7 @@ impl Scheduler for FastServe {
         }
 
         // Select from the highest non-empty levels.
-        let mut batch = Batch::default();
+        let mut plan = BatchPlan::default();
         let mut selected: Vec<ReqId> = Vec::new();
         'outer: for q in &self.levels {
             for &id in q {
@@ -119,33 +119,29 @@ impl Scheduler for FastServe {
             }
         }
         for id in selected {
-            world.mark_exec_start(id);
+            ctx.mark_exec_start(id);
             *self.service_mut(id) += 1;
-            let rec = &world.recs[id];
+            let rec = ctx.rec(id);
             if rec.prompt_done < rec.req.prompt_len {
-                batch
-                    .tasks
+                plan.tasks
                     .push(BatchTask::Prefill { id, chunk: rec.req.prompt_len - rec.prompt_done });
             } else {
-                batch.tasks.push(BatchTask::Decode { id });
+                plan.tasks.push(BatchTask::Decode { id });
             }
         }
         // Mark non-selected in-flight requests as paused.
         let chosen: std::collections::HashSet<ReqId> =
-            batch.tasks.iter().map(|t| t.id()).collect();
-        for q in &self.levels {
-            for &id in q {
-                if !chosen.contains(&id) {
-                    let now = world.clock;
-                    let rec = &mut world.recs[id];
-                    if matches!(rec.phase, Phase::Decoding | Phase::Prefilling) {
-                        rec.phase = Phase::Preempted;
-                        rec.preempted_since.get_or_insert(now);
-                    }
-                }
-            }
+            plan.tasks.iter().map(|t| t.id()).collect();
+        let paused: Vec<ReqId> = self
+            .levels
+            .iter()
+            .flat_map(|q| q.iter().copied())
+            .filter(|id| !chosen.contains(id))
+            .collect();
+        for id in paused {
+            ctx.pause(id);
         }
-        batch
+        plan
     }
 }
 
@@ -154,6 +150,7 @@ mod tests {
     use super::*;
     use crate::config::{ModelProfile, SystemConfig};
     use crate::coordinator::{run, RunLimits};
+    use crate::core::world::World;
     use crate::engine::SimEngine;
     use crate::predictor::OraclePredictor;
     use crate::trace::TraceItem;
@@ -164,7 +161,9 @@ mod tests {
         profile.kvc_bytes = 819_200 * 8192;
         let cfg = SystemConfig::new(profile);
         let p = Box::new(OraclePredictor::new(1));
-        World::new(cfg, items, p)
+        let mut w = World::new(cfg, items, p);
+        w.set_allocator("max");
+        w
     }
 
     #[test]
@@ -176,8 +175,10 @@ mod tests {
         // tfs=2048 so a 4096-token prompt needs ~2 iterations.
         w.drain_arrivals();
         let s = FastServe::new(8, 5);
-        assert_eq!(s.join_level(&w, 0), 0);
-        assert!(s.join_level(&w, 1) >= 0); // 4096/2048 = 2 <= quantum(0)=2 -> level 0
+        let ctx = w.begin_iter();
+        assert_eq!(s.join_level(&ctx, 0), 0);
+        // 4096/2048 = 2 <= quantum(0)=2 -> level 0 for id 1 too.
+        assert_eq!(s.join_level(&ctx, 1), 0);
     }
 
     #[test]

@@ -1,20 +1,28 @@
-//! Schedulers: the paper's EconoServe and every baseline it is compared
-//! against (Table 1 / §2.2).
+//! Schedulers: the *batching-policy* axis of Table 1 — the paper's
+//! EconoServe and every baseline it is compared against (§2.2).
 //!
-//! A scheduler is called once per iteration boundary. It consumes the
-//! events of the previous iteration from `world.events`, mutates its own
-//! queue state, performs all KVC allocation, and returns the next batch.
+//! A scheduler is called once per iteration boundary through the typed
+//! contract: it receives an [`IterCtx`] (previous-iteration events, clock,
+//! queue views, typed request-state mutators, and the installed
+//! [`crate::kvc::Allocator`]) and returns a [`BatchPlan`]. All KVC
+//! capacity flows through the allocator handle — schedulers never touch
+//! block accounting — so the two Table-1 axes compose freely:
 //!
-//! | module        | system            | allocation | batching             |
-//! |---------------|-------------------|------------|----------------------|
-//! | `orca`        | ORCA [11]         | max        | FCFS, fixed batch    |
-//! | `srtf`        | SRTF baseline     | max        | preemptive shortest  |
-//! | `fastserve`   | FastServe [12]    | max        | 5-level MLFQ         |
-//! | `vllm`        | vLLM [13]         | block      | FCFS + swap preempt  |
-//! | `sarathi`     | Sarathi-Serve [15]| block      | chunked prefill, TFS |
-//! | `multires`    | MultiRes [32]     | exact      | O(n²) dual-resource  |
-//! | `sync_coupled`| SyncCoupled (§2.2)| exact      | same-RL groups       |
-//! | `econoserve`  | EconoServe (§3)   | exact      | SyncDecoupled (+O,+P)|
+//! **Batching axis** (this module):
+//!
+//! | module        | system            | batching                     |
+//! |---------------|-------------------|------------------------------|
+//! | `orca`        | ORCA [11]         | FCFS, fixed batch            |
+//! | `srtf`        | SRTF baseline     | preemptive shortest-first    |
+//! | `fastserve`   | FastServe [12]    | 5-level skip-join MLFQ       |
+//! | `vllm`        | vLLM [13]         | FCFS + swap preemption       |
+//! | `sarathi`     | Sarathi-Serve [15]| chunked prefill, TFS budget  |
+//! | `multires`    | MultiRes [32]     | O(n²) dual-resource fit      |
+//! | `sync_coupled`| SyncCoupled (§2.2)| same-RL groups, coupled      |
+//! | `econoserve`  | EconoServe (§3)   | SyncDecoupled (+O ordering)  |
+//!
+//! **Allocation axis** (`crate::kvc`): `max`, `block`, `exact`, and the
+//! `pipelined-*` wrappers (§3.2 KVC pipelining over any of the three).
 //!
 //! DistServe (disaggregated prefill/decode) lives in [`crate::cluster`]
 //! because it spans two engines.
@@ -28,23 +36,67 @@ pub mod srtf;
 pub mod sync_coupled;
 pub mod vllm;
 
-use crate::core::world::World;
-use crate::core::Batch;
+use std::collections::VecDeque;
 
-/// Iteration-level scheduler interface.
+use crate::core::world::{IterCtx, World};
+use crate::core::{BatchPlan, PreemptKind, ReqId};
+use crate::kvc::{Allocator, ReserveClass};
+
+/// Iteration-level scheduler interface (the typed policy contract).
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
-    /// Form the batch for the next iteration. `world.events` holds the
-    /// previous iteration's outcomes; implementations own queue state and
-    /// all KVC allocation decisions.
-    fn step(&mut self, world: &mut World) -> Batch;
+    /// Form the plan for the next iteration. `ctx.events` holds the
+    /// previous iteration's outcomes; implementations own queue state,
+    /// and draw all KVC capacity through `ctx.alloc()`.
+    fn plan(&mut self, ctx: &mut IterCtx<'_>) -> BatchPlan;
 }
 
-/// Construct a scheduler by system name (the figure drivers' registry).
-/// `block_size` is used by schedulers that need a grouping quantum.
-pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
-    let s: Box<dyn Scheduler> = match name {
+/// A resolved `<sched>+<alloc>` combination from [`by_name`].
+pub struct System {
+    pub sched: Box<dyn Scheduler>,
+    /// Allocator registry name (install with `World::set_allocator`).
+    pub alloc: &'static str,
+}
+
+/// The Table-1 default allocator pairing for a scheduler name.
+pub fn default_alloc(sched: &str) -> Option<&'static str> {
+    Some(match sched {
+        "orca" | "orca16" | "srtf" | "fastserve" => "max",
+        "vllm" | "sarathi" => "block",
+        "multires" | "sync_coupled" | "econoserve-d" | "econoserve-sd" | "econoserve-sdo" => {
+            "exact"
+        }
+        "econoserve" => "pipelined-exact",
+        _ => return None,
+    })
+}
+
+/// Construct a system by name (the figure drivers' registry).
+///
+/// Grammar: `"<sched>"` or `"<sched>+<alloc>"`. The bare scheduler name
+/// resolves to its Table-1 default allocator (`default_alloc`); the
+/// two-part form pins any allocator from `kvc::all_allocators()` — e.g.
+/// `"vllm+exact"` or `"sarathi+pipelined-exact"` — so grid points are
+/// runnable from `main.rs` and the figure drivers.
+///
+/// Caveat: schedulers without mid-flight lease growth or a preemption
+/// recovery path (the max-allocation family, and the exact-allocation
+/// group under `block`) rely on an admission-complete lease. Pairing
+/// them with an allocator that leases less (e.g. `orca+block`) runs on
+/// the allocator's implicit reserve-class rescue and aborts with a KVC
+/// overflow once even the reserve is exhausted — sustained overload
+/// needs a supported pairing (see `benches/sched_hotpath.rs::allocs_for`).
+pub fn by_name(name: &str) -> Option<System> {
+    let (sched_name, alloc_req) = match name.split_once('+') {
+        Some((s, a)) => (s, Some(a)),
+        None => (name, None),
+    };
+    let alloc = match alloc_req {
+        None => default_alloc(sched_name)?,
+        Some(a) => crate::kvc::canonical_alloc_name(a)?,
+    };
+    let sched: Box<dyn Scheduler> = match sched_name {
         "orca" => Box::new(orca::Orca::new(8)),
         "orca16" => Box::new(orca::Orca::new(16)),
         "srtf" => Box::new(srtf::Srtf::new(8)),
@@ -60,7 +112,65 @@ pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
         "econoserve" => Box::new(econoserve::EconoServe::full()),
         _ => return None,
     };
-    Some(s)
+    Some(System { sched, alloc })
+}
+
+/// Shared vLLM-family mechanics: resume swapped-out sequences while
+/// their context fits again (swap-ins take precedence over admission).
+/// Charges the PCIe swap-in cost to the plan and returns the resumed
+/// ids; the caller routes them back into its own run queues.
+pub(crate) fn swap_in_ready(
+    ctx: &mut IterCtx<'_>,
+    swapped: &mut VecDeque<ReqId>,
+    plan: &mut BatchPlan,
+) -> Vec<ReqId> {
+    let mut resumed = Vec::new();
+    while let Some(&id) = swapped.front() {
+        let need = ctx.rec(id).context_tokens() + 1;
+        if !ctx.alloc().grow_to(id, need, ReserveClass::Reserved).ok() {
+            break;
+        }
+        swapped.pop_front();
+        let restored = ctx.rec(id).swapped_tokens;
+        ctx.alloc().restore(id, restored.min(need));
+        plan.extra_time += ctx.swap_in_cost(id);
+        ctx.rec_mut(id).swapped_tokens = 0;
+        ctx.mark_exec_start(id);
+        resumed.push(id);
+    }
+    resumed
+}
+
+/// Shared vLLM-family recovery for a failed decode-time lease grow: the
+/// engine stalls while the LATEST-arrived running sequence's KV streams
+/// out over PCIe (vLLM v0 swaps synchronously with the scheduler loop;
+/// the paper measures these preemption delays at up to 20% of JCT,
+/// Fig 1e). Returns the victim so the caller can stop when the growing
+/// sequence preempted itself.
+pub(crate) fn swap_out_latest(
+    ctx: &mut IterCtx<'_>,
+    running: &mut Vec<ReqId>,
+    swapped: &mut VecDeque<ReqId>,
+    plan: &mut BatchPlan,
+) -> ReqId {
+    let victim = *running.last().expect("lease-grow failure with empty running set");
+    plan.extra_time += ctx.rec(victim).context_tokens() as f64
+        * ctx.cfg().profile.kv_bytes_per_token() as f64
+        / ctx.cfg().pcie_bw;
+    running.pop();
+    ctx.preempt(victim, PreemptKind::Swap);
+    swapped.push_back(victim);
+    victim
+}
+
+/// Run one planning step: open the iteration context, let the scheduler
+/// plan, and fold its preemption/eviction record into the plan. This is
+/// the only way a scheduler touches a [`World`].
+pub fn plan_iteration(world: &mut World, sched: &mut dyn Scheduler) -> BatchPlan {
+    let mut ctx = world.begin_iter();
+    let mut plan = sched.plan(&mut ctx);
+    ctx.finish_into(&mut plan);
+    plan
 }
 
 /// All single-GPU system names in the paper's comparison order.
@@ -87,8 +197,35 @@ mod tests {
     #[test]
     fn registry_resolves_all_systems() {
         for name in all_systems() {
-            assert!(by_name(name).is_some(), "{name}");
+            let sys = by_name(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(sys.alloc, default_alloc(name).unwrap(), "{name}");
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn registry_resolves_sched_alloc_grid() {
+        let combos = [
+            ("vllm+exact", "exact"),
+            ("sarathi+pipelined-exact", "pipelined-exact"),
+            ("orca+block", "block"),
+            ("econoserve+exact", "exact"),
+            ("sync_coupled+pipelined-max", "pipelined-max"),
+        ];
+        for (name, alloc) in combos {
+            let sys = by_name(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(sys.alloc, alloc, "{name}");
+        }
+        assert!(by_name("vllm+paged").is_none(), "unknown allocator must not resolve");
+        assert!(by_name("nope+exact").is_none(), "unknown scheduler must not resolve");
+    }
+
+    #[test]
+    fn default_pairings_match_table1() {
+        assert_eq!(default_alloc("orca"), Some("max"));
+        assert_eq!(default_alloc("vllm"), Some("block"));
+        assert_eq!(default_alloc("multires"), Some("exact"));
+        assert_eq!(default_alloc("econoserve"), Some("pipelined-exact"));
+        assert_eq!(default_alloc("nope"), None);
     }
 }

@@ -5,14 +5,14 @@
 //! and repeat — an O(n²) scan that is exactly the paper's "high scheduling
 //! time" culprit (34% of JCT, Fig 1e).
 //!
-//! **Exact-allocation**: an admitted request reserves prompt + padded
-//! predicted RL, so allocation never fails; requests run to completion
-//! without preemption.
+//! Paired with **exact-allocation**: an admitted request leases prompt +
+//! padded predicted RL, so allocation never fails; requests run to
+//! completion without preemption.
 
 use super::Scheduler;
-use crate::core::world::World;
-use crate::core::{Batch, BatchTask, ReqId};
-use crate::kvc::Priority;
+use crate::core::world::IterCtx;
+use crate::core::{BatchPlan, BatchTask, PreemptKind, ReqId};
+use crate::kvc::{Allocator, Demand, ReserveClass};
 
 pub struct MultiRes {
     queued: Vec<ReqId>,
@@ -26,8 +26,8 @@ impl MultiRes {
 
     /// (gpu_demand_tokens, kvc_demand_tokens) of a queued request.
     /// Includes dropped-KV recompute work (offload-free preemption).
-    fn demand(world: &World, id: ReqId) -> (f64, f64) {
-        let rec = &world.recs[id];
+    fn demand_point(ctx: &IterCtx<'_>, id: ReqId) -> (f64, f64) {
+        let rec = ctx.rec(id);
         let prefill_work = rec.req.prompt_len - rec.prompt_done + rec.lost_kv;
         let gpu = prefill_work.max(1) as f64;
         let kvc = (prefill_work + rec.predicted_remaining() + 1) as f64;
@@ -46,44 +46,45 @@ impl Scheduler for MultiRes {
         "multires"
     }
 
-    fn step(&mut self, world: &mut World) -> Batch {
-        while let Some(id) = world.inbox.pop_front() {
+    fn plan(&mut self, ctx: &mut IterCtx<'_>) -> BatchPlan {
+        while let Some(id) = ctx.pop_arrival() {
             self.queued.push(id);
         }
-        self.running.retain(|id| !world.recs[*id].is_done());
+        self.running.retain(|id| !ctx.world().recs[*id].is_done());
 
-        // Under-predicted GTs (non-oracle runs): extend exact allocation in
+        // Under-predicted GTs (non-oracle runs): extend the lease in
         // place if possible, otherwise send back to the queue (their KV
         // stays resident; they re-enter via the distance scan).
-        let under: Vec<ReqId> = world.take_events().reached_prediction;
-        let bs = world.cfg.block_size;
+        let under: Vec<ReqId> = std::mem::take(&mut ctx.events.reached_prediction);
+        let bs = ctx.cfg().block_size;
         for id in under {
-            let rec = &mut world.recs[id];
+            let rec = ctx.rec_mut(id);
             rec.predicted_base = rec.generated;
             rec.predicted_rl = bs;
-            if world.pool.alloc_tokens(id, bs + 1, Priority::Reserved).is_err() {
+            if !ctx.alloc().extend(id, bs + 1, ReserveClass::Reserved).ok() {
                 // Offload-free drop: release the KV, recompute at re-admission.
                 if let Some(pos) = self.running.iter().position(|x| *x == id) {
                     self.running.remove(pos);
-                    world.preempt(id, crate::core::world::PreemptKind::DropRecompute);
+                    ctx.preempt(id, PreemptKind::DropRecompute);
                     self.queued.push(id);
                 }
             }
         }
 
         // Current iteration's resource availability.
-        let tfs = world.cfg.profile.tfs as f64;
+        let tfs = ctx.cfg().profile.tfs as f64;
+        let max_total = ctx.cfg().profile.max_total_len;
         let mut gpu_avail = tfs - self.running.len() as f64; // decodes cost 1 token each
-        let cap = world.cfg.kvc_tokens() as f64;
+        let cap = ctx.cfg().kvc_tokens() as f64;
 
         // O(n²) selection: repeatedly rescan the whole queue for the
         // min-distance request that fits. This cost is *measured* by the
         // coordinator and charged to the clock (Fig 14).
         loop {
-            let kvc_avail = world.pool.free_tokens(Priority::Reserved) as f64;
+            let kvc_avail = ctx.kvc().free_tokens(ReserveClass::Reserved) as f64;
             let mut best: Option<(usize, f64)> = None;
             for (idx, &id) in self.queued.iter().enumerate() {
-                let (g, k) = Self::demand(world, id);
+                let (g, k) = Self::demand_point(ctx, id);
                 if g > gpu_avail || k > kvc_avail {
                     continue;
                 }
@@ -97,30 +98,32 @@ impl Scheduler for MultiRes {
             }
             let Some((idx, _)) = best else { break };
             let id = self.queued.swap_remove(idx);
-            let (g, k) = Self::demand(world, id);
-            world
-                .pool
-                .alloc_tokens(id, k as u32, Priority::Reserved)
-                .expect("exact-allocation checked above");
-            world.mark_exec_start(id);
+            let (g, _) = Self::demand_point(ctx, id);
+            let demand = Demand::of(ctx.rec(id), max_total);
+            if !ctx.alloc().admit(id, demand, ReserveClass::Reserved).ok() {
+                // Exact-allocation was fit-checked above; another policy on
+                // the allocation axis may still reject — requeue and stop.
+                self.queued.push(id);
+                break;
+            }
+            ctx.mark_exec_start(id);
             gpu_avail -= g;
             self.running.push(id);
         }
 
-        let mut batch = Batch::default();
+        let mut plan = BatchPlan::default();
         for &id in &self.running {
-            let rec = &world.recs[id];
+            let rec = ctx.rec(id);
             if rec.lost_kv > 0 {
-                batch.tasks.push(BatchTask::Prefill { id, chunk: rec.lost_kv });
+                plan.tasks.push(BatchTask::Prefill { id, chunk: rec.lost_kv });
             } else if rec.prompt_done < rec.req.prompt_len {
-                batch
-                    .tasks
+                plan.tasks
                     .push(BatchTask::Prefill { id, chunk: rec.req.prompt_len - rec.prompt_done });
             } else {
-                batch.tasks.push(BatchTask::Decode { id });
+                plan.tasks.push(BatchTask::Decode { id });
             }
         }
-        batch
+        plan
     }
 }
 
@@ -129,8 +132,10 @@ mod tests {
     use super::*;
     use crate::config::{ModelProfile, SystemConfig};
     use crate::coordinator::{run, RunLimits};
+    use crate::core::world::World;
     use crate::engine::SimEngine;
     use crate::predictor::OraclePredictor;
+    use crate::sched::plan_iteration;
     use crate::trace::TraceItem;
 
     fn world(items: &[TraceItem], kvc_tokens: u64) -> World {
@@ -139,7 +144,7 @@ mod tests {
         let mut cfg = SystemConfig::new(profile);
         cfg.padding_ratio = 0.0;
         let p = Box::new(OraclePredictor::new(1));
-        World::new(cfg, items, p)
+        World::new(cfg, items, p) // default allocator IS exact
     }
 
     #[test]
@@ -156,7 +161,7 @@ mod tests {
         let e = SimEngine::new();
         let res = run(&mut w, &mut s, &e, RunLimits::default());
         assert_eq!(res.summary.n_done, 60);
-        assert_eq!(w.pool.alloc_failures, 0, "exact-allocation must never fail");
+        assert_eq!(w.kvc().stats().failures, 0, "exact-allocation must never fail");
         assert_eq!(w.col.preemptions, 0);
     }
 
@@ -171,7 +176,7 @@ mod tests {
         let mut w = world(&items, 512); // 512 tokens of KVC
         w.drain_arrivals();
         let mut s = MultiRes::new();
-        let b = s.step(&mut w);
+        let b = plan_iteration(&mut w, &mut s);
         assert_eq!(b.tasks.len(), 1);
         assert_eq!(b.tasks[0].id(), 1);
     }

@@ -1,13 +1,13 @@
 //! ORCA [11]: iteration-level scheduling, FCFS admission, fixed maximum
-//! batch size, **max-allocation** — each admitted request reserves KVC for
-//! the model's maximum total sequence length, so allocation can never fail
-//! mid-flight but KVC is massively over-provisioned, which throttles the
-//! batch size and GPU utilization (the paper's Table 1 row).
+//! batch size. Paired with **max-allocation** (Table 1 row): each admitted
+//! request leases KVC for the model's maximum total sequence length, so
+//! allocation can never fail mid-flight but KVC is massively
+//! over-provisioned, which throttles the batch size and GPU utilization.
 
 use super::Scheduler;
-use crate::core::world::World;
-use crate::core::{Batch, BatchTask, Phase, ReqId};
-use crate::kvc::Priority;
+use crate::core::world::IterCtx;
+use crate::core::{BatchPlan, BatchTask, Phase, ReqId};
+use crate::kvc::{Allocator, Demand, ReserveClass};
 
 pub struct Orca {
     batch_size: usize,
@@ -25,36 +25,35 @@ impl Scheduler for Orca {
         "orca"
     }
 
-    fn step(&mut self, world: &mut World) -> Batch {
+    fn plan(&mut self, ctx: &mut IterCtx<'_>) -> BatchPlan {
         // Completed requests leave the batch (iteration-level scheduling).
-        self.running.retain(|id| !world.recs[*id].is_done());
+        self.running.retain(|id| !ctx.world().recs[*id].is_done());
 
         // FCFS admission up to the fixed batch size; head-of-line blocks
-        // when the max-allocation does not fit.
+        // when the admission lease does not fit.
         while self.running.len() < self.batch_size {
-            let Some(&head) = world.inbox.front() else { break };
-            let max_alloc = world.cfg.profile.max_total_len;
-            if world.pool.alloc_tokens(head, max_alloc, Priority::Reserved).is_err() {
+            let Some(head) = ctx.peek_arrival() else { break };
+            let demand = Demand::of(ctx.rec(head), ctx.cfg().profile.max_total_len);
+            if !ctx.alloc().admit(head, demand, ReserveClass::Reserved).ok() {
                 break;
             }
-            world.inbox.pop_front();
-            world.mark_exec_start(head);
+            ctx.pop_arrival();
+            ctx.mark_exec_start(head);
             self.running.push(head);
         }
 
-        let mut batch = Batch::default();
+        let mut plan = BatchPlan::default();
         for &id in &self.running {
-            let rec = &world.recs[id];
+            let rec = ctx.rec(id);
             if rec.prompt_done < rec.req.prompt_len {
                 // Whole-prompt prefill in one iteration (no chunking).
-                batch
-                    .tasks
+                plan.tasks
                     .push(BatchTask::Prefill { id, chunk: rec.req.prompt_len - rec.prompt_done });
             } else if rec.phase != Phase::Done {
-                batch.tasks.push(BatchTask::Decode { id });
+                plan.tasks.push(BatchTask::Decode { id });
             }
         }
-        batch
+        plan
     }
 }
 
@@ -62,7 +61,9 @@ impl Scheduler for Orca {
 mod tests {
     use super::*;
     use crate::config::{ModelProfile, SystemConfig};
+    use crate::core::world::World;
     use crate::predictor::OraclePredictor;
+    use crate::sched::plan_iteration;
     use crate::trace::TraceItem;
 
     fn small_world(n: usize) -> World {
@@ -74,7 +75,9 @@ mod tests {
             .map(|i| TraceItem { arrival: i as f64 * 1e-6, prompt_len: 16, true_rl: 4 })
             .collect();
         let p = Box::new(OraclePredictor::new(1));
-        World::new(cfg, &items, p)
+        let mut w = World::new(cfg, &items, p);
+        w.set_allocator("max");
+        w
     }
 
     #[test]
@@ -83,7 +86,7 @@ mod tests {
         w.clock = 1.0;
         w.drain_arrivals();
         let mut s = Orca::new(8);
-        let b = s.step(&mut w);
+        let b = plan_iteration(&mut w, &mut s);
         // KVC fits 2048/512 = 4 max-allocations even though batch size is 8.
         assert_eq!(b.len(), 4);
         assert_eq!(w.inbox.len(), 6);
@@ -98,15 +101,15 @@ mod tests {
         // Drive to completion manually.
         let engine = crate::engine::SimEngine::new();
         for _ in 0..200 {
-            let b = s.step(&mut w);
+            let b = plan_iteration(&mut w, &mut s);
             if b.is_empty() {
                 break;
             }
             let (dur, util) = crate::engine::Engine::iteration_cost(&engine, &b, &w);
-            w.execute_iteration(&b, dur, util);
+            w.apply_plan(&b, dur, util);
         }
         assert!(w.recs.iter().all(|r| r.is_done()));
         // Max-alloc fully released.
-        assert_eq!(w.pool.total_allocated(), 0);
+        assert_eq!(w.kvc().total_allocated(), 0);
     }
 }

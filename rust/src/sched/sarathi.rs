@@ -1,19 +1,25 @@
 //! Sarathi-Serve [15]: stall-free chunked prefill with a per-iteration
-//! token budget (the target forward size, TFS), **block-allocation**.
+//! token budget (the target forward size, TFS), paired with
+//! **block-allocation**.
 //!
 //! Each iteration:
 //!  1. all running decodes join the batch (no generation stalls),
 //!  2. the remaining token budget is filled with prompt *chunks* from
 //!     partially-prefilled and newly admitted requests,
-//!  3. allocation is block-granular and can fail mid-flight (Fig 1d);
-//!     the latest-arrived running sequence is then preempted (swap).
+//!  3. under block-allocation a lease grows block-granularly and can fail
+//!     mid-flight (Fig 1d); the latest-arrived running sequence is then
+//!     preempted (swap). Under `sarathi+exact` (or `pipelined-exact`)
+//!     admission leases the predicted span instead, so mid-flight growth
+//!     stops failing; the pipelined wrapper's lending surface is inert
+//!     here — Sarathi never offers spans to guests (only EconoServe
+//!     drives the lend API).
 
 use std::collections::VecDeque;
 
 use super::Scheduler;
-use crate::core::world::{PreemptKind, World};
-use crate::core::{Batch, BatchTask, ReqId};
-use crate::kvc::Priority;
+use crate::core::world::IterCtx;
+use crate::core::{BatchPlan, BatchTask, PreemptKind, ReqId};
+use crate::kvc::{Allocator, Demand, ReserveClass};
 
 pub struct Sarathi {
     waiting: VecDeque<ReqId>,
@@ -35,6 +41,41 @@ impl Sarathi {
             max_num_seqs: 256,
         }
     }
+
+    /// Next prompt chunk for `id` within the remaining budget, securing
+    /// capacity for it. `admission` switches between the admission-time
+    /// lease (policy-sized) and a mid-flight extension.
+    fn chunk_for(
+        ctx: &mut IterCtx<'_>,
+        id: ReqId,
+        used: &mut u32,
+        budget: u32,
+        admission: bool,
+    ) -> Option<BatchTask> {
+        let rec = ctx.rec(id);
+        let left = rec.req.prompt_len - rec.prompt_done;
+        let room = budget.saturating_sub(*used);
+        let chunk = left.min(room);
+        if chunk == 0 {
+            return None;
+        }
+        let granted = if admission {
+            let demand = Demand {
+                immediate: chunk,
+                predicted: ctx.rec(id).predicted_remaining(),
+                max_total: ctx.cfg().profile.max_total_len,
+            };
+            ctx.alloc().admit(id, demand, ReserveClass::Reserved).ok()
+        } else {
+            ctx.alloc().extend(id, chunk, ReserveClass::Reserved).ok()
+        };
+        if !granted {
+            ctx.note_alloc_failed(id);
+            return None;
+        }
+        *used += chunk;
+        Some(BatchTask::Prefill { id, chunk })
+    }
 }
 
 impl Default for Sarathi {
@@ -48,40 +89,29 @@ impl Scheduler for Sarathi {
         "sarathi"
     }
 
-    fn step(&mut self, world: &mut World) -> Batch {
-        while let Some(id) = world.inbox.pop_front() {
+    fn plan(&mut self, ctx: &mut IterCtx<'_>) -> BatchPlan {
+        while let Some(id) = ctx.pop_arrival() {
             self.waiting.push_back(id);
         }
-        self.decoding.retain(|id| !world.recs[*id].is_done());
-        // Promote finished prefills to decode (consume events: empty-batch
-        // steps skip execute_iteration, so stale events must not linger).
-        let finished: Vec<ReqId> = world.take_events().finished_prefill;
+        self.decoding.retain(|id| !ctx.world().recs[*id].is_done());
+        // Promote finished prefills to decode.
+        let finished: Vec<ReqId> = std::mem::take(&mut ctx.events.finished_prefill);
         for id in finished {
             if let Some(pos) = self.prefilling.iter().position(|x| *x == id) {
                 self.prefilling.remove(pos);
             }
-            if !world.recs[id].is_done() {
+            if !ctx.rec(id).is_done() {
                 self.decoding.push(id);
             }
         }
 
-        let budget = world.cfg.profile.tfs;
-        let mut batch = Batch::default();
+        let budget = ctx.cfg().profile.tfs;
+        let mut plan = BatchPlan::default();
 
-        // 1) Swap-ins first.
-        while let Some(&id) = self.swapped.front() {
-            let need = world.recs[id].context_tokens() + 1;
-            if world.pool.alloc_tokens(id, need, Priority::Reserved).is_err() {
-                break;
-            }
-            self.swapped.pop_front();
-            let restored = world.recs[id].swapped_tokens;
-            world.pool.restore_written(id, restored.min(need));
-            batch.extra_time += world.swap_in_cost(id);
-            world.recs[id].swapped_tokens = 0;
-            world.mark_exec_start(id);
-            // Half-prefilled victims resume prefilling; others decode.
-            if world.recs[id].prompt_done < world.recs[id].req.prompt_len {
+        // 1) Swap-ins first. Half-prefilled victims resume prefilling;
+        //    others decode.
+        for id in super::swap_in_ready(ctx, &mut self.swapped, &mut plan) {
+            if ctx.rec(id).prompt_done < ctx.rec(id).req.prompt_len {
                 self.prefilling.push_front(id);
             } else {
                 self.decoding.push(id);
@@ -92,56 +122,30 @@ impl Scheduler for Sarathi {
         let mut i = 0;
         while i < self.decoding.len() {
             let id = self.decoding[i];
-            let need = world.recs[id].context_tokens() + 1;
-            match world.pool.ensure_capacity(id, need, Priority::Reserved) {
-                Ok(_) => i += 1,
-                Err(_) => {
-                    world.col.alloc_failed_reqs.insert(id);
-                    // The engine stalls while the victim's KV streams out
-                    // over PCIe (vLLM v0 swaps synchronously with the
-                    // scheduler loop; the paper measures these preemption
-                    // delays at up to 20% of JCT, Fig 1e).
-                    let victim_peek = *self.decoding.last().unwrap();
-                    batch.extra_time += world.recs[victim_peek].context_tokens() as f64
-                        * world.cfg.profile.kv_bytes_per_token() as f64
-                        / world.cfg.pcie_bw;
-                    let victim = *self.decoding.last().unwrap();
-                    self.decoding.pop();
-                    world.preempt(victim, PreemptKind::Swap);
-                    self.swapped.push_back(victim);
-                    if victim == id {
-                        break;
-                    }
+            let need = ctx.rec(id).context_tokens() + 1;
+            if ctx.alloc().grow_to(id, need, ReserveClass::Reserved).ok() {
+                i += 1;
+            } else {
+                ctx.note_alloc_failed(id);
+                let victim =
+                    super::swap_out_latest(ctx, &mut self.decoding, &mut self.swapped, &mut plan);
+                if victim == id {
+                    break;
                 }
             }
         }
         for &id in &self.decoding {
-            batch.tasks.push(BatchTask::Decode { id });
+            plan.tasks.push(BatchTask::Decode { id });
         }
 
         // 3) Fill the remaining budget with prompt chunks.
-        let mut used = batch.forward_size();
-        let chunk_for = |world: &mut World, id: ReqId, used: &mut u32| -> Option<BatchTask> {
-            let rec = &world.recs[id];
-            let left = rec.req.prompt_len - rec.prompt_done;
-            let room = budget.saturating_sub(*used);
-            let chunk = left.min(room);
-            if chunk == 0 {
-                return None;
-            }
-            if world.pool.alloc_tokens(id, chunk, Priority::Reserved).is_err() {
-                world.col.alloc_failed_reqs.insert(id);
-                return None;
-            }
-            *used += chunk;
-            Some(BatchTask::Prefill { id, chunk })
-        };
+        let mut used = plan.forward_size();
 
         // Continue in-flight prefills first.
         for idx in 0..self.prefilling.len() {
             let id = self.prefilling[idx];
-            if let Some(t) = chunk_for(world, id, &mut used) {
-                batch.tasks.push(t);
+            if let Some(t) = Sarathi::chunk_for(ctx, id, &mut used, budget, false) {
+                plan.tasks.push(t);
             }
             if used >= budget {
                 break;
@@ -152,13 +156,13 @@ impl Scheduler for Sarathi {
             && self.prefilling.len() + self.decoding.len() < self.max_num_seqs
         {
             let Some(&head) = self.waiting.front() else { break };
-            // Admission gate: one block must be allocatable.
-            match chunk_for(world, head, &mut used) {
+            // Admission gate: the first chunk's lease must be grantable.
+            match Sarathi::chunk_for(ctx, head, &mut used, budget, true) {
                 Some(t) => {
                     self.waiting.pop_front();
-                    world.mark_exec_start(head);
+                    ctx.mark_exec_start(head);
                     self.prefilling.push_back(head);
-                    batch.tasks.push(t);
+                    plan.tasks.push(t);
                 }
                 None => break,
             }
@@ -167,13 +171,13 @@ impl Scheduler for Sarathi {
         // Deadlock guard: every in-flight prefill is blocked on KVC and no
         // decode can run — swap out the most recent prefill to free space
         // (Sarathi's watermark would have prevented admission; recover).
-        if batch.is_empty() {
+        if plan.is_empty() {
             if let Some(victim) = self.prefilling.pop_back() {
-                world.preempt(victim, PreemptKind::Swap);
+                ctx.preempt(victim, PreemptKind::Swap);
                 self.swapped.push_back(victim);
             }
         }
-        batch
+        plan
     }
 }
 
@@ -182,8 +186,10 @@ mod tests {
     use super::*;
     use crate::config::{ModelProfile, SystemConfig};
     use crate::coordinator::{run, RunLimits};
+    use crate::core::world::World;
     use crate::engine::SimEngine;
     use crate::predictor::OraclePredictor;
+    use crate::sched::plan_iteration;
     use crate::trace::TraceItem;
 
     fn world(items: &[TraceItem], kvc_tokens: u64, tfs: u32) -> World {
@@ -193,7 +199,9 @@ mod tests {
         let mut cfg = SystemConfig::new(profile);
         cfg.reserve_frac = 0.0;
         let p = Box::new(OraclePredictor::new(1));
-        World::new(cfg, items, p)
+        let mut w = World::new(cfg, items, p);
+        w.set_allocator("block");
+        w
     }
 
     #[test]
@@ -202,12 +210,12 @@ mod tests {
         let mut w = world(&items, 4096, 128);
         w.drain_arrivals();
         let mut s = Sarathi::new();
-        let b1 = s.step(&mut w);
+        let b1 = plan_iteration(&mut w, &mut s);
         assert_eq!(b1.prefill_tokens(), 128, "first chunk fills TFS");
         let e = SimEngine::new();
         let (d, u) = crate::engine::Engine::iteration_cost(&e, &b1, &w);
-        w.execute_iteration(&b1, d, u);
-        let b2 = s.step(&mut w);
+        w.apply_plan(&b1, d, u);
+        let b2 = plan_iteration(&mut w, &mut s);
         assert_eq!(b2.prefill_tokens(), 128);
     }
 
@@ -227,9 +235,9 @@ mod tests {
                 w.clock = 0.1;
                 continue;
             }
-            let b = s.step(&mut w);
+            let b = plan_iteration(&mut w, &mut s);
             let (d, u) = crate::engine::Engine::iteration_cost(&e, &b, &w);
-            w.execute_iteration(&b, d, u);
+            w.apply_plan(&b, d, u);
             if b.prefill_tokens() > 0 && b.decode_count() > 0 {
                 return; // mixed batch observed: stall-free
             }

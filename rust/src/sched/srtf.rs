@@ -1,17 +1,17 @@
 //! SRTF baseline (§2.1 "Schedulers" item 2): shortest-remaining-time-first
-//! at iteration level with **max-allocation**. Preemptive: each iteration
-//! the `batch_size` requests with the least predicted remaining work run;
-//! paused requests keep their (max) allocation, mirroring the KVC pressure
-//! the paper attributes to this family.
+//! at iteration level, paired with **max-allocation**. Preemptive: each
+//! iteration the `batch_size` requests with the least predicted remaining
+//! work run; paused requests keep their (max) lease, mirroring the KVC
+//! pressure the paper attributes to this family.
 
 use super::Scheduler;
-use crate::core::world::World;
-use crate::core::{Batch, BatchTask, Phase, ReqId};
-use crate::kvc::Priority;
+use crate::core::world::IterCtx;
+use crate::core::{BatchPlan, BatchTask, ReqId};
+use crate::kvc::{Allocator, Demand, ReserveClass};
 
 pub struct Srtf {
     batch_size: usize,
-    /// Admitted (holding a max-allocation), not yet completed.
+    /// Admitted (holding an admission lease), not yet completed.
     admitted: Vec<ReqId>,
 }
 
@@ -22,8 +22,8 @@ impl Srtf {
 
     /// Remaining service estimate: unprocessed prompt tokens + predicted
     /// remaining response tokens.
-    fn remaining(world: &World, id: ReqId) -> u64 {
-        let rec = &world.recs[id];
+    fn remaining(ctx: &IterCtx<'_>, id: ReqId) -> u64 {
+        let rec = ctx.rec(id);
         (rec.req.prompt_len - rec.prompt_done) as u64 + rec.predicted_remaining() as u64
     }
 }
@@ -33,45 +33,40 @@ impl Scheduler for Srtf {
         "srtf"
     }
 
-    fn step(&mut self, world: &mut World) -> Batch {
-        self.admitted.retain(|id| !world.recs[*id].is_done());
+    fn plan(&mut self, ctx: &mut IterCtx<'_>) -> BatchPlan {
+        self.admitted.retain(|id| !ctx.world().recs[*id].is_done());
 
         // Admit whatever fits (admission itself is not size-limited; the
         // BATCH each iteration is).
-        while let Some(&head) = world.inbox.front() {
-            let max_alloc = world.cfg.profile.max_total_len;
-            if world.pool.alloc_tokens(head, max_alloc, Priority::Reserved).is_err() {
+        while let Some(head) = ctx.peek_arrival() {
+            let demand = Demand::of(ctx.rec(head), ctx.cfg().profile.max_total_len);
+            if !ctx.alloc().admit(head, demand, ReserveClass::Reserved).ok() {
                 break;
             }
-            world.inbox.pop_front();
+            ctx.pop_arrival();
             self.admitted.push(head);
         }
 
         // Pick the batch_size shortest-remaining admitted requests.
-        self.admitted.sort_by_key(|&id| Srtf::remaining(world, id));
-        let mut batch = Batch::default();
+        self.admitted.sort_by_key(|&id| Srtf::remaining(ctx, id));
+        let mut plan = BatchPlan::default();
         for &id in self.admitted.iter().take(self.batch_size) {
-            world.mark_exec_start(id);
-            let rec = &world.recs[id];
+            ctx.mark_exec_start(id);
+            let rec = ctx.rec(id);
             if rec.prompt_done < rec.req.prompt_len {
-                batch
-                    .tasks
+                plan.tasks
                     .push(BatchTask::Prefill { id, chunk: rec.req.prompt_len - rec.prompt_done });
             } else {
-                batch.tasks.push(BatchTask::Decode { id });
+                plan.tasks.push(BatchTask::Decode { id });
             }
         }
         // Paused (not selected) requests are "preempted" in paper terms but
-        // keep their allocation; track pause spans for metrics.
-        for &id in self.admitted.iter().skip(self.batch_size) {
-            let now = world.clock;
-            let rec = &mut world.recs[id];
-            if rec.phase == Phase::Decoding || rec.phase == Phase::Prefilling {
-                rec.phase = Phase::Preempted;
-                rec.preempted_since.get_or_insert(now);
-            }
+        // keep their lease; track pause spans for metrics.
+        let paused: Vec<ReqId> = self.admitted.iter().skip(self.batch_size).copied().collect();
+        for id in paused {
+            ctx.pause(id);
         }
-        batch
+        plan
     }
 }
 
@@ -79,8 +74,10 @@ impl Scheduler for Srtf {
 mod tests {
     use super::*;
     use crate::config::{ModelProfile, SystemConfig};
+    use crate::core::world::World;
     use crate::engine::{Engine, SimEngine};
     use crate::predictor::OraclePredictor;
+    use crate::sched::plan_iteration;
     use crate::trace::TraceItem;
 
     fn world(items: &[TraceItem]) -> World {
@@ -89,7 +86,9 @@ mod tests {
         profile.kvc_bytes = 819_200 * 4096;
         let cfg = SystemConfig::new(profile);
         let p = Box::new(OraclePredictor::new(1));
-        World::new(cfg, items, p)
+        let mut w = World::new(cfg, items, p);
+        w.set_allocator("max");
+        w
     }
 
     #[test]
@@ -100,7 +99,7 @@ mod tests {
         ]);
         w.drain_arrivals();
         let mut s = Srtf::new(1);
-        let b = s.step(&mut w);
+        let b = plan_iteration(&mut w, &mut s);
         assert_eq!(b.tasks.len(), 1);
         assert_eq!(b.tasks[0].id(), 1, "short job must be chosen");
     }
@@ -119,7 +118,7 @@ mod tests {
         let e = SimEngine::new();
         for _ in 0..10_000 {
             w.drain_arrivals();
-            let b = s.step(&mut w);
+            let b = plan_iteration(&mut w, &mut s);
             if b.is_empty() {
                 if let Some(t) = w.next_arrival() {
                     w.clock = t;
@@ -128,7 +127,7 @@ mod tests {
                 break;
             }
             let (dur, util) = e.iteration_cost(&b, &w);
-            w.execute_iteration(&b, dur, util);
+            w.apply_plan(&b, dur, util);
         }
         assert!(w.all_done());
     }

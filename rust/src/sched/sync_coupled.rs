@@ -1,9 +1,9 @@
 //! SyncCoupled (§2.2): time-synced batching WITHOUT decoupling.
 //!
 //! Queued requests are grouped by (padded, quantized) predicted RL; whole
-//! groups are admitted with **exact-allocation** (prompt + predicted RL
-//! each) until the KVC is fully allocated, splitting a group when only
-//! part of it fits. Group members start together and (prediction
+//! groups are admitted with **exact-allocation** leases (prompt +
+//! predicted RL each) until the KVC is fully allocated, splitting a group
+//! when only part of it fits. Group members start together and (prediction
 //! permitting) finish together, so scheduling work is per-group rather
 //! than per-request — that is what collapses MultiRes's O(n²) scheduling
 //! time. Because admission is coupled (a request brings BOTH its prompt
@@ -14,9 +14,9 @@ use std::collections::BTreeMap;
 use std::collections::VecDeque;
 
 use super::Scheduler;
-use crate::core::world::World;
-use crate::core::{Batch, BatchTask, ReqId};
-use crate::kvc::Priority;
+use crate::core::world::IterCtx;
+use crate::core::{BatchPlan, BatchTask, PreemptKind, ReqId};
+use crate::kvc::{Allocator, Demand, ReserveClass};
 
 pub struct SyncCoupled {
     /// predicted RL -> FIFO of queued requests with that prediction.
@@ -31,19 +31,19 @@ impl SyncCoupled {
         SyncCoupled { groups: BTreeMap::new(), running: Vec::new(), group_sizes: Vec::new() }
     }
 
-    fn enqueue(&mut self, world: &World, id: ReqId) {
-        let rl = world.recs[id].predicted_remaining().max(1);
+    fn enqueue(&mut self, ctx: &IterCtx<'_>, id: ReqId) {
+        let rl = ctx.rec(id).predicted_remaining().max(1);
         self.groups.entry(rl).or_default().push_back(id);
     }
 
     /// Oldest arrival among group heads == next group FCFS-wise.
-    fn next_group(&self, world: &World) -> Option<u32> {
+    fn next_group(&self, ctx: &IterCtx<'_>) -> Option<u32> {
         self.groups
             .iter()
             .filter(|(_, q)| !q.is_empty())
             .min_by(|(_, a), (_, b)| {
-                let ta = world.recs[*a.front().unwrap()].req.arrival;
-                let tb = world.recs[*b.front().unwrap()].req.arrival;
+                let ta = ctx.rec(*a.front().unwrap()).req.arrival;
+                let tb = ctx.rec(*b.front().unwrap()).req.arrival;
                 ta.partial_cmp(&tb).unwrap()
             })
             .map(|(rl, _)| *rl)
@@ -61,46 +61,43 @@ impl Scheduler for SyncCoupled {
         "sync_coupled"
     }
 
-    fn step(&mut self, world: &mut World) -> Batch {
-        while let Some(id) = world.inbox.pop_front() {
-            self.enqueue(world, id);
+    fn plan(&mut self, ctx: &mut IterCtx<'_>) -> BatchPlan {
+        while let Some(id) = ctx.pop_arrival() {
+            self.enqueue(ctx, id);
         }
-        self.running.retain(|id| !world.recs[*id].is_done());
+        self.running.retain(|id| !ctx.world().recs[*id].is_done());
 
-        // Under-predicted members: extend in place or re-group at the
-        // re-predicted remaining RL.
-        let under: Vec<ReqId> = world.take_events().reached_prediction;
-        let bs = world.cfg.block_size;
+        // Under-predicted members: extend the lease in place or re-group
+        // at the re-predicted remaining RL.
+        let under: Vec<ReqId> = std::mem::take(&mut ctx.events.reached_prediction);
+        let bs = ctx.cfg().block_size;
         for id in under {
-            let rec = &mut world.recs[id];
+            let rec = ctx.rec_mut(id);
             rec.predicted_base = rec.generated;
             rec.predicted_rl = bs;
-            if world.pool.alloc_tokens(id, bs + 1, Priority::Reserved).is_err() {
+            if !ctx.alloc().extend(id, bs + 1, ReserveClass::Reserved).ok() {
                 // Offload-free drop: release KV, recompute at re-admission.
                 if let Some(pos) = self.running.iter().position(|x| *x == id) {
                     self.running.remove(pos);
                 }
-                world.preempt(id, crate::core::world::PreemptKind::DropRecompute);
-                self.enqueue(world, id);
+                ctx.preempt(id, PreemptKind::DropRecompute);
+                self.enqueue(ctx, id);
             }
         }
 
         // Group admission while KVC allows (FCFS over group heads).
+        let max_total = ctx.cfg().profile.max_total_len;
         loop {
-            let Some(rl) = self.next_group(world) else { break };
+            let Some(rl) = self.next_group(ctx) else { break };
             let mut admitted_from_group = 0u32;
             loop {
                 let Some(&head) = self.groups[&rl].front() else { break };
-                let rec = &world.recs[head];
-                let need = (rec.req.prompt_len - rec.prompt_done)
-                    + rec.lost_kv
-                    + rec.predicted_remaining()
-                    + 1;
-                if world.pool.alloc_tokens(head, need, Priority::Reserved).is_err() {
+                let demand = Demand::of(ctx.rec(head), max_total);
+                if !ctx.alloc().admit(head, demand, ReserveClass::Reserved).ok() {
                     break;
                 }
                 self.groups.get_mut(&rl).unwrap().pop_front();
-                world.mark_exec_start(head);
+                ctx.mark_exec_start(head);
                 self.running.push(head);
                 admitted_from_group += 1;
             }
@@ -117,20 +114,19 @@ impl Scheduler for SyncCoupled {
         }
         self.groups.retain(|_, q| !q.is_empty());
 
-        let mut batch = Batch::default();
+        let mut plan = BatchPlan::default();
         for &id in &self.running {
-            let rec = &world.recs[id];
+            let rec = ctx.rec(id);
             if rec.lost_kv > 0 {
-                batch.tasks.push(BatchTask::Prefill { id, chunk: rec.lost_kv });
+                plan.tasks.push(BatchTask::Prefill { id, chunk: rec.lost_kv });
             } else if rec.prompt_done < rec.req.prompt_len {
-                batch
-                    .tasks
+                plan.tasks
                     .push(BatchTask::Prefill { id, chunk: rec.req.prompt_len - rec.prompt_done });
             } else {
-                batch.tasks.push(BatchTask::Decode { id });
+                plan.tasks.push(BatchTask::Decode { id });
             }
         }
-        batch
+        plan
     }
 }
 
@@ -139,8 +135,10 @@ mod tests {
     use super::*;
     use crate::config::{ModelProfile, SystemConfig};
     use crate::coordinator::{run, RunLimits};
+    use crate::core::world::World;
     use crate::engine::SimEngine;
     use crate::predictor::OraclePredictor;
+    use crate::sched::plan_iteration;
     use crate::trace::TraceItem;
 
     fn world(items: &[TraceItem], kvc_tokens: u64, quantum: u32) -> World {
@@ -149,7 +147,7 @@ mod tests {
         let mut cfg = SystemConfig::new(profile);
         cfg.padding_ratio = 0.0;
         let p = Box::new(OraclePredictor::new(quantum));
-        World::new(cfg, items, p)
+        World::new(cfg, items, p) // default allocator IS exact
     }
 
     #[test]
@@ -162,7 +160,7 @@ mod tests {
         w.clock = 0.1;
         w.drain_arrivals();
         let mut s = SyncCoupled::new();
-        let b = s.step(&mut w);
+        let b = plan_iteration(&mut w, &mut s);
         assert_eq!(b.len(), 4);
         assert_eq!(s.group_sizes, vec![4]);
     }
@@ -177,7 +175,7 @@ mod tests {
         w.clock = 0.1;
         w.drain_arrivals();
         let mut s = SyncCoupled::new();
-        let b = s.step(&mut w);
+        let b = plan_iteration(&mut w, &mut s);
         assert!(b.len() >= 2 && b.len() <= 4, "admitted {}", b.len());
         assert!(!s.groups.is_empty(), "rest of the group still queued");
     }
@@ -196,6 +194,6 @@ mod tests {
         let e = SimEngine::new();
         let res = run(&mut w, &mut s, &e, RunLimits::default());
         assert_eq!(res.summary.n_done, 40);
-        assert_eq!(w.pool.alloc_failures, 0);
+        assert_eq!(w.kvc().stats().failures, 0);
     }
 }

@@ -1,24 +1,26 @@
 //! vLLM [13]: continuous batching with PagedAttention-style
-//! **block-allocation** and swap-based preemption.
+//! **block-allocation** (its Table-1 default) and swap-based preemption.
 //!
 //! Mechanics modelled (vLLM v0 scheduler):
 //!  * FCFS waiting queue; *prefill-prioritizing*: when admissible prompts
 //!    are waiting, an iteration runs prefills only (up to
 //!    `max_batched_tokens`), stalling decodes — the paper's "vLLM does not
 //!    aim to fully utilize GPU".
-//!  * Decode iterations grow each running sequence by one token,
-//!    allocating a new block when it crosses a block boundary. On
-//!    allocation failure the LATEST-arrived running sequence is preempted
-//!    by swapping its KV to CPU memory (Fig 1d/1e's failures + delay).
+//!  * Decode iterations grow each running sequence by one token, growing
+//!    its lease when it crosses a block boundary. On a failed grow the
+//!    LATEST-arrived running sequence is preempted by swapping its KV to
+//!    CPU memory (Fig 1d/1e's failures + delay). Under `vllm+exact` the
+//!    admission lease covers the predicted span, so mid-flight grows stop
+//!    failing — the Table-1 grid made runnable.
 //!  * Swapped sequences have priority over new admissions; swap-in cost
 //!    (PCIe) is charged to the iteration that resumes them.
 
 use std::collections::VecDeque;
 
 use super::Scheduler;
-use crate::core::world::{PreemptKind, World};
-use crate::core::{Batch, BatchTask, ReqId};
-use crate::kvc::Priority;
+use crate::core::world::IterCtx;
+use crate::core::{BatchPlan, BatchTask, ReqId};
+use crate::kvc::{Allocator, Demand, ReserveClass};
 
 pub struct Vllm {
     waiting: VecDeque<ReqId>,
@@ -54,27 +56,17 @@ impl Scheduler for Vllm {
         "vllm"
     }
 
-    fn step(&mut self, world: &mut World) -> Batch {
-        while let Some(id) = world.inbox.pop_front() {
+    fn plan(&mut self, ctx: &mut IterCtx<'_>) -> BatchPlan {
+        while let Some(id) = ctx.pop_arrival() {
             self.waiting.push_back(id);
         }
-        self.running.retain(|id| !world.recs[*id].is_done());
+        self.running.retain(|id| !ctx.world().recs[*id].is_done());
 
-        let budget = self.max_batched_tokens.unwrap_or(world.cfg.profile.tfs);
-        let mut batch = Batch::default();
+        let budget = self.max_batched_tokens.unwrap_or(ctx.cfg().profile.tfs);
+        let mut plan = BatchPlan::default();
 
         // 1) Swap-ins take precedence (resumed sequences rejoin running).
-        while let Some(&id) = self.swapped.front() {
-            let need = world.recs[id].context_tokens() + 1;
-            if world.pool.alloc_tokens(id, need, Priority::Reserved).is_err() {
-                break;
-            }
-            self.swapped.pop_front();
-            let restored = world.recs[id].swapped_tokens;
-            world.pool.restore_written(id, restored.min(need));
-            batch.extra_time += world.swap_in_cost(id);
-            world.recs[id].swapped_tokens = 0;
-            world.mark_exec_start(id);
+        for id in super::swap_in_ready(ctx, &mut self.swapped, &mut plan) {
             self.running.push(id);
         }
 
@@ -84,16 +76,21 @@ impl Scheduler for Vllm {
         let mut admitted = Vec::new();
         while self.running.len() + admitted.len() < self.max_num_seqs {
             let Some(&head) = self.waiting.front() else { break };
-            let plen = world.recs[head].req.prompt_len;
+            let plen = ctx.rec(head).req.prompt_len;
             if prefill_tokens + plen > budget && prefill_tokens > 0 {
                 break;
             }
-            // Block-allocation for the prompt (+1 for the first token).
-            if world.pool.alloc_tokens(head, plen + 1, Priority::Reserved).is_err() {
+            // Admission lease for the prompt (+1 for the first token).
+            let demand = Demand {
+                immediate: plen + 1,
+                predicted: ctx.rec(head).predicted_remaining(),
+                max_total: ctx.cfg().profile.max_total_len,
+            };
+            if !ctx.alloc().admit(head, demand, ReserveClass::Reserved).ok() {
                 break;
             }
             self.waiting.pop_front();
-            world.mark_exec_start(head);
+            ctx.mark_exec_start(head);
             prefill_tokens += plen;
             admitted.push(head);
             if prefill_tokens >= budget {
@@ -102,46 +99,34 @@ impl Scheduler for Vllm {
         }
         if !admitted.is_empty() {
             for id in admitted {
-                let chunk = world.recs[id].req.prompt_len;
-                batch.tasks.push(BatchTask::Prefill { id, chunk });
+                let chunk = ctx.rec(id).req.prompt_len;
+                plan.tasks.push(BatchTask::Prefill { id, chunk });
                 self.running.push(id);
             }
-            return batch; // prefill-only iteration (decode stall)
+            return plan; // prefill-only iteration (decode stall)
         }
 
         // 3) Decode iteration: every running sequence advances one token;
-        //    grow allocations, preempting the latest arrival on failure.
+        //    grow leases, preempting the latest arrival on failure.
         let mut i = 0;
         while i < self.running.len() {
             let id = self.running[i];
-            let need = world.recs[id].context_tokens() + 1;
-            match world.pool.ensure_capacity(id, need, Priority::Reserved) {
-                Ok(_) => i += 1,
-                Err(_) => {
-                    world.col.alloc_failed_reqs.insert(id);
-                    // The engine stalls while the victim's KV streams out
-                    // over PCIe (vLLM v0 swaps synchronously with the
-                    // scheduler loop; the paper measures these preemption
-                    // delays at up to 20% of JCT, Fig 1e).
-                    let victim_peek = *self.running.last().unwrap();
-                    batch.extra_time += world.recs[victim_peek].context_tokens() as f64
-                        * world.cfg.profile.kv_bytes_per_token() as f64
-                        / world.cfg.pcie_bw;
-                    // Preempt from the back (latest arrival) until it fits.
-                    let victim = *self.running.last().unwrap();
-                    self.running.pop();
-                    world.preempt(victim, PreemptKind::Swap);
-                    self.swapped.push_back(victim);
-                    if victim == id {
-                        break; // the sequence itself was the victim
-                    }
+            let need = ctx.rec(id).context_tokens() + 1;
+            if ctx.alloc().grow_to(id, need, ReserveClass::Reserved).ok() {
+                i += 1;
+            } else {
+                ctx.note_alloc_failed(id);
+                let victim =
+                    super::swap_out_latest(ctx, &mut self.running, &mut self.swapped, &mut plan);
+                if victim == id {
+                    break; // the sequence itself was the victim
                 }
             }
         }
         for &id in &self.running {
-            batch.tasks.push(BatchTask::Decode { id });
+            plan.tasks.push(BatchTask::Decode { id });
         }
-        batch
+        plan
     }
 }
 
@@ -150,8 +135,10 @@ mod tests {
     use super::*;
     use crate::config::{ModelProfile, SystemConfig};
     use crate::coordinator::{run, RunLimits};
+    use crate::core::world::World;
     use crate::engine::SimEngine;
     use crate::predictor::OraclePredictor;
+    use crate::sched::plan_iteration;
     use crate::trace::TraceItem;
 
     fn tight_world(items: &[TraceItem], kvc_tokens: u64) -> World {
@@ -160,7 +147,9 @@ mod tests {
         let mut cfg = SystemConfig::new(profile);
         cfg.reserve_frac = 0.0;
         let p = Box::new(OraclePredictor::new(1));
-        World::new(cfg, items, p)
+        let mut w = World::new(cfg, items, p);
+        w.set_allocator("block");
+        w
     }
 
     #[test]
@@ -172,13 +161,13 @@ mod tests {
         let mut w = tight_world(&items, 4096);
         w.drain_arrivals();
         let mut s = Vllm::new();
-        let b = s.step(&mut w);
+        let b = plan_iteration(&mut w, &mut s);
         assert_eq!(b.prefill_tokens(), 64);
         assert_eq!(b.decode_count(), 0, "prefill-only iteration");
         // Next step: decodes.
         let (dur, u) = crate::engine::Engine::iteration_cost(&SimEngine::new(), &b, &w);
-        w.execute_iteration(&b, dur, u);
-        let b2 = s.step(&mut w);
+        w.apply_plan(&b, dur, u);
+        let b2 = plan_iteration(&mut w, &mut s);
         assert_eq!(b2.decode_count(), 2);
     }
 
@@ -213,5 +202,24 @@ mod tests {
         let res = run(&mut w, &mut s, &e, RunLimits::default());
         assert_eq!(res.summary.n_done, 40);
         assert_eq!(w.col.swap_preemptions, 0);
+    }
+
+    #[test]
+    fn exact_allocation_eliminates_midflight_failures() {
+        // The same pressure scenario as above, but on the `vllm+exact`
+        // grid point: admission leases the predicted span, so decode
+        // growth never fails (admission head-of-line blocks instead).
+        let items = vec![
+            TraceItem { arrival: 0.0, prompt_len: 32, true_rl: 64 },
+            TraceItem { arrival: 0.0, prompt_len: 32, true_rl: 64 },
+        ];
+        let mut w = tight_world(&items, 128);
+        w.set_allocator("exact");
+        let mut s = Vllm::new();
+        let e = SimEngine::new();
+        let res = run(&mut w, &mut s, &e, RunLimits::default());
+        assert_eq!(res.summary.n_done, 2);
+        assert_eq!(w.col.swap_preemptions, 0, "exact admission must prevent swaps");
+        assert_eq!(res.summary.alloc_failure_frac, 0.0);
     }
 }

@@ -18,7 +18,11 @@
 //! Slots are the real engine's KVC granularity; which queued PT gets a
 //! freed slot is decided by the same [`crate::ordering::QueuePolicy`]
 //! the simulation scheduler uses — one EconoServe ordering
-//! implementation, two engines.
+//! implementation, two engines. Slot capacity itself is accounted
+//! through the same [`crate::kvc::Allocator`] API as the simulator: a
+//! decode slot is one max-allocation lease (`max_seq` tokens — the
+//! real engine's static KV layout IS max-allocation), granted at slot
+//! admission and released when the request retires.
 
 pub mod http;
 
@@ -32,6 +36,7 @@ use crate::api::{
     channel, AdmissionConfig, AdmissionController, Completion, EventSink, FinishReason,
     RequestHandle, ServeError, SubmitOptions,
 };
+use crate::kvc::{Allocator, Demand, MaxAlloc, ReserveClass};
 use crate::ordering::{QueuePolicy, QueuedTask};
 use crate::runtime::PjrtModel;
 use crate::util::stats::Samples;
@@ -103,6 +108,10 @@ pub struct RealServer {
     admission: AdmissionController,
     waiting: VecDeque<Pending>,
     slots: Vec<Option<Slot>>,
+    /// Slot-capacity ledger: one max-allocation lease (`max_seq` tokens)
+    /// per occupied decode slot, speaking the same `kvc::Allocator` API
+    /// as the simulation path.
+    slot_leases: MaxAlloc,
     finished: Vec<Completion>,
     n_rejected: usize,
     decode_iters: u64,
@@ -130,8 +139,10 @@ impl RealServer {
         } else {
             adm.max_prompt.min(model.dims.max_prompt)
         };
+        let max_seq = model.dims.max_seq as u32;
         RealServer {
             admission: AdmissionController::new(adm),
+            slot_leases: MaxAlloc::new(n as u32 * max_seq, max_seq, 0),
             model,
             cfg,
             waiting: VecDeque::new(),
@@ -196,9 +207,10 @@ impl RealServer {
         self.finished.push(c);
     }
 
-    /// Retire a slot-holding request, freeing the slot.
+    /// Retire a slot-holding request, freeing the slot and its lease.
     fn finish_slot(&mut self, idx: usize, finish: FinishReason, now: Instant) {
         let slot = self.slots[idx].take().expect("finish_slot on empty slot");
+        self.slot_leases.release(slot.id as usize);
         let Slot { id, opts, sink, submitted, first_token_at, tbt, tokens, .. } = slot;
         let latency_s = now.duration_since(submitted).as_secs_f64();
         let c = Completion {
@@ -266,6 +278,18 @@ impl RealServer {
             }
             let (logits, state_1) = self.model.prefill(&p.opts.prompt)?;
             self.model.insert(&state_1, slot_idx)?;
+            // Take the slot's KVC lease (max-allocation: the real engine's
+            // static per-slot KV layout) only once the engine calls have
+            // succeeded, so an engine error cannot leak slot capacity.
+            // The free-slot gate makes the grant infallible (one lease
+            // per slot); finish_slot releases it.
+            let demand = Demand {
+                immediate: p.opts.prompt.len() as u32,
+                predicted: p.opts.max_new_tokens as u32,
+                max_total: self.model.dims.max_seq as u32,
+            };
+            let granted = self.slot_leases.admit(p.id as usize, demand, ReserveClass::Normal);
+            debug_assert!(granted.ok(), "free slot without lease capacity");
             let first = PjrtModel::argmax(&logits);
             let now = Instant::now();
             let len = p.opts.prompt.len();

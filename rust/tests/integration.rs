@@ -4,6 +4,7 @@
 
 use econoserve::cluster::{DistServeConfig, DistServeSim};
 use econoserve::figures::common;
+use econoserve::kvc::Allocator;
 use econoserve::trace::{TraceGen, TraceSpec};
 
 fn slice(trace: &str, n: usize, rate_frac: f64, seed: u64) -> (econoserve::config::SystemConfig, Vec<econoserve::trace::TraceItem>) {
@@ -21,9 +22,35 @@ fn all_systems_complete_all_traces() {
         for sys in econoserve::sched::all_systems() {
             let (res, world) = common::run_world(&cfg, sys, trace, &items, false, 3600.0);
             assert_eq!(res.summary.n_done, items.len(), "{sys} on {trace}");
-            assert_eq!(world.pool.total_allocated(), 0, "{sys} on {trace} leaked KVC");
+            assert_eq!(world.kvc().total_allocated(), 0, "{sys} on {trace} leaked KVC");
         }
     }
+}
+
+#[test]
+fn sched_alloc_grid_runs_end_to_end() {
+    // The registry's two-axis grammar: pinned allocators run the same
+    // schedulers end-to-end (the ISSUE-2 acceptance combos).
+    let (cfg, items) = slice("sharegpt", 50, 0.7, 21);
+    for combo in ["vllm+exact", "sarathi+pipelined-exact", "econoserve+exact", "orca+pipelined-max"]
+    {
+        let (res, world) = common::run_world(&cfg, combo, "sharegpt", &items, false, 3600.0);
+        assert_eq!(res.summary.n_done, items.len(), "{combo}");
+        assert_eq!(world.kvc().total_allocated(), 0, "{combo} leaked KVC");
+        world.kvc().check_invariants();
+    }
+}
+
+#[test]
+fn vllm_exact_grid_point_avoids_midflight_failures() {
+    // Table 1 recomposed: vLLM's batching with exact-allocation leases
+    // stops failing mid-flight under the same pressure that makes
+    // vllm+block thrash (admission head-of-line blocks instead).
+    let (cfg, items) = pressure();
+    let (res, world) = common::run_world(&cfg, "vllm+exact", "sharegpt", &items, true, 3600.0);
+    assert_eq!(res.summary.n_done, items.len());
+    assert_eq!(res.summary.alloc_failure_frac, 0.0, "no in-flight failures under exact");
+    assert_eq!(world.col.swap_preemptions, 0);
 }
 
 #[test]
@@ -64,8 +91,9 @@ fn tab1_orca_avoids_alloc_failures_via_max_allocation() {
 fn tab1_vllm_hits_alloc_failures_under_pressure() {
     let (cfg, items) = pressure();
     let (res, world) = common::run_world(&cfg, "vllm", "sharegpt", &items, true, 3600.0);
-    assert!(world.pool.alloc_failures > 0, "block-allocation must fail under pressure");
+    assert!(world.kvc().stats().failures > 0, "block-allocation must fail under pressure");
     assert!(res.summary.alloc_failure_frac > 0.0);
+    assert!(world.col.alloc_exhausted > 0, "typed outcomes must record the exhaustion");
 }
 
 #[test]

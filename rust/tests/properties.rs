@@ -5,7 +5,7 @@ use econoserve::config::{ModelProfile, SystemConfig};
 use econoserve::coordinator::{run, RunLimits};
 use econoserve::engine::SimEngine;
 use econoserve::kvc::pipeline::candidate_slots;
-use econoserve::kvc::{BlockPool, Priority};
+use econoserve::kvc::{by_name as alloc_by_name, Allocator, Demand, ReserveClass};
 use econoserve::ordering::best_fit_leq;
 use econoserve::predictor::{OraclePredictor, SimPredictor};
 use econoserve::trace::TraceItem;
@@ -13,28 +13,33 @@ use econoserve::util::prop::{run_prop, sized, vec_of};
 use econoserve::util::rng::Rng;
 
 // ---------------------------------------------------------------------
-// KVC block pool
+// KVC allocators (the block pool is private; everything goes through the
+// first-class Allocator API)
 // ---------------------------------------------------------------------
 
 #[test]
-fn kvc_pool_accounting_balances_under_random_ops() {
+fn kvc_allocator_accounting_balances_under_random_ops() {
     run_prop("kvc_accounting", 200, |rng| {
         let cap = 64 + sized(rng, 4000) as u32;
         let bs = [8u32, 16, 32, 64][rng.range_usize(0, 3)];
-        let reserve = rng.range_u64(0, (cap / 4) as u64) as u32;
-        let mut pool = BlockPool::new(cap, bs, reserve.min(cap / bs * bs));
+        let reserve = (rng.range_u64(0, (cap / 4) as u64) as u32).min(cap / bs * bs);
+        let name = ["block", "exact"][rng.range_usize(0, 1)];
+        let mut a = alloc_by_name(name, cap, bs, reserve).unwrap();
         let mut live: Vec<usize> = Vec::new();
         for op in 0..sized(rng, 200) {
             match rng.range_u64(0, 3) {
                 0 => {
                     let id = 1000 + op;
                     let want = 1 + sized(rng, 300) as u32;
-                    let prio =
-                        if rng.chance(0.5) { Priority::Normal } else { Priority::Reserved };
-                    if pool.alloc_tokens(id, want, prio).is_ok() {
-                        // Write at most the allocated capacity.
-                        let capn = pool.allocated_tokens(id) - pool.written_tokens(id);
-                        pool.write_tokens(id, rng.range_u64(0, capn as u64) as u32);
+                    let class = if rng.chance(0.5) {
+                        ReserveClass::Normal
+                    } else {
+                        ReserveClass::Reserved
+                    };
+                    if a.extend(id, want, class).ok() {
+                        // Write at most the leased capacity.
+                        let capn = a.allocated(id) - a.written(id);
+                        a.record_write(id, rng.range_u64(0, capn as u64) as u32);
                         live.push(id);
                     }
                 }
@@ -42,43 +47,141 @@ fn kvc_pool_accounting_balances_under_random_ops() {
                     if !live.is_empty() {
                         let idx = rng.range_usize(0, live.len() - 1);
                         let id = live.swap_remove(idx);
-                        pool.release(id);
+                        a.release(id);
                     }
                 }
                 _ => {
                     if !live.is_empty() {
                         let idx = rng.range_usize(0, live.len() - 1);
-                        pool.trim_to_written(live[idx]);
+                        a.shrink_to_written(live[idx]);
                     }
                 }
             }
-            pool.check_invariants();
-            assert!(pool.total_allocated() <= pool.capacity_tokens() as u64);
-            assert!(pool.total_written() <= pool.total_allocated());
+            a.check_invariants();
+            assert!(a.total_allocated() <= a.capacity_tokens() as u64);
+            assert!(a.total_written() <= a.total_allocated());
+            assert_eq!(a.stats().implicit_grows, 0, "bounded writes need no rescue");
         }
         for id in live {
-            pool.release(id);
+            a.release(id);
         }
-        pool.check_invariants();
-        assert_eq!(pool.total_allocated(), 0, "all blocks must return");
+        a.check_invariants();
+        assert_eq!(a.total_allocated(), 0, "all blocks must return");
     });
 }
 
 #[test]
-fn kvc_reserve_never_consumed_by_normal() {
+fn kvc_reserve_never_consumed_by_normal_class() {
     run_prop("kvc_reserve", 100, |rng| {
         let cap = 1024u32;
         let bs = 32u32;
         let reserve = (rng.range_u64(1, 8) * 32) as u32;
-        let mut pool = BlockPool::new(cap, bs, reserve);
-        // Fill with Normal allocations as far as possible.
+        let mut a = alloc_by_name("block", cap, bs, reserve).unwrap();
+        // Fill with Normal-class leases as far as possible.
         let mut id = 0;
-        while pool.alloc_tokens(id, 1 + sized(rng, 128) as u32, Priority::Normal).is_ok() {
+        while a.extend(id, 1 + sized(rng, 128) as u32, ReserveClass::Normal).ok() {
             id += 1;
             assert!(id < 1000);
         }
         // The reserve must still be intact.
-        assert!(pool.free_tokens(Priority::Reserved) >= reserve);
+        assert!(a.free_tokens(ReserveClass::Reserved) >= reserve);
+    });
+}
+
+#[test]
+fn pipelined_exact_never_overcommits() {
+    // The satellite property: under arbitrary interleavings of hosting,
+    // guest/host writes, overrun evictions, adoption and release,
+    // `Pipelined<ExactAlloc>` never reports written > allocated capacity.
+    run_prop("pipelined_overcommit", 150, |rng| {
+        let cap = 2048u32;
+        let mut a = alloc_by_name("pipelined-exact", cap, 32, 0).unwrap();
+        // (id, span, head) per live host; (id, slot_len, written) per guest.
+        let mut hosts: Vec<(usize, u32, u32)> = Vec::new();
+        let mut guests: Vec<(usize, u32, u32)> = Vec::new();
+        let mut next_id = 1usize;
+        for _ in 0..sized(rng, 300) {
+            match rng.range_u64(0, 4) {
+                0 => {
+                    // Admit a new host span.
+                    let predicted = 8 + sized(rng, 256) as u32;
+                    let d = Demand { immediate: 0, predicted, max_total: cap };
+                    if a.admit(next_id, d, ReserveClass::Normal).ok() {
+                        hosts.push((next_id, predicted + 1, 0));
+                        next_id += 1;
+                    }
+                }
+                1 => {
+                    // Lend a slot from a random host.
+                    if hosts.is_empty() {
+                        continue;
+                    }
+                    let (h, span, head) = hosts[rng.range_usize(0, hosts.len() - 1)];
+                    let target = a.lend_capacity(h, span, head, 0.1);
+                    if target == 0 {
+                        continue;
+                    }
+                    let rl = 1 + rng.range_u64(0, (target - 1) as u64) as u32;
+                    if a.lend(h, span, head, 0.1, next_id, rl).ok() {
+                        guests.push((next_id, rl, 0));
+                        next_id += 1;
+                    }
+                }
+                2 => {
+                    // Advance a host's write head, evicting overrun guests
+                    // first (the world's sweep protocol).
+                    if hosts.is_empty() {
+                        continue;
+                    }
+                    let idx = rng.range_usize(0, hosts.len() - 1);
+                    let (h, span, head) = hosts[idx];
+                    if head >= span {
+                        continue;
+                    }
+                    for g in a.overrun_guests(h, head + 1) {
+                        a.drop_guest(g);
+                        guests.retain(|(id, _, _)| *id != g);
+                    }
+                    a.record_write(h, 1);
+                    hosts[idx].2 += 1;
+                }
+                3 => {
+                    // A guest writes into its borrowed slot.
+                    if guests.is_empty() {
+                        continue;
+                    }
+                    let idx = rng.range_usize(0, guests.len() - 1);
+                    let (g, len, written) = guests[idx];
+                    if written < len {
+                        a.record_write(g, 1);
+                        guests[idx].2 += 1;
+                    } else if a.adopt(g, written + 8).ok() {
+                        // Slot full: migrate onto an own lease.
+                        guests.remove(idx);
+                    }
+                }
+                _ => {
+                    // Release a random host; orphans lose their space.
+                    if hosts.is_empty() {
+                        continue;
+                    }
+                    let idx = rng.range_usize(0, hosts.len() - 1);
+                    let (h, _, _) = hosts.remove(idx);
+                    let rel = a.release(h);
+                    for g in rel.orphans {
+                        a.drop_guest(g);
+                        guests.retain(|(id, _, _)| *id != g);
+                    }
+                }
+            }
+            a.check_invariants();
+            assert!(
+                a.total_written() <= a.total_allocated(),
+                "pipelined allocator overcommitted: written {} > allocated {}",
+                a.total_written(),
+                a.total_allocated()
+            );
+        }
     });
 }
 
@@ -157,24 +260,25 @@ fn every_scheduler_conserves_and_completes() {
         let n = 12 + sized(rng, 30);
         let items = random_items(rng, n, 900);
         let systems = econoserve::sched::all_systems();
-        let sys = systems[rng.range_usize(0, systems.len() - 1)];
+        let sys_name = systems[rng.range_usize(0, systems.len() - 1)];
         let cfg = mini_cfg(4096);
         let pred = Box::new(SimPredictor::new(0.15, cfg.block_size, rng.next_u64()));
         let mut world = econoserve::core::world::World::new(cfg, &items, pred);
-        let mut sched = econoserve::sched::by_name(sys).unwrap();
+        let sys = econoserve::sched::by_name(sys_name).unwrap();
+        world.set_allocator(sys.alloc);
+        let mut sched = sys.sched;
         let engine = SimEngine::new();
         let res = run(&mut world, sched.as_mut(), &engine, RunLimits::default());
-        assert_eq!(res.summary.n_done, items.len(), "{sys} lost requests");
+        assert_eq!(res.summary.n_done, items.len(), "{sys_name} lost requests");
         // Conservation: exact token counts, KVC fully returned.
         for rec in &world.recs {
-            assert_eq!(rec.generated, rec.req.true_rl, "{sys}: wrong token count");
+            assert_eq!(rec.generated, rec.req.true_rl, "{sys_name}: wrong token count");
             assert_eq!(rec.prompt_done, rec.req.prompt_len);
             assert!(rec.done_at.unwrap() >= rec.req.arrival);
         }
-        assert_eq!(world.pool.total_allocated(), 0, "{sys} leaked KVC");
-        world.pool.check_invariants();
-        world.pipes.check_invariants();
-        assert_eq!(world.pipes.guest_count(), 0);
+        assert_eq!(world.kvc().total_allocated(), 0, "{sys_name} leaked KVC");
+        world.kvc().check_invariants();
+        assert_eq!(world.kvc().guest_count(), 0);
     });
 }
 
@@ -187,7 +291,9 @@ fn econoserve_oracle_never_evicts_guests() {
         cfg.padding_ratio = 0.10;
         let pred = Box::new(OraclePredictor::new(cfg.block_size));
         let mut world = econoserve::core::world::World::new(cfg, &items, pred);
-        let mut sched = econoserve::sched::by_name("econoserve").unwrap();
+        let sys = econoserve::sched::by_name("econoserve").unwrap();
+        world.set_allocator(sys.alloc);
+        let mut sched = sys.sched;
         let engine = SimEngine::new();
         let res = run(&mut world, sched.as_mut(), &engine, RunLimits::default());
         assert_eq!(res.summary.n_done, items.len());
@@ -205,11 +311,13 @@ fn exact_allocation_never_fails_for_multires() {
         let cfg = mini_cfg(4096);
         let pred = Box::new(OraclePredictor::new(cfg.block_size));
         let mut world = econoserve::core::world::World::new(cfg, &items, pred);
-        let mut sched = econoserve::sched::by_name("multires").unwrap();
+        let sys = econoserve::sched::by_name("multires").unwrap();
+        world.set_allocator(sys.alloc);
+        let mut sched = sys.sched;
         let engine = SimEngine::new();
         let res = run(&mut world, sched.as_mut(), &engine, RunLimits::default());
         assert_eq!(res.summary.n_done, items.len());
-        assert_eq!(world.pool.alloc_failures, 0);
+        assert_eq!(world.kvc().stats().failures, 0);
     });
 }
 
@@ -226,7 +334,9 @@ fn deterministic_given_seed() {
             cfg.sched_time_scale = 0.0;
             let pred = Box::new(SimPredictor::new(0.15, cfg.block_size, seed));
             let mut world = econoserve::core::world::World::new(cfg, &items, pred);
-            let mut sched = econoserve::sched::by_name("econoserve").unwrap();
+            let sys = econoserve::sched::by_name("econoserve").unwrap();
+            world.set_allocator(sys.alloc);
+            let mut sched = sys.sched;
             let engine = SimEngine::new();
             let res = run(&mut world, sched.as_mut(), &engine, RunLimits::default());
             (res.summary.n_done, res.summary.iterations, format!("{:.9}", res.summary.mean_jct))

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Scheduler hot-path micro-bench across the sched × alloc grid.
+#
+# Runs `benches/sched_hotpath.rs` (plan-formation latency at a ~1k-deep
+# queue for every supported scheduler × allocator combination) and writes
+# a single machine-readable artifact with p50/p95 per combination, so the
+# perf trajectory is tracked across PRs:
+#
+#   scripts/bench.sh                  # writes BENCH_sched.json at repo root
+#   scripts/bench.sh out/bench.json   # custom output path
+#   FAST=1 scripts/bench.sh           # default pairings only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+OUT="${1:-$PWD/BENCH_sched.json}"
+case "$OUT" in
+    /*) ;;
+    *) OUT="$PWD/$OUT" ;;
+esac
+cd rust
+cargo bench --no-default-features --bench sched_hotpath -- --json "$OUT"
+echo "bench artifact: $OUT"

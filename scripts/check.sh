@@ -2,13 +2,14 @@
 # Tier-1 verify in one command (see ROADMAP.md): release build, tests,
 # and formatting. Run from anywhere; operates on the rust/ crate.
 #
-#   scripts/check.sh            # build + test + fmt --check
-#   SKIP_FMT=1 scripts/check.sh # without the formatting gate
+#   scripts/check.sh                           # build + test + fmt --check
+#   SKIP_FMT=1 scripts/check.sh                # without the formatting gate
+#   CARGO_FLAGS=--no-default-features scripts/check.sh   # sim stack only (CI)
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
-cargo build --release
-cargo test -q
+cargo build --release ${CARGO_FLAGS:-}
+cargo test -q ${CARGO_FLAGS:-}
 if [ -z "${SKIP_FMT:-}" ]; then
     cargo fmt --check
 fi
