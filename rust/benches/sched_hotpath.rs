@@ -1,11 +1,16 @@
 //! Micro-benchmark: batch-formation (`Scheduler::plan`) latency per
-//! sched × alloc combination at a deep queue — backs Fig 14 and the §Perf
-//! L3 target (<= 50 µs at 1k-deep queues for EconoServe).
+//! sched × alloc combination across queue depths — backs Fig 14 and the
+//! §Perf L3 target (<= 50 µs at 1k-deep queues for EconoServe).
 //!
-//! Run directly for the human-readable table, or with
-//! `--json <path>` (what `scripts/bench.sh` does) to also emit a single
-//! machine-readable `BENCH_sched.json` with p50/p95 per combination so
-//! the hot-path perf trajectory is tracked across PRs.
+//! Sweeps 100 / 1 000 / 10 000 queued requests so the indexed hot path's
+//! scaling is visible, not just its constant factor. Run directly for the
+//! human-readable table, or with `--json <path>` (what `scripts/bench.sh`
+//! does) to emit a single machine-readable `BENCH_sched.json` with
+//! p50/p95 per (combo, depth) so the perf trajectory is tracked across
+//! PRs and gated in CI (`scripts/bench_gate.py`).
+//!
+//! Modes: `FAST=1` benches default pairings at the 1k depth only (the CI
+//! short mode); the full run covers the supported grid at every depth.
 
 use econoserve::core::world::World;
 use econoserve::engine::{Engine, SimEngine};
@@ -16,6 +21,11 @@ use std::time::Duration;
 
 const SCHEDS: [&str; 7] =
     ["orca", "fastserve", "vllm", "sarathi", "multires", "sync_coupled", "econoserve"];
+
+/// Queue depths swept (queued requests at bench start).
+const DEPTHS: [usize; 3] = [100, 1_000, 10_000];
+/// The depth used for the headline table and the FAST/CI mode.
+const HEADLINE_DEPTH: usize = 1_000;
 
 /// Allocators a scheduler can run under sustained overload. Schedulers
 /// without mid-flight lease growth or a preemption recovery path (the
@@ -32,16 +42,17 @@ fn allocs_for(sched: &str) -> &'static [&'static str] {
 
 struct Row {
     combo: String,
+    depth: usize,
     mean_s: f64,
     p50_s: f64,
     p95_s: f64,
     samples: usize,
 }
 
-fn bench_combo(combo: &str) -> Row {
+fn bench_combo(combo: &str, depth: usize, fast: bool) -> Row {
     let cfg = common::cfg("opt-13b", "sharegpt");
-    // Build a world mid-overload: 1000 queued requests.
-    let items = common::workload(&cfg, "sharegpt", 1000.0, 1.0, 7);
+    // Build a world mid-overload: `depth` queued requests.
+    let items = common::workload(&cfg, "sharegpt", depth as f64 / 2.0, 2.0, 7);
     let pred = Box::new(econoserve::predictor::SimPredictor::for_trace(
         "sharegpt",
         cfg.block_size,
@@ -63,7 +74,13 @@ fn bench_combo(combo: &str) -> Row {
         }
         let (d, u) = engine.iteration_cost(&b, &world);
         world.apply_plan(&b, d, u);
+        world.recycle_plan(b);
     }
+    let (min_iters, min_time) = if fast {
+        (50, Duration::from_millis(75))
+    } else {
+        (100, Duration::from_millis(150))
+    };
     let mut res = time_fn(
         || {
             let b = plan_iteration(&mut world, sched.as_mut());
@@ -71,14 +88,16 @@ fn bench_combo(combo: &str) -> Row {
                 let (d, u) = engine.iteration_cost(&b, &world);
                 world.apply_plan(&b, d, u);
             }
+            world.recycle_plan(b);
             black_box(());
         },
-        100,
-        Duration::from_millis(150),
+        min_iters,
+        min_time,
     );
-    println!("  {}", res.report(combo));
+    println!("  [depth {depth:>5}] {}", res.report(combo));
     Row {
         combo: combo.to_string(),
+        depth,
         mean_s: res.samples.mean(),
         p50_s: res.samples.p50(),
         p95_s: res.samples.p95(),
@@ -95,12 +114,17 @@ fn main() {
         .cloned();
     let fast = std::env::var("FAST").is_ok();
 
-    println!("scheduler plan latency at ~1k-deep queue (sharegpt, opt-13b), sched x alloc grid:");
+    let depths: &[usize] = if fast { &[HEADLINE_DEPTH] } else { &DEPTHS };
+    println!(
+        "scheduler plan latency (sharegpt, opt-13b), sched x alloc grid, depths {depths:?}:"
+    );
     let mut rows: Vec<Row> = Vec::new();
     for sched in SCHEDS {
         // Default pairing first, then the rest of the supported axis.
         let default = econoserve::sched::default_alloc(sched).unwrap();
-        rows.push(bench_combo(&format!("{sched}+{default}")));
+        for &depth in depths {
+            rows.push(bench_combo(&format!("{sched}+{default}"), depth, fast));
+        }
         if fast {
             continue;
         }
@@ -110,7 +134,9 @@ fn main() {
                 continue;
             }
             if supported.contains(alloc) {
-                rows.push(bench_combo(&format!("{sched}+{alloc}")));
+                // Non-default pairings: headline depth only (the grid is
+                // about coverage; the scaling sweep rides the defaults).
+                rows.push(bench_combo(&format!("{sched}+{alloc}"), HEADLINE_DEPTH, fast));
             } else {
                 println!("  {sched}+{alloc}: skipped (needs admission-complete lease)");
             }
@@ -118,17 +144,25 @@ fn main() {
     }
 
     if let Some(path) = json_path {
+        // Machine label for the regression gate: p50s are only comparable
+        // on like hardware, so scripts/bench_gate.py fails on a regression
+        // only when the hosts match (CI pins BENCH_HOST to its runner
+        // flavor; scripts/bench.sh defaults it to `uname -sm`).
+        let host = std::env::var("BENCH_HOST").unwrap_or_else(|_| "unknown".to_string());
         let mut out = String::from("{\n");
         out.push_str("  \"bench\": \"sched_hotpath\",\n");
+        out.push_str(&format!("  \"host\": \"{host}\",\n"));
         out.push_str("  \"unit\": \"seconds_per_iteration\",\n");
-        out.push_str("  \"workload\": \"sharegpt opt-13b, 1000 queued requests\",\n");
-        out.push_str("  \"note\": \"plan-formation latency per sched+alloc combo; regenerate with scripts/bench.sh\",\n");
-        out.push_str("  \"pending\": false,\n");
+        out.push_str(&format!(
+            "  \"workload\": \"sharegpt opt-13b, queue-depth sweep {DEPTHS:?} (FAST: {HEADLINE_DEPTH} only)\",\n"
+        ));
+        out.push_str("  \"note\": \"plan-formation latency per sched+alloc combo and queue depth; regenerate with scripts/bench.sh, gate with scripts/bench_gate.py\",\n");
         out.push_str("  \"combos\": [\n");
         for (i, r) in rows.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"system\": \"{}\", \"mean\": {:.9}, \"p50\": {:.9}, \"p95\": {:.9}, \"samples\": {}}}{}\n",
+                "    {{\"system\": \"{}\", \"depth\": {}, \"mean\": {:.9}, \"p50\": {:.9}, \"p95\": {:.9}, \"samples\": {}}}{}\n",
                 r.combo,
+                r.depth,
                 r.mean_s,
                 r.p50_s,
                 r.p95_s,

@@ -141,15 +141,19 @@ impl DistServeSim {
         let mut d_queue: VecDeque<ReqId> = VecDeque::new();
         let mut d_running: Vec<ReqId> = Vec::new();
         let mut arrivals: VecDeque<ReqId> = (0..recs.len()).collect();
+        // In-flight KV transfers, in transfer-start order: the event-loop
+        // promotion and idle fast-forward below consult only this list
+        // instead of sweeping every record per loop turn.
+        let mut transferring: Vec<ReqId> = Vec::new();
+        let mut n_done_total = 0usize;
 
         let mut col_p = Collector::new();
         let mut col_d = Collector::new();
         let mut transfer_time_total = 0.0;
         let end_of_arrivals = items.last().map(|i| i.arrival).unwrap_or(0.0);
 
-        let done = |recs: &Vec<Rec>| recs.iter().all(|r| matches!(r.st, St::Done { .. }));
         let mut guard = 0u64;
-        while !done(&recs) && guard < 60_000_000 {
+        while n_done_total < recs.len() && guard < 60_000_000 {
             guard += 1;
             let now = p_clock.min(d_clock);
             if now > max_sim_time {
@@ -164,14 +168,24 @@ impl DistServeSim {
                     break;
                 }
             }
-            // Promote finished transfers whose ready time has passed.
-            for (id, r) in recs.iter_mut().enumerate() {
-                if let St::Transferring { ready_at } = r.st {
-                    if ready_at <= d_clock {
-                        r.st = St::WaitDecode;
-                        d_queue.push_back(id);
+            // Promote finished transfers whose ready time has passed
+            // (order-preserving retain over the in-flight list).
+            {
+                let recs_ref = &mut recs;
+                let d_queue_ref = &mut d_queue;
+                transferring.retain(|&id| {
+                    if let St::Transferring { ready_at } = recs_ref[id].st {
+                        if ready_at <= d_clock {
+                            recs_ref[id].st = St::WaitDecode;
+                            d_queue_ref.push_back(id);
+                            false
+                        } else {
+                            true
+                        }
+                    } else {
+                        false
                     }
-                }
+                });
             }
 
             if p_clock <= d_clock {
@@ -237,8 +251,10 @@ impl DistServeSim {
                     transfer_time_total += t_x;
                     if recs[id].it.true_rl <= 1 {
                         recs[id].st = St::Done { at: p_clock };
+                        n_done_total += 1;
                     } else {
                         recs[id].st = St::Transferring { ready_at: p_clock + t_x };
+                        transferring.push(id);
                     }
                     p_pool.release(id);
                 }
@@ -257,16 +273,16 @@ impl DistServeSim {
                     d_running.push(id);
                 }
                 if d_running.is_empty() {
-                    let next_ready = recs
+                    let next_ready = transferring
                         .iter()
-                        .filter_map(|r| match r.st {
+                        .filter_map(|&id| match recs[id].st {
                             St::Transferring { ready_at } => Some(ready_at),
                             _ => None,
                         })
                         .fold(f64::INFINITY, f64::min);
                     if next_ready.is_finite() {
                         d_clock = next_ready.max(d_clock + 1e-4);
-                    } else if p_clock.is_finite() && !done(&recs) {
+                    } else if p_clock.is_finite() && n_done_total < recs.len() {
                         d_clock = (p_clock + 1e-4).max(d_clock + 1e-4);
                     } else {
                         d_clock = max_sim_time + 1.0;
@@ -313,6 +329,7 @@ impl DistServeSim {
                     r.last_emit = Some(d_clock);
                     if r.generated >= r.it.true_rl {
                         r.st = St::Done { at: d_clock };
+                        n_done_total += 1;
                         d_pool.release(id);
                         completed += 1;
                     }

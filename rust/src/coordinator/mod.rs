@@ -117,6 +117,7 @@ pub fn run_admitted(
                 Some(t) if t > world.clock => t.min(idle_step),
                 _ => idle_step,
             };
+            world.recycle_plan(plan);
             continue;
         }
         last_progress = world.clock;
@@ -126,6 +127,9 @@ pub fn run_admitted(
 
         let (dur, util) = engine.iteration_cost(&plan, world);
         world.apply_plan(&plan, dur, util);
+        // Hand the plan's buffers back for the next iteration
+        // (steady-state planning allocates nothing).
+        world.recycle_plan(plan);
         iters += 1;
     }
 
@@ -149,13 +153,10 @@ fn shed_new_arrivals(world: &mut World, adm: &AdmissionController, newly: usize)
     if newly == 0 {
         return 0;
     }
-    // Arrived-and-unfinished requests, including the new arrivals
-    // themselves; subtract the latter to get the load ahead of them.
-    let in_system = world
-        .recs
-        .iter()
-        .filter(|r| r.req.arrival <= world.clock && !r.is_done())
-        .count();
+    // Arrived-and-unfinished requests (the world's O(1) active index),
+    // including the new arrivals themselves; subtract the latter to get
+    // the load ahead of them.
+    let in_system = world.n_active();
     let mut inflight = in_system - newly;
     let mut shed = 0usize;
     let mut i = world.inbox.len() - newly;

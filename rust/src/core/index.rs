@@ -1,0 +1,242 @@
+//! O(1) request-set indexing for scheduler hot paths.
+//!
+//! Schedulers keep per-state lists (running GTs, in-flight prefills, …)
+//! that previously paid an `iter().position()` scan for every membership
+//! test and removal. [`IndexedList`] pairs an order-preserving list with
+//! a dense `id → position` slot map so that
+//!
+//!  * `contains` / `remove` are O(1) (amortized),
+//!  * iteration order is the push order (FIFO semantics preserved —
+//!    removal tombstones the slot and compacts lazily),
+//!  * `push` is O(1) amortized; `push_front` is O(live) and reserved for
+//!    the rare priority-insert paths (recompute resumption).
+//!
+//! Positions handed out by [`IndexedList::raw_len`] / `get_raw` stay
+//! stable across `push` (appends only) but NOT across `remove`,
+//! `push_front` or `retain` — index-based loops must not remove.
+
+use super::ReqId;
+
+/// Absent marker in the position slot map.
+const NONE: usize = usize::MAX;
+/// Tombstone marker inside the item list.
+const HOLE: ReqId = usize::MAX;
+
+/// Order-preserving list of request ids with O(1) membership and removal.
+#[derive(Debug, Clone, Default)]
+pub struct IndexedList {
+    items: Vec<ReqId>,
+    /// id -> index into `items` (NONE = absent).
+    pos: Vec<usize>,
+    /// Tombstoned slots awaiting compaction.
+    holes: usize,
+}
+
+impl IndexedList {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Live element count.
+    pub fn len(&self) -> usize {
+        self.items.len() - self.holes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, id: ReqId) -> bool {
+        self.pos.get(id).copied().unwrap_or(NONE) != NONE
+    }
+
+    fn ensure_pos(&mut self, id: ReqId) {
+        if id >= self.pos.len() {
+            self.pos.resize(id + 1, NONE);
+        }
+    }
+
+    /// Append `id` (must not already be present).
+    pub fn push(&mut self, id: ReqId) {
+        self.ensure_pos(id);
+        debug_assert!(self.pos[id] == NONE, "IndexedList: duplicate push of {id}");
+        self.pos[id] = self.items.len();
+        self.items.push(id);
+    }
+
+    /// Insert `id` at the FRONT (O(live); rare priority path).
+    pub fn push_front(&mut self, id: ReqId) {
+        self.compact();
+        self.ensure_pos(id);
+        debug_assert!(self.pos[id] == NONE, "IndexedList: duplicate push_front of {id}");
+        self.items.insert(0, id);
+        for (i, &it) in self.items.iter().enumerate() {
+            self.pos[it] = i;
+        }
+    }
+
+    /// Remove `id` if present; returns whether it was. O(1) amortized
+    /// (tombstone + occasional compaction).
+    pub fn remove(&mut self, id: ReqId) -> bool {
+        let p = match self.pos.get(id).copied() {
+            Some(p) if p != NONE => p,
+            _ => return false,
+        };
+        self.pos[id] = NONE;
+        self.items[p] = HOLE;
+        self.holes += 1;
+        if self.holes * 2 > self.items.len() {
+            self.compact();
+        }
+        true
+    }
+
+    /// Drop tombstones, preserving order and refreshing positions.
+    fn compact(&mut self) {
+        if self.holes == 0 {
+            return;
+        }
+        self.items.retain(|&id| id != HOLE);
+        self.holes = 0;
+        for (i, &id) in self.items.iter().enumerate() {
+            self.pos[id] = i;
+        }
+    }
+
+    /// Keep only elements for which `f` returns true (order preserved).
+    pub fn retain(&mut self, mut f: impl FnMut(ReqId) -> bool) {
+        self.compact();
+        let pos = &mut self.pos;
+        self.items.retain(|&id| {
+            if f(id) {
+                true
+            } else {
+                pos[id] = NONE;
+                false
+            }
+        });
+        for (i, &id) in self.items.iter().enumerate() {
+            self.pos[id] = i;
+        }
+    }
+
+    /// Live elements in push order.
+    pub fn iter(&self) -> impl Iterator<Item = ReqId> + '_ {
+        self.items.iter().copied().filter(|&id| id != HOLE)
+    }
+
+    /// Raw slot count for index-based loops that must tolerate concurrent
+    /// `push` (appends keep earlier slots stable). Pair with
+    /// [`IndexedList::get_raw`].
+    pub fn raw_len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// The id in raw slot `i`, or `None` for a tombstone.
+    pub fn get_raw(&self, i: usize) -> Option<ReqId> {
+        match self.items.get(i) {
+            Some(&id) if id != HOLE => Some(id),
+            _ => None,
+        }
+    }
+
+    /// First live element (front of the FIFO order).
+    pub fn front(&self) -> Option<ReqId> {
+        self.iter().next()
+    }
+
+    /// Remove and return the LAST live element (back of the FIFO order).
+    pub fn pop_back(&mut self) -> Option<ReqId> {
+        loop {
+            let id = self.items.pop()?;
+            if id != HOLE {
+                self.pos[id] = NONE;
+                return Some(id);
+            }
+            self.holes -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_remove_contains() {
+        let mut l = IndexedList::new();
+        for id in [3usize, 7, 1, 9] {
+            l.push(id);
+        }
+        assert_eq!(l.len(), 4);
+        assert!(l.contains(7));
+        assert!(!l.contains(2));
+        assert!(l.remove(7));
+        assert!(!l.remove(7));
+        assert!(!l.contains(7));
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![3, 1, 9]);
+        assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn order_preserved_across_heavy_removal() {
+        let mut l = IndexedList::new();
+        for id in 0..100 {
+            l.push(id);
+        }
+        for id in (0..100).step_by(2) {
+            assert!(l.remove(id));
+        }
+        let got: Vec<_> = l.iter().collect();
+        let want: Vec<_> = (1..100).step_by(2).collect();
+        assert_eq!(got, want);
+        // Re-push after removal works and appends.
+        l.push(0);
+        assert_eq!(l.iter().last(), Some(0));
+    }
+
+    #[test]
+    fn push_front_prioritizes() {
+        let mut l = IndexedList::new();
+        l.push(1);
+        l.push(2);
+        l.push_front(5);
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![5, 1, 2]);
+        assert!(l.contains(5));
+        assert!(l.remove(1));
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![5, 2]);
+    }
+
+    #[test]
+    fn retain_filters_and_reindexes() {
+        let mut l = IndexedList::new();
+        for id in 0..10 {
+            l.push(id);
+        }
+        l.remove(4);
+        l.retain(|id| id % 3 != 0);
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![1, 2, 5, 7, 8]);
+        for id in [1, 2, 5, 7, 8] {
+            assert!(l.contains(id));
+        }
+        assert!(!l.contains(4));
+        assert!(!l.contains(9));
+        assert_eq!(l.len(), 5);
+    }
+
+    #[test]
+    fn raw_access_skips_holes() {
+        let mut l = IndexedList::new();
+        l.push(10);
+        l.push(11);
+        l.push(12);
+        l.remove(11);
+        let live: Vec<_> = (0..l.raw_len()).filter_map(|i| l.get_raw(i)).collect();
+        assert_eq!(live, vec![10, 12]);
+        assert_eq!(l.front(), Some(10));
+        assert_eq!(l.pop_back(), Some(12));
+        assert_eq!(l.pop_back(), Some(10));
+        assert_eq!(l.pop_back(), None);
+        assert!(l.is_empty());
+    }
+}

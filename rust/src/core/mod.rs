@@ -8,7 +8,10 @@
 //!  * **KVC** — key-value cache, measured in tokens here (block-granular
 //!    allocation lives in [`crate::kvc`]).
 
+pub mod index;
 pub mod world;
+
+pub use index::IndexedList;
 
 /// Simulation time in seconds.
 pub type Time = f64;
@@ -236,6 +239,15 @@ impl BatchPlan {
     /// Plan containing just `tasks` (test / driver convenience).
     pub fn of(tasks: Vec<BatchTask>) -> Self {
         BatchPlan { tasks, ..Default::default() }
+    }
+
+    /// Empty the plan while keeping buffer capacity (the zero-allocation
+    /// reuse path: `IterCtx::take_plan` / `World::recycle_plan`).
+    pub fn clear(&mut self) {
+        self.tasks.clear();
+        self.preempted.clear();
+        self.evicted.clear();
+        self.extra_time = 0.0;
     }
 
     pub fn forward_size(&self) -> u32 {

@@ -74,6 +74,21 @@ pub struct World {
     /// §3.3.2: the predictor "undergoes continual retraining" and is
     /// re-consulted when a request outruns its prediction).
     predictor: Box<dyn Predictor>,
+    /// O(1) request-state index: ids that have arrived and are not Done,
+    /// with `active_pos[id]` giving each id's slot in `active`
+    /// (usize::MAX = absent). Maintained by `drain_arrivals` /
+    /// `complete` / `reject`; lets `apply_plan`'s diagnostics sweep,
+    /// `all_done` and admission control skip whole-`recs` scans.
+    active: Vec<ReqId>,
+    active_pos: Vec<usize>,
+    /// Completed (or shed) request count — `all_done`/`n_done` in O(1).
+    done_count: usize,
+    /// Recycled iteration buffers (steady-state zero-allocation planning):
+    /// `spare_events` ping-pongs with `events` through `begin_iter` /
+    /// `IterCtx::finish_into`; `spare_plan` is handed out by
+    /// `IterCtx::take_plan` and returned via `recycle_plan`.
+    spare_events: Events,
+    spare_plan: BatchPlan,
 }
 
 impl World {
@@ -100,7 +115,9 @@ impl World {
             pred_ready.push(it.arrival + predictor.latency());
         }
         let mut future: Vec<ReqId> = (0..recs.len()).collect();
-        future.sort_by(|a, b| recs[*b].req.arrival.partial_cmp(&recs[*a].req.arrival).unwrap());
+        // NaN-safe total order (arrivals are finite in practice, but a
+        // poisoned trace must not panic the sort).
+        future.sort_by(|a, b| recs[*b].req.arrival.total_cmp(&recs[*a].req.arrival));
         let kvc = crate::kvc::by_name(
             "exact",
             cfg.kvc_tokens(),
@@ -108,6 +125,7 @@ impl World {
             cfg.reserve_tokens(),
         )
         .expect("default allocator");
+        let n = recs.len();
         World {
             cfg,
             clock: 0.0,
@@ -119,7 +137,45 @@ impl World {
             events: Events::default(),
             pred_ready,
             predictor,
+            active: Vec::with_capacity(n.min(4096)),
+            active_pos: vec![usize::MAX; n],
+            done_count: 0,
+            spare_events: Events::default(),
+            spare_plan: BatchPlan::default(),
         }
+    }
+
+    /// Add an arrived request to the active index (idempotent).
+    fn index_activate(&mut self, id: ReqId) {
+        if self.active_pos[id] == usize::MAX {
+            self.active_pos[id] = self.active.len();
+            self.active.push(id);
+        }
+    }
+
+    /// Remove a finished request from the active index (idempotent).
+    fn index_deactivate(&mut self, id: ReqId) {
+        let pos = self.active_pos[id];
+        if pos == usize::MAX {
+            return;
+        }
+        self.active_pos[id] = usize::MAX;
+        let last = self.active.pop().expect("active list empty with live pos");
+        if pos < self.active.len() {
+            self.active[pos] = last;
+            self.active_pos[last] = pos;
+        }
+    }
+
+    /// Arrived-and-unfinished request count (O(1)); the same in-flight
+    /// definition admission control uses.
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Arrived-and-unfinished request ids, in no particular order.
+    pub fn active_ids(&self) -> &[ReqId] {
+        &self.active
     }
 
     /// Swap in the KVC allocation policy by registry name (`max`, `block`,
@@ -153,9 +209,22 @@ impl World {
     /// Open the planning context for one iteration: consumes the previous
     /// iteration's events and exposes the typed scheduler contract.
     /// Usually called through `sched::plan_iteration`.
+    ///
+    /// The events buffer handed to the context is swapped against a spare
+    /// so that, once [`IterCtx::finish_into`] returns it, iteration N+1
+    /// reuses iteration N's vector capacity (zero-allocation steady
+    /// state).
     pub fn begin_iter(&mut self) -> IterCtx<'_> {
-        let events = std::mem::take(&mut self.events);
+        let spare = std::mem::take(&mut self.spare_events);
+        let events = std::mem::replace(&mut self.events, spare);
         IterCtx { w: self, events, preempted: Vec::new(), evicted: Vec::new() }
+    }
+
+    /// Return an executed plan's buffers for reuse by the next
+    /// [`IterCtx::take_plan`]. Optional: drivers that drop plans instead
+    /// just allocate fresh ones.
+    pub fn recycle_plan(&mut self, plan: BatchPlan) {
+        self.spare_plan = plan;
     }
 
     /// Re-predict the REMAINING response length of an under-provisioned
@@ -180,6 +249,7 @@ impl World {
             if self.recs[id].req.arrival <= self.clock {
                 self.future.pop();
                 self.inbox.push_back(id);
+                self.index_activate(id);
                 n += 1;
             } else {
                 break;
@@ -204,16 +274,18 @@ impl World {
             "reject() is only valid before any service"
         );
         rec.phase = Phase::Done;
+        self.done_count += 1;
+        self.index_deactivate(id);
     }
 
+    /// O(1): every request has arrived and completed (or was shed).
     pub fn all_done(&self) -> bool {
-        self.future.is_empty()
-            && self.inbox.is_empty()
-            && self.recs.iter().all(|r| r.is_done())
+        self.done_count == self.recs.len()
     }
 
+    /// O(1) count of completed (or shed) requests.
     pub fn n_done(&self) -> usize {
-        self.recs.iter().filter(|r| r.is_done()).count()
+        self.done_count
     }
 
     // ------------------------------------------------------------------
@@ -394,13 +466,16 @@ impl World {
         let completed_count = self.events.completed.len();
         self.clock = end;
         // Sparse allocation-breakdown sampling (diagnostics for the KVC
-        // economy; cheap: every 32nd iteration).
+        // economy; cheap: every 32nd iteration, over the ACTIVE index
+        // only — future and completed requests hold no KVC and were
+        // always skipped by the phase match).
         if self.col.iterations % 32 == 0 {
             let cap = self.kvc.capacity_tokens() as f64;
             let mut run_w = 0u64;
             let mut run_a = 0u64;
             let mut wait_h = 0u64;
-            for rec in &self.recs {
+            for &id in &self.active {
+                let rec = &self.recs[id];
                 let alloc = self.kvc.allocated(rec.req.id) as u64;
                 let written = self.kvc.written(rec.req.id) as u64;
                 match rec.phase {
@@ -476,6 +551,8 @@ impl World {
         rec.phase = Phase::Done;
         rec.done_at = Some(at);
         rec.kvc_held = 0;
+        self.done_count += 1;
+        self.index_deactivate(id);
         self.events.completed.push(id);
     }
 
@@ -635,10 +712,22 @@ impl IterCtx<'_> {
         &mut self.w.col
     }
 
-    /// Fold the recorded preemptions/evictions into the finished plan.
-    pub fn finish_into(self, plan: &mut BatchPlan) {
-        plan.preempted.extend(self.preempted);
-        plan.evicted.extend(self.evicted);
+    /// A cleared [`BatchPlan`] recycled from the previous iteration
+    /// (capacity preserved). Schedulers should start from this instead of
+    /// `BatchPlan::default()` so steady-state planning allocates nothing.
+    pub fn take_plan(&mut self) -> BatchPlan {
+        let mut plan = std::mem::take(&mut self.w.spare_plan);
+        plan.clear();
+        plan
+    }
+
+    /// Fold the recorded preemptions/evictions into the finished plan and
+    /// hand the (now consumed) events buffer back to the world for reuse.
+    pub fn finish_into(mut self, plan: &mut BatchPlan) {
+        plan.preempted.extend(self.preempted.drain(..));
+        plan.evicted.extend(self.evicted.drain(..));
+        self.events.clear();
+        self.w.spare_events = std::mem::take(&mut self.events);
     }
 }
 

@@ -22,8 +22,6 @@
 //! collector, so allocation behaviour is observable per iteration for
 //! every scheduler × allocator combination.
 
-use std::collections::HashMap;
-
 use super::pipeline::PipeRegistry;
 use super::{AllocError, BlockPool, ReserveClass};
 use crate::core::{ReqId, ReqRec};
@@ -547,14 +545,34 @@ impl Allocator for ExactAlloc {
 pub struct Pipelined<A> {
     inner: A,
     pipes: PipeRegistry,
-    /// Borrowed-space written tokens per guest (survives slot detach until
-    /// the guest is adopted or dropped).
-    guest_written: HashMap<ReqId, u32>,
+    /// Borrowed-space written tokens per guest, as a dense slab keyed by
+    /// `ReqId` (survives slot detach until the guest is adopted or
+    /// dropped). 0 == no borrowed tokens.
+    guest_written: Vec<u32>,
+    /// Σ guest-written tokens, maintained incrementally so
+    /// `total_written` stays O(1).
+    guest_written_total: u64,
 }
 
 impl<A: Allocator> Pipelined<A> {
     pub fn new(inner: A) -> Self {
-        Pipelined { inner, pipes: PipeRegistry::new(), guest_written: HashMap::new() }
+        Pipelined {
+            inner,
+            pipes: PipeRegistry::new(),
+            guest_written: Vec::new(),
+            guest_written_total: 0,
+        }
+    }
+
+    /// Take (zero out) `id`'s guest-written counter, keeping the total in
+    /// sync.
+    fn take_guest_written(&mut self, id: ReqId) -> u32 {
+        let w = self.guest_written.get(id).copied().unwrap_or(0);
+        if w > 0 {
+            self.guest_written[id] = 0;
+            self.guest_written_total -= w as u64;
+        }
+        w
     }
 
     fn frontier(&self, host: ReqId, span: u32) -> u32 {
@@ -591,7 +609,10 @@ impl<A: Allocator> Allocator for Pipelined<A> {
 
     fn record_write(&mut self, id: ReqId, n: u32) {
         if let Some(slot) = self.pipes.host_of(id) {
-            let written = self.guest_written.entry(id).or_insert(0);
+            if id >= self.guest_written.len() {
+                self.guest_written.resize(id + 1, 0);
+            }
+            let written = &mut self.guest_written[id];
             assert!(
                 *written + n <= slot.len,
                 "pipelined guest {id} overflow: {} + {n} > slot len {}",
@@ -599,6 +620,7 @@ impl<A: Allocator> Allocator for Pipelined<A> {
                 slot.len
             );
             *written += n;
+            self.guest_written_total += n as u64;
         } else {
             self.inner.record_write(id, n);
         }
@@ -607,7 +629,7 @@ impl<A: Allocator> Allocator for Pipelined<A> {
     fn release(&mut self, id: ReqId) -> Released {
         // Drop this request's own guest role, then orphan its guests.
         self.pipes.release_guest(id);
-        let guest_written = self.guest_written.remove(&id).unwrap_or(0);
+        let guest_written = self.take_guest_written(id);
         let orphans = self.pipes.remove_host(id);
         let mut rel = self.inner.release(id);
         rel.guest_written += guest_written;
@@ -620,7 +642,7 @@ impl<A: Allocator> Allocator for Pipelined<A> {
     }
 
     fn guest_written(&self, id: ReqId) -> u32 {
-        self.guest_written.get(&id).copied().unwrap_or(0)
+        self.guest_written.get(id).copied().unwrap_or(0)
     }
 
     fn guest_count(&self) -> usize {
@@ -663,7 +685,7 @@ impl<A: Allocator> Allocator for Pipelined<A> {
 
     fn drop_guest(&mut self, id: ReqId) -> u32 {
         self.pipes.release_guest(id);
-        self.guest_written.remove(&id).unwrap_or(0)
+        self.take_guest_written(id)
     }
 
     fn adopt(&mut self, id: ReqId, extra: u32) -> AllocOutcome {
@@ -672,7 +694,7 @@ impl<A: Allocator> Allocator for Pipelined<A> {
                 // Usually already detached via detach_host; drop any slot
                 // still registered so writes stop routing to guest space.
                 self.pipes.release_guest(id);
-                let moved = self.guest_written.remove(&id).unwrap_or(0);
+                let moved = self.take_guest_written(id);
                 if moved > 0 {
                     // Modelled as a block copy into the new lease
                     // (cudaMemcpyAsync overlap in the real system).
@@ -685,17 +707,22 @@ impl<A: Allocator> Allocator for Pipelined<A> {
     }
 
     fn total_written(&self) -> u64 {
-        self.inner.total_written() + self.guest_written.values().map(|w| *w as u64).sum::<u64>()
+        self.inner.total_written() + self.guest_written_total
     }
 
     fn check_invariants(&self) {
         self.inner.check_invariants();
         self.pipes.check_invariants();
-        for (g, w) in &self.guest_written {
-            if let Some(slot) = self.pipes.host_of(*g) {
-                assert!(*w <= slot.len, "guest {g} wrote past its slot");
+        let mut sum = 0u64;
+        for (g, w) in self.guest_written.iter().enumerate() {
+            sum += *w as u64;
+            if *w > 0 {
+                if let Some(slot) = self.pipes.host_of(g) {
+                    assert!(*w <= slot.len, "guest {g} wrote past its slot");
+                }
             }
         }
+        assert_eq!(sum, self.guest_written_total, "guest-written counter drift");
     }
 
     fn host_at(&mut self, guest: ReqId, host: ReqId, offset: u32, len: u32) {

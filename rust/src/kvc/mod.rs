@@ -26,8 +26,6 @@ pub use alloc::{
     Allocator, BlockAlloc, Demand, ExactAlloc, Lease, MaxAlloc, Pipelined, PoolCore, Released,
 };
 
-use std::collections::HashMap;
-
 use crate::core::ReqId;
 
 /// Why an allocation request could not be satisfied.
@@ -76,7 +74,17 @@ pub(crate) struct BlockPool {
     /// allocations cannot dip below this many free blocks; reserved
     /// allocations can.
     reserved_blocks: u32,
-    allocs: HashMap<ReqId, Alloc>,
+    /// Dense per-request slab keyed by `ReqId` (request ids are small
+    /// integers — trace index in the sim, slot id on the real path), so
+    /// every allocator op is a direct index instead of a hash lookup.
+    allocs: Vec<Option<Alloc>>,
+    /// Live lease count (slots with `Some`), so emptiness checks and
+    /// invariant sweeps don't scan the slab.
+    live: usize,
+    /// Σ written tokens over live leases, maintained incrementally so
+    /// `total_written` (the per-iteration KVC-utilization numerator) is
+    /// O(1) instead of a slab sweep.
+    written_total: u64,
     /// Cumulative counters for metrics.
     pub alloc_failures: u64,
     pub alloc_calls: u64,
@@ -86,17 +94,34 @@ impl BlockPool {
     pub fn new(capacity_tokens: u32, block_size: u32, reserve_tokens: u32) -> Self {
         assert!(block_size > 0);
         let total_blocks = capacity_tokens / block_size;
-        let reserved_blocks = (reserve_tokens + block_size - 1) / block_size;
+        let reserved_blocks = reserve_tokens.div_ceil(block_size);
         assert!(reserved_blocks <= total_blocks, "reservation exceeds capacity");
         BlockPool {
             block_size,
             total_blocks,
             free_blocks: total_blocks,
             reserved_blocks,
-            allocs: HashMap::new(),
+            allocs: Vec::new(),
+            live: 0,
+            written_total: 0,
             alloc_failures: 0,
             alloc_calls: 0,
         }
+    }
+
+    /// Ensure the slab has a (possibly fresh) record for `id`.
+    fn ensure_slot(&mut self, id: ReqId) {
+        if id >= self.allocs.len() {
+            self.allocs.resize_with(id + 1, || None);
+        }
+        if self.allocs[id].is_none() {
+            self.allocs[id] = Some(Alloc::default());
+            self.live += 1;
+        }
+    }
+
+    fn slot(&self, id: ReqId) -> Option<&Alloc> {
+        self.allocs.get(id).and_then(|a| a.as_ref())
     }
 
     pub fn block_size(&self) -> u32 {
@@ -121,7 +146,7 @@ impl BlockPool {
 
     /// Blocks needed to hold `tokens` tokens (round up).
     fn blocks_for(&self, tokens: u32) -> u32 {
-        (tokens + self.block_size - 1) / self.block_size
+        tokens.div_ceil(self.block_size)
     }
 
     /// Allocate capacity for `tokens` more tokens for `id` (cumulative:
@@ -135,18 +160,21 @@ impl BlockPool {
     ) -> Result<u32, AllocError> {
         self.alloc_calls += 1;
         let bs = self.block_size;
-        let entry = self.allocs.entry(id).or_default();
-        let capacity_now = entry.blocks * bs;
-        let needed_tokens = (entry.written + tokens).saturating_sub(capacity_now);
-        let needed = (needed_tokens + bs - 1) / bs;
         let available = match class {
             ReserveClass::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
             ReserveClass::Reserved => self.free_blocks,
         };
+        self.ensure_slot(id);
+        let (capacity_now, written) = {
+            let entry = self.allocs[id].as_ref().expect("slot ensured");
+            (entry.blocks * bs, entry.written)
+        };
+        let needed = (written + tokens).saturating_sub(capacity_now).div_ceil(bs);
         if needed > available {
             self.alloc_failures += 1;
             return Err(AllocError::OutOfBlocks { needed, free: available });
         }
+        let entry = self.allocs[id].as_mut().expect("slot ensured");
         entry.blocks += needed;
         entry.class = class;
         self.free_blocks -= needed;
@@ -163,20 +191,21 @@ impl BlockPool {
     ) -> Result<u32, AllocError> {
         self.alloc_calls += 1;
         let need_total = self.blocks_for(total_tokens);
-        let entry = self.allocs.entry(id).or_default();
-        let have = entry.blocks;
-        if need_total <= have {
-            return Ok(0);
-        }
-        let needed = need_total - have;
         let available = match class {
             ReserveClass::Normal => self.free_blocks.saturating_sub(self.reserved_blocks),
             ReserveClass::Reserved => self.free_blocks,
         };
+        self.ensure_slot(id);
+        let have = self.allocs[id].as_ref().expect("slot ensured").blocks;
+        if need_total <= have {
+            return Ok(0);
+        }
+        let needed = need_total - have;
         if needed > available {
             self.alloc_failures += 1;
             return Err(AllocError::OutOfBlocks { needed, free: available });
         }
+        let entry = self.allocs[id].as_mut().expect("slot ensured");
         entry.blocks += needed;
         entry.class = class;
         self.free_blocks -= needed;
@@ -188,7 +217,11 @@ impl BlockPool {
     /// the invariant the property tests drive.
     pub fn write_tokens(&mut self, id: ReqId, n: u32) {
         let bs = self.block_size;
-        let entry = self.allocs.get_mut(&id).expect("write to unallocated request");
+        let entry = self
+            .allocs
+            .get_mut(id)
+            .and_then(|a| a.as_mut())
+            .expect("write to unallocated request");
         assert!(
             entry.written + n <= entry.blocks * bs,
             "KVC overflow for req {id}: written {} + {n} > capacity {}",
@@ -196,25 +229,33 @@ impl BlockPool {
             entry.blocks * bs,
         );
         entry.written += n;
+        self.written_total += n as u64;
     }
 
     /// Restore `n` written tokens after a swap-in (the KV data returned
     /// from CPU memory). Requires capacity to already be allocated.
     pub fn restore_written(&mut self, id: ReqId, n: u32) {
         let bs = self.block_size;
-        let entry = self.allocs.get_mut(&id).expect("restore to unallocated request");
+        let entry = self
+            .allocs
+            .get_mut(id)
+            .and_then(|a| a.as_mut())
+            .expect("restore to unallocated request");
         assert!(
             entry.written + n <= entry.blocks * bs,
             "swap-in restore overflow for req {id}"
         );
         entry.written += n;
+        self.written_total += n as u64;
     }
 
     /// Release `id`'s whole allocation, returning (blocks, written tokens).
     pub fn release(&mut self, id: ReqId) -> (u32, u32) {
-        match self.allocs.remove(&id) {
+        match self.allocs.get_mut(id).and_then(|a| a.take()) {
             Some(a) => {
+                self.live -= 1;
                 self.free_blocks += a.blocks;
+                self.written_total -= a.written as u64;
                 debug_assert!(self.free_blocks <= self.total_blocks);
                 (a.blocks, a.written)
             }
@@ -226,11 +267,11 @@ impl BlockPool {
     /// when a time-synced group returns and over-provisioned space is
     /// reclaimed). Returns the blocks freed.
     pub fn trim_to_written(&mut self, id: ReqId) -> u32 {
-        let need = match self.allocs.get(&id) {
+        let need = match self.slot(id) {
             Some(entry) => self.blocks_for(entry.written),
             None => return 0,
         };
-        let entry = self.allocs.get_mut(&id).expect("checked above");
+        let entry = self.allocs[id].as_mut().expect("checked above");
         let excess = entry.blocks.saturating_sub(need);
         entry.blocks -= excess;
         self.free_blocks += excess;
@@ -238,21 +279,22 @@ impl BlockPool {
     }
 
     pub fn alloc_of(&self, id: ReqId) -> Option<&Alloc> {
-        self.allocs.get(&id)
+        self.slot(id)
     }
 
     pub fn allocated_tokens(&self, id: ReqId) -> u32 {
-        self.allocs.get(&id).map(|a| a.blocks * self.block_size).unwrap_or(0)
+        self.slot(id).map(|a| a.blocks * self.block_size).unwrap_or(0)
     }
 
     pub fn written_tokens(&self, id: ReqId) -> u32 {
-        self.allocs.get(&id).map(|a| a.written).unwrap_or(0)
+        self.slot(id).map(|a| a.written).unwrap_or(0)
     }
 
     /// Total tokens written across all live requests (own allocations —
-    /// pipelined guest writes are accounted by [`Pipelined`]).
+    /// pipelined guest writes are accounted by [`Pipelined`]). O(1): the
+    /// counter is maintained by write/restore/release.
     pub fn total_written(&self) -> u64 {
-        self.allocs.values().map(|a| a.written as u64).sum()
+        self.written_total
     }
 
     /// Total allocated capacity in tokens (Σ blocks × block_size).
@@ -262,14 +304,22 @@ impl BlockPool {
 
     /// Internal consistency check (used by tests and debug assertions).
     pub fn check_invariants(&self) {
-        let owned: u32 = self.allocs.values().map(|a| a.blocks).sum();
-        assert_eq!(owned + self.free_blocks, self.total_blocks, "block accounting leak");
-        for (id, a) in &self.allocs {
+        let mut owned = 0u32;
+        let mut written = 0u64;
+        let mut live = 0usize;
+        for (id, a) in self.allocs.iter().enumerate() {
+            let Some(a) = a else { continue };
+            live += 1;
+            owned += a.blocks;
+            written += a.written as u64;
             assert!(
                 a.written <= a.blocks * self.block_size,
                 "req {id} wrote past its allocation"
             );
         }
+        assert_eq!(owned + self.free_blocks, self.total_blocks, "block accounting leak");
+        assert_eq!(written, self.written_total, "written-token counter drift");
+        assert_eq!(live, self.live, "live-lease counter drift");
     }
 }
 

@@ -14,8 +14,6 @@
 //! start offset must be **evicted** (preempted; copy-on-write to host
 //! memory per the paper).
 
-use std::collections::HashMap;
-
 use crate::core::ReqId;
 
 /// A guest's placement inside its host's span.
@@ -70,11 +68,15 @@ pub fn candidate_slots(span_len: u32, min_len: u32, max_depth: u32) -> Vec<Slot>
     out
 }
 
-/// Host/guest relationship tracker.
+/// Host/guest relationship tracker. Both maps are dense slabs keyed by
+/// `ReqId`, so every lookup on the per-iteration overrun/write paths is a
+/// direct index (guest counts are small; slab slots are tiny).
 #[derive(Debug, Default, Clone)]
 pub struct PipeRegistry {
-    guests_by_host: HashMap<ReqId, Vec<ReqId>>,
-    slot_of: HashMap<ReqId, HostSlot>,
+    guests_by_host: Vec<Vec<ReqId>>,
+    slot_of: Vec<Option<HostSlot>>,
+    /// Live guest count (`slot_of` entries that are `Some`).
+    n_guests: usize,
     /// Cumulative eviction count (under-predicted guests) for metrics.
     pub evictions: u64,
 }
@@ -88,35 +90,40 @@ impl PipeRegistry {
     /// Panics if the guest already has a slot (one host per guest).
     pub fn add_guest(&mut self, guest: ReqId, host: ReqId, offset: u32, len: u32) {
         assert!(guest != host, "request cannot host itself");
-        let prev = self.slot_of.insert(guest, HostSlot { host, offset, len });
+        if guest >= self.slot_of.len() {
+            self.slot_of.resize(guest + 1, None);
+        }
+        let prev = self.slot_of[guest].replace(HostSlot { host, offset, len });
         assert!(prev.is_none(), "guest {guest} already hosted");
-        self.guests_by_host.entry(host).or_default().push(guest);
+        self.n_guests += 1;
+        if host >= self.guests_by_host.len() {
+            self.guests_by_host.resize_with(host + 1, Vec::new);
+        }
+        self.guests_by_host[host].push(guest);
     }
 
     pub fn host_of(&self, guest: ReqId) -> Option<HostSlot> {
-        self.slot_of.get(&guest).copied()
+        self.slot_of.get(guest).copied().flatten()
     }
 
     pub fn guests_of(&self, host: ReqId) -> &[ReqId] {
-        self.guests_by_host.get(&host).map(|v| v.as_slice()).unwrap_or(&[])
+        self.guests_by_host.get(host).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn is_guest(&self, id: ReqId) -> bool {
-        self.slot_of.contains_key(&id)
+        self.host_of(id).is_some()
     }
 
     pub fn guest_count(&self) -> usize {
-        self.slot_of.len()
+        self.n_guests
     }
 
     /// Remove a guest (it completed or was evicted). Returns its slot.
     pub fn release_guest(&mut self, guest: ReqId) -> Option<HostSlot> {
-        let slot = self.slot_of.remove(&guest)?;
-        if let Some(v) = self.guests_by_host.get_mut(&slot.host) {
+        let slot = self.slot_of.get_mut(guest).and_then(|s| s.take())?;
+        self.n_guests -= 1;
+        if let Some(v) = self.guests_by_host.get_mut(slot.host) {
             v.retain(|g| *g != guest);
-            if v.is_empty() {
-                self.guests_by_host.remove(&slot.host);
-            }
         }
         Some(slot)
     }
@@ -130,7 +137,7 @@ impl PipeRegistry {
             .iter()
             .copied()
             .filter(|g| {
-                let s = self.slot_of[g];
+                let s = self.slot_of[*g].expect("host list out of sync");
                 head > s.offset
             })
             .collect()
@@ -140,26 +147,38 @@ impl PipeRegistry {
     /// return all its DIRECT guests. Transitive guests keep their (now
     /// dangling) hosts — callers cascade by calling this per released host.
     pub fn remove_host(&mut self, host: ReqId) -> Vec<ReqId> {
-        let guests = self.guests_by_host.remove(&host).unwrap_or_default();
+        let guests = match self.guests_by_host.get_mut(host) {
+            Some(v) => std::mem::take(v),
+            None => return Vec::new(),
+        };
         for g in &guests {
-            self.slot_of.remove(g);
+            if self.slot_of[*g].take().is_some() {
+                self.n_guests -= 1;
+            }
         }
         guests
     }
 
     /// Internal consistency (for tests): every slot's host lists it back.
     pub fn check_invariants(&self) {
-        for (guest, slot) in &self.slot_of {
+        let mut live = 0usize;
+        for (guest, slot) in self.slot_of.iter().enumerate() {
+            let Some(slot) = slot else { continue };
+            live += 1;
             assert!(
-                self.guests_by_host.get(&slot.host).map(|v| v.contains(guest)).unwrap_or(false),
+                self.guests_by_host
+                    .get(slot.host)
+                    .map(|v| v.contains(&guest))
+                    .unwrap_or(false),
                 "guest {guest} not in host {} list",
                 slot.host
             );
             assert!(slot.len > 0);
         }
-        for (host, guests) in &self.guests_by_host {
+        assert_eq!(live, self.n_guests, "guest counter drift");
+        for (host, guests) in self.guests_by_host.iter().enumerate() {
             for g in guests {
-                assert_eq!(self.slot_of[g].host, *host);
+                assert_eq!(self.slot_of[*g].expect("dangling guest").host, host);
             }
         }
     }

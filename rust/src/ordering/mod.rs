@@ -13,15 +13,25 @@
 //!
 //! The policy is engine-agnostic: [`QueuePolicy`] computes the same
 //! composite key from a [`QueuedTask`] view, so the simulation scheduler
-//! (via [`order_key`]/[`sort_pts`]/[`sort_gts`]) and the real PJRT
-//! serving path ([`crate::server`]) share ONE EconoServe ordering
-//! implementation. The real path selects a policy by name
-//! (`QueuePolicy::by_name`), mirroring `crate::sched::by_name`.
+//! (via [`order_key`]/[`BucketQueue`]) and the real PJRT serving path
+//! ([`crate::server`]) share ONE EconoServe ordering implementation. The
+//! real path selects a policy by name (`QueuePolicy::by_name`),
+//! mirroring `crate::sched::by_name`.
+//!
+//! Because every factor of the key is **bucketed** (priority class ×
+//! deadline bucket × occupied-KVC bucket) with only the length factor
+//! dense, the queue does not need a per-iteration re-sort:
+//! [`BucketQueue`] keeps tasks in an incremental bucket structure with
+//! O(log n) push/pop/remove and re-buckets a task only when one of its
+//! key inputs actually changes — deadline-bucket transitions fire from a
+//! time calendar (slack only ever shrinks), occupancy/length changes are
+//! reported by the scheduler when its events change them.
 
 use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::core::world::World;
-use crate::core::ReqId;
+use crate::core::{ReqId, Time};
 
 /// Composite sort key: smaller = higher priority. Descending factors use
 /// [`Reverse`] so the intent is visible in the type rather than hidden in
@@ -141,18 +151,6 @@ pub fn order_key(world: &World, id: ReqId, len: u32) -> OrderKey {
     })
 }
 
-/// Sort `ids` in scheduling-priority order (stable, deterministic).
-pub fn sort_pts(world: &World, ids: &mut [ReqId]) {
-    ids.sort_by_key(|&id| {
-        let len = world.recs[id].req.prompt_len - world.recs[id].prompt_done;
-        order_key(world, id, len)
-    });
-}
-
-pub fn sort_gts(world: &World, ids: &mut [ReqId]) {
-    ids.sort_by_key(|&id| order_key(world, id, world.recs[id].predicted_remaining()));
-}
-
 /// Binary search over a **descending-length-sorted** slice of (len, idx)
 /// pairs: the first entry with `len <= cap` (i.e. the largest that fits).
 /// Returns the position in `pairs`, or None if nothing fits.
@@ -174,6 +172,306 @@ pub fn best_fit_leq(pairs: &[(u32, usize)], cap: u32) -> Option<usize> {
         Some(lo)
     } else {
         None
+    }
+}
+
+// ---------------------------------------------------------------------
+// Incremental bucket queue
+// ---------------------------------------------------------------------
+
+/// Next representable f64 strictly greater than `x` (finite `x`).
+fn bump(x: f64) -> f64 {
+    if x.is_nan() {
+        return x;
+    }
+    if x == 0.0 {
+        return f64::from_bits(1); // smallest positive subnormal
+    }
+    let bits = x.to_bits();
+    if x > 0.0 {
+        f64::from_bits(bits + 1)
+    } else {
+        f64::from_bits(bits - 1)
+    }
+}
+
+/// Calendar entry: re-examine `id`'s deadline bucket at time `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Trigger {
+    at: Time,
+    id: ReqId,
+}
+
+impl Eq for Trigger {}
+
+impl PartialOrd for Trigger {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Trigger {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at.total_cmp(&other.at).then(self.id.cmp(&other.id))
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    key: OrderKey,
+    deadline: Time,
+    priority: u8,
+    occupied_kvc: u32,
+    len: u32,
+}
+
+/// Incremental priority queue over the §3.4 bucketed [`OrderKey`].
+///
+/// Invariant: after `refresh(clock)` every queued task sits under its
+/// *canonical* key at `clock` — the exact key a linear scan with
+/// [`order_key`] would compute. Between refreshes only the
+/// deadline-bucket factor can go stale, and only toward laxer-than-true;
+/// `refresh` migrates those tasks from a time calendar (a task's slack
+/// only shrinks, so it crosses each bucket edge once). All mutators that
+/// read order (`pop_first`, `peek_first`, `best_fit_leq`) refresh first.
+///
+/// Complexity: `push`/`remove`/`update` O(log n); `pop_first` O(log n);
+/// `best_fit_leq` O(buckets · log n) worst case; calendar migrations are
+/// amortized ≤ 2 per task lifetime. No per-iteration re-sort anywhere.
+#[derive(Debug, Clone, Default)]
+pub struct BucketQueue {
+    policy: Option<QueuePolicy>,
+    /// Flat bucket structure: the composite key IS the bucket path
+    /// (priority → deadline bucket → occupied-KVC bucket → length →
+    /// deterministic tie), so a BTreeMap range scan walks buckets in
+    /// priority order and serves best-fit length queries per bucket.
+    queue: BTreeMap<OrderKey, ReqId>,
+    entries: Vec<Option<Entry>>,
+    /// Deadline-bucket transition calendar (min-heap on time).
+    calendar: BinaryHeap<Reverse<Trigger>>,
+    count: usize,
+}
+
+impl BucketQueue {
+    pub fn new(policy: QueuePolicy) -> Self {
+        BucketQueue { policy: Some(policy), ..Default::default() }
+    }
+
+    fn policy(&self) -> QueuePolicy {
+        self.policy.unwrap_or(QueuePolicy::EconoServe)
+    }
+
+    fn canonical_key(&self, e: &Entry, clock: Time) -> OrderKey {
+        self.policy().key(&QueuedTask {
+            seq: e.key.tie,
+            priority: e.priority,
+            slack: e.deadline - clock,
+            occupied_kvc: e.occupied_kvc,
+            len: e.len,
+        })
+    }
+
+    /// Arm the calendar for `id`'s next deadline-bucket edge (slack
+    /// thresholds 2.0 s and 0.5 s), if any remain.
+    fn arm(&mut self, id: ReqId, deadline: Time, db: u8) {
+        if self.policy() != QueuePolicy::EconoServe {
+            return; // FCFS keys have no time-varying factor
+        }
+        let threshold = match db {
+            2 => deadline - 2.0,
+            1 => deadline - 0.5,
+            _ => return,
+        };
+        self.calendar.push(Reverse(Trigger { at: threshold, id }));
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn contains(&self, id: ReqId) -> bool {
+        self.entries.get(id).map(|e| e.is_some()).unwrap_or(false)
+    }
+
+    /// Current key of a queued task (exact after a refresh at the same
+    /// clock).
+    pub fn key_of(&self, id: ReqId) -> Option<OrderKey> {
+        self.entries.get(id).and_then(|e| e.as_ref()).map(|e| e.key)
+    }
+
+    /// Enqueue `id`. `deadline` is the absolute JCT deadline; the tie
+    /// factor is the id itself, matching [`order_key`]'s deterministic
+    /// tie-break. Must not already be queued.
+    pub fn push(
+        &mut self,
+        id: ReqId,
+        priority: u8,
+        deadline: Time,
+        occupied_kvc: u32,
+        len: u32,
+        clock: Time,
+    ) {
+        if id >= self.entries.len() {
+            self.entries.resize(id + 1, None);
+        }
+        assert!(self.entries[id].is_none(), "BucketQueue: duplicate push of {id}");
+        let mut e = Entry {
+            key: OrderKey {
+                priority,
+                deadline_bucket: 0,
+                kvc_bucket: Reverse(0),
+                len: Reverse(0),
+                tie: id as u64,
+            },
+            deadline,
+            priority,
+            occupied_kvc,
+            len,
+        };
+        e.key = self.canonical_key(&e, clock);
+        let prev = self.queue.insert(e.key, id);
+        debug_assert!(prev.is_none(), "BucketQueue: key collision");
+        let db = e.key.deadline_bucket;
+        self.entries[id] = Some(e);
+        self.count += 1;
+        self.arm(id, deadline, db);
+    }
+
+    /// Dequeue `id` if queued; returns whether it was. Stale calendar
+    /// triggers are skipped lazily.
+    pub fn remove(&mut self, id: ReqId) -> bool {
+        match self.entries.get_mut(id).and_then(|e| e.take()) {
+            Some(e) => {
+                let removed = self.queue.remove(&e.key);
+                debug_assert_eq!(removed, Some(id), "BucketQueue: map out of sync");
+                self.count -= 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Re-key `id` after its occupied-KVC or length input changed (the
+    /// event-driven re-bucketing path).
+    pub fn update(&mut self, id: ReqId, occupied_kvc: u32, len: u32, clock: Time) {
+        let Some(slot) = self.entries.get_mut(id) else { return };
+        let Some(e) = slot.as_mut() else { return };
+        let old_key = e.key;
+        e.occupied_kvc = occupied_kvc;
+        e.len = len;
+        let new = *e;
+        let new_key = self.canonical_key(&new, clock);
+        if new_key != old_key {
+            self.queue.remove(&old_key);
+            self.queue.insert(new_key, id);
+            let (deadline, db) = {
+                let e = self.entries[id].as_mut().expect("entry just seen");
+                e.key = new_key;
+                (e.deadline, new_key.deadline_bucket)
+            };
+            if db > old_key.deadline_bucket {
+                // Clock regression (tests only): existing triggers lapsed.
+                self.arm(id, deadline, db);
+            }
+        }
+    }
+
+    /// Migrate every task whose deadline bucket has tightened by `clock`.
+    /// After this, stored keys are canonical at `clock`.
+    pub fn refresh(&mut self, clock: Time) {
+        while let Some(&Reverse(t)) = self.calendar.peek() {
+            if t.at > clock {
+                break;
+            }
+            self.calendar.pop();
+            let Some(e) = self.entries.get(t.id).copied().flatten() else {
+                continue; // stale: task left the queue
+            };
+            let canonical = self.canonical_key(&e, clock);
+            if canonical == e.key {
+                // Stale or ulp-early trigger: re-arm at the entry's real
+                // next edge if it is still ahead, else one float past
+                // `clock` (the flip is provably later than `clock`).
+                let next = match e.key.deadline_bucket {
+                    2 => e.deadline - 2.0,
+                    1 => e.deadline - 0.5,
+                    _ => continue,
+                };
+                let at = if next > clock { next } else { bump(clock.max(t.at)) };
+                self.calendar.push(Reverse(Trigger { at, id: t.id }));
+                continue;
+            }
+            self.queue.remove(&e.key);
+            self.queue.insert(canonical, t.id);
+            let slot = self.entries[t.id].as_mut().expect("entry just seen");
+            slot.key = canonical;
+            self.arm(t.id, e.deadline, canonical.deadline_bucket);
+        }
+    }
+
+    /// Highest-priority task (smallest canonical key at `clock`), without
+    /// removing it.
+    pub fn peek_first(&mut self, clock: Time) -> Option<ReqId> {
+        self.refresh(clock);
+        self.queue.first_key_value().map(|(_, &id)| id)
+    }
+
+    /// Pop the highest-priority task.
+    pub fn pop_first(&mut self, clock: Time) -> Option<ReqId> {
+        self.refresh(clock);
+        let (key, id) = self.queue.pop_first()?;
+        let e = self.entries[id].take().expect("queue/entries out of sync");
+        debug_assert_eq!(e.key, key);
+        self.count -= 1;
+        Some(id)
+    }
+
+    /// Best-fit pop source (§3.4 gap filling): within the most urgent
+    /// non-empty (priority, deadline, KVC) bucket, the LONGEST task with
+    /// `len <= cap`; falls through to later buckets when nothing fits.
+    /// Returns the id without removing it.
+    ///
+    /// Equivalent to the minimum canonical key over all queued tasks with
+    /// `len <= cap` — O(buckets · log n) under EconoServe (the key's
+    /// length factor is the true length, so range queries serve it);
+    /// O(n) under FCFS, whose keys zero the length factor.
+    pub fn best_fit_leq(&mut self, cap: u32, clock: Time) -> Option<ReqId> {
+        self.refresh(clock);
+        if self.policy() != QueuePolicy::EconoServe {
+            // FCFS keys carry no length factor: first task in key
+            // (submission) order whose TRUE length fits.
+            return self
+                .queue
+                .values()
+                .copied()
+                .find(|&id| self.entries[id].map(|e| e.len).unwrap_or(0) <= cap);
+        }
+        let mut probe = *self.queue.first_key_value()?.0;
+        loop {
+            let start = OrderKey {
+                priority: probe.priority,
+                deadline_bucket: probe.deadline_bucket,
+                kvc_bucket: probe.kvc_bucket,
+                len: Reverse(cap),
+                tie: 0,
+            };
+            let (k, &id) = self.queue.range(start..).next()?;
+            if (k.priority, k.deadline_bucket, k.kvc_bucket)
+                == (probe.priority, probe.deadline_bucket, probe.kvc_bucket)
+            {
+                return Some(id);
+            }
+            probe = *k; // jumped into a later bucket; retry there
+        }
+    }
+
+    /// Queued ids in current key order (diagnostics/tests).
+    pub fn iter_ids(&self) -> impl Iterator<Item = ReqId> + '_ {
+        self.queue.values().copied()
     }
 }
 
@@ -199,6 +497,23 @@ mod tests {
         assert_eq!(deadline_bucket(-3.0), 0); // overdue = most urgent
     }
 
+    /// Push every id into an EconoServe [`BucketQueue`] with its current
+    /// world-state inputs, then drain it — the incremental replacement
+    /// for the old `sort_pts` full sort.
+    fn drain_order(w: &World, ids: &[usize]) -> Vec<usize> {
+        let mut q = BucketQueue::new(QueuePolicy::EconoServe);
+        for &id in ids {
+            let rec = &w.recs[id];
+            let len = rec.req.prompt_len - rec.prompt_done;
+            q.push(id, 0, rec.req.deadline, w.occupied_kvc(id), len, w.clock);
+        }
+        let mut out = Vec::new();
+        while let Some(id) = q.pop_first(w.clock) {
+            out.push(id);
+        }
+        out
+    }
+
     #[test]
     fn urgent_tasks_first_then_big_kvc_then_long() {
         let mut w = world(&[
@@ -210,8 +525,7 @@ mod tests {
         w.recs[0].req.deadline = w.clock + 100.0;
         w.recs[1].req.deadline = w.clock + 100.0;
         w.recs[2].req.deadline = w.clock + 0.1;
-        let mut ids = vec![0, 1, 2];
-        sort_pts(&w, &mut ids);
+        let ids = drain_order(&w, &[0, 1, 2]);
         assert_eq!(ids[0], 2, "urgent first");
         assert_eq!(ids[1], 0, "then longest prompt");
         assert_eq!(ids[2], 1);
@@ -231,9 +545,82 @@ mod tests {
         w.kvc_mut().record_write(1, 600);
         w.recs[0].req.deadline = w.clock + 100.0;
         w.recs[1].req.deadline = w.clock + 100.0;
-        let mut ids = vec![0, 1];
-        sort_pts(&w, &mut ids);
+        let ids = drain_order(&w, &[0, 1]);
         assert_eq!(ids[0], 1, "bigger KVC holder first despite shorter prompt");
+    }
+
+    #[test]
+    fn bucket_queue_migrates_across_deadline_edges() {
+        // Task 0 enters lax (slack 10 -> bucket 2) behind mid-bucket
+        // task 1 (slack 1.5 -> bucket 1). As the clock erodes both into
+        // bucket 0, the longer task 0 must take the lead — purely through
+        // calendar migration, with no re-push from the caller.
+        let mut q = BucketQueue::new(QueuePolicy::EconoServe);
+        q.push(0, 0, 10.0, 0, 50, 0.0);
+        q.push(1, 0, 1.5, 0, 10, 0.0);
+        assert_eq!(q.peek_first(0.0), Some(1), "tighter deadline bucket leads");
+        assert_eq!(q.peek_first(9.7), Some(0), "same bucket now: longer task leads");
+        assert_eq!(q.pop_first(9.7), Some(0));
+        assert_eq!(q.pop_first(9.7), Some(1));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bucket_queue_matches_linear_scan_as_time_passes() {
+        // Canonical-key equivalence: at every probe clock the queue head
+        // equals a linear min-scan over the same QueuedTask inputs.
+        let deadlines = [0.4, 0.9, 1.6, 2.4, 3.0, 5.0, 9.5];
+        let mut q = BucketQueue::new(QueuePolicy::EconoServe);
+        for (id, &d) in deadlines.iter().enumerate() {
+            q.push(id, 0, d, (id as u32 % 3) * 300, 10 + id as u32, 0.0);
+        }
+        let mut clock = 0.0;
+        while clock < 10.0 {
+            let want = (0..deadlines.len())
+                .min_by_key(|&id| {
+                    QueuePolicy::EconoServe.key(&QueuedTask {
+                        seq: id as u64,
+                        priority: 0,
+                        slack: deadlines[id] - clock,
+                        occupied_kvc: (id as u32 % 3) * 300,
+                        len: 10 + id as u32,
+                    })
+                })
+                .unwrap();
+            assert_eq!(q.peek_first(clock), Some(want), "clock={clock}");
+            clock += 0.173;
+        }
+    }
+
+    #[test]
+    fn bucket_queue_best_fit_serves_longest_fitting() {
+        let mut q = BucketQueue::new(QueuePolicy::EconoServe);
+        // Same bucket (equal deadline class, no KVC): lens 512/256/64.
+        for (id, len) in [(0usize, 512u32), (1, 256), (2, 64)].iter().copied() {
+            q.push(id, 0, 100.0, 0, len, 0.0);
+        }
+        assert_eq!(q.best_fit_leq(1024, 0.0), Some(0));
+        assert_eq!(q.best_fit_leq(300, 0.0), Some(1));
+        assert_eq!(q.best_fit_leq(70, 0.0), Some(2));
+        assert_eq!(q.best_fit_leq(10, 0.0), None);
+        // remove + update re-bucketing.
+        assert!(q.remove(0));
+        q.update(1, 600, 256, 0.0); // big occupancy: now leads outright
+        assert_eq!(q.peek_first(0.0), Some(1));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn bucket_queue_fcfs_pops_in_id_order() {
+        let mut q = BucketQueue::new(QueuePolicy::Fcfs);
+        for id in [5usize, 2, 9, 4] {
+            q.push(id, 0, 1.0, 0, 10, 0.0);
+        }
+        let mut got = Vec::new();
+        while let Some(id) = q.pop_first(50.0) {
+            got.push(id);
+        }
+        assert_eq!(got, vec![2, 4, 5, 9], "FCFS = tie order, immune to deadlines");
     }
 
     fn task(seq: u64, slack: f64, len: u32) -> QueuedTask {

@@ -15,24 +15,33 @@
 //!    re-grouped at a re-predicted RL with their KV kept resident
 //!    (offload-free, Observation 4).
 //!  * **Ordering** (`ordering`, `-SDO`): both queues ordered by (deadline
-//!    bucket ↑, occupied KVC ↓, length ↓) with binary-search gap filling
-//!    (§3.4).
+//!    bucket ↑, occupied KVC ↓, length ↓). The PT queue is an
+//!    incremental [`BucketQueue`] (no per-iteration re-sort); GT group
+//!    selection is a best-fit range query on the RL-keyed group map —
+//!    §3.4's "binary search for the closest length" served directly from
+//!    the ordered structure.
 //!  * **KVC pipelining** (full system): handled on the *allocation axis* —
 //!    the scheduler offers every queued GT to running spans through the
 //!    allocator's lending API; under `pipelined-exact` (the full system's
 //!    default pairing) guests ride in a host's span for free, while the
 //!    plain `exact` allocator (the `-SDO` pairing) lends nothing, so the
 //!    ablation falls out of the registry rather than a scheduler flag.
+//!
+//! Hot-path contracts (see docs/API.md "Hot-path complexity contracts"):
+//! membership tests and removals on the running sets are O(1)
+//! ([`IndexedList`]), PT selection is O(log n) ([`BucketQueue`]), GT
+//! group choice is O(log groups), and the queued-GT KVC footprint used
+//! by the admission gate is maintained incrementally instead of being
+//! re-summed every iteration.
 
-use std::collections::BTreeMap;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, HashSet, VecDeque};
 
 use super::Scheduler;
 use crate::config::PreemptMode;
 use crate::core::world::IterCtx;
-use crate::core::{BatchPlan, BatchTask, Phase, ReqId};
+use crate::core::{BatchPlan, BatchTask, IndexedList, Phase, ReqId};
 use crate::kvc::{Allocator, Demand, ReserveClass};
-use crate::ordering::best_fit_leq;
+use crate::ordering::{BucketQueue, QueuePolicy};
 
 pub struct EconoServe {
     /// Registry label (the ablation rung; behaviour differences between
@@ -40,15 +49,26 @@ pub struct EconoServe {
     label: &'static str,
     synced: bool,
     ordering: bool,
-    /// Waiting PTs (not yet started prefilling).
-    pt_queue: Vec<ReqId>,
+    /// Waiting PTs (not yet started prefilling), bucket-ordered (§3.4) or
+    /// FCFS depending on the `ordering` flag.
+    pt_queue: BucketQueue,
     /// PTs currently prefilling (chunked), in admission order. Also holds
     /// preempted GTs doing KV recompute.
-    running_pts: VecDeque<ReqId>,
+    running_pts: IndexedList,
     /// Waiting GTs: predicted remaining RL -> FIFO queue.
     gt_groups: BTreeMap<u32, VecDeque<ReqId>>,
     /// GTs currently decoding (hosts and guests alike).
-    running_gts: Vec<ReqId>,
+    running_gts: IndexedList,
+    /// Arrival-ordered view of the queued GTs, maintained only for the
+    /// unsynced `-D` rung (replaces its per-iteration arrival re-sort).
+    arrival_fifo: BTreeSet<(u64, ReqId)>,
+    /// Per-id arrival-time bits for `arrival_fifo` removal without a ctx.
+    fifo_key: Vec<u64>,
+    /// Occupied-KVC snapshot per queued GT, and their running total: the
+    /// PT admission gate's "idle waiting-GT KV" figure in O(1) instead of
+    /// an every-iteration sweep over the queue.
+    held_snap: Vec<u32>,
+    waiting_held: u64,
     /// Group sizes admitted together (Fig 2 instrumentation).
     pub group_sizes: Vec<u32>,
     /// Count of GTs rescued by the reserve vs re-queued (Fig 5b).
@@ -56,10 +76,13 @@ pub struct EconoServe {
     pub requeues: u64,
     /// Guests placed by KVC pipelining (instrumentation).
     pub guests_placed: u64,
-    /// Admission retry gate: skip the O(queue) group scan when nothing
-    /// changed since the last failed attempt (keeps the per-iteration
-    /// scheduling cost O(running), the paper's low-overhead claim).
+    /// Admission retry gate: skip the group scan when nothing changed
+    /// since the last failed attempt (keeps the per-iteration scheduling
+    /// cost O(running), the paper's low-overhead claim).
     gate: AdmitGate,
+    /// Reusable scratch (zero-allocation steady state).
+    tried: BTreeSet<u32>,
+    handled: HashSet<ReqId>,
 }
 
 #[derive(Default)]
@@ -75,15 +98,25 @@ impl EconoServe {
             label,
             synced,
             ordering,
-            pt_queue: Vec::new(),
-            running_pts: VecDeque::new(),
+            pt_queue: BucketQueue::new(if ordering {
+                QueuePolicy::EconoServe
+            } else {
+                QueuePolicy::Fcfs
+            }),
+            running_pts: IndexedList::new(),
             gt_groups: BTreeMap::new(),
-            running_gts: Vec::new(),
+            running_gts: IndexedList::new(),
+            arrival_fifo: BTreeSet::new(),
+            fifo_key: Vec::new(),
+            held_snap: Vec::new(),
+            waiting_held: 0,
             group_sizes: Vec::new(),
             reserve_rescues: 0,
             requeues: 0,
             guests_placed: 0,
             gate: AdmitGate::default(),
+            tried: BTreeSet::new(),
+            handled: HashSet::new(),
         }
     }
 
@@ -107,41 +140,102 @@ impl EconoServe {
         Self::with_flags("econoserve", true, true)
     }
 
-    fn enqueue_gt(&mut self, ctx: &IterCtx<'_>, id: ReqId) {
-        let rl = ctx.rec(id).predicted_remaining().max(1);
-        self.gt_groups.entry(rl).or_default().push_back(id);
+    fn ensure_slabs(&mut self, id: ReqId) {
+        if id >= self.held_snap.len() {
+            self.held_snap.resize(id + 1, 0);
+            self.fifo_key.resize(id + 1, 0);
+        }
+    }
+
+    /// Bookkeeping shared by every GT-queue insertion: occupied-KVC
+    /// snapshot (admission-gate total) and the unsynced arrival index.
+    fn enqueue_bookkeeping(&mut self, ctx: &IterCtx<'_>, id: ReqId) {
+        self.ensure_slabs(id);
+        let occ = ctx.world().occupied_kvc(id);
+        self.held_snap[id] = occ;
+        self.waiting_held += occ as u64;
+        if !self.synced {
+            let bits = ctx.rec(id).req.arrival.to_bits();
+            self.fifo_key[id] = bits;
+            self.arrival_fifo.insert((bits, id));
+        }
         self.gate.version += 1;
     }
 
-    /// Handle the previous iteration's events.
+    /// Bookkeeping shared by every GT-queue removal (O(log n), no ctx
+    /// needed — the snapshot carries everything).
+    fn dequeue_bookkeeping(&mut self, id: ReqId) {
+        if id < self.held_snap.len() {
+            self.waiting_held -= self.held_snap[id] as u64;
+            self.held_snap[id] = 0;
+        }
+        if !self.synced {
+            let bits = self.fifo_key.get(id).copied().unwrap_or(0);
+            self.arrival_fifo.remove(&(bits, id));
+        }
+    }
+
+    fn enqueue_gt(&mut self, ctx: &IterCtx<'_>, id: ReqId) {
+        let rl = ctx.rec(id).predicted_remaining().max(1);
+        self.gt_groups.entry(rl).or_default().push_back(id);
+        self.enqueue_bookkeeping(ctx, id);
+    }
+
+    /// Put a lend-refused candidate back at the FRONT of its group.
+    fn requeue_front(&mut self, ctx: &IterCtx<'_>, rl: u32, id: ReqId) {
+        self.gt_groups.entry(rl).or_default().push_front(id);
+        self.enqueue_bookkeeping(ctx, id);
+    }
+
+    /// Remove a queued GT from its RL group (scans ONE group's deque —
+    /// the slow path used by unsynced admission, lending and tests; the
+    /// synced admission loop removes by index directly).
+    fn remove_from_group(&mut self, rl: u32, id: ReqId) -> bool {
+        let Some(q) = self.gt_groups.get_mut(&rl) else { return false };
+        let found = q.iter().enumerate().find(|(_, x)| **x == id).map(|(i, _)| i);
+        let Some(i) = found else { return false };
+        q.remove(i);
+        if q.is_empty() {
+            self.gt_groups.remove(&rl);
+        }
+        self.dequeue_bookkeeping(id);
+        self.gate.version += 1;
+        true
+    }
+
+    /// Handle the previous iteration's events. Event vectors are taken
+    /// out, iterated, and handed back cleared so their capacity is reused
+    /// next iteration.
     fn process_events(&mut self, ctx: &mut IterCtx<'_>) {
-        let events = std::mem::take(&mut ctx.events);
-        self.running_gts.retain(|id| !ctx.world().recs[*id].is_done());
-        self.running_pts.retain(|id| !ctx.world().recs[*id].is_done());
+        self.running_gts.retain(|id| !ctx.world().recs[id].is_done());
+        self.running_pts.retain(|id| !ctx.world().recs[id].is_done());
 
         // PTs that finished prefilling become queued GTs.
-        for id in events.finished_prefill {
-            if let Some(pos) = self.running_pts.iter().position(|x| *x == id) {
-                self.running_pts.remove(pos);
-            }
+        let mut ev = std::mem::take(&mut ctx.events.finished_prefill);
+        for &id in &ev {
+            self.running_pts.remove(id);
             self.enqueue_gt(ctx, id);
         }
+        ev.clear();
+        ctx.events.finished_prefill = ev;
 
         // Recompute done: the GT resumes decoding.
-        for id in events.recompute_done {
-            if let Some(pos) = self.running_pts.iter().position(|x| *x == id) {
-                self.running_pts.remove(pos);
-            }
-            debug_assert!(!self.running_gts.contains(&id), "dup push at recompute_done for {id}");
+        let mut ev = std::mem::take(&mut ctx.events.recompute_done);
+        for &id in &ev {
+            self.running_pts.remove(id);
+            debug_assert!(!self.running_gts.contains(id), "dup push at recompute_done for {id}");
             self.running_gts.push(id);
         }
+        ev.clear();
+        ctx.events.recompute_done = ev;
 
         // Under-provisioned GTs (§3.3.2): reserve first, then offload-free
         // re-queue at the re-predicted remaining RL. A GT can appear both
         // here and in evicted_guests within one iteration — handle once.
-        let mut handled: std::collections::HashSet<ReqId> = std::collections::HashSet::new();
-        for id in events.reached_prediction {
-            if ctx.rec(id).is_done() || !handled.insert(id) {
+        self.handled.clear();
+        let mut ev = std::mem::take(&mut ctx.events.reached_prediction);
+        for &id in &ev {
+            if ctx.rec(id).is_done() || !self.handled.insert(id) {
                 continue;
             }
             let new_rem = ctx.re_predict(id);
@@ -160,9 +254,7 @@ impl EconoServe {
             } else {
                 // Offload-free: stop decoding, KEEP the written KV resident
                 // (trim over-provisioned blocks), re-enter the GT queue.
-                if let Some(pos) = self.running_gts.iter().position(|x| *x == id) {
-                    self.running_gts.remove(pos);
-                }
+                self.running_gts.remove(id);
                 if ctx.kvc().is_guest(id) {
                     // Guests lose their borrowed space (host keeps running).
                     ctx.evict_guest(id);
@@ -177,19 +269,22 @@ impl EconoServe {
                 self.enqueue_gt(ctx, id);
             }
         }
+        ev.clear();
+        ctx.events.reached_prediction = ev;
 
         // Evicted guests re-enter the GT queue (they carry lost_kv that is
         // recomputed when they are re-admitted).
-        for id in events.evicted_guests {
-            if ctx.rec(id).is_done() || !handled.insert(id) {
+        let mut ev = std::mem::take(&mut ctx.events.evicted_guests);
+        for &id in &ev {
+            if ctx.rec(id).is_done() || !self.handled.insert(id) {
                 continue;
             }
-            if let Some(pos) = self.running_gts.iter().position(|x| *x == id) {
-                self.running_gts.remove(pos);
-            }
+            self.running_gts.remove(id);
             ctx.re_predict(id);
             self.enqueue_gt(ctx, id);
         }
+        ev.clear();
+        ctx.events.evicted_guests = ev;
     }
 
     /// Re-home or drop the direct guests of `host` before its unused
@@ -205,9 +300,7 @@ impl EconoServe {
                 continue; // transferred onto its own lease
             }
             // Same as a world eviction: drop guest KV, re-queue.
-            if let Some(pos) = self.running_gts.iter().position(|x| *x == g) {
-                self.running_gts.remove(pos);
-            }
+            self.running_gts.remove(g);
             ctx.evict_guest(g);
             ctx.requeue_gt(g);
             ctx.metrics_mut().pipeline_evictions += 1;
@@ -217,6 +310,7 @@ impl EconoServe {
 
     /// Admit one GT from a group: exact-alloc its remaining span
     /// (+ pending recompute work). Returns false on KVC exhaustion.
+    /// Queue removal and its bookkeeping are the CALLER's job.
     fn admit_gt(&mut self, ctx: &mut IterCtx<'_>, id: ReqId) -> bool {
         let remaining = ctx.rec(id).predicted_remaining().max(1);
         let demand = Demand {
@@ -236,7 +330,7 @@ impl EconoServe {
             self.running_pts.push_front(id);
         } else {
             rec.phase = Phase::Decoding;
-            debug_assert!(!self.running_gts.contains(&id), "dup push at admit_gt for {id}");
+            debug_assert!(!self.running_gts.contains(id), "dup push at admit_gt for {id}");
             self.running_gts.push(id);
         }
         true
@@ -257,45 +351,39 @@ impl EconoServe {
             }
         }
         let mut any_admitted = false;
-        let mut tried: std::collections::BTreeSet<u32> = std::collections::BTreeSet::new();
+        self.tried.clear();
         loop {
-            if self.gt_groups.is_empty() || self.gt_groups.keys().all(|k| tried.contains(k)) {
+            if self.gt_groups.is_empty() {
                 break;
             }
             // Choose the next group.
-            let key = if self.ordering {
-                // Highest-priority member across group heads, honoring the
-                // 3-factor order; then prefer the LONGEST RL group (factor 3)
-                // via best-fit against the available KVC.
+            let chosen = if self.ordering {
+                // Best fit straight off the ordered group map (§3.4): the
+                // LONGEST RL group that fits the available KVC, skipping
+                // groups already tried this round. O(log groups + tried).
                 let avail = ctx.kvc().free_tokens(ReserveClass::Normal);
-                let mut pairs: Vec<(u32, usize)> = self
-                    .gt_groups
-                    .keys()
-                    .filter(|rl| !tried.contains(rl))
-                    .map(|rl| (*rl, *rl as usize))
-                    .collect();
-                pairs.sort_by(|a, b| b.0.cmp(&a.0)); // descending RL
-                match best_fit_leq(&pairs, avail.saturating_sub(1)) {
-                    Some(pos) => pairs[pos].0,
-                    None => break,
-                }
-            } else {
-                // FCFS: group whose head arrived earliest.
-                match self
-                    .gt_groups
-                    .iter()
-                    .filter(|(rl, _)| !tried.contains(rl))
-                    .min_by(|(_, a), (_, b)| {
-                        let ta = ctx.rec(*a.front().unwrap()).req.arrival;
-                        let tb = ctx.rec(*b.front().unwrap()).req.arrival;
-                        ta.partial_cmp(&tb).unwrap()
-                    })
+                let cap = avail.saturating_sub(1);
+                self.gt_groups
+                    .range(..=cap)
+                    .rev()
                     .map(|(rl, _)| *rl)
-                {
-                    Some(rl) => rl,
-                    None => break,
+                    .find(|rl| !self.tried.contains(rl))
+            } else {
+                // FCFS: group whose head arrived earliest (O(groups)).
+                let mut best: Option<(f64, u32)> = None;
+                for (rl, q) in self.gt_groups.iter() {
+                    if self.tried.contains(rl) {
+                        continue;
+                    }
+                    let head = *q.front().expect("empty group retained");
+                    let ta = ctx.rec(head).req.arrival;
+                    if best.map(|(t, _)| ta <= t).unwrap_or(true) {
+                        best = Some((ta, *rl));
+                    }
                 }
+                best.map(|(_, rl)| rl)
             };
+            let Some(key) = chosen else { break };
 
             let mut admitted = 0u32;
             let mut kvc_full = false;
@@ -314,7 +402,8 @@ impl EconoServe {
                     kvc_full = true;
                     break;
                 }
-                self.gt_groups.get_mut(&key).unwrap().remove(idx);
+                self.gt_groups.get_mut(&key).expect("group vanished").remove(idx);
+                self.dequeue_bookkeeping(cand);
                 admitted += 1;
             }
             if admitted > 0 {
@@ -323,13 +412,13 @@ impl EconoServe {
             self.gt_groups.retain(|_, q| !q.is_empty());
             // Groups whose every member is merely "not ready yet" must not
             // stop admission of other groups; only KVC exhaustion does.
-            tried.insert(key);
+            self.tried.insert(key);
 
             any_admitted |= admitted > 0;
             if kvc_full {
                 break; // KVC fully allocated
             }
-            if self.gt_groups.keys().all(|k| tried.contains(k)) {
+            if self.gt_groups.keys().all(|k| self.tried.contains(k)) {
                 break; // nothing admissible remains
             }
         }
@@ -360,11 +449,14 @@ impl EconoServe {
             return;
         }
         let buffer_frac = ctx.cfg().buffer_frac;
-        let writers: Vec<ReqId> = self.running_gts.clone();
-        for writer in writers {
+        // Index loop: pushes during the loop append (stable raw slots),
+        // so no snapshot clone of the running set is needed.
+        let n_writers = self.running_gts.raw_len();
+        for wi in 0..n_writers {
             if self.gt_groups.is_empty() {
                 break;
             }
+            let Some(writer) = self.running_gts.get_raw(wi) else { continue };
             if ctx.rec(writer).lost_kv > 0 || ctx.rec(writer).is_done() {
                 continue;
             }
@@ -375,67 +467,65 @@ impl EconoServe {
                 if target < 4 {
                     break;
                 }
-                let candidate = self
-                    .gt_groups
-                    .range(..=target)
-                    .rev()
-                    .find_map(|(rl, q)| {
-                        q.iter()
-                            .position(|&id| {
-                                ctx.pred_ready(id)
-                                    && ctx.rec(id).lost_kv == 0
-                                    && !ctx.rec(id).is_done()
-                            })
-                            .map(|pos| (*rl, pos))
-                    });
-                let Some((rl, pos)) = candidate else { break };
-                let guest = self.gt_groups.get_mut(&rl).unwrap().remove(pos).unwrap();
-                if self.gt_groups[&rl].is_empty() {
-                    self.gt_groups.remove(&rl);
+                // Longest queued GT with rl <= target whose member is
+                // ready and clean (first such member per group, FIFO).
+                let mut candidate: Option<(u32, ReqId)> = None;
+                'groups: for (rl, q) in self.gt_groups.range(..=target).rev() {
+                    for &gid in q.iter() {
+                        if ctx.pred_ready(gid)
+                            && ctx.rec(gid).lost_kv == 0
+                            && !ctx.rec(gid).is_done()
+                        {
+                            candidate = Some((*rl, gid));
+                            break 'groups;
+                        }
+                    }
                 }
+                let Some((rl, guest)) = candidate else { break };
+                self.remove_from_group(rl, guest);
                 if !ctx.alloc().lend(writer, span, head, buffer_frac, guest, rl).ok() {
                     // The mechanism re-checked the invariant and refused:
                     // put the candidate back and stop lending this span.
-                    self.gt_groups.entry(rl).or_default().push_front(guest);
+                    self.requeue_front(ctx, rl, guest);
                     break;
                 }
                 self.guests_placed += 1;
-                self.gate.version += 1;
                 ctx.mark_exec_start(guest);
                 let rec = ctx.rec_mut(guest);
                 rec.gt_span_base = rec.generated;
                 rec.gt_span_len = rl;
                 rec.phase = Phase::Decoding;
-                debug_assert!(!self.running_gts.contains(&guest));
+                debug_assert!(!self.running_gts.contains(guest));
                 self.running_gts.push(guest);
             }
         }
     }
 
     /// Unsynced GT admission (variant -D): individual exact leases in
-    /// queue order.
+    /// arrival order, served from the incremental arrival index instead
+    /// of a per-iteration re-sort.
     fn admit_gts_unsynced(&mut self, ctx: &mut IterCtx<'_>) {
-        let mut ids: Vec<ReqId> =
-            self.gt_groups.values().flat_map(|q| q.iter().copied()).collect();
-        ids.sort_by(|a, b| {
-            ctx.rec(*a).req.arrival.partial_cmp(&ctx.rec(*b).req.arrival).unwrap()
-        });
-        for id in ids {
+        let mut cursor: Option<(u64, ReqId)> = None;
+        loop {
+            let next = match cursor {
+                None => self.arrival_fifo.iter().next().copied(),
+                Some(c) => self
+                    .arrival_fifo
+                    .range((std::ops::Bound::Excluded(c), std::ops::Bound::Unbounded))
+                    .next()
+                    .copied(),
+            };
+            let Some((bits, id)) = next else { break };
+            cursor = Some((bits, id));
             if !ctx.pred_ready(id) {
                 continue;
             }
+            let rl = ctx.rec(id).predicted_remaining().max(1);
             if !self.admit_gt(ctx, id) {
                 break;
             }
-            // Remove from its group queue.
-            for (_, q) in self.gt_groups.iter_mut() {
-                if let Some(pos) = q.iter().position(|x| *x == id) {
-                    q.remove(pos);
-                    break;
-                }
-            }
+            self.remove_from_group(rl, id);
         }
-        self.gt_groups.retain(|_, q| !q.is_empty());
     }
 
     /// PT admission: fill the GPU to TFS with prompt chunks, drawing KVC
@@ -444,12 +534,14 @@ impl EconoServe {
         let tfs = ctx.cfg().profile.tfs;
         let mut used = plan.forward_size();
 
-        // Continue in-flight prefills (and recomputes) first.
-        let inflight: Vec<ReqId> = self.running_pts.iter().copied().collect();
-        for id in inflight {
+        // Continue in-flight prefills (and recomputes) first. Index loop:
+        // nothing is removed from running_pts inside it.
+        let n_inflight = self.running_pts.raw_len();
+        for i in 0..n_inflight {
             if used >= tfs {
                 break;
             }
+            let Some(id) = self.running_pts.get_raw(i) else { continue };
             let rec = ctx.rec(id);
             let lost = rec.lost_kv;
             let left = if lost > 0 { lost } else { rec.req.prompt_len - rec.prompt_done };
@@ -469,37 +561,18 @@ impl EconoServe {
         // stays within the PT reservation. Prefilling beyond that point
         // converts KVC capacity into idle waiting-GT KV (the GT queue
         // cannot drain faster than completions), strangling throughput;
-        // keeping the backlog in the PT queue costs no KVC.
-        let waiting_held: u32 = self
-            .gt_groups
-            .values()
-            .flatten()
-            .map(|&id| ctx.world().occupied_kvc(id))
-            .sum();
+        // keeping the backlog in the PT queue costs no KVC. The footprint
+        // total is maintained incrementally at GT enqueue/dequeue.
         let stage_cap = ((ctx.cfg().kvc_tokens() as f64 * ctx.cfg().gt_stage_frac) as u32)
             .max(ctx.kvc().reserve_tokens());
-        if waiting_held > stage_cap {
+        if self.waiting_held > stage_cap as u64 {
             return;
         }
-        // Selection is a repeated linear min-scan (we admit only a handful
-        // per iteration, so this is cheaper than re-sorting every step).
+        // Selection is an O(log n) bucket-queue pop per admitted PT
+        // (ordered variant) or FIFO (FCFS variant) — no scans.
         while used < tfs && !self.pt_queue.is_empty() {
-            let pos = if self.ordering {
-                (0..self.pt_queue.len())
-                    .min_by_key(|&i| {
-                        let id = self.pt_queue[i];
-                        let rec = ctx.rec(id);
-                        crate::ordering::order_key(
-                            ctx.world(),
-                            id,
-                            rec.req.prompt_len - rec.prompt_done,
-                        )
-                    })
-                    .unwrap()
-            } else {
-                0 // FCFS (queue is in arrival order)
-            };
-            let id = self.pt_queue[pos];
+            let clock = ctx.clock();
+            let Some(id) = self.pt_queue.peek_first(clock) else { break };
             let rec = ctx.rec(id);
             let left = rec.req.prompt_len - rec.prompt_done;
             let chunk = left.min(tfs - used);
@@ -509,9 +582,9 @@ impl EconoServe {
             if !ctx.alloc().extend(id, chunk, ReserveClass::Reserved).ok() {
                 break; // KVC exhausted even with the reservation
             }
-            self.pt_queue.remove(pos);
+            self.pt_queue.pop_first(clock);
             ctx.mark_exec_start(id);
-            self.running_pts.push_back(id);
+            self.running_pts.push(id);
             plan.tasks.push(BatchTask::Prefill { id, chunk });
             used += chunk;
         }
@@ -540,7 +613,11 @@ impl Scheduler for EconoServe {
 
     fn plan(&mut self, ctx: &mut IterCtx<'_>) -> BatchPlan {
         while let Some(id) = ctx.pop_arrival() {
-            self.pt_queue.push(id);
+            let (deadline, len) = {
+                let rec = ctx.rec(id);
+                (rec.req.deadline, rec.req.prompt_len - rec.prompt_done)
+            };
+            self.pt_queue.push(id, 0, deadline, 0, len, ctx.clock());
         }
         self.process_events(ctx);
 
@@ -561,9 +638,10 @@ impl Scheduler for EconoServe {
         // Freshly admitted hosts have whole spans to lend.
         self.lend_running_spans(ctx);
 
-        // Order GT queue state doesn't affect the running set; build plan.
-        let mut plan = BatchPlan::default();
-        for &id in &self.running_gts {
+        // Order GT queue state doesn't affect the running set; build plan
+        // from the recycled buffer (zero-allocation steady state).
+        let mut plan = ctx.take_plan();
+        for id in self.running_gts.iter() {
             plan.tasks.push(BatchTask::Decode { id });
         }
 
@@ -587,6 +665,11 @@ impl Scheduler for EconoServe {
             if let Some(v) = victim {
                 let rel = ctx.alloc().release(v);
                 ctx.rec_mut(v).lost_kv += rel.written;
+                // The still-queued victim's resident footprint fell to 0.
+                if v < self.held_snap.len() {
+                    self.waiting_held -= self.held_snap[v] as u64;
+                    self.held_snap[v] = 0;
+                }
                 ctx.metrics_mut().preemptions += 1;
                 self.requeues += 1;
             }
@@ -600,8 +683,8 @@ impl Scheduler for EconoServe {
                     seen.insert(t.id()),
                     "duplicate task for req {} in plan: task={t:?} in_gts={} in_pts={} in_groups={}",
                     t.id(),
-                    self.running_gts.iter().filter(|x| **x == t.id()).count(),
-                    self.running_pts.iter().filter(|x| **x == t.id()).count(),
+                    self.running_gts.contains(t.id()),
+                    self.running_pts.contains(t.id()),
                     self.gt_groups.values().flatten().filter(|x| **x == t.id()).count(),
                 );
                 assert!(
@@ -797,6 +880,49 @@ mod tests {
     }
 
     #[test]
+    fn waiting_held_gate_tracks_queue_footprint() {
+        // The incremental waiting-GT footprint must equal a fresh sweep
+        // over the queued GTs at every iteration boundary.
+        let items: Vec<TraceItem> = (0..25)
+            .map(|i| TraceItem {
+                arrival: i as f64 * 0.005,
+                prompt_len: 24 + (i as u32 % 4) * 16,
+                true_rl: 30 + (i as u32 % 6) * 25,
+            })
+            .collect();
+        let mut w = world(&items, 2048, true);
+        let mut s = EconoServe::full();
+        let e = SimEngine::new();
+        for _ in 0..2500 {
+            w.drain_arrivals();
+            let b = plan_iteration(&mut w, &mut s);
+            let sweep: u64 = s
+                .gt_groups
+                .values()
+                .flatten()
+                .map(|&id| w.occupied_kvc(id) as u64)
+                .sum();
+            assert_eq!(s.waiting_held, sweep, "incremental footprint drifted");
+            if b.is_empty() {
+                match w.next_arrival() {
+                    Some(t) => {
+                        w.clock = t;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            let (d, u) = e.iteration_cost(&b, &w);
+            w.apply_plan(&b, d, u);
+            if w.all_done() {
+                break;
+            }
+        }
+        assert!(w.all_done());
+        assert_eq!(s.waiting_held, 0, "empty queue must carry no footprint");
+    }
+
+    #[test]
     fn evicted_guest_is_requeued_and_completes() {
         // The §3.2 failure path end-to-end: a guest whose slot the host's
         // write head overruns is evicted by the world (offload-free), the
@@ -824,18 +950,19 @@ mod tests {
             let (d, u) = e.iteration_cost(&b, &w);
             w.apply_plan(&b, d, u);
         }
-        assert!(s.running_gts.contains(&host), "host must be decoding");
-        assert!(!s.running_gts.contains(&guest), "guest must still be queued");
+        assert!(s.running_gts.contains(host), "host must be decoding");
+        assert!(!s.running_gts.contains(guest), "guest must still be queued");
         // Force the failure: place the guest at an offset the host's head
         // will overrun long before the guest finishes (an under-predicted
         // guest in a too-small slot). Mirror the scheduler bookkeeping a
         // lend would have done.
-        for (_, q) in s.gt_groups.iter_mut() {
-            if let Some(pos) = q.iter().position(|x| *x == guest) {
-                q.remove(pos);
-            }
-        }
-        s.gt_groups.retain(|_, q| !q.is_empty());
+        let rl = s
+            .gt_groups
+            .iter()
+            .find(|(_, q)| q.contains(&guest))
+            .map(|(rl, _)| *rl)
+            .expect("guest must be queued in a group");
+        assert!(s.remove_from_group(rl, guest));
         w.pred_ready[guest] = 0.0; // readmittable after the eviction
         w.kvc_mut().host_at(guest, host, 2, 8);
         let base = w.recs[guest].generated;

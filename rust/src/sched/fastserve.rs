@@ -26,8 +26,9 @@ use crate::kvc::{Allocator, Demand, ReserveClass};
 pub struct FastServe {
     batch_size: usize,
     levels: Vec<VecDeque<ReqId>>,
-    /// Iterations of service consumed at the current level, per request.
-    service: Vec<(ReqId, u32)>,
+    /// Iterations of service consumed at the current level, per request —
+    /// a dense slab keyed by `ReqId` (O(1) lookup, no association scan).
+    service: Vec<u32>,
     base_quantum: u32,
 }
 
@@ -58,12 +59,14 @@ impl FastServe {
     }
 
     fn service_mut(&mut self, id: ReqId) -> &mut u32 {
-        if let Some(pos) = self.service.iter().position(|(r, _)| *r == id) {
-            &mut self.service[pos].1
-        } else {
-            self.service.push((id, 0));
-            &mut self.service.last_mut().unwrap().1
+        if id >= self.service.len() {
+            self.service.resize(id + 1, 0);
         }
+        &mut self.service[id]
+    }
+
+    fn service_of(&self, id: ReqId) -> u32 {
+        self.service.get(id).copied().unwrap_or(0)
     }
 }
 
@@ -84,11 +87,11 @@ impl Scheduler for FastServe {
             self.levels[lvl].push_back(head);
         }
 
-        // Drop finished requests from all levels.
+        // Drop finished requests from all levels (service-slab entries of
+        // finished ids are dead weight, never read again).
         for q in &mut self.levels {
             q.retain(|id| !ctx.world().recs[*id].is_done());
         }
-        self.service.retain(|(id, _)| !ctx.world().recs[*id].is_done());
 
         // Demote quantum-exhausted requests (done lazily before selection).
         for lvl in 0..self.levels.len().saturating_sub(1) {
@@ -96,8 +99,7 @@ impl Scheduler for FastServe {
             let mut i = 0;
             while i < self.levels[lvl].len() {
                 let id = self.levels[lvl][i];
-                let used = self.service.iter().find(|(r, _)| *r == id).map(|(_, u)| *u).unwrap_or(0);
-                if used >= quantum {
+                if self.service_of(id) >= quantum {
                     self.levels[lvl].remove(i);
                     self.levels[lvl + 1].push_back(id);
                     *self.service_mut(id) = 0;
@@ -108,7 +110,7 @@ impl Scheduler for FastServe {
         }
 
         // Select from the highest non-empty levels.
-        let mut plan = BatchPlan::default();
+        let mut plan = ctx.take_plan();
         let mut selected: Vec<ReqId> = Vec::new();
         'outer: for q in &self.levels {
             for &id in q {

@@ -11,17 +11,17 @@
 
 use super::Scheduler;
 use crate::core::world::IterCtx;
-use crate::core::{BatchPlan, BatchTask, PreemptKind, ReqId};
+use crate::core::{BatchPlan, BatchTask, IndexedList, PreemptKind, ReqId};
 use crate::kvc::{Allocator, Demand, ReserveClass};
 
 pub struct MultiRes {
     queued: Vec<ReqId>,
-    running: Vec<ReqId>,
+    running: IndexedList,
 }
 
 impl MultiRes {
     pub fn new() -> Self {
-        MultiRes { queued: Vec::new(), running: Vec::new() }
+        MultiRes { queued: Vec::new(), running: IndexedList::new() }
     }
 
     /// (gpu_demand_tokens, kvc_demand_tokens) of a queued request.
@@ -50,26 +50,27 @@ impl Scheduler for MultiRes {
         while let Some(id) = ctx.pop_arrival() {
             self.queued.push(id);
         }
-        self.running.retain(|id| !ctx.world().recs[*id].is_done());
+        self.running.retain(|id| !ctx.world().recs[id].is_done());
 
         // Under-predicted GTs (non-oracle runs): extend the lease in
         // place if possible, otherwise send back to the queue (their KV
         // stays resident; they re-enter via the distance scan).
-        let under: Vec<ReqId> = std::mem::take(&mut ctx.events.reached_prediction);
+        let mut under = std::mem::take(&mut ctx.events.reached_prediction);
         let bs = ctx.cfg().block_size;
-        for id in under {
+        for &id in &under {
             let rec = ctx.rec_mut(id);
             rec.predicted_base = rec.generated;
             rec.predicted_rl = bs;
             if !ctx.alloc().extend(id, bs + 1, ReserveClass::Reserved).ok() {
                 // Offload-free drop: release the KV, recompute at re-admission.
-                if let Some(pos) = self.running.iter().position(|x| *x == id) {
-                    self.running.remove(pos);
+                if self.running.remove(id) {
                     ctx.preempt(id, PreemptKind::DropRecompute);
                     self.queued.push(id);
                 }
             }
         }
+        under.clear();
+        ctx.events.reached_prediction = under;
 
         // Current iteration's resource availability.
         let tfs = ctx.cfg().profile.tfs as f64;
@@ -111,8 +112,8 @@ impl Scheduler for MultiRes {
             self.running.push(id);
         }
 
-        let mut plan = BatchPlan::default();
-        for &id in &self.running {
+        let mut plan = ctx.take_plan();
+        for id in self.running.iter() {
             let rec = ctx.rec(id);
             if rec.lost_kv > 0 {
                 plan.tasks.push(BatchTask::Prefill { id, chunk: rec.lost_kv });

@@ -42,7 +42,7 @@ impl Scheduler for Orca {
             self.running.push(head);
         }
 
-        let mut plan = BatchPlan::default();
+        let mut plan = ctx.take_plan();
         for &id in &self.running {
             let rec = ctx.rec(id);
             if rec.prompt_done < rec.req.prompt_len {

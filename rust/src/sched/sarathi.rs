@@ -18,13 +18,14 @@ use std::collections::VecDeque;
 
 use super::Scheduler;
 use crate::core::world::IterCtx;
-use crate::core::{BatchPlan, BatchTask, PreemptKind, ReqId};
+use crate::core::{BatchPlan, BatchTask, IndexedList, PreemptKind, ReqId};
 use crate::kvc::{Allocator, Demand, ReserveClass};
 
 pub struct Sarathi {
     waiting: VecDeque<ReqId>,
-    /// Sequences mid-prefill (chunked), in admission order.
-    prefilling: VecDeque<ReqId>,
+    /// Sequences mid-prefill (chunked), in admission order (O(1) removal
+    /// when a prefill finishes).
+    prefilling: IndexedList,
     /// Sequences decoding, in admission order.
     decoding: Vec<ReqId>,
     swapped: VecDeque<ReqId>,
@@ -35,7 +36,7 @@ impl Sarathi {
     pub fn new() -> Self {
         Sarathi {
             waiting: VecDeque::new(),
-            prefilling: VecDeque::new(),
+            prefilling: IndexedList::new(),
             decoding: Vec::new(),
             swapped: VecDeque::new(),
             max_num_seqs: 256,
@@ -94,19 +95,20 @@ impl Scheduler for Sarathi {
             self.waiting.push_back(id);
         }
         self.decoding.retain(|id| !ctx.world().recs[*id].is_done());
-        // Promote finished prefills to decode.
-        let finished: Vec<ReqId> = std::mem::take(&mut ctx.events.finished_prefill);
-        for id in finished {
-            if let Some(pos) = self.prefilling.iter().position(|x| *x == id) {
-                self.prefilling.remove(pos);
-            }
+        // Promote finished prefills to decode (O(1) removals; the event
+        // vector is handed back cleared so its capacity is reused).
+        let mut finished = std::mem::take(&mut ctx.events.finished_prefill);
+        for &id in &finished {
+            self.prefilling.remove(id);
             if !ctx.rec(id).is_done() {
                 self.decoding.push(id);
             }
         }
+        finished.clear();
+        ctx.events.finished_prefill = finished;
 
         let budget = ctx.cfg().profile.tfs;
-        let mut plan = BatchPlan::default();
+        let mut plan = ctx.take_plan();
 
         // 1) Swap-ins first. Half-prefilled victims resume prefilling;
         //    others decode.
@@ -141,9 +143,10 @@ impl Scheduler for Sarathi {
         // 3) Fill the remaining budget with prompt chunks.
         let mut used = plan.forward_size();
 
-        // Continue in-flight prefills first.
-        for idx in 0..self.prefilling.len() {
-            let id = self.prefilling[idx];
+        // Continue in-flight prefills first (raw index loop: nothing is
+        // removed from the list inside it).
+        for idx in 0..self.prefilling.raw_len() {
+            let Some(id) = self.prefilling.get_raw(idx) else { continue };
             if let Some(t) = Sarathi::chunk_for(ctx, id, &mut used, budget, false) {
                 plan.tasks.push(t);
             }
@@ -161,7 +164,7 @@ impl Scheduler for Sarathi {
                 Some(t) => {
                     self.waiting.pop_front();
                     ctx.mark_exec_start(head);
-                    self.prefilling.push_back(head);
+                    self.prefilling.push(head);
                     plan.tasks.push(t);
                 }
                 None => break,

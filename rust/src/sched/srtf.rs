@@ -47,9 +47,17 @@ impl Scheduler for Srtf {
             self.admitted.push(head);
         }
 
-        // Pick the batch_size shortest-remaining admitted requests.
-        self.admitted.sort_by_key(|&id| Srtf::remaining(ctx, id));
-        let mut plan = BatchPlan::default();
+        // Pick the batch_size shortest-remaining admitted requests via
+        // partial selection (O(n) + O(k log k)) instead of re-sorting the
+        // whole admitted set every iteration; only the winners need an
+        // order, the paused tail does not.
+        let k = self.batch_size.min(self.admitted.len());
+        if k > 0 && k < self.admitted.len() {
+            self.admitted
+                .select_nth_unstable_by_key(k - 1, |&id| (Srtf::remaining(ctx, id), id));
+        }
+        self.admitted[..k].sort_unstable_by_key(|&id| (Srtf::remaining(ctx, id), id));
+        let mut plan = ctx.take_plan();
         for &id in self.admitted.iter().take(self.batch_size) {
             ctx.mark_exec_start(id);
             let rec = ctx.rec(id);

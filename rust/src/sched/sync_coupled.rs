@@ -15,20 +15,24 @@ use std::collections::VecDeque;
 
 use super::Scheduler;
 use crate::core::world::IterCtx;
-use crate::core::{BatchPlan, BatchTask, PreemptKind, ReqId};
+use crate::core::{BatchPlan, BatchTask, IndexedList, PreemptKind, ReqId};
 use crate::kvc::{Allocator, Demand, ReserveClass};
 
 pub struct SyncCoupled {
     /// predicted RL -> FIFO of queued requests with that prediction.
     groups: BTreeMap<u32, VecDeque<ReqId>>,
-    running: Vec<ReqId>,
+    running: IndexedList,
     /// Group-size observations (Fig 2): members admitted together.
     pub group_sizes: Vec<u32>,
 }
 
 impl SyncCoupled {
     pub fn new() -> Self {
-        SyncCoupled { groups: BTreeMap::new(), running: Vec::new(), group_sizes: Vec::new() }
+        SyncCoupled {
+            groups: BTreeMap::new(),
+            running: IndexedList::new(),
+            group_sizes: Vec::new(),
+        }
     }
 
     fn enqueue(&mut self, ctx: &IterCtx<'_>, id: ReqId) {
@@ -44,7 +48,7 @@ impl SyncCoupled {
             .min_by(|(_, a), (_, b)| {
                 let ta = ctx.rec(*a.front().unwrap()).req.arrival;
                 let tb = ctx.rec(*b.front().unwrap()).req.arrival;
-                ta.partial_cmp(&tb).unwrap()
+                ta.total_cmp(&tb)
             })
             .map(|(rl, _)| *rl)
     }
@@ -65,25 +69,25 @@ impl Scheduler for SyncCoupled {
         while let Some(id) = ctx.pop_arrival() {
             self.enqueue(ctx, id);
         }
-        self.running.retain(|id| !ctx.world().recs[*id].is_done());
+        self.running.retain(|id| !ctx.world().recs[id].is_done());
 
         // Under-predicted members: extend the lease in place or re-group
         // at the re-predicted remaining RL.
-        let under: Vec<ReqId> = std::mem::take(&mut ctx.events.reached_prediction);
+        let mut under = std::mem::take(&mut ctx.events.reached_prediction);
         let bs = ctx.cfg().block_size;
-        for id in under {
+        for &id in &under {
             let rec = ctx.rec_mut(id);
             rec.predicted_base = rec.generated;
             rec.predicted_rl = bs;
             if !ctx.alloc().extend(id, bs + 1, ReserveClass::Reserved).ok() {
                 // Offload-free drop: release KV, recompute at re-admission.
-                if let Some(pos) = self.running.iter().position(|x| *x == id) {
-                    self.running.remove(pos);
-                }
+                self.running.remove(id);
                 ctx.preempt(id, PreemptKind::DropRecompute);
                 self.enqueue(ctx, id);
             }
         }
+        under.clear();
+        ctx.events.reached_prediction = under;
 
         // Group admission while KVC allows (FCFS over group heads).
         let max_total = ctx.cfg().profile.max_total_len;
@@ -114,8 +118,8 @@ impl Scheduler for SyncCoupled {
         }
         self.groups.retain(|_, q| !q.is_empty());
 
-        let mut plan = BatchPlan::default();
-        for &id in &self.running {
+        let mut plan = ctx.take_plan();
+        for id in self.running.iter() {
             let rec = ctx.rec(id);
             if rec.lost_kv > 0 {
                 plan.tasks.push(BatchTask::Prefill { id, chunk: rec.lost_kv });

@@ -63,7 +63,7 @@ impl Scheduler for Vllm {
         self.running.retain(|id| !ctx.world().recs[*id].is_done());
 
         let budget = self.max_batched_tokens.unwrap_or(ctx.cfg().profile.tfs);
-        let mut plan = BatchPlan::default();
+        let mut plan = ctx.take_plan();
 
         // 1) Swap-ins take precedence (resumed sequences rejoin running).
         for id in super::swap_in_ready(ctx, &mut self.swapped, &mut plan) {

@@ -75,7 +75,7 @@ impl Samples {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.data.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.data.sort_by(f64::total_cmp);
             self.sorted = true;
         }
     }

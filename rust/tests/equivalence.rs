@@ -1,0 +1,302 @@
+//! Equivalence properties for the indexed hot path: the incremental
+//! structures (BucketQueue, the world's active index, the per-scheduler
+//! indexed queues) must produce the SAME decisions as the plain
+//! linear-scan formulations they replaced — on randomized, seeded inputs,
+//! for every supported sched+alloc registry combo.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+use econoserve::config::{ModelProfile, SystemConfig};
+use econoserve::core::world::World;
+use econoserve::engine::{Engine, SimEngine};
+use econoserve::ordering::{BucketQueue, OrderKey, QueuePolicy, QueuedTask};
+use econoserve::predictor::SimPredictor;
+use econoserve::sched::plan_iteration;
+use econoserve::trace::TraceItem;
+use econoserve::util::prop::{run_prop, sized};
+use econoserve::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// BucketQueue vs. linear min-scan reference
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct RefEntry {
+    id: usize,
+    priority: u8,
+    deadline: f64,
+    occupied: u32,
+    len: u32,
+}
+
+fn ref_key(policy: QueuePolicy, e: &RefEntry, clock: f64) -> OrderKey {
+    policy.key(&QueuedTask {
+        seq: e.id as u64,
+        priority: e.priority,
+        slack: e.deadline - clock,
+        occupied_kvc: e.occupied,
+        len: e.len,
+    })
+}
+
+/// The linear-scan selection the bucket queue replaces: min canonical
+/// key over the whole queue at the current clock.
+fn ref_min(policy: QueuePolicy, model: &[RefEntry], clock: f64) -> Option<usize> {
+    model.iter().min_by_key(|e| ref_key(policy, e, clock)).map(|e| e.id)
+}
+
+/// Reference best-fit: min canonical key among entries with len <= cap
+/// (see the walk in `BucketQueue::best_fit_leq` — group order dominates,
+/// so this is exactly the first fitting bucket's longest member).
+fn ref_best_fit(policy: QueuePolicy, model: &[RefEntry], cap: u32, clock: f64) -> Option<usize> {
+    model
+        .iter()
+        .filter(|e| e.len <= cap)
+        .min_by_key(|e| ref_key(policy, e, clock))
+        .map(|e| e.id)
+}
+
+#[test]
+fn bucket_queue_matches_linear_scan_reference() {
+    run_prop("bucket_queue_equivalence", 250, |rng| {
+        let policy = if rng.chance(0.8) { QueuePolicy::EconoServe } else { QueuePolicy::Fcfs };
+        let mut q = BucketQueue::new(policy);
+        let mut model: Vec<RefEntry> = Vec::new();
+        let mut clock = 0.0f64;
+        let mut next_id = 0usize;
+        for _ in 0..sized(rng, 150) {
+            // The clock only moves forward (slack only shrinks), exactly
+            // like the simulation.
+            if rng.chance(0.5) {
+                clock += rng.exponential(2.0);
+            }
+            match rng.range_u64(0, 5) {
+                0 | 1 => {
+                    let e = RefEntry {
+                        id: next_id,
+                        priority: rng.range_u64(0, 2) as u8,
+                        // deadlines around the bucket edges (0.5 s / 2 s
+                        // of slack) to stress migrations
+                        deadline: clock + rng.f64() * 4.0,
+                        occupied: (rng.range_u64(0, 6) * 200) as u32,
+                        len: 1 + rng.range_u64(0, 600) as u32,
+                    };
+                    next_id += 1;
+                    model.push(e);
+                    q.push(e.id, e.priority, e.deadline, e.occupied, e.len, clock);
+                }
+                2 => {
+                    if model.is_empty() {
+                        continue;
+                    }
+                    let idx = rng.range_usize(0, model.len() - 1);
+                    let victim = model.swap_remove(idx);
+                    assert!(q.remove(victim.id), "queued entry must be removable");
+                }
+                3 => {
+                    // Event-driven re-bucketing: occupancy/length change.
+                    if model.is_empty() {
+                        continue;
+                    }
+                    let idx = rng.range_usize(0, model.len() - 1);
+                    model[idx].occupied = (rng.range_u64(0, 6) * 200) as u32;
+                    model[idx].len = 1 + rng.range_u64(0, 600) as u32;
+                    let e = model[idx];
+                    q.update(e.id, e.occupied, e.len, clock);
+                }
+                4 => {
+                    let want = ref_min(policy, &model, clock);
+                    let got = q.pop_first(clock);
+                    assert_eq!(got, want, "pop mismatch at clock {clock}");
+                    if let Some(id) = got {
+                        model.retain(|e| e.id != id);
+                    }
+                }
+                _ => {
+                    let cap = rng.range_u64(0, 700) as u32;
+                    let want = ref_best_fit(policy, &model, cap, clock);
+                    let got = q.best_fit_leq(cap, clock);
+                    assert_eq!(got, want, "best_fit({cap}) mismatch at clock {clock}");
+                }
+            }
+            assert_eq!(q.len(), model.len(), "length drift");
+        }
+        // Drain: the full pop order must equal repeated linear scans.
+        while let Some(want) = ref_min(policy, &model, clock) {
+            assert_eq!(q.pop_first(clock), Some(want), "drain order diverged");
+            model.retain(|e| e.id != want);
+            clock += rng.f64() * 0.3;
+        }
+        assert!(q.is_empty());
+    });
+}
+
+// ---------------------------------------------------------------------
+// World active index vs. whole-recs scan
+// ---------------------------------------------------------------------
+
+fn mini_cfg(kvc_tokens: u64) -> SystemConfig {
+    let mut profile = ModelProfile::opt_13b();
+    profile.kvc_bytes = 819_200 * kvc_tokens;
+    profile.max_total_len = 1024;
+    let mut cfg = SystemConfig::new(profile);
+    cfg.t_p = 0.05;
+    cfg.t_g = 0.022;
+    cfg.sched_time_scale = 0.0;
+    cfg
+}
+
+fn random_items(rng: &mut Rng, n: usize, max_len: u32) -> Vec<TraceItem> {
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(5.0);
+            let prompt_len = 1 + sized(rng, (max_len / 3) as usize) as u32;
+            let true_rl = 1 + sized(rng, (max_len - prompt_len).min(300) as usize) as u32;
+            TraceItem { arrival: t, prompt_len, true_rl }
+        })
+        .collect()
+}
+
+#[test]
+fn world_active_index_matches_whole_recs_scan() {
+    run_prop("active_index_equivalence", 12, |rng| {
+        let items = random_items(rng, 10 + sized(rng, 25), 800);
+        let cfg = mini_cfg(4096);
+        let pred = Box::new(SimPredictor::new(0.15, cfg.block_size, rng.next_u64()));
+        let mut world = World::new(cfg, &items, pred);
+        let sys = econoserve::sched::by_name("econoserve").unwrap();
+        world.set_allocator(sys.alloc);
+        let mut sched = sys.sched;
+        let engine = SimEngine::new();
+        for _ in 0..200_000u32 {
+            world.drain_arrivals();
+            // The O(1) index must agree with the linear-scan definitions
+            // it replaced, at every iteration boundary.
+            let scan_active = world
+                .recs
+                .iter()
+                .filter(|r| r.req.arrival <= world.clock && !r.is_done())
+                .count();
+            assert_eq!(world.n_active(), scan_active, "active index drift");
+            let scan_done = world.recs.iter().filter(|r| r.is_done()).count();
+            assert_eq!(world.n_done(), scan_done, "done counter drift");
+            assert_eq!(
+                world.all_done(),
+                world.recs.iter().all(|r| r.is_done()),
+                "all_done drift"
+            );
+            let mut ids: Vec<usize> = world.active_ids().to_vec();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), world.n_active(), "active index holds duplicates");
+
+            if world.all_done() {
+                break;
+            }
+            let plan = plan_iteration(&mut world, sched.as_mut());
+            if plan.is_empty() {
+                match world.next_arrival() {
+                    Some(t) if t > world.clock => world.clock = t,
+                    _ => world.clock += 0.05,
+                }
+                continue;
+            }
+            let (d, u) = engine.iteration_cost(&plan, &world);
+            world.apply_plan(&plan, d, u);
+            world.recycle_plan(plan);
+        }
+        assert!(world.all_done(), "run did not complete");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Whole-system determinism per registry combo (plan-stream identical)
+// ---------------------------------------------------------------------
+
+/// The supported sched×alloc grid (mirrors benches/sched_hotpath.rs).
+fn supported_combos() -> Vec<String> {
+    let mut combos = Vec::new();
+    for (sched, allocs) in [
+        ("orca", &["max", "pipelined-max"][..]),
+        ("fastserve", &["max", "pipelined-max"][..]),
+        ("vllm", &["block", "exact", "pipelined-block", "pipelined-exact"][..]),
+        ("sarathi", &["block", "exact", "pipelined-block", "pipelined-exact"][..]),
+        ("multires", &["exact", "pipelined-exact", "max"][..]),
+        ("sync_coupled", &["exact", "pipelined-exact", "max"][..]),
+        ("srtf", &["max", "pipelined-max"][..]),
+        ("econoserve-d", &["exact"][..]),
+        ("econoserve-sd", &["exact"][..]),
+        ("econoserve-sdo", &["exact"][..]),
+        ("econoserve", &["exact", "pipelined-exact", "max"][..]),
+    ] {
+        for a in allocs {
+            combos.push(format!("{sched}+{a}"));
+        }
+    }
+    combos
+}
+
+/// Drive a combo over `items` and return (n_done, iterations, plan-stream
+/// hash). The hash covers every plan's tasks, preemptions and evictions —
+/// two runs must agree bit-for-bit.
+fn drive_hashed(combo: &str, items: &[TraceItem], seed: u64) -> (usize, u64, u64) {
+    let cfg = mini_cfg(4096);
+    let pred = Box::new(SimPredictor::new(0.15, cfg.block_size, seed));
+    let mut world = World::new(cfg, items, pred);
+    let sys = econoserve::sched::by_name(combo).unwrap_or_else(|| panic!("combo {combo}"));
+    world.set_allocator(sys.alloc);
+    let mut sched = sys.sched;
+    let engine = SimEngine::new();
+    let mut hasher = DefaultHasher::new();
+    let mut iters = 0u64;
+    for _ in 0..400_000u32 {
+        if world.all_done() {
+            break;
+        }
+        world.drain_arrivals();
+        let plan = plan_iteration(&mut world, sched.as_mut());
+        if plan.is_empty() {
+            match world.next_arrival() {
+                Some(t) if t > world.clock => world.clock = t,
+                _ => world.clock += 0.05,
+            }
+            continue;
+        }
+        format!("{:?}|{:?}|{:?}", plan.tasks, plan.preempted, plan.evicted).hash(&mut hasher);
+        let (d, u) = engine.iteration_cost(&plan, &world);
+        world.apply_plan(&plan, d, u);
+        world.recycle_plan(plan);
+        iters += 1;
+    }
+    assert!(world.all_done(), "{combo}: run did not complete");
+    (world.n_done(), iters, hasher.finish())
+}
+
+#[test]
+fn every_combo_plan_stream_is_reproducible() {
+    run_prop("combo_plan_determinism", 6, |rng| {
+        let combos = supported_combos();
+        let combo = &combos[rng.range_usize(0, combos.len() - 1)];
+        let seed = rng.next_u64();
+        let items = random_items(rng, 12 + sized(rng, 20), 700);
+        let a = drive_hashed(combo, &items, seed);
+        let b = drive_hashed(combo, &items, seed);
+        assert_eq!(a, b, "{combo}: plan stream not reproducible (indexed structures leak nondeterminism)");
+    });
+}
+
+#[test]
+fn full_grid_smoke_identical_twice() {
+    // Cheap full-grid pass (one small trace, every combo twice): catches
+    // any combo whose indexed port lost determinism or completion.
+    let mut rng = Rng::new(0xECC0);
+    let items = random_items(&mut rng, 14, 600);
+    for combo in supported_combos() {
+        let a = drive_hashed(&combo, &items, 42);
+        let b = drive_hashed(&combo, &items, 42);
+        assert_eq!(a, b, "{combo} diverged across identical runs");
+        assert_eq!(a.0, items.len(), "{combo} lost requests");
+    }
+}

@@ -17,5 +17,9 @@ case "$OUT" in
     *) OUT="$PWD/$OUT" ;;
 esac
 cd rust
+# Machine label recorded in the artifact; the regression gate only FAILS
+# when baseline and fresh run carry the same label (cross-machine
+# comparisons are informational). CI pins this to its runner flavor.
+export BENCH_HOST="${BENCH_HOST:-$(uname -sm | tr ' ' '-')}"
 cargo bench --no-default-features --bench sched_hotpath -- --json "$OUT"
-echo "bench artifact: $OUT"
+echo "bench artifact: $OUT (host: $BENCH_HOST)"

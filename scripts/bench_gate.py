@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Perf-regression gate for BENCH_sched.json.
+
+Usage: scripts/bench_gate.py <fresh.json> [baseline.json] [--update]
+
+Compares a freshly measured sched_hotpath artifact against the
+checked-in baseline (default: BENCH_sched.json at the repo root) and
+fails (exit 1) if any (system, depth) combo's p50 plan latency regressed
+more than the threshold (default 25%, override with BENCH_GATE_PCT).
+
+Rules:
+  * combos present only in one file are reported but do not fail the
+    gate (the grid may legitimately grow/shrink with the code);
+  * a baseline entry with null p50 (the schema artifact before the
+    first measured run) is skipped — the gate only bites once the
+    baseline is populated;
+  * microsecond p50s are only comparable on like hardware: when the two
+    artifacts carry different "host" labels (set via BENCH_HOST, pinned
+    by CI to its runner flavor), regressions are reported but the gate
+    exits 0 — only same-host regressions fail the job;
+  * with --update, the fresh artifact is copied over the baseline after
+    the gate passes, so the checked-in numbers track the current code.
+"""
+
+import json
+import os
+import shutil
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for c in doc.get("combos", []):
+        rows[(c["system"], c.get("depth", 0))] = c
+    return rows, doc.get("host", "unknown")
+
+
+def main(argv):
+    args = [a for a in argv[1:] if a != "--update"]
+    update = "--update" in argv[1:]
+    if not args:
+        print(__doc__)
+        return 2
+    fresh_path = args[0]
+    base_path = args[1] if len(args) > 1 else os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_sched.json"
+    )
+    threshold = float(os.environ.get("BENCH_GATE_PCT", "25")) / 100.0
+
+    fresh, fresh_host = load(fresh_path)
+    if not os.path.exists(base_path):
+        print(f"bench_gate: no baseline at {base_path}; accepting fresh run")
+        if update:
+            shutil.copyfile(fresh_path, base_path)
+        return 0
+    base, base_host = load(base_path)
+    same_host = fresh_host == base_host
+    if not same_host:
+        print(
+            f"bench_gate: host mismatch (baseline '{base_host}' vs fresh "
+            f"'{fresh_host}'): comparison is informational only"
+        )
+
+    failures = []
+    compared = 0
+    for key, b in sorted(base.items()):
+        if b.get("p50") is None:
+            continue  # unpopulated schema artifact: gate not armed yet
+        f = fresh.get(key)
+        if f is None or f.get("p50") is None:
+            print(f"bench_gate: note: {key} in baseline but not in fresh run")
+            continue
+        compared += 1
+        if f["p50"] > b["p50"] * (1.0 + threshold):
+            failures.append(
+                f"{key[0]} @depth {key[1]}: p50 {b['p50']*1e6:.1f}us -> "
+                f"{f['p50']*1e6:.1f}us (+{(f['p50']/b['p50']-1)*100:.0f}% > {threshold*100:.0f}%)"
+            )
+    for key in sorted(set(fresh) - set(base)):
+        print(f"bench_gate: note: new combo {key} (no baseline)")
+
+    if failures:
+        verdict = "FAIL" if same_host else "note (different host, not failing)"
+        print(f"bench_gate: {verdict} — {len(failures)} combo(s) regressed:")
+        for line in failures:
+            print(f"  {line}")
+        if same_host:
+            return 1
+        return 0
+
+    print(f"bench_gate: OK ({compared} combos within {threshold*100:.0f}% of baseline)")
+    if update:
+        shutil.copyfile(fresh_path, base_path)
+        print(f"bench_gate: baseline refreshed at {base_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

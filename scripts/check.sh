@@ -1,15 +1,23 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command (see ROADMAP.md): release build, tests,
-# and formatting. Run from anywhere; operates on the rust/ crate.
+# lints, and formatting. Run from anywhere; operates on the rust/ crate.
 #
-#   scripts/check.sh                           # build + test + fmt --check
+#   scripts/check.sh                           # build + test + clippy + fmt --check
 #   SKIP_FMT=1 scripts/check.sh                # without the formatting gate
+#   SKIP_CLIPPY=1 scripts/check.sh             # without the lint gate
 #   CARGO_FLAGS=--no-default-features scripts/check.sh   # sim stack only (CI)
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 cargo build --release ${CARGO_FLAGS:-}
 cargo test -q ${CARGO_FLAGS:-}
+if [ -z "${SKIP_CLIPPY:-}" ]; then
+    if cargo clippy --version >/dev/null 2>&1; then
+        cargo clippy --all-targets ${CARGO_FLAGS:-} -- -D warnings
+    else
+        echo "check.sh: cargo-clippy not installed; skipping lint gate" >&2
+    fi
+fi
 if [ -z "${SKIP_FMT:-}" ]; then
     cargo fmt --check
 fi
