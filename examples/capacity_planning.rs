@@ -3,7 +3,8 @@
 //!
 //!     cargo run --release --example capacity_planning
 
-use econoserve::cluster::{min_replicas_for_goodput, DistServeConfig, DistServeSim};
+use econoserve::cluster::{DistServeConfig, DistServeSim};
+use econoserve::fleet::min_replicas_for_goodput;
 use econoserve::figures::common;
 
 fn main() {

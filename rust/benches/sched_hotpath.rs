@@ -9,14 +9,20 @@
 //! p50/p95 per (combo, depth) so the perf trajectory is tracked across
 //! PRs and gated in CI (`scripts/bench_gate.py`).
 //!
-//! Modes: `FAST=1` benches default pairings at the 1k depth only (the CI
-//! short mode); the full run covers the supported grid at every depth.
+//! Modes: `FAST=1` benches default pairings at the 1k depth only plus
+//! one `fleet_routing` case (the CI short mode); the full run covers the
+//! supported grid at every depth and the whole fleet router axis
+//! (`fleet_routing+<router>`: per-arrival snapshot+route cost of the
+//! fleet front door over a 4-replica fleet).
 
+use econoserve::coordinator::Stepper;
 use econoserve::core::world::World;
 use econoserve::engine::{Engine, SimEngine};
 use econoserve::figures::common;
+use econoserve::fleet::router::{self, ReplicaSnapshot};
 use econoserve::sched::plan_iteration;
 use econoserve::util::bench::{black_box, time_fn};
+use econoserve::util::rng::derive_seed;
 use std::time::Duration;
 
 const SCHEDS: [&str; 7] =
@@ -105,6 +111,55 @@ fn bench_combo(combo: &str, depth: usize, fast: bool) -> Row {
     }
 }
 
+/// Fleet front-door hot path: snapshot the routable replica set and make
+/// one routing decision, against a 4-replica fleet holding `depth`
+/// queued requests total. This is the per-arrival cost the fleet layer
+/// adds on top of per-replica planning.
+fn bench_fleet_routing(router_name: &str, depth: usize, fast: bool) -> Row {
+    const REPLICAS: usize = 4;
+    let cfg = common::cfg("opt-13b", "sharegpt");
+    let per = (depth / REPLICAS).max(1);
+    let steppers: Vec<Stepper> = (0..REPLICAS)
+        .map(|i| {
+            let mut c = cfg.clone();
+            c.seed = derive_seed(cfg.seed, 1 + i as u64);
+            let items = common::workload(&c, "sharegpt", per as f64 / 2.0, 2.0, 7 + i as u64);
+            let mut st = Stepper::new(c, "econoserve", "sharegpt", false, &items);
+            st.world.clock = 2.0;
+            st.world.drain_arrivals();
+            st
+        })
+        .collect();
+    let mut rt = router::by_name(router_name, derive_seed(cfg.seed, 99)).unwrap();
+    let mut snaps: Vec<ReplicaSnapshot> = Vec::with_capacity(REPLICAS);
+    let (min_iters, min_time) = if fast {
+        (1_000, Duration::from_millis(75))
+    } else {
+        (2_000, Duration::from_millis(150))
+    };
+    let mut res = time_fn(
+        || {
+            snaps.clear();
+            for (id, st) in steppers.iter().enumerate() {
+                snaps.push(ReplicaSnapshot::of_world(id, &st.world));
+            }
+            black_box(rt.route(&snaps));
+        },
+        min_iters,
+        min_time,
+    );
+    let combo = format!("fleet_routing+{router_name}");
+    println!("  [depth {depth:>5}] {}", res.report(&combo));
+    Row {
+        combo,
+        depth,
+        mean_s: res.samples.mean(),
+        p50_s: res.samples.p50(),
+        p95_s: res.samples.p95(),
+        samples: res.samples.len(),
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let json_path = args
@@ -141,6 +196,17 @@ fn main() {
                 println!("  {sched}+{alloc}: skipped (needs admission-complete lease)");
             }
         }
+    }
+
+    // Fleet front-door routing: one representative router in the
+    // FAST/CI set, the full router axis in the long run.
+    let routers: &[&str] = if fast {
+        &["least-kvc"]
+    } else {
+        &["round-robin", "least-queue", "least-kvc", "power-of-two"]
+    };
+    for r in routers {
+        rows.push(bench_fleet_routing(r, HEADLINE_DEPTH, fast));
     }
 
     if let Some(path) = json_path {

@@ -1,8 +1,11 @@
 //! Multi-GPU serving: the DistServe [24] disaggregated baseline and the
-//! replicated-EconoServe capacity model used for Fig 12.
+//! legacy replicated-EconoServe capacity model used for Fig 12 — now a
+//! compat shim over the [`crate::fleet`] layer (online routing,
+//! autoscaling, GPU-hour accounting).
 
 pub mod distserve;
 pub mod replicas;
 
 pub use distserve::{DistServeConfig, DistServeSim};
+#[allow(deprecated)]
 pub use replicas::{min_replicas_for_goodput, replicated_run};

@@ -1,17 +1,34 @@
-//! Replicated single-GPU serving and the Fig 12 min-GPU search.
+//! Replicated single-GPU serving and the Fig 12 min-GPU search —
+//! **legacy compat wrappers** over the fleet layer.
 //!
-//! EconoServe (and the other single-engine schedulers) scale out by
-//! running one replica per `gpus_per_replica` GPUs and load-balancing
-//! requests across replicas (shortest-queue in the paper's homogeneous
-//! setup; round-robin here — equivalent for Poisson arrivals).
+//! The original implementation pre-sharded the trace round-robin *by
+//! index* and simulated each shard independently. That had two
+//! artifacts the fleet layer fixes:
+//!
+//!  * index sharding silently reorders load versus any online balancer
+//!    (a replica could sit idle while another queued, with no way to
+//!    express a different router), and
+//!  * empty shards were dropped from the per-replica summary list, so
+//!    the "mean of summaries" was taken over a varying denominator.
+//!
+//! Both entry points are now thin wrappers over
+//! [`crate::fleet::replicated_run`] — a static fleet with
+//! `router=round-robin, autoscaler=static-k`, where each arrival is
+//! routed at its arrival time. Goodput keeps the same currency
+//! (SLO-satisfying completions per second) on the fleet-wide span. New
+//! code should call the [`crate::fleet`] API directly, which also
+//! exposes GPU-hours and the autoscaling axes.
 
 use crate::config::SystemConfig;
-use crate::coordinator::{harness, RunLimits};
 use crate::metrics::Summary;
 use crate::trace::TraceItem;
 
-/// Run `system` on `k` replicas, splitting `items` round-robin. Returns
-/// (aggregate goodput req/s, mean of per-replica summaries).
+/// Run `system` on `k` round-robin replicas. Returns (aggregate goodput
+/// req/s, per-replica summaries — always `k` of them).
+#[deprecated(
+    note = "use fleet::replicated_run (online routing, GPU-hour accounting); \
+            this wrapper keeps the old (goodput, summaries) shape"
+)]
 pub fn replicated_run(
     cfg: &SystemConfig,
     system: &str,
@@ -21,36 +38,13 @@ pub fn replicated_run(
     k: usize,
     max_sim_time: f64,
 ) -> (f64, Vec<Summary>) {
-    assert!(k >= 1);
-    let mut shards: Vec<Vec<TraceItem>> = vec![Vec::new(); k];
-    for (i, it) in items.iter().enumerate() {
-        shards[i % k].push(*it);
-    }
-    let mut goodput = 0.0;
-    let mut summaries = Vec::with_capacity(k);
-    for shard in shards {
-        if shard.is_empty() {
-            continue;
-        }
-        let res = harness::simulate(
-            cfg,
-            system,
-            trace,
-            &shard,
-            oracle,
-            RunLimits::for_time(max_sim_time),
-        );
-        let span = res.end_time.max(1e-9);
-        // Goodput = SLO-satisfying completions per second.
-        goodput += res.summary.ssr * shard.len() as f64 / span;
-        summaries.push(res.summary);
-    }
-    (goodput, summaries)
+    let res = crate::fleet::replicated_run(cfg, system, trace, items, oracle, k, max_sim_time);
+    (res.summary.goodput_rps, res.per_replica)
 }
 
-/// Minimum number of GPUs `system` needs to reach `target_goodput`
-/// (binary search over replica count; each replica occupies
-/// `cfg.profile.gpus_per_replica` GPUs).
+/// Minimum number of GPUs `system` needs to reach `target_goodput`.
+#[deprecated(note = "use fleet::min_replicas_for_goodput")]
+#[allow(clippy::too_many_arguments)]
 pub fn min_replicas_for_goodput(
     cfg: &SystemConfig,
     system: &str,
@@ -61,29 +55,22 @@ pub fn min_replicas_for_goodput(
     max_replicas: usize,
     max_sim_time: f64,
 ) -> Option<usize> {
-    let feasible = |k: usize| -> bool {
-        let (g, _) = replicated_run(cfg, system, trace, items, oracle, k, max_sim_time);
-        g >= target_goodput
-    };
-    if !feasible(max_replicas) {
-        return None;
-    }
-    let (mut lo, mut hi) = (1usize, max_replicas);
-    while lo < hi {
-        let mid = (lo + hi) / 2;
-        if feasible(mid) {
-            hi = mid;
-        } else {
-            lo = mid + 1;
-        }
-    }
-    Some(lo)
+    crate::fleet::min_replicas_for_goodput(
+        cfg,
+        system,
+        trace,
+        items,
+        oracle,
+        target_goodput,
+        max_replicas,
+        max_sim_time,
+    )
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
-    use crate::config::ModelProfile;
+    use crate::config::{ModelProfile, SystemConfig};
+    use crate::fleet;
     use crate::trace::{TraceGen, TraceSpec};
 
     #[test]
@@ -94,8 +81,12 @@ mod tests {
         let gen = TraceGen::new(TraceSpec::sharegpt());
         // Overload one replica.
         let items = gen.generate(300, 12.0, 4096, 11);
-        let (g1, _) = replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 1, 300.0);
-        let (g3, _) = replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 3, 300.0);
+        let g1 = fleet::replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 1, 300.0)
+            .summary
+            .goodput_rps;
+        let g3 = fleet::replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 3, 300.0)
+            .summary
+            .goodput_rps;
         assert!(g3 > g1, "g1={g1} g3={g3}");
     }
 
@@ -106,8 +97,10 @@ mod tests {
         cfg.t_g = 0.025;
         let gen = TraceGen::new(TraceSpec::sharegpt());
         let items = gen.generate(200, 8.0, 4096, 13);
-        let (g2, _) = replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 2, 300.0);
-        let k = min_replicas_for_goodput(
+        let g2 = fleet::replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 2, 300.0)
+            .summary
+            .goodput_rps;
+        let k = fleet::min_replicas_for_goodput(
             &cfg,
             "econoserve",
             "sharegpt",
@@ -119,5 +112,27 @@ mod tests {
         )
         .expect("target must be feasible with 4 replicas");
         assert!(k <= 2, "k={k}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_wrapper_matches_fleet() {
+        let mut cfg = SystemConfig::new(ModelProfile::opt_13b());
+        cfg.t_p = 0.1;
+        cfg.t_g = 0.025;
+        // Bit-deterministic runs: don't charge measured scheduler
+        // wall-clock into the simulated clock.
+        cfg.sched_time_scale = 0.0;
+        let gen = TraceGen::new(TraceSpec::sharegpt());
+        let items = gen.generate(120, 6.0, 4096, 17);
+        let (g, summaries) =
+            super::replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 2, 300.0);
+        let res = fleet::replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 2, 300.0);
+        assert_eq!(summaries.len(), 2, "one summary per replica, empty or not");
+        assert!((g - res.summary.goodput_rps).abs() < 1e-9);
+        assert_eq!(
+            summaries.iter().map(|s| s.n_done).sum::<usize>(),
+            res.summary.n_done
+        );
     }
 }

@@ -232,6 +232,21 @@ impl SystemConfig {
     pub fn slo_budget(&self, rl: u32) -> Time {
         self.slo_scale * (self.t_p + self.t_g * rl as f64)
     }
+
+    /// Crude single-replica capacity estimate (req/s) for a trace's
+    /// length mix: min of the compute and KVC rooflines. Used to scale
+    /// experiment rate grids (`figures::common`) and as the forecast
+    /// autoscaler's per-replica serving-rate prior (`fleet`).
+    pub fn capacity_estimate(&self, spec: &crate::trace::TraceSpec) -> f64 {
+        let total_tokens = spec.input.avg + spec.output.avg;
+        let compute_cap =
+            self.profile.peak_flops / (self.profile.flops_per_token() * total_tokens);
+        // KVC: avg resident footprint ~ prompt + RL/2; service ~ RL * t_g.
+        let footprint = spec.input.avg + spec.output.avg / 2.0;
+        let service = spec.output.avg * self.t_g;
+        let kvc_cap = self.profile.kvc_tokens() as f64 / footprint / service;
+        compute_cap.min(kvc_cap)
+    }
 }
 
 #[cfg(test)]

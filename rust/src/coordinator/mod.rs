@@ -64,6 +64,35 @@ pub fn run(
     run_admitted(world, sched, engine, limits, None)
 }
 
+/// Stall detection: if no batch executes for this much SIMULATED time
+/// while runnable work remains, the scheduler is stuck (bug), not
+/// waiting.
+const STALL_HORIZON: f64 = 120.0;
+
+/// The shared per-iteration core of [`run_admitted`] and
+/// [`Stepper::advance_to`]: plan one iteration (measuring the
+/// scheduler's wall-clock cost) and, if a batch was formed, charge the
+/// scheduling cost to the simulated clock and execute the plan. Returns
+/// `true` when a batch executed; on `false` (empty plan) the caller owns
+/// the idle-clock policy.
+fn plan_and_execute(world: &mut World, sched: &mut dyn Scheduler, engine: &dyn Engine) -> bool {
+    let t0 = Instant::now();
+    let plan = plan_iteration(world, sched);
+    let charged = t0.elapsed().as_secs_f64() * world.cfg.sched_time_scale;
+    if plan.is_empty() {
+        world.recycle_plan(plan);
+        return false;
+    }
+    world.col.record_sched(charged);
+    world.clock += charged;
+    let (dur, util) = engine.iteration_cost(&plan, world);
+    world.apply_plan(&plan, dur, util);
+    // Hand the plan's buffers back for the next iteration (steady-state
+    // planning allocates nothing).
+    world.recycle_plan(plan);
+    true
+}
+
 /// As [`run`], but with the same [`AdmissionController`] front door the
 /// real serving path uses: each new arrival is admitted or shed before
 /// the scheduler ever sees it (queue-depth bound + SLO infeasibility).
@@ -79,9 +108,6 @@ pub fn run_admitted(
     let wall_start = Instant::now();
     let mut iters = 0u64;
     let mut rejected = 0usize;
-    // Stall detection: if no batch executes for this much SIMULATED time
-    // while work remains, the scheduler is stuck (bug), not waiting.
-    const STALL_HORIZON: f64 = 120.0;
     let mut last_progress = 0.0f64;
 
     loop {
@@ -94,16 +120,18 @@ pub fn run_admitted(
             rejected += shed_new_arrivals(world, adm, newly);
         }
 
-        let t0 = Instant::now();
-        let plan = plan_iteration(world, sched);
-        let sched_wall = t0.elapsed().as_secs_f64();
-        let charged = sched_wall * world.cfg.sched_time_scale;
-
-        if plan.is_empty() {
+        let before = world.clock;
+        if !plan_and_execute(world, sched, engine) {
             // Nothing runnable. Fast-forward: to the next arrival if it is
             // sooner than the idle quantum, else by the idle quantum —
             // schedulers may be waiting on non-arrival wakeups such as
             // prediction readiness (§3.3.2 predictor latency).
+            if world.n_active() == 0 {
+                // Only future arrivals remain (long gaps are normal
+                // under the low-rate/bursty arrival processes): waiting
+                // is progress, not a stall.
+                last_progress = world.clock;
+            }
             assert!(
                 world.clock - last_progress < STALL_HORIZON,
                 "{}: no batch executed for {STALL_HORIZON}s sim time ({} inbox, {} done/{})",
@@ -117,19 +145,9 @@ pub fn run_admitted(
                 Some(t) if t > world.clock => t.min(idle_step),
                 _ => idle_step,
             };
-            world.recycle_plan(plan);
             continue;
         }
-        last_progress = world.clock;
-
-        world.col.record_sched(charged);
-        world.clock += charged;
-
-        let (dur, util) = engine.iteration_cost(&plan, world);
-        world.apply_plan(&plan, dur, util);
-        // Hand the plan's buffers back for the next iteration
-        // (steady-state planning allocates nothing).
-        world.recycle_plan(plan);
+        last_progress = before;
         iters += 1;
     }
 
@@ -179,6 +197,125 @@ fn shed_new_arrivals(world: &mut World, adm: &AdmissionController, newly: usize)
         }
     }
     shed
+}
+
+/// A resumable, step-driven serving harness: one replica's world +
+/// scheduler + sim engine that can be advanced to a time horizon and
+/// resumed — the building block the fleet layer interleaves N of on a
+/// shared clock. Runs the same per-iteration loop as [`run`], with two
+/// differences required for interleaving:
+///
+///  * the clock never free-runs past the caller's horizon while idle
+///    (arrivals routed by the fleet front door must not land in the
+///    replica's past), and
+///  * requests are injected *during* the run via [`Stepper::inject`]
+///    (which files them through [`World::push_item`]).
+pub struct Stepper {
+    pub world: World,
+    sched: Box<dyn Scheduler>,
+    engine: crate::engine::SimEngine,
+    last_progress: f64,
+    pub iterations: u64,
+}
+
+impl Stepper {
+    /// Build a stepper over `items` (may be empty — fleet replicas start
+    /// blank and receive routed arrivals). `system` uses the
+    /// `sched::by_name` registry grammar.
+    pub fn new(
+        cfg: crate::config::SystemConfig,
+        system: &str,
+        trace: &str,
+        oracle: bool,
+        items: &[crate::trace::TraceItem],
+    ) -> Self {
+        let pred = harness::predictor_for(&cfg, trace, oracle);
+        let mut world = World::new(cfg, items, pred);
+        let sys = crate::sched::by_name(system)
+            .unwrap_or_else(|| panic!("unknown system '{system}'"));
+        world.set_allocator(sys.alloc);
+        Stepper {
+            world,
+            sched: sys.sched,
+            engine: crate::engine::SimEngine::new(),
+            last_progress: 0.0,
+            iterations: 0,
+        }
+    }
+
+    pub fn sched_name(&self) -> &'static str {
+        self.sched.name()
+    }
+
+    /// Fast-forward an idle stepper's clock (and its stall-detection
+    /// anchor) to the shared fleet clock — used when a replica boots
+    /// mid-run, so its world starts at the boot time, not t=0.
+    pub fn sync_clock(&mut self, t: f64) {
+        self.world.clock = self.world.clock.max(t);
+        self.last_progress = self.last_progress.max(t);
+    }
+
+    /// Route one request into this replica (fleet front door).
+    pub fn inject(&mut self, it: &crate::trace::TraceItem) -> crate::core::ReqId {
+        self.world.push_item(it)
+    }
+
+    /// Advance the world until `clock >= horizon` or all work completes.
+    /// Iterations that start before the horizon may overshoot it (an
+    /// executing batch spans the boundary, as on real hardware); an idle
+    /// world's clock is clamped *to* the horizon so later injections are
+    /// never in its past.
+    pub fn advance_to(&mut self, horizon: f64) {
+        loop {
+            if self.world.clock >= horizon {
+                return;
+            }
+            if self.world.all_done() {
+                // Idle replica: follow the shared fleet clock. Waiting
+                // with nothing to do is progress — keep the stall
+                // detector anchored so work injected after a long idle
+                // stretch does not trip it.
+                self.world.clock = horizon;
+                self.last_progress = horizon;
+                return;
+            }
+            self.world.drain_arrivals();
+
+            let before = self.world.clock;
+            if !plan_and_execute(&mut self.world, self.sched.as_mut(), &self.engine) {
+                if self.world.n_active() == 0 {
+                    // Only future arrivals remain: waiting is progress.
+                    self.last_progress = self.world.clock;
+                } else {
+                    assert!(
+                        self.world.clock - self.last_progress < STALL_HORIZON,
+                        "{}: no batch executed for {STALL_HORIZON}s sim time \
+                         ({} inbox, {} done/{})",
+                        self.sched.name(),
+                        self.world.inbox.len(),
+                        self.world.n_done(),
+                        self.world.recs.len()
+                    );
+                }
+                let idle_step = self.world.clock + 0.05;
+                let target = match self.world.next_arrival() {
+                    Some(t) if t > self.world.clock => t.min(idle_step),
+                    _ => idle_step,
+                };
+                self.world.clock = target.min(horizon);
+                continue;
+            }
+            self.last_progress = before;
+            self.iterations += 1;
+        }
+    }
+
+    /// Per-replica summary over everything this stepper served, with the
+    /// fleet-wide span as the time base (so per-replica throughputs are
+    /// comparable and sum correctly).
+    pub fn summary_at(&self, end_time: f64) -> Summary {
+        summarize(&self.world.recs, &self.world.col, end_time)
+    }
 }
 
 /// Convenience: build world + scheduler + sim engine from names and run.
@@ -287,6 +424,61 @@ mod tests {
         );
         // Shed requests count against SSR (they are SLO misses).
         assert!(res.summary.ssr <= res.summary.n_done as f64 / n as f64 + 1e-9);
+    }
+
+    #[test]
+    fn stepper_interleaved_matches_single_run() {
+        // Advancing a Stepper in 1 s horizons must execute the same
+        // iteration sequence as one uninterrupted `run`: idle clocks are
+        // clamped to each horizon but batches only ever start at arrival
+        // or idle-quantum points both paths hit exactly. Zero
+        // sched-time charging keeps the comparison bit-deterministic.
+        let mut cfg = SystemConfig::new(ModelProfile::opt_13b());
+        cfg.sched_time_scale = 0.0;
+        let gen = TraceGen::new(TraceSpec::alpaca());
+        let items = gen.generate(120, 20.0, cfg.profile.max_total_len, 5);
+        let full = harness::simulate(&cfg, "orca", "alpaca", &items, true, RunLimits::default());
+        let mut st = Stepper::new(cfg, "orca", "alpaca", true, &items);
+        assert_eq!(st.sched_name(), "orca");
+        let mut horizon = 0.0;
+        while !st.world.all_done() {
+            horizon += 1.0;
+            st.advance_to(horizon);
+        }
+        let s = st.summary_at(st.world.clock);
+        assert_eq!(s.n_done, full.summary.n_done);
+        assert!(
+            (s.mean_jct - full.summary.mean_jct).abs() < 1e-9,
+            "stepper {} vs run {}",
+            s.mean_jct,
+            full.summary.mean_jct
+        );
+        assert_eq!(st.iterations, full.summary.iterations);
+    }
+
+    #[test]
+    fn stepper_injects_mid_run() {
+        // The fleet front door routes arrivals while the replica runs:
+        // inject after some progress and confirm completion.
+        let mut cfg = SystemConfig::new(ModelProfile::opt_13b());
+        cfg.sched_time_scale = 0.0;
+        let gen = TraceGen::new(TraceSpec::alpaca());
+        let items = gen.generate(20, 10.0, cfg.profile.max_total_len, 8);
+        let mut st = Stepper::new(cfg, "orca", "alpaca", true, &[]);
+        let mut fed = 0usize;
+        let mut horizon = 0.0;
+        while fed < items.len() || !st.world.all_done() {
+            while fed < items.len() && items[fed].arrival <= horizon {
+                st.inject(&items[fed]);
+                fed += 1;
+            }
+            horizon += 0.5;
+            st.advance_to(horizon);
+        }
+        assert_eq!(st.world.n_done(), items.len());
+        let s = st.summary_at(st.world.clock);
+        assert_eq!(s.n_done, items.len());
+        assert!(s.mean_jct > 0.0);
     }
 
     #[test]

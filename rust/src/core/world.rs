@@ -54,6 +54,32 @@ impl Events {
     }
 }
 
+/// Build one request record (clamped lengths, SLO deadline from the cfg
+/// formula, padded RL prediction) plus its prediction-ready time. The
+/// single construction path for both seeded (`World::new`) and
+/// dynamically injected (`World::push_item`) requests — the two
+/// populations must never diverge.
+fn build_rec(
+    cfg: &SystemConfig,
+    predictor: &mut dyn Predictor,
+    id: ReqId,
+    it: &TraceItem,
+) -> (ReqRec, Time) {
+    let true_rl = it.true_rl.max(1);
+    let deadline = it.arrival + cfg.slo_budget(true_rl);
+    let req = Request {
+        id,
+        arrival: it.arrival,
+        prompt_len: it.prompt_len.max(1),
+        true_rl,
+        deadline,
+    };
+    let mut rec = ReqRec::new(req);
+    let raw = predictor.predict_raw(id, true_rl);
+    rec.predicted_rl = cfg.pad_prediction(raw);
+    (rec, it.arrival + predictor.latency())
+}
+
 pub struct World {
     pub cfg: SystemConfig,
     pub clock: Time,
@@ -100,19 +126,9 @@ impl World {
         let mut recs = Vec::with_capacity(items.len());
         let mut pred_ready = Vec::with_capacity(items.len());
         for (id, it) in items.iter().enumerate() {
-            let deadline = it.arrival + cfg.slo_budget(it.true_rl);
-            let req = Request {
-                id,
-                arrival: it.arrival,
-                prompt_len: it.prompt_len.max(1),
-                true_rl: it.true_rl.max(1),
-                deadline,
-            };
-            let mut rec = ReqRec::new(req);
-            let raw = predictor.predict_raw(id, it.true_rl.max(1));
-            rec.predicted_rl = cfg.pad_prediction(raw);
+            let (rec, ready) = build_rec(&cfg, predictor.as_mut(), id, it);
             recs.push(rec);
-            pred_ready.push(it.arrival + predictor.latency());
+            pred_ready.push(ready);
         }
         let mut future: Vec<ReqId> = (0..recs.len()).collect();
         // NaN-safe total order (arrivals are finite in practice, but a
@@ -239,6 +255,33 @@ impl World {
         rec.predicted_base = rec.generated;
         rec.predicted_rl = padded;
         padded
+    }
+
+    /// Append a request that arrives *dynamically* — the fleet layer's
+    /// front door routes each arrival to a replica at its arrival time,
+    /// so replica worlds grow during the run instead of being seeded with
+    /// a pre-sharded trace. Assigns the next `ReqId`, runs the world's
+    /// predictor, derives the SLO deadline from the config, and files the
+    /// request into the inbox (already due) or the future-arrivals feed.
+    pub fn push_item(&mut self, it: &TraceItem) -> ReqId {
+        let id = self.recs.len();
+        let (rec, ready) = build_rec(&self.cfg, self.predictor.as_mut(), id, it);
+        self.recs.push(rec);
+        self.pred_ready.push(ready);
+        self.active_pos.push(usize::MAX);
+        if it.arrival <= self.clock {
+            self.inbox.push_back(id);
+            self.index_activate(id);
+        } else {
+            // Keep `future` sorted descending by arrival (next at the
+            // back); equal arrivals stay FIFO.
+            let recs = &self.recs;
+            let pos = self
+                .future
+                .partition_point(|&x| recs[x].req.arrival.total_cmp(&it.arrival).is_gt());
+            self.future.insert(pos, id);
+        }
+        id
     }
 
     /// Move arrivals with `arrival <= clock` into the inbox. Returns how
@@ -768,6 +811,30 @@ mod tests {
         assert_eq!(w.drain_arrivals(), 2);
         assert_eq!(w.inbox.len(), 2);
         assert_eq!(w.next_arrival(), Some(2.0));
+    }
+
+    #[test]
+    fn push_item_files_past_and_future_arrivals() {
+        let mut w = world(&[item(0.0, 10, 5), item(5.0, 10, 5)]);
+        w.clock = 1.0;
+        w.drain_arrivals();
+        assert_eq!(w.inbox.len(), 1);
+        // Past arrival goes straight to the inbox and counts as active.
+        let a = w.push_item(&item(0.5, 8, 3));
+        assert_eq!(a, 2);
+        assert_eq!(w.inbox.len(), 2);
+        assert_eq!(w.n_active(), 2);
+        // Future arrivals interleave with the seeded feed in time order.
+        let b = w.push_item(&item(3.0, 8, 3));
+        assert_eq!(w.next_arrival(), Some(3.0));
+        w.clock = 6.0;
+        assert_eq!(w.drain_arrivals(), 2);
+        assert_eq!(w.inbox.pop_front(), Some(0));
+        assert_eq!(w.inbox.pop_front(), Some(2));
+        assert_eq!(w.inbox.pop_front(), Some(b));
+        assert_eq!(w.inbox.pop_front(), Some(1));
+        assert!(w.recs[a].predicted_rl >= 1);
+        assert!(w.recs[a].req.deadline > 0.5);
     }
 
     #[test]

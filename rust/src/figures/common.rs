@@ -53,13 +53,7 @@ pub fn cfg(model: &str, trace: &str) -> SystemConfig {
 /// and traces: min of the compute and KVC rooflines.
 pub fn capacity_estimate(cfg: &SystemConfig, trace: &str) -> f64 {
     let spec = TraceSpec::by_name(trace).unwrap();
-    let total_tokens = spec.input.avg + spec.output.avg;
-    let compute_cap = cfg.profile.peak_flops / (cfg.profile.flops_per_token() * total_tokens);
-    // KVC: avg resident footprint ~ prompt + RL/2; service time ~ RL * t_g.
-    let footprint = spec.input.avg + spec.output.avg / 2.0;
-    let service = spec.output.avg * cfg.t_g;
-    let kvc_cap = cfg.profile.kvc_tokens() as f64 / footprint / service;
-    compute_cap.min(kvc_cap)
+    cfg.capacity_estimate(&spec)
 }
 
 /// A rate grid spanning under- to over-load for (model, trace).

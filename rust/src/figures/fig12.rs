@@ -1,10 +1,16 @@
 //! Figure 12: number of GPUs EconoServe needs to match DistServe's
 //! goodput, across homogeneous, heterogeneous (H100 prefill) and
-//! large-scale (Vidur-style analytic scaling) settings.
+//! large-scale (Vidur-style analytic scaling) settings — plus the fleet
+//! layer's dynamic extension: GPU-hour cost under diurnal load, where an
+//! autoscaled fleet matches the static peak fleet's SLO attainment with
+//! measurably fewer GPU-hours (the SageServe/Aladdin cost story neither
+//! static layer can express).
 
 use super::common::{self, MAX_TIME};
-use crate::cluster::{min_replicas_for_goodput, DistServeConfig, DistServeSim};
+use crate::cluster::{DistServeConfig, DistServeSim};
 use crate::config::ModelProfile;
+use crate::fleet::{self, FleetConfig};
+use crate::trace::ArrivalProcess;
 use crate::util::bench::BenchOut;
 use crate::util::stats::Table;
 
@@ -33,7 +39,7 @@ pub fn run(fast: bool) {
             };
             let dist = DistServeSim::new(dcfg).run(&items, MAX_TIME);
             let dist_gpus = 2 * cfg.profile.gpus_per_replica as usize;
-            let econo = min_replicas_for_goodput(
+            let econo = fleet::min_replicas_for_goodput(
                 &cfg,
                 "econoserve",
                 trace,
@@ -76,15 +82,9 @@ pub fn run(fast: bool) {
     let dist = DistServeSim::new(dcfg).run(&items, MAX_TIME);
     let per_pair = dist.goodput; // goodput per 2 GPUs
     let target_total = per_pair * 2000.0; // 2000 prefill + 2000 decode GPUs
-    let (econo_goodput, _) = crate::cluster::replicated_run(
-        &cfg,
-        "econoserve",
-        trace,
-        &items,
-        false,
-        1,
-        MAX_TIME,
-    );
+    let econo_goodput = fleet::replicated_run(&cfg, "econoserve", trace, &items, false, 1, MAX_TIME)
+        .summary
+        .goodput_rps;
     let econo_gpus_needed = (target_total / econo_goodput.max(1e-9)).ceil();
     let mut t = Table::new(&["setting", "dist_gpus", "econo_gpus", "saved_%"]);
     t.rowf(
@@ -96,5 +96,64 @@ pub fn run(fast: bool) {
         ],
     );
     out.section("large-scale analytic scaling (Vidur substitute)", t);
+
+    // Dynamic extension: GPU-hour cost under a diurnal day-curve. A
+    // static fleet must be provisioned for the peak; the autoscalers
+    // ride the curve (reactive chases pressure, forecast pre-boots
+    // ahead of ramps) and bank the trough as GPU-hours saved.
+    let cfg = common::cfg("opt-13b", trace);
+    let cap = common::capacity_estimate(&cfg, trace);
+    let max_replicas = 4usize;
+    let period = if fast { 200.0 } else { 400.0 };
+    let diurnal_duration = 2.0 * period;
+    let process = ArrivalProcess::Diurnal {
+        // Peak (1.6x mean) wants ~3-4 replicas; trough (0.4x mean) fits
+        // comfortably on one.
+        mean_rate: 1.6 * cap,
+        amplitude: 0.6,
+        period,
+    };
+    let gen = crate::trace::TraceGen::new(crate::trace::TraceSpec::by_name(trace).unwrap());
+    let items =
+        gen.generate_arrivals(process, diurnal_duration, cfg.profile.max_total_len, cfg.seed);
+    let mut t = Table::new(&[
+        "autoscaler",
+        "ssr_%",
+        "goodput_rps",
+        "gpu_hours",
+        "goodput_per_gpu_h",
+        "peak_reps",
+        "mean_reps",
+    ]);
+    for scaler in ["static-k", "reactive", "forecast"] {
+        let mut fc = FleetConfig::new(cfg.clone(), "econoserve", trace);
+        fc.router = "least-kvc".to_string();
+        fc.autoscaler = scaler.to_string();
+        fc.max_sim_time = diurnal_duration * 4.0;
+        fc.max_replicas = max_replicas;
+        if scaler == "static-k" {
+            // The static baseline pays for peak capacity the whole day.
+            fc.init_replicas = max_replicas;
+            fc.min_replicas = max_replicas;
+        } else {
+            fc.init_replicas = 2;
+            fc.min_replicas = 1;
+            fc.boot_latency = 8.0;
+        }
+        let res = fleet::run(&fc, &items);
+        let s = &res.summary;
+        t.rowf(
+            scaler,
+            &[
+                s.ssr * 100.0,
+                s.goodput_rps,
+                s.gpu_hours,
+                s.goodput_per_gpu_hour,
+                s.peak_replicas as f64,
+                s.mean_replicas,
+            ],
+        );
+    }
+    out.section("GPU-hour cost under diurnal load (fleet layer)", t);
     out.finish();
 }

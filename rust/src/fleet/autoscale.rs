@@ -1,0 +1,326 @@
+//! Autoscalers: the fleet's capacity axis.
+//!
+//! An autoscaler is consulted at every control tick with a fleet
+//! observation and answers with the *desired serving size* (Active +
+//! Booting replicas); the sim clamps it to `[min, max]`, boots new
+//! replicas with the configured boot latency, and retires replicas by
+//! drain-before-retire (no new routes, finish in-flight work, then
+//! release the GPUs). Three policies:
+//!
+//!  * `static-k` — fixed fleet (the legacy Fig 12 capacity model);
+//!  * `reactive` — threshold scaling on queue/KVC pressure with
+//!    hysteresis (scale up near saturation, down when comfortably idle);
+//!  * `forecast` — SageServe-style windowed arrival-rate forecasting:
+//!    fits a short linear trend to recent arrival-rate buckets and
+//!    provisions for the rate expected one boot-latency ahead, so
+//!    capacity arrives *before* the ramp instead of after it.
+
+use std::collections::VecDeque;
+
+use super::router::ReplicaSnapshot;
+
+/// Fleet state handed to the autoscaler at each control tick.
+#[derive(Debug)]
+pub struct ScaleObs<'a> {
+    pub now: f64,
+    /// Routable replicas (Active), in id order.
+    pub active: &'a [ReplicaSnapshot],
+    /// Replicas ordered but not yet routable.
+    pub booting: usize,
+    /// Replicas finishing their in-flight work before retirement.
+    pub draining: usize,
+}
+
+impl ScaleObs<'_> {
+    /// Serving size: what the autoscaler's target is compared against.
+    pub fn serving(&self) -> usize {
+        self.active.len() + self.booting
+    }
+}
+
+/// Capacity policy: desired serving-replica count per control tick.
+pub trait Autoscaler {
+    fn name(&self) -> &'static str;
+
+    /// Observe one routed arrival (feeds rate estimators; default no-op).
+    fn on_arrival(&mut self, _t: f64) {}
+
+    /// Desired serving size (Active + Booting), or `None` to hold. The
+    /// sim clamps the answer to the fleet's `[min, max]` bounds.
+    fn plan(&mut self, obs: &ScaleObs<'_>) -> Option<usize>;
+}
+
+/// Tuning shared by the scaling policies, derived once per fleet from
+/// the system config and trace mix (see `FleetConfig::knobs`).
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleKnobs {
+    /// Comfortable resident-request ceiling of one replica (KVC tokens /
+    /// expected per-request footprint) — normalizes queue pressure.
+    pub resident_ceiling: f64,
+    /// Sustainable serving rate of one replica (req/s).
+    pub per_replica_rps: f64,
+    /// Seconds between control ticks.
+    pub control_interval: f64,
+    /// Seconds from scale-up decision to a routable replica.
+    pub boot_latency: f64,
+}
+
+/// Autoscaler registry names (the `autoscaler=` axis of the grammar).
+pub fn all_autoscalers() -> [&'static str; 3] {
+    ["static-k", "reactive", "forecast"]
+}
+
+/// Resolve an autoscaler by name with the given tuning.
+pub fn by_name(name: &str, knobs: ScaleKnobs) -> Option<Box<dyn Autoscaler>> {
+    match name {
+        "static-k" => Some(Box::new(StaticK)),
+        "reactive" => Some(Box::new(Reactive {
+            knobs,
+            pressure_hi: 0.70,
+            pressure_lo: 0.20,
+            kvc_hi: 0.85,
+        })),
+        "forecast" => Some(Box::new(Forecast::new(knobs))),
+        _ => None,
+    }
+}
+
+/// Fixed-size fleet: whatever was booted at t=0 stays.
+struct StaticK;
+
+impl Autoscaler for StaticK {
+    fn name(&self) -> &'static str {
+        "static-k"
+    }
+
+    fn plan(&mut self, _obs: &ScaleObs<'_>) -> Option<usize> {
+        None
+    }
+}
+
+/// Threshold scaling with hysteresis. Pressure is in-flight requests per
+/// active replica normalized by the replica's resident ceiling — i.e.
+/// "how full is the decode economy" — with KVC allocation as a second
+/// trigger so memory saturation scales up even when queues look short.
+struct Reactive {
+    knobs: ScaleKnobs,
+    pressure_hi: f64,
+    pressure_lo: f64,
+    kvc_hi: f64,
+}
+
+impl Autoscaler for Reactive {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+
+    fn plan(&mut self, obs: &ScaleObs<'_>) -> Option<usize> {
+        if obs.active.is_empty() {
+            return None;
+        }
+        let inflight: usize = obs.active.iter().map(|r| r.in_flight).sum();
+        let per = inflight as f64 / obs.active.len() as f64;
+        let pressure = per / self.knobs.resident_ceiling.max(1.0);
+        let kvc = obs
+            .active
+            .iter()
+            .map(|r| 1.0 - r.free_kvc as f64 / r.kvc_capacity.max(1) as f64)
+            .sum::<f64>()
+            / obs.active.len() as f64;
+        let serving = obs.serving();
+        if pressure > self.pressure_hi || kvc > self.kvc_hi {
+            Some(serving + 1)
+        } else if pressure < self.pressure_lo && kvc < self.kvc_hi * 0.5 {
+            Some(serving.saturating_sub(1))
+        } else {
+            None
+        }
+    }
+}
+
+/// Windowed arrival-rate forecasting (after SageServe): bucket arrivals
+/// at the control interval, fit a linear trend over the recent window,
+/// and provision for the rate expected one boot-latency (plus one tick)
+/// ahead at a target utilization — pre-booting ahead of ramps.
+struct Forecast {
+    knobs: ScaleKnobs,
+    /// Completed-bucket arrival counts, oldest first: (bucket idx, n).
+    counts: VecDeque<(u64, f64)>,
+    window: usize,
+    /// Target utilization of a replica's sustainable rate.
+    headroom: f64,
+}
+
+impl Forecast {
+    fn new(knobs: ScaleKnobs) -> Self {
+        Forecast { knobs, counts: VecDeque::new(), window: 8, headroom: 0.75 }
+    }
+
+    fn bucket_of(&self, t: f64) -> u64 {
+        (t / self.knobs.control_interval.max(1e-9)) as u64
+    }
+
+    /// Extend the bucket series (zero-filled) up to and including `idx`.
+    fn tick_to(&mut self, idx: u64) {
+        let mut next = match self.counts.back() {
+            Some(&(last, _)) => last + 1,
+            None => idx,
+        };
+        while next <= idx {
+            self.counts.push_back((next, 0.0));
+            next += 1;
+        }
+        // Keep the window plus the current (partial) bucket.
+        while self.counts.len() > self.window + 1 {
+            self.counts.pop_front();
+        }
+    }
+
+    /// Predicted arrival rate `lead` seconds past `now`: max of the
+    /// trend-line extrapolation and the latest complete bucket's rate
+    /// (never scale down below what is arriving *right now*).
+    fn predict(&mut self, now: f64) -> Option<f64> {
+        self.tick_to(self.bucket_of(now));
+        let dt = self.knobs.control_interval;
+        // Exclude the current partial bucket from the fit.
+        let cur = self.bucket_of(now);
+        let pts: Vec<(f64, f64)> = self
+            .counts
+            .iter()
+            .filter(|&&(i, _)| i < cur)
+            .map(|&(i, n)| ((i as f64 + 0.5) * dt, n / dt))
+            .collect();
+        if pts.len() < 2 {
+            return None;
+        }
+        let n = pts.len() as f64;
+        let (sx, sy): (f64, f64) =
+            pts.iter().fold((0.0, 0.0), |(a, b), &(x, y)| (a + x, b + y));
+        let (mx, my) = (sx / n, sy / n);
+        let (mut sxx, mut sxy) = (0.0, 0.0);
+        for &(x, y) in &pts {
+            sxx += (x - mx) * (x - mx);
+            sxy += (x - mx) * (y - my);
+        }
+        let slope = if sxx > 1e-12 { sxy / sxx } else { 0.0 };
+        let lead = self.knobs.boot_latency + dt;
+        let trend = my + slope * (now + lead - mx);
+        // Floor at the recent observed rate (two-bucket mean smooths the
+        // per-bucket Poisson noise) so a noisy downward trend never
+        // sheds capacity demand is still consuming.
+        let latest = (pts[pts.len() - 1].1 + pts[pts.len() - 2].1) / 2.0;
+        // Clamp the extrapolation: a two-point window can swing wildly.
+        let cap = 2.0 * pts.iter().map(|&(_, y)| y).fold(0.0, f64::max);
+        Some(trend.clamp(0.0, cap).max(latest))
+    }
+}
+
+impl Autoscaler for Forecast {
+    fn name(&self) -> &'static str {
+        "forecast"
+    }
+
+    fn on_arrival(&mut self, t: f64) {
+        self.tick_to(self.bucket_of(t));
+        if let Some(back) = self.counts.back_mut() {
+            back.1 += 1.0;
+        }
+    }
+
+    fn plan(&mut self, obs: &ScaleObs<'_>) -> Option<usize> {
+        let rate = self.predict(obs.now)?;
+        let per = (self.knobs.per_replica_rps * self.headroom).max(1e-9);
+        Some((rate / per).ceil().max(1.0) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knobs() -> ScaleKnobs {
+        ScaleKnobs {
+            resident_ceiling: 40.0,
+            per_replica_rps: 5.0,
+            control_interval: 5.0,
+            boot_latency: 10.0,
+        }
+    }
+
+    fn snap(in_flight: usize, free_kvc: u32) -> ReplicaSnapshot {
+        ReplicaSnapshot { id: 0, in_flight, free_kvc, kvc_capacity: 1000 }
+    }
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in all_autoscalers() {
+            assert_eq!(by_name(name, knobs()).unwrap().name(), name);
+        }
+        assert!(by_name("oracle", knobs()).is_none());
+    }
+
+    #[test]
+    fn static_k_always_holds() {
+        let mut s = by_name("static-k", knobs()).unwrap();
+        let active = [snap(500, 0)];
+        let obs = ScaleObs { now: 1.0, active: &active, booting: 0, draining: 0 };
+        assert_eq!(s.plan(&obs), None);
+    }
+
+    #[test]
+    fn reactive_scales_with_pressure() {
+        let mut s = by_name("reactive", knobs()).unwrap();
+        // 35/40 resident: saturated, scale up.
+        let hot = [snap(35, 100)];
+        let obs = ScaleObs { now: 1.0, active: &hot, booting: 0, draining: 0 };
+        assert_eq!(s.plan(&obs), Some(2));
+        // 2/40 resident and empty cache: scale down.
+        let cold = [snap(2, 950), snap(1, 990)];
+        let obs = ScaleObs { now: 2.0, active: &cold, booting: 0, draining: 0 };
+        assert_eq!(s.plan(&obs), Some(1));
+        // Mid-band: hold.
+        let mid = [snap(16, 500)];
+        let obs = ScaleObs { now: 3.0, active: &mid, booting: 0, draining: 0 };
+        assert_eq!(s.plan(&obs), None);
+    }
+
+    #[test]
+    fn reactive_scales_up_on_kvc_saturation_alone() {
+        let mut s = by_name("reactive", knobs()).unwrap();
+        let hot = [snap(4, 50)]; // short queue, 95% allocated cache
+        let obs = ScaleObs { now: 1.0, active: &hot, booting: 1, draining: 0 };
+        assert_eq!(s.plan(&obs), Some(3), "booting replica counts toward serving");
+    }
+
+    #[test]
+    fn forecast_preboots_ahead_of_a_ramp() {
+        let k = knobs();
+        let mut s = by_name("forecast", k).unwrap();
+        // Ramp: bucket rates 1, 2, 3, 4 req/s over 4 complete buckets.
+        let mut t = 0.0;
+        for bucket in 0..4u64 {
+            let n = bucket + 1;
+            for j in 0..n * 5 {
+                t = bucket as f64 * 5.0 + j as f64 * 5.0 / (n * 5) as f64;
+                s.on_arrival(t);
+            }
+        }
+        let active = [snap(5, 800)];
+        let obs = ScaleObs { now: 20.0, active: &active, booting: 0, draining: 0 };
+        let want = s.plan(&obs).unwrap();
+        // Trend reaches ~7 req/s one lead ahead; at 3.75 effective rps
+        // per replica that is 2 replicas — more than the last bucket
+        // alone (4 rps -> 2) would *not* show, so check the floor: the
+        // forecaster must ask for at least the extrapolated demand.
+        assert!(want >= 2, "want={want}");
+        let _ = t;
+    }
+
+    #[test]
+    fn forecast_holds_without_history() {
+        let mut s = by_name("forecast", knobs()).unwrap();
+        let active = [snap(0, 1000)];
+        let obs = ScaleObs { now: 0.1, active: &active, booting: 0, draining: 0 };
+        assert_eq!(s.plan(&obs), None, "no complete buckets yet");
+    }
+}

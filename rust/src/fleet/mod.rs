@@ -1,0 +1,274 @@
+//! The fleet layer: event-driven multi-replica serving with online
+//! routing, autoscaling, and GPU-hour cost accounting.
+//!
+//! The paper's cluster result (Fig 12) — EconoServe needs up to 78%
+//! fewer GPUs than DistServe at equal goodput — was demonstrated by a
+//! *static offline* search over round-robin pre-sharded traces
+//! (`cluster::replicas`). This module makes the cost story dynamic, the
+//! way SageServe (arXiv 2502.14617) and Aladdin (arXiv 2405.06856)
+//! argue it must be told: N per-replica [`crate::coordinator::Stepper`]
+//! worlds advance on a shared clock, a fleet front door routes each
+//! arrival *at its arrival time*, and an autoscaler grows and drains the
+//! replica set as traffic breathes. Three pluggable axes, composed by
+//! name like the `sched::by_name("<sched>+<alloc>")` grammar:
+//!
+//! | axis | names |
+//! |------|-------|
+//! | router ([`router`]) | `round-robin`, `least-queue`, `least-kvc`, `power-of-two` |
+//! | autoscaler ([`autoscale`]) | `static-k`, `reactive`, `forecast` |
+//! | workload ([`crate::trace::ArrivalProcess`]) | `poisson`, `mmpp`, `diurnal` |
+//!
+//! Fleet metrics report goodput, SLO satisfaction, **GPU-hours**, and
+//! goodput-per-GPU-hour, so Fig 12 is reproducible dynamically and the
+//! new cost-under-diurnal-load scenario (static peak fleet vs
+//! autoscaled fleet at equal SLO attainment) is one CLI command:
+//! `econoserve fleet --workload diurnal --autoscaler forecast
+//! --compare-static`.
+//!
+//! Reproducibility: every stochastic component's seed is derived from
+//! `(cfg.seed, stream)` via [`crate::util::rng::derive_seed`] — replica
+//! `i` draws the same predictor stream no matter which router placed
+//! which request. For *bit*-reproducible runs also set
+//! `cfg.sched_time_scale = 0`: the default config charges measured
+//! scheduler wall-clock into the simulated clock (the Fig 14 overhead
+//! model), which varies from run to run by construction.
+
+pub mod autoscale;
+pub mod router;
+pub mod sim;
+
+pub use autoscale::{all_autoscalers, Autoscaler, ScaleKnobs, ScaleObs};
+pub use router::{all_routers, ReplicaSnapshot, Router};
+pub use sim::run;
+
+use crate::config::SystemConfig;
+use crate::metrics::Summary;
+use crate::trace::{TraceItem, TraceSpec};
+
+/// Everything a fleet run needs besides the workload items.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Per-replica system config (the fleet derives per-replica seeds
+    /// from `cfg.seed`).
+    pub cfg: SystemConfig,
+    /// Scheduler system in the `sched::by_name` registry grammar.
+    pub system: String,
+    /// Trace name (predictor calibration + capacity priors).
+    pub trace: String,
+    pub oracle: bool,
+    /// Router registry name (`router::all_routers`).
+    pub router: String,
+    /// Autoscaler registry name (`autoscale::all_autoscalers`).
+    pub autoscaler: String,
+    /// Replicas booted (instantly routable) at t=0.
+    pub init_replicas: usize,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Seconds from a scale-up decision to a routable replica.
+    pub boot_latency: f64,
+    /// Seconds between autoscaler control ticks.
+    pub control_interval: f64,
+    /// Sustainable per-replica serving rate (req/s) for the forecast
+    /// autoscaler; 0 derives it from the trace capacity estimate.
+    pub per_replica_rps: f64,
+    /// Hard simulated-time cap (requests unfinished at the cap count as
+    /// SLO misses, like `RunLimits::max_sim_time`).
+    pub max_sim_time: f64,
+}
+
+impl FleetConfig {
+    /// A single-replica fleet with sensible dynamic-scaling defaults;
+    /// adjust fields to taste.
+    pub fn new(cfg: SystemConfig, system: &str, trace: &str) -> Self {
+        FleetConfig {
+            cfg,
+            system: system.to_string(),
+            trace: trace.to_string(),
+            oracle: false,
+            router: "least-queue".to_string(),
+            autoscaler: "static-k".to_string(),
+            init_replicas: 1,
+            min_replicas: 1,
+            max_replicas: 1,
+            boot_latency: 10.0,
+            control_interval: 5.0,
+            per_replica_rps: 0.0,
+            max_sim_time: f64::INFINITY,
+        }
+    }
+
+    /// The legacy `cluster::replicas` shape: a fixed fleet of `k`
+    /// replicas behind round-robin routing.
+    pub fn static_k(
+        cfg: SystemConfig,
+        system: &str,
+        trace: &str,
+        oracle: bool,
+        k: usize,
+        max_sim_time: f64,
+    ) -> Self {
+        let mut fc = Self::new(cfg, system, trace);
+        fc.oracle = oracle;
+        fc.router = "round-robin".to_string();
+        fc.init_replicas = k;
+        fc.min_replicas = k;
+        fc.max_replicas = k;
+        fc.boot_latency = 0.0;
+        fc.max_sim_time = max_sim_time;
+        fc
+    }
+
+    fn spec(&self) -> TraceSpec {
+        TraceSpec::by_name(&self.trace).unwrap_or_else(TraceSpec::sharegpt)
+    }
+
+    /// Sustainable per-replica rate: explicit if set, else 80% of the
+    /// analytic capacity roofline for the trace mix.
+    pub fn replica_rps(&self) -> f64 {
+        if self.per_replica_rps > 0.0 {
+            self.per_replica_rps
+        } else {
+            0.8 * self.cfg.capacity_estimate(&self.spec())
+        }
+    }
+
+    /// Scaling knobs shared by the autoscaler policies.
+    pub fn knobs(&self) -> ScaleKnobs {
+        let spec = self.spec();
+        // Comfortable resident-request ceiling: how many average-mix
+        // requests fit in one replica's KVC at once (prompt + half the
+        // response in flight).
+        let footprint = (spec.input.avg + spec.output.avg / 2.0).max(1.0);
+        ScaleKnobs {
+            resident_ceiling: self.cfg.kvc_tokens() as f64 / footprint,
+            per_replica_rps: self.replica_rps(),
+            control_interval: self.control_interval,
+            boot_latency: self.boot_latency,
+        }
+    }
+}
+
+/// Lifecycle state of one fleet replica. Requests are only ever routed
+/// to `Active` replicas; `Draining` replicas finish their in-flight work
+/// and then retire (drain-before-retire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    Booting,
+    Active,
+    Draining,
+    Retired,
+}
+
+/// Lifecycle + routing record of one replica (tests pin the routing
+/// invariants against this; the CLI prints it).
+#[derive(Debug, Clone)]
+pub struct ReplicaLog {
+    /// When the scale-up (or initial boot) was ordered — GPU billing
+    /// starts here.
+    pub ordered_at: f64,
+    /// When the replica became routable (`ordered_at + boot_latency`).
+    pub routable_at: f64,
+    pub drain_at: Option<f64>,
+    /// When the replica released its GPUs (drain complete).
+    pub retired_at: Option<f64>,
+    pub routed: usize,
+    pub first_routed_at: Option<f64>,
+    pub last_routed_at: Option<f64>,
+}
+
+/// Fleet-level outcome: the cost-and-goodput view Fig 12 is about.
+#[derive(Debug, Clone, Default)]
+pub struct FleetSummary {
+    /// Requests offered to the fleet.
+    pub n_total: usize,
+    /// Requests routed to some replica (< n_total only if the sim-time
+    /// cap cut the run short).
+    pub n_routed: usize,
+    pub n_done: usize,
+    /// Completions that met their SLO.
+    pub slo_ok: usize,
+    /// SLO-satisfying completions per second (the Fig 12 currency).
+    pub goodput_rps: f64,
+    pub throughput_rps: f64,
+    /// SLO satisfaction over ALL offered requests (unrouted/unfinished
+    /// count as violations).
+    pub ssr: f64,
+    pub mean_jct: f64,
+    pub p95_jct: f64,
+    pub end_time: f64,
+    /// GPU-hours consumed: per-replica (ordered → retired/end) spans
+    /// times `gpus_per_replica`. Booting time is billed — you pay for an
+    /// instance while it warms up.
+    pub gpu_hours: f64,
+    /// SLO-satisfying completions per GPU-hour (cost efficiency).
+    pub goodput_per_gpu_hour: f64,
+    /// Extremes of the serving size (Active + Booting) observed at
+    /// control ticks — the autoscaler-bounds invariant.
+    pub peak_replicas: usize,
+    pub floor_replicas: usize,
+    /// Time-weighted mean replica count.
+    pub mean_replicas: f64,
+    pub boots: usize,
+    pub retirements: usize,
+}
+
+/// Full fleet run result.
+pub struct FleetResult {
+    pub summary: FleetSummary,
+    /// Per-replica serving summaries (fleet-wide time base).
+    pub per_replica: Vec<Summary>,
+    /// Per-replica lifecycle/routing logs, in replica-id order.
+    pub replicas: Vec<ReplicaLog>,
+}
+
+/// Run `system` on a fixed fleet of `k` round-robin replicas — the
+/// legacy `cluster::replicas::replicated_run` re-expressed on the fleet
+/// (router=`round-robin`, autoscaler=`static-k`), with routing decided
+/// online at arrival time instead of by index pre-sharding.
+pub fn replicated_run(
+    cfg: &SystemConfig,
+    system: &str,
+    trace: &str,
+    items: &[TraceItem],
+    oracle: bool,
+    k: usize,
+    max_sim_time: f64,
+) -> FleetResult {
+    assert!(k >= 1);
+    let fc = FleetConfig::static_k(cfg.clone(), system, trace, oracle, k, max_sim_time);
+    sim::run(&fc, items)
+}
+
+/// Minimum number of replicas `system` needs to reach `target_goodput`
+/// on a static fleet (binary search; each replica occupies
+/// `cfg.profile.gpus_per_replica` GPUs). The fleet-layer port of the
+/// Fig 12 min-GPU search.
+#[allow(clippy::too_many_arguments)]
+pub fn min_replicas_for_goodput(
+    cfg: &SystemConfig,
+    system: &str,
+    trace: &str,
+    items: &[TraceItem],
+    oracle: bool,
+    target_goodput: f64,
+    max_replicas: usize,
+    max_sim_time: f64,
+) -> Option<usize> {
+    let feasible = |k: usize| -> bool {
+        let res = replicated_run(cfg, system, trace, items, oracle, k, max_sim_time);
+        res.summary.goodput_rps >= target_goodput
+    };
+    if !feasible(max_replicas) {
+        return None;
+    }
+    let (mut lo, mut hi) = (1usize, max_replicas);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(lo)
+}

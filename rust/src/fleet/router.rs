@@ -1,0 +1,224 @@
+//! Routers: the fleet front door's placement axis.
+//!
+//! A router sees a snapshot of every *routable* replica (Active — never
+//! Booting or Draining; the sim enforces that invariant) at each arrival
+//! and picks one. The menu mirrors the paper's multi-resource view at
+//! fleet scale: queue-based steering balances compute pressure,
+//! KVC-based steering balances the memory resource EconoServe's
+//! single-replica scheduler fights for, and power-of-two-choices is the
+//! classic low-coordination compromise.
+
+use crate::core::world::World;
+use crate::kvc::{Allocator, ReserveClass};
+use crate::util::rng::Rng;
+
+/// Point-in-time view of one routable replica.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSnapshot {
+    /// Stable replica id (index into the fleet's replica table).
+    pub id: usize,
+    /// Arrived-and-unfinished requests on the replica (queued anywhere
+    /// or executing — the same in-flight definition admission control
+    /// uses).
+    pub in_flight: usize,
+    /// Free KVC tokens in the replica's normal (non-reserved) pool.
+    pub free_kvc: u32,
+    /// Total KVC capacity in tokens.
+    pub kvc_capacity: u32,
+}
+
+impl ReplicaSnapshot {
+    /// Capture the routing-relevant state of one replica world — the
+    /// single definition the fleet sim (routing + control ticks) and the
+    /// `fleet_routing` bench all share.
+    pub fn of_world(id: usize, w: &World) -> Self {
+        ReplicaSnapshot {
+            id,
+            in_flight: w.n_active(),
+            free_kvc: w.kvc().free_tokens(ReserveClass::Normal),
+            kvc_capacity: w.kvc().capacity_tokens(),
+        }
+    }
+}
+
+/// Placement policy: pick one of the routable replicas for an arrival.
+pub trait Router {
+    fn name(&self) -> &'static str;
+
+    /// Returns an index into `replicas` (guaranteed non-empty).
+    fn route(&mut self, replicas: &[ReplicaSnapshot]) -> usize;
+}
+
+/// Router registry names (the `router=` axis of the fleet grammar).
+pub fn all_routers() -> [&'static str; 4] {
+    ["round-robin", "least-queue", "least-kvc", "power-of-two"]
+}
+
+/// Resolve a router by name. `seed` feeds the randomized policies
+/// (derive it per fleet via `util::rng::derive_seed` so runs are
+/// reproducible under any router).
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Router>> {
+    match name {
+        "round-robin" => Some(Box::new(RoundRobin { next: 0 })),
+        "least-queue" => Some(Box::new(LeastQueue)),
+        "least-kvc" => Some(Box::new(LeastKvc)),
+        "power-of-two" => Some(Box::new(PowerOfTwo { rng: Rng::new(seed) })),
+        _ => None,
+    }
+}
+
+/// Cycle through routable replicas in id order. With a static fleet this
+/// reproduces the legacy `cluster::replicas` pre-sharding (shard
+/// `i % k`), but decided *online* at arrival time, so it stays sane when
+/// the routable set changes under autoscaling.
+struct RoundRobin {
+    next: usize,
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, replicas: &[ReplicaSnapshot]) -> usize {
+        let pick = self.next % replicas.len();
+        self.next = self.next.wrapping_add(1);
+        pick
+    }
+}
+
+/// Join the shortest queue (fewest in-flight requests; ties to the
+/// lowest replica id). The paper's homogeneous cluster setup.
+struct LeastQueue;
+
+impl Router for LeastQueue {
+    fn name(&self) -> &'static str {
+        "least-queue"
+    }
+
+    fn route(&mut self, replicas: &[ReplicaSnapshot]) -> usize {
+        let mut best = 0;
+        for (i, r) in replicas.iter().enumerate().skip(1) {
+            if r.in_flight < replicas[best].in_flight {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Steer to the replica with the most free KVC blocks — the fleet-level
+/// analogue of the paper's multi-resource view: decode capacity is
+/// KVC-bound long before it is compute-bound (Observation 1), so free
+/// cache is the truthful congestion signal.
+struct LeastKvc;
+
+impl Router for LeastKvc {
+    fn name(&self) -> &'static str {
+        "least-kvc"
+    }
+
+    fn route(&mut self, replicas: &[ReplicaSnapshot]) -> usize {
+        let mut best = 0;
+        for (i, r) in replicas.iter().enumerate().skip(1) {
+            // Most absolute free tokens; break ties toward the shorter
+            // queue so an empty fleet still spreads load.
+            let b = &replicas[best];
+            if r.free_kvc > b.free_kvc
+                || (r.free_kvc == b.free_kvc && r.in_flight < b.in_flight)
+            {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Power-of-two-choices: sample two distinct replicas, keep the one with
+/// fewer in-flight requests. Near-optimal balance with O(1) state reads.
+struct PowerOfTwo {
+    rng: Rng,
+}
+
+impl Router for PowerOfTwo {
+    fn name(&self) -> &'static str {
+        "power-of-two"
+    }
+
+    fn route(&mut self, replicas: &[ReplicaSnapshot]) -> usize {
+        let n = replicas.len();
+        if n == 1 {
+            return 0;
+        }
+        let a = self.rng.range_usize(0, n - 1);
+        let mut b = self.rng.range_usize(0, n - 2);
+        if b >= a {
+            b += 1;
+        }
+        if replicas[b].in_flight < replicas[a].in_flight {
+            b
+        } else {
+            a
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(id: usize, in_flight: usize, free_kvc: u32) -> ReplicaSnapshot {
+        ReplicaSnapshot { id, in_flight, free_kvc, kvc_capacity: 1000 }
+    }
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in all_routers() {
+            let r = by_name(name, 1).unwrap();
+            assert_eq!(r.name(), name);
+        }
+        assert!(by_name("shortest-job", 1).is_none());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = by_name("round-robin", 0).unwrap();
+        let reps = [snap(0, 0, 0), snap(1, 0, 0), snap(2, 0, 0)];
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&reps)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_queue_prefers_idle_replica() {
+        let mut r = by_name("least-queue", 0).unwrap();
+        let reps = [snap(0, 9, 0), snap(1, 2, 0), snap(2, 5, 0)];
+        assert_eq!(r.route(&reps), 1);
+    }
+
+    #[test]
+    fn least_kvc_prefers_free_cache() {
+        let mut r = by_name("least-kvc", 0).unwrap();
+        let reps = [snap(0, 1, 100), snap(1, 9, 800), snap(2, 1, 400)];
+        assert_eq!(r.route(&reps), 1);
+        // Ties break to the shorter queue.
+        let reps = [snap(0, 5, 500), snap(1, 2, 500)];
+        assert_eq!(r.route(&reps), 1);
+    }
+
+    #[test]
+    fn power_of_two_balances_and_is_deterministic() {
+        let reps = [snap(0, 100, 0), snap(1, 0, 0), snap(2, 100, 0)];
+        let mut a = by_name("power-of-two", 7).unwrap();
+        let mut b = by_name("power-of-two", 7).unwrap();
+        let mut hits = 0;
+        for _ in 0..200 {
+            let pa = a.route(&reps);
+            assert_eq!(pa, b.route(&reps), "same seed, same stream");
+            if pa == 1 {
+                hits += 1;
+            }
+        }
+        // Replica 1 wins whenever it is sampled (~2/3 of draws).
+        assert!(hits > 100, "hits={hits}");
+    }
+}

@@ -1,0 +1,313 @@
+//! The fleet event loop: N replica steppers on a shared clock, a
+//! routing front door, and autoscaler-driven replica lifecycle.
+//!
+//! The loop is discrete-event over three event sources — the next
+//! arrival, the next boot completion, and the next autoscaler control
+//! tick. At each event time every live replica is advanced to the event
+//! (via [`Stepper::advance_to`], whose idle clock is clamped to the
+//! horizon so injections are never in a replica's past), then the event
+//! is applied:
+//!
+//!  * **arrival** — snapshot the Active replicas, let the router pick
+//!    one, inject the request at its true arrival time. Booting and
+//!    draining replicas are *never* in the candidate set.
+//!  * **boot completion** — `Booting -> Active`.
+//!  * **control tick** — consult the autoscaler; scale up by booting
+//!    fresh replicas (`boot_latency` until routable, billed from the
+//!    order), scale down by draining the least-loaded Active replicas
+//!    (drain-before-retire: they finish in-flight work, then release
+//!    their GPUs). Targets are clamped to `[min, max]`.
+
+use crate::coordinator::Stepper;
+use crate::trace::TraceItem;
+use crate::util::rng::derive_seed;
+use crate::util::stats::Samples;
+
+use super::autoscale::{self, ScaleObs};
+use super::router::{self, ReplicaSnapshot};
+use super::{FleetConfig, FleetResult, FleetSummary, ReplicaLog, ReplicaState};
+
+/// Seed stream for the router's RNG (replica streams are `1 + id`).
+const ROUTER_STREAM: u64 = 0xF1EE7;
+
+struct Replica {
+    stepper: Stepper,
+    state: ReplicaState,
+    log: ReplicaLog,
+}
+
+impl Replica {
+    fn boot(fc: &FleetConfig, id: usize, now: f64, latency: f64) -> Self {
+        let mut cfg = fc.cfg.clone();
+        // Deterministic per-replica streams: replica i's predictor (and
+        // any scheduler-internal randomness) is a pure function of
+        // (base seed, i), independent of routing decisions.
+        cfg.seed = derive_seed(fc.cfg.seed, 1 + id as u64);
+        let mut stepper = Stepper::new(cfg, &fc.system, &fc.trace, fc.oracle, &[]);
+        stepper.sync_clock(now);
+        Replica {
+            stepper,
+            state: if latency <= 0.0 { ReplicaState::Active } else { ReplicaState::Booting },
+            log: ReplicaLog {
+                ordered_at: now,
+                routable_at: now + latency,
+                drain_at: None,
+                retired_at: None,
+                routed: 0,
+                first_routed_at: None,
+                last_routed_at: None,
+            },
+        }
+    }
+
+    fn snapshot(&self, id: usize) -> ReplicaSnapshot {
+        ReplicaSnapshot::of_world(id, &self.stepper.world)
+    }
+
+    /// Drain-before-retire completion: once a draining replica's last
+    /// in-flight request finishes, release its GPUs. Billed until the
+    /// actual completion time recovered from the records (the idle clock
+    /// has since been dragged to the fleet horizon), never earlier than
+    /// the drain decision at `fallback`.
+    fn retire_if_drained(&mut self, fallback: f64) {
+        if self.state != ReplicaState::Draining || !self.stepper.world.all_done() {
+            return;
+        }
+        self.state = ReplicaState::Retired;
+        let drained_at = self.log.drain_at.unwrap_or(fallback);
+        let last_done = self
+            .stepper
+            .world
+            .recs
+            .iter()
+            .filter_map(|rec| rec.done_at)
+            .fold(drained_at, f64::max);
+        self.log.retired_at = Some(last_done);
+    }
+}
+
+/// Run a fleet over `items` (sorted by arrival, as every trace
+/// generator produces them).
+pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
+    assert!(fc.min_replicas >= 1, "a fleet needs at least one replica");
+    assert!(fc.min_replicas <= fc.max_replicas);
+    assert!(
+        fc.control_interval > 0.0,
+        "control_interval must be positive (the event loop ticks on it)"
+    );
+    debug_assert!(items.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+
+    let mut router = router::by_name(&fc.router, derive_seed(fc.cfg.seed, ROUTER_STREAM))
+        .unwrap_or_else(|| panic!("unknown router '{}'", fc.router));
+    let mut scaler = autoscale::by_name(&fc.autoscaler, fc.knobs())
+        .unwrap_or_else(|| panic!("unknown autoscaler '{}'", fc.autoscaler));
+
+    let init = fc.init_replicas.clamp(fc.min_replicas, fc.max_replicas);
+    let mut replicas: Vec<Replica> =
+        (0..init).map(|i| Replica::boot(fc, i, 0.0, 0.0)).collect();
+    let mut boots = init;
+    let mut peak = init;
+    let mut floor = init;
+    let mut next_ctl = fc.control_interval;
+    let mut i = 0usize;
+    let mut clock = 0.0f64;
+    let mut snaps: Vec<ReplicaSnapshot> = Vec::new();
+
+    loop {
+        let work_left =
+            i < items.len() || replicas.iter().any(|r| !r.stepper.world.all_done());
+        if !work_left {
+            break;
+        }
+        let t_arr = if i < items.len() { items[i].arrival } else { f64::INFINITY };
+        let t_boot = replicas
+            .iter()
+            .filter(|r| r.state == ReplicaState::Booting)
+            .map(|r| r.log.routable_at)
+            .fold(f64::INFINITY, f64::min);
+        let t = t_arr.min(t_boot).min(next_ctl).max(clock);
+        if t > fc.max_sim_time {
+            for r in &mut replicas {
+                if r.state != ReplicaState::Retired {
+                    r.stepper.advance_to(fc.max_sim_time);
+                }
+            }
+            clock = clock.max(fc.max_sim_time);
+            break;
+        }
+        clock = t;
+
+        for r in &mut replicas {
+            if r.state != ReplicaState::Retired {
+                r.stepper.advance_to(t);
+            }
+        }
+        for r in &mut replicas {
+            if r.state == ReplicaState::Booting && r.log.routable_at <= t {
+                r.state = ReplicaState::Active;
+            }
+            r.retire_if_drained(t);
+        }
+
+        // Route every arrival due at this event time, re-snapshotting
+        // between picks so balance-sensitive routers see their own
+        // effect.
+        while i < items.len() && items[i].arrival <= t {
+            snaps.clear();
+            for (id, r) in replicas.iter().enumerate() {
+                if r.state == ReplicaState::Active {
+                    snaps.push(r.snapshot(id));
+                }
+            }
+            assert!(!snaps.is_empty(), "no routable replica (min_replicas >= 1)");
+            let pick = snaps[router.route(&snaps)].id;
+            let r = &mut replicas[pick];
+            r.stepper.inject(&items[i]);
+            r.log.routed += 1;
+            r.log.first_routed_at.get_or_insert(items[i].arrival);
+            r.log.last_routed_at = Some(items[i].arrival);
+            scaler.on_arrival(items[i].arrival);
+            i += 1;
+        }
+
+        if next_ctl <= t {
+            snaps.clear();
+            for (id, r) in replicas.iter().enumerate() {
+                if r.state == ReplicaState::Active {
+                    snaps.push(r.snapshot(id));
+                }
+            }
+            let booting =
+                replicas.iter().filter(|r| r.state == ReplicaState::Booting).count();
+            let draining =
+                replicas.iter().filter(|r| r.state == ReplicaState::Draining).count();
+            let obs = ScaleObs { now: t, active: &snaps, booting, draining };
+            if let Some(target) = scaler.plan(&obs) {
+                let target = target.clamp(fc.min_replicas, fc.max_replicas);
+                let serving = snaps.len() + booting;
+                if target > serving {
+                    for _ in serving..target {
+                        let id = replicas.len();
+                        replicas.push(Replica::boot(fc, id, t, fc.boot_latency));
+                        boots += 1;
+                    }
+                } else if target < serving {
+                    // Drain Active replicas only (a boot in flight cannot
+                    // be cancelled), least-loaded first, never below one
+                    // routable replica.
+                    let mut excess = serving - target;
+                    let mut order: Vec<usize> = snaps.iter().map(|s| s.id).collect();
+                    order.sort_by_key(|&id| replicas[id].stepper.world.n_active());
+                    let mut active_left = snaps.len();
+                    for id in order {
+                        if excess == 0 || active_left <= 1 {
+                            break;
+                        }
+                        replicas[id].state = ReplicaState::Draining;
+                        replicas[id].log.drain_at = Some(t);
+                        excess -= 1;
+                        active_left -= 1;
+                    }
+                }
+            }
+            let serving_now = replicas
+                .iter()
+                .filter(|r| matches!(r.state, ReplicaState::Active | ReplicaState::Booting))
+                .count();
+            peak = peak.max(serving_now);
+            floor = floor.min(serving_now);
+            next_ctl += fc.control_interval;
+        }
+    }
+
+    // Drains still pending at exit — ordered at the final control tick
+    // (natural completion) or finishing during the final advance (cap
+    // exit) — retire here so their GPU billing stops at the true finish
+    // time and `retirements` stays consistent with the logs.
+    for r in &mut replicas {
+        r.retire_if_drained(clock);
+    }
+
+    finalize(fc, &replicas, items.len(), i, clock, boots, peak, floor)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finalize(
+    fc: &FleetConfig,
+    replicas: &[Replica],
+    n_total: usize,
+    n_routed: usize,
+    end_time: f64,
+    boots: usize,
+    peak: usize,
+    floor: usize,
+) -> FleetResult {
+    let gpus = fc.cfg.profile.gpus_per_replica as f64;
+    let mut jct = Samples::new();
+    let mut n_done = 0usize;
+    let mut slo_ok = 0usize;
+    let mut last_done = 0.0f64;
+    for r in replicas {
+        for rec in &r.stepper.world.recs {
+            if let Some(j) = rec.jct() {
+                n_done += 1;
+                jct.push(j);
+                if rec.met_slo() {
+                    slo_ok += 1;
+                }
+                last_done = last_done.max(rec.done_at.unwrap_or(0.0));
+            }
+        }
+    }
+    // Fleet span: when the work actually finished (matching the legacy
+    // per-shard semantics) for runs that completed everything; the last
+    // event time for runs cut short by the sim-time cap.
+    let finished = n_done == n_total && n_routed == n_total;
+    let span = if finished && last_done > 0.0 {
+        last_done
+    } else {
+        end_time.max(last_done)
+    }
+    .max(1e-9);
+    let mut gpu_seconds = 0.0;
+    let mut retirements = 0usize;
+    let mut per_replica = Vec::with_capacity(replicas.len());
+    let mut logs = Vec::with_capacity(replicas.len());
+    for r in replicas {
+        let life_end = r.log.retired_at.unwrap_or(span);
+        gpu_seconds += (life_end - r.log.ordered_at).max(0.0) * gpus;
+        if r.log.retired_at.is_some() {
+            retirements += 1;
+        }
+        per_replica.push(r.stepper.summary_at(span));
+        logs.push(r.log.clone());
+    }
+    let gpu_hours = gpu_seconds / 3600.0;
+    FleetResult {
+        summary: FleetSummary {
+            n_total,
+            n_routed,
+            n_done,
+            slo_ok,
+            goodput_rps: slo_ok as f64 / span,
+            throughput_rps: n_done as f64 / span,
+            ssr: slo_ok as f64 / n_total.max(1) as f64,
+            mean_jct: jct.mean(),
+            p95_jct: jct.p95(),
+            end_time: span,
+            gpu_hours,
+            goodput_per_gpu_hour: if gpu_hours > 0.0 {
+                slo_ok as f64 / gpu_hours
+            } else {
+                0.0
+            },
+            peak_replicas: peak,
+            floor_replicas: floor,
+            mean_replicas: gpu_seconds / gpus / span,
+            boots,
+            retirements,
+        },
+        per_replica,
+        replicas: logs,
+    }
+}

@@ -35,6 +35,18 @@
 //!    streaming (`POST /v1/stream`) and blocking generation
 //!    (`POST /v1/generate`).
 //!
+//! Above the single-replica engines sits the **fleet layer** ([`fleet`]):
+//! an event-driven multi-replica simulation where N per-replica worlds
+//! advance on a shared clock behind a routing front door
+//! ([`fleet::router`]: round-robin / least-queue / least-kvc /
+//! power-of-two), an autoscaler ([`fleet::autoscale`]: static-k /
+//! reactive / forecast, with boot latency and drain-before-retire), and
+//! non-stationary workloads ([`trace::ArrivalProcess`]: poisson / mmpp /
+//! diurnal). It reports goodput, SLO satisfaction, GPU-hours and
+//! goodput-per-GPU-hour — the paper's Fig 12 capacity story, told
+//! dynamically. The legacy [`cluster`] pre-sharded capacity model is now
+//! a thin compat wrapper over it.
+//!
 //! Both speak the typed request lifecycle of [`api`]: admission-checked
 //! submission ([`api::SubmitOptions`] → [`api::AdmissionController`]),
 //! channel-backed token streaming ([`api::RequestHandle`] yielding
@@ -55,6 +67,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod figures;
+pub mod fleet;
 pub mod ordering;
 pub mod sched;
 pub mod core;

@@ -7,16 +7,19 @@
 //!               the REAL model via PJRT (python-free request path).
 //!   trace     — generate/inspect traces (Table 2 self-check).
 //!   capacity  — Fig 12-style min-GPU search vs DistServe.
+//!   fleet     — multi-replica fleet: routing + autoscaling + GPU-hour
+//!               cost under non-stationary (poisson/mmpp/diurnal) load.
 //!
 //! Run `econoserve <subcommand> --help` for options.
 
-use econoserve::cluster::{min_replicas_for_goodput, DistServeConfig, DistServeSim};
+use econoserve::cluster::{DistServeConfig, DistServeSim};
 use econoserve::config::{ModelProfile, SystemConfig};
 use econoserve::coordinator::{harness, RunLimits};
 use econoserve::api::{AdmissionConfig, SubmitOptions};
+use econoserve::fleet::{self, FleetConfig};
 use econoserve::ordering::QueuePolicy;
 use econoserve::server::{RealServer, ServerConfig};
-use econoserve::trace::{self, TraceGen, TraceSpec};
+use econoserve::trace::{self, ArrivalProcess, TraceGen, TraceSpec};
 use econoserve::util::cli::Cli;
 use econoserve::util::rng::Rng;
 
@@ -29,10 +32,11 @@ fn main() {
         "serve" => cmd_serve(rest),
         "trace" => cmd_trace(rest),
         "capacity" => cmd_capacity(rest),
+        "fleet" => cmd_fleet(rest),
         "figures" => cmd_figures(rest),
         _ => {
             eprintln!(
-                "usage: econoserve <simulate|serve|trace|capacity|figures> [options]\n\
+                "usage: econoserve <simulate|serve|trace|capacity|fleet|figures> [options]\n\
                  try: econoserve simulate --help"
             );
             2
@@ -353,7 +357,7 @@ fn cmd_capacity(argv: Vec<String>) -> i32 {
         dist_gpus,
         dist.summary.ssr * 100.0
     );
-    match min_replicas_for_goodput(
+    match fleet::min_replicas_for_goodput(
         &cfg,
         "econoserve",
         "sharegpt",
@@ -374,6 +378,155 @@ fn cmd_capacity(argv: Vec<String>) -> i32 {
         None => println!("EconoServe: target goodput not reachable within 8 replicas"),
     }
     0
+}
+
+fn cmd_fleet(argv: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "econoserve fleet",
+        "event-driven multi-replica fleet: routing, autoscaling, GPU-hour cost",
+    )
+    .opt("system", "econoserve", "scheduler system ('<sched>' or '<sched>+<alloc>')")
+    .opt("model", "opt-13b", "model profile: opt-13b | llama-33b | opt-175b")
+    .opt("trace", "sharegpt", "trace: alpaca | sharegpt | bookcorpus")
+    .opt("workload", "diurnal", "arrival process: poisson | mmpp | diurnal")
+    .opt("rate", "0", "mean arrival rate req/s (0 = 40% of the max-fleet capacity estimate)")
+    .opt("router", "least-kvc", "router: round-robin | least-queue | least-kvc | power-of-two")
+    .opt("autoscaler", "reactive", "autoscaler: static-k | reactive | forecast")
+    .opt("replicas", "2", "initial replicas")
+    .opt("min", "1", "minimum serving replicas")
+    .opt("max", "4", "maximum serving replicas")
+    .opt("boot-latency", "8", "seconds from scale-up decision to a routable replica")
+    .opt("control-interval", "5", "seconds between autoscaler control ticks")
+    .opt("duration", "600", "workload duration, simulated seconds")
+    .opt("seed", "42", "rng seed (per-replica streams are derived from it)")
+    .flag("oracle", "use ground-truth response lengths")
+    .flag(
+        "compare-static",
+        "also run a static peak fleet at --max replicas and print the cost delta",
+    );
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if a.f64("control-interval") <= 0.0 {
+        eprintln!("--control-interval must be positive");
+        return 2;
+    }
+    let max_replicas = a.usize("max").max(1);
+    let min_replicas = a.usize("min").max(1);
+    if min_replicas > max_replicas {
+        eprintln!("--min ({min_replicas}) must be <= --max ({max_replicas})");
+        return 2;
+    }
+    let trace_name = a.get("trace");
+    let mut cfg = calibrated_cfg(a.get("model"), trace_name);
+    cfg.seed = a.u64("seed");
+    let spec = TraceSpec::by_name(trace_name).expect("unknown trace");
+    let cap = cfg.capacity_estimate(&spec);
+    let mean_rate =
+        if a.f64("rate") > 0.0 { a.f64("rate") } else { 0.4 * cap * max_replicas as f64 };
+    let Some(mut process) = ArrivalProcess::by_name(a.get("workload"), mean_rate) else {
+        eprintln!(
+            "unknown workload '{}' (expected one of {:?})",
+            a.get("workload"),
+            ArrivalProcess::names()
+        );
+        return 2;
+    };
+    let duration = a.f64("duration");
+    if let ArrivalProcess::Diurnal { ref mut period, .. } = process {
+        // Snap the day-curve so the run covers a whole number of
+        // periods: the realized mean rate then equals the configured
+        // mean (a fractional final period would skew offered load vs
+        // the poisson/mmpp workloads at the same --rate).
+        let cycles = (duration / *period).round().max(1.0);
+        *period = duration / cycles;
+    }
+    let gen = TraceGen::new(spec);
+    let items = gen.generate_arrivals(process, duration, cfg.profile.max_total_len, cfg.seed);
+    let mut fc = FleetConfig::new(cfg.clone(), a.get("system"), trace_name);
+    fc.oracle = a.bool("oracle");
+    fc.router = a.get("router").to_string();
+    fc.autoscaler = a.get("autoscaler").to_string();
+    fc.init_replicas = a.usize("replicas");
+    fc.min_replicas = min_replicas;
+    fc.max_replicas = max_replicas;
+    fc.boot_latency = a.f64("boot-latency");
+    fc.control_interval = a.f64("control-interval");
+    fc.max_sim_time = duration * 4.0;
+    println!(
+        "fleet: system={} trace={trace_name} workload={} (mean {mean_rate:.2}/s, peak \
+         {:.2}/s) router={} autoscaler={} replicas {}..{} n={}",
+        fc.system,
+        a.get("workload"),
+        process.peak_rate(),
+        fc.router,
+        fc.autoscaler,
+        fc.min_replicas,
+        fc.max_replicas,
+        items.len()
+    );
+    let res = fleet::run(&fc, &items);
+    print_fleet_summary(a.get("autoscaler"), &res.summary);
+    for (id, log) in res.replicas.iter().enumerate() {
+        println!(
+            "    replica {id}: routed {}  routable {:.1}s{}{}",
+            log.routed,
+            log.routable_at,
+            log.drain_at.map(|t| format!("  drained {t:.1}s")).unwrap_or_default(),
+            log.retired_at.map(|t| format!("  retired {t:.1}s")).unwrap_or_default(),
+        );
+    }
+    if a.bool("compare-static") {
+        let mut sc = fc.clone();
+        sc.autoscaler = "static-k".to_string();
+        sc.init_replicas = max_replicas;
+        sc.min_replicas = max_replicas;
+        sc.boot_latency = 0.0;
+        let st = fleet::run(&sc, &items);
+        print_fleet_summary("static-peak", &st.summary);
+        let s = &res.summary;
+        let b = &st.summary;
+        println!(
+            "  {} vs static-peak: SSR {:+.1}pp, GPU-hours {:.2} vs {:.2} ({:.0}% fewer), \
+             goodput/GPU-h {:.1} vs {:.1}",
+            fc.autoscaler,
+            (s.ssr - b.ssr) * 100.0,
+            s.gpu_hours,
+            b.gpu_hours,
+            (1.0 - s.gpu_hours / b.gpu_hours.max(1e-9)) * 100.0,
+            s.goodput_per_gpu_hour,
+            b.goodput_per_gpu_hour,
+        );
+    }
+    0
+}
+
+fn print_fleet_summary(label: &str, s: &econoserve::fleet::FleetSummary) {
+    println!(
+        "  [{label}] done {}/{} (routed {})  goodput {:.2} req/s  SSR {:.1}%\n  \
+         JCT mean {:.3}s p95 {:.3}s  span {:.1}s\n  \
+         GPU-hours {:.3}  goodput/GPU-h {:.1}  replicas peak {} floor {} mean {:.2}  \
+         boots {} retirements {}",
+        s.n_done,
+        s.n_total,
+        s.n_routed,
+        s.goodput_rps,
+        s.ssr * 100.0,
+        s.mean_jct,
+        s.p95_jct,
+        s.end_time,
+        s.gpu_hours,
+        s.goodput_per_gpu_hour,
+        s.peak_replicas,
+        s.floor_replicas,
+        s.mean_replicas,
+        s.boots,
+        s.retirements,
+    );
 }
 
 fn cmd_figures(argv: Vec<String>) -> i32 {

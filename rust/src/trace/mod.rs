@@ -9,6 +9,10 @@
 //! per-trace rates. See DESIGN.md §Substitutions for why this preserves
 //! the figures' behaviour.
 
+pub mod arrival;
+
+pub use arrival::{ArrivalProcess, ArrivalSampler};
+
 use crate::core::Time;
 use crate::util::rng::Rng;
 
@@ -147,6 +151,19 @@ impl TraceGen {
         }
     }
 
+    /// Sample one request's (prompt, response) lengths, clamped to the
+    /// context limit: shorten the prompt first (chunking), then the
+    /// response.
+    fn sample_lengths(&self, rng: &mut Rng, max_total_len: u32) -> (u32, u32) {
+        let mut prompt_len = self.input.sample(rng);
+        let mut true_rl = self.output.sample(rng).max(1);
+        if prompt_len + true_rl > max_total_len {
+            prompt_len = prompt_len.min(max_total_len.saturating_sub(true_rl).max(1));
+            true_rl = true_rl.min(max_total_len - prompt_len);
+        }
+        (prompt_len, true_rl)
+    }
+
     /// Generate `n` requests at `rate` req/s (Poisson). `max_total_len`
     /// clamps prompt+response to the model's context limit (the paper
     /// chunks/filters to fit its models).
@@ -156,14 +173,34 @@ impl TraceGen {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             t += rng.exponential(rate);
-            let mut prompt_len = self.input.sample(&mut rng);
-            let mut true_rl = self.output.sample(&mut rng).max(1);
-            // Clamp to context: shorten the prompt first (chunking), then
-            // the response.
-            if prompt_len + true_rl > max_total_len {
-                prompt_len = prompt_len.min(max_total_len.saturating_sub(true_rl).max(1));
-                true_rl = true_rl.min(max_total_len - prompt_len);
+            let (prompt_len, true_rl) = self.sample_lengths(&mut rng, max_total_len);
+            out.push(TraceItem { arrival: t, prompt_len, true_rl });
+        }
+        out
+    }
+
+    /// Generate requests covering `duration` seconds whose arrival times
+    /// are drawn from `process` (Poisson, bursty MMPP, or diurnal — the
+    /// fleet layer's non-stationary workloads). Lengths come from the
+    /// same calibrated samplers as [`TraceGen::generate`]; the arrival
+    /// stream and the length stream are split off the one seed so the
+    /// same requests appear under every process at equal mean rate.
+    pub fn generate_arrivals(
+        &self,
+        process: ArrivalProcess,
+        duration: Time,
+        max_total_len: u32,
+        seed: u64,
+    ) -> Vec<TraceItem> {
+        let mut rng = Rng::new(seed);
+        let mut sampler = process.sampler(rng.next_u64());
+        let mut out = Vec::new();
+        loop {
+            let t = sampler.next_arrival();
+            if t > duration {
+                break;
             }
+            let (prompt_len, true_rl) = self.sample_lengths(&mut rng, max_total_len);
             out.push(TraceItem { arrival: t, prompt_len, true_rl });
         }
         out
@@ -322,6 +359,24 @@ mod tests {
             assert!((a.arrival - b.arrival).abs() < 1e-5);
         }
         let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn generate_arrivals_all_processes() {
+        let g = TraceGen::new(TraceSpec::sharegpt());
+        for name in ArrivalProcess::names() {
+            let p = ArrivalProcess::by_name(name, 10.0).unwrap();
+            let items = g.generate_arrivals(p, 60.0, 2048, 4);
+            assert!(!items.is_empty(), "{name}");
+            assert!(items.last().unwrap().arrival <= 60.0);
+            for w in items.windows(2) {
+                assert!(w[0].arrival <= w[1].arrival, "{name}");
+            }
+            for it in &items {
+                assert!(it.prompt_len + it.true_rl <= 2048, "{name}");
+                assert!(it.true_rl >= 1);
+            }
+        }
     }
 
     #[test]

@@ -96,9 +96,30 @@ impl Rng {
     }
 }
 
+/// Deterministically derive an independent seed for a named stream of a
+/// base seed — e.g. per-replica RNGs in the fleet layer, where replica
+/// `i` must get the same stream regardless of which router placed which
+/// request on it. One SplitMix64 step over a stream-salted state; any
+/// (base, stream) pair yields a stable, well-mixed seed. The salt uses
+/// `stream + 1` so stream 0 still perturbs the base (a zero salt would
+/// collapse it onto the base's own stream).
+pub fn derive_seed(base: u64, stream: u64) -> u64 {
+    Rng::new(base ^ stream.wrapping_add(1).wrapping_mul(0xA076_1D64_78BD_642F)).next_u64()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn derive_seed_is_stable_and_distinct() {
+        assert_eq!(derive_seed(42, 0), derive_seed(42, 0));
+        assert_ne!(derive_seed(42, 0), derive_seed(42, 1));
+        assert_ne!(derive_seed(42, 1), derive_seed(43, 1));
+        // Stream 0 must not collapse to the base stream.
+        let mut base = Rng::new(42);
+        assert_ne!(derive_seed(42, 0), base.next_u64());
+    }
 
     #[test]
     fn deterministic_across_instances() {

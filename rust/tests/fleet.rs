@@ -1,0 +1,268 @@
+//! Fleet-layer integration tests: router equivalence against the legacy
+//! pre-sharded capacity model, seed reproducibility, autoscaler
+//! invariants, the Fig 12 min-GPU port, and the headline
+//! cost-under-diurnal-load scenario.
+
+use econoserve::config::{ModelProfile, SystemConfig};
+use econoserve::coordinator::{harness, RunLimits};
+use econoserve::fleet::{self, FleetConfig, FleetResult};
+use econoserve::trace::{ArrivalProcess, TraceGen, TraceItem, TraceSpec};
+
+fn test_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::new(ModelProfile::opt_13b());
+    cfg.t_p = 0.1;
+    cfg.t_g = 0.025;
+    // Keep runs bit-deterministic: no measured wall-clock charged into
+    // the simulated clock.
+    cfg.sched_time_scale = 0.0;
+    cfg
+}
+
+fn sharegpt_items(n: usize, rate: f64, seed: u64) -> Vec<TraceItem> {
+    TraceGen::new(TraceSpec::sharegpt()).generate(n, rate, 4096, seed)
+}
+
+fn diurnal_items(cfg: &SystemConfig, mean_rate: f64, period: f64, seed: u64) -> Vec<TraceItem> {
+    let gen = TraceGen::new(TraceSpec::sharegpt());
+    let process = ArrivalProcess::Diurnal { mean_rate, amplitude: 0.6, period };
+    gen.generate_arrivals(process, 2.0 * period, cfg.profile.max_total_len, seed)
+}
+
+/// The ORIGINAL `cluster::replicas::replicated_run` goodput: round-robin
+/// pre-sharding *by index*, one independent sim per shard, per-shard
+/// spans, empty shards skipped. The production code now routes online
+/// through the fleet, so this inline reference is what the equivalence
+/// tests pin against.
+fn legacy_presharded_goodput(
+    cfg: &SystemConfig,
+    items: &[TraceItem],
+    k: usize,
+    max_sim_time: f64,
+) -> f64 {
+    let mut shards: Vec<Vec<TraceItem>> = vec![Vec::new(); k];
+    for (i, it) in items.iter().enumerate() {
+        shards[i % k].push(*it);
+    }
+    let mut g = 0.0;
+    for shard in shards {
+        if shard.is_empty() {
+            continue;
+        }
+        let res = harness::simulate(
+            cfg,
+            "econoserve",
+            "sharegpt",
+            &shard,
+            true,
+            RunLimits::for_time(max_sim_time),
+        );
+        g += res.summary.ssr * shard.len() as f64 / res.end_time.max(1e-9);
+    }
+    g
+}
+
+/// Lifecycle/routing invariants every fleet run must satisfy: requests
+/// are only routed while a replica is Active, drains precede
+/// retirements, and the serving size stays inside the configured bounds.
+fn check_invariants(fc: &FleetConfig, res: &FleetResult) {
+    let s = &res.summary;
+    assert!(s.peak_replicas <= fc.max_replicas, "peak {} > max", s.peak_replicas);
+    assert!(s.floor_replicas >= fc.min_replicas, "floor {} < min", s.floor_replicas);
+    for (id, log) in res.replicas.iter().enumerate() {
+        if let Some(f) = log.first_routed_at {
+            assert!(
+                f >= log.routable_at - 1e-9,
+                "replica {id}: routed at {f} while booting (routable {})",
+                log.routable_at
+            );
+        }
+        if let (Some(l), Some(d)) = (log.last_routed_at, log.drain_at) {
+            assert!(l <= d + 1e-9, "replica {id}: routed at {l} while draining (since {d})");
+        }
+        if let Some(r) = log.retired_at {
+            let d = log.drain_at.expect("retirement requires a preceding drain");
+            assert!(d <= r + 1e-9, "replica {id}: retired {r} before drain {d}");
+        }
+    }
+    let routed: usize = res.replicas.iter().map(|l| l.routed).sum();
+    assert_eq!(routed, s.n_routed, "per-replica routing counts disagree with the summary");
+}
+
+#[test]
+fn static_round_robin_fleet_matches_presharded_legacy() {
+    // The legacy `cluster::replicas::replicated_run` pre-sharded round
+    // robin *by index* and summed per-shard goodputs. The fleet routes
+    // round robin *at arrival time*; over a sorted trace the assignment
+    // is identical, so aggregate goodput must agree within the slack the
+    // differing time bases (per-shard span vs fleet span) introduce.
+    let cfg = test_cfg();
+    let items = sharegpt_items(300, 9.0, 11);
+    let k = 3;
+    let fleet_g = fleet::replicated_run(&cfg, "econoserve", "sharegpt", &items, true, k, 400.0)
+        .summary
+        .goodput_rps;
+    let legacy_g = legacy_presharded_goodput(&cfg, &items, k, 400.0);
+    let err = (fleet_g - legacy_g).abs() / legacy_g.max(1e-9);
+    assert!(err < 0.15, "fleet {fleet_g:.3} vs legacy {legacy_g:.3} ({:.0}% off)", err * 100.0);
+}
+
+#[test]
+fn fleet_runs_are_reproducible_per_seed() {
+    // Same seed => identical fleet summary, under a randomized router
+    // and a dynamic autoscaler (per-replica and router streams are all
+    // derived from cfg.seed).
+    let cfg = test_cfg();
+    let items = diurnal_items(&cfg, 5.0, 120.0, 23);
+    let mut fc = FleetConfig::new(cfg, "econoserve", "sharegpt");
+    fc.oracle = true;
+    fc.router = "power-of-two".to_string();
+    fc.autoscaler = "reactive".to_string();
+    fc.init_replicas = 2;
+    fc.min_replicas = 1;
+    fc.max_replicas = 3;
+    fc.boot_latency = 6.0;
+    fc.max_sim_time = 1_000.0;
+    let a = fleet::run(&fc, &items);
+    let b = fleet::run(&fc, &items);
+    assert_eq!(a.summary.n_done, b.summary.n_done);
+    assert_eq!(a.summary.slo_ok, b.summary.slo_ok);
+    assert_eq!(a.summary.boots, b.summary.boots);
+    assert_eq!(a.summary.retirements, b.summary.retirements);
+    assert_eq!(a.summary.peak_replicas, b.summary.peak_replicas);
+    assert_eq!(a.summary.end_time.to_bits(), b.summary.end_time.to_bits());
+    assert_eq!(a.summary.gpu_hours.to_bits(), b.summary.gpu_hours.to_bits());
+    assert_eq!(a.summary.mean_jct.to_bits(), b.summary.mean_jct.to_bits());
+    for (x, y) in a.replicas.iter().zip(&b.replicas) {
+        assert_eq!(x.routed, y.routed);
+    }
+    check_invariants(&fc, &a);
+}
+
+#[test]
+fn every_router_and_autoscaler_combination_runs() {
+    let cfg = test_cfg();
+    let items = sharegpt_items(80, 5.0, 7);
+    for router in fleet::all_routers() {
+        for scaler in fleet::all_autoscalers() {
+            let mut fc = FleetConfig::new(cfg.clone(), "econoserve", "sharegpt");
+            fc.oracle = true;
+            fc.router = router.to_string();
+            fc.autoscaler = scaler.to_string();
+            fc.init_replicas = 2;
+            fc.min_replicas = if scaler == "static-k" { 2 } else { 1 };
+            fc.max_replicas = 2;
+            fc.boot_latency = 4.0;
+            fc.max_sim_time = 600.0;
+            let res = fleet::run(&fc, &items);
+            assert_eq!(
+                res.summary.n_done, items.len(),
+                "{router}/{scaler}: not all requests completed"
+            );
+            assert_eq!(res.summary.n_routed, items.len());
+            assert!(res.summary.gpu_hours > 0.0);
+            check_invariants(&fc, &res);
+        }
+    }
+}
+
+#[test]
+fn autoscaler_scales_up_under_pressure_and_drains_after() {
+    // A diurnal curve whose peak overwhelms one replica: the reactive
+    // scaler must boot capacity (boots > initial) and drain it again
+    // once the trough comes (retirements > 0), while every lifecycle
+    // invariant holds.
+    let cfg = test_cfg();
+    let items = diurnal_items(&cfg, 5.0, 150.0, 31);
+    let mut fc = FleetConfig::new(cfg, "econoserve", "sharegpt");
+    fc.oracle = true;
+    fc.router = "least-kvc".to_string();
+    fc.autoscaler = "reactive".to_string();
+    fc.init_replicas = 1;
+    fc.min_replicas = 1;
+    fc.max_replicas = 3;
+    fc.boot_latency = 6.0;
+    fc.max_sim_time = 1_200.0;
+    let res = fleet::run(&fc, &items);
+    check_invariants(&fc, &res);
+    assert!(res.summary.boots > 1, "no scale-up under a ~1.4x-capacity peak");
+    assert!(res.summary.retirements > 0, "no drain-before-retire on the trough");
+    assert!(res.summary.peak_replicas > 1);
+    assert_eq!(res.summary.n_routed, items.len());
+}
+
+#[test]
+fn fig12_min_gpu_search_matches_legacy_within_one_replica() {
+    // The acceptance pin: the fleet-based static search reproduces the
+    // legacy pre-sharded Fig 12 search within +/- 1 replica.
+    let cfg = test_cfg();
+    let items = sharegpt_items(200, 8.0, 13);
+    let g2 = fleet::replicated_run(&cfg, "econoserve", "sharegpt", &items, true, 2, 300.0)
+        .summary
+        .goodput_rps;
+    let target = g2 * 0.9;
+    let max_k = 4;
+    let fleet_k = fleet::min_replicas_for_goodput(
+        &cfg,
+        "econoserve",
+        "sharegpt",
+        &items,
+        true,
+        target,
+        max_k,
+        300.0,
+    )
+    .expect("feasible within 4 replicas");
+    // Legacy feasibility: index pre-sharding, per-shard spans.
+    let legacy_k = (1..=max_k)
+        .find(|&k| legacy_presharded_goodput(&cfg, &items, k, 300.0) >= target)
+        .expect("legacy search feasible");
+    assert!(
+        fleet_k.abs_diff(legacy_k) <= 1,
+        "fleet needs {fleet_k} replicas, legacy search found {legacy_k}"
+    );
+}
+
+#[test]
+fn diurnal_autoscaling_saves_gpu_hours_at_equal_slo() {
+    // The headline scenario (CLI: `econoserve fleet --workload diurnal
+    // --autoscaler forecast --compare-static`): under a day-curve, the
+    // forecast autoscaler must match the static peak fleet's SLO
+    // attainment while consuming measurably fewer GPU-hours.
+    let cfg = test_cfg();
+    let items = diurnal_items(&cfg, 6.0, 180.0, 42);
+    let mut dynamic = FleetConfig::new(cfg.clone(), "econoserve", "sharegpt");
+    dynamic.oracle = true;
+    dynamic.router = "least-kvc".to_string();
+    dynamic.autoscaler = "forecast".to_string();
+    dynamic.init_replicas = 2;
+    dynamic.min_replicas = 1;
+    dynamic.max_replicas = 3;
+    dynamic.boot_latency = 6.0;
+    dynamic.control_interval = 10.0;
+    dynamic.max_sim_time = 2_000.0;
+    let mut static_peak = dynamic.clone();
+    static_peak.autoscaler = "static-k".to_string();
+    static_peak.init_replicas = 3;
+    static_peak.min_replicas = 3;
+    static_peak.boot_latency = 0.0;
+    let dy = fleet::run(&dynamic, &items).summary;
+    let st = fleet::run(&static_peak, &items).summary;
+    assert!(
+        dy.ssr + 0.02 >= st.ssr,
+        "forecast SSR {:.3} fell behind static-peak {:.3}",
+        dy.ssr,
+        st.ssr
+    );
+    assert!(
+        dy.gpu_hours < 0.85 * st.gpu_hours,
+        "no meaningful GPU-hour saving: {} vs {}",
+        dy.gpu_hours,
+        st.gpu_hours
+    );
+    assert!(
+        dy.goodput_per_gpu_hour > st.goodput_per_gpu_hour,
+        "cost efficiency did not improve: {} vs {}",
+        dy.goodput_per_gpu_hour,
+        st.goodput_per_gpu_hour
+    );
+}

@@ -10,6 +10,8 @@ set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 cargo build --release ${CARGO_FLAGS:-}
+# Runs every registered suite, including the fleet-layer tests
+# (tests/fleet.rs) and the trace arrival-process property tests.
 cargo test -q ${CARGO_FLAGS:-}
 if [ -z "${SKIP_CLIPPY:-}" ]; then
     if cargo clippy --version >/dev/null 2>&1; then
