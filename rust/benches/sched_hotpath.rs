@@ -14,6 +14,15 @@
 //! supported grid at every depth and the whole fleet router axis
 //! (`fleet_routing+<router>`: per-arrival snapshot+route cost of the
 //! fleet front door over a 4-replica fleet).
+//!
+//! The combo grid itself runs on the parallel experiment engine
+//! (`econoserve::exp::map_indexed`): pass `--threads N` (0 = auto) to
+//! fan the independent (combo, depth) cells out. The default stays
+//! `--threads 1` because per-sample latencies measured with neighbours
+//! in flight are contention-noisy — commit gate baselines from
+//! single-thread runs; use multi-thread sweeps for quick coverage. The
+//! JSON artifact records both knobs (`sweep_threads`, `sweep_wall_s`),
+//! so single- vs multi-thread sweep wall-clock is tracked per run.
 
 use econoserve::coordinator::Stepper;
 use econoserve::core::world::World;
@@ -23,7 +32,7 @@ use econoserve::fleet::router::{self, ReplicaSnapshot};
 use econoserve::sched::plan_iteration;
 use econoserve::util::bench::{black_box, time_fn};
 use econoserve::util::rng::derive_seed;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const SCHEDS: [&str; 7] =
     ["orca", "fastserve", "vllm", "sarathi", "multires", "sync_coupled", "econoserve"];
@@ -55,7 +64,14 @@ struct Row {
     samples: usize,
 }
 
-fn bench_combo(combo: &str, depth: usize, fast: bool) -> Row {
+/// One grid cell: either a sched+alloc plan-latency case or a fleet
+/// front-door routing case.
+enum Task {
+    Combo { combo: String, depth: usize },
+    Routing { router: &'static str, depth: usize },
+}
+
+fn bench_combo(combo: &str, depth: usize, fast: bool) -> (Row, String) {
     let cfg = common::cfg("opt-13b", "sharegpt");
     // Build a world mid-overload: `depth` queued requests.
     let items = common::workload(&cfg, "sharegpt", depth as f64 / 2.0, 2.0, 7);
@@ -100,22 +116,23 @@ fn bench_combo(combo: &str, depth: usize, fast: bool) -> Row {
         min_iters,
         min_time,
     );
-    println!("  [depth {depth:>5}] {}", res.report(combo));
-    Row {
+    let report = res.report(combo);
+    let row = Row {
         combo: combo.to_string(),
         depth,
         mean_s: res.samples.mean(),
         p50_s: res.samples.p50(),
         p95_s: res.samples.p95(),
         samples: res.samples.len(),
-    }
+    };
+    (row, report)
 }
 
 /// Fleet front-door hot path: snapshot the routable replica set and make
 /// one routing decision, against a 4-replica fleet holding `depth`
 /// queued requests total. This is the per-arrival cost the fleet layer
 /// adds on top of per-replica planning.
-fn bench_fleet_routing(router_name: &str, depth: usize, fast: bool) -> Row {
+fn bench_fleet_routing(router_name: &str, depth: usize, fast: bool) -> (Row, String) {
     const REPLICAS: usize = 4;
     let cfg = common::cfg("opt-13b", "sharegpt");
     let per = (depth / REPLICAS).max(1);
@@ -149,36 +166,42 @@ fn bench_fleet_routing(router_name: &str, depth: usize, fast: bool) -> Row {
         min_time,
     );
     let combo = format!("fleet_routing+{router_name}");
-    println!("  [depth {depth:>5}] {}", res.report(&combo));
-    Row {
+    let report = res.report(&combo);
+    let row = Row {
         combo,
         depth,
         mean_s: res.samples.mean(),
         p50_s: res.samples.p50(),
         p95_s: res.samples.p95(),
         samples: res.samples.len(),
-    }
+    };
+    (row, report)
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
-    let json_path = args
-        .iter()
-        .position(|a| a == "--json")
-        .and_then(|i| args.get(i + 1))
-        .cloned();
+    let flag = |name: &str| {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+    };
+    let json_path = flag("--json");
+    let threads: usize = flag("--threads")
+        .map(|v| v.parse().expect("--threads must be an integer (0 = auto)"))
+        .unwrap_or(1);
     let fast = std::env::var("FAST").is_ok();
 
     let depths: &[usize] = if fast { &[HEADLINE_DEPTH] } else { &DEPTHS };
     println!(
         "scheduler plan latency (sharegpt, opt-13b), sched x alloc grid, depths {depths:?}:"
     );
-    let mut rows: Vec<Row> = Vec::new();
+
+    // The grid, in deterministic order (skips are reported up front so
+    // the parallel sweep only carries real cells).
+    let mut tasks: Vec<Task> = Vec::new();
     for sched in SCHEDS {
         // Default pairing first, then the rest of the supported axis.
         let default = econoserve::sched::default_alloc(sched).unwrap();
         for &depth in depths {
-            rows.push(bench_combo(&format!("{sched}+{default}"), depth, fast));
+            tasks.push(Task::Combo { combo: format!("{sched}+{default}"), depth });
         }
         if fast {
             continue;
@@ -191,13 +214,15 @@ fn main() {
             if supported.contains(alloc) {
                 // Non-default pairings: headline depth only (the grid is
                 // about coverage; the scaling sweep rides the defaults).
-                rows.push(bench_combo(&format!("{sched}+{alloc}"), HEADLINE_DEPTH, fast));
+                tasks.push(Task::Combo {
+                    combo: format!("{sched}+{alloc}"),
+                    depth: HEADLINE_DEPTH,
+                });
             } else {
                 println!("  {sched}+{alloc}: skipped (needs admission-complete lease)");
             }
         }
     }
-
     // Fleet front-door routing: one representative router in the
     // FAST/CI set, the full router axis in the long run.
     let routers: &[&str] = if fast {
@@ -206,8 +231,28 @@ fn main() {
         &["round-robin", "least-queue", "least-kvc", "power-of-two"]
     };
     for r in routers {
-        rows.push(bench_fleet_routing(r, HEADLINE_DEPTH, fast));
+        tasks.push(Task::Routing { router: r, depth: HEADLINE_DEPTH });
     }
+
+    let sweep_threads = econoserve::exp::resolve_threads(threads);
+    if sweep_threads > 1 {
+        println!(
+            "  (sweep on {sweep_threads} threads: wall-clock mode; per-sample latencies \
+             are contention-noisy — commit gate baselines from --threads 1 runs)"
+        );
+    }
+    let t0 = Instant::now();
+    let results: Vec<(Row, String)> =
+        econoserve::exp::map_indexed(&tasks, sweep_threads, |_, task| match task {
+            Task::Combo { combo, depth } => bench_combo(combo, *depth, fast),
+            Task::Routing { router, depth } => bench_fleet_routing(router, *depth, fast),
+        });
+    let sweep_wall_s = t0.elapsed().as_secs_f64();
+    for (row, report) in &results {
+        println!("  [depth {:>5}] {report}", row.depth);
+    }
+    println!("sweep wall-clock: {sweep_wall_s:.2}s on {sweep_threads} thread(s)");
+    let rows: Vec<Row> = results.into_iter().map(|(r, _)| r).collect();
 
     if let Some(path) = json_path {
         // Machine label for the regression gate: p50s are only comparable
@@ -222,7 +267,9 @@ fn main() {
         out.push_str(&format!(
             "  \"workload\": \"sharegpt opt-13b, queue-depth sweep {DEPTHS:?} (FAST: {HEADLINE_DEPTH} only)\",\n"
         ));
-        out.push_str("  \"note\": \"plan-formation latency per sched+alloc combo and queue depth; regenerate with scripts/bench.sh, gate with scripts/bench_gate.py\",\n");
+        out.push_str("  \"note\": \"plan-formation latency per sched+alloc combo and queue depth; regenerate with scripts/bench.sh, gate with scripts/bench_gate.py; sweep_threads/sweep_wall_s track the grid's own wall-clock (exp::map_indexed fan-out)\",\n");
+        out.push_str(&format!("  \"sweep_threads\": {sweep_threads},\n"));
+        out.push_str(&format!("  \"sweep_wall_s\": {sweep_wall_s:.3},\n"));
         out.push_str("  \"combos\": [\n");
         for (i, r) in rows.iter().enumerate() {
             out.push_str(&format!(

@@ -1,11 +1,11 @@
-//! Multi-GPU serving: the DistServe [24] disaggregated baseline and the
-//! legacy replicated-EconoServe capacity model used for Fig 12 — now a
-//! compat shim over the [`crate::fleet`] layer (online routing,
-//! autoscaling, GPU-hour accounting).
+//! Multi-GPU serving: the DistServe [24] disaggregated baseline.
+//!
+//! The legacy replicated-EconoServe capacity model that used to live
+//! here (`cluster::replicas`, index-pre-sharded traces) is gone; use
+//! [`crate::fleet::replicated_run`] /
+//! [`crate::fleet::min_replicas_for_goodput`] — online routing at
+//! arrival time, GPU-hour accounting, and parallel candidate search.
 
 pub mod distserve;
-pub mod replicas;
 
 pub use distserve::{DistServeConfig, DistServeSim};
-#[allow(deprecated)]
-pub use replicas::{min_replicas_for_goodput, replicated_run};

@@ -1,0 +1,468 @@
+//! Grid sweeps: the experiment surface of the parallel engine.
+//!
+//! A [`GridSpec`] names the axes — systems (the `sched::by_name`
+//! `"<sched>+<alloc>"` grammar) × models × traces × rates × seeds, and
+//! optionally routers × autoscalers for fleet cells — and [`run_grid`]
+//! fans the cross-product out over [`super::map_indexed`], one
+//! simulation per cell, collecting one flat JSON row per cell in grid
+//! order. This backs the `econoserve sweep` CLI subcommand (JSON grid
+//! in → JSON results out) and the 1-vs-N-thread equivalence tests.
+//!
+//! Determinism contract: a cell's RNG seed is derived from its
+//! **coordinates** (seed, model, trace, rate indices) via
+//! [`derive_seed`], never from grid position or execution order; every
+//! system at the same (model, trace, rate, seed) point sees the same
+//! workload and prediction-error stream (a fair comparison), and sweep
+//! cells always run with `sched_time_scale = 0` (measured scheduler
+//! wall-clock is never charged into the simulated clock), so
+//! [`run_grid`] output is bit-identical at any thread count — including
+//! 1.
+
+use crate::coordinator::{harness, RunLimits};
+use crate::fleet::{self, FleetConfig};
+use crate::figures::common;
+use crate::util::json::{obj, Json};
+use crate::util::rng::derive_seed;
+
+/// The axes of one sweep. Cells are the cross-product, enumerated
+/// model-major: model × trace × rate × seed × system (× router ×
+/// autoscaler when the fleet axes are non-empty).
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    /// Systems in the `sched::by_name` registry grammar.
+    pub systems: Vec<String>,
+    pub models: Vec<String>,
+    pub traces: Vec<String>,
+    /// Explicit arrival rates (req/s). Empty ⇒ a `rate_points`-long
+    /// capacity-scaled grid per (model, trace), like the figure drivers.
+    pub rates: Vec<f64>,
+    pub rate_points: usize,
+    /// Workload/prediction replication seeds.
+    pub seeds: Vec<u64>,
+    /// Fleet axes: when BOTH are non-empty every cell runs a fleet of
+    /// up to `replicas` replicas instead of a single world.
+    pub routers: Vec<String>,
+    pub autoscalers: Vec<String>,
+    /// Fleet size bound for fleet cells (`static-k` fixes the fleet at
+    /// this size; scaling policies move within `[1, replicas]`).
+    pub replicas: usize,
+    /// Workload duration (simulated seconds of arrivals).
+    pub duration: f64,
+    /// Hard simulated-time cap (drain allowance).
+    pub max_time: f64,
+    pub oracle: bool,
+    /// Worker threads (0 = `ECONOSERVE_THREADS` / available parallelism).
+    pub threads: usize,
+}
+
+impl Default for GridSpec {
+    fn default() -> Self {
+        GridSpec {
+            systems: vec!["econoserve".to_string()],
+            models: vec!["opt-13b".to_string()],
+            traces: vec!["sharegpt".to_string()],
+            rates: Vec::new(),
+            rate_points: 4,
+            seeds: vec![42],
+            routers: Vec::new(),
+            autoscalers: Vec::new(),
+            replicas: 2,
+            duration: common::DURATION,
+            max_time: common::MAX_TIME,
+            oracle: false,
+            threads: 0,
+        }
+    }
+}
+
+/// One grid point, fully describing an independent simulation.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub system: String,
+    pub model: String,
+    pub trace: String,
+    pub rate: f64,
+    pub seed: u64,
+    /// `Some` only for fleet cells.
+    pub router: Option<String>,
+    pub autoscaler: Option<String>,
+    /// Per-cell RNG stream: a pure function of (seed, model/trace/rate
+    /// coordinates) — shared by every system at this point, independent
+    /// of grid order and thread count.
+    pub cell_seed: u64,
+}
+
+impl GridSpec {
+    /// Parse the `econoserve sweep` input document. Every field is
+    /// optional; omitted ones keep the [`Default`] value. Unknown keys
+    /// are rejected up front — a typoed axis name (`"seed"` for
+    /// `"seeds"`) must fail immediately, not silently sweep defaults.
+    pub fn from_json(doc: &Json) -> Result<GridSpec, String> {
+        const KNOWN: [&str; 13] = [
+            "systems",
+            "models",
+            "traces",
+            "rates",
+            "rate_points",
+            "seeds",
+            "routers",
+            "autoscalers",
+            "replicas",
+            "duration",
+            "max_time",
+            "oracle",
+            "threads",
+        ];
+        match doc {
+            Json::Obj(m) => {
+                for key in m.keys() {
+                    if !KNOWN.contains(&key.as_str()) {
+                        return Err(format!(
+                            "unknown key '{key}' (expected one of {KNOWN:?})"
+                        ));
+                    }
+                }
+            }
+            _ => return Err("grid spec must be a JSON object".to_string()),
+        }
+        let mut spec = GridSpec::default();
+        let strings = |key: &str, into: &mut Vec<String>| -> Result<(), String> {
+            if let Some(v) = doc.get(key) {
+                let arr = v.as_arr().ok_or_else(|| format!("'{key}' must be an array"))?;
+                *into = arr
+                    .iter()
+                    .map(|x| {
+                        x.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| format!("'{key}' entries must be strings"))
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            Ok(())
+        };
+        strings("systems", &mut spec.systems)?;
+        strings("models", &mut spec.models)?;
+        strings("traces", &mut spec.traces)?;
+        strings("routers", &mut spec.routers)?;
+        strings("autoscalers", &mut spec.autoscalers)?;
+        if let Some(v) = doc.get("rates") {
+            let arr = v.as_arr().ok_or("'rates' must be an array")?;
+            spec.rates = arr
+                .iter()
+                .map(|x| x.as_f64().ok_or("'rates' entries must be numbers".to_string()))
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = doc.get("seeds") {
+            let arr = v.as_arr().ok_or("'seeds' must be an array")?;
+            spec.seeds = arr
+                .iter()
+                .map(|x| {
+                    x.as_i64()
+                        .map(|n| n as u64)
+                        .ok_or("'seeds' entries must be integers".to_string())
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = doc.get("rate_points") {
+            spec.rate_points = v.as_usize().ok_or("'rate_points' must be an integer")?;
+        }
+        if let Some(v) = doc.get("replicas") {
+            spec.replicas = v.as_usize().ok_or("'replicas' must be an integer")?;
+        }
+        if let Some(v) = doc.get("duration") {
+            spec.duration = v.as_f64().ok_or("'duration' must be a number")?;
+        }
+        if let Some(v) = doc.get("max_time") {
+            spec.max_time = v.as_f64().ok_or("'max_time' must be a number")?;
+        }
+        if let Some(v) = doc.get("oracle") {
+            spec.oracle = v.as_bool().ok_or("'oracle' must be a boolean")?;
+        }
+        if let Some(v) = doc.get("threads") {
+            spec.threads = v.as_usize().ok_or("'threads' must be an integer")?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject unknown registry names and empty axes up front (cells
+    /// would otherwise panic mid-sweep inside a worker).
+    pub fn validate(&self) -> Result<(), String> {
+        for s in &self.systems {
+            if crate::sched::by_name(s).is_none() {
+                return Err(format!("unknown system '{s}'"));
+            }
+        }
+        for m in &self.models {
+            if crate::config::ModelProfile::by_name(m).is_none() {
+                return Err(format!("unknown model '{m}'"));
+            }
+        }
+        for t in &self.traces {
+            if crate::trace::TraceSpec::by_name(t).is_none() {
+                return Err(format!("unknown trace '{t}'"));
+            }
+        }
+        for r in &self.routers {
+            if !fleet::all_routers().contains(&r.as_str()) {
+                return Err(format!("unknown router '{r}'"));
+            }
+        }
+        for a in &self.autoscalers {
+            if !fleet::all_autoscalers().contains(&a.as_str()) {
+                return Err(format!("unknown autoscaler '{a}'"));
+            }
+        }
+        if self.routers.is_empty() != self.autoscalers.is_empty() {
+            return Err("'routers' and 'autoscalers' must be set together".to_string());
+        }
+        if self.systems.is_empty() || self.models.is_empty() || self.traces.is_empty() {
+            return Err("systems/models/traces must be non-empty".to_string());
+        }
+        if self.seeds.is_empty() {
+            return Err("seeds must be non-empty".to_string());
+        }
+        if self.rates.is_empty() && self.rate_points == 0 {
+            return Err("either 'rates' or 'rate_points' must be set".to_string());
+        }
+        Ok(())
+    }
+
+    fn fleet_axis(&self) -> Vec<(Option<String>, Option<String>)> {
+        if self.routers.is_empty() {
+            return vec![(None, None)];
+        }
+        let mut axis = Vec::new();
+        for r in &self.routers {
+            for a in &self.autoscalers {
+                axis.push((Some(r.clone()), Some(a.clone())));
+            }
+        }
+        axis
+    }
+
+    /// Enumerate the cross-product in deterministic grid order.
+    pub fn cells(&self) -> Vec<Cell> {
+        let axis = self.fleet_axis();
+        let mut cells = Vec::new();
+        for (mi, model) in self.models.iter().enumerate() {
+            for (ti, trace) in self.traces.iter().enumerate() {
+                let rates = if self.rates.is_empty() {
+                    let cfg = common::cfg(model, trace);
+                    common::rate_grid(&cfg, trace, self.rate_points)
+                } else {
+                    self.rates.clone()
+                };
+                for (ri, &rate) in rates.iter().enumerate() {
+                    for &seed in &self.seeds {
+                        // Coordinate-indexed stream (system excluded:
+                        // rivals at one point share the workload).
+                        let stream =
+                            ((mi as u64) << 40) | ((ti as u64) << 20) | ri as u64;
+                        let cell_seed = derive_seed(seed, stream);
+                        for system in &self.systems {
+                            for (router, autoscaler) in &axis {
+                                cells.push(Cell {
+                                    system: system.clone(),
+                                    model: model.clone(),
+                                    trace: trace.clone(),
+                                    rate,
+                                    seed,
+                                    router: router.clone(),
+                                    autoscaler: autoscaler.clone(),
+                                    cell_seed,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// Outcome of [`run_grid`]: one JSON row per cell, in grid order.
+#[derive(Debug)]
+pub struct SweepResult {
+    pub rows: Vec<Json>,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Host wall-clock seconds for the whole sweep.
+    pub wall_s: f64,
+}
+
+impl SweepResult {
+    /// The `econoserve sweep` output document.
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("sweep", "econoserve".into()),
+            ("threads", self.threads.into()),
+            ("wall_s", self.wall_s.into()),
+            ("rows", Json::Arr(self.rows.clone())),
+        ])
+    }
+}
+
+/// Run every cell of `spec` (in parallel, respecting `spec.threads`) and
+/// collect one flat row per cell in grid order. Rows contain only
+/// simulated quantities — no wall-clock — so two sweeps of the same spec
+/// are bit-identical at any thread count.
+///
+/// Panics on an invalid spec (see [`GridSpec::validate`]) — a bad axis
+/// must fail loudly up front, not panic mid-sweep inside a worker or
+/// silently produce zero cells.
+pub fn run_grid(spec: &GridSpec) -> SweepResult {
+    if let Err(e) = spec.validate() {
+        panic!("invalid GridSpec: {e}");
+    }
+    let cells = spec.cells();
+    let threads = super::resolve_threads(spec.threads).min(cells.len().max(1));
+    let t0 = std::time::Instant::now();
+    let rows = super::map_indexed(&cells, threads, |_, cell| run_cell(cell, spec));
+    SweepResult { rows, threads, wall_s: t0.elapsed().as_secs_f64() }
+}
+
+fn run_cell(cell: &Cell, spec: &GridSpec) -> Json {
+    let mut cfg = common::cfg(&cell.model, &cell.trace);
+    cfg.seed = cell.cell_seed;
+    // Never charge measured scheduler wall-clock into the simulated
+    // clock in sweep cells: rows must be a pure function of the spec.
+    cfg.sched_time_scale = 0.0;
+    let items = common::workload(&cfg, &cell.trace, cell.rate, spec.duration, cfg.seed);
+    let mut row = vec![
+        ("system", Json::from(cell.system.as_str())),
+        ("model", Json::from(cell.model.as_str())),
+        ("trace", Json::from(cell.trace.as_str())),
+        ("rate", Json::from(cell.rate)),
+        ("seed", Json::from(cell.seed as usize)),
+        ("n", Json::from(items.len())),
+    ];
+    match (&cell.router, &cell.autoscaler) {
+        (Some(router), Some(autoscaler)) => {
+            let mut fc = FleetConfig::new(cfg, &cell.system, &cell.trace);
+            fc.oracle = spec.oracle;
+            fc.router = router.clone();
+            fc.autoscaler = autoscaler.clone();
+            fc.max_replicas = spec.replicas.max(1);
+            if autoscaler == "static-k" {
+                fc.init_replicas = fc.max_replicas;
+                fc.min_replicas = fc.max_replicas;
+            } else {
+                fc.init_replicas = 1;
+                fc.min_replicas = 1;
+            }
+            fc.max_sim_time = spec.max_time;
+            // Cell-level fan-out owns the cores; replicas step serially.
+            fc.threads = 1;
+            let s = fleet::run(&fc, &items).summary;
+            row.extend([
+                ("router", Json::from(router.as_str())),
+                ("autoscaler", Json::from(autoscaler.as_str())),
+                ("n_done", Json::from(s.n_done)),
+                ("goodput_rps", Json::from(s.goodput_rps)),
+                ("throughput_rps", Json::from(s.throughput_rps)),
+                ("ssr", Json::from(s.ssr)),
+                ("mean_jct", Json::from(s.mean_jct)),
+                ("p95_jct", Json::from(s.p95_jct)),
+                ("gpu_hours", Json::from(s.gpu_hours)),
+                ("goodput_per_gpu_hour", Json::from(s.goodput_per_gpu_hour)),
+                ("peak_replicas", Json::from(s.peak_replicas)),
+                ("mean_replicas", Json::from(s.mean_replicas)),
+            ]);
+        }
+        _ => {
+            let res = harness::simulate(
+                &cfg,
+                &cell.system,
+                &cell.trace,
+                &items,
+                spec.oracle,
+                RunLimits::for_time(spec.max_time),
+            );
+            let s = res.summary;
+            row.extend([
+                ("n_done", Json::from(s.n_done)),
+                ("throughput_rps", Json::from(s.throughput_rps)),
+                ("ssr", Json::from(s.ssr)),
+                ("mean_jct", Json::from(s.mean_jct)),
+                ("p95_jct", Json::from(s.p95_jct)),
+                ("norm_latency", Json::from(s.norm_latency)),
+                ("kvc_util", Json::from(s.kvc_util)),
+                ("gpu_util", Json::from(s.gpu_util)),
+                ("preemptions", Json::from(s.preemptions as usize)),
+            ]);
+        }
+    }
+    obj(row)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> GridSpec {
+        GridSpec {
+            systems: vec!["orca".to_string()],
+            models: vec!["opt-13b".to_string()],
+            traces: vec!["alpaca".to_string()],
+            rates: vec![2.0],
+            seeds: vec![7],
+            duration: 3.0,
+            max_time: 60.0,
+            oracle: true,
+            threads: 1,
+            ..GridSpec::default()
+        }
+    }
+
+    #[test]
+    fn cell_enumeration_is_grid_ordered_and_seed_stable() {
+        let mut spec = tiny_spec();
+        spec.systems = vec!["orca".to_string(), "vllm".to_string()];
+        spec.rates = vec![1.0, 2.0];
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        // rate-major, system-minor.
+        assert_eq!((cells[0].rate, cells[0].system.as_str()), (1.0, "orca"));
+        assert_eq!((cells[1].rate, cells[1].system.as_str()), (1.0, "vllm"));
+        assert_eq!((cells[2].rate, cells[2].system.as_str()), (2.0, "orca"));
+        // Rival systems at one grid point share the workload stream.
+        assert_eq!(cells[0].cell_seed, cells[1].cell_seed);
+        assert_ne!(cells[0].cell_seed, cells[2].cell_seed);
+    }
+
+    #[test]
+    fn from_json_roundtrip_and_validation() {
+        let doc = Json::parse(
+            r#"{"systems": ["vllm+exact"], "rates": [1.5, 3.0], "seeds": [1, 2],
+                "duration": 10, "oracle": true, "threads": 2}"#,
+        )
+        .unwrap();
+        let spec = GridSpec::from_json(&doc).unwrap();
+        assert_eq!(spec.systems, vec!["vllm+exact"]);
+        assert_eq!(spec.rates, vec![1.5, 3.0]);
+        assert_eq!(spec.seeds, vec![1, 2]);
+        assert!(spec.oracle);
+        assert_eq!(spec.threads, 2);
+        // Unknown system is rejected up front, not at cell time.
+        let bad = Json::parse(r#"{"systems": ["nope"]}"#).unwrap();
+        assert!(GridSpec::from_json(&bad).is_err());
+        let half_fleet = Json::parse(r#"{"routers": ["round-robin"]}"#).unwrap();
+        assert!(GridSpec::from_json(&half_fleet).is_err());
+        // Typoed keys fail fast instead of silently sweeping defaults.
+        let typo = Json::parse(r#"{"seed": [1, 2]}"#).unwrap();
+        assert!(GridSpec::from_json(&typo).unwrap_err().contains("unknown key 'seed'"));
+        assert!(GridSpec::from_json(&Json::parse("[1]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_grid_smoke_single_cell() {
+        let res = run_grid(&tiny_spec());
+        assert_eq!(res.rows.len(), 1);
+        let row = &res.rows[0];
+        assert_eq!(row.get("system").unwrap().as_str(), Some("orca"));
+        assert!(row.get("n_done").unwrap().as_usize().unwrap() > 0);
+        assert!(row.get("mean_jct").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

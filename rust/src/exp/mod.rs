@@ -1,0 +1,200 @@
+//! The parallel experiment engine: deterministic fan-out of independent
+//! simulation cells over OS threads.
+//!
+//! Every headline result in the paper is a *grid* — Figs 9–15 sweep
+//! rate × scheduler × seed, Fig 12 searches fleet sizes, and the hot-path
+//! bench sweeps the sched × alloc combo grid. Each cell is an independent
+//! simulation, so the harness itself is a parallel program (the way
+//! DistServe's placement search and vLLM's benchmark suites treat
+//! theirs). This module is the one engine behind all of them:
+//!
+//!  * [`map_indexed`] — deterministic parallel map: cells are claimed
+//!    from an atomic cursor (work-stealing, so heterogeneous cell costs
+//!    balance) but results land in **input order**, and each cell's
+//!    output is a pure function of its description — never of thread
+//!    count or completion order. Output is therefore bit-identical to
+//!    the sequential path at any `--threads`.
+//!  * [`for_each_mut`] — in-place parallel for-each over disjoint
+//!    `&mut` items (the fleet layer advances all live replicas to the
+//!    next event horizon with it).
+//!  * [`grid`] — the sweep surface: a [`GridSpec`] (systems × models ×
+//!    traces × rates × seeds, optionally × routers × autoscalers) fanned
+//!    out cell-per-task, backing the figure drivers, the
+//!    `econoserve sweep` CLI subcommand, and the capacity search.
+//!
+//! Like the rest of `util/`, this is std-only by necessity: the offline
+//! crate registry has no rayon, so the engine is scoped threads + an
+//! atomic cursor — which is also exactly enough, because cells are
+//! seconds-long simulations and per-cell overhead is noise.
+//!
+//! Thread-count resolution (everywhere in the crate): an explicit
+//! request wins; `0` defers to the `ECONOSERVE_THREADS` environment
+//! variable, then to the machine's available parallelism. Moving whole
+//! simulations across threads is what the `Send` bounds on
+//! [`crate::sched::Scheduler`], [`crate::kvc::Allocator`],
+//! [`crate::predictor::Predictor`], [`crate::fleet::Router`] and
+//! [`crate::fleet::Autoscaler`] exist for — see "Parallel execution" in
+//! `docs/API.md` for the implementor contract.
+
+pub mod grid;
+
+pub use grid::{run_grid, Cell, GridSpec, SweepResult};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Environment variable overriding the default worker-thread count.
+pub const THREADS_ENV: &str = "ECONOSERVE_THREADS";
+
+/// The machine's available parallelism (1 if it cannot be queried).
+pub fn available_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a requested worker count: `n > 0` is taken as-is; `0` defers
+/// to `ECONOSERVE_THREADS`, then to [`available_parallelism`].
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var(THREADS_ENV) {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    available_parallelism()
+}
+
+/// Deterministic parallel map: apply `f(index, &item)` to every item and
+/// collect the results **in input order**.
+///
+/// Workers claim indices from a shared atomic cursor, so heterogeneous
+/// cell costs load-balance; each result is written to its own slot, so
+/// the returned `Vec` is identical to the sequential
+/// `items.iter().enumerate().map(f).collect()` at any thread count —
+/// provided `f` is a pure function of `(index, item)` (derive any
+/// randomness from the item's own seed via
+/// [`crate::util::rng::derive_seed`], never from global state).
+///
+/// `threads` follows [`resolve_threads`] (`0` = env/auto) and is capped
+/// at the item count. A panic in any cell propagates to the caller after
+/// the scope joins.
+pub fn map_indexed<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = resolve_threads(threads).min(n);
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().expect("result slot poisoned") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("result slot poisoned")
+                .expect("every claimed cell stores a result")
+        })
+        .collect()
+}
+
+/// In-place parallel for-each over disjoint mutable items (contiguous
+/// chunk per worker). The items must be independent — `f` sees exactly
+/// one of them at a time and items never observe each other, so the
+/// post-state is identical at any thread count.
+///
+/// This is the fleet layer's stepping primitive: replicas are
+/// independent between routing events, so advancing all of them to the
+/// next event horizon is a parallel loop.
+pub fn for_each_mut<T, F>(items: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let threads = resolve_threads(threads).min(items.len());
+    if threads <= 1 {
+        for it in items.iter_mut() {
+            f(it);
+        }
+        return;
+    }
+    let chunk = items.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for part in items.chunks_mut(chunk) {
+            let f = &f;
+            s.spawn(move || {
+                for it in part {
+                    f(it);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{derive_seed, Rng};
+
+    #[test]
+    fn map_indexed_preserves_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let reference: Vec<u64> = items.iter().map(|&x| derive_seed(x, 3)).collect();
+        for threads in [1, 2, 4, 16] {
+            let got = map_indexed(&items, threads, |i, &x| {
+                assert_eq!(i as u64, x);
+                // Uneven per-cell cost so completion order scrambles.
+                let mut r = Rng::new(x);
+                let spins = r.range_u64(0, 2000);
+                let mut acc = 0u64;
+                for _ in 0..spins {
+                    acc = acc.wrapping_add(r.next_u64());
+                }
+                std::hint::black_box(acc);
+                derive_seed(x, 3)
+            });
+            assert_eq!(got, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_handles_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(map_indexed(&empty, 8, |_, &x| x).is_empty());
+        assert_eq!(map_indexed(&[7u32], 8, |_, &x| x * 2), vec![14]);
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_once() {
+        for threads in [1, 3, 8] {
+            let mut items: Vec<u64> = (0..100).collect();
+            for_each_mut(&mut items, threads, |x| *x = derive_seed(*x, 1));
+            let want: Vec<u64> = (0..100).map(|x| derive_seed(x, 1)).collect();
+            assert_eq!(items, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn resolve_threads_explicit_wins() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+    }
+}

@@ -94,6 +94,49 @@ pub fn run_world(
     (res, world)
 }
 
+/// The rate × system grid every latency/utilization figure sweeps,
+/// hoisted from the (formerly duplicated) fig9/fig11 loop shape and
+/// fanned out over the parallel experiment engine: one `eval` call per
+/// (rate, system) cell via [`crate::exp::map_indexed`], results
+/// regrouped rate-major in grid order. Each cell regenerates its own
+/// workload from `(cfg, trace, rate, cfg.seed)` — deterministic, so
+/// rival systems at one rate see the identical trace and the same rows
+/// come back at any thread count.
+///
+/// Grid cells always run with `sched_time_scale = 0`: charging MEASURED
+/// scheduler wall-clock into the simulated clock (the Fig 14 overhead
+/// model) would let CPU contention between concurrent cells bias the
+/// results and vary them run-to-run. Fig 14 is the overhead figure and
+/// keeps measured charging on its own (serial) driver; the latency/
+/// utilization grids are bit-deterministic instead.
+///
+/// `eval(cfg, system, items, rate)` prices one cell; `threads` follows
+/// `exp::resolve_threads` (0 = env/auto).
+pub fn run_rate_grid<R: Send>(
+    cfg: &SystemConfig,
+    trace: &str,
+    points: usize,
+    duration: f64,
+    systems: &[&'static str],
+    threads: usize,
+    eval: impl Fn(&SystemConfig, &'static str, &[TraceItem], f64) -> R + Sync,
+) -> Vec<(f64, Vec<R>)> {
+    let mut cfg = cfg.clone();
+    cfg.sched_time_scale = 0.0;
+    let cfg = &cfg;
+    let grid = rate_grid(cfg, trace, points);
+    let cells: Vec<(f64, &'static str)> = grid
+        .iter()
+        .flat_map(|&rate| systems.iter().map(move |&sys| (rate, sys)))
+        .collect();
+    let results = crate::exp::map_indexed(&cells, threads, |_, &(rate, sys)| {
+        let items = workload(cfg, trace, rate, duration, cfg.seed);
+        eval(cfg, sys, &items, rate)
+    });
+    let mut it = results.into_iter();
+    grid.into_iter().map(|rate| (rate, it.by_ref().take(systems.len()).collect())).collect()
+}
+
 /// Default experiment duration (simulated seconds) — short enough that
 /// all figures regenerate in minutes, long enough for steady state.
 pub const DURATION: f64 = 90.0;
@@ -119,6 +162,25 @@ mod tests {
         assert_eq!(g.len(), 6);
         for w in g.windows(2) {
             assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn rate_grid_rows_stay_grid_ordered() {
+        let mut c = cfg("opt-13b", "alpaca");
+        c.sched_time_scale = 0.0;
+        let eval = |cfg: &SystemConfig, sys: &'static str, items: &[TraceItem], rate: f64| {
+            assert!(!items.is_empty(), "{sys}@{rate}");
+            let s = run_world(cfg, sys, "alpaca", items, true, 120.0).0.summary;
+            (sys, s.n_done)
+        };
+        let rows = run_rate_grid(&c, "alpaca", 2, 4.0, &["orca", "vllm"], 2, eval);
+        assert_eq!(rows.len(), 2);
+        for (rate, cells) in &rows {
+            assert!(*rate > 0.0);
+            // System-minor order within each rate row.
+            assert_eq!(cells[0].0, "orca");
+            assert_eq!(cells[1].0, "vllm");
         }
     }
 

@@ -1,10 +1,14 @@
 //! Figure 11: average KVC and GPU utilization vs request rate on
-//! ShareGPT for each model, across the Fig 9 systems.
+//! ShareGPT for each model, across the Fig 9 systems — the (rate,
+//! system) cells fan out over `figures::common::run_rate_grid` like
+//! fig9's.
 
 use super::common::{self, MAX_TIME};
 use crate::cluster::{DistServeConfig, DistServeSim};
 use crate::util::bench::BenchOut;
 use crate::util::stats::Table;
+
+const SYSTEMS: [&str; 5] = ["orca", "vllm", "sarathi", "distserve", "econoserve"];
 
 pub fn run(fast: bool) {
     let mut out = BenchOut::new("fig11");
@@ -15,22 +19,32 @@ pub fn run(fast: bool) {
 
     for model in models {
         let cfg = common::cfg(model, trace);
-        let grid = common::rate_grid(&cfg, trace, points);
-        let mut kvc_t = Table::new(&["rate_rps", "ORCA", "vLLM", "Sarathi", "DistServe", "EconoServe"]);
-        let mut gpu_t = Table::new(&["rate_rps", "ORCA", "vLLM", "Sarathi", "DistServe", "EconoServe"]);
-        for rate in grid {
-            let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
-            let mut kvc_row = vec![format!("{rate:.2}")];
-            let mut gpu_row = vec![format!("{rate:.2}")];
-            for sys in ["orca", "vllm", "sarathi", "distserve", "econoserve"] {
-                let (kvc, gpu) = if sys == "distserve" {
-                    let dcfg = DistServeConfig::homogeneous(cfg.profile.clone(), &cfg);
-                    let r = DistServeSim::new(dcfg).run(&items, MAX_TIME);
+        let rows = common::run_rate_grid(
+            &cfg,
+            trace,
+            points,
+            duration,
+            &SYSTEMS,
+            0,
+            |cfg, sys, items, _rate| {
+                if sys == "distserve" {
+                    let dcfg = DistServeConfig::homogeneous(cfg.profile.clone(), cfg);
+                    let r = DistServeSim::new(dcfg).run(items, MAX_TIME);
                     (r.summary.kvc_util, r.summary.gpu_util)
                 } else {
-                    let s = common::run_world(&cfg, sys, trace, &items, false, MAX_TIME).0.summary;
+                    let s = common::run_world(cfg, sys, trace, items, false, MAX_TIME).0.summary;
                     (s.kvc_util, s.gpu_util)
-                };
+                }
+            },
+        );
+        let mut kvc_t =
+            Table::new(&["rate_rps", "ORCA", "vLLM", "Sarathi", "DistServe", "EconoServe"]);
+        let mut gpu_t =
+            Table::new(&["rate_rps", "ORCA", "vLLM", "Sarathi", "DistServe", "EconoServe"]);
+        for (rate, cells) in rows {
+            let mut kvc_row = vec![format!("{rate:.2}")];
+            let mut gpu_row = vec![format!("{rate:.2}")];
+            for (kvc, gpu) in cells {
                 kvc_row.push(format!("{:.1}", kvc * 100.0));
                 gpu_row.push(format!("{:.1}", gpu * 100.0));
             }

@@ -5,6 +5,11 @@
 //! autoscaled fleet matches the static peak fleet's SLO attainment with
 //! measurably fewer GPU-hours (the SageServe/Aladdin cost story neither
 //! static layer can express).
+//!
+//! Parallelism: the min-GPU search evaluates every candidate fleet size
+//! concurrently (`fleet::min_replicas_for_goodput` over the experiment
+//! engine), and the diurnal autoscaler scenarios fan out as independent
+//! cells.
 
 use super::common::{self, MAX_TIME};
 use crate::cluster::{DistServeConfig, DistServeSim};
@@ -125,12 +130,21 @@ pub fn run(fast: bool) {
         "peak_reps",
         "mean_reps",
     ]);
-    for scaler in ["static-k", "reactive", "forecast"] {
-        let mut fc = FleetConfig::new(cfg.clone(), "econoserve", trace);
+    // The three autoscaler scenarios are independent fleet runs: fan
+    // them out as cells (each with serial replica stepping — the
+    // cell-level parallelism owns the cores).
+    let scalers = ["static-k", "reactive", "forecast"];
+    let summaries = crate::exp::map_indexed(&scalers, 0, |_, &scaler| {
+        let mut cfg = cfg.clone();
+        // Concurrent cells must not charge measured scheduler wall-clock
+        // (contention bias; Fig 14 owns the overhead story).
+        cfg.sched_time_scale = 0.0;
+        let mut fc = FleetConfig::new(cfg, "econoserve", trace);
         fc.router = "least-kvc".to_string();
         fc.autoscaler = scaler.to_string();
         fc.max_sim_time = diurnal_duration * 4.0;
         fc.max_replicas = max_replicas;
+        fc.threads = 1;
         if scaler == "static-k" {
             // The static baseline pays for peak capacity the whole day.
             fc.init_replicas = max_replicas;
@@ -140,8 +154,9 @@ pub fn run(fast: bool) {
             fc.min_replicas = 1;
             fc.boot_latency = 8.0;
         }
-        let res = fleet::run(&fc, &items);
-        let s = &res.summary;
+        fleet::run(&fc, &items).summary
+    });
+    for (scaler, s) in scalers.iter().zip(&summaries) {
         t.rowf(
             scaler,
             &[

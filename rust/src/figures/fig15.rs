@@ -1,12 +1,13 @@
 //! Figure 15: sensitivity of EconoServe (OPT-13B) to the SLO scale,
 //! padding ratio, reserved-KVC share, and KVCPipe buffer — normalized
-//! JCT / throughput / SSR per setting.
+//! JCT / throughput / SSR per setting. Every (trace, value) cell is an
+//! independent run, fanned out over the parallel experiment engine.
 
 use super::common::{self, MAX_TIME};
 use crate::util::bench::BenchOut;
 use crate::util::stats::Table;
 
-fn sweep<F: Fn(&mut crate::config::SystemConfig, f64)>(
+fn sweep<F: Fn(&mut crate::config::SystemConfig, f64) + Sync>(
     out: &mut BenchOut,
     title: &str,
     values: &[f64],
@@ -14,17 +15,28 @@ fn sweep<F: Fn(&mut crate::config::SystemConfig, f64)>(
     apply: F,
 ) {
     let duration = if fast { 30.0 } else { 60.0 };
+    let cells: Vec<(&'static str, f64)> = common::traces()
+        .into_iter()
+        .flat_map(|trace| values.iter().map(move |&v| (trace, v)))
+        .collect();
+    let results = crate::exp::map_indexed(&cells, 0, |_, &(trace, v)| {
+        let mut cfg = common::cfg("opt-13b", trace);
+        // Concurrent cells must not charge measured scheduler wall-clock
+        // into the sim clock (contention would bias the sweep; Fig 14
+        // owns the overhead story).
+        cfg.sched_time_scale = 0.0;
+        apply(&mut cfg, v);
+        let rate = common::capacity_estimate(&cfg, trace) * 0.8;
+        let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
+        let s = common::run_world(&cfg, "econoserve", trace, &items, false, MAX_TIME).0.summary;
+        (s.mean_jct, s.throughput_rps, s.ssr)
+    });
+    let mut it = results.into_iter();
     for trace in common::traces() {
         let mut t = Table::new(&["value", "jct_s", "tput_rps", "ssr_%"]);
         for &v in values {
-            let mut cfg = common::cfg("opt-13b", trace);
-            apply(&mut cfg, v);
-            let rate = common::capacity_estimate(&cfg, trace) * 0.8;
-            let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
-            let s = common::run_world(&cfg, "econoserve", trace, &items, false, MAX_TIME)
-                .0
-                .summary;
-            t.rowf(&format!("{v}"), &[s.mean_jct, s.throughput_rps, s.ssr * 100.0]);
+            let (jct, tput, ssr) = it.next().expect("one result per cell");
+            t.rowf(&format!("{v}"), &[jct, tput, ssr * 100.0]);
         }
         out.section(&format!("{title} — {trace}"), t);
     }

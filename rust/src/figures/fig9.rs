@@ -1,6 +1,11 @@
 //! Figure 9: normalized latency vs request rate for all models and
 //! traces, comparing ORCA / vLLM / Sarathi-Serve / DistServe (2x GPUs) /
 //! EconoServe. The paper's headline sustainable-rate comparison.
+//!
+//! Every (rate, system) cell is an independent simulation, so the whole
+//! grid fans out over `figures::common::run_rate_grid` (the parallel
+//! experiment engine); rows come back in grid order regardless of
+//! thread count.
 
 use super::common::{self, MAX_TIME};
 use crate::cluster::{DistServeConfig, DistServeSim};
@@ -22,32 +27,39 @@ pub fn run(fast: bool) {
     let duration = if fast { 30.0 } else { 60.0 };
     let models: &[&str] = if fast { &["opt-13b"] } else { &["opt-13b", "llama-33b", "opt-175b"] };
     let points = if fast { 4 } else { 6 };
+    let sys_names: Vec<&'static str> = systems().iter().map(|(_, s)| *s).collect();
 
     for model in models {
         for trace in common::traces() {
             let cfg = common::cfg(model, trace);
-            let grid = common::rate_grid(&cfg, trace, points);
+            let rows = common::run_rate_grid(
+                &cfg,
+                trace,
+                points,
+                duration,
+                &sys_names,
+                0,
+                |cfg, sys, items, _rate| {
+                    if sys == "distserve" {
+                        let dcfg = DistServeConfig::homogeneous(cfg.profile.clone(), cfg);
+                        DistServeSim::new(dcfg).run(items, MAX_TIME).summary.norm_latency
+                    } else {
+                        common::run_world(cfg, sys, trace, items, false, MAX_TIME)
+                            .0
+                            .summary
+                            .norm_latency
+                    }
+                },
+            );
             let mut t = Table::new(&{
                 let mut h = vec!["rate_rps"];
                 h.extend(systems().iter().map(|(l, _)| *l));
                 h
             });
-            for rate in grid {
-                let items = common::workload(&cfg, trace, rate, duration, cfg.seed);
-                let mut cells = vec![format!("{rate:.2}")];
-                for (_, sys) in systems() {
-                    let nl = if sys == "distserve" {
-                        let dcfg = DistServeConfig::homogeneous(cfg.profile.clone(), &cfg);
-                        DistServeSim::new(dcfg).run(&items, MAX_TIME).summary.norm_latency
-                    } else {
-                        common::run_world(&cfg, sys, trace, &items, false, MAX_TIME)
-                            .0
-                            .summary
-                            .norm_latency
-                    };
-                    cells.push(format!("{nl:.4}"));
-                }
-                t.row(&cells);
+            for (rate, cells) in rows {
+                let mut row = vec![format!("{rate:.2}")];
+                row.extend(cells.iter().map(|nl| format!("{nl:.4}")));
+                t.row(&row);
             }
             out.section(
                 &format!("{model} / {trace}: normalized latency (s/token) vs rate"),

@@ -39,7 +39,9 @@ impl ScaleObs<'_> {
 }
 
 /// Capacity policy: desired serving-replica count per control tick.
-pub trait Autoscaler {
+/// `Send` is part of the contract (fleet runs are experiment-grid cells
+/// that move across worker threads — see [`crate::exp`]).
+pub trait Autoscaler: Send {
     fn name(&self) -> &'static str;
 
     /// Observe one routed arrival (feeds rate estimators; default no-op).

@@ -42,7 +42,9 @@ impl ReplicaSnapshot {
 }
 
 /// Placement policy: pick one of the routable replicas for an arrival.
-pub trait Router {
+/// `Send` is part of the contract (fleet runs are experiment-grid cells
+/// that move across worker threads — see [`crate::exp`]).
+pub trait Router: Send {
     fn name(&self) -> &'static str;
 
     /// Returns an index into `replicas` (guaranteed non-empty).

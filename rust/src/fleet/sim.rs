@@ -5,8 +5,10 @@
 //! arrival, the next boot completion, and the next autoscaler control
 //! tick. At each event time every live replica is advanced to the event
 //! (via [`Stepper::advance_to`], whose idle clock is clamped to the
-//! horizon so injections are never in a replica's past), then the event
-//! is applied:
+//! horizon so injections are never in a replica's past) — concurrently
+//! across worker threads (`FleetConfig::threads`; replicas are
+//! data-independent between events, so parallel stepping is
+//! bit-identical to serial) — then the event is applied:
 //!
 //!  * **arrival** — snapshot the Active replicas, let the router pick
 //!    one, inject the request at its true arrival time. Booting and
@@ -86,6 +88,59 @@ impl Replica {
     }
 }
 
+/// Minimum simulated seconds a replica must be behind the horizon
+/// before its advance counts as parallel-worthy work. Fleet events
+/// (arrivals, boots, control ticks) are often microseconds to
+/// milliseconds apart — spawning scoped threads to advance replicas by
+/// a sliver costs more than the sliver — so parallel stepping only
+/// engages when at least two replicas have a real stretch to cover
+/// (compare the coordinator's 0.05 s idle quantum). The gate reads
+/// simulation state only, so it fires identically at any thread count.
+const PAR_MIN_DELTA: f64 = 0.02;
+
+/// Advance every non-retired replica to `horizon` — in parallel when
+/// more than one worker is available AND at least two live replicas are
+/// more than [`PAR_MIN_DELTA`] behind the horizon (see above; tiny
+/// deltas step serially to dodge thread spawn/join overhead on every
+/// event). Replicas are data-independent between routing events
+/// (injections and snapshots happen single-threaded in the event loop),
+/// so the post-state is bit-identical at any thread count; `threads` is
+/// purely a wall-clock knob. This loop is the fleet's dominant cost —
+/// each replica runs its whole plan/price/apply iteration chain to the
+/// horizon — and it is why [`crate::coordinator::Stepper`] (scheduler,
+/// allocator, predictor boxes included) must be `Send`.
+fn advance_live(replicas: &mut [Replica], horizon: f64, threads: usize) {
+    if threads > 1 {
+        let mut lagging = 0usize;
+        for r in replicas.iter() {
+            if r.state != ReplicaState::Retired
+                && horizon - r.stepper.world.clock > PAR_MIN_DELTA
+            {
+                lagging += 1;
+                if lagging >= 2 {
+                    break;
+                }
+            }
+        }
+        if lagging >= 2 {
+            let mut live: Vec<&mut Replica> = replicas
+                .iter_mut()
+                .filter(|r| r.state != ReplicaState::Retired)
+                .collect();
+            crate::exp::for_each_mut(&mut live, threads, |r| r.stepper.advance_to(horizon));
+            return;
+        }
+    }
+    // Serial fast path: in place, no allocation (the common case — and
+    // the only case at threads == 1, keeping the PR 3 zero-allocation
+    // property of the event loop intact).
+    for r in replicas.iter_mut() {
+        if r.state != ReplicaState::Retired {
+            r.stepper.advance_to(horizon);
+        }
+    }
+}
+
 /// Run a fleet over `items` (sorted by arrival, as every trace
 /// generator produces them).
 pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
@@ -102,6 +157,18 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
     let mut scaler = autoscale::by_name(&fc.autoscaler, fc.knobs())
         .unwrap_or_else(|| panic!("unknown autoscaler '{}'", fc.autoscaler));
 
+    // Concurrent stepping under MEASURED scheduler-time charging
+    // (sched_time_scale > 0) would let CPU contention between replicas
+    // bias the simulated clocks and make results thread-count-dependent
+    // — so auto mode (threads == 0) stays serial for such configs, and
+    // only an explicit threads > 1 request opts in (documented caveat
+    // on `FleetConfig::threads`). Deterministic configs (scale == 0)
+    // parallelize freely: thread count cannot change their results.
+    let threads = if fc.cfg.sched_time_scale > 0.0 && fc.threads == 0 {
+        1
+    } else {
+        crate::exp::resolve_threads(fc.threads)
+    };
     let init = fc.init_replicas.clamp(fc.min_replicas, fc.max_replicas);
     let mut replicas: Vec<Replica> =
         (0..init).map(|i| Replica::boot(fc, i, 0.0, 0.0)).collect();
@@ -127,21 +194,13 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
             .fold(f64::INFINITY, f64::min);
         let t = t_arr.min(t_boot).min(next_ctl).max(clock);
         if t > fc.max_sim_time {
-            for r in &mut replicas {
-                if r.state != ReplicaState::Retired {
-                    r.stepper.advance_to(fc.max_sim_time);
-                }
-            }
+            advance_live(&mut replicas, fc.max_sim_time, threads);
             clock = clock.max(fc.max_sim_time);
             break;
         }
         clock = t;
 
-        for r in &mut replicas {
-            if r.state != ReplicaState::Retired {
-                r.stepper.advance_to(t);
-            }
-        }
+        advance_live(&mut replicas, t, threads);
         for r in &mut replicas {
             if r.state == ReplicaState::Booting && r.log.routable_at <= t {
                 r.state = ReplicaState::Active;

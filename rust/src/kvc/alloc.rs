@@ -256,7 +256,12 @@ impl PoolCore {
 ///
 /// The trait is object-safe: `World` owns a `Box<dyn Allocator>` and
 /// hands it to schedulers through `IterCtx::alloc()`.
-pub trait Allocator {
+///
+/// `Send` is part of the contract: the allocator travels inside its
+/// `World` when the parallel experiment engine ([`crate::exp`]) moves a
+/// simulation across worker threads — keep implementations free of
+/// non-`Send` state.
+pub trait Allocator: Send {
     /// Registry name of this allocator (`max`, `block`, `exact`,
     /// `pipelined-<inner>`).
     fn name(&self) -> &'static str;

@@ -44,8 +44,8 @@
 //! non-stationary workloads ([`trace::ArrivalProcess`]: poisson / mmpp /
 //! diurnal). It reports goodput, SLO satisfaction, GPU-hours and
 //! goodput-per-GPU-hour — the paper's Fig 12 capacity story, told
-//! dynamically. The legacy [`cluster`] pre-sharded capacity model is now
-//! a thin compat wrapper over it.
+//! dynamically. ([`cluster`] retains only the DistServe baseline; the
+//! legacy pre-sharded capacity wrappers are gone.)
 //!
 //! Both speak the typed request lifecycle of [`api`]: admission-checked
 //! submission ([`api::SubmitOptions`] → [`api::AdmissionController`]),
@@ -57,6 +57,19 @@
 //! paths is the single shared EconoServe §3.4 implementation in
 //! [`ordering`] ([`ordering::QueuePolicy`], selectable by name).
 //!
+//! Experiments themselves are parallel programs: the paper's results
+//! are grids (rate × scheduler × seed × fleet axes), and [`exp`] is the
+//! deterministic fan-out engine behind all of them — the figure
+//! drivers, the Fig 12 capacity search, the hot-path bench grid, and
+//! the `econoserve sweep` CLI all run their independent cells over it,
+//! with input-order collection and coordinate-derived RNG streams so
+//! output is bit-identical at any thread count (`--threads` /
+//! `ECONOSERVE_THREADS`). The core simulation types are `Send` by
+//! contract ([`sched::Scheduler`], [`kvc::Allocator`],
+//! [`predictor::Predictor`], [`fleet::Router`], [`fleet::Autoscaler`]),
+//! so whole worlds move across worker threads; the fleet layer also
+//! advances its live replicas concurrently between routing events.
+//!
 //! Start with [`coordinator`] for the simulated serving loop, [`api`]
 //! for the client-facing request lifecycle, or the `examples/` directory
 //! for end-to-end usage.
@@ -66,6 +79,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod exp;
 pub mod figures;
 pub mod fleet;
 pub mod ordering;

@@ -4,7 +4,10 @@
 //!   simulate  — run a scheduler over a synthetic trace on the calibrated
 //!               engine and print the summary (the paper's single-GPU setup).
 //!   serve     — load the AOT artifacts and serve a generated workload on
-//!               the REAL model via PJRT (python-free request path).
+//!               the REAL model via PJRT (python-free request path;
+//!               requires the `pjrt` feature).
+//!   sweep     — parallel experiment grid (JSON spec in → one JSON row
+//!               per cell out, deterministic at any --threads).
 //!   trace     — generate/inspect traces (Table 2 self-check).
 //!   capacity  — Fig 12-style min-GPU search vs DistServe.
 //!   fleet     — multi-replica fleet: routing + autoscaling + GPU-hour
@@ -15,13 +18,11 @@
 use econoserve::cluster::{DistServeConfig, DistServeSim};
 use econoserve::config::{ModelProfile, SystemConfig};
 use econoserve::coordinator::{harness, RunLimits};
-use econoserve::api::{AdmissionConfig, SubmitOptions};
+use econoserve::exp::{self, GridSpec};
 use econoserve::fleet::{self, FleetConfig};
-use econoserve::ordering::QueuePolicy;
-use econoserve::server::{RealServer, ServerConfig};
 use econoserve::trace::{self, ArrivalProcess, TraceGen, TraceSpec};
 use econoserve::util::cli::Cli;
-use econoserve::util::rng::Rng;
+use econoserve::util::json::Json;
 
 fn main() {
     let mut args = std::env::args().skip(1);
@@ -30,13 +31,14 @@ fn main() {
     let code = match cmd.as_str() {
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
+        "sweep" => cmd_sweep(rest),
         "trace" => cmd_trace(rest),
         "capacity" => cmd_capacity(rest),
         "fleet" => cmd_fleet(rest),
         "figures" => cmd_figures(rest),
         _ => {
             eprintln!(
-                "usage: econoserve <simulate|serve|trace|capacity|fleet|figures> [options]\n\
+                "usage: econoserve <simulate|serve|sweep|trace|capacity|fleet|figures> [options]\n\
                  try: econoserve simulate --help"
             );
             2
@@ -166,7 +168,126 @@ fn print_summary(s: &econoserve::metrics::Summary, n: usize) {
     );
 }
 
+fn cmd_sweep(argv: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "econoserve sweep",
+        "parallel experiment grid: fan independent cells (system x model x trace x rate x \
+         seed [x router x autoscaler]) over worker threads; JSON spec in, one JSON row per \
+         cell out, bit-identical at any thread count",
+    )
+    .opt(
+        "grid",
+        "",
+        "JSON grid-spec file (keys: systems, models, traces, rates, rate_points, seeds, \
+         routers, autoscalers, replicas, duration, max_time, oracle, threads); when set, \
+         the inline axis options below are ignored",
+    )
+    .opt("systems", "econoserve", "comma list of systems ('<sched>' or '<sched>+<alloc>')")
+    .opt("model", "opt-13b", "comma list of model profiles")
+    .opt("trace", "sharegpt", "comma list of traces")
+    .opt("rates", "", "comma list of arrival rates req/s (empty = capacity-scaled auto grid)")
+    .opt("rate-points", "4", "points in the auto rate grid when --rates is empty")
+    .opt("seeds", "42", "comma list of workload seeds")
+    .opt("routers", "", "comma list of fleet routers (set with --autoscalers for fleet cells)")
+    .opt("autoscalers", "", "comma list of fleet autoscalers")
+    .opt("replicas", "2", "fleet size bound for fleet cells")
+    .opt("duration", "30", "workload duration, simulated seconds")
+    .opt("max-time", "900", "simulated-time cap (drain allowance)")
+    .opt("threads", "0", "worker threads (0 = ECONOSERVE_THREADS, then available parallelism)")
+    .opt("out", "", "write the result JSON here (empty = stdout)")
+    .flag("oracle", "use ground-truth response lengths");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let grid_path = a.get("grid");
+    let spec = if !grid_path.is_empty() {
+        match Json::parse_file(grid_path).and_then(|doc| GridSpec::from_json(&doc)) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("bad grid spec {grid_path}: {e}");
+                return 2;
+            }
+        }
+    } else {
+        let mut seeds = Vec::new();
+        for s in a.str_list("seeds") {
+            match s.parse::<u64>() {
+                Ok(v) => seeds.push(v),
+                Err(_) => {
+                    eprintln!("--seeds: bad integer '{s}'");
+                    return 2;
+                }
+            }
+        }
+        let spec = GridSpec {
+            systems: a.str_list("systems"),
+            models: a.str_list("model"),
+            traces: a.str_list("trace"),
+            rates: a.f64_list("rates"),
+            rate_points: a.usize("rate-points"),
+            seeds,
+            routers: a.str_list("routers"),
+            autoscalers: a.str_list("autoscalers"),
+            replicas: a.usize("replicas"),
+            duration: a.f64("duration"),
+            max_time: a.f64("max-time"),
+            oracle: a.bool("oracle"),
+            threads: a.usize("threads"),
+        };
+        if let Err(e) = spec.validate() {
+            eprintln!("bad sweep spec: {e}");
+            return 2;
+        }
+        spec
+    };
+    // Progress on stderr: stdout stays pure JSON when --out is empty.
+    let n_cells = spec.cells().len();
+    eprintln!(
+        "sweep: {n_cells} cells on {} thread(s)",
+        exp::resolve_threads(spec.threads).min(n_cells.max(1))
+    );
+    let res = exp::run_grid(&spec);
+    let doc = res.to_json().to_string();
+    let out = a.get("out");
+    if out.is_empty() {
+        println!("{doc}");
+    } else if let Err(e) = std::fs::write(out, &doc) {
+        eprintln!("write {out}: {e}");
+        return 1;
+    } else {
+        println!(
+            "sweep: {} cells in {:.2}s on {} thread(s) -> {out}",
+            res.rows.len(),
+            res.wall_s,
+            res.threads
+        );
+    }
+    0
+}
+
+/// The simulation stack is std-only; only `serve` needs the native
+/// PJRT/xla toolchain, so the binary builds (and every other subcommand
+/// runs) under `--no-default-features`.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_argv: Vec<String>) -> i32 {
+    eprintln!(
+        "econoserve serve needs the real-model runtime: rebuild with the \
+         'pjrt' feature (the default) instead of --no-default-features"
+    );
+    2
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(argv: Vec<String>) -> i32 {
+    use econoserve::api::{AdmissionConfig, SubmitOptions};
+    use econoserve::ordering::QueuePolicy;
+    use econoserve::server::{RealServer, ServerConfig};
+    use econoserve::util::rng::Rng;
+
     let cli = Cli::new("econoserve serve", "serve a workload on the REAL model via PJRT")
         .opt("artifacts", "artifacts", "AOT artifacts directory")
         .opt("listen", "", "start the HTTP front-end on this address (e.g. 127.0.0.1:8080) instead of the batch demo")

@@ -43,7 +43,13 @@ use crate::core::{BatchPlan, PreemptKind, ReqId};
 use crate::kvc::{Allocator, ReserveClass};
 
 /// Iteration-level scheduler interface (the typed policy contract).
-pub trait Scheduler {
+///
+/// `Send` is part of the contract: a scheduler is boxed inside a
+/// simulation (`coordinator::Stepper`, `sched::System`) that the
+/// parallel experiment engine ([`crate::exp`]) moves across worker
+/// threads — keep implementations free of non-`Send` state (`Rc`,
+/// `RefCell`, raw pointers).
+pub trait Scheduler: Send {
     fn name(&self) -> &'static str;
 
     /// Form the plan for the next iteration. `ctx.events` holds the

@@ -3,6 +3,11 @@
 //! indexed queues) must produce the SAME decisions as the plain
 //! linear-scan formulations they replaced — on randomized, seeded inputs,
 //! for every supported sched+alloc registry combo.
+//!
+//! Plus the parallel experiment engine's determinism contract: grid
+//! sweeps, figure rows, and fleet runs must be **bit-identical** at any
+//! worker-thread count (1 vs 4 pinned here) — parallelism is a
+//! wall-clock knob, never a results knob.
 
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
@@ -299,4 +304,136 @@ fn full_grid_smoke_identical_twice() {
         assert_eq!(a, b, "{combo} diverged across identical runs");
         assert_eq!(a.0, items.len(), "{combo} lost requests");
     }
+}
+
+// ---------------------------------------------------------------------
+// Parallel experiment engine: thread count never changes results
+// ---------------------------------------------------------------------
+
+/// The whole movable-simulation contract in one place: everything the
+/// parallel engine sends across worker threads must be `Send` (this is
+/// what the `Send` supertraits on Scheduler/Allocator/Predictor/Router/
+/// Autoscaler buy). Purely a compile-time pin.
+#[test]
+fn sim_core_is_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<World>();
+    assert_send::<econoserve::coordinator::Stepper>();
+    assert_send::<econoserve::sched::System>();
+    assert_send::<Box<dyn econoserve::sched::Scheduler>>();
+    assert_send::<Box<dyn econoserve::kvc::Allocator>>();
+    assert_send::<Box<dyn econoserve::predictor::Predictor>>();
+    assert_send::<Box<dyn econoserve::fleet::Router>>();
+    assert_send::<Box<dyn econoserve::fleet::Autoscaler>>();
+    assert_send::<econoserve::cluster::DistServeSim>();
+}
+
+/// `exp::map_indexed` ordering/determinism property: on randomized cell
+/// counts and uneven per-cell work, results land in input order and
+/// match the sequential map at every thread count.
+#[test]
+fn map_indexed_matches_sequential_reference() {
+    use econoserve::util::rng::derive_seed;
+    run_prop("map_indexed_determinism", 30, |rng| {
+        let n = sized(rng, 120);
+        let items: Vec<u64> = (0..n as u64).map(|i| derive_seed(rng.next_u64(), i)).collect();
+        let work = |i: usize, x: &u64| {
+            // Uneven cost so completion order scrambles under threads.
+            let mut r = Rng::new(*x);
+            let spins = r.range_u64(0, 500);
+            let mut acc = *x;
+            for _ in 0..spins {
+                acc = acc.wrapping_add(r.next_u64());
+            }
+            (i, std::hint::black_box(acc))
+        };
+        let reference: Vec<(usize, u64)> =
+            items.iter().enumerate().map(|(i, x)| work(i, x)).collect();
+        for threads in [1usize, 4, 9] {
+            let got = econoserve::exp::map_indexed(&items, threads, work);
+            assert_eq!(got, reference, "threads={threads}");
+        }
+    });
+}
+
+/// A figure-scale rate × system grid produces bit-identical rows at 1
+/// and 4 worker threads (sched_time_scale = 0 makes the sequential path
+/// itself deterministic; the parallel path must not add anything).
+#[test]
+fn figure_grid_rows_bit_identical_across_thread_counts() {
+    use econoserve::figures::common;
+    let mut cfg = common::cfg("opt-13b", "alpaca");
+    cfg.sched_time_scale = 0.0;
+    let eval = |cfg: &econoserve::config::SystemConfig,
+                sys: &'static str,
+                items: &[TraceItem],
+                _rate: f64| {
+        let s = common::run_world(cfg, sys, "alpaca", items, true, 120.0).0.summary;
+        (s.n_done, s.mean_jct.to_bits(), s.norm_latency.to_bits(), s.ssr.to_bits())
+    };
+    let rows1 = common::run_rate_grid(&cfg, "alpaca", 2, 5.0, &["orca", "vllm"], 1, eval);
+    let rows4 = common::run_rate_grid(&cfg, "alpaca", 2, 5.0, &["orca", "vllm"], 4, eval);
+    assert_eq!(rows1, rows4, "figure rows diverged across thread counts");
+}
+
+/// `exp::run_grid` (the `econoserve sweep` surface) emits bit-identical
+/// JSON rows at 1 and 4 threads.
+#[test]
+fn sweep_rows_bit_identical_across_thread_counts() {
+    use econoserve::exp::GridSpec;
+    let mut spec = GridSpec {
+        systems: vec!["orca".to_string(), "vllm".to_string()],
+        models: vec!["opt-13b".to_string()],
+        traces: vec!["alpaca".to_string()],
+        rates: vec![2.0, 4.0],
+        seeds: vec![1],
+        duration: 5.0,
+        max_time: 120.0,
+        oracle: true,
+        threads: 1,
+        ..GridSpec::default()
+    };
+    let a = econoserve::exp::run_grid(&spec);
+    spec.threads = 4;
+    let b = econoserve::exp::run_grid(&spec);
+    assert_eq!(a.rows, b.rows, "sweep rows diverged across thread counts");
+    assert_eq!(a.rows.len(), 4, "2 systems x 2 rates");
+}
+
+/// Concurrent fleet stepping: the same run with serial (threads=1) and
+/// parallel (threads=4) replica advancement yields the SAME
+/// `FleetSummary` — replicas are data-independent between routing
+/// events, so thread count is purely a wall-clock knob.
+#[test]
+fn fleet_summary_bit_identical_parallel_vs_sequential() {
+    use econoserve::fleet::{self, FleetConfig};
+    use econoserve::trace::{TraceGen, TraceSpec};
+    let mut cfg = mini_cfg(4096);
+    cfg.seed = 23;
+    let gen = TraceGen::new(TraceSpec::sharegpt());
+    let items = gen.generate(150, 8.0, 1024, 23);
+    let run_with = |threads: usize| {
+        let mut fc = FleetConfig::new(cfg.clone(), "econoserve", "sharegpt");
+        fc.oracle = true;
+        fc.router = "least-kvc".to_string();
+        fc.autoscaler = "reactive".to_string();
+        fc.init_replicas = 2;
+        fc.min_replicas = 1;
+        fc.max_replicas = 3;
+        fc.boot_latency = 5.0;
+        fc.max_sim_time = 600.0;
+        fc.threads = threads;
+        fleet::run(&fc, &items)
+    };
+    let serial = run_with(1);
+    let parallel = run_with(4);
+    assert_eq!(
+        serial.summary, parallel.summary,
+        "FleetSummary diverged between serial and parallel stepping"
+    );
+    assert_eq!(
+        format!("{:?}", serial.replicas),
+        format!("{:?}", parallel.replicas),
+        "replica lifecycle logs diverged"
+    );
 }

@@ -9,6 +9,14 @@
 #   scripts/bench.sh                  # writes BENCH_sched.json at repo root
 #   scripts/bench.sh out/bench.json   # custom output path
 #   FAST=1 scripts/bench.sh           # default pairings only
+#   BENCH_THREADS=0 scripts/bench.sh  # fan the combo grid over all cores
+#                                     # (wall-clock mode: per-sample p50s
+#                                     # are contention-noisy; keep gate
+#                                     # baselines at the default 1)
+#
+# The artifact records sweep_threads/sweep_wall_s, so a BENCH_THREADS=1
+# vs BENCH_THREADS=0 pair gives the single- vs multi-thread sweep
+# wall-clock comparison for docs/API.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 OUT="${1:-$PWD/BENCH_sched.json}"
@@ -21,5 +29,6 @@ cd rust
 # when baseline and fresh run carry the same label (cross-machine
 # comparisons are informational). CI pins this to its runner flavor.
 export BENCH_HOST="${BENCH_HOST:-$(uname -sm | tr ' ' '-')}"
-cargo bench --no-default-features --bench sched_hotpath -- --json "$OUT"
+cargo bench --no-default-features --bench sched_hotpath -- --json "$OUT" \
+    --threads "${BENCH_THREADS:-1}"
 echo "bench artifact: $OUT (host: $BENCH_HOST)"

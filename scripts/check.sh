@@ -13,6 +13,14 @@ cargo build --release ${CARGO_FLAGS:-}
 # Runs every registered suite, including the fleet-layer tests
 # (tests/fleet.rs) and the trace arrival-process property tests.
 cargo test -q ${CARGO_FLAGS:-}
+# `econoserve sweep` smoke: the parallel experiment engine end-to-end
+# (grid spec in -> one JSON row per cell out) at an explicit thread
+# count. The binary builds with or without the pjrt feature, so this
+# runs in the CI --no-default-features flavor too.
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- sweep \
+    --systems orca --model opt-13b --trace alpaca --rates 2 --seeds 7 \
+    --duration 3 --max-time 60 --oracle --threads 2 \
+    --out "${TMPDIR:-/tmp}/econoserve_sweep_smoke.json"
 if [ -z "${SKIP_CLIPPY:-}" ]; then
     if cargo clippy --version >/dev/null 2>&1; then
         cargo clippy --all-targets ${CARGO_FLAGS:-} -- -D warnings
