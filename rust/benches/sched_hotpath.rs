@@ -13,7 +13,9 @@
 //! one `fleet_routing` case (the CI short mode); the full run covers the
 //! supported grid at every depth and the whole fleet router axis
 //! (`fleet_routing+<router>`: per-arrival snapshot+route cost of the
-//! fleet front door over a 4-replica fleet).
+//! fleet front door over a 4-replica fleet; `+chaos` variants route the
+//! same fleet with half the replicas marked unhealthy, the health-aware
+//! filter path fault injection exercises).
 //!
 //! The combo grid itself runs on the parallel experiment engine
 //! (`econoserve::exp::map_indexed`): pass `--threads N` (0 = auto) to
@@ -31,7 +33,7 @@ use econoserve::figures::common;
 use econoserve::fleet::router::{self, ReplicaSnapshot};
 use econoserve::sched::plan_iteration;
 use econoserve::util::bench::{black_box, time_fn};
-use econoserve::util::rng::derive_seed;
+use econoserve::util::rng::{derive_seed, stream};
 use std::time::{Duration, Instant};
 
 const SCHEDS: [&str; 7] =
@@ -68,7 +70,7 @@ struct Row {
 /// front-door routing case.
 enum Task {
     Combo { combo: String, depth: usize },
-    Routing { router: &'static str, depth: usize },
+    Routing { router: &'static str, depth: usize, chaos: bool },
 }
 
 fn bench_combo(combo: &str, depth: usize, fast: bool) -> (Row, String) {
@@ -131,15 +133,17 @@ fn bench_combo(combo: &str, depth: usize, fast: bool) -> (Row, String) {
 /// Fleet front-door hot path: snapshot the routable replica set and make
 /// one routing decision, against a 4-replica fleet holding `depth`
 /// queued requests total. This is the per-arrival cost the fleet layer
-/// adds on top of per-replica planning.
-fn bench_fleet_routing(router_name: &str, depth: usize, fast: bool) -> (Row, String) {
+/// adds on top of per-replica planning. With `chaos`, half the replicas
+/// are snapshotted unhealthy (crashed-but-listed, as under fault
+/// injection), so the routers' health-filter path is what gets timed.
+fn bench_fleet_routing(router_name: &str, depth: usize, chaos: bool, fast: bool) -> (Row, String) {
     const REPLICAS: usize = 4;
     let cfg = common::cfg("opt-13b", "sharegpt");
     let per = (depth / REPLICAS).max(1);
     let steppers: Vec<Stepper> = (0..REPLICAS)
         .map(|i| {
             let mut c = cfg.clone();
-            c.seed = derive_seed(cfg.seed, 1 + i as u64);
+            c.seed = derive_seed(cfg.seed, stream::replica(i));
             let items = common::workload(&c, "sharegpt", per as f64 / 2.0, 2.0, 7 + i as u64);
             let mut st = Stepper::new(c, "econoserve", "sharegpt", false, &items);
             st.world.clock = 2.0;
@@ -147,7 +151,7 @@ fn bench_fleet_routing(router_name: &str, depth: usize, fast: bool) -> (Row, Str
             st
         })
         .collect();
-    let mut rt = router::by_name(router_name, derive_seed(cfg.seed, 99)).unwrap();
+    let mut rt = router::by_name(router_name, derive_seed(cfg.seed, stream::ROUTER)).unwrap();
     let mut snaps: Vec<ReplicaSnapshot> = Vec::with_capacity(REPLICAS);
     let (min_iters, min_time) = if fast {
         (1_000, Duration::from_millis(75))
@@ -158,14 +162,16 @@ fn bench_fleet_routing(router_name: &str, depth: usize, fast: bool) -> (Row, Str
         || {
             snaps.clear();
             for (id, st) in steppers.iter().enumerate() {
-                snaps.push(ReplicaSnapshot::of_world(id, &st.world));
+                let healthy = !chaos || id % 2 == 0;
+                snaps.push(ReplicaSnapshot::of_world(id, &st.world, healthy));
             }
             black_box(rt.route(&snaps));
         },
         min_iters,
         min_time,
     );
-    let combo = format!("fleet_routing+{router_name}");
+    let suffix = if chaos { "+chaos" } else { "" };
+    let combo = format!("fleet_routing+{router_name}{suffix}");
     let report = res.report(&combo);
     let row = Row {
         combo,
@@ -231,7 +237,8 @@ fn main() {
         &["round-robin", "least-queue", "least-kvc", "power-of-two"]
     };
     for r in routers {
-        tasks.push(Task::Routing { router: r, depth: HEADLINE_DEPTH });
+        tasks.push(Task::Routing { router: r, depth: HEADLINE_DEPTH, chaos: false });
+        tasks.push(Task::Routing { router: r, depth: HEADLINE_DEPTH, chaos: true });
     }
 
     let sweep_threads = econoserve::exp::resolve_threads(threads);
@@ -245,7 +252,9 @@ fn main() {
     let results: Vec<(Row, String)> =
         econoserve::exp::map_indexed(&tasks, sweep_threads, |_, task| match task {
             Task::Combo { combo, depth } => bench_combo(combo, *depth, fast),
-            Task::Routing { router, depth } => bench_fleet_routing(router, *depth, fast),
+            Task::Routing { router, depth, chaos } => {
+                bench_fleet_routing(router, *depth, *chaos, fast)
+            }
         });
     let sweep_wall_s = t0.elapsed().as_secs_f64();
     for (row, report) in &results {

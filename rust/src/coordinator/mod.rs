@@ -74,8 +74,15 @@ const STALL_HORIZON: f64 = 120.0;
 /// scheduler's wall-clock cost) and, if a batch was formed, charge the
 /// scheduling cost to the simulated clock and execute the plan. Returns
 /// `true` when a batch executed; on `false` (empty plan) the caller owns
-/// the idle-clock policy.
-fn plan_and_execute(world: &mut World, sched: &mut dyn Scheduler, engine: &dyn Engine) -> bool {
+/// the idle-clock policy. `dilation` stretches the executed batch's
+/// simulated duration (1.0 = healthy hardware) — the fleet layer's
+/// straggler fault sets it above 1 on a degraded replica.
+fn plan_and_execute(
+    world: &mut World,
+    sched: &mut dyn Scheduler,
+    engine: &dyn Engine,
+    dilation: f64,
+) -> bool {
     let t0 = Instant::now();
     let plan = plan_iteration(world, sched);
     let charged = t0.elapsed().as_secs_f64() * world.cfg.sched_time_scale;
@@ -86,7 +93,7 @@ fn plan_and_execute(world: &mut World, sched: &mut dyn Scheduler, engine: &dyn E
     world.col.record_sched(charged);
     world.clock += charged;
     let (dur, util) = engine.iteration_cost(&plan, world);
-    world.apply_plan(&plan, dur, util);
+    world.apply_plan(&plan, dur * dilation, util);
     // Hand the plan's buffers back for the next iteration (steady-state
     // planning allocates nothing).
     world.recycle_plan(plan);
@@ -121,7 +128,7 @@ pub fn run_admitted(
         }
 
         let before = world.clock;
-        if !plan_and_execute(world, sched, engine) {
+        if !plan_and_execute(world, sched, engine, 1.0) {
             // Nothing runnable. Fast-forward: to the next arrival if it is
             // sooner than the idle quantum, else by the idle quantum —
             // schedulers may be waiting on non-arrival wakeups such as
@@ -216,6 +223,10 @@ pub struct Stepper {
     engine: crate::engine::SimEngine,
     last_progress: f64,
     pub iterations: u64,
+    /// Simulated-time dilation applied to every executed batch (1.0 =
+    /// healthy). The fleet layer's straggler fault raises it for the
+    /// episode, then resets it — see `fleet::faults`.
+    slowdown: f64,
 }
 
 impl Stepper {
@@ -240,7 +251,16 @@ impl Stepper {
             engine: crate::engine::SimEngine::new(),
             last_progress: 0.0,
             iterations: 0,
+            slowdown: 1.0,
         }
+    }
+
+    /// Set the straggler dilation factor for subsequent batches (1.0
+    /// restores healthy speed). Takes effect at the next iteration;
+    /// batches already executed are not re-timed.
+    pub fn set_slowdown(&mut self, factor: f64) {
+        debug_assert!(factor >= 1.0, "slowdown below healthy speed: {factor}");
+        self.slowdown = factor;
     }
 
     pub fn sched_name(&self) -> &'static str {
@@ -282,7 +302,8 @@ impl Stepper {
             self.world.drain_arrivals();
 
             let before = self.world.clock;
-            if !plan_and_execute(&mut self.world, self.sched.as_mut(), &self.engine) {
+            if !plan_and_execute(&mut self.world, self.sched.as_mut(), &self.engine, self.slowdown)
+            {
                 if self.world.n_active() == 0 {
                     // Only future arrivals remain: waiting is progress.
                     self.last_progress = self.world.clock;

@@ -321,6 +321,42 @@ impl World {
         self.index_deactivate(id);
     }
 
+    /// Kill this world (fleet-layer replica crash): every request that
+    /// has not completed — queued, running, or not yet arrived — is
+    /// marked lost-to-crash (phase `Done`, `done_at` stays `None` so it
+    /// counts as an SLO miss unless re-routed) and returned as a fresh
+    /// `TraceItem` carrying its ORIGINAL arrival time. Re-routing the
+    /// item through [`World::push_item`] on a surviving replica
+    /// re-derives the same SLO deadline from that arrival, so a
+    /// re-route is idempotent with respect to the request's SLO. After
+    /// this call `all_done()` is true; the caller must never advance or
+    /// inject into this world again.
+    pub fn crash_all(&mut self) -> Vec<TraceItem> {
+        let mut victims: Vec<ReqId> = self.active.to_vec();
+        victims.extend(self.future.drain(..));
+        // Id order is injection order — the fleet routes arrivals in
+        // timestamp order, so the re-route feed stays deterministic.
+        victims.sort_unstable();
+        let mut items = Vec::with_capacity(victims.len());
+        for id in victims {
+            self.kvc.release(id);
+            let rec = &mut self.recs[id];
+            rec.phase = Phase::Done;
+            rec.kvc_held = 0;
+            self.done_count += 1;
+            self.index_deactivate(id);
+            let req = &self.recs[id].req;
+            items.push(TraceItem {
+                arrival: req.arrival,
+                prompt_len: req.prompt_len,
+                true_rl: req.true_rl,
+            });
+        }
+        self.inbox.clear();
+        debug_assert!(self.all_done());
+        items
+    }
+
     /// O(1): every request has arrived and completed (or was shed).
     pub fn all_done(&self) -> bool {
         self.done_count == self.recs.len()

@@ -2,7 +2,8 @@
 //!
 //! A [`GridSpec`] names the axes — systems (the `sched::by_name`
 //! `"<sched>+<alloc>"` grammar) × models × traces × rates × seeds, and
-//! optionally routers × autoscalers for fleet cells — and [`run_grid`]
+//! optionally routers × autoscalers × fault profiles for fleet cells —
+//! and [`run_grid`]
 //! fans the cross-product out over [`super::map_indexed`], one
 //! simulation per cell, collecting one flat JSON row per cell in grid
 //! order. This backs the `econoserve sweep` CLI subcommand (JSON grid
@@ -22,7 +23,7 @@ use crate::coordinator::{harness, RunLimits};
 use crate::fleet::{self, FleetConfig};
 use crate::figures::common;
 use crate::util::json::{obj, Json};
-use crate::util::rng::derive_seed;
+use crate::util::rng::{derive_seed, stream};
 
 /// The axes of one sweep. Cells are the cross-product, enumerated
 /// model-major: model × trace × rate × seed × system (× router ×
@@ -43,6 +44,9 @@ pub struct GridSpec {
     /// up to `replicas` replicas instead of a single world.
     pub routers: Vec<String>,
     pub autoscalers: Vec<String>,
+    /// Fault-injection axis for fleet cells (`fleet::all_profiles`
+    /// names). Empty ⇒ `["none"]`; requires the fleet axes.
+    pub faults: Vec<String>,
     /// Fleet size bound for fleet cells (`static-k` fixes the fleet at
     /// this size; scaling policies move within `[1, replicas]`).
     pub replicas: usize,
@@ -66,6 +70,7 @@ impl Default for GridSpec {
             seeds: vec![42],
             routers: Vec::new(),
             autoscalers: Vec::new(),
+            faults: Vec::new(),
             replicas: 2,
             duration: common::DURATION,
             max_time: common::MAX_TIME,
@@ -86,6 +91,8 @@ pub struct Cell {
     /// `Some` only for fleet cells.
     pub router: Option<String>,
     pub autoscaler: Option<String>,
+    /// Fault profile (`Some` only for fleet cells; `"none"` by default).
+    pub faults: Option<String>,
     /// Per-cell RNG stream: a pure function of (seed, model/trace/rate
     /// coordinates) — shared by every system at this point, independent
     /// of grid order and thread count.
@@ -98,7 +105,7 @@ impl GridSpec {
     /// are rejected up front — a typoed axis name (`"seed"` for
     /// `"seeds"`) must fail immediately, not silently sweep defaults.
     pub fn from_json(doc: &Json) -> Result<GridSpec, String> {
-        const KNOWN: [&str; 13] = [
+        const KNOWN: [&str; 14] = [
             "systems",
             "models",
             "traces",
@@ -107,6 +114,7 @@ impl GridSpec {
             "seeds",
             "routers",
             "autoscalers",
+            "faults",
             "replicas",
             "duration",
             "max_time",
@@ -145,6 +153,7 @@ impl GridSpec {
         strings("traces", &mut spec.traces)?;
         strings("routers", &mut spec.routers)?;
         strings("autoscalers", &mut spec.autoscalers)?;
+        strings("faults", &mut spec.faults)?;
         if let Some(v) = doc.get("rates") {
             let arr = v.as_arr().ok_or("'rates' must be an array")?;
             spec.rates = arr
@@ -213,8 +222,16 @@ impl GridSpec {
                 return Err(format!("unknown autoscaler '{a}'"));
             }
         }
+        for f in &self.faults {
+            if fleet::faults::by_name(f).is_none() {
+                return Err(format!("unknown fault profile '{f}'"));
+            }
+        }
         if self.routers.is_empty() != self.autoscalers.is_empty() {
             return Err("'routers' and 'autoscalers' must be set together".to_string());
+        }
+        if !self.faults.is_empty() && self.routers.is_empty() {
+            return Err("'faults' requires the fleet axes ('routers'/'autoscalers')".to_string());
         }
         if self.systems.is_empty() || self.models.is_empty() || self.traces.is_empty() {
             return Err("systems/models/traces must be non-empty".to_string());
@@ -228,14 +245,21 @@ impl GridSpec {
         Ok(())
     }
 
-    fn fleet_axis(&self) -> Vec<(Option<String>, Option<String>)> {
+    fn fleet_axis(&self) -> Vec<(Option<String>, Option<String>, Option<String>)> {
         if self.routers.is_empty() {
-            return vec![(None, None)];
+            return vec![(None, None, None)];
         }
+        let faults: Vec<String> = if self.faults.is_empty() {
+            vec!["none".to_string()]
+        } else {
+            self.faults.clone()
+        };
         let mut axis = Vec::new();
         for r in &self.routers {
             for a in &self.autoscalers {
-                axis.push((Some(r.clone()), Some(a.clone())));
+                for f in &faults {
+                    axis.push((Some(r.clone()), Some(a.clone()), Some(f.clone())));
+                }
             }
         }
         axis
@@ -257,11 +281,9 @@ impl GridSpec {
                     for &seed in &self.seeds {
                         // Coordinate-indexed stream (system excluded:
                         // rivals at one point share the workload).
-                        let stream =
-                            ((mi as u64) << 40) | ((ti as u64) << 20) | ri as u64;
-                        let cell_seed = derive_seed(seed, stream);
+                        let cell_seed = derive_seed(seed, stream::grid_cell(mi, ti, ri));
                         for system in &self.systems {
-                            for (router, autoscaler) in &axis {
+                            for (router, autoscaler, faults) in &axis {
                                 cells.push(Cell {
                                     system: system.clone(),
                                     model: model.clone(),
@@ -270,6 +292,7 @@ impl GridSpec {
                                     seed,
                                     router: router.clone(),
                                     autoscaler: autoscaler.clone(),
+                                    faults: faults.clone(),
                                     cell_seed,
                                 });
                             }
@@ -353,12 +376,16 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> Json {
                 fc.min_replicas = 1;
             }
             fc.max_sim_time = spec.max_time;
+            if let Some(f) = &cell.faults {
+                fc.faults = f.clone();
+            }
             // Cell-level fan-out owns the cores; replicas step serially.
             fc.threads = 1;
             let s = fleet::run(&fc, &items).summary;
             row.extend([
                 ("router", Json::from(router.as_str())),
                 ("autoscaler", Json::from(autoscaler.as_str())),
+                ("faults", Json::from(cell.faults.as_deref().unwrap_or("none"))),
                 ("n_done", Json::from(s.n_done)),
                 ("goodput_rps", Json::from(s.goodput_rps)),
                 ("throughput_rps", Json::from(s.throughput_rps)),
@@ -369,6 +396,10 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> Json {
                 ("goodput_per_gpu_hour", Json::from(s.goodput_per_gpu_hour)),
                 ("peak_replicas", Json::from(s.peak_replicas)),
                 ("mean_replicas", Json::from(s.mean_replicas)),
+                ("crashes", Json::from(s.faults.crashes)),
+                ("boot_failures", Json::from(s.faults.boot_failures)),
+                ("rerouted", Json::from(s.faults.rerouted)),
+                ("lost", Json::from(s.faults.lost)),
             ]);
         }
         _ => {
@@ -450,6 +481,15 @@ mod tests {
         assert!(GridSpec::from_json(&bad).is_err());
         let half_fleet = Json::parse(r#"{"routers": ["round-robin"]}"#).unwrap();
         assert!(GridSpec::from_json(&half_fleet).is_err());
+        // Fault profiles are validated and require the fleet axes.
+        let bad_fault = Json::parse(
+            r#"{"routers": ["round-robin"], "autoscalers": ["static-k"],
+                "faults": ["meteor-strike"]}"#,
+        )
+        .unwrap();
+        assert!(GridSpec::from_json(&bad_fault).unwrap_err().contains("fault profile"));
+        let orphan_fault = Json::parse(r#"{"faults": ["crashes"]}"#).unwrap();
+        assert!(GridSpec::from_json(&orphan_fault).is_err());
         // Typoed keys fail fast instead of silently sweeping defaults.
         let typo = Json::parse(r#"{"seed": [1, 2]}"#).unwrap();
         assert!(GridSpec::from_json(&typo).unwrap_err().contains("unknown key 'seed'"));

@@ -29,6 +29,11 @@ pub struct ScaleObs<'a> {
     pub booting: usize,
     /// Replicas finishing their in-flight work before retirement.
     pub draining: usize,
+    /// Replicas lost to faults since the previous control tick (crashes,
+    /// zone outages, failed boots) — the drop in *effective* serving
+    /// capacity a fault-aware policy should replace. Always 0 without
+    /// fault injection.
+    pub crashed: usize,
 }
 
 impl ScaleObs<'_> {
@@ -118,7 +123,10 @@ impl Autoscaler for Reactive {
 
     fn plan(&mut self, obs: &ScaleObs<'_>) -> Option<usize> {
         if obs.active.is_empty() {
-            return None;
+            // Nothing to measure pressure on — but replicas lost to
+            // faults must still be replaced, or a fully crashed fleet
+            // would never recover.
+            return if obs.crashed > 0 { Some(obs.serving() + obs.crashed) } else { None };
         }
         let inflight: usize = obs.active.iter().map(|r| r.in_flight).sum();
         let per = inflight as f64 / obs.active.len() as f64;
@@ -131,7 +139,16 @@ impl Autoscaler for Reactive {
             / obs.active.len() as f64;
         let serving = obs.serving();
         if pressure > self.pressure_hi || kvc > self.kvc_hi {
-            Some(serving + 1)
+            // Replace fault losses on top of the pressure step, in one
+            // tick — a crash under load must not cost an extra control
+            // interval of under-capacity.
+            Some(serving + 1 + obs.crashed)
+        } else if obs.crashed > 0 {
+            // No pressure signal (yet): still restore the effective
+            // serving size the fleet had before the fault. Takes
+            // priority over the scale-down branch so a crash never
+            // coincides with a capacity cut.
+            Some(serving + obs.crashed)
         } else if pressure < self.pressure_lo && kvc < self.kvc_hi * 0.5 {
             Some(serving.saturating_sub(1))
         } else {
@@ -250,7 +267,7 @@ mod tests {
     }
 
     fn snap(in_flight: usize, free_kvc: u32) -> ReplicaSnapshot {
-        ReplicaSnapshot { id: 0, in_flight, free_kvc, kvc_capacity: 1000 }
+        ReplicaSnapshot { id: 0, in_flight, free_kvc, kvc_capacity: 1000, healthy: true }
     }
 
     #[test]
@@ -265,7 +282,7 @@ mod tests {
     fn static_k_always_holds() {
         let mut s = by_name("static-k", knobs()).unwrap();
         let active = [snap(500, 0)];
-        let obs = ScaleObs { now: 1.0, active: &active, booting: 0, draining: 0 };
+        let obs = ScaleObs { now: 1.0, active: &active, booting: 0, draining: 0, crashed: 0 };
         assert_eq!(s.plan(&obs), None);
     }
 
@@ -274,15 +291,15 @@ mod tests {
         let mut s = by_name("reactive", knobs()).unwrap();
         // 35/40 resident: saturated, scale up.
         let hot = [snap(35, 100)];
-        let obs = ScaleObs { now: 1.0, active: &hot, booting: 0, draining: 0 };
+        let obs = ScaleObs { now: 1.0, active: &hot, booting: 0, draining: 0, crashed: 0 };
         assert_eq!(s.plan(&obs), Some(2));
         // 2/40 resident and empty cache: scale down.
         let cold = [snap(2, 950), snap(1, 990)];
-        let obs = ScaleObs { now: 2.0, active: &cold, booting: 0, draining: 0 };
+        let obs = ScaleObs { now: 2.0, active: &cold, booting: 0, draining: 0, crashed: 0 };
         assert_eq!(s.plan(&obs), Some(1));
         // Mid-band: hold.
         let mid = [snap(16, 500)];
-        let obs = ScaleObs { now: 3.0, active: &mid, booting: 0, draining: 0 };
+        let obs = ScaleObs { now: 3.0, active: &mid, booting: 0, draining: 0, crashed: 0 };
         assert_eq!(s.plan(&obs), None);
     }
 
@@ -290,8 +307,25 @@ mod tests {
     fn reactive_scales_up_on_kvc_saturation_alone() {
         let mut s = by_name("reactive", knobs()).unwrap();
         let hot = [snap(4, 50)]; // short queue, 95% allocated cache
-        let obs = ScaleObs { now: 1.0, active: &hot, booting: 1, draining: 0 };
+        let obs = ScaleObs { now: 1.0, active: &hot, booting: 1, draining: 0, crashed: 0 };
         assert_eq!(s.plan(&obs), Some(3), "booting replica counts toward serving");
+    }
+
+    #[test]
+    fn reactive_replaces_fault_losses() {
+        let mut s = by_name("reactive", knobs()).unwrap();
+        // Mid-band load (would hold) + 2 replicas lost since last tick:
+        // restore the pre-fault serving size.
+        let mid = [snap(16, 500)];
+        let obs = ScaleObs { now: 1.0, active: &mid, booting: 0, draining: 0, crashed: 2 };
+        assert_eq!(s.plan(&obs), Some(3));
+        // Saturated + a loss: pressure step and replacement in one tick.
+        let hot = [snap(35, 100)];
+        let obs = ScaleObs { now: 2.0, active: &hot, booting: 0, draining: 0, crashed: 1 };
+        assert_eq!(s.plan(&obs), Some(3));
+        // Whole fleet dead: still asks for the replacements.
+        let obs = ScaleObs { now: 3.0, active: &[], booting: 0, draining: 0, crashed: 2 };
+        assert_eq!(s.plan(&obs), Some(2));
     }
 
     #[test]
@@ -308,7 +342,7 @@ mod tests {
             }
         }
         let active = [snap(5, 800)];
-        let obs = ScaleObs { now: 20.0, active: &active, booting: 0, draining: 0 };
+        let obs = ScaleObs { now: 20.0, active: &active, booting: 0, draining: 0, crashed: 0 };
         let want = s.plan(&obs).unwrap();
         // Trend reaches ~7 req/s one lead ahead; at 3.75 effective rps
         // per replica that is 2 replicas — more than the last bucket
@@ -322,7 +356,7 @@ mod tests {
     fn forecast_holds_without_history() {
         let mut s = by_name("forecast", knobs()).unwrap();
         let active = [snap(0, 1000)];
-        let obs = ScaleObs { now: 0.1, active: &active, booting: 0, draining: 0 };
+        let obs = ScaleObs { now: 0.1, active: &active, booting: 0, draining: 0, crashed: 0 };
         assert_eq!(s.plan(&obs), None, "no complete buckets yet");
     }
 }

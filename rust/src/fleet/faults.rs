@@ -1,0 +1,365 @@
+//! Deterministic fault injection for the fleet layer.
+//!
+//! A [`FaultProfile`] (registry via [`by_name`], mirroring
+//! `sched::by_name` / `router::by_name` / `autoscale::by_name`) compiles
+//! into a seeded timeline of [`FaultEvent`]s that the fleet loop
+//! (`fleet::sim::run`) consumes at their timestamps alongside arrivals,
+//! boot completions, and control ticks:
+//!
+//!  * **Crash** — one live replica dies instantly. Its in-flight
+//!    requests are either re-routed idempotently (health-aware fleets;
+//!    the original arrival time is preserved so the SLO deadline does
+//!    not move) or counted as lost (health-blind fleets, or profiles
+//!    with `reroute = false`).
+//!  * **ZoneOutage** — replicas carry an implicit zone tag
+//!    (`id % profile.zones`); a whole zone crashes at once, booting
+//!    replicas included. Models correlated failure domains.
+//!  * **Straggler** — one live replica runs `straggle_factor`× slower
+//!    for `straggle_len` seconds (its simulated step durations are
+//!    dilated), then recovers.
+//!  * **Boot failures** — each scale-up attempt fails with probability
+//!    `boot_fail_prob`: it burns the full boot latency, then lands as
+//!    Crashed instead of Active, forcing the autoscaler to retry.
+//!
+//! Event *times* and *picks* are drawn up front from per-process RNG
+//! streams (crash / outage / straggler / boot, all derived from the
+//! fleet seed via `derive_seed(seed, stream::FAULTS)`), never from
+//! simulation state — so the timeline is a pure function of (profile,
+//! seed) and bit-identical at any thread count. The `pick` is resolved
+//! against the candidate set at application time (`pick % candidates`),
+//! which is itself thread-invariant. Each event kind fires on a
+//! jittered-periodic schedule — occurrence `k` lands uniformly in
+//! `[(k + 0.25)·every, (k + 0.75)·every]` — so every profile is
+//! guaranteed to fire within a known window (a Poisson schedule could
+//! leave a short test run fault-free).
+//!
+//! Accounting flows back through [`FaultTally`], embedded in
+//! `FleetSummary::faults`; `fleet::chaos_run` pairs a chaos run with its
+//! fault-free twin to report goodput/SSR *retention*.
+
+use crate::util::rng::{derive_seed, Rng};
+
+/// A named fault-injection profile. `every = 0.0` disables that event
+/// kind; `boot_fail_prob = 0.0` makes boots reliable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultProfile {
+    pub name: &'static str,
+    /// Mean seconds between single-replica crashes (0 = never).
+    pub crash_every: f64,
+    /// Mean seconds between whole-zone outages (0 = never).
+    pub outage_every: f64,
+    /// Number of failure domains; replica `id` lives in zone `id % zones`.
+    pub zones: usize,
+    /// Mean seconds between straggler episodes (0 = never).
+    pub straggle_every: f64,
+    /// Slowdown multiplier applied to a straggling replica's step time.
+    pub straggle_factor: f64,
+    /// Seconds a straggler episode lasts before the replica recovers.
+    pub straggle_len: f64,
+    /// Probability a scale-up attempt burns its boot latency then fails.
+    pub boot_fail_prob: f64,
+    /// Whether a crashed replica's in-flight requests are re-routed
+    /// (health-aware fleets only) instead of counted as lost.
+    pub reroute: bool,
+}
+
+const NONE: FaultProfile = FaultProfile {
+    name: "none",
+    crash_every: 0.0,
+    outage_every: 0.0,
+    zones: 1,
+    straggle_every: 0.0,
+    straggle_factor: 1.0,
+    straggle_len: 0.0,
+    boot_fail_prob: 0.0,
+    reroute: false,
+};
+
+const PROFILES: [FaultProfile; 6] = [
+    NONE,
+    FaultProfile { name: "crashes", crash_every: 120.0, reroute: true, ..NONE },
+    FaultProfile { name: "zone-outage", outage_every: 300.0, zones: 2, reroute: true, ..NONE },
+    FaultProfile {
+        name: "stragglers",
+        straggle_every: 90.0,
+        straggle_factor: 4.0,
+        straggle_len: 30.0,
+        ..NONE
+    },
+    FaultProfile {
+        name: "flaky-boots",
+        crash_every: 150.0,
+        boot_fail_prob: 0.5,
+        reroute: true,
+        ..NONE
+    },
+    FaultProfile {
+        name: "full-chaos",
+        crash_every: 180.0,
+        outage_every: 400.0,
+        zones: 2,
+        straggle_every: 120.0,
+        straggle_factor: 3.0,
+        straggle_len: 25.0,
+        boot_fail_prob: 0.3,
+        reroute: true,
+        ..NONE
+    },
+];
+
+/// Names of every registered profile, `"none"` first.
+pub fn all_profiles() -> Vec<&'static str> {
+    PROFILES.iter().map(|p| p.name).collect()
+}
+
+/// Look up a profile by name (the fleet registry pattern).
+pub fn by_name(name: &str) -> Option<FaultProfile> {
+    PROFILES.iter().find(|p| p.name == name).copied()
+}
+
+impl FaultProfile {
+    /// Whether this profile injects anything at all. The `"none"`
+    /// profile leaves the fleet loop bit-identical to a build without
+    /// fault injection.
+    pub fn is_active(&self) -> bool {
+        self.crash_every > 0.0
+            || self.outage_every > 0.0
+            || self.straggle_every > 0.0
+            || self.boot_fail_prob > 0.0
+    }
+}
+
+/// What a fault event does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Kill one live replica (`pick % live` selects the victim).
+    Crash,
+    /// Kill every non-terminal replica in zone `pick % zones`.
+    ZoneOutage,
+    /// Slow one Active replica (`pick % active`) by `straggle_factor`.
+    Straggler,
+}
+
+/// One scheduled fault. `pick` is a raw draw; the victim is resolved at
+/// application time against the then-current candidate set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: f64,
+    pub kind: FaultKind,
+    pub pick: u64,
+}
+
+/// One jittered-periodic event process: occurrence `k` is drawn at
+/// `(k + 0.25 + 0.5·u)·every` with its victim pick, eagerly, so the
+/// schedule depends only on (seed, every).
+#[derive(Debug, Clone)]
+struct Process {
+    kind: FaultKind,
+    every: f64,
+    k: u64,
+    rng: Rng,
+    next: Option<FaultEvent>,
+}
+
+impl Process {
+    fn new(kind: FaultKind, every: f64, seed: u64) -> Self {
+        let mut p = Process { kind, every, k: 0, rng: Rng::new(seed), next: None };
+        if every > 0.0 {
+            p.advance();
+        }
+        p
+    }
+
+    fn advance(&mut self) {
+        let at = (self.k as f64 + 0.25 + 0.5 * self.rng.f64()) * self.every;
+        let pick = self.rng.next_u64();
+        self.k += 1;
+        self.next = Some(FaultEvent { at, kind: self.kind, pick });
+    }
+
+    fn next_at(&self) -> f64 {
+        self.next.map_or(f64::INFINITY, |e| e.at)
+    }
+}
+
+/// The runtime half of a profile: hands the fleet loop its fault events
+/// in timestamp order and answers boot-failure draws. All randomness
+/// comes from four sub-streams of the fault seed, so two fleets with the
+/// same (profile, seed) see the exact same chaos regardless of routing,
+/// autoscaling, or thread count.
+#[derive(Debug, Clone)]
+pub struct Injector {
+    profile: FaultProfile,
+    crash: Process,
+    outage: Process,
+    straggle: Process,
+    boot_rng: Rng,
+}
+
+impl Injector {
+    /// `seed` is the *fault* seed — callers pass
+    /// `derive_seed(fleet_seed, stream::FAULTS)`.
+    pub fn new(profile: FaultProfile, seed: u64) -> Self {
+        Injector {
+            profile,
+            crash: Process::new(FaultKind::Crash, profile.crash_every, derive_seed(seed, 0)),
+            outage: Process::new(FaultKind::ZoneOutage, profile.outage_every, derive_seed(seed, 1)),
+            straggle: Process::new(
+                FaultKind::Straggler,
+                profile.straggle_every,
+                derive_seed(seed, 2),
+            ),
+            boot_rng: Rng::new(derive_seed(seed, 3)),
+        }
+    }
+
+    pub fn profile(&self) -> &FaultProfile {
+        &self.profile
+    }
+
+    /// Timestamp of the earliest pending event (INFINITY when none).
+    pub fn next_at(&self) -> f64 {
+        self.crash.next_at().min(self.outage.next_at()).min(self.straggle.next_at())
+    }
+
+    /// Pop the earliest event if it is due at or before `t`. Ties break
+    /// crash < outage < straggler, deterministically.
+    pub fn pop_due(&mut self, t: f64) -> Option<FaultEvent> {
+        let (at, which) = [self.crash.next_at(), self.outage.next_at(), self.straggle.next_at()]
+            .into_iter()
+            .enumerate()
+            .map(|(i, at)| (at, i))
+            .fold((f64::INFINITY, usize::MAX), |best, cand| if cand.0 < best.0 { cand } else { best });
+        if at > t {
+            return None;
+        }
+        let p = match which {
+            0 => &mut self.crash,
+            1 => &mut self.outage,
+            _ => &mut self.straggle,
+        };
+        let ev = p.next;
+        p.advance();
+        ev
+    }
+
+    /// Deterministic per-boot failure draw. Always `false` for reliable
+    /// profiles, without consuming randomness, so `boot_fail_prob = 0`
+    /// profiles stay bit-identical to a fleet without an injector.
+    pub fn boot_fails(&mut self) -> bool {
+        self.profile.boot_fail_prob > 0.0 && self.boot_rng.chance(self.profile.boot_fail_prob)
+    }
+}
+
+/// The full event timeline of (profile, seed) up to `horizon`, in
+/// timestamp order — what the fleet loop will consume, exposed as a pure
+/// function for tests and docs.
+pub fn timeline(profile: FaultProfile, seed: u64, horizon: f64) -> Vec<FaultEvent> {
+    let mut inj = Injector::new(profile, seed);
+    let mut out = Vec::new();
+    while let Some(ev) = inj.pop_due(horizon) {
+        out.push(ev);
+    }
+    out
+}
+
+/// Fault accounting, embedded as `FleetSummary::faults`. All zeros for
+/// fault-free runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultTally {
+    /// Replicas killed (zone-outage victims included).
+    pub crashes: usize,
+    /// Whole-zone outage events that fired.
+    pub zone_outages: usize,
+    /// Scale-up attempts that burned boot latency then failed.
+    pub boot_failures: usize,
+    /// Straggler episodes applied.
+    pub stragglers: usize,
+    /// In-flight requests re-routed off a crashed replica.
+    pub rerouted: usize,
+    /// Requests lost to a crash (in-flight with no re-route, or routed
+    /// to a corpse by a health-blind router).
+    pub lost: usize,
+}
+
+impl FaultTally {
+    pub fn is_zero(&self) -> bool {
+        *self == FaultTally::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_profile() {
+        for name in all_profiles() {
+            let p = by_name(name).expect("registered profile resolves");
+            assert_eq!(p.name, name);
+        }
+        assert!(by_name("meteor-strike").is_none());
+        assert!(!by_name("none").unwrap().is_active());
+        assert!(by_name("full-chaos").unwrap().is_active());
+    }
+
+    #[test]
+    fn none_profile_has_empty_timeline() {
+        assert!(timeline(by_name("none").unwrap(), 42, 10_000.0).is_empty());
+        let inj = Injector::new(by_name("none").unwrap(), 42);
+        assert_eq!(inj.next_at(), f64::INFINITY);
+    }
+
+    #[test]
+    fn timelines_are_seed_deterministic() {
+        let p = by_name("full-chaos").unwrap();
+        let a = timeline(p, 7, 3_000.0);
+        let b = timeline(p, 7, 3_000.0);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let c = timeline(p, 8, 3_000.0);
+        assert_ne!(a, c, "different seeds should jitter the schedule apart");
+    }
+
+    #[test]
+    fn events_are_ordered_and_inside_their_jitter_windows() {
+        let p = by_name("crashes").unwrap();
+        let evs = timeline(p, 99, 2_000.0);
+        assert!(evs.len() >= 10);
+        let mut prev = 0.0;
+        for (k, ev) in evs.iter().enumerate() {
+            assert_eq!(ev.kind, FaultKind::Crash);
+            let lo = (k as f64 + 0.25) * p.crash_every;
+            let hi = (k as f64 + 0.75) * p.crash_every;
+            assert!(ev.at >= lo && ev.at <= hi, "event {k} at {} outside [{lo}, {hi}]", ev.at);
+            assert!(ev.at > prev);
+            prev = ev.at;
+        }
+    }
+
+    #[test]
+    fn mixed_profile_interleaves_kinds_in_order() {
+        let evs = timeline(by_name("full-chaos").unwrap(), 3, 4_000.0);
+        let mut prev = 0.0;
+        let mut kinds = [0usize; 3];
+        for ev in &evs {
+            assert!(ev.at >= prev, "timeline not sorted");
+            prev = ev.at;
+            kinds[match ev.kind {
+                FaultKind::Crash => 0,
+                FaultKind::ZoneOutage => 1,
+                FaultKind::Straggler => 2,
+            }] += 1;
+        }
+        assert!(kinds.iter().all(|&k| k > 0), "all kinds should fire: {kinds:?}");
+    }
+
+    #[test]
+    fn boot_draws_match_profile_probability() {
+        let mut reliable = Injector::new(by_name("crashes").unwrap(), 5);
+        assert!((0..100).all(|_| !reliable.boot_fails()));
+        let mut flaky = Injector::new(by_name("flaky-boots").unwrap(), 5);
+        let fails = (0..10_000).filter(|_| flaky.boot_fails()).count();
+        assert!((4_000..6_000).contains(&fails), "p=0.5 draw count {fails}");
+    }
+}

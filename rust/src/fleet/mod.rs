@@ -17,6 +17,7 @@
 //! | router ([`router`]) | `round-robin`, `least-queue`, `least-kvc`, `power-of-two` |
 //! | autoscaler ([`autoscale`]) | `static-k`, `reactive`, `forecast` |
 //! | workload ([`crate::trace::ArrivalProcess`]) | `poisson`, `mmpp`, `diurnal` |
+//! | faults ([`faults`]) | `none`, `crashes`, `zone-outage`, `stragglers`, `flaky-boots`, `full-chaos` |
 //!
 //! Fleet metrics report goodput, SLO satisfaction, **GPU-hours**, and
 //! goodput-per-GPU-hour, so Fig 12 is reproducible dynamically and the
@@ -34,10 +35,12 @@
 //! model), which varies from run to run by construction.
 
 pub mod autoscale;
+pub mod faults;
 pub mod router;
 pub mod sim;
 
 pub use autoscale::{all_autoscalers, Autoscaler, ScaleKnobs, ScaleObs};
+pub use faults::{all_profiles, FaultProfile, FaultTally};
 pub use router::{all_routers, ReplicaSnapshot, Router};
 pub use sim::run;
 
@@ -71,6 +74,18 @@ pub struct FleetConfig {
     /// Sustainable per-replica serving rate (req/s) for the forecast
     /// autoscaler; 0 derives it from the trace capacity estimate.
     pub per_replica_rps: f64,
+    /// Fault-injection profile name (`faults::all_profiles`); `"none"`
+    /// leaves the run bit-identical to a fleet without fault injection.
+    pub faults: String,
+    /// Whether the control plane *sees* faults: `true` gives routers a
+    /// truthful health view (crashed replicas are never picked while a
+    /// healthy one exists), re-routes in-flight requests off crashed
+    /// replicas (profiles with `reroute`), and boots replacements to
+    /// hold `min_replicas`. `false` models a health-blind fleet: corpses
+    /// stay in the routing table looking idle, their in-flight requests
+    /// are lost, and nothing is replaced except by autoscaler pressure.
+    /// Irrelevant under the `"none"` profile.
+    pub health_aware: bool,
     /// Hard simulated-time cap (requests unfinished at the cap count as
     /// SLO misses, like `RunLimits::max_sim_time`).
     pub max_sim_time: f64,
@@ -105,6 +120,8 @@ impl FleetConfig {
             boot_latency: 10.0,
             control_interval: 5.0,
             per_replica_rps: 0.0,
+            faults: "none".to_string(),
+            health_aware: true,
             max_sim_time: f64::INFINITY,
             threads: 0,
         }
@@ -170,6 +187,16 @@ pub enum ReplicaState {
     Active,
     Draining,
     Retired,
+    /// Killed by fault injection (or a failed boot): GPUs released, any
+    /// in-flight work lost or re-routed. Terminal, like `Retired`.
+    Crashed,
+}
+
+impl ReplicaState {
+    /// Terminal states: the replica is gone and is never advanced again.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, ReplicaState::Retired | ReplicaState::Crashed)
+    }
 }
 
 /// Lifecycle + routing record of one replica (tests pin the routing
@@ -187,6 +214,14 @@ pub struct ReplicaLog {
     pub routed: usize,
     pub first_routed_at: Option<f64>,
     pub last_routed_at: Option<f64>,
+    /// When fault injection killed the replica (GPU billing stops here).
+    /// For a failed boot this is the moment the boot would have
+    /// completed — the warm-up was paid for, the replica never served.
+    pub crashed_at: Option<f64>,
+    /// Requests re-routed *onto* this replica after another crashed.
+    /// Counted separately from `routed`, which tracks first routes only
+    /// (so `sum(routed) == n_routed` stays an invariant under chaos).
+    pub rerouted: usize,
 }
 
 /// Fleet-level outcome: the cost-and-goodput view Fig 12 is about.
@@ -225,6 +260,8 @@ pub struct FleetSummary {
     pub mean_replicas: f64,
     pub boots: usize,
     pub retirements: usize,
+    /// Fault accounting (all zeros without fault injection).
+    pub faults: FaultTally,
 }
 
 /// Full fleet run result.
@@ -234,6 +271,37 @@ pub struct FleetResult {
     pub per_replica: Vec<Summary>,
     /// Per-replica lifecycle/routing logs, in replica-id order.
     pub replicas: Vec<ReplicaLog>,
+}
+
+/// A chaos run paired with its fault-free twin: the same fleet config
+/// rerun under the `"none"` profile, so goodput/SSR *retention* — the
+/// headline of the `econoserve fleet --chaos` scenario — is measured
+/// against exactly the capacity the faults took away.
+pub struct ChaosOutcome {
+    pub chaos: FleetSummary,
+    pub baseline: FleetSummary,
+}
+
+impl ChaosOutcome {
+    /// Goodput under chaos as a fraction of fault-free goodput.
+    pub fn goodput_retention(&self) -> f64 {
+        self.chaos.goodput_rps / self.baseline.goodput_rps.max(1e-9)
+    }
+
+    /// SLO satisfaction under chaos as a fraction of fault-free SSR.
+    pub fn ssr_retention(&self) -> f64 {
+        self.chaos.ssr / self.baseline.ssr.max(1e-9)
+    }
+}
+
+/// Run `fc` as configured, then once more with faults disabled, and
+/// report both (see [`ChaosOutcome`]).
+pub fn chaos_run(fc: &FleetConfig, items: &[TraceItem]) -> ChaosOutcome {
+    let chaos = sim::run(fc, items).summary;
+    let mut calm = fc.clone();
+    calm.faults = "none".to_string();
+    let baseline = sim::run(&calm, items).summary;
+    ChaosOutcome { chaos, baseline }
 }
 
 /// Run `system` on a fixed fleet of `k` round-robin replicas — the

@@ -7,6 +7,19 @@
 //! KVC-based steering balances the memory resource EconoServe's
 //! single-replica scheduler fights for, and power-of-two-choices is the
 //! classic low-coordination compromise.
+//!
+//! ## Health contract
+//!
+//! Under fault injection (`fleet::faults`) the snapshot set may include
+//! crashed replicas with [`ReplicaSnapshot::healthy`] `= false`: a
+//! health-aware fleet tells the truth, a health-blind one forges
+//! `healthy = true` on corpses (modelling a control plane whose failure
+//! detector is absent). Every router guarantees it never picks an
+//! unhealthy replica while a healthy one exists; when the whole set is
+//! unhealthy it degrades to its health-blind choice and the sim counts
+//! the arrival as lost. With an all-healthy set each policy (including
+//! the randomized one, draw for draw) is decision-identical to a fleet
+//! without fault injection — the `"none"` profile changes nothing.
 
 use crate::core::world::World;
 use crate::kvc::{Allocator, ReserveClass};
@@ -25,18 +38,24 @@ pub struct ReplicaSnapshot {
     pub free_kvc: u32,
     /// Total KVC capacity in tokens.
     pub kvc_capacity: u32,
+    /// Health as reported by the fleet's failure detector. `false` only
+    /// ever appears under fault injection with a health-aware control
+    /// plane; see the module-level health contract.
+    pub healthy: bool,
 }
 
 impl ReplicaSnapshot {
     /// Capture the routing-relevant state of one replica world — the
     /// single definition the fleet sim (routing + control ticks) and the
-    /// `fleet_routing` bench all share.
-    pub fn of_world(id: usize, w: &World) -> Self {
+    /// `fleet_routing` bench all share. `healthy` is the failure
+    /// detector's verdict, not derivable from the world itself.
+    pub fn of_world(id: usize, w: &World, healthy: bool) -> Self {
         ReplicaSnapshot {
             id,
             in_flight: w.n_active(),
             free_kvc: w.kvc().free_tokens(ReserveClass::Normal),
             kvc_capacity: w.kvc().capacity_tokens(),
+            healthy,
         }
     }
 }
@@ -69,6 +88,24 @@ pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Router>> {
     }
 }
 
+/// Number of snapshot entries the failure detector reports healthy.
+fn n_healthy(replicas: &[ReplicaSnapshot]) -> usize {
+    replicas.iter().filter(|r| r.healthy).count()
+}
+
+/// Index of the k-th healthy entry (requires `k < n_healthy`). With an
+/// all-healthy set this is the identity, which is what keeps every
+/// policy decision-identical to the pre-fault-injection fleet.
+fn kth_healthy(replicas: &[ReplicaSnapshot], k: usize) -> usize {
+    replicas
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.healthy)
+        .nth(k)
+        .map(|(i, _)| i)
+        .expect("kth_healthy past the healthy count")
+}
+
 /// Cycle through routable replicas in id order. With a static fleet this
 /// reproduces the legacy `cluster::replicas` pre-sharding (shard
 /// `i % k`), but decided *online* at arrival time, so it stays sane when
@@ -83,7 +120,9 @@ impl Router for RoundRobin {
     }
 
     fn route(&mut self, replicas: &[ReplicaSnapshot]) -> usize {
-        let pick = self.next % replicas.len();
+        let h = n_healthy(replicas);
+        let pick =
+            if h == 0 { self.next % replicas.len() } else { kth_healthy(replicas, self.next % h) };
         self.next = self.next.wrapping_add(1);
         pick
     }
@@ -101,7 +140,11 @@ impl Router for LeastQueue {
     fn route(&mut self, replicas: &[ReplicaSnapshot]) -> usize {
         let mut best = 0;
         for (i, r) in replicas.iter().enumerate().skip(1) {
-            if r.in_flight < replicas[best].in_flight {
+            let b = &replicas[best];
+            // Health dominates; among equals, fewest in-flight wins and
+            // ties stay with the lowest id.
+            if (r.healthy && !b.healthy) || (r.healthy == b.healthy && r.in_flight < b.in_flight)
+            {
                 best = i;
             }
         }
@@ -123,11 +166,14 @@ impl Router for LeastKvc {
     fn route(&mut self, replicas: &[ReplicaSnapshot]) -> usize {
         let mut best = 0;
         for (i, r) in replicas.iter().enumerate().skip(1) {
-            // Most absolute free tokens; break ties toward the shorter
-            // queue so an empty fleet still spreads load.
+            // Health first; then most absolute free tokens; break ties
+            // toward the shorter queue so an empty fleet still spreads
+            // load.
             let b = &replicas[best];
-            if r.free_kvc > b.free_kvc
-                || (r.free_kvc == b.free_kvc && r.in_flight < b.in_flight)
+            if (r.healthy && !b.healthy)
+                || (r.healthy == b.healthy
+                    && (r.free_kvc > b.free_kvc
+                        || (r.free_kvc == b.free_kvc && r.in_flight < b.in_flight)))
             {
                 best = i;
             }
@@ -148,19 +194,36 @@ impl Router for PowerOfTwo {
     }
 
     fn route(&mut self, replicas: &[ReplicaSnapshot]) -> usize {
-        let n = replicas.len();
-        if n == 1 {
-            return 0;
+        // Sample within the healthy subset; an all-healthy set makes the
+        // subset the whole slice, so the draws (and their count) match
+        // the pre-fault-injection policy exactly.
+        let h = n_healthy(replicas);
+        if h == 0 {
+            // Whole set unhealthy: degrade to the blind sample.
+            let n = replicas.len();
+            if n == 1 {
+                return 0;
+            }
+            let a = self.rng.range_usize(0, n - 1);
+            let mut b = self.rng.range_usize(0, n - 2);
+            if b >= a {
+                b += 1;
+            }
+            return if replicas[b].in_flight < replicas[a].in_flight { b } else { a };
         }
-        let a = self.rng.range_usize(0, n - 1);
-        let mut b = self.rng.range_usize(0, n - 2);
+        if h == 1 {
+            return kth_healthy(replicas, 0);
+        }
+        let a = self.rng.range_usize(0, h - 1);
+        let mut b = self.rng.range_usize(0, h - 2);
         if b >= a {
             b += 1;
         }
-        if replicas[b].in_flight < replicas[a].in_flight {
-            b
+        let (ia, ib) = (kth_healthy(replicas, a), kth_healthy(replicas, b));
+        if replicas[ib].in_flight < replicas[ia].in_flight {
+            ib
         } else {
-            a
+            ia
         }
     }
 }
@@ -170,7 +233,14 @@ mod tests {
     use super::*;
 
     fn snap(id: usize, in_flight: usize, free_kvc: u32) -> ReplicaSnapshot {
-        ReplicaSnapshot { id, in_flight, free_kvc, kvc_capacity: 1000 }
+        ReplicaSnapshot { id, in_flight, free_kvc, kvc_capacity: 1000, healthy: true }
+    }
+
+    fn corpse(id: usize) -> ReplicaSnapshot {
+        // A dead replica looks maximally attractive to every load signal
+        // (empty queue, empty cache) — exactly the trap the health
+        // contract must beat.
+        ReplicaSnapshot { id, in_flight: 0, free_kvc: 1000, kvc_capacity: 1000, healthy: false }
     }
 
     #[test]
@@ -222,5 +292,51 @@ mod tests {
         }
         // Replica 1 wins whenever it is sampled (~2/3 of draws).
         assert!(hits > 100, "hits={hits}");
+    }
+
+    #[test]
+    fn no_router_picks_a_corpse_while_a_healthy_replica_exists() {
+        // The corpse looks strictly better on every load signal; only
+        // the health bit can save the arrival.
+        let reps = [corpse(0), snap(1, 50, 10), corpse(2), snap(3, 80, 5)];
+        for name in all_routers() {
+            let mut r = by_name(name, 11).unwrap();
+            for _ in 0..100 {
+                let pick = r.route(&reps);
+                assert!(reps[pick].healthy, "{name} routed to dead replica {pick}");
+            }
+        }
+    }
+
+    #[test]
+    fn sole_survivor_gets_all_traffic() {
+        let reps = [corpse(0), corpse(1), snap(2, 999, 0)];
+        for name in all_routers() {
+            let mut r = by_name(name, 3).unwrap();
+            for _ in 0..20 {
+                assert_eq!(r.route(&reps), 2, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_dead_set_still_returns_an_index() {
+        // The sim counts these arrivals as lost; the router just must
+        // not panic and must stay in bounds.
+        let reps = [corpse(0), corpse(1)];
+        for name in all_routers() {
+            let mut r = by_name(name, 5).unwrap();
+            for _ in 0..20 {
+                assert!(r.route(&reps) < reps.len(), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_over_survivors_only() {
+        let mut r = by_name("round-robin", 0).unwrap();
+        let reps = [snap(0, 0, 0), corpse(1), snap(2, 0, 0)];
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&reps)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2, 0, 2]);
     }
 }

@@ -1,50 +1,67 @@
 //! The fleet event loop: N replica steppers on a shared clock, a
 //! routing front door, and autoscaler-driven replica lifecycle.
 //!
-//! The loop is discrete-event over three event sources — the next
-//! arrival, the next boot completion, and the next autoscaler control
-//! tick. At each event time every live replica is advanced to the event
-//! (via [`Stepper::advance_to`], whose idle clock is clamped to the
-//! horizon so injections are never in a replica's past) — concurrently
-//! across worker threads (`FleetConfig::threads`; replicas are
-//! data-independent between events, so parallel stepping is
+//! The loop is discrete-event over five event sources — the next
+//! arrival, the next boot completion, the next autoscaler control tick,
+//! the next fault event (`fleet::faults`, when a profile is active), and
+//! the next straggler recovery. At each event time every live replica is
+//! advanced to the event (via [`Stepper::advance_to`], whose idle clock
+//! is clamped to the horizon so injections are never in a replica's
+//! past) — concurrently across worker threads (`FleetConfig::threads`;
+//! replicas are data-independent between events, so parallel stepping is
 //! bit-identical to serial) — then the event is applied:
 //!
-//!  * **arrival** — snapshot the Active replicas, let the router pick
+//!  * **arrival** — snapshot the routable replicas, let the router pick
 //!    one, inject the request at its true arrival time. Booting and
-//!    draining replicas are *never* in the candidate set.
-//!  * **boot completion** — `Booting -> Active`.
+//!    draining replicas are *never* in the candidate set; crashed
+//!    replicas appear only under fault injection, flagged unhealthy for
+//!    a health-aware fleet and forged healthy for a health-blind one
+//!    (see the health contract in [`super::router`]).
+//!  * **boot completion** — `Booting -> Active`, or `-> Crashed` for a
+//!    boot the fault injector doomed (the latency was burned, the
+//!    replica never serves).
 //!  * **control tick** — consult the autoscaler; scale up by booting
 //!    fresh replicas (`boot_latency` until routable, billed from the
 //!    order), scale down by draining the least-loaded Active replicas
 //!    (drain-before-retire: they finish in-flight work, then release
-//!    their GPUs). Targets are clamped to `[min, max]`.
+//!    their GPUs). Targets are clamped to `[min, max]`. The observation
+//!    carries the replicas lost to faults since the previous tick, so
+//!    fault-aware policies re-provision for *effective* capacity.
+//!  * **fault event** — crash a replica (in-flight work re-routed or
+//!    lost via [`crate::core::world::World::crash_all`]), crash a whole
+//!    zone, or start a straggler episode (the replica's batch durations
+//!    dilate by the profile factor until the episode ends). A
+//!    health-aware fleet additionally boots replacements whenever the
+//!    serving size falls below `min_replicas`.
 
 use crate::coordinator::Stepper;
 use crate::trace::TraceItem;
-use crate::util::rng::derive_seed;
+use crate::util::rng::{derive_seed, stream};
 use crate::util::stats::Samples;
 
 use super::autoscale::{self, ScaleObs};
+use super::faults::{self, FaultKind, FaultTally, Injector};
 use super::router::{self, ReplicaSnapshot};
 use super::{FleetConfig, FleetResult, FleetSummary, ReplicaLog, ReplicaState};
-
-/// Seed stream for the router's RNG (replica streams are `1 + id`).
-const ROUTER_STREAM: u64 = 0xF1EE7;
 
 struct Replica {
     stepper: Stepper,
     state: ReplicaState,
     log: ReplicaLog,
+    /// Fault injector's verdict on this boot: the warm-up completes,
+    /// then the replica lands Crashed instead of Active.
+    doomed: bool,
+    /// End of the current straggler episode (INFINITY = healthy speed).
+    slow_until: f64,
 }
 
 impl Replica {
-    fn boot(fc: &FleetConfig, id: usize, now: f64, latency: f64) -> Self {
+    fn boot(fc: &FleetConfig, id: usize, now: f64, latency: f64, doomed: bool) -> Self {
         let mut cfg = fc.cfg.clone();
         // Deterministic per-replica streams: replica i's predictor (and
         // any scheduler-internal randomness) is a pure function of
         // (base seed, i), independent of routing decisions.
-        cfg.seed = derive_seed(fc.cfg.seed, 1 + id as u64);
+        cfg.seed = derive_seed(fc.cfg.seed, stream::replica(id));
         let mut stepper = Stepper::new(cfg, &fc.system, &fc.trace, fc.oracle, &[]);
         stepper.sync_clock(now);
         Replica {
@@ -58,12 +75,19 @@ impl Replica {
                 routed: 0,
                 first_routed_at: None,
                 last_routed_at: None,
+                crashed_at: None,
+                rerouted: 0,
             },
+            // An instant boot cannot fail: the failure lands at
+            // `routable_at`, and a same-instant failure would let a
+            // doomed-boot/replacement cycle spin without advancing time.
+            doomed: doomed && latency > 0.0,
+            slow_until: f64::INFINITY,
         }
     }
 
-    fn snapshot(&self, id: usize) -> ReplicaSnapshot {
-        ReplicaSnapshot::of_world(id, &self.stepper.world)
+    fn snapshot(&self, id: usize, healthy: bool) -> ReplicaSnapshot {
+        ReplicaSnapshot::of_world(id, &self.stepper.world, healthy)
     }
 
     /// Drain-before-retire completion: once a draining replica's last
@@ -86,6 +110,16 @@ impl Replica {
             .fold(drained_at, f64::max);
         self.log.retired_at = Some(last_done);
     }
+
+    /// Kill this replica at `t`: terminal state, GPU billing stops, the
+    /// world's unfinished requests come back as re-routable items (the
+    /// caller decides re-route vs lost).
+    fn crash(&mut self, t: f64) -> Vec<TraceItem> {
+        self.state = ReplicaState::Crashed;
+        self.log.crashed_at = Some(t);
+        self.slow_until = f64::INFINITY;
+        self.stepper.world.crash_all()
+    }
 }
 
 /// Minimum simulated seconds a replica must be behind the horizon
@@ -98,7 +132,7 @@ impl Replica {
 /// simulation state only, so it fires identically at any thread count.
 const PAR_MIN_DELTA: f64 = 0.02;
 
-/// Advance every non-retired replica to `horizon` — in parallel when
+/// Advance every non-terminal replica to `horizon` — in parallel when
 /// more than one worker is available AND at least two live replicas are
 /// more than [`PAR_MIN_DELTA`] behind the horizon (see above; tiny
 /// deltas step serially to dodge thread spawn/join overhead on every
@@ -113,9 +147,7 @@ fn advance_live(replicas: &mut [Replica], horizon: f64, threads: usize) {
     if threads > 1 {
         let mut lagging = 0usize;
         for r in replicas.iter() {
-            if r.state != ReplicaState::Retired
-                && horizon - r.stepper.world.clock > PAR_MIN_DELTA
-            {
+            if !r.state.is_terminal() && horizon - r.stepper.world.clock > PAR_MIN_DELTA {
                 lagging += 1;
                 if lagging >= 2 {
                     break;
@@ -123,10 +155,8 @@ fn advance_live(replicas: &mut [Replica], horizon: f64, threads: usize) {
             }
         }
         if lagging >= 2 {
-            let mut live: Vec<&mut Replica> = replicas
-                .iter_mut()
-                .filter(|r| r.state != ReplicaState::Retired)
-                .collect();
+            let mut live: Vec<&mut Replica> =
+                replicas.iter_mut().filter(|r| !r.state.is_terminal()).collect();
             crate::exp::for_each_mut(&mut live, threads, |r| r.stepper.advance_to(horizon));
             return;
         }
@@ -135,10 +165,94 @@ fn advance_live(replicas: &mut [Replica], horizon: f64, threads: usize) {
     // the only case at threads == 1, keeping the PR 3 zero-allocation
     // property of the event loop intact).
     for r in replicas.iter_mut() {
-        if r.state != ReplicaState::Retired {
+        if !r.state.is_terminal() {
             r.stepper.advance_to(horizon);
         }
     }
+}
+
+/// Crash one replica and file its unfinished requests: into the
+/// re-route buffer (health-aware fleet, reroute profile) or straight
+/// into the lost tally.
+fn kill_replica(
+    r: &mut Replica,
+    t: f64,
+    do_reroute: bool,
+    reroute_buf: &mut Vec<TraceItem>,
+    tally: &mut FaultTally,
+) {
+    let lost = r.crash(t);
+    if do_reroute {
+        reroute_buf.extend(lost);
+    } else {
+        tally.lost += lost.len();
+    }
+    tally.crashes += 1;
+}
+
+/// Apply one fault event against the current replica table. Victim
+/// resolution (`pick % candidates`) reads simulation state that is
+/// thread-invariant, so the outcome is bit-identical at any thread
+/// count. Returns how many replicas were killed by this event.
+fn apply_fault(
+    ev: faults::FaultEvent,
+    replicas: &mut [Replica],
+    profile: &faults::FaultProfile,
+    reroute_buf: &mut Vec<TraceItem>,
+    tally: &mut FaultTally,
+    do_reroute: bool,
+    t: f64,
+) -> usize {
+    let mut killed = 0usize;
+    match ev.kind {
+        FaultKind::Crash => {
+            // One live (serving or draining) replica dies.
+            let candidates: Vec<usize> = replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| {
+                    matches!(r.state, ReplicaState::Active | ReplicaState::Draining)
+                })
+                .map(|(id, _)| id)
+                .collect();
+            if let Some(&victim) =
+                candidates.get((ev.pick % candidates.len().max(1) as u64) as usize)
+            {
+                kill_replica(&mut replicas[victim], t, do_reroute, reroute_buf, tally);
+                killed = 1;
+            }
+        }
+        FaultKind::ZoneOutage => {
+            // Every non-terminal replica in the zone dies, booting ones
+            // included (a failure domain takes warm-ups down with it).
+            tally.zone_outages += 1;
+            let zone = (ev.pick % profile.zones.max(1) as u64) as usize;
+            for (id, r) in replicas.iter_mut().enumerate() {
+                if !r.state.is_terminal() && id % profile.zones.max(1) == zone {
+                    kill_replica(r, t, do_reroute, reroute_buf, tally);
+                    killed += 1;
+                }
+            }
+        }
+        FaultKind::Straggler => {
+            // One Active replica runs slow for the episode.
+            let candidates: Vec<usize> = replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.state == ReplicaState::Active)
+                .map(|(id, _)| id)
+                .collect();
+            if let Some(&victim) =
+                candidates.get((ev.pick % candidates.len().max(1) as u64) as usize)
+            {
+                let r = &mut replicas[victim];
+                r.stepper.set_slowdown(profile.straggle_factor);
+                r.slow_until = t + profile.straggle_len;
+                tally.stragglers += 1;
+            }
+        }
+    }
+    killed
 }
 
 /// Run a fleet over `items` (sorted by arrival, as every trace
@@ -152,10 +266,21 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
     );
     debug_assert!(items.windows(2).all(|w| w[0].arrival <= w[1].arrival));
 
-    let mut router = router::by_name(&fc.router, derive_seed(fc.cfg.seed, ROUTER_STREAM))
+    let mut router = router::by_name(&fc.router, derive_seed(fc.cfg.seed, stream::ROUTER))
         .unwrap_or_else(|| panic!("unknown router '{}'", fc.router));
     let mut scaler = autoscale::by_name(&fc.autoscaler, fc.knobs())
         .unwrap_or_else(|| panic!("unknown autoscaler '{}'", fc.autoscaler));
+    let profile = faults::by_name(&fc.faults)
+        .unwrap_or_else(|| panic!("unknown fault profile '{}'", fc.faults));
+    // The "none" profile takes every chaos-gated branch out of the loop:
+    // such runs are bit-identical to a fleet without fault injection.
+    let chaos = profile.is_active();
+    let mut injector = Injector::new(profile, derive_seed(fc.cfg.seed, stream::FAULTS));
+    let mut tally = FaultTally::default();
+    // Replicas lost to faults since the last control tick (autoscaler
+    // observation) and the re-route staging buffer.
+    let mut crashed_since_tick = 0usize;
+    let mut reroute_buf: Vec<TraceItem> = Vec::new();
 
     // Concurrent stepping under MEASURED scheduler-time charging
     // (sched_time_scale > 0) would let CPU contention between replicas
@@ -171,8 +296,9 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
     };
     let init = fc.init_replicas.clamp(fc.min_replicas, fc.max_replicas);
     let mut replicas: Vec<Replica> =
-        (0..init).map(|i| Replica::boot(fc, i, 0.0, 0.0)).collect();
+        (0..init).map(|i| Replica::boot(fc, i, 0.0, 0.0, false)).collect();
     let mut boots = init;
+    let mut routed = 0usize;
     let mut peak = init;
     let mut floor = init;
     let mut next_ctl = fc.control_interval;
@@ -192,7 +318,13 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
             .filter(|r| r.state == ReplicaState::Booting)
             .map(|r| r.log.routable_at)
             .fold(f64::INFINITY, f64::min);
-        let t = t_arr.min(t_boot).min(next_ctl).max(clock);
+        let t_fault = if chaos { injector.next_at() } else { f64::INFINITY };
+        let t_recover = replicas
+            .iter()
+            .filter(|r| !r.state.is_terminal())
+            .map(|r| r.slow_until)
+            .fold(f64::INFINITY, f64::min);
+        let t = t_arr.min(t_boot).min(next_ctl).min(t_fault).min(t_recover).max(clock);
         if t > fc.max_sim_time {
             advance_live(&mut replicas, fc.max_sim_time, threads);
             clock = clock.max(fc.max_sim_time);
@@ -203,9 +335,82 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
         advance_live(&mut replicas, t, threads);
         for r in &mut replicas {
             if r.state == ReplicaState::Booting && r.log.routable_at <= t {
-                r.state = ReplicaState::Active;
+                if r.doomed {
+                    // The warm-up was paid for; the replica never
+                    // serves. Counts toward the autoscaler's crash
+                    // observation so the capacity is re-ordered.
+                    r.state = ReplicaState::Crashed;
+                    r.log.crashed_at = Some(r.log.routable_at);
+                    tally.boot_failures += 1;
+                    crashed_since_tick += 1;
+                } else {
+                    r.state = ReplicaState::Active;
+                }
             }
             r.retire_if_drained(t);
+        }
+
+        if chaos {
+            // Straggler recoveries due at t come first, so an episode
+            // scheduled to start at the same instant is not erased.
+            for r in &mut replicas {
+                if !r.state.is_terminal() && r.slow_until <= t {
+                    r.stepper.set_slowdown(1.0);
+                    r.slow_until = f64::INFINITY;
+                }
+            }
+            while let Some(ev) = injector.pop_due(t) {
+                let killed = apply_fault(
+                    ev,
+                    &mut replicas,
+                    &profile,
+                    &mut reroute_buf,
+                    &mut tally,
+                    fc.health_aware && profile.reroute,
+                    t,
+                );
+                crashed_since_tick += killed;
+            }
+            // Re-route requests caught on crashed replicas (health-aware
+            // fleets with a reroute profile): each keeps its ORIGINAL
+            // arrival, so `World::push_item` re-derives the same SLO
+            // deadline (idempotent re-route). Counted in `rerouted`, not
+            // `routed` — first-route accounting is untouched.
+            for it in reroute_buf.drain(..) {
+                snaps.clear();
+                for (id, r) in replicas.iter().enumerate() {
+                    if r.state == ReplicaState::Active {
+                        snaps.push(r.snapshot(id, true));
+                    }
+                }
+                if snaps.is_empty() {
+                    tally.lost += 1;
+                    continue;
+                }
+                let pick = snaps[router.route(&snaps)].id;
+                let r = &mut replicas[pick];
+                r.stepper.inject(&it);
+                r.log.rerouted += 1;
+                tally.rerouted += 1;
+            }
+            // A health-aware control plane notices the dead capacity
+            // immediately and orders replacements up to the floor —
+            // which may themselves be doomed (boot-failure retries).
+            if fc.health_aware {
+                let mut serving = replicas
+                    .iter()
+                    .filter(|r| {
+                        matches!(r.state, ReplicaState::Active | ReplicaState::Booting)
+                    })
+                    .count();
+                while serving < fc.min_replicas {
+                    let id = replicas.len();
+                    let doomed = injector.boot_fails();
+                    replicas.push(Replica::boot(fc, id, t, fc.boot_latency, doomed));
+                    boots += 1;
+                    serving += 1;
+                }
+            }
         }
 
         // Route every arrival due at this event time, re-snapshotting
@@ -214,18 +419,41 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
         while i < items.len() && items[i].arrival <= t {
             snaps.clear();
             for (id, r) in replicas.iter().enumerate() {
-                if r.state == ReplicaState::Active {
-                    snaps.push(r.snapshot(id));
+                match r.state {
+                    ReplicaState::Active => snaps.push(r.snapshot(id, true)),
+                    // Under fault injection, crashed replicas stay in
+                    // the routing table: a health-aware fleet sees the
+                    // truth (and its routers skip them), a health-blind
+                    // one sees a forged healthy bit — and a corpse
+                    // looks idle, which is exactly the trap.
+                    ReplicaState::Crashed if chaos => {
+                        snaps.push(r.snapshot(id, !fc.health_aware))
+                    }
+                    _ => {}
                 }
             }
-            assert!(!snaps.is_empty(), "no routable replica (min_replicas >= 1)");
+            scaler.on_arrival(items[i].arrival);
+            if snaps.is_empty() {
+                assert!(chaos, "no routable replica (min_replicas >= 1)");
+                // Whole fleet dead or booting: the arrival has nowhere
+                // to go.
+                tally.lost += 1;
+                i += 1;
+                continue;
+            }
             let pick = snaps[router.route(&snaps)].id;
             let r = &mut replicas[pick];
-            r.stepper.inject(&items[i]);
             r.log.routed += 1;
             r.log.first_routed_at.get_or_insert(items[i].arrival);
             r.log.last_routed_at = Some(items[i].arrival);
-            scaler.on_arrival(items[i].arrival);
+            routed += 1;
+            if r.state == ReplicaState::Active {
+                r.stepper.inject(&items[i]);
+            } else {
+                // Routed to a corpse (health-blind, or no survivor to
+                // prefer): the request is gone.
+                tally.lost += 1;
+            }
             i += 1;
         }
 
@@ -233,21 +461,32 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
             snaps.clear();
             for (id, r) in replicas.iter().enumerate() {
                 if r.state == ReplicaState::Active {
-                    snaps.push(r.snapshot(id));
+                    snaps.push(r.snapshot(id, true));
                 }
             }
             let booting =
                 replicas.iter().filter(|r| r.state == ReplicaState::Booting).count();
             let draining =
                 replicas.iter().filter(|r| r.state == ReplicaState::Draining).count();
-            let obs = ScaleObs { now: t, active: &snaps, booting, draining };
+            let obs = ScaleObs {
+                now: t,
+                active: &snaps,
+                booting,
+                draining,
+                // A health-blind control plane is blind end to end: the
+                // autoscaler is never told about crash losses either
+                // (only ordinary pressure-driven scaling remains).
+                crashed: if fc.health_aware { crashed_since_tick } else { 0 },
+            };
+            crashed_since_tick = 0;
             if let Some(target) = scaler.plan(&obs) {
                 let target = target.clamp(fc.min_replicas, fc.max_replicas);
                 let serving = snaps.len() + booting;
                 if target > serving {
                     for _ in serving..target {
                         let id = replicas.len();
-                        replicas.push(Replica::boot(fc, id, t, fc.boot_latency));
+                        let doomed = chaos && injector.boot_fails();
+                        replicas.push(Replica::boot(fc, id, t, fc.boot_latency, doomed));
                         boots += 1;
                     }
                 } else if target < serving {
@@ -287,7 +526,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
         r.retire_if_drained(clock);
     }
 
-    finalize(fc, &replicas, items.len(), i, clock, boots, peak, floor)
+    finalize(fc, &replicas, items.len(), routed, clock, boots, peak, floor, tally)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -300,6 +539,7 @@ fn finalize(
     boots: usize,
     peak: usize,
     floor: usize,
+    tally: FaultTally,
 ) -> FleetResult {
     let gpus = fc.cfg.profile.gpus_per_replica as f64;
     let mut jct = Samples::new();
@@ -307,6 +547,10 @@ fn finalize(
     let mut slo_ok = 0usize;
     let mut last_done = 0.0f64;
     for r in replicas {
+        // Requests lost to a crash carry `done_at = None` (no `jct()`),
+        // so they are excluded here and count as SLO misses — and a
+        // re-routed request is only ever counted on the replica that
+        // actually finished it.
         for rec in &r.stepper.world.recs {
             if let Some(j) = rec.jct() {
                 n_done += 1;
@@ -320,7 +564,8 @@ fn finalize(
     }
     // Fleet span: when the work actually finished (matching the legacy
     // per-shard semantics) for runs that completed everything; the last
-    // event time for runs cut short by the sim-time cap.
+    // event time for runs cut short by the sim-time cap (or with
+    // requests lost to crashes).
     let finished = n_done == n_total && n_routed == n_total;
     let span = if finished && last_done > 0.0 {
         last_done
@@ -333,7 +578,8 @@ fn finalize(
     let mut per_replica = Vec::with_capacity(replicas.len());
     let mut logs = Vec::with_capacity(replicas.len());
     for r in replicas {
-        let life_end = r.log.retired_at.unwrap_or(span);
+        // A crashed replica's GPUs are released at the crash.
+        let life_end = r.log.crashed_at.or(r.log.retired_at).unwrap_or(span);
         gpu_seconds += (life_end - r.log.ordered_at).max(0.0) * gpus;
         if r.log.retired_at.is_some() {
             retirements += 1;
@@ -365,6 +611,7 @@ fn finalize(
             mean_replicas: gpu_seconds / gpus / span,
             boots,
             retirements,
+            faults: tally,
         },
         per_replica,
         replicas: logs,

@@ -45,7 +45,14 @@
 //! diurnal). It reports goodput, SLO satisfaction, GPU-hours and
 //! goodput-per-GPU-hour — the paper's Fig 12 capacity story, told
 //! dynamically. ([`cluster`] retains only the DistServe baseline; the
-//! legacy pre-sharded capacity wrappers are gone.)
+//! legacy pre-sharded capacity wrappers are gone.) The fleet is also
+//! chaos-testable: [`fleet::faults`] compiles named fault profiles
+//! (replica crashes, correlated zone outages, stragglers, flaky boots)
+//! into seed-deterministic event timelines; routers see replica health,
+//! autoscalers observe crash losses and re-provision, in-flight requests
+//! are re-routed or counted lost ([`fleet::FaultTally`]), and
+//! `econoserve fleet --chaos <profile>` compares each router's
+//! goodput/SSR retention against its fault-free baseline.
 //!
 //! Both speak the typed request lifecycle of [`api`]: admission-checked
 //! submission ([`api::SubmitOptions`] → [`api::AdmissionController`]),

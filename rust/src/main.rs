@@ -172,15 +172,15 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
     let cli = Cli::new(
         "econoserve sweep",
         "parallel experiment grid: fan independent cells (system x model x trace x rate x \
-         seed [x router x autoscaler]) over worker threads; JSON spec in, one JSON row per \
-         cell out, bit-identical at any thread count",
+         seed [x router x autoscaler x faults]) over worker threads; JSON spec in, one \
+         JSON row per cell out, bit-identical at any thread count",
     )
     .opt(
         "grid",
         "",
         "JSON grid-spec file (keys: systems, models, traces, rates, rate_points, seeds, \
-         routers, autoscalers, replicas, duration, max_time, oracle, threads); when set, \
-         the inline axis options below are ignored",
+         routers, autoscalers, faults, replicas, duration, max_time, oracle, threads); \
+         when set, the inline axis options below are ignored",
     )
     .opt("systems", "econoserve", "comma list of systems ('<sched>' or '<sched>+<alloc>')")
     .opt("model", "opt-13b", "comma list of model profiles")
@@ -190,6 +190,7 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
     .opt("seeds", "42", "comma list of workload seeds")
     .opt("routers", "", "comma list of fleet routers (set with --autoscalers for fleet cells)")
     .opt("autoscalers", "", "comma list of fleet autoscalers")
+    .opt("faults", "", "comma list of fault profiles for fleet cells (empty = fault-free)")
     .opt("replicas", "2", "fleet size bound for fleet cells")
     .opt("duration", "30", "workload duration, simulated seconds")
     .opt("max-time", "900", "simulated-time cap (drain allowance)")
@@ -232,6 +233,7 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
             seeds,
             routers: a.str_list("routers"),
             autoscalers: a.str_list("autoscalers"),
+            faults: a.str_list("faults"),
             replicas: a.usize("replicas"),
             duration: a.f64("duration"),
             max_time: a.f64("max-time"),
@@ -520,6 +522,13 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
     .opt("control-interval", "5", "seconds between autoscaler control ticks")
     .opt("duration", "600", "workload duration, simulated seconds")
     .opt("seed", "42", "rng seed (per-replica streams are derived from it)")
+    .opt(
+        "chaos",
+        "none",
+        "fault profile (none | crashes | zone-outage | stragglers | flaky-boots | \
+         full-chaos); when not 'none', compares every router's goodput/SSR retention \
+         under the profile against its own fault-free baseline",
+    )
     .flag("oracle", "use ground-truth response lengths")
     .flag(
         "compare-static",
@@ -578,6 +587,61 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
     fc.boot_latency = a.f64("boot-latency");
     fc.control_interval = a.f64("control-interval");
     fc.max_sim_time = duration * 4.0;
+    let chaos_name = a.get("chaos");
+    let Some(profile) = econoserve::fleet::faults::by_name(chaos_name) else {
+        eprintln!(
+            "unknown fault profile '{chaos_name}' (expected one of {:?})",
+            econoserve::fleet::all_profiles()
+        );
+        return 2;
+    };
+    if profile.is_active() {
+        fc.faults = chaos_name.to_string();
+        println!(
+            "fleet chaos: profile={chaos_name} system={} trace={trace_name} workload={} \
+             (mean {mean_rate:.2}/s) autoscaler={} replicas {}..{} n={}",
+            fc.system,
+            a.get("workload"),
+            fc.autoscaler,
+            fc.min_replicas,
+            fc.max_replicas,
+            items.len()
+        );
+        println!(
+            "  {:<14} {:>9} {:>9} {:>8} {:>9} {:>8} {:>6} {:>6}",
+            "router", "gput-ret%", "ssr-ret%", "crashes", "bootfail", "rerouted", "lost", "ssr%"
+        );
+        for router in econoserve::fleet::all_routers() {
+            let mut rc = fc.clone();
+            rc.router = router.to_string();
+            let out = fleet::chaos_run(&rc, &items);
+            let f = &out.chaos.faults;
+            println!(
+                "  {:<14} {:>9.1} {:>9.1} {:>8} {:>9} {:>8} {:>6} {:>6.1}",
+                router,
+                out.goodput_retention() * 100.0,
+                out.ssr_retention() * 100.0,
+                f.crashes,
+                f.boot_failures,
+                f.rerouted,
+                f.lost,
+                out.chaos.ssr * 100.0,
+            );
+        }
+        // Health-blind reference: same chaos, but corpses stay in the
+        // routing table and losses are never re-provisioned.
+        let mut bc = fc.clone();
+        bc.health_aware = false;
+        let blind = fleet::chaos_run(&bc, &items);
+        println!(
+            "  {:<14} {:>9.1} {:>9.1}   (router={}, corpses look routable, losses unseen)",
+            "health-blind",
+            blind.goodput_retention() * 100.0,
+            blind.ssr_retention() * 100.0,
+            fc.router,
+        );
+        return 0;
+    }
     println!(
         "fleet: system={} trace={trace_name} workload={} (mean {mean_rate:.2}/s, peak \
          {:.2}/s) router={} autoscaler={} replicas {}..{} n={}",
@@ -594,11 +658,12 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
     print_fleet_summary(a.get("autoscaler"), &res.summary);
     for (id, log) in res.replicas.iter().enumerate() {
         println!(
-            "    replica {id}: routed {}  routable {:.1}s{}{}",
+            "    replica {id}: routed {}  routable {:.1}s{}{}{}",
             log.routed,
             log.routable_at,
             log.drain_at.map(|t| format!("  drained {t:.1}s")).unwrap_or_default(),
             log.retired_at.map(|t| format!("  retired {t:.1}s")).unwrap_or_default(),
+            log.crashed_at.map(|t| format!("  crashed {t:.1}s")).unwrap_or_default(),
         );
     }
     if a.bool("compare-static") {
@@ -648,6 +713,14 @@ fn print_fleet_summary(label: &str, s: &econoserve::fleet::FleetSummary) {
         s.boots,
         s.retirements,
     );
+    if !s.faults.is_zero() {
+        let f = &s.faults;
+        println!(
+            "  faults: crashes {} (zone outages {})  stragglers {}  boot failures {}  \
+             rerouted {}  lost {}",
+            f.crashes, f.zone_outages, f.stragglers, f.boot_failures, f.rerouted, f.lost,
+        );
+    }
 }
 
 fn cmd_figures(argv: Vec<String>) -> i32 {

@@ -107,6 +107,39 @@ pub fn derive_seed(base: u64, stream: u64) -> u64 {
     Rng::new(base ^ stream.wrapping_add(1).wrapping_mul(0xA076_1D64_78BD_642F)).next_u64()
 }
 
+/// The crate-wide registry of `derive_seed` stream IDs. Every component
+/// that derives a sub-stream from a user-facing seed takes its stream ID
+/// from here, so the namespaces are visibly disjoint in one place
+/// instead of as ad-hoc literals at call sites. The collision test below
+/// pins the disjointness (fixed IDs against each other, and against the
+/// low per-replica band and the high grid-cell band).
+pub mod stream {
+    /// Per-replica world streams: replica `i` draws `REPLICA_BASE + i`.
+    /// Occupies the low band `[1, 1 + max_replicas)`.
+    pub const REPLICA_BASE: u64 = 1;
+
+    /// Stream for replica `id` of a fleet (see [`REPLICA_BASE`]).
+    pub fn replica(id: usize) -> u64 {
+        REPLICA_BASE + id as u64
+    }
+
+    /// The fleet router's own stream (power-of-two sampling).
+    pub const ROUTER: u64 = 0xF1EE7;
+
+    /// The fault injector's stream (crash/outage/straggler/boot draws).
+    pub const FAULTS: u64 = 0xFA017;
+
+    /// Grid cells pack their coordinates into one stream ID. Bit 63
+    /// flags the grid namespace so packed coordinates can never collide
+    /// with the fixed IDs or the per-replica band above.
+    pub const GRID_FLAG: u64 = 1 << 63;
+
+    /// Stream for grid cell (model_idx, trace_idx, rate_idx).
+    pub fn grid_cell(mi: usize, ti: usize, ri: usize) -> u64 {
+        GRID_FLAG | ((mi as u64) << 40) | ((ti as u64) << 20) | ri as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +152,32 @@ mod tests {
         // Stream 0 must not collapse to the base stream.
         let mut base = Rng::new(42);
         assert_ne!(derive_seed(42, 0), base.next_u64());
+    }
+
+    #[test]
+    fn stream_namespaces_never_collide() {
+        // Every fixed stream ID, a generous per-replica band, and a
+        // corner-heavy sample of the grid-cell namespace must be
+        // pairwise distinct: a collision would make two "independent"
+        // components draw identical randomness from the same base seed.
+        let mut ids: Vec<u64> = vec![stream::ROUTER, stream::FAULTS];
+        ids.extend((0..4096).map(stream::replica));
+        for &mi in &[0usize, 1, 7, 255] {
+            for &ti in &[0usize, 1, 15, 1023] {
+                for &ri in &[0usize, 1, 31, 0xF_FFFF] {
+                    ids.push(stream::grid_cell(mi, ti, ri));
+                }
+            }
+        }
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "stream-ID namespaces overlap");
+        // And distinct streams must actually produce distinct seeds.
+        let mut seeds: Vec<u64> = ids.iter().map(|&s| derive_seed(42, s)).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), n, "derive_seed collapsed two streams");
     }
 
     #[test]

@@ -437,3 +437,101 @@ fn fleet_summary_bit_identical_parallel_vs_sequential() {
         "replica lifecycle logs diverged"
     );
 }
+
+// ---------------------------------------------------------------------
+// Fault injection: chaos is deterministic too
+// ---------------------------------------------------------------------
+
+/// A fault profile compiles into a timeline that is a pure function of
+/// (profile, seed): bit-identical on replay, different across seeds.
+#[test]
+fn fault_timelines_are_pure_functions_of_profile_and_seed() {
+    use econoserve::fleet::faults;
+    for name in econoserve::fleet::all_profiles() {
+        let p = faults::by_name(name).unwrap();
+        let a = faults::timeline(p, 0xC0FFEE, 1_000.0);
+        let b = faults::timeline(p, 0xC0FFEE, 1_000.0);
+        assert_eq!(a, b, "{name}: timeline not reproducible per seed");
+        if !a.is_empty() {
+            let c = faults::timeline(p, 0xBEEF, 1_000.0);
+            assert_ne!(a, c, "{name}: timeline ignores the seed");
+        }
+    }
+}
+
+/// The chaos variant of the fleet determinism pin: under the heaviest
+/// fault profile, serial (threads=1) and parallel (threads=4) replica
+/// stepping still yield the SAME `FleetSummary` — fault timelines and
+/// victim picks read only thread-invariant state.
+#[test]
+fn chaos_fleet_summary_bit_identical_parallel_vs_sequential() {
+    use econoserve::fleet::{self, FleetConfig};
+    use econoserve::trace::{TraceGen, TraceSpec};
+    let mut cfg = mini_cfg(4096);
+    cfg.seed = 31;
+    let gen = TraceGen::new(TraceSpec::sharegpt());
+    let items = gen.generate(400, 2.0, 1024, 31);
+    let run_with = |threads: usize| {
+        let mut fc = FleetConfig::new(cfg.clone(), "econoserve", "sharegpt");
+        fc.oracle = true;
+        fc.router = "power-of-two".to_string();
+        fc.autoscaler = "reactive".to_string();
+        fc.init_replicas = 2;
+        fc.min_replicas = 2;
+        fc.max_replicas = 4;
+        fc.boot_latency = 5.0;
+        fc.max_sim_time = 2_000.0;
+        fc.faults = "full-chaos".to_string();
+        fc.threads = threads;
+        fleet::run(&fc, &items)
+    };
+    let serial = run_with(1);
+    let parallel = run_with(4);
+    assert!(
+        !serial.summary.faults.is_zero(),
+        "full-chaos run saw no faults — the pin is vacuous"
+    );
+    assert_eq!(
+        serial.summary, parallel.summary,
+        "chaos FleetSummary diverged between serial and parallel stepping"
+    );
+    assert_eq!(
+        format!("{:?}", serial.replicas),
+        format!("{:?}", parallel.replicas),
+        "chaos replica lifecycle logs diverged"
+    );
+}
+
+/// `exp::run_grid` with the faults axis emits bit-identical JSON rows
+/// at 1 and 4 threads, and each fleet row carries its fault profile.
+#[test]
+fn chaos_sweep_rows_bit_identical_across_thread_counts() {
+    use econoserve::exp::GridSpec;
+    let mut spec = GridSpec {
+        systems: vec!["econoserve".to_string()],
+        models: vec!["opt-13b".to_string()],
+        traces: vec!["alpaca".to_string()],
+        rates: vec![4.0],
+        seeds: vec![3],
+        routers: vec!["least-kvc".to_string(), "round-robin".to_string()],
+        autoscalers: vec!["reactive".to_string()],
+        faults: vec!["none".to_string(), "crashes".to_string()],
+        replicas: 2,
+        duration: 8.0,
+        max_time: 200.0,
+        oracle: true,
+        threads: 1,
+        ..GridSpec::default()
+    };
+    let a = econoserve::exp::run_grid(&spec);
+    spec.threads = 4;
+    let b = econoserve::exp::run_grid(&spec);
+    assert_eq!(a.rows, b.rows, "chaos sweep rows diverged across thread counts");
+    assert_eq!(a.rows.len(), 4, "2 routers x 2 fault profiles");
+    let chaos_rows = a
+        .rows
+        .iter()
+        .filter(|r| r.get("faults").and_then(|f| f.as_str()) == Some("crashes"))
+        .count();
+    assert_eq!(chaos_rows, 2, "each router sweeps each fault profile once");
+}

@@ -1,7 +1,9 @@
 //! Fleet-layer integration tests: router equivalence against the legacy
 //! pre-sharded capacity model, seed reproducibility, autoscaler
-//! invariants, the Fig 12 min-GPU port, and the headline
-//! cost-under-diurnal-load scenario.
+//! invariants, the Fig 12 min-GPU port, the headline
+//! cost-under-diurnal-load scenario, and the chaos suite (request
+//! conservation under fault injection, health-aware vs health-blind
+//! goodput retention).
 
 use econoserve::config::{ModelProfile, SystemConfig};
 use econoserve::coordinator::{harness, RunLimits};
@@ -265,4 +267,125 @@ fn diurnal_autoscaling_saves_gpu_hours_at_equal_slo() {
         dy.goodput_per_gpu_hour,
         st.goodput_per_gpu_hour
     );
+}
+
+// ---------------------------------------------------------------------
+// Chaos suite: deterministic fault injection
+// ---------------------------------------------------------------------
+
+fn chaos_cfg(cfg: &SystemConfig, profile: &str) -> FleetConfig {
+    let mut fc = FleetConfig::new(cfg.clone(), "econoserve", "sharegpt");
+    fc.oracle = true;
+    fc.router = "least-kvc".to_string();
+    fc.autoscaler = "reactive".to_string();
+    fc.init_replicas = 2;
+    fc.min_replicas = 2;
+    fc.max_replicas = 4;
+    fc.boot_latency = 5.0;
+    fc.control_interval = 5.0;
+    fc.max_sim_time = 5_000.0;
+    fc.faults = profile.to_string();
+    fc
+}
+
+#[test]
+fn chaos_conserves_requests_under_every_profile() {
+    // The accounting identity: every submitted request ends in exactly
+    // one terminal state — completed, or lost to a crash (fleets reject
+    // nothing) — under every shipped fault profile, health-aware and
+    // health-blind alike.
+    let cfg = test_cfg();
+    let items = diurnal_items(&cfg, 3.0, 200.0, 17);
+    for profile in fleet::all_profiles() {
+        for health_aware in [true, false] {
+            let mut fc = chaos_cfg(&cfg, profile);
+            fc.health_aware = health_aware;
+            let res = fleet::run(&fc, &items);
+            let s = &res.summary;
+            assert_eq!(
+                s.n_total,
+                s.n_done + s.faults.lost,
+                "{profile} (aware={health_aware}): conservation broke \
+                 (done {} + lost {} != submitted {})",
+                s.n_done,
+                s.faults.lost,
+                s.n_total
+            );
+            assert!(s.peak_replicas <= fc.max_replicas);
+            let routed: usize = res.replicas.iter().map(|l| l.routed).sum();
+            assert_eq!(routed, s.n_routed, "{profile}: routing counts disagree");
+            if profile == "none" {
+                assert!(s.faults.is_zero(), "fault-free run tallied faults");
+                assert_eq!(s.n_done, s.n_total);
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_runs_are_reproducible_per_seed() {
+    // Same seed => bit-identical FleetSummary under the heaviest
+    // profile (crashes + zone outages + stragglers + flaky boots).
+    let cfg = test_cfg();
+    let items = diurnal_items(&cfg, 3.0, 200.0, 19);
+    let fc = chaos_cfg(&cfg, "full-chaos");
+    let a = fleet::run(&fc, &items);
+    let b = fleet::run(&fc, &items);
+    assert_eq!(a.summary, b.summary, "chaos run not reproducible per seed");
+    assert!(!a.summary.faults.is_zero(), "full-chaos run saw no faults");
+    for (x, y) in a.replicas.iter().zip(&b.replicas) {
+        assert_eq!(x.routed, y.routed);
+        assert_eq!(x.rerouted, y.rerouted);
+        assert_eq!(x.crashed_at, y.crashed_at);
+    }
+}
+
+#[test]
+fn health_aware_fleet_retains_more_goodput_under_chaos() {
+    // The acceptance pin: health-aware routing + reactive re-provisioning
+    // must strictly beat a health-blind static fleet (corpses stay in the
+    // routing table looking idle; losses are never replaced) on both
+    // goodput and SSR, under lone crashes and correlated zone outages.
+    let cfg = test_cfg();
+    let items = diurnal_items(&cfg, 4.0, 200.0, 29);
+    for profile in ["crashes", "zone-outage"] {
+        let mut aware = chaos_cfg(&cfg, profile);
+        aware.max_replicas = 3;
+        let mut blind = aware.clone();
+        blind.health_aware = false;
+        blind.autoscaler = "static-k".to_string();
+        blind.init_replicas = 3;
+        blind.min_replicas = 3;
+        let a = fleet::run(&aware, &items).summary;
+        let b = fleet::run(&blind, &items).summary;
+        assert!(a.faults.crashes > 0, "{profile}: no faults fired in the window");
+        assert!(
+            a.goodput_rps > b.goodput_rps,
+            "{profile}: health-aware goodput {:.3} did not beat blind {:.3}",
+            a.goodput_rps,
+            b.goodput_rps
+        );
+        assert!(
+            a.ssr > b.ssr,
+            "{profile}: health-aware SSR {:.3} did not beat blind {:.3}",
+            a.ssr,
+            b.ssr
+        );
+    }
+}
+
+#[test]
+fn chaos_run_compares_against_a_fault_free_baseline() {
+    // `fleet::chaos_run` (the `econoserve fleet --chaos` surface) pairs a
+    // chaos run with its own fault-free twin: the baseline must tally no
+    // faults and complete everything; retentions must be well-defined.
+    let cfg = test_cfg();
+    let items = diurnal_items(&cfg, 3.0, 200.0, 37);
+    let fc = chaos_cfg(&cfg, "crashes");
+    let out = fleet::chaos_run(&fc, &items);
+    assert!(out.baseline.faults.is_zero(), "baseline run saw faults");
+    assert_eq!(out.baseline.n_done, out.baseline.n_total);
+    assert!(out.chaos.faults.crashes > 0, "chaos run saw no crashes");
+    assert!(out.goodput_retention() > 0.0 && out.goodput_retention().is_finite());
+    assert!(out.ssr_retention() > 0.0 && out.ssr_retention().is_finite());
 }

@@ -21,6 +21,12 @@ cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- sweep \
     --systems orca --model opt-13b --trace alpaca --rates 2 --seeds 7 \
     --duration 3 --max-time 60 --oracle --threads 2 \
     --out "${TMPDIR:-/tmp}/econoserve_sweep_smoke.json"
+# `econoserve fleet --chaos` smoke: deterministic fault injection
+# end-to-end (every router's goodput/SSR retention vs its fault-free
+# baseline under replica crashes, plus the health-blind reference).
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- fleet \
+    --chaos crashes --trace alpaca --workload poisson --rate 3 \
+    --duration 120 --replicas 2 --min 2 --max 3 --oracle
 if [ -z "${SKIP_CLIPPY:-}" ]; then
     if cargo clippy --version >/dev/null 2>&1; then
         cargo clippy --all-targets ${CARGO_FLAGS:-} -- -D warnings
