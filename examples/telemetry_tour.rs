@@ -1,0 +1,111 @@
+//! Telemetry tour: the unified metric registry end to end, std-only.
+//!
+//! 1. Registry basics — counters, gauges, histograms, and the canonical
+//!    Prometheus text exposition (strict enough to round-trip through
+//!    its own parser: `econoserve promlint` is this check as a CLI).
+//! 2. The instrumented simulator — a fleet run carries one registry per
+//!    replica; the result merges them (plus fault-layer counters) into a
+//!    single snapshot that is a pure function of (config, seed), so it
+//!    is bit-identical at any worker-thread count and reconciles exactly
+//!    with the summary statistics.
+//! 3. The structured request log — the bounded ring every serving-path
+//!    lifecycle event lands in (`submit`, `first_token`, `finish`, ...).
+//!
+//!     cargo run --release --example telemetry_tour
+
+use econoserve::figures::common;
+use econoserve::fleet::{self, FleetConfig};
+use econoserve::telemetry::{Buckets, Registry, RequestLog, Snapshot};
+use econoserve::trace::{TraceGen, TraceSpec};
+
+fn main() {
+    // -----------------------------------------------------------------
+    // 1. Registry basics
+    // -----------------------------------------------------------------
+    println!("== 1. registry basics ==\n");
+    let registry = Registry::new();
+    let served = registry.counter("tour_requests_total", "Requests served", &[("zone", "a")]);
+    let depth = registry.gauge("tour_queue_depth", "Waiting requests", &[]);
+    let latency = registry.histogram(
+        "tour_latency_seconds",
+        "Request latency",
+        Buckets::exponential(0.01, 10.0, 3),
+        &[],
+    );
+    served.add(3);
+    depth.set(2.0);
+    latency.observe(0.05);
+    latency.observe(0.7);
+    let text = registry.render();
+    println!("{text}");
+    // The exposition format is strict: parse -> render is the identity
+    // on canonical text (what `econoserve promlint <file>` asserts).
+    let reparsed = Snapshot::parse(&text).expect("own render must parse");
+    assert_eq!(reparsed.render(), text, "canonical text round-trips");
+    println!("(round-trips through Snapshot::parse — promlint-clean)\n");
+
+    // -----------------------------------------------------------------
+    // 2. The instrumented simulator
+    // -----------------------------------------------------------------
+    println!("== 2. fleet run -> merged snapshot ==\n");
+    let trace = "sharegpt";
+    let mut cfg = common::cfg("opt-13b", trace);
+    cfg.sched_time_scale = 0.0; // bit-reproducible
+    cfg.seed = 7;
+    let gen = TraceGen::new(TraceSpec::by_name(trace).unwrap());
+    let items = gen.generate(200, 6.0, cfg.profile.max_total_len, cfg.seed);
+
+    let mut fc = FleetConfig::new(cfg, "econoserve", trace);
+    fc.oracle = true;
+    fc.router = "least-kvc".to_string();
+    fc.init_replicas = 2;
+    fc.max_replicas = 2;
+    fc.max_sim_time = 600.0;
+    let res = fleet::run(&fc, &items);
+
+    let snap = Snapshot::parse(&res.metrics).expect("fleet metrics parse");
+    println!(
+        "{} families, {} samples from {} replicas",
+        snap.family_names().len(),
+        snap.sample_count(),
+        res.replicas.len()
+    );
+    for (label, name, labels) in [
+        ("done", "econoserve_requests_total", &[("outcome", "done")][..]),
+        ("rejected", "econoserve_requests_total", &[("outcome", "rejected")][..]),
+        ("slo hits", "econoserve_slo_total", &[("outcome", "hit")][..]),
+        ("iterations", "econoserve_iterations_total", &[][..]),
+        ("decode tokens", "econoserve_tokens_total", &[("phase", "decode")][..]),
+        ("preemptions", "econoserve_preemptions_total", &[][..]),
+    ] {
+        println!("  {label:>14}: {}", snap.value(name, labels).unwrap_or(0.0));
+    }
+    // The registry is not parallel bookkeeping: it reconciles exactly
+    // with the independently computed summary.
+    assert_eq!(
+        snap.value("econoserve_requests_total", &[("outcome", "done")]),
+        Some(res.summary.n_done as f64),
+        "counter must agree with the summary"
+    );
+    println!(
+        "  reconciles with summary.n_done = {} (same events, counted once)\n",
+        res.summary.n_done
+    );
+
+    // -----------------------------------------------------------------
+    // 3. The structured request log
+    // -----------------------------------------------------------------
+    println!("== 3. structured request log ==\n");
+    let log = RequestLog::with_capacity(4);
+    log.log(1, 0.00, "submit", "prompt_len=12 max_new=32");
+    log.log(1, 0.05, "first_token", "");
+    log.log(2, 0.06, "reject", "queue_full");
+    log.log(1, 0.90, "finish", "complete");
+    print!("{}", log.render_jsonl());
+    println!(
+        "\nbounded ring: capacity 4, {} held, {} dropped so far",
+        log.len(),
+        log.dropped()
+    );
+    println!("per-request view of id=1: {} events", log.for_request(1).len());
+}

@@ -1,0 +1,160 @@
+//! Graceful-shutdown gate: count connections in, drain them out.
+//!
+//! The HTTP acceptor holds a [`DrainGate`]; every accepted connection
+//! must [`DrainGate::try_enter`] before being served. While the gate is
+//! open this hands back a [`ConnGuard`] whose `Drop` decrements the
+//! active count; once [`DrainGate::begin_drain`] fires, `try_enter`
+//! returns `None` (the acceptor answers 503 `shutting_down`) while
+//! already-admitted connections — including long-lived token streams —
+//! run to completion. [`DrainGate::wait_idle`] blocks the shutdown path
+//! until the last guard drops (or a deadline passes, for crash-only
+//! exits).
+//!
+//! std-only: a `Mutex<State>` + `Condvar`, no async runtime.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default)]
+struct State {
+    draining: bool,
+    active: usize,
+}
+
+/// Shared connection gate (one per server, cloned via `Arc`).
+#[derive(Debug, Default)]
+pub struct DrainGate {
+    state: Mutex<State>,
+    idle: Condvar,
+}
+
+impl DrainGate {
+    pub fn new() -> Arc<Self> {
+        Arc::new(DrainGate::default())
+    }
+
+    /// Admit one connection: `Some(guard)` while serving, `None` once
+    /// draining has begun. The guard's `Drop` releases the slot.
+    pub fn try_enter(self: &Arc<Self>) -> Option<ConnGuard> {
+        let mut s = self.state.lock().unwrap();
+        if s.draining {
+            return None;
+        }
+        s.active += 1;
+        Some(ConnGuard { gate: Arc::clone(self) })
+    }
+
+    /// Flip to draining: subsequent `try_enter` calls fail, existing
+    /// guards are unaffected. Idempotent.
+    pub fn begin_drain(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.draining = true;
+        // An already-idle server must not hang in wait_idle.
+        self.idle.notify_all();
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.state.lock().unwrap().draining
+    }
+
+    /// Connections currently inside the gate.
+    pub fn active(&self) -> usize {
+        self.state.lock().unwrap().active
+    }
+
+    /// Block until every admitted connection has finished, or `timeout`
+    /// elapses. Returns `true` on a clean drain (no connections left).
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        while s.active > 0 {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (next, res) = self.idle.wait_timeout(s, left).unwrap();
+            s = next;
+            if res.timed_out() && s.active > 0 {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// RAII token for one admitted connection.
+#[derive(Debug)]
+pub struct ConnGuard {
+    gate: Arc<DrainGate>,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        let mut s = self.gate.state.lock().unwrap();
+        s.active = s.active.saturating_sub(1);
+        if s.active == 0 {
+            self.gate.idle.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn enter_then_drain_refuses_new_but_keeps_existing() {
+        let gate = DrainGate::new();
+        let g1 = gate.try_enter().expect("open gate admits");
+        assert_eq!(gate.active(), 1);
+        gate.begin_drain();
+        assert!(gate.is_draining());
+        assert!(gate.try_enter().is_none(), "draining gate refuses new connections");
+        // The in-flight connection is still counted until it finishes.
+        assert_eq!(gate.active(), 1);
+        drop(g1);
+        assert_eq!(gate.active(), 0);
+    }
+
+    #[test]
+    fn wait_idle_blocks_until_last_guard_drops() {
+        let gate = DrainGate::new();
+        let guard = gate.try_enter().unwrap();
+        gate.begin_drain();
+        let waiter = {
+            let gate = Arc::clone(&gate);
+            thread::spawn(move || gate.wait_idle(Duration::from_secs(5)))
+        };
+        // Simulate an in-flight stream finishing shortly after drain.
+        thread::sleep(Duration::from_millis(20));
+        drop(guard);
+        assert!(waiter.join().unwrap(), "drain completes once the stream ends");
+    }
+
+    #[test]
+    fn wait_idle_times_out_on_a_stuck_connection() {
+        let gate = DrainGate::new();
+        let _stuck = gate.try_enter().unwrap();
+        gate.begin_drain();
+        assert!(!gate.wait_idle(Duration::from_millis(30)));
+        assert_eq!(gate.active(), 1);
+    }
+
+    #[test]
+    fn idle_drain_returns_immediately() {
+        let gate = DrainGate::new();
+        gate.begin_drain();
+        assert!(gate.wait_idle(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn drain_is_idempotent_and_guard_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<ConnGuard>();
+        let gate = DrainGate::new();
+        gate.begin_drain();
+        gate.begin_drain();
+        assert!(gate.try_enter().is_none());
+    }
+}

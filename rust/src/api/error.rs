@@ -16,9 +16,16 @@ pub enum ServeError {
     /// The SLO budget cannot be met even on an idle engine, so admitting
     /// the request would only waste capacity. HTTP 503.
     SloInfeasible { needed_s: f64, budget_s: f64 },
+    /// The per-key token bucket is empty — the client is sending faster
+    /// than its configured sustained rate. HTTP 429 with a Retry-After
+    /// hint.
+    RateLimited { retry_after_s: f64 },
     /// The request was cancelled before completion. HTTP 499 (nginx's
     /// "client closed request" convention).
     Cancelled,
+    /// The server is draining for shutdown: in-flight requests finish,
+    /// new ones are refused. HTTP 503.
+    ShuttingDown,
     /// The engine thread is gone. HTTP 503.
     EngineDown,
     /// Unexpected engine-side failure. HTTP 500.
@@ -29,8 +36,10 @@ impl ServeError {
     pub fn http_status(&self) -> u16 {
         match self {
             ServeError::InvalidRequest(_) | ServeError::PromptTooLong { .. } => 400,
-            ServeError::QueueFull { .. } => 429,
-            ServeError::SloInfeasible { .. } | ServeError::EngineDown => 503,
+            ServeError::QueueFull { .. } | ServeError::RateLimited { .. } => 429,
+            ServeError::SloInfeasible { .. }
+            | ServeError::ShuttingDown
+            | ServeError::EngineDown => 503,
             ServeError::Cancelled => 499,
             ServeError::Internal(_) => 500,
         }
@@ -43,7 +52,9 @@ impl ServeError {
             ServeError::PromptTooLong { .. } => "prompt_too_long",
             ServeError::QueueFull { .. } => "queue_full",
             ServeError::SloInfeasible { .. } => "slo_infeasible",
+            ServeError::RateLimited { .. } => "rate_limited",
             ServeError::Cancelled => "cancelled",
+            ServeError::ShuttingDown => "shutting_down",
             ServeError::EngineDown => "engine_down",
             ServeError::Internal(_) => "internal",
         }
@@ -56,6 +67,8 @@ impl ServeError {
             ServeError::InvalidRequest(_)
             | ServeError::PromptTooLong { .. }
             | ServeError::QueueFull { .. }
+            | ServeError::RateLimited { .. }
+            | ServeError::ShuttingDown
             | ServeError::SloInfeasible { .. } => FinishReason::Rejected,
             ServeError::EngineDown | ServeError::Internal(_) => FinishReason::Error,
         }
@@ -76,7 +89,11 @@ impl std::fmt::Display for ServeError {
                 f,
                 "SLO budget {budget_s:.3}s is below the {needed_s:.3}s best-case service time"
             ),
+            ServeError::RateLimited { retry_after_s } => {
+                write!(f, "rate limited; retry after {retry_after_s:.3}s")
+            }
             ServeError::Cancelled => write!(f, "request cancelled"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
             ServeError::EngineDown => write!(f, "engine unavailable"),
             ServeError::Internal(msg) => write!(f, "internal error: {msg}"),
         }
@@ -98,7 +115,9 @@ mod tests {
             ServeError::SloInfeasible { needed_s: 2.0, budget_s: 1.0 }.http_status(),
             503
         );
+        assert_eq!(ServeError::RateLimited { retry_after_s: 0.5 }.http_status(), 429);
         assert_eq!(ServeError::Cancelled.http_status(), 499);
+        assert_eq!(ServeError::ShuttingDown.http_status(), 503);
         assert_eq!(ServeError::EngineDown.http_status(), 503);
         assert_eq!(ServeError::Internal("x".into()).http_status(), 500);
     }
@@ -110,7 +129,9 @@ mod tests {
             ServeError::PromptTooLong { len: 9, max: 8 }.kind(),
             ServeError::QueueFull { inflight: 4, limit: 4 }.kind(),
             ServeError::SloInfeasible { needed_s: 2.0, budget_s: 1.0 }.kind(),
+            ServeError::RateLimited { retry_after_s: 0.5 }.kind(),
             ServeError::Cancelled.kind(),
+            ServeError::ShuttingDown.kind(),
             ServeError::EngineDown.kind(),
             ServeError::Internal("x".into()).kind(),
         ];
@@ -124,6 +145,11 @@ mod tests {
             ServeError::QueueFull { inflight: 1, limit: 1 }.finish_reason(),
             FinishReason::Rejected
         );
+        assert_eq!(
+            ServeError::RateLimited { retry_after_s: 1.0 }.finish_reason(),
+            FinishReason::Rejected
+        );
+        assert_eq!(ServeError::ShuttingDown.finish_reason(), FinishReason::Rejected);
         assert_eq!(ServeError::Cancelled.finish_reason(), FinishReason::Cancelled);
         assert_eq!(ServeError::EngineDown.finish_reason(), FinishReason::Error);
     }

@@ -45,16 +45,24 @@
 //!    submission.
 //!  * [`ServeError`] — the structured error taxonomy, each variant with a
 //!    stable `kind()` string and an HTTP status mapping.
+//!  * [`TokenBucketLimiter`] — deterministic per-key token-bucket rate
+//!    limiting at the front door (`RateLimited` → 429 + Retry-After).
+//!  * [`DrainGate`] — the graceful-shutdown gate: in-flight connections
+//!    (token streams included) drain, new ones get 503 `shutting_down`.
 //!
 //! This module is engine-agnostic and std-only: it compiles (and is
 //! tested) without the PJRT backend.
 
 pub mod admission;
+pub mod drain;
 pub mod error;
+pub mod rate_limit;
 pub mod stream;
 pub mod types;
 
 pub use admission::{AdmissionConfig, AdmissionController};
+pub use drain::{ConnGuard, DrainGate};
 pub use error::ServeError;
+pub use rate_limit::{RateLimitConfig, TokenBucketLimiter};
 pub use stream::{channel, CancelToken, EventSink, RequestHandle};
 pub use types::{Completion, FinishReason, StreamEvent, SubmitOptions, TokenEvent};

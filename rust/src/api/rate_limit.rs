@@ -1,0 +1,169 @@
+//! Per-key token-bucket rate limiting for the serving front door.
+//!
+//! Classic token bucket with continuous refill: each key (API key, or
+//! `"anon"` for unidentified clients) owns a bucket of capacity `burst`
+//! refilled at `rate_per_s` tokens per second. A request costs one
+//! token; an empty bucket means HTTP 429 with a `Retry-After` hint of
+//! exactly how long until one token has accumulated.
+//!
+//! The math is deterministic: the caller passes `now_s` (monotonic
+//! seconds from any epoch), so tests drive the clock explicitly and the
+//! refill arithmetic is a pure function of the call sequence. Keys are
+//! tracked in a `BTreeMap` — a handful of API keys, not an unbounded
+//! cardinality — and a bucket is created full on first sight.
+
+use std::collections::BTreeMap;
+
+/// Rate-limiter knobs. The default is **off** (`rate_per_s == 0.0`):
+/// serving behaves exactly as before unless a limit is configured.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateLimitConfig {
+    /// Sustained request rate per key, per second. `<= 0` disables the
+    /// limiter entirely.
+    pub rate_per_s: f64,
+    /// Bucket capacity: how many requests a key may burst above the
+    /// sustained rate. Clamped to at least 1 when the limiter is on.
+    pub burst: f64,
+}
+
+impl Default for RateLimitConfig {
+    fn default() -> Self {
+        RateLimitConfig { rate_per_s: 0.0, burst: 1.0 }
+    }
+}
+
+impl RateLimitConfig {
+    /// An enabled limiter: `rate_per_s` sustained, `burst` capacity.
+    pub fn per_key(rate_per_s: f64, burst: f64) -> Self {
+        RateLimitConfig { rate_per_s, burst }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.rate_per_s > 0.0
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct BucketState {
+    /// Tokens available at `last_s`.
+    tokens: f64,
+    /// Clock of the last refill.
+    last_s: f64,
+}
+
+/// The limiter itself. Not internally synchronized — the HTTP layer
+/// wraps it in a `Mutex` (admission is a single fast check, not a hot
+/// loop).
+#[derive(Debug)]
+pub struct TokenBucketLimiter {
+    cfg: RateLimitConfig,
+    keys: BTreeMap<String, BucketState>,
+}
+
+impl TokenBucketLimiter {
+    pub fn new(cfg: RateLimitConfig) -> Self {
+        TokenBucketLimiter { cfg, keys: BTreeMap::new() }
+    }
+
+    pub fn config(&self) -> RateLimitConfig {
+        self.cfg
+    }
+
+    /// Try to spend one token from `key`'s bucket at time `now_s`.
+    /// `Ok(())` admits the request; `Err(retry_after_s)` is the exact
+    /// time until the bucket next holds a full token.
+    ///
+    /// A non-monotonic `now_s` (clock going backwards) refills nothing
+    /// but never *removes* accumulated tokens.
+    pub fn check(&mut self, key: &str, now_s: f64) -> Result<(), f64> {
+        if !self.cfg.enabled() {
+            return Ok(());
+        }
+        let burst = self.cfg.burst.max(1.0);
+        let rate = self.cfg.rate_per_s;
+        let b = self
+            .keys
+            .entry(key.to_string())
+            .or_insert(BucketState { tokens: burst, last_s: now_s });
+        let dt = (now_s - b.last_s).max(0.0);
+        b.tokens = (b.tokens + dt * rate).min(burst);
+        b.last_s = b.last_s.max(now_s);
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err((1.0 - b.tokens) / rate)
+        }
+    }
+
+    /// Distinct keys seen so far (diagnostics).
+    pub fn key_count(&self) -> usize {
+        self.keys.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_limiter_admits_everything() {
+        let mut l = TokenBucketLimiter::new(RateLimitConfig::default());
+        for i in 0..1000 {
+            assert!(l.check("anon", i as f64 * 1e-6).is_ok());
+        }
+        assert_eq!(l.key_count(), 0, "disabled limiter tracks no state");
+    }
+
+    #[test]
+    fn refill_math_is_deterministic() {
+        // 2 tokens/s, burst 4: drain the burst, then the bucket refills
+        // exactly one token per 0.5 s.
+        let mut l = TokenBucketLimiter::new(RateLimitConfig::per_key(2.0, 4.0));
+        for _ in 0..4 {
+            assert!(l.check("k", 0.0).is_ok());
+        }
+        // Empty: retry hint is exactly 1 token / (2 tokens/s).
+        assert_eq!(l.check("k", 0.0), Err(0.5));
+        // 0.25 s later: half a token in the bucket, 0.25 s to a whole one.
+        assert_eq!(l.check("k", 0.25), Err(0.25));
+        // 0.5 s from the drain: exactly one token has accumulated.
+        assert!(l.check("k", 0.5).is_ok());
+        assert!(l.check("k", 0.5).is_err());
+    }
+
+    #[test]
+    fn burst_cap_bounds_idle_accumulation() {
+        let mut l = TokenBucketLimiter::new(RateLimitConfig::per_key(1.0, 3.0));
+        assert!(l.check("k", 0.0).is_ok());
+        // A very long idle stretch refills to the cap, not beyond: only
+        // `burst` requests pass back-to-back.
+        for _ in 0..3 {
+            assert!(l.check("k", 1e6).is_ok());
+        }
+        assert!(l.check("k", 1e6).is_err());
+    }
+
+    #[test]
+    fn keys_are_isolated() {
+        let mut l = TokenBucketLimiter::new(RateLimitConfig::per_key(1.0, 1.0));
+        assert!(l.check("alice", 0.0).is_ok());
+        assert!(l.check("alice", 0.0).is_err());
+        // Bob's bucket is untouched by Alice's spend.
+        assert!(l.check("bob", 0.0).is_ok());
+        assert!(l.check("bob", 0.0).is_err());
+        assert_eq!(l.key_count(), 2);
+    }
+
+    #[test]
+    fn backwards_clock_neither_refills_nor_steals() {
+        let mut l = TokenBucketLimiter::new(RateLimitConfig::per_key(1.0, 2.0));
+        assert!(l.check("k", 10.0).is_ok());
+        // now_s jumps backwards: dt clamps to 0, the remaining token is
+        // still spendable and last_s stays at its high-water mark.
+        assert!(l.check("k", 3.0).is_ok());
+        assert!(l.check("k", 3.0).is_err());
+        // Refill resumes from 10.0, not 3.0: at 10.5 half a token.
+        assert_eq!(l.check("k", 10.5), Err(0.5));
+    }
+}

@@ -51,6 +51,10 @@ pub struct RunResult {
     /// Requests shed by admission control (0 unless `run_admitted` is
     /// used with a controller).
     pub rejected: usize,
+    /// Canonical Prometheus text of the world's telemetry registry at
+    /// the end of the run (`econoserve sweep --metrics-out` surfaces
+    /// this; see `docs/metrics-dictionary.md`).
+    pub metrics: String,
 }
 
 /// Drive `world` with `sched` and `engine` until completion or limits,
@@ -164,6 +168,7 @@ pub fn run_admitted(
         end_time,
         wall_time: wall_start.elapsed().as_secs_f64(),
         rejected,
+        metrics: world.metrics_text(),
     }
 }
 
@@ -336,6 +341,11 @@ impl Stepper {
     /// comparable and sum correctly).
     pub fn summary_at(&self, end_time: f64) -> Summary {
         summarize(&self.world.recs, &self.world.col, end_time)
+    }
+
+    /// Canonical Prometheus text of this replica's telemetry registry.
+    pub fn metrics_text(&self) -> String {
+        self.world.metrics_text()
     }
 }
 

@@ -22,6 +22,7 @@ use crate::config::SystemConfig;
 use crate::kvc::Allocator;
 use crate::metrics::Collector;
 use crate::predictor::Predictor;
+use crate::telemetry::SimMetrics;
 use crate::trace::TraceItem;
 
 /// Events produced by the last executed iteration, consumed by the
@@ -115,6 +116,12 @@ pub struct World {
     /// `IterCtx::take_plan` and returned via `recycle_plan`.
     spare_events: Events,
     spare_plan: BatchPlan,
+    /// Telemetry registry for this world (the shared sim/server metric
+    /// vocabulary). Each world owns its own registry and updates it
+    /// single-threaded, so every metric value is a pure function of
+    /// (config, seed); the fleet merges rendered snapshots in replica-id
+    /// order at finalize.
+    tel: SimMetrics,
 }
 
 impl World {
@@ -158,7 +165,18 @@ impl World {
             done_count: 0,
             spare_events: Events::default(),
             spare_plan: BatchPlan::default(),
+            tel: SimMetrics::new(),
         }
+    }
+
+    /// This world's telemetry bundle (pre-registered metric handles).
+    pub fn telemetry(&self) -> &SimMetrics {
+        &self.tel
+    }
+
+    /// Canonical Prometheus text for this world's registry.
+    pub fn metrics_text(&self) -> String {
+        self.tel.render()
     }
 
     /// Add an arrived request to the active index (idempotent).
@@ -319,6 +337,7 @@ impl World {
         rec.phase = Phase::Done;
         self.done_count += 1;
         self.index_deactivate(id);
+        self.tel.requests_rejected.inc();
     }
 
     /// Kill this world (fleet-layer replica crash): every request that
@@ -415,6 +434,7 @@ impl World {
             }
         }
         self.col.preemptions += 1;
+        self.tel.preemptions.inc();
         orphans
     }
 
@@ -453,11 +473,14 @@ impl World {
     pub fn apply_plan(&mut self, plan: &BatchPlan, dur: f64, gpu_util: f64) {
         self.events.clear();
         let end = self.clock + dur;
+        let mut prefill_tokens = 0u64;
+        let mut decode_tokens = 0u64;
 
         for task in &plan.tasks {
             match *task {
                 BatchTask::Prefill { id, chunk } => {
                     debug_assert!(chunk > 0);
+                    prefill_tokens += chunk as u64;
                     if self.recs[id].lost_kv > 0 {
                         // Recompute pass for offload-free-preempted KV.
                         let applied = chunk.min(self.recs[id].lost_kv);
@@ -502,6 +525,7 @@ impl World {
                 BatchTask::Decode { id } => {
                     // Write the KV of the previously generated token, then
                     // produce the next one.
+                    decode_tokens += 1;
                     self.write_kv(id, 1);
                     let done = {
                         let rec = &mut self.recs[id];
@@ -603,6 +627,21 @@ impl World {
             kvc_alloc,
             completed_count,
         );
+        // Telemetry mirror of the iteration (same values the collector
+        // just folded, exported under the shared metric vocabulary).
+        self.tel.iterations.inc();
+        self.tel.tokens_prefill.add(prefill_tokens);
+        self.tel.tokens_decode.add(decode_tokens);
+        self.tel.batch_occupancy.observe(plan.tasks.len() as f64);
+        self.tel.kvc_utilization.observe(kvc_util);
+        self.tel.alloc_granted.add(tally.granted as u64);
+        self.tel.alloc_hosted.add(tally.hosted as u64);
+        self.tel.alloc_exhausted.add(tally.exhausted as u64);
+        // Queue depth: arrived-and-unfinished requests that were not in
+        // this iteration's batch (one task per request in a plan).
+        self.tel
+            .queue_depth
+            .set(self.active.len().saturating_sub(plan.tasks.len()) as f64);
     }
 
     /// Route a KV write through the allocator (own lease, or borrowed
@@ -633,6 +672,22 @@ impl World {
         self.done_count += 1;
         self.index_deactivate(id);
         self.events.completed.push(id);
+        let rec = &self.recs[id];
+        self.tel.requests_done.inc();
+        if rec.met_slo() {
+            self.tel.slo_hit.inc();
+        } else {
+            self.tel.slo_miss.inc();
+        }
+        if let Some(j) = rec.jct() {
+            self.tel.request_latency.observe(j);
+        }
+        if let Some(ft) = rec.first_token_at {
+            self.tel.ttft.observe(ft - rec.req.arrival);
+        }
+        if let Some(t) = rec.mean_tbt() {
+            self.tel.tbt.observe(t);
+        }
     }
 
     /// Force-evict a hosted guest whose backing disappeared (host head
@@ -656,6 +711,7 @@ impl World {
         rec.preempt_count += 1;
         self.col.preemptions += 1;
         self.col.pipeline_evictions += 1;
+        self.tel.preemptions.inc();
     }
 }
 
@@ -766,6 +822,7 @@ impl IterCtx<'_> {
         rec.preempted_since.get_or_insert(now);
         rec.preempt_count += 1;
         self.w.col.preemptions += 1;
+        self.w.tel.preemptions.inc();
     }
 
     /// Revoke a guest's borrowed space (host trimmed / guest repredicted):

@@ -313,6 +313,11 @@ pub struct SweepResult {
     pub threads: usize,
     /// Host wall-clock seconds for the whole sweep.
     pub wall_s: f64,
+    /// Canonical Prometheus text: every cell's telemetry registry merged
+    /// in grid order (`econoserve sweep --metrics-out`). Cells are
+    /// simulated quantities only, so — like `rows` — this string is
+    /// bit-identical at any thread count.
+    pub metrics: String,
 }
 
 impl SweepResult {
@@ -342,11 +347,26 @@ pub fn run_grid(spec: &GridSpec) -> SweepResult {
     let cells = spec.cells();
     let threads = super::resolve_threads(spec.threads).min(cells.len().max(1));
     let t0 = std::time::Instant::now();
-    let rows = super::map_indexed(&cells, threads, |_, cell| run_cell(cell, spec));
-    SweepResult { rows, threads, wall_s: t0.elapsed().as_secs_f64() }
+    let outs = super::map_indexed(&cells, threads, |_, cell| run_cell(cell, spec));
+    // Merge per-cell registries in grid order (map_indexed collects in
+    // input order, so the merge sequence — and thus the rendered text —
+    // is independent of thread count).
+    let mut rows = Vec::with_capacity(outs.len());
+    let mut merged: Option<crate::telemetry::Snapshot> = None;
+    for (row, metrics) in outs {
+        rows.push(row);
+        let snap = crate::telemetry::Snapshot::parse(&metrics)
+            .expect("cell registry render is valid exposition text");
+        match &mut merged {
+            None => merged = Some(snap),
+            Some(m) => m.merge(&snap).expect("cells share one metric vocabulary"),
+        }
+    }
+    let metrics = merged.map(|m| m.render()).unwrap_or_default();
+    SweepResult { rows, threads, wall_s: t0.elapsed().as_secs_f64(), metrics }
 }
 
-fn run_cell(cell: &Cell, spec: &GridSpec) -> Json {
+fn run_cell(cell: &Cell, spec: &GridSpec) -> (Json, String) {
     let mut cfg = common::cfg(&cell.model, &cell.trace);
     cfg.seed = cell.cell_seed;
     // Never charge measured scheduler wall-clock into the simulated
@@ -381,7 +401,9 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> Json {
             }
             // Cell-level fan-out owns the cores; replicas step serially.
             fc.threads = 1;
-            let s = fleet::run(&fc, &items).summary;
+            let res = fleet::run(&fc, &items);
+            let metrics = res.metrics;
+            let s = res.summary;
             row.extend([
                 ("router", Json::from(router.as_str())),
                 ("autoscaler", Json::from(autoscaler.as_str())),
@@ -401,6 +423,7 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> Json {
                 ("rerouted", Json::from(s.faults.rerouted)),
                 ("lost", Json::from(s.faults.lost)),
             ]);
+            (obj(row), metrics)
         }
         _ => {
             let res = harness::simulate(
@@ -411,6 +434,7 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> Json {
                 spec.oracle,
                 RunLimits::for_time(spec.max_time),
             );
+            let metrics = res.metrics;
             let s = res.summary;
             row.extend([
                 ("n_done", Json::from(s.n_done)),
@@ -423,9 +447,9 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> Json {
                 ("gpu_util", Json::from(s.gpu_util)),
                 ("preemptions", Json::from(s.preemptions as usize)),
             ]);
+            (obj(row), metrics)
         }
     }
-    obj(row)
 }
 
 #[cfg(test)]

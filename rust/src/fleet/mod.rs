@@ -271,6 +271,13 @@ pub struct FleetResult {
     pub per_replica: Vec<Summary>,
     /// Per-replica lifecycle/routing logs, in replica-id order.
     pub replicas: Vec<ReplicaLog>,
+    /// Canonical Prometheus text: every replica's telemetry registry
+    /// merged in replica-id order, plus the fleet-level counters written
+    /// from the authoritative summary/`FaultTally` accounting
+    /// (`econoserve fleet --metrics-out`; see `docs/metrics-dictionary.md`).
+    /// Replica registries are single-threaded by construction, so this
+    /// string is bit-identical at any `threads` setting.
+    pub metrics: String,
 }
 
 /// A chaos run paired with its fault-free twin: the same fleet config

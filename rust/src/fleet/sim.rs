@@ -588,6 +588,7 @@ fn finalize(
         logs.push(r.log.clone());
     }
     let gpu_hours = gpu_seconds / 3600.0;
+    let metrics = fleet_metrics_text(replicas, boots, retirements, &tally);
     FleetResult {
         summary: FleetSummary {
             n_total,
@@ -615,5 +616,49 @@ fn finalize(
         },
         per_replica,
         replicas: logs,
+        metrics,
+    }
+}
+
+/// Merge every replica's telemetry registry (in replica-id order — the
+/// merge is commutative sample-addition, but a fixed order keeps the
+/// code path itself deterministic) and overlay the fleet-level counters
+/// written from the authoritative tallies. Each replica's registry was
+/// only ever touched by its own single-threaded world, so the rendered
+/// text is a pure function of (config, seed): bit-identical at any
+/// thread count — `tests/equivalence.rs` pins this.
+fn fleet_metrics_text(
+    replicas: &[Replica],
+    boots: usize,
+    retirements: usize,
+    tally: &FaultTally,
+) -> String {
+    use crate::telemetry::{FleetMetrics, Snapshot};
+    let mut merged: Option<Snapshot> = None;
+    for r in replicas {
+        let snap = Snapshot::parse(&r.stepper.metrics_text())
+            .expect("registry render is valid exposition text");
+        match &mut merged {
+            None => merged = Some(snap),
+            Some(m) => m.merge(&snap).expect("replica registries share one vocabulary"),
+        }
+    }
+    let fleet = FleetMetrics::on(crate::telemetry::Registry::new());
+    fleet.crashes.add(tally.crashes as u64);
+    fleet.zone_outages.add(tally.zone_outages as u64);
+    fleet.stragglers.add(tally.stragglers as u64);
+    fleet.boot_failures.add(tally.boot_failures as u64);
+    fleet.requests_lost.add(tally.lost as u64);
+    fleet.reroutes.add(tally.rerouted as u64);
+    fleet.boots.add(boots as u64);
+    fleet.retirements.add(retirements as u64);
+    let fleet_snap = Snapshot::parse(&fleet.registry().render())
+        .expect("fleet registry render is valid exposition text");
+    match merged {
+        None => fleet_snap.render(),
+        Some(mut m) => {
+            m.merge(&fleet_snap).expect("fleet families are disjoint from sim families");
+            m.render()
+        }
     }
 }

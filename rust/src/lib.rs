@@ -95,6 +95,7 @@ pub mod core;
 pub mod kvc;
 pub mod metrics;
 pub mod predictor;
+pub mod telemetry;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 #[cfg(feature = "pjrt")]

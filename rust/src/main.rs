@@ -12,6 +12,9 @@
 //!   capacity  — Fig 12-style min-GPU search vs DistServe.
 //!   fleet     — multi-replica fleet: routing + autoscaling + GPU-hour
 //!               cost under non-stationary (poisson/mmpp/diurnal) load.
+//!   promlint  — strict-parse a Prometheus text file (as written by
+//!               `fleet`/`sweep --metrics-out` or scraped from
+//!               `GET /metrics`) and verify it re-renders canonically.
 //!
 //! Run `econoserve <subcommand> --help` for options.
 
@@ -36,9 +39,10 @@ fn main() {
         "capacity" => cmd_capacity(rest),
         "fleet" => cmd_fleet(rest),
         "figures" => cmd_figures(rest),
+        "promlint" => cmd_promlint(rest),
         _ => {
             eprintln!(
-                "usage: econoserve <simulate|serve|sweep|trace|capacity|fleet|figures> [options]\n\
+                "usage: econoserve <simulate|serve|sweep|trace|capacity|fleet|figures|promlint> [options]\n\
                  try: econoserve simulate --help"
             );
             2
@@ -196,6 +200,11 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
     .opt("max-time", "900", "simulated-time cap (drain allowance)")
     .opt("threads", "0", "worker threads (0 = ECONOSERVE_THREADS, then available parallelism)")
     .opt("out", "", "write the result JSON here (empty = stdout)")
+    .opt(
+        "metrics-out",
+        "",
+        "write the merged telemetry registry (Prometheus text, all cells in grid order) here",
+    )
     .flag("oracle", "use ground-truth response lengths");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -268,6 +277,14 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
             res.threads
         );
     }
+    let metrics_out = a.get("metrics-out");
+    if !metrics_out.is_empty() {
+        if let Err(e) = std::fs::write(metrics_out, &res.metrics) {
+            eprintln!("write {metrics_out}: {e}");
+            return 1;
+        }
+        eprintln!("sweep: telemetry -> {metrics_out}");
+    }
     0
 }
 
@@ -298,6 +315,8 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("max-new", "48", "mean response length (tokens)")
         .opt("ordering", "econoserve", "queue ordering policy: econoserve | fcfs")
         .opt("max-inflight", "256", "admission bound on requests in flight (0 = unbounded)")
+        .opt("rate-limit", "0", "per-key sustained request rate per second (0 = off)")
+        .opt("burst", "8", "rate-limiter burst capacity (with --rate-limit)")
         .opt("seed", "7", "rng seed");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -317,6 +336,11 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
     let server_cfg = ServerConfig {
         ordering,
         admission: AdmissionConfig { max_inflight: a.usize("max-inflight"), ..Default::default() },
+        rate_limit: if a.f64("rate-limit") > 0.0 {
+            econoserve::api::RateLimitConfig::per_key(a.f64("rate-limit"), a.f64("burst"))
+        } else {
+            econoserve::api::RateLimitConfig::default()
+        },
     };
     let listen = a.get("listen").to_string();
     if !listen.is_empty() {
@@ -327,7 +351,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         ) {
             Ok(srv) => {
                 println!(
-                    "serving on http://{} (ordering={})\n  POST /v1/generate {{\"prompt\": [ids], \"max_new_tokens\": n}}\n  POST /v1/stream   same body, chunked NDJSON token stream\n  GET  /v1/stats | GET /v1/info | GET /health",
+                    "serving on http://{} (ordering={})\n  POST /v1/generate    {{\"prompt\": [ids], \"max_new_tokens\": n}}\n  POST /v1/stream      same body, chunked NDJSON token stream\n  POST /v1/completions OpenAI-compatible (string prompt, optional SSE)\n  GET  /v1/models | /v1/stats | /v1/info | /metrics | /health",
                     srv.addr,
                     ordering.name()
                 );
@@ -529,6 +553,12 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
          full-chaos); when not 'none', compares every router's goodput/SSR retention \
          under the profile against its own fault-free baseline",
     )
+    .opt(
+        "metrics-out",
+        "",
+        "write the fleet's merged telemetry registry (Prometheus text) here \
+         (ignored in --chaos comparison mode, which runs many fleets)",
+    )
     .flag("oracle", "use ground-truth response lengths")
     .flag(
         "compare-static",
@@ -655,6 +685,14 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
         items.len()
     );
     let res = fleet::run(&fc, &items);
+    let metrics_out = a.get("metrics-out");
+    if !metrics_out.is_empty() {
+        if let Err(e) = std::fs::write(metrics_out, &res.metrics) {
+            eprintln!("write {metrics_out}: {e}");
+            return 1;
+        }
+        println!("  telemetry -> {metrics_out}");
+    }
     print_fleet_summary(a.get("autoscaler"), &res.summary);
     for (id, log) in res.replicas.iter().enumerate() {
         println!(
@@ -721,6 +759,57 @@ fn print_fleet_summary(label: &str, s: &econoserve::fleet::FleetSummary) {
             f.crashes, f.zone_outages, f.stragglers, f.boot_failures, f.rerouted, f.lost,
         );
     }
+}
+
+fn cmd_promlint(argv: Vec<String>) -> i32 {
+    use econoserve::telemetry::Snapshot;
+
+    let cli = Cli::new(
+        "econoserve promlint",
+        "strict-parse a Prometheus text file and verify canonical form: every sample \
+         must belong to a typed family, and the file must re-render byte-identically \
+         (the form every --metrics-out writer and GET /metrics produces)",
+    )
+    .opt("file", "", "exposition text file to lint (required)");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let path = a.get("file");
+    if path.is_empty() {
+        eprintln!("promlint: --file is required");
+        return 2;
+    }
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("promlint: read {path}: {e}");
+            return 1;
+        }
+    };
+    let snap = match Snapshot::parse(&text) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("promlint: {path}: {e}");
+            return 1;
+        }
+    };
+    if snap.render() != text {
+        eprintln!(
+            "promlint: {path}: parses but is not in canonical form \
+             (families/labels out of canonical order?)"
+        );
+        return 1;
+    }
+    println!(
+        "promlint: {path}: OK ({} families, {} samples)",
+        snap.family_names().len(),
+        snap.sample_count()
+    );
+    0
 }
 
 fn cmd_figures(argv: Vec<String>) -> i32 {

@@ -18,8 +18,18 @@ impl UtilSampler {
     }
 
     pub fn add(&mut self, t: Time, dur: f64, value: f64) {
+        // Guard degenerate inputs: a NaN/∞ or negative timestamp would
+        // cast to 0 or usize::MAX below (the latter a catastrophic
+        // resize), and a non-positive duration carries no weight — the
+        // bucket would exist but be excluded from `series()` anyway.
+        if !t.is_finite() || t < 0.0 || !dur.is_finite() || dur <= 0.0 {
+            return;
+        }
         let idx = (t / self.bucket) as usize;
         if idx >= self.acc.len() {
+            // `resize` zero-fills every intermediate bucket, so a sparse
+            // time jump leaves explicit (0.0, 0.0) gaps that `mean()`
+            // and `series()` skip by weight.
             self.acc.resize(idx + 1, (0.0, 0.0));
         }
         self.acc[idx].0 += value * dur;
@@ -282,6 +292,58 @@ mod tests {
         u.add(0.0, 1.0, 1.0);
         u.add(0.5, 3.0, 0.0);
         assert!((u.mean() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn util_sampler_empty_mean_is_zero() {
+        let u = UtilSampler::new(1.0);
+        assert_eq!(u.mean(), 0.0);
+        assert!(u.series().is_empty());
+    }
+
+    #[test]
+    fn util_sampler_exact_boundary_lands_in_upper_bucket() {
+        // t == k * bucket belongs to bucket k (half-open [k, k+1) buckets).
+        let mut u = UtilSampler::new(1.0);
+        u.add(2.0, 1.0, 0.7);
+        let s = u.series();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].0, 2.0);
+        assert!((s[0].1 - 0.7).abs() < 1e-12);
+        // And the boundary sample shares its bucket with interior times.
+        u.add(2.9, 1.0, 0.3);
+        let s = u.series();
+        assert_eq!(s.len(), 1);
+        assert!((s[0].1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn util_sampler_sparse_jump_zero_fills_gap_buckets() {
+        let mut u = UtilSampler::new(1.0);
+        u.add(0.5, 1.0, 1.0);
+        u.add(1000.5, 1.0, 1.0);
+        // Gap buckets exist (zero-weighted) but are excluded from the
+        // series and carry no weight in the mean.
+        let s = u.series();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].0, 0.0);
+        assert_eq!(s[1].0, 1000.0);
+        assert!((u.mean() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn util_sampler_rejects_degenerate_inputs() {
+        let mut u = UtilSampler::new(1.0);
+        u.add(f64::NAN, 1.0, 0.5);
+        u.add(f64::INFINITY, 1.0, 0.5); // would resize to usize::MAX
+        u.add(-3.0, 1.0, 0.5);
+        u.add(1.0, 0.0, 0.5);
+        u.add(1.0, f64::NAN, 0.5);
+        assert!(u.series().is_empty());
+        assert_eq!(u.mean(), 0.0);
+        // A valid sample afterwards still lands correctly.
+        u.add(1.0, 2.0, 0.25);
+        assert_eq!(u.series(), vec![(1.0, 0.25)]);
     }
 
     #[test]

@@ -3,39 +3,65 @@
 //! request-lifecycle API of [`crate::api`].
 //!
 //! Endpoints:
-//!   POST /v1/generate   {"prompt": [ids], "max_new_tokens": n,
-//!                        "slo_budget_s": s?, "priority": p?}
-//!                       -> {"id", "tokens", "finish", "met_slo",
-//!                           "ttft_s", "latency_s", "tbt_s"}
-//!   POST /v1/stream     same body; chunked NDJSON response: one
-//!                       {"index", "token"} object per generated token,
-//!                       then a terminal {"done": true, "finish", ...}.
-//!                       Dropping the connection cancels the request and
-//!                       frees its decode slot.
-//!   GET  /v1/stats      -> aggregate ServeStats snapshot
-//!   GET  /v1/info       -> model dims (decode_slots, max_prompt, ...)
-//!   GET  /health        -> 200 "ok"
+//!   POST /v1/generate     {"prompt": [ids], "max_new_tokens": n,
+//!                          "slo_budget_s": s?, "priority": p?}
+//!                         -> {"id", "tokens", "finish", "met_slo",
+//!                             "ttft_s", "latency_s", "tbt_s"}
+//!   POST /v1/stream       same body; chunked NDJSON response: one
+//!                         {"index", "token"} object per generated token,
+//!                         then a terminal {"done": true, "finish", ...}.
+//!                         Dropping the connection cancels the request and
+//!                         frees its decode slot.
+//!   POST /v1/completions  OpenAI-compatible facade: {"prompt": "text"
+//!                         or [ids], "max_tokens": n?, "stream": bool?}.
+//!                         A string prompt uses a bytes-as-token-ids
+//!                         stand-in tokenizer (the demo model has no BPE
+//!                         vocabulary); `"stream": true` answers with
+//!                         `text/event-stream` SSE frames ending in
+//!                         `data: [DONE]`.
+//!   GET  /v1/models       OpenAI-compatible model listing.
+//!   GET  /v1/stats        -> aggregate ServeStats snapshot (read from the
+//!                         telemetry registry — same cells as /metrics)
+//!   GET  /v1/info         -> model dims (decode_slots, max_prompt, ...)
+//!   GET  /metrics         -> Prometheus text exposition of the shared
+//!                         registry (same family names as the simulator's
+//!                         `--metrics-out`; see docs/metrics-dictionary.md)
+//!   GET  /health          -> 200 "ok"
 //!
 //! Errors are structured: {"error": msg, "kind": stable_kind} with the
 //! [`ServeError`] status mapping (400 bad request, 404 unknown route,
-//! 429 queue full, 503 SLO-infeasible/engine down).
+//! 429 queue full / rate limited, 503 SLO-infeasible/draining/engine
+//! down).
+//!
+//! Hardening: an optional per-key token-bucket rate limiter guards the
+//! generation endpoints (key = `x-api-key` header, `"anon"` otherwise;
+//! `ServerConfig::rate_limit`), and shutdown is graceful — a
+//! [`DrainGate`] lets in-flight connections (token streams included)
+//! finish while new ones get 503 `shutting_down`, then the engine is
+//! stopped ([`HttpServer::shutdown`]).
 //!
 //! Architecture: one acceptor thread per connection (serving concurrency
 //! is bounded by the model's decode slots anyway), all requests funneled
 //! to the single engine thread that owns the PJRT model. The engine
 //! replies to a submission immediately with a `RequestHandle` (or a
 //! rejection); the connection thread then consumes the handle's event
-//! stream while the engine keeps batching.
+//! stream while the engine keeps batching. Engine and connection threads
+//! share one telemetry registry and request log.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use super::{RealServer, ServeStats, ServerConfig};
-use crate::api::{RequestHandle, ServeError, StreamEvent, SubmitOptions};
+use crate::api::{
+    DrainGate, RequestHandle, ServeError, StreamEvent, SubmitOptions, TokenBucketLimiter,
+};
 use crate::runtime::{ModelDims, PjrtModel};
+use crate::telemetry::{Registry, RequestLog, ServerMetrics};
 use crate::util::json::{obj, Json};
 
 enum EngineCmd {
@@ -45,10 +71,24 @@ enum EngineCmd {
     Shutdown,
 }
 
+/// Shared state every connection thread needs: the engine channel plus
+/// the telemetry/hardening surface.
+struct Ctx {
+    tx: mpsc::Sender<EngineCmd>,
+    tel: ServerMetrics,
+    log: Arc<RequestLog>,
+    gate: Arc<DrainGate>,
+    limiter: Mutex<TokenBucketLimiter>,
+    /// Epoch of the rate-limiter clock.
+    origin: Instant,
+}
+
 /// Handle to a running HTTP server (engine thread + acceptor thread).
 pub struct HttpServer {
     pub addr: std::net::SocketAddr,
     tx: mpsc::Sender<EngineCmd>,
+    ctx: Arc<Ctx>,
+    stop: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
     engine_handle: Option<std::thread::JoinHandle<()>>,
 }
@@ -60,13 +100,27 @@ impl HttpServer {
         Self::start_with(addr, artifacts_dir, ServerConfig::default())
     }
 
-    /// As [`start`](Self::start), with an explicit ordering policy and
-    /// admission configuration.
+    /// As [`start`](Self::start), with an explicit ordering policy,
+    /// admission configuration, and rate limit.
     pub fn start_with(addr: &str, artifacts_dir: &str, cfg: ServerConfig) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
 
         let (tx, rx) = mpsc::channel::<EngineCmd>();
+        // One registry + request log shared by the engine thread (which
+        // records serving metrics) and every connection thread (which
+        // records HTTP metrics and serves GET /metrics).
+        let registry = Registry::new();
+        let tel = ServerMetrics::on(registry);
+        let log: Arc<RequestLog> = Arc::new(RequestLog::default());
+        let ctx = Arc::new(Ctx {
+            tx: tx.clone(),
+            tel: tel.clone(),
+            log: log.clone(),
+            gate: DrainGate::new(),
+            limiter: Mutex::new(TokenBucketLimiter::new(cfg.rate_limit)),
+            origin: Instant::now(),
+        });
 
         // Engine thread: owns the model (PjRtModel is !Send — the PJRT
         // client handle is thread-affine in the xla crate — so it is
@@ -84,21 +138,27 @@ impl HttpServer {
                     return;
                 }
             };
-            engine_loop(RealServer::with_config(model, cfg), rx)
+            engine_loop(RealServer::with_telemetry(model, cfg, tel, log), rx)
         });
         ready_rx
             .recv()
             .map_err(|_| anyhow!("engine thread died during load"))?
             .with_context(|| format!("loading artifacts from {artifacts_dir}"))?;
 
-        // Acceptor thread: parses HTTP, forwards to the engine.
-        let tx_accept = tx.clone();
+        // Acceptor thread: parses HTTP, forwards to the engine. Exits
+        // when `stop` is set (shutdown self-connects to unblock accept).
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = stop.clone();
+        let accept_ctx = ctx.clone();
         let accept_handle = std::thread::spawn(move || {
             for stream in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
                 let Ok(stream) = stream else { continue };
-                let tx = tx_accept.clone();
+                let ctx = accept_ctx.clone();
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, tx);
+                    let _ = handle_conn(stream, &ctx);
                 });
             }
         });
@@ -106,19 +166,58 @@ impl HttpServer {
         Ok(HttpServer {
             addr: local,
             tx,
+            ctx,
+            stop,
             accept_handle: Some(accept_handle),
             engine_handle: Some(engine_handle),
         })
     }
 
-    /// Stop the engine (the acceptor thread dies with the process; tests
-    /// only need the engine drained).
-    pub fn shutdown(mut self) {
+    /// The shared telemetry bundle (scraped at `GET /metrics`).
+    pub fn telemetry(&self) -> &ServerMetrics {
+        &self.ctx.tel
+    }
+
+    /// Canonical Prometheus text of the server's registry.
+    pub fn metrics_text(&self) -> String {
+        self.ctx.tel.registry().render()
+    }
+
+    /// The structured per-request event log.
+    pub fn request_log(&self) -> &Arc<RequestLog> {
+        &self.ctx.log
+    }
+
+    /// Graceful shutdown with a 10 s drain allowance; see
+    /// [`shutdown_within`](Self::shutdown_within).
+    pub fn shutdown(self) {
+        self.shutdown_within(Duration::from_secs(10));
+    }
+
+    /// Graceful shutdown: (1) begin draining — the acceptor stays up but
+    /// every new connection gets 503 `shutting_down`, (2) wait up to
+    /// `grace` for in-flight connections (streams included) to finish —
+    /// the engine keeps batching so they CAN finish, (3) stop the
+    /// acceptor, (4) stop and join the engine thread.
+    pub fn shutdown_within(mut self, grace: Duration) {
+        self.ctx.gate.begin_drain();
+        if !self.ctx.gate.wait_idle(grace) {
+            eprintln!(
+                "http: drain timed out with {} connection(s) still open",
+                self.ctx.gate.active()
+            );
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the acceptor's accept(); it re-checks the stop flag
+        // before handling the connection and exits instead.
+        let _ = TcpStream::connect(self.addr);
         let _ = self.tx.send(EngineCmd::Shutdown);
         if let Some(h) = self.engine_handle.take() {
             let _ = h.join();
         }
-        drop(self.accept_handle.take());
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -198,9 +297,8 @@ fn parse_submit(body: &[u8]) -> Result<SubmitOptions, ServeError> {
 
 fn submit_to_engine(
     tx: &mpsc::Sender<EngineCmd>,
-    body: &[u8],
+    opts: SubmitOptions,
 ) -> Result<RequestHandle, ServeError> {
-    let opts = parse_submit(body)?;
     let (rtx, rrx) = mpsc::channel();
     tx.send(EngineCmd::Submit(opts, rtx)).map_err(|_| ServeError::EngineDown)?;
     rrx.recv().map_err(|_| ServeError::EngineDown)?
@@ -222,7 +320,40 @@ fn completion_json(c: &crate::api::Completion) -> Json {
     ])
 }
 
-fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineCmd>) -> Result<()> {
+/// Normalize a request path to a bounded label for
+/// `econoserve_http_requests_total{route=...}` — arbitrary client paths
+/// must not mint unbounded label cardinality.
+fn route_label(path: &str) -> &'static str {
+    match path {
+        "/health" => "/health",
+        "/metrics" => "/metrics",
+        "/v1/stats" => "/v1/stats",
+        "/v1/info" => "/v1/info",
+        "/v1/models" => "/v1/models",
+        "/v1/generate" => "/v1/generate",
+        "/v1/stream" => "/v1/stream",
+        "/v1/completions" => "/v1/completions",
+        _ => "other",
+    }
+}
+
+/// RAII increment of `econoserve_http_connections_active`.
+struct ActiveConn(crate::telemetry::Gauge);
+
+impl ActiveConn {
+    fn new(tel: &ServerMetrics) -> Self {
+        tel.connections_active.add(1.0);
+        ActiveConn(tel.connections_active.clone())
+    }
+}
+
+impl Drop for ActiveConn {
+    fn drop(&mut self) {
+        self.0.add(-1.0);
+    }
+}
+
+fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut request_line = String::new();
@@ -231,8 +362,9 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineCmd>) -> Result<()> {
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
 
-    // Headers (we only need Content-Length).
+    // Headers (Content-Length for the body, x-api-key for the limiter).
     let mut content_length = 0usize;
+    let mut api_key = "anon".to_string();
     loop {
         let mut line = String::new();
         reader.read_line(&mut line)?;
@@ -240,28 +372,76 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineCmd>) -> Result<()> {
         if line.is_empty() {
             break;
         }
-        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+        let lower = line.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
             content_length = v.trim().parse().unwrap_or(0);
+        } else if let Some(v) = lower.strip_prefix("x-api-key:") {
+            let v = v.trim();
+            if !v.is_empty() {
+                api_key = v.to_string();
+            }
         }
     }
     let mut body = vec![0u8; content_length];
     if content_length > 0 {
         reader.read_exact(&mut body)?;
     }
+    let label = route_label(&path);
 
-    // Streaming endpoint: the response is written incrementally, so it
-    // cannot go through the buffered route/respond pair below.
-    if method == "POST" && path == "/v1/stream" {
-        return match submit_to_engine(&tx, &body) {
-            Ok(handle) => stream_response(stream, handle),
-            Err(e) => respond(stream, e.http_status(), &error_json(&e).to_string()),
-        };
+    // Drain gate: during shutdown, in-flight connections finish while
+    // new ones are refused here. The guard is held for the whole
+    // exchange — streaming responses included — so `wait_idle` covers
+    // them.
+    let Some(_conn_guard) = ctx.gate.try_enter() else {
+        let e = ServeError::ShuttingDown;
+        ctx.tel.http_observe(label, e.http_status());
+        return respond(stream, e.http_status(), &error_json(&e).to_string());
+    };
+    let _active = ActiveConn::new(&ctx.tel);
+
+    // Token-bucket rate limit on the generation endpoints (reads and
+    // health stay unthrottled: scrapers and probes are not clients).
+    let generates = method == "POST"
+        && matches!(path.as_str(), "/v1/generate" | "/v1/stream" | "/v1/completions");
+    if generates {
+        let now_s = ctx.origin.elapsed().as_secs_f64();
+        let verdict = ctx.limiter.lock().unwrap().check(&api_key, now_s);
+        if let Err(retry_after_s) = verdict {
+            ctx.tel.rate_limited.inc();
+            let e = ServeError::RateLimited { retry_after_s };
+            ctx.tel.http_observe(label, e.http_status());
+            return respond(stream, e.http_status(), &error_json(&e).to_string());
+        }
     }
 
-    let (status, payload) = route(&method, &path, &body, &tx).unwrap_or_else(|e| {
+    // Streaming endpoints write their responses incrementally, so they
+    // cannot go through the buffered route/respond pair below.
+    if method == "POST" && path == "/v1/stream" {
+        return match parse_submit(&body).and_then(|o| submit_to_engine(&ctx.tx, o)) {
+            Ok(handle) => {
+                ctx.tel.http_observe(label, 200);
+                stream_response(stream, handle)
+            }
+            Err(e) => {
+                ctx.tel.http_observe(label, e.http_status());
+                respond(stream, e.http_status(), &error_json(&e).to_string())
+            }
+        };
+    }
+    if method == "POST" && path == "/v1/completions" {
+        return handle_completions(stream, &body, ctx, label);
+    }
+    if method == "GET" && path == "/metrics" {
+        let text = ctx.tel.registry().render();
+        ctx.tel.http_observe(label, 200);
+        return respond_typed(stream, 200, "text/plain; version=0.0.4", &text);
+    }
+
+    let (status, payload) = route(&method, &path, &body, &ctx.tx).unwrap_or_else(|e| {
         let err = ServeError::Internal(format!("{e:#}"));
         (err.http_status(), error_json(&err))
     });
+    ctx.tel.http_observe(label, status);
     respond(stream, status, &payload.to_string())
 }
 
@@ -274,10 +454,6 @@ fn stream_response(mut stream: TcpStream, handle: RequestHandle) -> Result<()> {
         "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
     )?;
     stream.flush()?;
-    let write_chunk = |stream: &mut TcpStream, data: &str| -> std::io::Result<()> {
-        write!(stream, "{:x}\r\n{data}\r\n", data.len())?;
-        stream.flush()
-    };
     let cancel = handle.cancel_token();
     for event in handle {
         let (line, last) = match &event {
@@ -307,6 +483,191 @@ fn stream_response(mut stream: TcpStream, handle: RequestHandle) -> Result<()> {
             break;
         }
     }
+    let _ = write!(stream, "0\r\n\r\n");
+    let _ = stream.flush();
+    Ok(())
+}
+
+fn write_chunk(stream: &mut TcpStream, data: &str) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n{data}\r\n", data.len())?;
+    stream.flush()
+}
+
+/// The OpenAI-compatible `/v1/completions` facade.
+///
+/// The demo model has no text tokenizer, so a string `prompt` uses a
+/// bytes-as-token-ids stand-in: each UTF-8 byte becomes one token id
+/// (mod the model vocabulary), and response ids in `0..256` decode back
+/// to bytes. A JSON-array prompt is passed through as raw token ids,
+/// matching the native endpoints.
+fn handle_completions(
+    stream: TcpStream,
+    body: &[u8],
+    ctx: &Ctx,
+    label: &'static str,
+) -> Result<()> {
+    let reply = |stream: TcpStream, e: ServeError, ctx: &Ctx| {
+        ctx.tel.http_observe(label, e.http_status());
+        respond(stream, e.http_status(), &error_json(&e).to_string())
+    };
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return reply(stream, ServeError::InvalidRequest("body is not utf-8".into()), ctx),
+    };
+    let j = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            return reply(stream, ServeError::InvalidRequest(format!("bad json: {e}")), ctx)
+        }
+    };
+    // Vocab size bounds the stand-in token ids.
+    let vocab = {
+        let (rtx, rrx) = mpsc::channel();
+        if ctx.tx.send(EngineCmd::Info(rtx)).is_err() {
+            return reply(stream, ServeError::EngineDown, ctx);
+        }
+        match rrx.recv() {
+            Ok(d) => d.vocab.max(1),
+            Err(_) => return reply(stream, ServeError::EngineDown, ctx),
+        }
+    };
+    let prompt: Vec<i32> = match j.get("prompt") {
+        Some(Json::Str(s)) => s.bytes().map(|b| (b as usize % vocab) as i32).collect(),
+        Some(v) => match v.as_arr() {
+            Some(arr) => arr.iter().map(|x| x.as_i64().unwrap_or(0) as i32).collect(),
+            None => {
+                return reply(
+                    stream,
+                    ServeError::InvalidRequest("'prompt' must be a string or an array".into()),
+                    ctx,
+                )
+            }
+        },
+        None => {
+            return reply(stream, ServeError::InvalidRequest("missing 'prompt'".into()), ctx)
+        }
+    };
+    let max_tokens = j.get("max_tokens").and_then(|v| v.as_usize()).unwrap_or(16);
+    let model_name =
+        j.get("model").and_then(|v| v.as_str()).unwrap_or("econoserve-pjrt").to_string();
+    let want_stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+    let n_prompt = prompt.len();
+    let opts = SubmitOptions::new(prompt, max_tokens.max(1));
+    let handle = match submit_to_engine(&ctx.tx, opts) {
+        Ok(h) => h,
+        Err(e) => return reply(stream, e, ctx),
+    };
+    ctx.tel.http_observe(label, 200);
+    if want_stream {
+        completions_sse(stream, handle, &model_name)
+    } else {
+        completions_blocking(stream, handle, &model_name, n_prompt)
+    }
+}
+
+/// Decode response token ids back to text under the bytes-as-token-ids
+/// stand-in (ids outside the byte range render as U+FFFD).
+fn detokenize(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> =
+        tokens.iter().map(|&t| u8::try_from(t).unwrap_or(b'\xEF')).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+fn openai_finish(finish: crate::api::FinishReason) -> &'static str {
+    match finish {
+        crate::api::FinishReason::Complete => "stop",
+        crate::api::FinishReason::LengthCap => "length",
+        _ => "stop",
+    }
+}
+
+fn completions_blocking(
+    stream: TcpStream,
+    handle: RequestHandle,
+    model: &str,
+    n_prompt: usize,
+) -> Result<()> {
+    match handle.wait() {
+        Ok(c) if c.finish == crate::api::FinishReason::Error => {
+            let e = ServeError::Internal("engine failed mid-generation".into());
+            respond(stream, e.http_status(), &error_json(&e).to_string())
+        }
+        Ok(c) => {
+            let n_out = c.tokens.len();
+            let doc = obj([
+                ("id", Json::from(format!("cmpl-{}", c.id))),
+                ("object", Json::from("text_completion")),
+                ("model", Json::from(model)),
+                (
+                    "choices",
+                    Json::Arr(vec![obj([
+                        ("index", Json::from(0usize)),
+                        ("text", Json::from(detokenize(&c.tokens))),
+                        ("finish_reason", Json::from(openai_finish(c.finish))),
+                    ])]),
+                ),
+                (
+                    "usage",
+                    obj([
+                        ("prompt_tokens", Json::from(n_prompt)),
+                        ("completion_tokens", Json::from(n_out)),
+                        ("total_tokens", Json::from(n_prompt + n_out)),
+                    ]),
+                ),
+            ]);
+            respond(stream, 200, &doc.to_string())
+        }
+        Err(e) => respond(stream, e.http_status(), &error_json(&e).to_string()),
+    }
+}
+
+/// Server-sent events variant: one `data: {...}` frame per token, then a
+/// final frame carrying the finish_reason, then `data: [DONE]`.
+fn completions_sse(mut stream: TcpStream, handle: RequestHandle, model: &str) -> Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    let frame = |id: u64, text: Json, finish: Option<&str>| {
+        obj([
+            ("id", Json::from(format!("cmpl-{id}"))),
+            ("object", Json::from("text_completion")),
+            ("model", Json::from(model)),
+            (
+                "choices",
+                Json::Arr(vec![obj([
+                    ("index", Json::from(0usize)),
+                    ("text", text),
+                    (
+                        "finish_reason",
+                        finish.map(Json::from).unwrap_or(Json::Null),
+                    ),
+                ])]),
+            ),
+        ])
+        .to_string()
+    };
+    let cancel = handle.cancel_token();
+    let id = handle.id();
+    for event in handle {
+        let (data, last) = match &event {
+            StreamEvent::Token(t) => {
+                (frame(id, Json::from(detokenize(&[t.token])), None), false)
+            }
+            StreamEvent::Finished(c) => {
+                (frame(id, Json::from(""), Some(openai_finish(c.finish))), true)
+            }
+        };
+        if write_chunk(&mut stream, &format!("data: {data}\n\n")).is_err() {
+            cancel.cancel();
+            return Ok(());
+        }
+        if last {
+            break;
+        }
+    }
+    let _ = write_chunk(&mut stream, "data: [DONE]\n\n");
     let _ = write!(stream, "0\r\n\r\n");
     let _ = stream.flush();
     Ok(())
@@ -358,17 +719,33 @@ fn route(
                 ]),
             ))
         }
-        ("POST", "/v1/generate") => match submit_to_engine(tx, body) {
-            Ok(handle) => match handle.wait() {
-                Ok(c) if c.finish == crate::api::FinishReason::Error => {
-                    let e = ServeError::Internal("engine failed mid-generation".into());
-                    Ok((e.http_status(), error_json(&e)))
-                }
-                Ok(c) => Ok((200, completion_json(&c))),
+        ("GET", "/v1/models") => Ok((
+            200,
+            obj([
+                ("object", Json::from("list")),
+                (
+                    "data",
+                    Json::Arr(vec![obj([
+                        ("id", Json::from("econoserve-pjrt")),
+                        ("object", Json::from("model")),
+                        ("owned_by", Json::from("econoserve")),
+                    ])]),
+                ),
+            ]),
+        )),
+        ("POST", "/v1/generate") => {
+            match parse_submit(body).and_then(|o| submit_to_engine(tx, o)) {
+                Ok(handle) => match handle.wait() {
+                    Ok(c) if c.finish == crate::api::FinishReason::Error => {
+                        let e = ServeError::Internal("engine failed mid-generation".into());
+                        Ok((e.http_status(), error_json(&e)))
+                    }
+                    Ok(c) => Ok((200, completion_json(&c))),
+                    Err(e) => Ok((e.http_status(), error_json(&e))),
+                },
                 Err(e) => Ok((e.http_status(), error_json(&e))),
-            },
-            Err(e) => Ok((e.http_status(), error_json(&e))),
-        },
+            }
+        }
         _ => Ok((
             404,
             obj([
@@ -379,7 +756,11 @@ fn route(
     }
 }
 
-fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
+fn respond(stream: TcpStream, status: u16, body: &str) -> Result<()> {
+    respond_typed(stream, status, "application/json", body)
+}
+
+fn respond_typed(mut stream: TcpStream, status: u16, ctype: &str, body: &str) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -392,7 +773,7 @@ fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
     };
     write!(
         stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     )?;
     stream.flush()?;
@@ -406,10 +787,23 @@ pub fn http_request(
     path: &str,
     body: &str,
 ) -> Result<(u16, String)> {
+    http_request_with_key(addr, method, path, body, None)
+}
+
+/// As [`http_request`], with an `x-api-key` header (rate-limiter tests).
+pub fn http_request_with_key(
+    addr: &std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+    api_key: Option<&str>,
+) -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr)?;
+    let key_header =
+        api_key.map(|k| format!("x-api-key: {k}\r\n")).unwrap_or_default();
     write!(
         stream,
-        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\n{key_header}Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     )?;
     stream.flush()?;

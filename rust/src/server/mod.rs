@@ -27,18 +27,19 @@
 pub mod http;
 
 use std::collections::VecDeque;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::api::{
     channel, AdmissionConfig, AdmissionController, Completion, EventSink, FinishReason,
-    RequestHandle, ServeError, SubmitOptions,
+    RateLimitConfig, RequestHandle, ServeError, SubmitOptions,
 };
 use crate::kvc::{Allocator, Demand, MaxAlloc, ReserveClass};
 use crate::ordering::{QueuePolicy, QueuedTask};
 use crate::runtime::PjrtModel;
+use crate::telemetry::{RequestLog, ServerMetrics};
 use crate::util::stats::Samples;
 
 /// Front-door configuration for the real serving path.
@@ -47,6 +48,10 @@ pub struct ServerConfig {
     /// Queue-ordering policy for slot admission (`QueuePolicy::by_name`).
     pub ordering: QueuePolicy,
     pub admission: AdmissionConfig,
+    /// Per-key token-bucket rate limiting at the HTTP front door
+    /// (default: off). Enforced by [`http::HttpServer`], not by
+    /// [`RealServer::submit`] — direct embedders own their own limits.
+    pub rate_limit: RateLimitConfig,
 }
 
 impl Default for ServerConfig {
@@ -54,6 +59,7 @@ impl Default for ServerConfig {
         ServerConfig {
             ordering: QueuePolicy::EconoServe,
             admission: AdmissionConfig::default(),
+            rate_limit: RateLimitConfig::default(),
         }
     }
 }
@@ -113,14 +119,20 @@ pub struct RealServer {
     /// as the simulation path.
     slot_leases: MaxAlloc,
     finished: Vec<Completion>,
-    n_rejected: usize,
-    decode_iters: u64,
-    occupancy_sum: u64,
     /// Throughput time base: anchored at the FIRST submit (not at
     /// construction, not at `run_to_completion`), so stats are correct
     /// for tick-/thread-driven use too.
     first_submit: Option<Instant>,
     next_id: u64,
+    /// Shared metric registry (the HTTP layer scrapes it via
+    /// `GET /metrics`); also the single source of truth for [`stats`]
+    /// (`Self::stats`) — the legacy side-car counters are gone.
+    tel: ServerMetrics,
+    /// Structured per-request event log (submit/first_token/finish),
+    /// timestamped against `origin`.
+    log: Arc<RequestLog>,
+    /// Epoch for request-log timestamps and the rate-limiter clock.
+    origin: Instant,
 }
 
 impl RealServer {
@@ -129,6 +141,18 @@ impl RealServer {
     }
 
     pub fn with_config(model: PjrtModel, cfg: ServerConfig) -> Self {
+        Self::with_telemetry(model, cfg, ServerMetrics::new(), Arc::new(RequestLog::default()))
+    }
+
+    /// Construct over an externally owned registry/log — how the HTTP
+    /// front-end shares one telemetry surface between the engine thread
+    /// (which records) and connection threads (which scrape/serve it).
+    pub fn with_telemetry(
+        model: PjrtModel,
+        cfg: ServerConfig,
+        tel: ServerMetrics,
+        log: Arc<RequestLog>,
+    ) -> Self {
         let n = model.dims.decode_slots;
         // The engine's prefill window is the authoritative prompt cap: a
         // looser configured cap would let prompts through that
@@ -148,12 +172,17 @@ impl RealServer {
             waiting: VecDeque::new(),
             slots: (0..n).map(|_| None).collect(),
             finished: Vec::new(),
-            n_rejected: 0,
-            decode_iters: 0,
-            occupancy_sum: 0,
             first_submit: None,
             next_id: 1,
+            tel,
+            log,
+            origin: Instant::now(),
         }
+    }
+
+    /// Seconds since server construction (request-log time base).
+    fn t_s(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
     }
 
     /// Requests waiting for a slot.
@@ -177,19 +206,49 @@ impl RealServer {
     /// never enters the queue.
     pub fn submit(&mut self, opts: SubmitOptions) -> Result<RequestHandle, ServeError> {
         if let Err(e) = self.admission.check(self.inflight(), &opts) {
-            self.n_rejected += 1;
+            self.tel.core.requests_rejected.inc();
+            self.log.log(0, self.t_s(), "reject", e.kind().to_string());
             return Err(e);
         }
         self.first_submit.get_or_insert_with(Instant::now);
         let id = self.next_id;
         self.next_id += 1;
         let (sink, handle) = channel(id);
+        self.log.log(
+            id,
+            self.t_s(),
+            "submit",
+            format!("prompt_len={} max_new={}", opts.prompt.len(), opts.max_new_tokens),
+        );
         self.waiting.push_back(Pending { id, submitted: Instant::now(), opts, sink });
         Ok(handle)
     }
 
     fn free_slot(&self) -> Option<usize> {
         self.slots.iter().position(|s| s.is_none())
+    }
+
+    /// Record a terminal outcome in the telemetry registry and the
+    /// structured request log. Successful finishes feed the latency
+    /// histograms; the same families the simulator records (see
+    /// `docs/metrics-dictionary.md`).
+    fn observe_finish(&self, c: &Completion) {
+        match c.finish {
+            FinishReason::Complete | FinishReason::LengthCap => {
+                self.tel.core.requests_done.inc();
+                if c.met_slo {
+                    self.tel.core.slo_hit.inc();
+                } else {
+                    self.tel.core.slo_miss.inc();
+                }
+                self.tel.core.request_latency.observe(c.latency_s);
+                self.tel.core.ttft.observe(c.ttft_s);
+                self.tel.core.tbt.observe(c.mean_tbt_s);
+            }
+            FinishReason::Cancelled => self.tel.core.requests_cancelled.inc(),
+            FinishReason::Rejected | FinishReason::Error => {}
+        }
+        self.log.log(c.id, self.t_s(), "finish", c.finish.as_str().to_string());
     }
 
     /// Retire a request that never reached a slot.
@@ -203,6 +262,7 @@ impl RealServer {
             mean_tbt_s: 0.0,
             met_slo: false,
         };
+        self.observe_finish(&c);
         p.sink.finish(c.clone());
         self.finished.push(c);
     }
@@ -222,6 +282,7 @@ impl RealServer {
             met_slo: finish.is_success() && latency_s <= opts.slo_budget,
             tokens,
         };
+        self.observe_finish(&c);
         sink.finish(c.clone());
         self.finished.push(c);
     }
@@ -290,6 +351,9 @@ impl RealServer {
             };
             let granted = self.slot_leases.admit(p.id as usize, demand, ReserveClass::Normal);
             debug_assert!(granted.ok(), "free slot without lease capacity");
+            self.tel.core.alloc_granted.inc();
+            self.tel.core.tokens_prefill.add(p.opts.prompt.len() as u64);
+            self.log.log(p.id, self.t_s(), "first_token", String::new());
             let first = PjrtModel::argmax(&logits);
             let now = Instant::now();
             let len = p.opts.prompt.len();
@@ -325,6 +389,7 @@ impl RealServer {
                 self.finish_slot(slot_idx, reason, now);
             }
         }
+        self.tel.core.queue_depth.set(self.waiting.len() as f64);
         Ok(())
     }
 
@@ -352,8 +417,15 @@ impl RealServer {
             return Ok(0);
         }
         let logits = self.model.decode_step(&lens, &toks)?;
-        self.decode_iters += 1;
-        self.occupancy_sum += self.slots.iter().filter(|s| s.is_some()).count() as u64;
+        let live = self.slots.iter().filter(|s| s.is_some()).count();
+        self.tel.core.iterations.inc();
+        self.tel.core.tokens_decode.add(live as u64);
+        self.tel.core.batch_occupancy.observe(live as f64);
+        // The real engine's KVC is its static slot layout: utilization is
+        // the occupied-slot fraction (the sim records the written-block
+        // fraction under the same family).
+        self.tel.core.kvc_utilization.observe(live as f64 / b.max(1) as f64);
+        self.tel.core.queue_depth.set(self.waiting.len() as f64);
         let now = Instant::now();
         let mut done = 0usize;
         for i in 0..b {
@@ -410,51 +482,54 @@ impl RealServer {
         Ok(&self.finished)
     }
 
+    /// Aggregate stats, read back from the shared telemetry registry —
+    /// the same cells `GET /metrics` exposes, so `/v1/stats` can never
+    /// drift from the Prometheus view. The JSON shape is unchanged;
+    /// counters are exact, means come from histogram sum/count, and the
+    /// p95 is the histogram's bucket-interpolated quantile (previously
+    /// an exact order statistic). `throughput_tps` counts every emitted
+    /// token — one per slot admission (the prefill's first token) plus
+    /// one per slot per decode iteration — cancelled streams included.
     pub fn stats(&self) -> ServeStats {
         let span = self
             .first_submit
             .map(|t| t.elapsed().as_secs_f64())
             .unwrap_or(0.0)
             .max(1e-9);
-        let mut lat = Samples::new();
-        let mut ttft = Samples::new();
-        let mut tbt = Samples::new();
-        let mut tokens = 0usize;
-        let mut ok = 0usize;
-        let mut completed = 0usize;
-        let mut cancelled = 0usize;
-        for c in &self.finished {
-            match c.finish {
-                FinishReason::Complete | FinishReason::LengthCap => {
-                    completed += 1;
-                    lat.push(c.latency_s);
-                    ttft.push(c.ttft_s);
-                    tbt.push(c.mean_tbt_s);
-                    tokens += c.tokens.len();
-                    ok += c.met_slo as usize;
-                }
-                FinishReason::Cancelled => cancelled += 1,
-                FinishReason::Rejected | FinishReason::Error => {}
-            }
-        }
+        let m = &self.tel.core;
+        let completed = m.requests_done.get() as usize;
+        let ok = m.slo_hit.get();
+        let emitted = m.alloc_granted.get() + m.tokens_decode.get();
         ServeStats {
             completed,
-            cancelled,
-            rejected: self.n_rejected,
+            cancelled: m.requests_cancelled.get() as usize,
+            rejected: m.requests_rejected.get() as usize,
             throughput_rps: completed as f64 / span,
-            throughput_tps: tokens as f64 / span,
-            mean_latency: lat.mean(),
-            p95_latency: lat.p95(),
-            mean_ttft: ttft.mean(),
-            mean_tbt: tbt.mean(),
+            throughput_tps: emitted as f64 / span,
+            mean_latency: m.request_latency.mean(),
+            p95_latency: m.request_latency.quantile(0.95),
+            mean_ttft: m.ttft.mean(),
+            mean_tbt: m.tbt.mean(),
             ssr: if completed == 0 { 0.0 } else { ok as f64 / completed as f64 },
-            decode_iterations: self.decode_iters,
-            mean_batch_occupancy: if self.decode_iters > 0 {
-                self.occupancy_sum as f64 / self.decode_iters as f64
-            } else {
-                0.0
-            },
+            decode_iterations: m.iterations.get(),
+            mean_batch_occupancy: m.batch_occupancy.mean(),
         }
+    }
+
+    /// The shared telemetry bundle (HTTP layer: scrape + rate-limit
+    /// counters).
+    pub fn telemetry(&self) -> &ServerMetrics {
+        &self.tel
+    }
+
+    /// Canonical Prometheus text of the server's registry.
+    pub fn metrics_text(&self) -> String {
+        self.tel.registry().render()
+    }
+
+    /// The structured per-request event log.
+    pub fn request_log(&self) -> &Arc<RequestLog> {
+        &self.log
     }
 
     /// Terminate every in-flight request with `FinishReason::Error` (the

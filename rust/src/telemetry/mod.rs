@@ -1,0 +1,656 @@
+//! Unified telemetry: one metric vocabulary for the simulator and the
+//! real HTTP server.
+//!
+//! The registry is std-only and `Send + Sync`: registration (interning a
+//! `(family, label-set)` pair to a dense series id) takes a mutex once,
+//! and returns a cheap `Clone`-able handle ([`Counter`], [`Gauge`],
+//! [`Histogram`]) whose hot path is a couple of atomic ops — no locks,
+//! no allocation, no hashing. That keeps instrumentation safe inside
+//! `World::apply_plan` (millions of iterations) and inside the HTTP
+//! server's per-connection threads alike.
+//!
+//! Exposition is Prometheus text format ([`Registry::render`]), rendered
+//! in a canonical order (families by name, series by sorted label set,
+//! histogram buckets by bound) so that equal metric states produce
+//! byte-identical text — the fleet equivalence tests pin exactly this.
+//! [`text::Snapshot`] parses the format back, merges snapshots (the
+//! fleet sums its replicas' registries in replica-id order; sweeps merge
+//! cells in cell order), and re-renders canonically.
+//!
+//! Sub-modules:
+//!  * [`text`] — Prometheus text encode/parse/merge ([`Snapshot`]).
+//!  * [`reqlog`] — bounded structured per-request event log.
+//!  * [`vocab`] — the pre-registered metric families shared by the sim
+//!    ([`SimMetrics`]) and the server ([`ServerMetrics`]); see
+//!    `docs/metrics-dictionary.md` for the full dictionary.
+//!
+//! Determinism contract: sim-side metric values are pure functions of
+//! (config, seed). Each replica `World` owns its own registry and
+//! updates it single-threaded; the fleet merges the rendered snapshots
+//! in replica-id order at finalize, so the merged text is bit-identical
+//! at any worker-thread count.
+
+pub mod reqlog;
+pub mod text;
+pub mod vocab;
+
+pub use reqlog::{RequestEvent, RequestLog};
+pub use text::Snapshot;
+pub use vocab::{FleetMetrics, ServerMetrics, SimMetrics};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Metric family kind (Prometheus `# TYPE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "counter" => Some(MetricKind::Counter),
+            "gauge" => Some(MetricKind::Gauge),
+            "histogram" => Some(MetricKind::Histogram),
+            _ => None,
+        }
+    }
+}
+
+/// A sorted, owned label set. Sorting makes the set canonical: the same
+/// labels in any order intern to the same series, and render order is
+/// deterministic.
+#[derive(Debug, Clone, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LabelSet(Vec<(String, String)>);
+
+impl LabelSet {
+    pub fn empty() -> Self {
+        LabelSet(Vec::new())
+    }
+
+    pub fn from_pairs(pairs: &[(&str, &str)]) -> Self {
+        let mut v: Vec<(String, String)> =
+            pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        v.sort();
+        LabelSet(v)
+    }
+
+    pub fn from_owned(mut pairs: Vec<(String, String)>) -> Self {
+        pairs.sort();
+        LabelSet(pairs)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn pairs(&self) -> &[(String, String)] {
+        &self.0
+    }
+
+    /// This set plus one more label (used for histogram `le`).
+    fn with(&self, key: &str, value: String) -> LabelSet {
+        let mut v = self.0.clone();
+        v.push((key.to_string(), value));
+        v.sort();
+        LabelSet(v)
+    }
+
+    /// Render as `{k1="v1",k2="v2"}`, or the empty string for no labels.
+    pub fn render(&self) -> String {
+        if self.0.is_empty() {
+            return String::new();
+        }
+        let inner: Vec<String> = self
+            .0
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+            .collect();
+        format!("{{{}}}", inner.join(","))
+    }
+}
+
+/// Escape a label value for the Prometheus text format.
+pub(crate) fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape HELP text (backslash and newline only, per the exposition spec).
+pub(crate) fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a sample value the way both the registry and [`Snapshot`]
+/// render it, so a parse→render round trip is byte-identical. Rust's
+/// shortest-roundtrip `Display` for f64 is deterministic.
+pub(crate) fn fmt_value(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else if v.is_nan() {
+        "NaN".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Fixed histogram bucket bounds (upper edges, excluding `+Inf`).
+#[derive(Debug, Clone)]
+pub struct Buckets(Arc<[f64]>);
+
+impl Buckets {
+    /// `count` exponential bucket bounds: start, start*factor, ...
+    /// Panics on a non-positive start or a factor <= 1 — bucket layouts
+    /// are compile-time decisions, not data.
+    pub fn exponential(start: f64, factor: f64, count: usize) -> Self {
+        assert!(start > 0.0 && factor > 1.0 && count > 0, "bad exponential buckets");
+        let mut v = Vec::with_capacity(count);
+        let mut b = start;
+        for _ in 0..count {
+            v.push(b);
+            b *= factor;
+        }
+        Buckets(v.into())
+    }
+
+    /// `count` linear bucket bounds: start, start+width, ...
+    pub fn linear(start: f64, width: f64, count: usize) -> Self {
+        assert!(width > 0.0 && count > 0, "bad linear buckets");
+        let v: Vec<f64> = (0..count).map(|i| start + width * i as f64).collect();
+        Buckets(v.into())
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cells: the shared atomic state behind each handle.
+
+#[derive(Debug, Default)]
+struct CounterCell(AtomicU64);
+
+#[derive(Debug, Default)]
+struct GaugeCell(AtomicU64); // f64 bits
+
+impl GaugeCell {
+    fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    fn add(&self, d: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+struct HistogramCell {
+    bounds: Arc<[f64]>,
+    /// Non-cumulative per-bucket counts; last slot is the +Inf overflow.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: GaugeCell, // CAS-add f64
+}
+
+impl HistogramCell {
+    fn new(bounds: Arc<[f64]>) -> Self {
+        let n = bounds.len() + 1;
+        HistogramCell {
+            bounds,
+            buckets: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: GaugeCell::default(),
+        }
+    }
+
+    fn observe(&self, v: f64) {
+        let idx = self.bounds.partition_point(|b| v > *b);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.add(v);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Handles: pre-registered, Clone, lock-free hot path.
+
+/// Monotone integer counter.
+#[derive(Debug, Clone)]
+pub struct Counter {
+    cell: Arc<CounterCell>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.cell.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value.
+#[derive(Debug, Clone)]
+pub struct Gauge {
+    cell: Arc<GaugeCell>,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.cell.set(v);
+    }
+
+    pub fn add(&self, d: f64) {
+        self.cell.add(d);
+    }
+
+    pub fn get(&self) -> f64 {
+        self.cell.get()
+    }
+}
+
+/// Fixed-bucket histogram.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    cell: Arc<HistogramCell>,
+}
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        self.cell.observe(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.cell.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.cell.sum.get()
+    }
+
+    /// Mean of all observations (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { 0.0 } else { self.sum() / n as f64 }
+    }
+
+    /// Approximate quantile by linear interpolation inside the bucket
+    /// holding the q-th observation. Clamped to the last finite bound for
+    /// overflow observations; 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.cell.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            if cum + n >= target {
+                let lower = if i == 0 { 0.0 } else { self.cell.bounds[i - 1] };
+                let upper = match self.cell.bounds.get(i) {
+                    Some(u) => *u,
+                    None => return self.cell.bounds.last().copied().unwrap_or(0.0),
+                };
+                let frac = (target - cum) as f64 / n as f64;
+                return lower + (upper - lower) * frac;
+            }
+            cum += n;
+        }
+        self.cell.bounds.last().copied().unwrap_or(0.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry.
+
+#[derive(Debug)]
+enum CellRef {
+    Counter(Arc<CounterCell>),
+    Gauge(Arc<GaugeCell>),
+    Histogram(Arc<HistogramCell>),
+}
+
+#[derive(Debug)]
+struct Series {
+    /// Dense id in registration order (diagnostics / log correlation).
+    #[allow(dead_code)]
+    id: usize,
+    cell: CellRef,
+}
+
+#[derive(Debug)]
+struct Family {
+    kind: MetricKind,
+    help: String,
+    bounds: Option<Arc<[f64]>>,
+    series: BTreeMap<LabelSet, Series>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    families: BTreeMap<String, Family>,
+    next_id: usize,
+}
+
+/// The metric registry: interns `(family, labels)` pairs and renders the
+/// whole state as canonical Prometheus text.
+///
+/// Registering the same family+labels twice returns a handle to the same
+/// underlying series, so independent components can share a series by
+/// name. Registering a name with a different kind panics — metric names
+/// are a compile-time vocabulary (`telemetry::vocab`), not data.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry::default())
+    }
+
+    fn family<'a>(
+        inner: &'a mut Inner,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+        bounds: Option<Arc<[f64]>>,
+    ) -> &'a mut Family {
+        let fam = inner.families.entry(name.to_string()).or_insert_with(|| Family {
+            kind,
+            help: help.to_string(),
+            bounds: bounds.clone(),
+            series: BTreeMap::new(),
+        });
+        assert!(
+            fam.kind == kind,
+            "metric family '{name}' re-registered as {} (was {})",
+            kind.as_str(),
+            fam.kind.as_str()
+        );
+        fam
+    }
+
+    /// Register (or look up) a counter series.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        let ls = LabelSet::from_pairs(labels);
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        let fam = Self::family(&mut inner, name, help, MetricKind::Counter, None);
+        let series = fam.series.entry(ls).or_insert_with(|| Series {
+            id,
+            cell: CellRef::Counter(Arc::new(CounterCell::default())),
+        });
+        let cell = match &series.cell {
+            CellRef::Counter(c) => c.clone(),
+            _ => unreachable!("kind checked above"),
+        };
+        if series.id == id {
+            inner.next_id += 1;
+        }
+        Counter { cell }
+    }
+
+    /// Register (or look up) a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        let ls = LabelSet::from_pairs(labels);
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        let fam = Self::family(&mut inner, name, help, MetricKind::Gauge, None);
+        let series = fam.series.entry(ls).or_insert_with(|| Series {
+            id,
+            cell: CellRef::Gauge(Arc::new(GaugeCell::default())),
+        });
+        let cell = match &series.cell {
+            CellRef::Gauge(c) => c.clone(),
+            _ => unreachable!("kind checked above"),
+        };
+        if series.id == id {
+            inner.next_id += 1;
+        }
+        Gauge { cell }
+    }
+
+    /// Register (or look up) a histogram series. The bucket layout is
+    /// fixed at first registration; later registrations reuse it.
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        buckets: Buckets,
+        labels: &[(&str, &str)],
+    ) -> Histogram {
+        let ls = LabelSet::from_pairs(labels);
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        let fam =
+            Self::family(&mut inner, name, help, MetricKind::Histogram, Some(buckets.0.clone()));
+        let bounds = fam.bounds.clone().expect("histogram family has bounds");
+        let series = fam.series.entry(ls).or_insert_with(|| Series {
+            id,
+            cell: CellRef::Histogram(Arc::new(HistogramCell::new(bounds))),
+        });
+        let cell = match &series.cell {
+            CellRef::Histogram(c) => c.clone(),
+            _ => unreachable!("kind checked above"),
+        };
+        if series.id == id {
+            inner.next_id += 1;
+        }
+        Histogram { cell }
+    }
+
+    /// Number of interned series (dense-id high-water mark).
+    pub fn series_count(&self) -> usize {
+        self.inner.lock().unwrap().next_id
+    }
+
+    /// Render the whole registry as canonical Prometheus text: families
+    /// in name order, series in label-set order, histogram buckets
+    /// cumulative and bound-ordered with `le` in its sorted label slot.
+    /// Equal metric states render to byte-identical text.
+    pub fn render(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in &inner.families {
+            out.push_str(&format!("# HELP {name} {}\n", escape_help(&fam.help)));
+            out.push_str(&format!("# TYPE {name} {}\n", fam.kind.as_str()));
+            for (ls, series) in &fam.series {
+                match &series.cell {
+                    CellRef::Counter(c) => {
+                        let v = c.0.load(Ordering::Relaxed);
+                        out.push_str(&format!("{name}{} {}\n", ls.render(), fmt_value(v as f64)));
+                    }
+                    CellRef::Gauge(g) => {
+                        out.push_str(&format!("{name}{} {}\n", ls.render(), fmt_value(g.get())));
+                    }
+                    CellRef::Histogram(h) => {
+                        let mut cum = 0u64;
+                        for (i, b) in h.buckets.iter().enumerate() {
+                            cum += b.load(Ordering::Relaxed);
+                            let le = match h.bounds.get(i) {
+                                Some(bound) => fmt_value(*bound),
+                                None => "+Inf".to_string(),
+                            };
+                            let bls = ls.with("le", le);
+                            out.push_str(&format!(
+                                "{name}_bucket{} {}\n",
+                                bls.render(),
+                                fmt_value(cum as f64)
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "{name}_sum{} {}\n",
+                            ls.render(),
+                            fmt_value(h.sum.get())
+                        ));
+                        let n = h.count.load(Ordering::Relaxed);
+                        out.push_str(&format!(
+                            "{name}_count{} {}\n",
+                            ls.render(),
+                            fmt_value(n as f64)
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_histogram_basics() {
+        let reg = Registry::new();
+        let c = reg.counter("econoserve_test_total", "test counter", &[("k", "a")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same name+labels intern to the same series.
+        let c2 = reg.counter("econoserve_test_total", "test counter", &[("k", "a")]);
+        c2.inc();
+        assert_eq!(c.get(), 6);
+
+        let g = reg.gauge("econoserve_test_gauge", "test gauge", &[]);
+        g.set(2.5);
+        g.add(-0.5);
+        assert!((g.get() - 2.0).abs() < 1e-12);
+
+        let h = reg.histogram(
+            "econoserve_test_seconds",
+            "test histogram",
+            Buckets::exponential(0.1, 2.0, 3), // 0.1, 0.2, 0.4
+            &[],
+        );
+        h.observe(0.05); // bucket 0
+        h.observe(0.2); // exact bound -> le="0.2" (bucket 1)
+        h.observe(9.0); // +Inf overflow
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 9.25).abs() < 1e-12);
+        assert!((h.mean() - 9.25 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_exact_bound_is_inclusive() {
+        let reg = Registry::new();
+        let h = reg.histogram("h", "x", Buckets::linear(1.0, 1.0, 3), &[]);
+        h.observe(2.0); // le="2" must include it
+        let text = reg.render();
+        assert!(text.contains("h_bucket{le=\"1\"} 0"), "{text}");
+        assert!(text.contains("h_bucket{le=\"2\"} 1"), "{text}");
+        assert!(text.contains("h_bucket{le=\"+Inf\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn render_is_canonical_and_label_order_independent() {
+        let mk = |swap: bool| {
+            let reg = Registry::new();
+            let labels: &[(&str, &str)] =
+                if swap { &[("b", "2"), ("a", "1")] } else { &[("a", "1"), ("b", "2")] };
+            reg.counter("z_total", "last", labels).add(3);
+            reg.gauge("a_gauge", "first", &[]).set(1.5);
+            reg.render()
+        };
+        let t1 = mk(false);
+        let t2 = mk(true);
+        assert_eq!(t1, t2);
+        // Families sorted by name: a_gauge before z_total.
+        let a = t1.find("a_gauge").unwrap();
+        let z = t1.find("z_total").unwrap();
+        assert!(a < z);
+        assert!(t1.contains("z_total{a=\"1\",b=\"2\"} 3"), "{t1}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Registry::new();
+        reg.counter("c_total", "c", &[("k", "a\"b\\c\nd")]).inc();
+        let text = reg.render();
+        assert!(text.contains("c_total{k=\"a\\\"b\\\\c\\nd\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn quantile_interpolates_and_handles_edges() {
+        let reg = Registry::new();
+        let h = reg.histogram("q", "x", Buckets::linear(1.0, 1.0, 4), &[]);
+        assert_eq!(h.quantile(0.95), 0.0, "empty histogram");
+        for _ in 0..100 {
+            h.observe(0.5); // all in bucket [0, 1]
+        }
+        let q50 = h.quantile(0.5);
+        assert!(q50 > 0.0 && q50 <= 1.0, "q50={q50}");
+        h.observe(100.0); // overflow clamps to last finite bound
+        assert_eq!(h.quantile(1.0), 4.0);
+    }
+
+    #[test]
+    fn registry_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Registry>();
+        assert_send_sync::<Counter>();
+        assert_send_sync::<Gauge>();
+        assert_send_sync::<Histogram>();
+    }
+
+    #[test]
+    fn dense_ids_count_series_not_lookups() {
+        let reg = Registry::new();
+        reg.counter("a_total", "a", &[("k", "1")]);
+        reg.counter("a_total", "a", &[("k", "2")]);
+        reg.counter("a_total", "a", &[("k", "1")]); // lookup, not new
+        reg.gauge("g", "g", &[]);
+        assert_eq!(reg.series_count(), 3);
+    }
+}

@@ -1,0 +1,192 @@
+//! Bounded structured per-request event log.
+//!
+//! Every request that crosses the serving surface gets lifecycle events
+//! keyed by its engine-assigned request id: `submit`, `first_token`,
+//! `finish`, `reject`, ... Events live in a fixed-capacity ring (oldest
+//! dropped first) so the log is safe to leave on under sustained load,
+//! and render as one JSON object per line (`render_jsonl`) — the
+//! structured-log shape scrapers and `grep` both like.
+//!
+//! The log is `Send + Sync` (a mutexed ring); pushes are O(1) amortized
+//! and never allocate beyond the event's own strings.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// One structured event in a request's lifecycle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestEvent {
+    /// Engine-assigned request id.
+    pub id: u64,
+    /// Seconds since the log's owner started (monotonic, caller-supplied
+    /// so simulated and wall clocks both work).
+    pub t_s: f64,
+    /// Lifecycle stage: `submit`, `first_token`, `finish`, `reject`,
+    /// `cancel`, `rate_limited`, ...
+    pub stage: &'static str,
+    /// Free-form detail (finish reason, token counts, client key, ...).
+    pub detail: String,
+}
+
+impl RequestEvent {
+    /// Render as one JSON object (stable key order).
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"id\":{},\"t_s\":{:.6},\"stage\":\"{}\",\"detail\":\"{}\"}}",
+            self.id,
+            self.t_s,
+            self.stage,
+            escape_json(&self.detail)
+        )
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Fixed-capacity, thread-safe ring of [`RequestEvent`]s.
+#[derive(Debug)]
+pub struct RequestLog {
+    inner: Mutex<Ring>,
+}
+
+#[derive(Debug)]
+struct Ring {
+    cap: usize,
+    events: VecDeque<RequestEvent>,
+    dropped: u64,
+}
+
+impl RequestLog {
+    /// A log that keeps at most `cap` events (cap 0 disables storage but
+    /// still counts drops).
+    pub fn with_capacity(cap: usize) -> Self {
+        RequestLog { inner: Mutex::new(Ring { cap, events: VecDeque::new(), dropped: 0 }) }
+    }
+
+    /// Record one lifecycle event.
+    pub fn log(&self, id: u64, t_s: f64, stage: &'static str, detail: impl Into<String>) {
+        let ev = RequestEvent { id, t_s, stage, detail: detail.into() };
+        let mut ring = self.inner.lock().unwrap();
+        while ring.events.len() >= ring.cap.max(1) {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        if ring.cap > 0 {
+            ring.events.push_back(ev);
+        } else {
+            ring.dropped += 1;
+        }
+    }
+
+    /// The most recent `n` events, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<RequestEvent> {
+        let ring = self.inner.lock().unwrap();
+        let skip = ring.events.len().saturating_sub(n);
+        ring.events.iter().skip(skip).cloned().collect()
+    }
+
+    /// All retained events for one request id, oldest first.
+    pub fn for_request(&self, id: u64) -> Vec<RequestEvent> {
+        let ring = self.inner.lock().unwrap();
+        ring.events.iter().filter(|e| e.id == id).cloned().collect()
+    }
+
+    /// Events evicted (or discarded by a zero-capacity log) so far.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render the retained window as JSON lines, oldest first.
+    pub fn render_jsonl(&self) -> String {
+        let ring = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for e in &ring.events {
+            out.push_str(&e.to_json_line());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl Default for RequestLog {
+    fn default() -> Self {
+        RequestLog::with_capacity(4096)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let log = RequestLog::with_capacity(3);
+        for i in 0..5u64 {
+            log.log(i, i as f64, "submit", format!("n{i}"));
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped(), 2);
+        let recent = log.recent(10);
+        assert_eq!(recent.first().unwrap().id, 2, "oldest surviving event");
+        assert_eq!(recent.last().unwrap().id, 4);
+    }
+
+    #[test]
+    fn per_request_filter_keeps_order() {
+        let log = RequestLog::with_capacity(16);
+        log.log(7, 0.0, "submit", "prompt_len=4");
+        log.log(8, 0.1, "submit", "prompt_len=9");
+        log.log(7, 0.5, "first_token", "");
+        log.log(7, 1.0, "finish", "reason=complete tokens=12");
+        let evs = log.for_request(7);
+        assert_eq!(evs.len(), 3);
+        assert_eq!(
+            evs.iter().map(|e| e.stage).collect::<Vec<_>>(),
+            vec!["submit", "first_token", "finish"]
+        );
+        assert!(log.for_request(99).is_empty());
+    }
+
+    #[test]
+    fn jsonl_is_escaped_and_line_per_event() {
+        let log = RequestLog::with_capacity(4);
+        log.log(1, 0.25, "finish", "said \"hi\"\nback\\slash");
+        let text = log.render_jsonl();
+        assert_eq!(text.lines().count(), 1);
+        assert!(
+            text.contains("\"detail\":\"said \\\"hi\\\"\\nback\\\\slash\""),
+            "{text}"
+        );
+        assert!(text.starts_with("{\"id\":1,\"t_s\":0.250000,"), "{text}");
+    }
+
+    #[test]
+    fn zero_capacity_log_discards_everything() {
+        let log = RequestLog::with_capacity(0);
+        log.log(1, 0.0, "submit", "");
+        assert!(log.is_empty());
+        assert_eq!(log.dropped(), 1);
+    }
+}

@@ -1,0 +1,426 @@
+//! Prometheus text-format parsing, merging, and canonical re-rendering.
+//!
+//! [`Registry::render`](super::Registry::render) produces the canonical
+//! text; [`Snapshot::parse`] reads it back into a value form that can be
+//! merged (summing samples — this is how the fleet combines its
+//! replicas' registries in replica-id order, and how a sweep combines
+//! its cells in cell order) and re-rendered byte-identically. The
+//! parse→render round trip doubles as the `promlint` validity check in
+//! `scripts/check.sh`.
+//!
+//! Merge semantics are uniform addition: counters and histogram
+//! `_bucket`/`_sum`/`_count` samples sum exactly (cumulative bucket
+//! counts stay cumulative under addition), and gauges sum too — the one
+//! gauge in the shared vocabulary (`econoserve_queue_depth`) reads as a
+//! fleet-wide total when summed across replicas.
+
+use std::collections::BTreeMap;
+
+use super::{escape_help, fmt_value, LabelSet, MetricKind};
+
+#[derive(Debug, Clone)]
+struct Meta {
+    kind: MetricKind,
+    help: String,
+}
+
+/// A parsed metric exposition: family metadata plus flat samples.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    metas: BTreeMap<String, Meta>,
+    samples: BTreeMap<(String, LabelSet), f64>,
+}
+
+impl Snapshot {
+    /// Parse Prometheus text. Strict: every sample must belong to a
+    /// family announced by a `# TYPE` line (histogram samples may use
+    /// the `_bucket`/`_sum`/`_count` suffixes of a histogram family).
+    pub fn parse(text: &str) -> Result<Snapshot, String> {
+        let mut snap = Snapshot::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| format!("line {}: {msg}: {line}", lineno + 1);
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let (name, help) = rest.split_once(' ').unwrap_or((rest, ""));
+                let entry = snap.metas.entry(name.to_string()).or_insert(Meta {
+                    kind: MetricKind::Gauge,
+                    help: String::new(),
+                });
+                entry.help = unescape_help(help);
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let (name, kind_s) =
+                    rest.split_once(' ').ok_or_else(|| err("malformed TYPE line"))?;
+                let kind =
+                    MetricKind::parse(kind_s.trim()).ok_or_else(|| err("unknown metric type"))?;
+                snap.metas.entry(name.to_string()).or_insert(Meta {
+                    kind,
+                    help: String::new(),
+                }).kind = kind;
+                continue;
+            }
+            if line.starts_with('#') {
+                continue; // other comments
+            }
+            let (name, labels, value) = parse_sample(line).map_err(|m| err(&m))?;
+            if snap.family_of(&name).is_none() {
+                return Err(err(&format!("sample '{name}' has no # TYPE family")));
+            }
+            *snap.samples.entry((name, labels)).or_insert(0.0) += value;
+        }
+        Ok(snap)
+    }
+
+    /// The family a sample name belongs to, honoring histogram suffixes.
+    fn family_of(&self, sample: &str) -> Option<&str> {
+        if let Some((name, meta)) = self.metas.get_key_value(sample) {
+            // A histogram family's own name is not a valid sample name.
+            if meta.kind != MetricKind::Histogram {
+                return Some(name);
+            }
+        }
+        for suffix in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = sample.strip_suffix(suffix) {
+                if let Some((name, meta)) = self.metas.get_key_value(base) {
+                    if meta.kind == MetricKind::Histogram {
+                        return Some(name);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Add every sample of `other` into this snapshot. Family kinds must
+    /// agree; families unique to either side are unioned.
+    pub fn merge(&mut self, other: &Snapshot) -> Result<(), String> {
+        for (name, meta) in &other.metas {
+            match self.metas.get(name) {
+                Some(mine) if mine.kind != meta.kind => {
+                    return Err(format!(
+                        "family '{name}' kind mismatch: {} vs {}",
+                        mine.kind.as_str(),
+                        meta.kind.as_str()
+                    ));
+                }
+                Some(_) => {}
+                None => {
+                    self.metas.insert(name.clone(), meta.clone());
+                }
+            }
+        }
+        for ((name, ls), v) in &other.samples {
+            *self.samples.entry((name.clone(), ls.clone())).or_insert(0.0) += v;
+        }
+        Ok(())
+    }
+
+    /// Look up one sample value (for reconciliation tests). For
+    /// histograms pass the suffixed sample name (`..._count`).
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.samples.get(&(name.to_string(), LabelSet::from_pairs(labels))).copied()
+    }
+
+    pub fn sample_count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn family_names(&self) -> Vec<&str> {
+        self.metas.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Render canonically — the same ordering rules as
+    /// [`Registry::render`](super::Registry::render), so that
+    /// `Snapshot::parse(reg.render()).render() == reg.render()`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, meta) in &self.metas {
+            out.push_str(&format!("# HELP {name} {}\n", escape_help(&meta.help)));
+            out.push_str(&format!("# TYPE {name} {}\n", meta.kind.as_str()));
+            match meta.kind {
+                MetricKind::Counter | MetricKind::Gauge => {
+                    for ((sname, ls), v) in self.samples.range(
+                        (name.clone(), LabelSet::empty())..=(name.clone(), max_label_set()),
+                    ) {
+                        debug_assert_eq!(sname, name);
+                        out.push_str(&format!("{name}{} {}\n", ls.render(), fmt_value(*v)));
+                    }
+                }
+                MetricKind::Histogram => self.render_histogram(name, &mut out),
+            }
+        }
+        out
+    }
+
+    fn render_histogram(&self, name: &str, out: &mut String) {
+        // Group bucket/sum/count samples by their base label set (the
+        // set minus `le`), then emit per base set: buckets by bound,
+        // sum, count — matching the registry's per-series order.
+        #[derive(Default)]
+        struct SeriesAcc {
+            buckets: Vec<(f64, LabelSet, f64)>, // (bound, full labels, value)
+            sum: Option<f64>,
+            count: Option<f64>,
+        }
+        let mut by_base: BTreeMap<LabelSet, SeriesAcc> = BTreeMap::new();
+        let collect = |snap: &Snapshot, sample: String| -> Vec<(LabelSet, f64)> {
+            snap.samples
+                .range((sample.clone(), LabelSet::empty())..=(sample, max_label_set()))
+                .map(|((_, ls), v)| (ls.clone(), *v))
+                .collect()
+        };
+        for (ls, v) in collect(self, format!("{name}_bucket")) {
+            let mut base = Vec::new();
+            let mut bound = f64::INFINITY;
+            for (k, val) in ls.pairs() {
+                if k == "le" {
+                    bound = parse_value(val).unwrap_or(f64::INFINITY);
+                } else {
+                    base.push((k.clone(), val.clone()));
+                }
+            }
+            by_base
+                .entry(LabelSet::from_owned(base))
+                .or_default()
+                .buckets
+                .push((bound, ls, v));
+        }
+        for (ls, v) in collect(self, format!("{name}_sum")) {
+            by_base.entry(ls).or_default().sum = Some(v);
+        }
+        for (ls, v) in collect(self, format!("{name}_count")) {
+            by_base.entry(ls).or_default().count = Some(v);
+        }
+        for (base, mut acc) in by_base {
+            acc.buckets.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+            for (_, ls, v) in &acc.buckets {
+                out.push_str(&format!("{name}_bucket{} {}\n", ls.render(), fmt_value(*v)));
+            }
+            if let Some(v) = acc.sum {
+                out.push_str(&format!("{name}_sum{} {}\n", base.render(), fmt_value(v)));
+            }
+            if let Some(v) = acc.count {
+                out.push_str(&format!("{name}_count{} {}\n", base.render(), fmt_value(v)));
+            }
+        }
+    }
+}
+
+/// An upper bound for `BTreeMap::range` over label sets of one sample
+/// name: no real label set sorts above a single `\u{10FFFF}` key.
+fn max_label_set() -> LabelSet {
+    LabelSet::from_owned(vec![("\u{10FFFF}".to_string(), String::new())])
+}
+
+fn unescape_help(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn parse_value(s: &str) -> Result<f64, String> {
+    match s {
+        "+Inf" | "Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        _ => s.parse::<f64>().map_err(|_| format!("bad value '{s}'")),
+    }
+}
+
+/// Parse one sample line: `name{k="v",...} value` or `name value`.
+fn parse_sample(line: &str) -> Result<(String, LabelSet, f64), String> {
+    let (head, value_s) = match line.find('{') {
+        Some(brace) => {
+            let close = line.rfind('}').ok_or("unterminated label set")?;
+            if close < brace {
+                return Err("unterminated label set".to_string());
+            }
+            let name = &line[..brace];
+            let labels = &line[brace + 1..close];
+            let rest = line[close + 1..].trim();
+            return Ok((
+                name.to_string(),
+                parse_labels(labels)?,
+                parse_value(rest)?,
+            ));
+        }
+        None => {
+            let (name, v) = line
+                .split_once(char::is_whitespace)
+                .ok_or("sample line without value")?;
+            (name, v.trim())
+        }
+    };
+    Ok((head.to_string(), LabelSet::empty(), parse_value(value_s)?))
+}
+
+fn parse_labels(s: &str) -> Result<LabelSet, String> {
+    let mut pairs = Vec::new();
+    let mut chars = s.chars().peekable();
+    loop {
+        // Skip separators / trailing comma.
+        while matches!(chars.peek(), Some(',') | Some(' ')) {
+            chars.next();
+        }
+        if chars.peek().is_none() {
+            break;
+        }
+        let mut key = String::new();
+        for c in chars.by_ref() {
+            if c == '=' {
+                break;
+            }
+            key.push(c);
+        }
+        if chars.next() != Some('"') {
+            return Err(format!("label '{key}' value not quoted"));
+        }
+        let mut value = String::new();
+        let mut closed = false;
+        while let Some(c) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some('n') => value.push('\n'),
+                    Some('\\') => value.push('\\'),
+                    Some('"') => value.push('"'),
+                    Some(other) => {
+                        value.push('\\');
+                        value.push(other);
+                    }
+                    None => return Err("dangling escape in label value".to_string()),
+                },
+                '"' => {
+                    closed = true;
+                    break;
+                }
+                c => value.push(c),
+            }
+        }
+        if !closed {
+            return Err(format!("label '{key}' value not terminated"));
+        }
+        pairs.push((key.trim().to_string(), value));
+    }
+    Ok(LabelSet::from_owned(pairs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Buckets, Registry};
+
+    fn sample_registry() -> std::sync::Arc<Registry> {
+        let reg = Registry::new();
+        reg.counter("econoserve_requests_total", "requests", &[("outcome", "done")]).add(7);
+        reg.counter("econoserve_requests_total", "requests", &[("outcome", "rejected")]).add(2);
+        reg.gauge("econoserve_queue_depth", "queued requests", &[]).set(3.0);
+        let h = reg.histogram(
+            "econoserve_request_latency_seconds",
+            "latency",
+            Buckets::exponential(0.5, 2.0, 3),
+            &[],
+        );
+        h.observe(0.4);
+        h.observe(1.7);
+        h.observe(64.0);
+        reg
+    }
+
+    #[test]
+    fn parse_render_round_trips_registry_text() {
+        let text = sample_registry().render();
+        let snap = Snapshot::parse(&text).expect("valid exposition");
+        assert_eq!(snap.render(), text);
+    }
+
+    #[test]
+    fn value_lookup_and_family_names() {
+        let snap = Snapshot::parse(&sample_registry().render()).unwrap();
+        assert_eq!(snap.value("econoserve_requests_total", &[("outcome", "done")]), Some(7.0));
+        assert_eq!(snap.value("econoserve_request_latency_seconds_count", &[]), Some(3.0));
+        assert_eq!(snap.value("econoserve_queue_depth", &[]), Some(3.0));
+        assert_eq!(snap.value("econoserve_requests_total", &[("outcome", "nope")]), None);
+        assert_eq!(
+            snap.family_names(),
+            vec![
+                "econoserve_queue_depth",
+                "econoserve_request_latency_seconds",
+                "econoserve_requests_total"
+            ]
+        );
+    }
+
+    #[test]
+    fn merge_sums_counters_histograms_and_gauges() {
+        let a_text = sample_registry().render();
+        let mut a = Snapshot::parse(&a_text).unwrap();
+        let b = Snapshot::parse(&a_text).unwrap();
+        a.merge(&b).unwrap();
+        assert_eq!(a.value("econoserve_requests_total", &[("outcome", "done")]), Some(14.0));
+        assert_eq!(a.value("econoserve_request_latency_seconds_count", &[]), Some(6.0));
+        assert_eq!(a.value("econoserve_queue_depth", &[]), Some(6.0));
+        // Cumulative buckets stay cumulative under addition: the +Inf
+        // bucket equals the merged count.
+        assert_eq!(
+            a.value("econoserve_request_latency_seconds_bucket", &[("le", "+Inf")]),
+            Some(6.0)
+        );
+        // Merged text still round-trips.
+        let round = Snapshot::parse(&a.render()).unwrap().render();
+        assert_eq!(round, a.render());
+    }
+
+    #[test]
+    fn merge_order_is_deterministic() {
+        let reg_a = Registry::new();
+        reg_a.counter("x_total", "x", &[]).add(1);
+        let reg_b = Registry::new();
+        reg_b.counter("x_total", "x", &[]).add(41);
+        let parse = |r: &Registry| Snapshot::parse(&r.render()).unwrap();
+        let mut ab = parse(&reg_a);
+        ab.merge(&parse(&reg_b)).unwrap();
+        let mut ba = parse(&reg_b);
+        ba.merge(&parse(&reg_a)).unwrap();
+        assert_eq!(ab.render(), ba.render());
+        assert_eq!(ab.value("x_total", &[]), Some(42.0));
+    }
+
+    #[test]
+    fn strict_parse_rejects_orphans_and_bad_lines() {
+        assert!(Snapshot::parse("no_type_metric 1\n").is_err());
+        assert!(Snapshot::parse("# TYPE x counter\nx{k=\"v} 1\n").is_err());
+        assert!(Snapshot::parse("# TYPE x counter\nx notanumber\n").is_err());
+        assert!(Snapshot::parse("# TYPE x zigzag\n").is_err());
+        // A histogram family's own bare name is not a sample name.
+        assert!(Snapshot::parse("# TYPE h histogram\nh 1\n").is_err());
+    }
+
+    #[test]
+    fn escaped_labels_round_trip() {
+        let reg = Registry::new();
+        reg.counter("c_total", "c", &[("k", "a\"b\\c\nd")]).inc();
+        let text = reg.render();
+        let snap = Snapshot::parse(&text).unwrap();
+        assert_eq!(snap.value("c_total", &[("k", "a\"b\\c\nd")]), Some(1.0));
+        assert_eq!(snap.render(), text);
+    }
+}

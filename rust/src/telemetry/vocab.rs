@@ -1,0 +1,376 @@
+//! The pre-registered metric vocabulary shared by the simulator and the
+//! real server — one set of family names, documented exhaustively in
+//! `docs/metrics-dictionary.md`.
+//!
+//! Three bundles over the same [`Registry`]:
+//!  * [`SimMetrics`] — what one `World` (sim) or one `RealServer`
+//!    (server) records per iteration / per request. Both paths register
+//!    the same families so a sweep's `--metrics-out` and a live
+//!    `GET /metrics` expose one vocabulary.
+//!  * [`FleetMetrics`] — fleet-level counters (faults, reroutes, boots)
+//!    written once at fleet finalize from the authoritative
+//!    `FaultTally`/summary, so counter totals reconcile exactly with
+//!    `FleetSummary`.
+//!  * [`ServerMetrics`] — the HTTP-only surface (per-route request
+//!    counts, rate-limit rejections) layered on top of a [`SimMetrics`]
+//!    bundle.
+//!
+//! Handles are registered once and cloned into the hot path; nothing
+//! here locks or allocates after construction (except the per-route
+//! HTTP counter, which interns lazily on first sight of a route).
+
+use std::sync::Arc;
+
+use super::{Buckets, Counter, Gauge, Histogram, Registry};
+
+/// Core serving metrics recorded by both execution paths.
+#[derive(Debug, Clone)]
+pub struct SimMetrics {
+    registry: Arc<Registry>,
+    /// `econoserve_iterations_total` — engine iterations executed.
+    pub iterations: Counter,
+    /// `econoserve_tokens_total{phase="prefill"|"decode"}`.
+    pub tokens_prefill: Counter,
+    pub tokens_decode: Counter,
+    /// `econoserve_requests_total{outcome="done"|"rejected"|"cancelled"}`.
+    pub requests_done: Counter,
+    pub requests_rejected: Counter,
+    pub requests_cancelled: Counter,
+    /// `econoserve_slo_total{outcome="hit"|"miss"}` over finished requests.
+    pub slo_hit: Counter,
+    pub slo_miss: Counter,
+    /// `econoserve_kvc_alloc_total{outcome="granted"|"hosted"|"exhausted"}`.
+    pub alloc_granted: Counter,
+    pub alloc_hosted: Counter,
+    pub alloc_exhausted: Counter,
+    /// `econoserve_preemptions_total`.
+    pub preemptions: Counter,
+    /// `econoserve_batch_occupancy` — tasks per executed iteration.
+    pub batch_occupancy: Histogram,
+    /// `econoserve_kvc_utilization` — written-KVC fraction per iteration.
+    pub kvc_utilization: Histogram,
+    /// `econoserve_queue_depth` — instantaneous waiting requests.
+    pub queue_depth: Gauge,
+    /// Per-request timing histograms (seconds).
+    pub request_latency: Histogram,
+    pub ttft: Histogram,
+    pub tbt: Histogram,
+}
+
+impl SimMetrics {
+    /// Register the vocabulary on a fresh private registry.
+    pub fn new() -> Self {
+        Self::on(Registry::new())
+    }
+
+    /// Register the vocabulary on an existing registry (the server
+    /// shares one registry between engine and HTTP threads).
+    pub fn on(registry: Arc<Registry>) -> Self {
+        let r = &registry;
+        let m = SimMetrics {
+            iterations: r.counter(
+                "econoserve_iterations_total",
+                "Engine iterations executed",
+                &[],
+            ),
+            tokens_prefill: r.counter(
+                "econoserve_tokens_total",
+                "Tokens processed, by phase",
+                &[("phase", "prefill")],
+            ),
+            tokens_decode: r.counter(
+                "econoserve_tokens_total",
+                "Tokens processed, by phase",
+                &[("phase", "decode")],
+            ),
+            requests_done: r.counter(
+                "econoserve_requests_total",
+                "Requests by terminal outcome",
+                &[("outcome", "done")],
+            ),
+            requests_rejected: r.counter(
+                "econoserve_requests_total",
+                "Requests by terminal outcome",
+                &[("outcome", "rejected")],
+            ),
+            requests_cancelled: r.counter(
+                "econoserve_requests_total",
+                "Requests by terminal outcome",
+                &[("outcome", "cancelled")],
+            ),
+            slo_hit: r.counter(
+                "econoserve_slo_total",
+                "Finished requests by SLO outcome",
+                &[("outcome", "hit")],
+            ),
+            slo_miss: r.counter(
+                "econoserve_slo_total",
+                "Finished requests by SLO outcome",
+                &[("outcome", "miss")],
+            ),
+            alloc_granted: r.counter(
+                "econoserve_kvc_alloc_total",
+                "KVC allocation attempts by outcome",
+                &[("outcome", "granted")],
+            ),
+            alloc_hosted: r.counter(
+                "econoserve_kvc_alloc_total",
+                "KVC allocation attempts by outcome",
+                &[("outcome", "hosted")],
+            ),
+            alloc_exhausted: r.counter(
+                "econoserve_kvc_alloc_total",
+                "KVC allocation attempts by outcome",
+                &[("outcome", "exhausted")],
+            ),
+            preemptions: r.counter(
+                "econoserve_preemptions_total",
+                "Requests preempted out of the running batch",
+                &[],
+            ),
+            batch_occupancy: r.histogram(
+                "econoserve_batch_occupancy",
+                "Tasks per executed iteration",
+                Buckets::exponential(1.0, 2.0, 12),
+                &[],
+            ),
+            kvc_utilization: r.histogram(
+                "econoserve_kvc_utilization",
+                "Written-KVC fraction per iteration",
+                Buckets::linear(0.1, 0.1, 10),
+                &[],
+            ),
+            queue_depth: r.gauge(
+                "econoserve_queue_depth",
+                "Requests waiting for a batch slot",
+                &[],
+            ),
+            request_latency: r.histogram(
+                "econoserve_request_latency_seconds",
+                "Submission-to-completion latency",
+                Buckets::exponential(0.01, 2.0, 16),
+                &[],
+            ),
+            ttft: r.histogram(
+                "econoserve_ttft_seconds",
+                "Time to first token",
+                Buckets::exponential(0.005, 2.0, 14),
+                &[],
+            ),
+            tbt: r.histogram(
+                "econoserve_tbt_seconds",
+                "Mean time between tokens per finished request",
+                Buckets::exponential(0.001, 2.0, 12),
+                &[],
+            ),
+            registry,
+        };
+        m
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Canonical Prometheus text for the whole registry.
+    pub fn render(&self) -> String {
+        self.registry.render()
+    }
+}
+
+impl Default for SimMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fleet-level counters, written once at finalize from the
+/// authoritative fleet accounting so totals reconcile exactly with
+/// `FleetSummary` (`faults_lost_total == faults.lost`, ...).
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    registry: Arc<Registry>,
+    /// `econoserve_faults_total{kind=...}`.
+    pub crashes: Counter,
+    pub zone_outages: Counter,
+    pub stragglers: Counter,
+    pub boot_failures: Counter,
+    /// `econoserve_requests_lost_total` — in-flight requests lost to
+    /// crashes and never re-routed.
+    pub requests_lost: Counter,
+    /// `econoserve_reroutes_total` — in-flight requests re-routed off a
+    /// crashed replica.
+    pub reroutes: Counter,
+    /// `econoserve_replica_boots_total` / `econoserve_replica_retirements_total`.
+    pub boots: Counter,
+    pub retirements: Counter,
+}
+
+impl FleetMetrics {
+    pub fn on(registry: Arc<Registry>) -> Self {
+        let r = &registry;
+        FleetMetrics {
+            crashes: r.counter(
+                "econoserve_faults_total",
+                "Injected faults by kind",
+                &[("kind", "crash")],
+            ),
+            zone_outages: r.counter(
+                "econoserve_faults_total",
+                "Injected faults by kind",
+                &[("kind", "zone_outage")],
+            ),
+            stragglers: r.counter(
+                "econoserve_faults_total",
+                "Injected faults by kind",
+                &[("kind", "straggler")],
+            ),
+            boot_failures: r.counter(
+                "econoserve_faults_total",
+                "Injected faults by kind",
+                &[("kind", "boot_failure")],
+            ),
+            requests_lost: r.counter(
+                "econoserve_requests_lost_total",
+                "In-flight requests lost to replica crashes",
+                &[],
+            ),
+            reroutes: r.counter(
+                "econoserve_reroutes_total",
+                "In-flight requests re-routed off crashed replicas",
+                &[],
+            ),
+            boots: r.counter(
+                "econoserve_replica_boots_total",
+                "Replica scale-up boots",
+                &[],
+            ),
+            retirements: r.counter(
+                "econoserve_replica_retirements_total",
+                "Replica drain-and-retire events",
+                &[],
+            ),
+            registry,
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+}
+
+/// HTTP-surface metrics layered over [`SimMetrics`] on the same
+/// registry (the server's `GET /metrics` exposes both).
+#[derive(Debug, Clone)]
+pub struct ServerMetrics {
+    /// The shared serving vocabulary (requests, latency, occupancy...).
+    pub core: SimMetrics,
+    /// `econoserve_rate_limited_total` — admissions refused by the
+    /// token-bucket limiter.
+    pub rate_limited: Counter,
+    /// `econoserve_http_connections_active` — open client connections.
+    pub connections_active: Gauge,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self::on(Registry::new())
+    }
+
+    pub fn on(registry: Arc<Registry>) -> Self {
+        let rate_limited = registry.counter(
+            "econoserve_rate_limited_total",
+            "Requests refused by the per-key rate limiter",
+            &[],
+        );
+        let connections_active = registry.gauge(
+            "econoserve_http_connections_active",
+            "Open client connections",
+            &[],
+        );
+        ServerMetrics { core: SimMetrics::on(registry), rate_limited, connections_active }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        self.core.registry()
+    }
+
+    /// Count one HTTP exchange: `econoserve_http_requests_total{route,status}`.
+    /// Interns lazily — route strings form a small fixed set.
+    pub fn http_observe(&self, route: &str, status: u16) {
+        self.registry()
+            .counter(
+                "econoserve_http_requests_total",
+                "HTTP requests by route and status",
+                &[("route", route), ("status", &status.to_string())],
+            )
+            .inc();
+    }
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Snapshot;
+
+    #[test]
+    fn sim_vocabulary_renders_and_round_trips() {
+        let m = SimMetrics::new();
+        m.iterations.inc();
+        m.tokens_prefill.add(128);
+        m.tokens_decode.add(32);
+        m.requests_done.add(3);
+        m.slo_hit.add(2);
+        m.slo_miss.inc();
+        m.batch_occupancy.observe(4.0);
+        m.kvc_utilization.observe(0.55);
+        m.queue_depth.set(2.0);
+        m.request_latency.observe(1.2);
+        let text = m.render();
+        let snap = Snapshot::parse(&text).expect("valid exposition");
+        assert_eq!(snap.render(), text);
+        assert_eq!(snap.value("econoserve_requests_total", &[("outcome", "done")]), Some(3.0));
+        assert_eq!(snap.value("econoserve_tokens_total", &[("phase", "prefill")]), Some(128.0));
+        assert_eq!(snap.value("econoserve_slo_total", &[("outcome", "miss")]), Some(1.0));
+    }
+
+    #[test]
+    fn sim_and_server_share_family_names() {
+        // The parity contract: the server-side bundle registers the sim
+        // vocabulary verbatim (plus its HTTP-only families), so a sweep
+        // snapshot and a live scrape merge cleanly.
+        let sim = SimMetrics::new();
+        sim.requests_done.inc();
+        let srv = ServerMetrics::new();
+        srv.core.requests_done.inc();
+        srv.http_observe("/v1/generate", 200);
+        let mut a = Snapshot::parse(&sim.render()).unwrap();
+        let b = Snapshot::parse(&srv.registry().render()).unwrap();
+        a.merge(&b).expect("kinds agree across paths");
+        assert_eq!(a.value("econoserve_requests_total", &[("outcome", "done")]), Some(2.0));
+        assert_eq!(
+            a.value(
+                "econoserve_http_requests_total",
+                &[("route", "/v1/generate"), ("status", "200")]
+            ),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn fleet_counters_register_on_shared_registry() {
+        let sim = SimMetrics::new();
+        let fleet = FleetMetrics::on(sim.registry().clone());
+        fleet.crashes.add(2);
+        fleet.requests_lost.add(5);
+        let snap = Snapshot::parse(&sim.render()).unwrap();
+        assert_eq!(snap.value("econoserve_faults_total", &[("kind", "crash")]), Some(2.0));
+        assert_eq!(snap.value("econoserve_requests_lost_total", &[]), Some(5.0));
+    }
+}

@@ -436,6 +436,13 @@ fn fleet_summary_bit_identical_parallel_vs_sequential() {
         format!("{:?}", parallel.replicas),
         "replica lifecycle logs diverged"
     );
+    // The merged telemetry registry is part of the determinism contract:
+    // byte-identical Prometheus text at any thread count.
+    assert_eq!(
+        serial.metrics, parallel.metrics,
+        "telemetry snapshot diverged between serial and parallel stepping"
+    );
+    assert!(!serial.metrics.is_empty(), "fleet run must emit a telemetry snapshot");
 }
 
 // ---------------------------------------------------------------------
@@ -499,6 +506,31 @@ fn chaos_fleet_summary_bit_identical_parallel_vs_sequential() {
         format!("{:?}", serial.replicas),
         format!("{:?}", parallel.replicas),
         "chaos replica lifecycle logs diverged"
+    );
+    assert_eq!(
+        serial.metrics, parallel.metrics,
+        "chaos telemetry snapshot diverged between serial and parallel stepping"
+    );
+
+    // Reconciliation: the merged registry must agree with the summary's
+    // independent accounting — counters are not a parallel bookkeeping
+    // system that can drift, they are the same events counted once.
+    use econoserve::telemetry::Snapshot;
+    let snap = Snapshot::parse(&serial.metrics).expect("fleet metrics parse");
+    assert_eq!(
+        snap.value("econoserve_requests_total", &[("outcome", "done")]),
+        Some(serial.summary.n_done as f64),
+        "requests_total{{outcome=done}} != summary.n_done"
+    );
+    assert_eq!(
+        snap.value("econoserve_requests_lost_total", &[]),
+        Some(serial.summary.faults.lost as f64),
+        "requests_lost_total != faults.lost"
+    );
+    assert_eq!(
+        snap.value("econoserve_faults_total", &[("kind", "crash")]),
+        Some(serial.summary.faults.crashes as f64),
+        "faults_total{{kind=crash}} != faults.crashes"
     );
 }
 

@@ -1,13 +1,16 @@
 //! End-to-end HTTP serving tests: boot the std-only HTTP front-end on the
 //! real PJRT model and exercise the unified request-lifecycle API —
 //! blocking generation, per-token streaming, structured 4xx errors,
-//! admission-control shedding (429), and disconnect-as-cancellation.
+//! admission-control shedding (429), disconnect-as-cancellation, the
+//! Prometheus `/metrics` scrape, per-key token-bucket rate limiting, the
+//! OpenAI-compatible facade, and graceful drain on shutdown.
 //! Requires `make artifacts` (skips loudly otherwise).
 
-use econoserve::api::AdmissionConfig;
+use econoserve::api::{AdmissionConfig, RateLimitConfig};
 use econoserve::ordering::QueuePolicy;
-use econoserve::server::http::{http_request, ChunkStream, HttpServer};
+use econoserve::server::http::{http_request, http_request_with_key, ChunkStream, HttpServer};
 use econoserve::server::ServerConfig;
+use econoserve::telemetry::Snapshot;
 use econoserve::util::json::Json;
 
 fn artifacts() -> Option<String> {
@@ -202,6 +205,7 @@ fn admission_sheds_load_with_429() {
     let cfg = ServerConfig {
         ordering: QueuePolicy::EconoServe,
         admission: AdmissionConfig { max_inflight: 2, ..Default::default() },
+        ..Default::default()
     };
     let server = HttpServer::start_with("127.0.0.1:0", &dir, cfg).expect("start server");
     let addr = server.addr;
@@ -247,4 +251,196 @@ fn admission_sheds_load_with_429() {
     assert_eq!(stats.get("completed").and_then(|v| v.as_usize()), Some(ok));
 
     server.shutdown();
+}
+
+#[test]
+fn metrics_scrape_is_parseable_and_reconciles_with_stats() {
+    let Some(dir) = artifacts() else { return };
+    let server = HttpServer::start("127.0.0.1:0", &dir).expect("start server");
+    let addr = server.addr;
+
+    for i in 0..2 {
+        let req = format!(r#"{{"prompt": [{}, {}], "max_new_tokens": 3}}"#, 10 + i, 20 + i);
+        let (code, body) = http_request(&addr, "POST", "/v1/generate", &req).unwrap();
+        assert_eq!(code, 200, "{body}");
+    }
+
+    // The scrape is strict exposition text: the registry's own parser
+    // must accept it, and its counters must agree with /v1/stats.
+    let (code, text) = http_request(&addr, "GET", "/metrics", "").unwrap();
+    assert_eq!(code, 200);
+    let snap = Snapshot::parse(&text).expect("scrape parses as exposition text");
+    assert_eq!(
+        snap.value("econoserve_requests_total", &[("outcome", "done")]),
+        Some(2.0),
+        "{text}"
+    );
+    assert_eq!(snap.value("econoserve_iterations_total", &[]).map(|v| v > 0.0), Some(true));
+    // HTTP-layer metrics cover the generate calls (route label is
+    // normalized, so arbitrary paths cannot mint label cardinality).
+    assert_eq!(
+        snap.value(
+            "econoserve_http_requests_total",
+            &[("route", "/v1/generate"), ("status", "200")]
+        ),
+        Some(2.0),
+        "{text}"
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn rate_limiter_sheds_per_key_with_429() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ServerConfig {
+        // Burst of 2, effectively no refill within the test's lifetime.
+        rate_limit: RateLimitConfig::per_key(0.001, 2.0),
+        ..Default::default()
+    };
+    let server = HttpServer::start_with("127.0.0.1:0", &dir, cfg).expect("start server");
+    let addr = server.addr;
+
+    let req = r#"{"prompt": [4, 5], "max_new_tokens": 2}"#;
+    // The anonymous key exhausts its burst of 2, then gets a structured
+    // 429 distinct from admission's queue_full.
+    for _ in 0..2 {
+        let (code, body) = http_request(&addr, "POST", "/v1/generate", req).unwrap();
+        assert_eq!(code, 200, "{body}");
+    }
+    let (code, body) = http_request(&addr, "POST", "/v1/generate", req).unwrap();
+    assert_eq!(code, 429, "{body}");
+    assert!(body.contains("\"kind\":\"rate_limited\""), "{body}");
+
+    // Keys are isolated: a different x-api-key has its own bucket.
+    let (code, body) =
+        http_request_with_key(&addr, "POST", "/v1/generate", req, Some("alice")).unwrap();
+    assert_eq!(code, 200, "{body}");
+
+    // Reads stay unthrottled, and the shed shows up in telemetry (not in
+    // the engine's rejected count — the request never reached admission).
+    let (code, text) = http_request(&addr, "GET", "/metrics", "").unwrap();
+    assert_eq!(code, 200);
+    let snap = Snapshot::parse(&text).expect("scrape parses");
+    assert_eq!(snap.value("econoserve_rate_limited_total", &[]), Some(1.0), "{text}");
+    let (_, body) = http_request(&addr, "GET", "/v1/stats", "").unwrap();
+    assert_eq!(
+        Json::parse(&body).unwrap().get("rejected").and_then(|v| v.as_usize()),
+        Some(0)
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn openai_facade_completions_and_models() {
+    let Some(dir) = artifacts() else { return };
+    let server = HttpServer::start("127.0.0.1:0", &dir).expect("start server");
+    let addr = server.addr;
+
+    // Model listing.
+    let (code, body) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+    assert_eq!(code, 200);
+    let models = Json::parse(&body).unwrap();
+    assert_eq!(models.get("object").and_then(|v| v.as_str()), Some("list"));
+    assert!(body.contains("econoserve-pjrt"), "{body}");
+
+    // Blocking completion with a string prompt (bytes-as-token-ids).
+    let (code, body) = http_request(
+        &addr,
+        "POST",
+        "/v1/completions",
+        r#"{"prompt": "hi", "max_tokens": 4}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let c = Json::parse(&body).unwrap();
+    assert_eq!(c.get("object").and_then(|v| v.as_str()), Some("text_completion"));
+    let finish = c
+        .get("choices")
+        .and_then(|v| v.as_arr())
+        .and_then(|a| a.first())
+        .and_then(|ch| ch.get("finish_reason"))
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string());
+    assert!(
+        finish.as_deref() == Some("stop") || finish.as_deref() == Some("length"),
+        "{body}"
+    );
+    let used = c
+        .get("usage")
+        .and_then(|v| v.get("completion_tokens"))
+        .and_then(|v| v.as_usize())
+        .unwrap();
+    assert!(used >= 1 && used <= 4, "{body}");
+
+    // Streaming completion: SSE frames ending with data: [DONE].
+    let mut stream = ChunkStream::open(
+        &addr,
+        "/v1/completions",
+        r#"{"prompt": [7, 8], "max_tokens": 3, "stream": true}"#,
+    )
+    .expect("open sse stream");
+    assert_eq!(stream.status, 200);
+    let frames = stream.collect_remaining();
+    assert!(frames.len() >= 2, "{frames:?}");
+    assert!(
+        frames.iter().all(|f| f.starts_with("data: ")),
+        "every frame is an SSE data line: {frames:?}"
+    );
+    assert!(frames.last().unwrap().contains("[DONE]"), "{frames:?}");
+    assert!(
+        frames[frames.len() - 2].contains("finish_reason"),
+        "penultimate frame carries the finish reason: {frames:?}"
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_streams_and_refuses_new_connections() {
+    let Some(dir) = artifacts() else { return };
+    let server = HttpServer::start("127.0.0.1:0", &dir).expect("start server");
+    let addr = server.addr;
+
+    // An effectively unbounded stream keeps one connection in flight for
+    // the whole drain window.
+    let mut stream = ChunkStream::open(
+        &addr,
+        "/v1/stream",
+        r#"{"prompt": [3, 4, 5], "max_new_tokens": 100000}"#,
+    )
+    .expect("open stream");
+    assert_eq!(stream.status, 200);
+    assert!(stream.next_chunk().is_some(), "stream is live before shutdown");
+
+    let drainer = std::thread::spawn(move || {
+        server.shutdown_within(std::time::Duration::from_secs(30));
+    });
+
+    // Once the drain begins, new connections get a structured 503 while
+    // the in-flight stream keeps delivering tokens.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let (code, body) = http_request(&addr, "GET", "/health", "").unwrap();
+        if code == 503 {
+            assert!(body.contains("\"kind\":\"shutting_down\""), "{body}");
+            break;
+        }
+        assert_eq!(code, 200, "{body}");
+        assert!(
+            std::time::Instant::now() < deadline,
+            "shutdown never started refusing new connections"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    assert!(
+        stream.next_chunk().is_some(),
+        "in-flight stream still delivers during the drain"
+    );
+
+    // Dropping the last in-flight connection lets the drain finish; the
+    // engine cancels the orphaned request and shuts down cleanly.
+    drop(stream);
+    drainer.join().expect("graceful shutdown completes");
 }

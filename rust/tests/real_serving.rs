@@ -98,6 +98,7 @@ fn admission_bounds_inflight_on_real_path() {
     let cfg = ServerConfig {
         ordering: QueuePolicy::EconoServe,
         admission: AdmissionConfig { max_inflight: 1, ..Default::default() },
+        ..Default::default()
     };
     let mut server =
         RealServer::with_config(PjrtModel::load(&dir).expect("load artifacts"), cfg);

@@ -27,6 +27,17 @@ cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- sweep \
 cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- fleet \
     --chaos crashes --trace alpaca --workload poisson --rate 3 \
     --duration 120 --replicas 2 --min 2 --max 3 --oracle
+# Telemetry smoke: a fleet run's merged registry snapshot must be
+# canonical Prometheus exposition text (promlint = strict re-parse +
+# byte-identical re-render).
+METRICS_OUT="${TMPDIR:-/tmp}/econoserve_fleet_smoke.prom"
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- fleet \
+    --trace alpaca --workload poisson --rate 3 --duration 60 \
+    --replicas 2 --min 2 --max 2 --oracle --metrics-out "$METRICS_OUT"
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- promlint "$METRICS_OUT"
+# The sim stack (telemetry included) must stay std-only: a pjrt-free
+# build is a standing gate, not just a CI flavor.
+cargo build --release --no-default-features
 if [ -z "${SKIP_CLIPPY:-}" ]; then
     if cargo clippy --version >/dev/null 2>&1; then
         cargo clippy --all-targets ${CARGO_FLAGS:-} -- -D warnings
