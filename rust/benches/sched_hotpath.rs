@@ -15,7 +15,9 @@
 //! (`fleet_routing+<router>`: per-arrival snapshot+route cost of the
 //! fleet front door over a 4-replica fleet; `+chaos` variants route the
 //! same fleet with half the replicas marked unhealthy, the health-aware
-//! filter path fault injection exercises).
+//! filter path fault injection exercises; `+guardrails` variants stack
+//! the brownout controller's pressure computation and admission check on
+//! top of the route).
 //!
 //! The combo grid itself runs on the parallel experiment engine
 //! (`econoserve::exp::map_indexed`): pass `--threads N` (0 = auto) to
@@ -67,10 +69,11 @@ struct Row {
 }
 
 /// One grid cell: either a sched+alloc plan-latency case or a fleet
-/// front-door routing case.
+/// front-door routing case (`guardrails` adds the brownout pressure
+/// computation + admission check the reliability layer runs per event).
 enum Task {
     Combo { combo: String, depth: usize },
-    Routing { router: &'static str, depth: usize, chaos: bool },
+    Routing { router: &'static str, depth: usize, chaos: bool, guardrails: bool },
 }
 
 fn bench_combo(combo: &str, depth: usize, fast: bool) -> (Row, String) {
@@ -136,7 +139,16 @@ fn bench_combo(combo: &str, depth: usize, fast: bool) -> (Row, String) {
 /// adds on top of per-replica planning. With `chaos`, half the replicas
 /// are snapshotted unhealthy (crashed-but-listed, as under fault
 /// injection), so the routers' health-filter path is what gets timed.
-fn bench_fleet_routing(router_name: &str, depth: usize, chaos: bool, fast: bool) -> (Row, String) {
+/// With `guardrails`, the brownout controller's per-tick work (fleet
+/// pressure over the snapshots, tier update, one admission check) is
+/// timed on top of the route — the reliability layer's event overhead.
+fn bench_fleet_routing(
+    router_name: &str,
+    depth: usize,
+    chaos: bool,
+    guardrails: bool,
+    fast: bool,
+) -> (Row, String) {
     const REPLICAS: usize = 4;
     let cfg = common::cfg("opt-13b", "sharegpt");
     let per = (depth / REPLICAS).max(1);
@@ -153,6 +165,11 @@ fn bench_fleet_routing(router_name: &str, depth: usize, chaos: bool, fast: bool)
         .collect();
     let mut rt = router::by_name(router_name, derive_seed(cfg.seed, stream::ROUTER)).unwrap();
     let mut snaps: Vec<ReplicaSnapshot> = Vec::with_capacity(REPLICAS);
+    let gcfg = econoserve::reliability::GuardrailConfig::parse("full").unwrap();
+    let mut brownout = econoserve::reliability::Brownout::new(&gcfg);
+    // Matches `FleetConfig::knobs` for the sharegpt mix closely enough
+    // for a latency bench; the value only shapes the pressure ratio.
+    let resident_ceiling = 40.0;
     let (min_iters, min_time) = if fast {
         (1_000, Duration::from_millis(75))
     } else {
@@ -165,12 +182,22 @@ fn bench_fleet_routing(router_name: &str, depth: usize, chaos: bool, fast: bool)
                 let healthy = !chaos || id % 2 == 0;
                 snaps.push(ReplicaSnapshot::of_world(id, &st.world, healthy));
             }
+            if guardrails {
+                let p = econoserve::reliability::fleet_pressure(&snaps, resident_ceiling);
+                brownout.update(p);
+                black_box(brownout.admits(512));
+            }
             black_box(rt.route(&snaps));
         },
         min_iters,
         min_time,
     );
-    let suffix = if chaos { "+chaos" } else { "" };
+    let suffix = match (chaos, guardrails) {
+        (true, true) => "+chaos+guardrails",
+        (true, false) => "+chaos",
+        (false, true) => "+guardrails",
+        (false, false) => "",
+    };
     let combo = format!("fleet_routing+{router_name}{suffix}");
     let report = res.report(&combo);
     let row = Row {
@@ -237,8 +264,19 @@ fn main() {
         &["round-robin", "least-queue", "least-kvc", "power-of-two"]
     };
     for r in routers {
-        tasks.push(Task::Routing { router: r, depth: HEADLINE_DEPTH, chaos: false });
-        tasks.push(Task::Routing { router: r, depth: HEADLINE_DEPTH, chaos: true });
+        tasks.push(Task::Routing {
+            router: r,
+            depth: HEADLINE_DEPTH,
+            chaos: false,
+            guardrails: false,
+        });
+        tasks.push(Task::Routing { router: r, depth: HEADLINE_DEPTH, chaos: true, guardrails: false });
+        tasks.push(Task::Routing {
+            router: r,
+            depth: HEADLINE_DEPTH,
+            chaos: false,
+            guardrails: true,
+        });
     }
 
     let sweep_threads = econoserve::exp::resolve_threads(threads);
@@ -252,8 +290,8 @@ fn main() {
     let results: Vec<(Row, String)> =
         econoserve::exp::map_indexed(&tasks, sweep_threads, |_, task| match task {
             Task::Combo { combo, depth } => bench_combo(combo, *depth, fast),
-            Task::Routing { router, depth, chaos } => {
-                bench_fleet_routing(router, *depth, *chaos, fast)
+            Task::Routing { router, depth, chaos, guardrails } => {
+                bench_fleet_routing(router, *depth, *chaos, *guardrails, fast)
             }
         });
     let sweep_wall_s = t0.elapsed().as_secs_f64();

@@ -36,7 +36,7 @@ impl DrainGate {
     /// Admit one connection: `Some(guard)` while serving, `None` once
     /// draining has begun. The guard's `Drop` releases the slot.
     pub fn try_enter(self: &Arc<Self>) -> Option<ConnGuard> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = crate::util::sync::lock(&self.state);
         if s.draining {
             return None;
         }
@@ -47,34 +47,34 @@ impl DrainGate {
     /// Flip to draining: subsequent `try_enter` calls fail, existing
     /// guards are unaffected. Idempotent.
     pub fn begin_drain(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = crate::util::sync::lock(&self.state);
         s.draining = true;
         // An already-idle server must not hang in wait_idle.
         self.idle.notify_all();
     }
 
     pub fn is_draining(&self) -> bool {
-        self.state.lock().unwrap().draining
+        crate::util::sync::lock(&self.state).draining
     }
 
     /// Connections currently inside the gate.
     pub fn active(&self) -> usize {
-        self.state.lock().unwrap().active
+        crate::util::sync::lock(&self.state).active
     }
 
     /// Block until every admitted connection has finished, or `timeout`
     /// elapses. Returns `true` on a clean drain (no connections left).
     pub fn wait_idle(&self, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
-        let mut s = self.state.lock().unwrap();
+        let mut s = crate::util::sync::lock(&self.state);
         while s.active > 0 {
             let left = deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
                 return false;
             }
-            let (next, res) = self.idle.wait_timeout(s, left).unwrap();
+            let (next, timed_out) = crate::util::sync::wait_timeout(&self.idle, s, left);
             s = next;
-            if res.timed_out() && s.active > 0 {
+            if timed_out && s.active > 0 {
                 return false;
             }
         }
@@ -90,7 +90,7 @@ pub struct ConnGuard {
 
 impl Drop for ConnGuard {
     fn drop(&mut self) {
-        let mut s = self.gate.state.lock().unwrap();
+        let mut s = crate::util::sync::lock(&self.gate.state);
         s.active = s.active.saturating_sub(1);
         if s.active == 0 {
             self.gate.idle.notify_all();

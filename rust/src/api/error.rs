@@ -20,6 +20,11 @@ pub enum ServeError {
     /// than its configured sustained rate. HTTP 429 with a Retry-After
     /// hint.
     RateLimited { retry_after_s: f64 },
+    /// The brownout overload controller is shedding this request class
+    /// (tier 1: batch-class prompts; tier 2: everything). The condition
+    /// is transient — HTTP 503 with a Retry-After hint, distinct from
+    /// 429: the *server* is overloaded, not this client's send rate.
+    Brownout { retry_after_s: f64 },
     /// The request was cancelled before completion. HTTP 499 (nginx's
     /// "client closed request" convention).
     Cancelled,
@@ -38,6 +43,7 @@ impl ServeError {
             ServeError::InvalidRequest(_) | ServeError::PromptTooLong { .. } => 400,
             ServeError::QueueFull { .. } | ServeError::RateLimited { .. } => 429,
             ServeError::SloInfeasible { .. }
+            | ServeError::Brownout { .. }
             | ServeError::ShuttingDown
             | ServeError::EngineDown => 503,
             ServeError::Cancelled => 499,
@@ -53,6 +59,7 @@ impl ServeError {
             ServeError::QueueFull { .. } => "queue_full",
             ServeError::SloInfeasible { .. } => "slo_infeasible",
             ServeError::RateLimited { .. } => "rate_limited",
+            ServeError::Brownout { .. } => "brownout",
             ServeError::Cancelled => "cancelled",
             ServeError::ShuttingDown => "shutting_down",
             ServeError::EngineDown => "engine_down",
@@ -68,6 +75,7 @@ impl ServeError {
             | ServeError::PromptTooLong { .. }
             | ServeError::QueueFull { .. }
             | ServeError::RateLimited { .. }
+            | ServeError::Brownout { .. }
             | ServeError::ShuttingDown
             | ServeError::SloInfeasible { .. } => FinishReason::Rejected,
             ServeError::EngineDown | ServeError::Internal(_) => FinishReason::Error,
@@ -91,6 +99,9 @@ impl std::fmt::Display for ServeError {
             ),
             ServeError::RateLimited { retry_after_s } => {
                 write!(f, "rate limited; retry after {retry_after_s:.3}s")
+            }
+            ServeError::Brownout { retry_after_s } => {
+                write!(f, "browned out (overload shedding); retry after {retry_after_s:.3}s")
             }
             ServeError::Cancelled => write!(f, "request cancelled"),
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
@@ -116,6 +127,7 @@ mod tests {
             503
         );
         assert_eq!(ServeError::RateLimited { retry_after_s: 0.5 }.http_status(), 429);
+        assert_eq!(ServeError::Brownout { retry_after_s: 2.0 }.http_status(), 503);
         assert_eq!(ServeError::Cancelled.http_status(), 499);
         assert_eq!(ServeError::ShuttingDown.http_status(), 503);
         assert_eq!(ServeError::EngineDown.http_status(), 503);
@@ -130,6 +142,7 @@ mod tests {
             ServeError::QueueFull { inflight: 4, limit: 4 }.kind(),
             ServeError::SloInfeasible { needed_s: 2.0, budget_s: 1.0 }.kind(),
             ServeError::RateLimited { retry_after_s: 0.5 }.kind(),
+            ServeError::Brownout { retry_after_s: 2.0 }.kind(),
             ServeError::Cancelled.kind(),
             ServeError::ShuttingDown.kind(),
             ServeError::EngineDown.kind(),
@@ -147,6 +160,10 @@ mod tests {
         );
         assert_eq!(
             ServeError::RateLimited { retry_after_s: 1.0 }.finish_reason(),
+            FinishReason::Rejected
+        );
+        assert_eq!(
+            ServeError::Brownout { retry_after_s: 2.0 }.finish_reason(),
             FinishReason::Rejected
         );
         assert_eq!(ServeError::ShuttingDown.finish_reason(), FinishReason::Rejected);

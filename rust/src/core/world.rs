@@ -376,6 +376,135 @@ impl World {
         items
     }
 
+    /// Deadline-aware abort sweep (the `reliability` guardrail): cancel
+    /// every decode-phase request whose minimum remaining service time —
+    /// one calibrated `t_g` iteration per remaining token, the engine's
+    /// floor — overshoots its SLO deadline by more than `slack` seconds.
+    /// Such a request converts KVC into a certain SLO miss with every
+    /// further iteration; releasing the cache to queued work is the
+    /// paper's timely-release insight applied to hopeless work. With
+    /// `oracle` the bound uses the true remaining length (provable);
+    /// otherwise the current prediction (best-effort — `slack` absorbs
+    /// prediction error).
+    ///
+    /// Scope: only `Phase::Decoding` requests, and never one with a
+    /// pending `recompute_done` event — every scheduler sweeps `Done`
+    /// ids out of its running set at the top of `plan()`, so an abort
+    /// between iterations is exactly as safe as an exogenous
+    /// `push_item`, but a queued-phase abort could leave a stale id in
+    /// scheduler-internal queues. Victims are processed in id order;
+    /// like [`World::crash_all`], aborted requests keep `done_at = None`
+    /// (SLO miss unless retried elsewhere) and come back as re-routable
+    /// `TraceItem`s with their ORIGINAL arrival.
+    pub fn abort_hopeless(&mut self, oracle: bool, slack: f64) -> Vec<TraceItem> {
+        let mut victims: Vec<ReqId> = Vec::new();
+        for &id in &self.active {
+            let rec = &self.recs[id];
+            if rec.phase != Phase::Decoding {
+                continue;
+            }
+            let remaining =
+                if oracle { rec.true_remaining() } else { rec.predicted_remaining() };
+            if self.clock + remaining as f64 * self.cfg.t_g > rec.req.deadline + slack
+                && !self.events.recompute_done.contains(&id)
+            {
+                victims.push(id);
+            }
+        }
+        victims.sort_unstable();
+        let mut items = Vec::with_capacity(victims.len());
+        for id in victims {
+            items.push(self.abort_one(id));
+        }
+        items
+    }
+
+    /// Cancel one in-service request: the guest/host unwinding of
+    /// `complete` (re-home or evict live guests, release the lease) with
+    /// a cancellation terminal instead of a completion — `done_at` stays
+    /// `None` and the telemetry counts it under
+    /// `requests_total{outcome="cancelled"}`.
+    fn abort_one(&mut self, id: ReqId) -> TraceItem {
+        let guests = self.kvc.detach_host(id);
+        for g in guests {
+            if self.recs[g].is_done() {
+                continue;
+            }
+            let need = self.kvc.guest_written(g) + self.recs[g].predicted_remaining() + 1;
+            if !self.kvc.adopt(g, need).ok() {
+                self.evict_guest(g);
+            }
+        }
+        self.kvc.release(id);
+        let rec = &mut self.recs[id];
+        rec.phase = Phase::Done;
+        rec.kvc_held = 0;
+        self.done_count += 1;
+        self.index_deactivate(id);
+        self.tel.requests_cancelled.inc();
+        let req = &self.recs[id].req;
+        TraceItem { arrival: req.arrival, prompt_len: req.prompt_len, true_rl: req.true_rl }
+    }
+
+    /// Void a recorded completion: the request stays terminal (`Done`)
+    /// but loses its completion time, so summaries no longer count it as
+    /// done or SLO-satisfying. The fleet's hedging guardrail needs this
+    /// for the race where BOTH copies of a hedged request finish within
+    /// one advance window — the deterministic winner keeps its record,
+    /// the loser is voided. Telemetry counters already incremented for
+    /// the voided completion are monotonic history; such races are
+    /// exported as `econoserve_hedges_total{outcome="duplicate"}` and
+    /// the reconciliation tests account for them exactly.
+    pub fn void_completion(&mut self, id: ReqId) {
+        debug_assert!(
+            self.recs[id].done_at.is_some(),
+            "void_completion requires a recorded completion"
+        );
+        self.recs[id].done_at = None;
+    }
+
+    /// Best-effort cancellation of a single request (hedging's
+    /// loser-copy teardown). Succeeds only in the two phases where an
+    /// exogenous cancel provably cannot leave a stale id inside a
+    /// scheduler's internal queues:
+    ///
+    /// - still queued in the inbox (`PtQueued`, never admitted): the id
+    ///   is removed from the inbox and terminated without touching the
+    ///   KVC (nothing was ever allocated);
+    /// - decoding with no pending `recompute_done` event: the same
+    ///   between-iterations teardown as [`World::abort_hopeless`].
+    ///
+    /// Returns `false` in any other phase (prefilling, GT-queued,
+    /// preempted, already done); the caller retries on a later
+    /// iteration, when the request has moved to a safe phase or
+    /// completed on its own.
+    pub fn cancel_if_safe(&mut self, id: ReqId) -> bool {
+        if self.recs[id].is_done() {
+            return false;
+        }
+        match self.recs[id].phase {
+            Phase::PtQueued => {
+                let Some(pos) = self.inbox.iter().position(|&x| x == id) else {
+                    // Admitted this iteration but the phase flip lands
+                    // with the plan's effects; not safe yet.
+                    return false;
+                };
+                self.inbox.remove(pos);
+                let rec = &mut self.recs[id];
+                rec.phase = Phase::Done;
+                self.done_count += 1;
+                self.index_deactivate(id);
+                self.tel.requests_cancelled.inc();
+                true
+            }
+            Phase::Decoding if !self.events.recompute_done.contains(&id) => {
+                self.abort_one(id);
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// O(1): every request has arrived and completed (or was shed).
     pub fn all_done(&self) -> bool {
         self.done_count == self.recs.len()

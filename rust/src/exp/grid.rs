@@ -47,6 +47,11 @@ pub struct GridSpec {
     /// Fault-injection axis for fleet cells (`fleet::all_profiles`
     /// names). Empty ⇒ `["none"]`; requires the fleet axes.
     pub faults: Vec<String>,
+    /// Reliability-guardrail axis for fleet cells
+    /// (`reliability::GuardrailConfig::parse` grammar, e.g. `"off"`,
+    /// `"retry+hedge"`, `"full"`). Empty ⇒ `["off"]`; requires the
+    /// fleet axes.
+    pub guardrails: Vec<String>,
     /// Fleet size bound for fleet cells (`static-k` fixes the fleet at
     /// this size; scaling policies move within `[1, replicas]`).
     pub replicas: usize,
@@ -71,6 +76,7 @@ impl Default for GridSpec {
             routers: Vec::new(),
             autoscalers: Vec::new(),
             faults: Vec::new(),
+            guardrails: Vec::new(),
             replicas: 2,
             duration: common::DURATION,
             max_time: common::MAX_TIME,
@@ -93,6 +99,8 @@ pub struct Cell {
     pub autoscaler: Option<String>,
     /// Fault profile (`Some` only for fleet cells; `"none"` by default).
     pub faults: Option<String>,
+    /// Guardrail mode (`Some` only for fleet cells; `"off"` by default).
+    pub guardrails: Option<String>,
     /// Per-cell RNG stream: a pure function of (seed, model/trace/rate
     /// coordinates) — shared by every system at this point, independent
     /// of grid order and thread count.
@@ -105,7 +113,7 @@ impl GridSpec {
     /// are rejected up front — a typoed axis name (`"seed"` for
     /// `"seeds"`) must fail immediately, not silently sweep defaults.
     pub fn from_json(doc: &Json) -> Result<GridSpec, String> {
-        const KNOWN: [&str; 14] = [
+        const KNOWN: [&str; 15] = [
             "systems",
             "models",
             "traces",
@@ -115,6 +123,7 @@ impl GridSpec {
             "routers",
             "autoscalers",
             "faults",
+            "guardrails",
             "replicas",
             "duration",
             "max_time",
@@ -154,6 +163,7 @@ impl GridSpec {
         strings("routers", &mut spec.routers)?;
         strings("autoscalers", &mut spec.autoscalers)?;
         strings("faults", &mut spec.faults)?;
+        strings("guardrails", &mut spec.guardrails)?;
         if let Some(v) = doc.get("rates") {
             let arr = v.as_arr().ok_or("'rates' must be an array")?;
             spec.rates = arr
@@ -227,11 +237,21 @@ impl GridSpec {
                 return Err(format!("unknown fault profile '{f}'"));
             }
         }
+        for g in &self.guardrails {
+            if crate::reliability::GuardrailConfig::parse(g).is_none() {
+                return Err(format!("unknown guardrail mode '{g}'"));
+            }
+        }
         if self.routers.is_empty() != self.autoscalers.is_empty() {
             return Err("'routers' and 'autoscalers' must be set together".to_string());
         }
         if !self.faults.is_empty() && self.routers.is_empty() {
             return Err("'faults' requires the fleet axes ('routers'/'autoscalers')".to_string());
+        }
+        if !self.guardrails.is_empty() && self.routers.is_empty() {
+            return Err(
+                "'guardrails' requires the fleet axes ('routers'/'autoscalers')".to_string()
+            );
         }
         if self.systems.is_empty() || self.models.is_empty() || self.traces.is_empty() {
             return Err("systems/models/traces must be non-empty".to_string());
@@ -245,20 +265,35 @@ impl GridSpec {
         Ok(())
     }
 
-    fn fleet_axis(&self) -> Vec<(Option<String>, Option<String>, Option<String>)> {
+    #[allow(clippy::type_complexity)]
+    fn fleet_axis(
+        &self,
+    ) -> Vec<(Option<String>, Option<String>, Option<String>, Option<String>)> {
         if self.routers.is_empty() {
-            return vec![(None, None, None)];
+            return vec![(None, None, None, None)];
         }
         let faults: Vec<String> = if self.faults.is_empty() {
             vec!["none".to_string()]
         } else {
             self.faults.clone()
         };
+        let guardrails: Vec<String> = if self.guardrails.is_empty() {
+            vec!["off".to_string()]
+        } else {
+            self.guardrails.clone()
+        };
         let mut axis = Vec::new();
         for r in &self.routers {
             for a in &self.autoscalers {
                 for f in &faults {
-                    axis.push((Some(r.clone()), Some(a.clone()), Some(f.clone())));
+                    for g in &guardrails {
+                        axis.push((
+                            Some(r.clone()),
+                            Some(a.clone()),
+                            Some(f.clone()),
+                            Some(g.clone()),
+                        ));
+                    }
                 }
             }
         }
@@ -283,7 +318,7 @@ impl GridSpec {
                         // rivals at one point share the workload).
                         let cell_seed = derive_seed(seed, stream::grid_cell(mi, ti, ri));
                         for system in &self.systems {
-                            for (router, autoscaler, faults) in &axis {
+                            for (router, autoscaler, faults, guardrails) in &axis {
                                 cells.push(Cell {
                                     system: system.clone(),
                                     model: model.clone(),
@@ -293,6 +328,7 @@ impl GridSpec {
                                     router: router.clone(),
                                     autoscaler: autoscaler.clone(),
                                     faults: faults.clone(),
+                                    guardrails: guardrails.clone(),
                                     cell_seed,
                                 });
                             }
@@ -399,6 +435,9 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> (Json, String) {
             if let Some(f) = &cell.faults {
                 fc.faults = f.clone();
             }
+            if let Some(g) = &cell.guardrails {
+                fc.guardrails = g.clone();
+            }
             // Cell-level fan-out owns the cores; replicas step serially.
             fc.threads = 1;
             let res = fleet::run(&fc, &items);
@@ -408,6 +447,7 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> (Json, String) {
                 ("router", Json::from(router.as_str())),
                 ("autoscaler", Json::from(autoscaler.as_str())),
                 ("faults", Json::from(cell.faults.as_deref().unwrap_or("none"))),
+                ("guardrails", Json::from(cell.guardrails.as_deref().unwrap_or("off"))),
                 ("n_done", Json::from(s.n_done)),
                 ("goodput_rps", Json::from(s.goodput_rps)),
                 ("throughput_rps", Json::from(s.throughput_rps)),
@@ -422,6 +462,10 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> (Json, String) {
                 ("boot_failures", Json::from(s.faults.boot_failures)),
                 ("rerouted", Json::from(s.faults.rerouted)),
                 ("lost", Json::from(s.faults.lost)),
+                ("retried", Json::from(s.faults.retried)),
+                ("recovered", Json::from(s.faults.recovered)),
+                ("hedges_won", Json::from(s.faults.hedges_won)),
+                ("aborted", Json::from(s.faults.aborted)),
             ]);
             (obj(row), metrics)
         }
@@ -514,6 +558,15 @@ mod tests {
         assert!(GridSpec::from_json(&bad_fault).unwrap_err().contains("fault profile"));
         let orphan_fault = Json::parse(r#"{"faults": ["crashes"]}"#).unwrap();
         assert!(GridSpec::from_json(&orphan_fault).is_err());
+        // Guardrail modes are validated and require the fleet axes too.
+        let bad_guard = Json::parse(
+            r#"{"routers": ["round-robin"], "autoscalers": ["static-k"],
+                "guardrails": ["retry+yolo"]}"#,
+        )
+        .unwrap();
+        assert!(GridSpec::from_json(&bad_guard).unwrap_err().contains("guardrail mode"));
+        let orphan_guard = Json::parse(r#"{"guardrails": ["retry"]}"#).unwrap();
+        assert!(GridSpec::from_json(&orphan_guard).is_err());
         // Typoed keys fail fast instead of silently sweeping defaults.
         let typo = Json::parse(r#"{"seed": [1, 2]}"#).unwrap();
         assert!(GridSpec::from_json(&typo).unwrap_err().contains("unknown key 'seed'"));

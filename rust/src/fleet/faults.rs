@@ -280,6 +280,19 @@ pub struct FaultTally {
     /// Requests lost to a crash (in-flight with no re-route, or routed
     /// to a corpse by a health-blind router).
     pub lost: usize,
+    /// Guardrail re-injections: displaced requests placed again after a
+    /// backoff delay (`reliability` retry budgets). A request retried
+    /// twice counts twice.
+    pub retried: usize,
+    /// Displaced requests that went on to COMPLETE after a guardrail
+    /// retry — the recovered-goodput headline.
+    pub recovered: usize,
+    /// Hedged requests whose hedge copy finished first.
+    pub hedges_won: usize,
+    /// Requests terminally cancelled by guardrails (deadline-aware
+    /// aborts out of retry budget + brownout rejections). Part of the
+    /// conservation identity `n_total == n_done + lost + aborted`.
+    pub aborted: usize,
 }
 
 impl FaultTally {

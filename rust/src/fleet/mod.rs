@@ -18,6 +18,7 @@
 //! | autoscaler ([`autoscale`]) | `static-k`, `reactive`, `forecast` |
 //! | workload ([`crate::trace::ArrivalProcess`]) | `poisson`, `mmpp`, `diurnal` |
 //! | faults ([`faults`]) | `none`, `crashes`, `zone-outage`, `stragglers`, `flaky-boots`, `full-chaos` |
+//! | guardrails ([`crate::reliability`]) | `off`, `full`, `+`-joined {`retry`, `hedge`, `abort`, `brownout`} |
 //!
 //! Fleet metrics report goodput, SLO satisfaction, **GPU-hours**, and
 //! goodput-per-GPU-hour, so Fig 12 is reproducible dynamically and the
@@ -86,6 +87,11 @@ pub struct FleetConfig {
     /// are lost, and nothing is replaced except by autoscaler pressure.
     /// Irrelevant under the `"none"` profile.
     pub health_aware: bool,
+    /// Reliability guardrail mode (`reliability::GuardrailConfig::parse`
+    /// grammar): `"off"`, `"full"`, or `+`-joined components from
+    /// {`retry`, `hedge`, `abort`, `brownout`}. `"off"` leaves the run
+    /// bit-identical to a fleet without the guardrail layer.
+    pub guardrails: String,
     /// Hard simulated-time cap (requests unfinished at the cap count as
     /// SLO misses, like `RunLimits::max_sim_time`).
     pub max_sim_time: f64,
@@ -122,6 +128,7 @@ impl FleetConfig {
             per_replica_rps: 0.0,
             faults: "none".to_string(),
             health_aware: true,
+            guardrails: "off".to_string(),
             max_sim_time: f64::INFINITY,
             threads: 0,
         }

@@ -1,42 +1,65 @@
 //! The fleet event loop: N replica steppers on a shared clock, a
 //! routing front door, and autoscaler-driven replica lifecycle.
 //!
-//! The loop is discrete-event over five event sources — the next
+//! The loop is discrete-event over six event sources — the next
 //! arrival, the next boot completion, the next autoscaler control tick,
-//! the next fault event (`fleet::faults`, when a profile is active), and
-//! the next straggler recovery. At each event time every live replica is
-//! advanced to the event (via [`Stepper::advance_to`], whose idle clock
-//! is clamped to the horizon so injections are never in a replica's
-//! past) — concurrently across worker threads (`FleetConfig::threads`;
-//! replicas are data-independent between events, so parallel stepping is
-//! bit-identical to serial) — then the event is applied:
+//! the next fault event (`fleet::faults`, when a profile is active),
+//! the next straggler recovery, and the next reliability-guardrail
+//! deadline (retry backoff expiry or hedge fire, when guardrails are
+//! enabled). At each event time every live replica is advanced to the
+//! event (via [`Stepper::advance_to`], whose idle clock is clamped to
+//! the horizon so injections are never in a replica's past) —
+//! concurrently across worker threads (`FleetConfig::threads`;
+//! replicas are data-independent between events, so parallel stepping
+//! is bit-identical to serial) — then the event is applied:
 //!
 //!  * **arrival** — snapshot the routable replicas, let the router pick
 //!    one, inject the request at its true arrival time. Booting and
 //!    draining replicas are *never* in the candidate set; crashed
 //!    replicas appear only under fault injection, flagged unhealthy for
 //!    a health-aware fleet and forged healthy for a health-blind one
-//!    (see the health contract in [`super::router`]).
+//!    (see the health contract in [`super::router`]). A brownout
+//!    guardrail gates admission before routing (tiered shedding under
+//!    pressure, counted in `FaultTally::aborted`).
 //!  * **boot completion** — `Booting -> Active`, or `-> Crashed` for a
 //!    boot the fault injector doomed (the latency was burned, the
 //!    replica never serves).
-//!  * **control tick** — consult the autoscaler; scale up by booting
+//!  * **control tick** — first the deadline-aware abort sweep (if
+//!    enabled) cancels provably hopeless decodes and files them with
+//!    the retry machinery; then the brownout controller re-reads fleet
+//!    pressure; then the autoscaler is consulted: scale up by booting
 //!    fresh replicas (`boot_latency` until routable, billed from the
 //!    order), scale down by draining the least-loaded Active replicas
 //!    (drain-before-retire: they finish in-flight work, then release
 //!    their GPUs). Targets are clamped to `[min, max]`. The observation
 //!    carries the replicas lost to faults since the previous tick, so
 //!    fault-aware policies re-provision for *effective* capacity.
-//!  * **fault event** — crash a replica (in-flight work re-routed or
-//!    lost via [`crate::core::world::World::crash_all`]), crash a whole
-//!    zone, or start a straggler episode (the replica's batch durations
-//!    dilate by the profile factor until the episode ends). A
-//!    health-aware fleet additionally boots replacements whenever the
-//!    serving size falls below `min_replicas`.
+//!  * **fault event** — crash a replica (in-flight work re-routed,
+//!    retried, or lost via [`crate::core::world::World::crash_all`]),
+//!    crash a whole zone, or start a straggler episode (the replica's
+//!    batch durations dilate by the profile factor until the episode
+//!    ends). A health-aware fleet additionally boots replacements
+//!    whenever the serving size falls below `min_replicas`.
+//!  * **guardrail deadline** — a retry whose backoff expired is
+//!    re-routed (original arrival, hence original SLO deadline), or a
+//!    straggling request's hedge copy is launched on a second replica
+//!    (first completion wins; the loser is cancelled as soon as it is
+//!    safe to do so, releasing its KVC).
+//!
+//! Every guardrail decision is a pure function of (config, seed):
+//! retries draw jitter from the dedicated
+//! [`crate::util::rng::stream::GUARDRAILS`] stream, hedge/abort/
+//! brownout decisions read simulation state that is thread-invariant,
+//! and `guardrails == "off"` takes every guardrail branch out of the
+//! loop — such runs are bit-identical to a fleet without the subsystem.
+
+use std::collections::BTreeMap;
 
 use crate::coordinator::Stepper;
+use crate::core::ReqId;
+use crate::reliability::{self, Brownout, DisplaceOrigin, GuardrailConfig, GuardrailStats};
 use crate::trace::TraceItem;
-use crate::util::rng::{derive_seed, stream};
+use crate::util::rng::{derive_seed, stream, Rng};
 use crate::util::stats::Samples;
 
 use super::autoscale::{self, ScaleObs};
@@ -113,12 +136,328 @@ impl Replica {
 
     /// Kill this replica at `t`: terminal state, GPU billing stops, the
     /// world's unfinished requests come back as re-routable items (the
-    /// caller decides re-route vs lost).
+    /// caller decides re-route vs retry vs lost).
     fn crash(&mut self, t: f64) -> Vec<TraceItem> {
         self.state = ReplicaState::Crashed;
         self.log.crashed_at = Some(t);
         self.slow_until = f64::INFINITY;
         self.stepper.world.crash_all()
+    }
+}
+
+/// Request lineage key (see [`reliability::lineage_key`]).
+type Key = (u64, u32, u32);
+/// Where one copy of a request lives: (replica index, request id on
+/// that replica's world).
+type Placement = (usize, ReqId);
+
+/// A displaced request waiting out its retry backoff.
+#[derive(Clone, Copy)]
+struct RetryEntry {
+    key: Key,
+    item: TraceItem,
+    origin: DisplaceOrigin,
+    due: f64,
+}
+
+/// Lifecycle of one hedged request.
+#[derive(Clone, Copy)]
+enum HedgeState {
+    /// Primary routed; the hedge copy fires at `fire_at` unless the
+    /// primary completes first.
+    Pending { item: TraceItem, fire_at: f64, primary: Placement },
+    /// Both copies in flight; first completion wins.
+    Outstanding { primary: Placement, hedge: Placement },
+    /// One copy died with its replica; the survivor carries the request
+    /// alone (its crash or completion settles the lineage).
+    HalfDead { live: Placement, live_is_hedge: bool },
+}
+
+/// A loser copy that could not be cancelled yet (unsafe phase); retried
+/// every iteration until the cancel lands or the copy terminates on its
+/// own.
+#[derive(Clone, Copy)]
+struct PendingCancel {
+    key: Key,
+    target: Placement,
+}
+
+/// All guardrail state for one fleet run.
+struct Guardrails {
+    g: GuardrailConfig,
+    /// Backoff jitter; dedicated stream so enabling guardrails never
+    /// perturbs the fault or router timelines.
+    rng: Rng,
+    /// Retry attempts consumed per lineage (keys are item coordinates,
+    /// so the map iterates deterministically).
+    attempts: BTreeMap<Key, u32>,
+    retry_q: Vec<RetryEntry>,
+    /// Every (replica, id) a retry was injected at — scanned at the end
+    /// for `FaultTally::recovered` (displaced requests that completed
+    /// after a retry).
+    retry_marks: Vec<Placement>,
+    hedges: BTreeMap<Key, HedgeState>,
+    cancels: Vec<PendingCancel>,
+    brownout: Brownout,
+    stats: GuardrailStats,
+}
+
+impl Guardrails {
+    fn new(g: GuardrailConfig, seed: u64) -> Self {
+        let brownout = Brownout::new(&g);
+        Guardrails {
+            g,
+            rng: Rng::new(derive_seed(seed, stream::GUARDRAILS)),
+            attempts: BTreeMap::new(),
+            retry_q: Vec::new(),
+            retry_marks: Vec::new(),
+            hedges: BTreeMap::new(),
+            cancels: Vec::new(),
+            brownout,
+            stats: GuardrailStats::default(),
+        }
+    }
+
+    /// Earliest retry backoff expiry (an event source).
+    fn next_retry_at(&self) -> f64 {
+        self.retry_q.iter().map(|e| e.due).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Earliest pending hedge fire (an event source).
+    fn next_hedge_at(&self) -> f64 {
+        if !self.g.hedge {
+            return f64::INFINITY;
+        }
+        self.hedges
+            .values()
+            .filter_map(|st| match st {
+                HedgeState::Pending { fire_at, .. } => Some(*fire_at),
+                _ => None,
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Settle one crash- or abort-displaced request against the guardrail
+/// state: a pending loser-cancel is consumed by the death itself, a
+/// hedge pair collapses to its survivor, and whatever remains is either
+/// queued for a budgeted retry or settled terminally (legacy re-route /
+/// `lost` for crashes, `aborted` for aborts).
+///
+/// Lineage keys are the item's immutable coordinates, so two distinct
+/// requests with bit-identical (arrival, prompt_len, true_rl) would
+/// share a lineage; fleet traces have continuous Poisson arrivals, so
+/// collisions do not occur in practice (and the hedge map's
+/// entry-or-insert guards the pathological case).
+#[allow(clippy::too_many_arguments)]
+fn handle_displaced(
+    gr: &mut Guardrails,
+    rid: usize,
+    it: TraceItem,
+    origin: DisplaceOrigin,
+    t: f64,
+    cfg: &crate::config::SystemConfig,
+    do_reroute: bool,
+    legacy_reroute: &mut Vec<TraceItem>,
+    tally: &mut FaultTally,
+) {
+    let key = reliability::lineage_key(&it);
+
+    // A loser copy awaiting cancellation: its death IS the cancel.
+    if let Some(pos) = gr.cancels.iter().position(|c| c.key == key && c.target.0 == rid) {
+        gr.cancels.remove(pos);
+        gr.stats.hedges_lost += 1;
+        return;
+    }
+
+    // Collapse the hedge pair, if this lineage has one.
+    if let Some(state) = gr.hedges.get(&key).copied() {
+        match state {
+            HedgeState::Pending { primary, .. } => {
+                if primary.0 == rid {
+                    // Sole copy died before the hedge fired; the retry
+                    // machinery below takes over.
+                    gr.hedges.remove(&key);
+                }
+            }
+            HedgeState::Outstanding { primary, hedge } => {
+                if hedge.0 == rid {
+                    // The hedge copy died; the primary carries on alone.
+                    gr.stats.hedges_lost += 1;
+                    gr.hedges
+                        .insert(key, HedgeState::HalfDead { live: primary, live_is_hedge: false });
+                    return;
+                }
+                if primary.0 == rid {
+                    // The primary died; the hedge copy carries on alone.
+                    gr.hedges
+                        .insert(key, HedgeState::HalfDead { live: hedge, live_is_hedge: true });
+                    return;
+                }
+            }
+            HedgeState::HalfDead { live, live_is_hedge } => {
+                if live.0 == rid {
+                    // Both copies are now dead; exactly one displacement
+                    // (this one) proceeds to the retry machinery.
+                    if live_is_hedge {
+                        gr.stats.hedges_lost += 1;
+                    }
+                    gr.hedges.remove(&key);
+                }
+            }
+        }
+    }
+
+    if !gr.g.retry {
+        match origin {
+            // Without the retry guardrail, crash displacement follows
+            // the legacy chaos-layer path exactly (immediate re-route
+            // or lost) — enabling hedging alone must never downgrade a
+            // crash-displaced request's handling.
+            DisplaceOrigin::Crash if do_reroute => legacy_reroute.push(it),
+            DisplaceOrigin::Crash => tally.lost += 1,
+            DisplaceOrigin::Abort => {
+                tally.aborted += 1;
+                gr.stats.aborted_deadline += 1;
+            }
+        }
+        return;
+    }
+
+    let k = gr.attempts.entry(key).or_insert(0);
+    let deadline = it.arrival + cfg.slo_budget(it.true_rl);
+    let feasible = origin == DisplaceOrigin::Crash
+        || gr.g.retry_feasible(t, &it, cfg.t_p, cfg.t_g, deadline);
+    if *k < gr.g.max_retries && feasible {
+        *k += 1;
+        let u = gr.rng.f64();
+        let due = t + gr.g.backoff(*k - 1, u);
+        gr.retry_q.push(RetryEntry { key, item: it, origin, due });
+    } else {
+        match origin {
+            DisplaceOrigin::Crash => tally.lost += 1,
+            DisplaceOrigin::Abort => {
+                tally.aborted += 1;
+                gr.stats.aborted_deadline += 1;
+            }
+        }
+    }
+}
+
+/// Scan every hedge pair for completions (first finisher wins, the
+/// loser is cancelled), then drive the pending loser-cancellations that
+/// were waiting for a safe phase. Runs after each advance; reads and
+/// mutates only single-threaded state, so the outcome is bit-identical
+/// at any thread count.
+fn resolve_hedges(gr: &mut Guardrails, replicas: &mut [Replica], tally: &mut FaultTally) {
+    enum Act {
+        Drop(Key),
+        HalfLiveDone { key: Key, live_is_hedge: bool },
+        PrimaryWon { key: Key, loser: Placement },
+        HedgeWon { key: Key, loser: Placement },
+        BothDone { key: Key, winner_is_hedge: bool, loser: Placement },
+    }
+    let mut acts: Vec<Act> = Vec::new();
+    for (&key, st) in gr.hedges.iter() {
+        match *st {
+            HedgeState::Pending { primary, .. } => {
+                if replicas[primary.0].stepper.world.recs[primary.1].done_at.is_some() {
+                    acts.push(Act::Drop(key));
+                }
+            }
+            HedgeState::Outstanding { primary, hedge } => {
+                let pd = replicas[primary.0].stepper.world.recs[primary.1].done_at;
+                let hd = replicas[hedge.0].stepper.world.recs[hedge.1].done_at;
+                match (pd, hd) {
+                    (Some(_), None) => acts.push(Act::PrimaryWon { key, loser: hedge }),
+                    (None, Some(_)) => acts.push(Act::HedgeWon { key, loser: primary }),
+                    (Some(p), Some(h)) => {
+                        // Both copies finished inside one advance
+                        // window: earlier completion wins, placement
+                        // order breaks exact ties — deterministic
+                        // either way.
+                        let hedge_wins = h < p || (h == p && hedge < primary);
+                        if hedge_wins {
+                            acts.push(Act::BothDone { key, winner_is_hedge: true, loser: primary });
+                        } else {
+                            acts.push(Act::BothDone { key, winner_is_hedge: false, loser: hedge });
+                        }
+                    }
+                    (None, None) => {}
+                }
+            }
+            HedgeState::HalfDead { live, live_is_hedge } => {
+                if replicas[live.0].stepper.world.recs[live.1].done_at.is_some() {
+                    acts.push(Act::HalfLiveDone { key, live_is_hedge });
+                }
+            }
+        }
+    }
+    for act in acts {
+        match act {
+            Act::Drop(key) => {
+                gr.hedges.remove(&key);
+            }
+            Act::HalfLiveDone { key, live_is_hedge } => {
+                if live_is_hedge {
+                    tally.hedges_won += 1;
+                }
+                gr.hedges.remove(&key);
+            }
+            Act::PrimaryWon { key, loser } => {
+                gr.hedges.remove(&key);
+                gr.cancels.push(PendingCancel { key, target: loser });
+            }
+            Act::HedgeWon { key, loser } => {
+                tally.hedges_won += 1;
+                gr.hedges.remove(&key);
+                gr.cancels.push(PendingCancel { key, target: loser });
+            }
+            Act::BothDone { key, winner_is_hedge, loser } => {
+                if winner_is_hedge {
+                    tally.hedges_won += 1;
+                }
+                // The loser's completion is voided (it stays terminal
+                // but no longer counts as done); the completion
+                // counters it already bumped are reconciled via
+                // `hedges_total{outcome="duplicate"}`.
+                replicas[loser.0].stepper.world.void_completion(loser.1);
+                gr.stats.hedges_dup += 1;
+                gr.hedges.remove(&key);
+            }
+        }
+    }
+    // Drive the pending cancels: each either lands now (safe phase),
+    // resolves because the copy terminated on its own, or waits for a
+    // later iteration.
+    let mut idx = 0;
+    while idx < gr.cancels.len() {
+        let c = gr.cancels[idx];
+        let r = &mut replicas[c.target.0];
+        if r.state.is_terminal() {
+            // Crash settled it (normally consumed by handle_displaced;
+            // defensive for a crash landing after the pair resolved).
+            gr.stats.hedges_lost += 1;
+            gr.cancels.remove(idx);
+            continue;
+        }
+        let world = &mut r.stepper.world;
+        if world.recs[c.target.1].done_at.is_some() {
+            // The loser outran the cancel and completed: a duplicate,
+            // voided exactly like the same-window race above.
+            world.void_completion(c.target.1);
+            gr.stats.hedges_dup += 1;
+            gr.cancels.remove(idx);
+        } else if world.recs[c.target.1].is_done() {
+            // Terminal without a completion (aborted elsewhere).
+            gr.stats.hedges_lost += 1;
+            gr.cancels.remove(idx);
+        } else if world.cancel_if_safe(c.target.1) {
+            gr.stats.hedges_lost += 1;
+            gr.cancels.remove(idx);
+        } else {
+            idx += 1;
+        }
     }
 }
 
@@ -171,22 +510,19 @@ fn advance_live(replicas: &mut [Replica], horizon: f64, threads: usize) {
     }
 }
 
-/// Crash one replica and file its unfinished requests: into the
-/// re-route buffer (health-aware fleet, reroute profile) or straight
-/// into the lost tally.
+/// Crash one replica and stage its unfinished requests, tagged with the
+/// dead replica's index (the guardrail layer needs the provenance to
+/// collapse hedge pairs); the caller settles them via
+/// [`handle_displaced`] or the legacy re-route/lost path.
 fn kill_replica(
+    rid: usize,
     r: &mut Replica,
     t: f64,
-    do_reroute: bool,
-    reroute_buf: &mut Vec<TraceItem>,
+    displaced: &mut Vec<(usize, TraceItem)>,
     tally: &mut FaultTally,
 ) {
     let lost = r.crash(t);
-    if do_reroute {
-        reroute_buf.extend(lost);
-    } else {
-        tally.lost += lost.len();
-    }
+    displaced.extend(lost.into_iter().map(|it| (rid, it)));
     tally.crashes += 1;
 }
 
@@ -198,9 +534,8 @@ fn apply_fault(
     ev: faults::FaultEvent,
     replicas: &mut [Replica],
     profile: &faults::FaultProfile,
-    reroute_buf: &mut Vec<TraceItem>,
+    displaced: &mut Vec<(usize, TraceItem)>,
     tally: &mut FaultTally,
-    do_reroute: bool,
     t: f64,
 ) -> usize {
     let mut killed = 0usize;
@@ -218,7 +553,7 @@ fn apply_fault(
             if let Some(&victim) =
                 candidates.get((ev.pick % candidates.len().max(1) as u64) as usize)
             {
-                kill_replica(&mut replicas[victim], t, do_reroute, reroute_buf, tally);
+                kill_replica(victim, &mut replicas[victim], t, displaced, tally);
                 killed = 1;
             }
         }
@@ -229,7 +564,7 @@ fn apply_fault(
             let zone = (ev.pick % profile.zones.max(1) as u64) as usize;
             for (id, r) in replicas.iter_mut().enumerate() {
                 if !r.state.is_terminal() && id % profile.zones.max(1) == zone {
-                    kill_replica(r, t, do_reroute, reroute_buf, tally);
+                    kill_replica(id, r, t, displaced, tally);
                     killed += 1;
                 }
             }
@@ -277,9 +612,22 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
     let chaos = profile.is_active();
     let mut injector = Injector::new(profile, derive_seed(fc.cfg.seed, stream::FAULTS));
     let mut tally = FaultTally::default();
+    let guard = GuardrailConfig::parse(&fc.guardrails)
+        .unwrap_or_else(|| panic!("unknown guardrail mode '{}'", fc.guardrails));
+    // Like chaos above: "off" takes every guardrail branch out of the
+    // loop, and the GUARDRAILS rng stream is never touched.
+    let guard_on = guard.is_active();
+    let mut gr = Guardrails::new(guard, fc.cfg.seed);
+    let knobs = fc.knobs();
+    // Whether crash-displaced work re-routes under the LEGACY path
+    // (health-aware fleet + reroute profile); with the retry guardrail
+    // the same displacements go through the backoff queue instead.
+    let do_reroute = fc.health_aware && profile.reroute;
     // Replicas lost to faults since the last control tick (autoscaler
-    // observation) and the re-route staging buffer.
+    // observation), the displaced staging buffer (tagged with the dead
+    // replica), and the legacy re-route staging buffer.
     let mut crashed_since_tick = 0usize;
+    let mut displaced: Vec<(usize, TraceItem)> = Vec::new();
     let mut reroute_buf: Vec<TraceItem> = Vec::new();
 
     // Concurrent stepping under MEASURED scheduler-time charging
@@ -307,8 +655,9 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
     let mut snaps: Vec<ReplicaSnapshot> = Vec::new();
 
     loop {
-        let work_left =
-            i < items.len() || replicas.iter().any(|r| !r.stepper.world.all_done());
+        let work_left = i < items.len()
+            || replicas.iter().any(|r| !r.stepper.world.all_done())
+            || (guard_on && !gr.retry_q.is_empty());
         if !work_left {
             break;
         }
@@ -324,7 +673,18 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
             .filter(|r| !r.state.is_terminal())
             .map(|r| r.slow_until)
             .fold(f64::INFINITY, f64::min);
-        let t = t_arr.min(t_boot).min(next_ctl).min(t_fault).min(t_recover).max(clock);
+        let t_guard = if guard_on {
+            gr.next_retry_at().min(gr.next_hedge_at())
+        } else {
+            f64::INFINITY
+        };
+        let t = t_arr
+            .min(t_boot)
+            .min(next_ctl)
+            .min(t_fault)
+            .min(t_recover)
+            .min(t_guard)
+            .max(clock);
         if t > fc.max_sim_time {
             advance_live(&mut replicas, fc.max_sim_time, threads);
             clock = clock.max(fc.max_sim_time);
@@ -350,6 +710,12 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
             r.retire_if_drained(t);
         }
 
+        // Settle hedge races from the advance just completed BEFORE new
+        // faults land: a completion that beat a crash wins.
+        if guard_on && gr.g.hedge {
+            resolve_hedges(&mut gr, &mut replicas, &mut tally);
+        }
+
         if chaos {
             // Straggler recoveries due at t come first, so an episode
             // scheduled to start at the same instant is not erased.
@@ -360,16 +726,31 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                 }
             }
             while let Some(ev) = injector.pop_due(t) {
-                let killed = apply_fault(
-                    ev,
-                    &mut replicas,
-                    &profile,
-                    &mut reroute_buf,
-                    &mut tally,
-                    fc.health_aware && profile.reroute,
-                    t,
-                );
+                let killed =
+                    apply_fault(ev, &mut replicas, &profile, &mut displaced, &mut tally, t);
                 crashed_since_tick += killed;
+            }
+            // Settle crash-displaced requests: through the guardrail
+            // machinery (hedge collapse + budgeted retries) when
+            // enabled, else the legacy immediate re-route / lost path.
+            for (rid, it) in std::mem::take(&mut displaced) {
+                if guard_on {
+                    handle_displaced(
+                        &mut gr,
+                        rid,
+                        it,
+                        DisplaceOrigin::Crash,
+                        t,
+                        &fc.cfg,
+                        do_reroute,
+                        &mut reroute_buf,
+                        &mut tally,
+                    );
+                } else if do_reroute {
+                    reroute_buf.push(it);
+                } else {
+                    tally.lost += 1;
+                }
             }
             // Re-route requests caught on crashed replicas (health-aware
             // fleets with a reroute profile): each keeps its ORIGINAL
@@ -389,6 +770,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                 }
                 let pick = snaps[router.route(&snaps)].id;
                 let r = &mut replicas[pick];
+                debug_assert_eq!(r.state, ReplicaState::Active);
                 r.stepper.inject(&it);
                 r.log.rerouted += 1;
                 tally.rerouted += 1;
@@ -413,10 +795,114 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
             }
         }
 
+        // Fire retries whose backoff expired. Runs outside the chaos
+        // gate: abort-displaced retries exist without a fault profile.
+        if guard_on && !gr.retry_q.is_empty() {
+            let mut idx = 0;
+            while idx < gr.retry_q.len() {
+                if gr.retry_q[idx].due > t {
+                    idx += 1;
+                    continue;
+                }
+                let e = gr.retry_q.remove(idx);
+                snaps.clear();
+                for (id, r) in replicas.iter().enumerate() {
+                    if r.state == ReplicaState::Active {
+                        snaps.push(r.snapshot(id, true));
+                    }
+                }
+                if snaps.is_empty() {
+                    // Nowhere to land. Re-defer on a fresh backoff —
+                    // consuming an attempt, so a dead fleet cannot spin
+                    // a retry forever — or settle terminally.
+                    let k = gr.attempts.entry(e.key).or_insert(0);
+                    if *k < gr.g.max_retries {
+                        *k += 1;
+                        let u = gr.rng.f64();
+                        let due = t + gr.g.backoff(*k - 1, u);
+                        gr.retry_q.push(RetryEntry { due, ..e });
+                    } else {
+                        match e.origin {
+                            DisplaceOrigin::Crash => tally.lost += 1,
+                            DisplaceOrigin::Abort => {
+                                tally.aborted += 1;
+                                gr.stats.aborted_deadline += 1;
+                            }
+                        }
+                    }
+                    continue;
+                }
+                let pick = snaps[router.route(&snaps)].id;
+                let r = &mut replicas[pick];
+                debug_assert_eq!(r.state, ReplicaState::Active);
+                let id = r.stepper.inject(&e.item);
+                r.log.rerouted += 1;
+                tally.retried += 1;
+                gr.retry_marks.push((pick, id));
+            }
+        }
+
+        // Launch hedge copies whose straggler delay expired.
+        if guard_on && gr.g.hedge {
+            let due: Vec<Key> = gr
+                .hedges
+                .iter()
+                .filter_map(|(&k, st)| match *st {
+                    HedgeState::Pending { fire_at, .. } if fire_at <= t => Some(k),
+                    _ => None,
+                })
+                .collect();
+            for key in due {
+                let Some(HedgeState::Pending { item, primary, .. }) =
+                    gr.hedges.get(&key).copied()
+                else {
+                    continue;
+                };
+                if replicas[primary.0].stepper.world.recs[primary.1].done_at.is_some() {
+                    gr.hedges.remove(&key);
+                    continue;
+                }
+                snaps.clear();
+                for (id, r) in replicas.iter().enumerate() {
+                    if r.state == ReplicaState::Active && id != primary.0 {
+                        snaps.push(r.snapshot(id, true));
+                    }
+                }
+                if snaps.is_empty() {
+                    // No second replica to hedge on: re-arm one delay
+                    // out and re-check then.
+                    gr.hedges.insert(
+                        key,
+                        HedgeState::Pending { item, fire_at: t + gr.g.hedge_delay, primary },
+                    );
+                    continue;
+                }
+                let pick = snaps[router.route(&snaps)].id;
+                let r = &mut replicas[pick];
+                let hid = r.stepper.inject(&item);
+                r.log.rerouted += 1;
+                gr.stats.hedges_launched += 1;
+                gr.hedges.insert(key, HedgeState::Outstanding { primary, hedge: (pick, hid) });
+            }
+        }
+
         // Route every arrival due at this event time, re-snapshotting
         // between picks so balance-sensitive routers see their own
         // effect.
         while i < items.len() && items[i].arrival <= t {
+            // The autoscaler observes OFFERED load — brownout-shed
+            // arrivals included, so recovery capacity is provisioned
+            // for the demand that will return.
+            scaler.on_arrival(items[i].arrival);
+            if guard_on && gr.g.brownout && !gr.brownout.admits(items[i].prompt_len) {
+                // Tier 1 sheds the batch class, tier 2 rejects all. In
+                // the served system this surfaces as HTTP 503 +
+                // Retry-After; here the arrival is terminal.
+                tally.aborted += 1;
+                gr.stats.aborted_brownout += 1;
+                i += 1;
+                continue;
+            }
             snaps.clear();
             for (id, r) in replicas.iter().enumerate() {
                 match r.state {
@@ -432,7 +918,6 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                     _ => {}
                 }
             }
-            scaler.on_arrival(items[i].arrival);
             if snaps.is_empty() {
                 assert!(chaos, "no routable replica (min_replicas >= 1)");
                 // Whole fleet dead or booting: the arrival has nowhere
@@ -448,7 +933,19 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
             r.log.last_routed_at = Some(items[i].arrival);
             routed += 1;
             if r.state == ReplicaState::Active {
-                r.stepper.inject(&items[i]);
+                let id = r.stepper.inject(&items[i]);
+                if guard_on && gr.g.hedge {
+                    // Arm the straggler hedge; `or_insert` guards the
+                    // (trace-pathological) case of two requests with
+                    // bit-identical coordinates.
+                    gr.hedges.entry(reliability::lineage_key(&items[i])).or_insert(
+                        HedgeState::Pending {
+                            item: items[i],
+                            fire_at: items[i].arrival + gr.g.hedge_delay,
+                            primary: (pick, id),
+                        },
+                    );
+                }
             } else {
                 // Routed to a corpse (health-blind, or no survivor to
                 // prefer): the request is gone.
@@ -458,11 +955,45 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
         }
 
         if next_ctl <= t {
+            // Deadline-aware abort sweep first: cancelling provably
+            // hopeless decodes frees KVC before the snapshot below, so
+            // the brownout controller and autoscaler both see the
+            // post-abort state.
+            if guard_on && gr.g.abort {
+                for rid in 0..replicas.len() {
+                    if !matches!(
+                        replicas[rid].state,
+                        ReplicaState::Active | ReplicaState::Draining
+                    ) {
+                        continue;
+                    }
+                    let aborted =
+                        replicas[rid].stepper.world.abort_hopeless(fc.oracle, gr.g.abort_slack);
+                    displaced.extend(aborted.into_iter().map(|it| (rid, it)));
+                }
+                for (rid, it) in std::mem::take(&mut displaced) {
+                    handle_displaced(
+                        &mut gr,
+                        rid,
+                        it,
+                        DisplaceOrigin::Abort,
+                        t,
+                        &fc.cfg,
+                        do_reroute,
+                        &mut reroute_buf,
+                        &mut tally,
+                    );
+                }
+            }
             snaps.clear();
             for (id, r) in replicas.iter().enumerate() {
                 if r.state == ReplicaState::Active {
                     snaps.push(r.snapshot(id, true));
                 }
+            }
+            if guard_on && gr.g.brownout {
+                let p = reliability::fleet_pressure(&snaps, knobs.resident_ceiling);
+                gr.brownout.update(p);
             }
             let booting =
                 replicas.iter().filter(|r| r.state == ReplicaState::Booting).count();
@@ -518,6 +1049,36 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
         }
     }
 
+    // Settle guardrail state left at exit: hedge races from the final
+    // advance, then any retries still waiting out a backoff when the
+    // trace ran dry or the cap hit (they settle terminally — there is
+    // no later event to fire them).
+    if guard_on {
+        if gr.g.hedge {
+            resolve_hedges(&mut gr, &mut replicas, &mut tally);
+        }
+        for e in gr.retry_q.drain(..) {
+            match e.origin {
+                DisplaceOrigin::Crash => tally.lost += 1,
+                DisplaceOrigin::Abort => {
+                    tally.aborted += 1;
+                    gr.stats.aborted_deadline += 1;
+                }
+            }
+        }
+        tally.recovered = gr
+            .retry_marks
+            .iter()
+            .filter(|&&(rid, id)| replicas[rid].stepper.world.recs[id].done_at.is_some())
+            .count();
+        gr.stats.brownout_peak = gr.brownout.peak();
+        debug_assert_eq!(
+            tally.aborted,
+            gr.stats.aborted_deadline + gr.stats.aborted_brownout,
+            "abort tally must decompose by reason"
+        );
+    }
+
     // Drains still pending at exit — ordered at the final control tick
     // (natural completion) or finishing during the final advance (cap
     // exit) — retire here so their GPU billing stops at the true finish
@@ -526,7 +1087,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
         r.retire_if_drained(clock);
     }
 
-    finalize(fc, &replicas, items.len(), routed, clock, boots, peak, floor, tally)
+    finalize(fc, &replicas, items.len(), routed, clock, boots, peak, floor, tally, &gr.stats)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -540,6 +1101,7 @@ fn finalize(
     peak: usize,
     floor: usize,
     tally: FaultTally,
+    gstats: &GuardrailStats,
 ) -> FleetResult {
     let gpus = fc.cfg.profile.gpus_per_replica as f64;
     let mut jct = Samples::new();
@@ -549,8 +1111,9 @@ fn finalize(
     for r in replicas {
         // Requests lost to a crash carry `done_at = None` (no `jct()`),
         // so they are excluded here and count as SLO misses — and a
-        // re-routed request is only ever counted on the replica that
-        // actually finished it.
+        // re-routed (or hedged: the loser's completion is voided)
+        // request is only ever counted on the replica that actually
+        // finished it.
         for rec in &r.stepper.world.recs {
             if let Some(j) = rec.jct() {
                 n_done += 1;
@@ -588,7 +1151,7 @@ fn finalize(
         logs.push(r.log.clone());
     }
     let gpu_hours = gpu_seconds / 3600.0;
-    let metrics = fleet_metrics_text(replicas, boots, retirements, &tally);
+    let metrics = fleet_metrics_text(replicas, boots, retirements, &tally, gstats);
     FleetResult {
         summary: FleetSummary {
             n_total,
@@ -632,6 +1195,7 @@ fn fleet_metrics_text(
     boots: usize,
     retirements: usize,
     tally: &FaultTally,
+    gstats: &GuardrailStats,
 ) -> String {
     use crate::telemetry::{FleetMetrics, Snapshot};
     let mut merged: Option<Snapshot> = None;
@@ -652,6 +1216,14 @@ fn fleet_metrics_text(
     fleet.reroutes.add(tally.rerouted as u64);
     fleet.boots.add(boots as u64);
     fleet.retirements.add(retirements as u64);
+    fleet.retries.add(tally.retried as u64);
+    fleet.hedges_launched.add(gstats.hedges_launched as u64);
+    fleet.hedges_won.add(tally.hedges_won as u64);
+    fleet.hedges_lost.add(gstats.hedges_lost as u64);
+    fleet.hedges_dup.add(gstats.hedges_dup as u64);
+    fleet.aborts_deadline.add(gstats.aborted_deadline as u64);
+    fleet.aborts_brownout.add(gstats.aborted_brownout as u64);
+    fleet.brownout_level.set(gstats.brownout_peak as f64);
     let fleet_snap = Snapshot::parse(&fleet.registry().render())
         .expect("fleet registry render is valid exposition text");
     match merged {

@@ -90,6 +90,7 @@ pub mod exp;
 pub mod figures;
 pub mod fleet;
 pub mod ordering;
+pub mod reliability;
 pub mod sched;
 pub mod core;
 pub mod kvc;

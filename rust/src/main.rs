@@ -176,15 +176,15 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
     let cli = Cli::new(
         "econoserve sweep",
         "parallel experiment grid: fan independent cells (system x model x trace x rate x \
-         seed [x router x autoscaler x faults]) over worker threads; JSON spec in, one \
-         JSON row per cell out, bit-identical at any thread count",
+         seed [x router x autoscaler x faults x guardrails]) over worker threads; JSON \
+         spec in, one JSON row per cell out, bit-identical at any thread count",
     )
     .opt(
         "grid",
         "",
         "JSON grid-spec file (keys: systems, models, traces, rates, rate_points, seeds, \
-         routers, autoscalers, faults, replicas, duration, max_time, oracle, threads); \
-         when set, the inline axis options below are ignored",
+         routers, autoscalers, faults, guardrails, replicas, duration, max_time, oracle, \
+         threads); when set, the inline axis options below are ignored",
     )
     .opt("systems", "econoserve", "comma list of systems ('<sched>' or '<sched>+<alloc>')")
     .opt("model", "opt-13b", "comma list of model profiles")
@@ -195,6 +195,12 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
     .opt("routers", "", "comma list of fleet routers (set with --autoscalers for fleet cells)")
     .opt("autoscalers", "", "comma list of fleet autoscalers")
     .opt("faults", "", "comma list of fault profiles for fleet cells (empty = fault-free)")
+    .opt(
+        "guardrails",
+        "",
+        "comma list of reliability guardrail modes for fleet cells, e.g. off,retry+hedge \
+         (empty = off)",
+    )
     .opt("replicas", "2", "fleet size bound for fleet cells")
     .opt("duration", "30", "workload duration, simulated seconds")
     .opt("max-time", "900", "simulated-time cap (drain allowance)")
@@ -243,6 +249,7 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
             routers: a.str_list("routers"),
             autoscalers: a.str_list("autoscalers"),
             faults: a.str_list("faults"),
+            guardrails: a.str_list("guardrails"),
             replicas: a.usize("replicas"),
             duration: a.f64("duration"),
             max_time: a.f64("max-time"),
@@ -554,10 +561,18 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
          under the profile against its own fault-free baseline",
     )
     .opt(
+        "guardrails",
+        "off",
+        "reliability guardrails: off | full | '+'-joined {retry, hedge, abort, brownout} \
+         (e.g. retry+hedge); when not 'off' in plain mode, an off-guardrails reference \
+         run is printed alongside for comparison",
+    )
+    .opt(
         "metrics-out",
         "",
         "write the fleet's merged telemetry registry (Prometheus text) here \
-         (ignored in --chaos comparison mode, which runs many fleets)",
+         (in --chaos comparison mode: the telemetry of one run under the profile \
+         with the configured router and guardrails)",
     )
     .flag("oracle", "use ground-truth response lengths")
     .flag(
@@ -625,11 +640,21 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
         );
         return 2;
     };
+    let guard_name = a.get("guardrails");
+    if econoserve::reliability::GuardrailConfig::parse(guard_name).is_none() {
+        eprintln!(
+            "unknown guardrail mode '{guard_name}' (expected 'off', 'full', or \
+             '+'-joined {{retry, hedge, abort, brownout}})"
+        );
+        return 2;
+    }
+    fc.guardrails = guard_name.to_string();
     if profile.is_active() {
         fc.faults = chaos_name.to_string();
         println!(
-            "fleet chaos: profile={chaos_name} system={} trace={trace_name} workload={} \
-             (mean {mean_rate:.2}/s) autoscaler={} replicas {}..{} n={}",
+            "fleet chaos: profile={chaos_name} guardrails={guard_name} system={} \
+             trace={trace_name} workload={} (mean {mean_rate:.2}/s) autoscaler={} \
+             replicas {}..{} n={}",
             fc.system,
             a.get("workload"),
             fc.autoscaler,
@@ -638,8 +663,17 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
             items.len()
         );
         println!(
-            "  {:<14} {:>9} {:>9} {:>8} {:>9} {:>8} {:>6} {:>6}",
-            "router", "gput-ret%", "ssr-ret%", "crashes", "bootfail", "rerouted", "lost", "ssr%"
+            "  {:<14} {:>9} {:>9} {:>8} {:>9} {:>8} {:>6} {:>7} {:>6} {:>6}",
+            "router",
+            "gput-ret%",
+            "ssr-ret%",
+            "crashes",
+            "bootfail",
+            "rerouted",
+            "lost",
+            "retried",
+            "recov",
+            "ssr%"
         );
         for router in econoserve::fleet::all_routers() {
             let mut rc = fc.clone();
@@ -647,7 +681,7 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
             let out = fleet::chaos_run(&rc, &items);
             let f = &out.chaos.faults;
             println!(
-                "  {:<14} {:>9.1} {:>9.1} {:>8} {:>9} {:>8} {:>6} {:>6.1}",
+                "  {:<14} {:>9.1} {:>9.1} {:>8} {:>9} {:>8} {:>6} {:>7} {:>6} {:>6.1}",
                 router,
                 out.goodput_retention() * 100.0,
                 out.ssr_retention() * 100.0,
@@ -655,6 +689,8 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
                 f.boot_failures,
                 f.rerouted,
                 f.lost,
+                f.retried,
+                f.recovered,
                 out.chaos.ssr * 100.0,
             );
         }
@@ -670,6 +706,18 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
             blind.ssr_retention() * 100.0,
             fc.router,
         );
+        let metrics_out = a.get("metrics-out");
+        if !metrics_out.is_empty() {
+            // One more run with the configured router + guardrails under
+            // the profile: its merged telemetry is the exported artifact
+            // (the comparison table above runs many fleets).
+            let res = fleet::run(&fc, &items);
+            if let Err(e) = std::fs::write(metrics_out, &res.metrics) {
+                eprintln!("write {metrics_out}: {e}");
+                return 1;
+            }
+            println!("  telemetry (router={}, guardrails={guard_name}) -> {metrics_out}", fc.router);
+        }
         return 0;
     }
     println!(
@@ -702,6 +750,31 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
             log.drain_at.map(|t| format!("  drained {t:.1}s")).unwrap_or_default(),
             log.retired_at.map(|t| format!("  retired {t:.1}s")).unwrap_or_default(),
             log.crashed_at.map(|t| format!("  crashed {t:.1}s")).unwrap_or_default(),
+        );
+    }
+    if econoserve::reliability::GuardrailConfig::parse(guard_name)
+        .is_some_and(|g| g.is_active())
+    {
+        // Reference run with guardrails off: same fleet, same workload,
+        // same fault/router/autoscaler streams (the guardrail rng is a
+        // dedicated stream, so the comparison is apples to apples).
+        let mut oc = fc.clone();
+        oc.guardrails = "off".to_string();
+        let off = fleet::run(&oc, &items);
+        print_fleet_summary("guardrails-off", &off.summary);
+        let s = &res.summary;
+        let b = &off.summary;
+        println!(
+            "  guardrails={guard_name} vs off: goodput {:+.2} req/s, SSR {:+.1}pp, \
+             lost {} vs {}, retried {} recovered {} hedges won {} aborted {}",
+            s.goodput_rps - b.goodput_rps,
+            (s.ssr - b.ssr) * 100.0,
+            s.faults.lost,
+            b.faults.lost,
+            s.faults.retried,
+            s.faults.recovered,
+            s.faults.hedges_won,
+            s.faults.aborted,
         );
     }
     if a.bool("compare-static") {
@@ -758,6 +831,12 @@ fn print_fleet_summary(label: &str, s: &econoserve::fleet::FleetSummary) {
              rerouted {}  lost {}",
             f.crashes, f.zone_outages, f.stragglers, f.boot_failures, f.rerouted, f.lost,
         );
+        if f.retried + f.recovered + f.hedges_won + f.aborted > 0 {
+            println!(
+                "  guardrails: retried {}  recovered {}  hedges won {}  aborted {}",
+                f.retried, f.recovered, f.hedges_won, f.aborted,
+            );
+        }
     }
 }
 

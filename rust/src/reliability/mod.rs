@@ -1,0 +1,465 @@
+//! Reliability guardrails: deadline-aware aborts, budgeted retries with
+//! backoff, request hedging, and brownout overload control.
+//!
+//! EconoServe's core mechanism is *timely KVC release* — §3.2's insight
+//! that the KVC a finished request holds is worth more to the queue than
+//! to the finisher. This module applies the same economics to requests
+//! that are not going to finish *in time*:
+//!
+//!  * **Deadline-aware abort** — a request whose minimum remaining
+//!    decode time provably exceeds its remaining SLO slack is hopeless:
+//!    every further iteration it runs converts KVC into an SLO miss.
+//!    [`crate::core::world::World::abort_hopeless`] cancels such
+//!    requests between iterations and releases their KVC to queued work.
+//!  * **Retry budgets** — crash-displaced and aborted requests get up to
+//!    [`GuardrailConfig::max_retries`] re-routes, spaced by exponential
+//!    backoff with seeded deterministic jitter
+//!    (`util::rng::stream::GUARDRAILS`), re-injected via
+//!    `World::push_item` with their ORIGINAL arrival so the SLO deadline
+//!    never moves (the same idempotence contract as chaos re-routes).
+//!  * **Hedging** — the front door dispatches a second copy of a
+//!    still-unfinished request after [`GuardrailConfig::hedge_delay`]
+//!    seconds; the first completion wins and the loser is cancelled,
+//!    freeing its KVC. Tail insurance against stragglers.
+//!  * **Brownout** — a tiered admission controller
+//!    (normal → shed-batch-class → reject) driven by fleet queue/KVC
+//!    pressure. In the sim it gates arrivals; on the HTTP server it
+//!    surfaces as `503` + `Retry-After` (`api::ServeError::Brownout`).
+//!
+//! ## Determinism contract
+//!
+//! Every guardrail decision is a pure function of (config, seed):
+//! aborts and brownout levels read simulated state that is
+//! thread-invariant, hedge fire times are arithmetic on routing times,
+//! and retry jitter draws come from the dedicated `GUARDRAILS` RNG
+//! stream consumed only at single-threaded event-loop points. The
+//! equivalence suite pins fleet summaries and merged telemetry
+//! bit-identical at any thread count with all guardrails enabled.
+
+use crate::trace::TraceItem;
+
+/// Tunable guardrail switches + knobs. Parse a mode string with
+/// [`GuardrailConfig::parse`]; `off()` (all gates closed) leaves a fleet
+/// run bit-identical to a build without guardrails.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GuardrailConfig {
+    /// Cancel provably-hopeless decodes and release their KVC.
+    pub abort: bool,
+    /// Re-route crash-displaced / aborted requests with backoff.
+    pub retry: bool,
+    /// Dispatch a second copy of slow requests; first completion wins.
+    pub hedge: bool,
+    /// Tiered overload shedding at the admission front door.
+    pub brownout: bool,
+    /// Re-route attempts per request after its first placement.
+    pub max_retries: u32,
+    /// Backoff before retry k is `min(cap, base·2^k)·(1 + jitter·u)`,
+    /// u ~ U[0,1) from the `GUARDRAILS` stream.
+    pub retry_backoff_base: f64,
+    pub retry_backoff_cap: f64,
+    pub retry_jitter: f64,
+    /// Seconds after first placement before a hedge copy is dispatched.
+    pub hedge_delay: f64,
+    /// Extra slack (seconds) a request must provably overshoot before it
+    /// is aborted — guards against borderline kills.
+    pub abort_slack: f64,
+    /// Fleet pressure at which brownout starts shedding the batch class.
+    pub shed_pressure: f64,
+    /// Fleet pressure at which brownout rejects everything.
+    pub reject_pressure: f64,
+    /// A level steps back down only once pressure falls below
+    /// `threshold - hysteresis` (no flapping at the boundary).
+    pub hysteresis: f64,
+    /// Requests with `prompt_len >= batch_prompt_len` are the
+    /// "batch class": shed first under brownout (SageServe's slow lane).
+    pub batch_prompt_len: u32,
+}
+
+impl GuardrailConfig {
+    /// All guardrails disabled; the fleet loop takes every gated branch
+    /// out, like the `"none"` fault profile.
+    pub fn off() -> Self {
+        GuardrailConfig {
+            abort: false,
+            retry: false,
+            hedge: false,
+            brownout: false,
+            max_retries: 2,
+            retry_backoff_base: 0.5,
+            retry_backoff_cap: 8.0,
+            retry_jitter: 0.5,
+            hedge_delay: 10.0,
+            abort_slack: 0.25,
+            shed_pressure: 0.85,
+            reject_pressure: 1.15,
+            hysteresis: 0.15,
+            batch_prompt_len: 512,
+        }
+    }
+
+    /// Parse a mode string: `"off"`, `"full"` (everything), or `+`-joined
+    /// components from {`retry`, `hedge`, `abort`, `brownout`} — e.g.
+    /// `"retry+hedge"`. Returns `None` on an unknown component.
+    pub fn parse(mode: &str) -> Option<Self> {
+        let mut g = Self::off();
+        match mode {
+            "" | "off" => return Some(g),
+            "full" => {
+                g.abort = true;
+                g.retry = true;
+                g.hedge = true;
+                g.brownout = true;
+                return Some(g);
+            }
+            _ => {}
+        }
+        for part in mode.split('+') {
+            match part {
+                "abort" => g.abort = true,
+                "retry" => g.retry = true,
+                "hedge" => g.hedge = true,
+                "brownout" => g.brownout = true,
+                _ => return None,
+            }
+        }
+        Some(g)
+    }
+
+    /// Whether any guardrail is enabled (gates the fleet loop branches).
+    pub fn is_active(&self) -> bool {
+        self.abort || self.retry || self.hedge || self.brownout
+    }
+
+    /// Seconds to wait before retry attempt `attempt` (0-based), given a
+    /// uniform jitter draw `u` in [0, 1).
+    pub fn backoff(&self, attempt: u32, u: f64) -> f64 {
+        let exp = self.retry_backoff_base * 2f64.powi(attempt.min(20) as i32);
+        exp.min(self.retry_backoff_cap) * (1.0 + self.retry_jitter * u)
+    }
+
+    /// Whether a fresh attempt started now could still meet the deadline
+    /// (optimistic lower bound: full prefill + decode at calibrated
+    /// speed). Retrying past this point can only burn KVC on a certain
+    /// SLO miss, so abort-displaced requests are retried only while it
+    /// holds; crash-displaced requests always get their budget (matching
+    /// the chaos layer's unconditional re-route).
+    pub fn retry_feasible(&self, now: f64, it: &TraceItem, t_p: f64, t_g: f64, deadline: f64) -> bool {
+        now + t_p + t_g * it.true_rl as f64 <= deadline
+    }
+}
+
+/// Mode strings accepted by the CLI / sweep `guardrails` axis.
+pub fn all_modes() -> [&'static str; 5] {
+    ["off", "retry", "retry+hedge", "retry+hedge+abort", "full"]
+}
+
+/// Stable identity of a request across replicas and re-injections.
+/// `World::crash_all` and the abort sweep return bare `TraceItem`s, so
+/// lineage (retry counts, hedge pairs) is keyed by the item's immutable
+/// coordinates — exact on the arrival bit pattern.
+pub fn lineage_key(it: &TraceItem) -> (u64, u32, u32) {
+    (it.arrival.to_bits(), it.prompt_len, it.true_rl)
+}
+
+/// Why a displaced request is back at the front door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DisplaceOrigin {
+    /// In-flight on a replica that crashed.
+    Crash,
+    /// Cancelled by the deadline-aware abort sweep.
+    Abort,
+}
+
+/// The tiered brownout controller. Levels: 0 = normal, 1 = shed the
+/// batch class, 2 = reject everything. Driven by [`fleet_pressure`] at
+/// control ticks; hysteresis keeps it from flapping at a threshold.
+#[derive(Debug, Clone, Copy)]
+pub struct Brownout {
+    shed: f64,
+    reject: f64,
+    hysteresis: f64,
+    batch_prompt_len: u32,
+    level: u8,
+    peak: u8,
+}
+
+impl Brownout {
+    pub fn new(g: &GuardrailConfig) -> Self {
+        Brownout {
+            shed: g.shed_pressure,
+            reject: g.reject_pressure,
+            hysteresis: g.hysteresis,
+            batch_prompt_len: g.batch_prompt_len,
+            level: 0,
+            peak: 0,
+        }
+    }
+
+    /// Re-evaluate the tier against current pressure. Escalation is
+    /// immediate; de-escalation requires pressure below
+    /// `threshold - hysteresis`. Returns the new level.
+    pub fn update(&mut self, pressure: f64) -> u8 {
+        self.level = match self.level {
+            0 => {
+                if pressure >= self.reject {
+                    2
+                } else if pressure >= self.shed {
+                    1
+                } else {
+                    0
+                }
+            }
+            1 => {
+                if pressure >= self.reject {
+                    2
+                } else if pressure < self.shed - self.hysteresis {
+                    0
+                } else {
+                    1
+                }
+            }
+            _ => {
+                if pressure < self.shed - self.hysteresis {
+                    0
+                } else if pressure < self.reject - self.hysteresis {
+                    1
+                } else {
+                    2
+                }
+            }
+        };
+        self.peak = self.peak.max(self.level);
+        self.level
+    }
+
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Highest tier reached over the run (exported as the
+    /// `econoserve_brownout_level` gauge of a sim snapshot).
+    pub fn peak(&self) -> u8 {
+        self.peak
+    }
+
+    /// Admission verdict for an arrival at the current tier.
+    pub fn admits(&self, prompt_len: u32) -> bool {
+        match self.level {
+            0 => true,
+            1 => prompt_len < self.batch_prompt_len,
+            _ => false,
+        }
+    }
+}
+
+/// Fleet-wide overload pressure over the Active replica set: the max of
+/// the in-flight ratio (total in-flight vs. what the fleet can
+/// comfortably hold resident — the reactive autoscaler's ceiling) and
+/// the mean written-KVC fraction. Reads the same thread-invariant
+/// snapshots the router uses, so it is bit-identical at any thread
+/// count. Empty set ⇒ infinite pressure (nothing can be admitted).
+pub fn fleet_pressure(snaps: &[crate::fleet::ReplicaSnapshot], resident_ceiling: f64) -> f64 {
+    if snaps.is_empty() {
+        return f64::INFINITY;
+    }
+    let inflight: usize = snaps.iter().map(|s| s.in_flight).sum();
+    let queue = inflight as f64 / (snaps.len() as f64 * resident_ceiling.max(1.0));
+    let kvc = snaps
+        .iter()
+        .map(|s| 1.0 - s.free_kvc as f64 / s.kvc_capacity.max(1) as f64)
+        .sum::<f64>()
+        / snaps.len() as f64;
+    queue.max(kvc)
+}
+
+/// Brownout thresholds for the HTTP front door. The serving path has no
+/// replica snapshots, so pressure is proxied by the in-flight request
+/// count (from [`crate::api::DrainGate::active`]) and the batch class by
+/// request-body size — prompt length is unknown before the body is
+/// parsed, and shedding must happen *before* parse work is spent.
+///
+/// Tier semantics mirror the fleet [`Brownout`]: at `shed_inflight`
+/// concurrent requests, batch-class bodies (`>= batch_bytes`) are
+/// refused; at `reject_inflight`, every generation request is refused.
+/// Refusals surface as HTTP 503 with a `Retry-After: ceil(retry_after_s)`
+/// header. `shed_inflight == 0` disables the controller entirely.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HttpBrownout {
+    /// In-flight count at which batch-class requests are shed (tier 1).
+    /// 0 disables brownout.
+    pub shed_inflight: usize,
+    /// In-flight count at which all generation requests are refused
+    /// (tier 2). 0 means tier 2 never engages.
+    pub reject_inflight: usize,
+    /// Request-body size (bytes) at or above which a request counts as
+    /// batch-class for tier-1 shedding.
+    pub batch_bytes: usize,
+    /// Retry-After hint sent with every brownout refusal, in seconds.
+    pub retry_after_s: f64,
+}
+
+impl Default for HttpBrownout {
+    fn default() -> Self {
+        HttpBrownout {
+            shed_inflight: 0,
+            reject_inflight: 0,
+            batch_bytes: 4096,
+            retry_after_s: 1.0,
+        }
+    }
+}
+
+impl HttpBrownout {
+    pub fn enabled(&self) -> bool {
+        self.shed_inflight > 0
+    }
+
+    /// Whether a generation request with a `body_bytes`-byte body must
+    /// be refused when `inflight` requests are already being served.
+    pub fn refuses(&self, inflight: usize, body_bytes: usize) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        if self.reject_inflight > 0 && inflight >= self.reject_inflight {
+            return true;
+        }
+        inflight >= self.shed_inflight && body_bytes >= self.batch_bytes
+    }
+}
+
+/// Guardrail event counts that are *not* part of the request
+/// conservation identity (those live in `fleet::FaultTally`): hedge
+/// outcomes by label and the abort split by reason, plus the brownout
+/// peak — exactly what the fleet metric overlay needs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GuardrailStats {
+    /// Hedge copies dispatched.
+    pub hedges_launched: usize,
+    /// Hedge copies cancelled because the primary finished first.
+    pub hedges_lost: usize,
+    /// Hedge races where both copies finished in one advance window; the
+    /// loser's completion is voided in the summary but its counter
+    /// increments are monotonic history (see `World::void_completion`).
+    pub hedges_dup: usize,
+    /// Terminal aborts by reason (their sum is `FaultTally::aborted`).
+    pub aborted_deadline: usize,
+    pub aborted_brownout: usize,
+    /// Highest brownout tier reached.
+    pub brownout_peak: u8,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_modes() {
+        assert!(!GuardrailConfig::parse("off").unwrap().is_active());
+        assert!(!GuardrailConfig::parse("").unwrap().is_active());
+        let g = GuardrailConfig::parse("retry+hedge").unwrap();
+        assert!(g.retry && g.hedge && !g.abort && !g.brownout);
+        let g = GuardrailConfig::parse("retry+hedge+abort").unwrap();
+        assert!(g.retry && g.hedge && g.abort && !g.brownout);
+        let full = GuardrailConfig::parse("full").unwrap();
+        assert!(full.retry && full.hedge && full.abort && full.brownout);
+        assert!(GuardrailConfig::parse("retry+teleport").is_none());
+        assert!(GuardrailConfig::parse("bogus").is_none());
+        for m in all_modes() {
+            assert!(GuardrailConfig::parse(m).is_some(), "mode {m} must parse");
+        }
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let g = GuardrailConfig::off();
+        let b0 = g.backoff(0, 0.0);
+        let b1 = g.backoff(1, 0.0);
+        let b9 = g.backoff(9, 0.0);
+        assert!((b0 - 0.5).abs() < 1e-12);
+        assert!((b1 - 1.0).abs() < 1e-12);
+        assert!((b9 - g.retry_backoff_cap).abs() < 1e-12, "b9={b9}");
+        // Jitter widens by at most the configured fraction.
+        let hi = g.backoff(0, 0.999_999);
+        assert!(hi > b0 && hi <= b0 * (1.0 + g.retry_jitter));
+        // Huge attempt counts must not overflow the exponent.
+        assert!(g.backoff(1000, 0.5).is_finite());
+    }
+
+    #[test]
+    fn brownout_tiers_and_hysteresis() {
+        let g = GuardrailConfig::off();
+        let mut b = Brownout::new(&g);
+        assert_eq!(b.update(0.2), 0);
+        assert!(b.admits(10_000));
+        // Escalate to shed: batch class refused, short prompts pass.
+        assert_eq!(b.update(0.9), 1);
+        assert!(b.admits(10));
+        assert!(!b.admits(g.batch_prompt_len));
+        // Pressure at the boundary minus a hair: hysteresis holds tier 1.
+        assert_eq!(b.update(g.shed_pressure - 0.01), 1);
+        // Full reject.
+        assert_eq!(b.update(1.5), 2);
+        assert!(!b.admits(1));
+        // Recovery steps down through the hysteresis bands.
+        assert_eq!(b.update(g.shed_pressure + 0.05), 1);
+        assert_eq!(b.update(g.shed_pressure - g.hysteresis - 0.01), 0);
+        assert_eq!(b.peak(), 2);
+    }
+
+    #[test]
+    fn http_brownout_tiers() {
+        let off = HttpBrownout::default();
+        assert!(!off.enabled());
+        assert!(!off.refuses(1_000_000, 1_000_000));
+        let b = HttpBrownout {
+            shed_inflight: 8,
+            reject_inflight: 16,
+            batch_bytes: 1024,
+            retry_after_s: 2.0,
+        };
+        assert!(b.enabled());
+        // Below shed: everything passes.
+        assert!(!b.refuses(7, 10_000));
+        // Tier 1: batch-class refused, small bodies pass.
+        assert!(b.refuses(8, 1024));
+        assert!(!b.refuses(8, 1023));
+        // Tier 2: everything refused.
+        assert!(b.refuses(16, 1));
+        // reject_inflight == 0 leaves tier 2 disengaged.
+        let shed_only = HttpBrownout { reject_inflight: 0, ..b };
+        assert!(!shed_only.refuses(1_000_000, 1));
+        assert!(shed_only.refuses(9, 4096));
+    }
+
+    #[test]
+    fn lineage_keys_distinguish_items() {
+        let a = TraceItem { arrival: 1.25, prompt_len: 100, true_rl: 40 };
+        let b = TraceItem { arrival: 1.25, prompt_len: 100, true_rl: 41 };
+        let c = TraceItem { arrival: 1.250000001, prompt_len: 100, true_rl: 40 };
+        assert_eq!(lineage_key(&a), lineage_key(&a.clone()));
+        assert_ne!(lineage_key(&a), lineage_key(&b));
+        assert_ne!(lineage_key(&a), lineage_key(&c));
+    }
+
+    #[test]
+    fn retry_feasibility_is_the_optimistic_bound() {
+        let g = GuardrailConfig::off();
+        let it = TraceItem { arrival: 0.0, prompt_len: 64, true_rl: 100 };
+        // deadline 10s, t_p 0.1, t_g 0.02 -> needs 2.1s.
+        assert!(g.retry_feasible(5.0, &it, 0.1, 0.02, 10.0));
+        assert!(!g.retry_feasible(9.0, &it, 0.1, 0.02, 10.0));
+    }
+
+    #[test]
+    fn pressure_reads_snapshots() {
+        use crate::fleet::ReplicaSnapshot;
+        let snaps = [
+            ReplicaSnapshot { id: 0, in_flight: 8, free_kvc: 500, kvc_capacity: 1000, healthy: true },
+            ReplicaSnapshot { id: 1, in_flight: 2, free_kvc: 900, kvc_capacity: 1000, healthy: true },
+        ];
+        // queue: 10 / (2 * 10) = 0.5; kvc: mean(0.5, 0.1) = 0.3.
+        let p = fleet_pressure(&snaps, 10.0);
+        assert!((p - 0.5).abs() < 1e-12, "p={p}");
+        assert!(fleet_pressure(&[], 10.0).is_infinite());
+    }
+}

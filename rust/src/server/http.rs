@@ -35,10 +35,13 @@
 //!
 //! Hardening: an optional per-key token-bucket rate limiter guards the
 //! generation endpoints (key = `x-api-key` header, `"anon"` otherwise;
-//! `ServerConfig::rate_limit`), and shutdown is graceful — a
-//! [`DrainGate`] lets in-flight connections (token streams included)
-//! finish while new ones get 503 `shutting_down`, then the engine is
-//! stopped ([`HttpServer::shutdown`]).
+//! `ServerConfig::rate_limit`), an optional brownout controller sheds
+//! generation load under overload (batch-class bodies first, then all
+//! generates; 503 `brownout` with a `Retry-After` header;
+//! `ServerConfig::brownout`), and shutdown is graceful — a [`DrainGate`]
+//! lets in-flight connections (token streams included) finish while new
+//! ones get 503 `shutting_down`, then the engine is stopped
+//! ([`HttpServer::shutdown`]).
 //!
 //! Architecture: one acceptor thread per connection (serving concurrency
 //! is bounded by the model's decode slots anyway), all requests funneled
@@ -79,6 +82,7 @@ struct Ctx {
     log: Arc<RequestLog>,
     gate: Arc<DrainGate>,
     limiter: Mutex<TokenBucketLimiter>,
+    brownout: crate::reliability::HttpBrownout,
     /// Epoch of the rate-limiter clock.
     origin: Instant,
 }
@@ -101,7 +105,7 @@ impl HttpServer {
     }
 
     /// As [`start`](Self::start), with an explicit ordering policy,
-    /// admission configuration, and rate limit.
+    /// admission configuration, rate limit, and brownout thresholds.
     pub fn start_with(addr: &str, artifacts_dir: &str, cfg: ServerConfig) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
@@ -119,6 +123,7 @@ impl HttpServer {
             log: log.clone(),
             gate: DrainGate::new(),
             limiter: Mutex::new(TokenBucketLimiter::new(cfg.rate_limit)),
+            brownout: cfg.brownout,
             origin: Instant::now(),
         });
 
@@ -405,12 +410,26 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
         && matches!(path.as_str(), "/v1/generate" | "/v1/stream" | "/v1/completions");
     if generates {
         let now_s = ctx.origin.elapsed().as_secs_f64();
-        let verdict = ctx.limiter.lock().unwrap().check(&api_key, now_s);
+        let verdict = crate::util::sync::lock(&ctx.limiter).check(&api_key, now_s);
         if let Err(retry_after_s) = verdict {
             ctx.tel.rate_limited.inc();
             let e = ServeError::RateLimited { retry_after_s };
             ctx.tel.http_observe(label, e.http_status());
-            return respond(stream, e.http_status(), &error_json(&e).to_string());
+            return respond_retry_after(stream, e.http_status(), retry_after_s, &error_json(&e).to_string());
+        }
+        // Brownout overload shedding: the in-flight count (this request
+        // included — the gate was entered above) proxies pressure, the
+        // body size proxies the batch class. Refusals carry Retry-After
+        // so well-behaved clients back off instead of hammering.
+        if ctx.brownout.refuses(ctx.gate.active(), content_length) {
+            let e = ServeError::Brownout { retry_after_s: ctx.brownout.retry_after_s };
+            ctx.tel.http_observe(label, e.http_status());
+            return respond_retry_after(
+                stream,
+                e.http_status(),
+                ctx.brownout.retry_after_s,
+                &error_json(&e).to_string(),
+            );
         }
     }
 
@@ -760,8 +779,8 @@ fn respond(stream: TcpStream, status: u16, body: &str) -> Result<()> {
     respond_typed(stream, status, "application/json", body)
 }
 
-fn respond_typed(mut stream: TcpStream, status: u16, ctype: &str, body: &str) -> Result<()> {
-    let reason = match status {
+fn status_reason(status: u16) -> &'static str {
+    match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
@@ -770,11 +789,35 @@ fn respond_typed(mut stream: TcpStream, status: u16, ctype: &str, body: &str) ->
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Error",
-    };
+    }
+}
+
+fn respond_typed(mut stream: TcpStream, status: u16, ctype: &str, body: &str) -> Result<()> {
     write!(
         stream,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
+        body.len(),
+        reason = status_reason(status)
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// As [`respond`], with a `Retry-After` header. The header is
+/// integer-valued (RFC 9110 delay-seconds), so the hint is rounded up to
+/// at least one second; the precise float stays in the JSON body.
+fn respond_retry_after(
+    mut stream: TcpStream,
+    status: u16,
+    retry_after_s: f64,
+    body: &str,
+) -> Result<()> {
+    let secs = retry_after_s.ceil().max(1.0) as u64;
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nRetry-After: {secs}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+        reason = status_reason(status)
     )?;
     stream.flush()?;
     Ok(())

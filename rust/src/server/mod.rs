@@ -52,6 +52,12 @@ pub struct ServerConfig {
     /// (default: off). Enforced by [`http::HttpServer`], not by
     /// [`RealServer::submit`] — direct embedders own their own limits.
     pub rate_limit: RateLimitConfig,
+    /// Brownout overload shedding at the HTTP front door (default: off).
+    /// Like `rate_limit`, enforced only by [`http::HttpServer`]: tiered
+    /// refusal of generation requests (batch-class bodies first, then
+    /// everything) as 503 + `Retry-After` once in-flight load crosses
+    /// the configured thresholds.
+    pub brownout: crate::reliability::HttpBrownout,
 }
 
 impl Default for ServerConfig {
@@ -60,6 +66,7 @@ impl Default for ServerConfig {
             ordering: QueuePolicy::EconoServe,
             admission: AdmissionConfig::default(),
             rate_limit: RateLimitConfig::default(),
+            brownout: crate::reliability::HttpBrownout::default(),
         }
     }
 }

@@ -423,7 +423,7 @@ impl Registry {
     /// Register (or look up) a counter series.
     pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
         let ls = LabelSet::from_pairs(labels);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = crate::util::sync::lock(&self.inner);
         let id = inner.next_id;
         let fam = Self::family(&mut inner, name, help, MetricKind::Counter, None);
         let series = fam.series.entry(ls).or_insert_with(|| Series {
@@ -443,7 +443,7 @@ impl Registry {
     /// Register (or look up) a gauge series.
     pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
         let ls = LabelSet::from_pairs(labels);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = crate::util::sync::lock(&self.inner);
         let id = inner.next_id;
         let fam = Self::family(&mut inner, name, help, MetricKind::Gauge, None);
         let series = fam.series.entry(ls).or_insert_with(|| Series {
@@ -470,7 +470,7 @@ impl Registry {
         labels: &[(&str, &str)],
     ) -> Histogram {
         let ls = LabelSet::from_pairs(labels);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = crate::util::sync::lock(&self.inner);
         let id = inner.next_id;
         let fam =
             Self::family(&mut inner, name, help, MetricKind::Histogram, Some(buckets.0.clone()));
@@ -491,7 +491,7 @@ impl Registry {
 
     /// Number of interned series (dense-id high-water mark).
     pub fn series_count(&self) -> usize {
-        self.inner.lock().unwrap().next_id
+        crate::util::sync::lock(&self.inner).next_id
     }
 
     /// Render the whole registry as canonical Prometheus text: families
@@ -499,7 +499,7 @@ impl Registry {
     /// cumulative and bound-ordered with `le` in its sorted label slot.
     /// Equal metric states render to byte-identical text.
     pub fn render(&self) -> String {
-        let inner = self.inner.lock().unwrap();
+        let inner = crate::util::sync::lock(&self.inner);
         let mut out = String::new();
         for (name, fam) in &inner.families {
             out.push_str(&format!("# HELP {name} {}\n", escape_help(&fam.help)));

@@ -80,7 +80,7 @@ impl RequestLog {
     /// Record one lifecycle event.
     pub fn log(&self, id: u64, t_s: f64, stage: &'static str, detail: impl Into<String>) {
         let ev = RequestEvent { id, t_s, stage, detail: detail.into() };
-        let mut ring = self.inner.lock().unwrap();
+        let mut ring = crate::util::sync::lock(&self.inner);
         while ring.events.len() >= ring.cap.max(1) {
             ring.events.pop_front();
             ring.dropped += 1;
@@ -94,24 +94,24 @@ impl RequestLog {
 
     /// The most recent `n` events, oldest first.
     pub fn recent(&self, n: usize) -> Vec<RequestEvent> {
-        let ring = self.inner.lock().unwrap();
+        let ring = crate::util::sync::lock(&self.inner);
         let skip = ring.events.len().saturating_sub(n);
         ring.events.iter().skip(skip).cloned().collect()
     }
 
     /// All retained events for one request id, oldest first.
     pub fn for_request(&self, id: u64) -> Vec<RequestEvent> {
-        let ring = self.inner.lock().unwrap();
+        let ring = crate::util::sync::lock(&self.inner);
         ring.events.iter().filter(|e| e.id == id).cloned().collect()
     }
 
     /// Events evicted (or discarded by a zero-capacity log) so far.
     pub fn dropped(&self) -> u64 {
-        self.inner.lock().unwrap().dropped
+        crate::util::sync::lock(&self.inner).dropped
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().events.len()
+        crate::util::sync::lock(&self.inner).events.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -120,7 +120,7 @@ impl RequestLog {
 
     /// Render the retained window as JSON lines, oldest first.
     pub fn render_jsonl(&self) -> String {
-        let ring = self.inner.lock().unwrap();
+        let ring = crate::util::sync::lock(&self.inner);
         let mut out = String::new();
         for e in &ring.events {
             out.push_str(&e.to_json_line());

@@ -204,6 +204,26 @@ pub struct FleetMetrics {
     /// `econoserve_replica_boots_total` / `econoserve_replica_retirements_total`.
     pub boots: Counter,
     pub retirements: Counter,
+    /// `econoserve_retries_total` — guardrail re-injections of displaced
+    /// requests (`faults.retried`).
+    pub retries: Counter,
+    /// `econoserve_hedges_total{outcome=...}` — hedge copies by fate.
+    /// `launched` counts dispatches; `won` first-finishes by the hedge;
+    /// `lost` copies cancelled after the other side won or died;
+    /// `duplicate` same-window double completions whose loser was voided
+    /// in the summary (its sim counters remain monotonic history — the
+    /// reconciliation tests add `duplicate` back to `n_done`).
+    pub hedges_launched: Counter,
+    pub hedges_won: Counter,
+    pub hedges_lost: Counter,
+    pub hedges_dup: Counter,
+    /// `econoserve_aborts_total{reason=...}` — terminal guardrail
+    /// cancellations; `deadline` + `brownout` sum to `faults.aborted`.
+    pub aborts_deadline: Counter,
+    pub aborts_brownout: Counter,
+    /// `econoserve_brownout_level` — highest brownout tier the run
+    /// reached (0 normal, 1 shed batch class, 2 reject).
+    pub brownout_level: Gauge,
 }
 
 impl FleetMetrics {
@@ -248,6 +268,46 @@ impl FleetMetrics {
             retirements: r.counter(
                 "econoserve_replica_retirements_total",
                 "Replica drain-and-retire events",
+                &[],
+            ),
+            retries: r.counter(
+                "econoserve_retries_total",
+                "Guardrail re-injections of displaced requests",
+                &[],
+            ),
+            hedges_launched: r.counter(
+                "econoserve_hedges_total",
+                "Hedge copies by outcome",
+                &[("outcome", "launched")],
+            ),
+            hedges_won: r.counter(
+                "econoserve_hedges_total",
+                "Hedge copies by outcome",
+                &[("outcome", "won")],
+            ),
+            hedges_lost: r.counter(
+                "econoserve_hedges_total",
+                "Hedge copies by outcome",
+                &[("outcome", "lost")],
+            ),
+            hedges_dup: r.counter(
+                "econoserve_hedges_total",
+                "Hedge copies by outcome",
+                &[("outcome", "duplicate")],
+            ),
+            aborts_deadline: r.counter(
+                "econoserve_aborts_total",
+                "Terminal guardrail cancellations by reason",
+                &[("reason", "deadline")],
+            ),
+            aborts_brownout: r.counter(
+                "econoserve_aborts_total",
+                "Terminal guardrail cancellations by reason",
+                &[("reason", "brownout")],
+            ),
+            brownout_level: r.gauge(
+                "econoserve_brownout_level",
+                "Highest brownout tier reached (0 normal, 1 shed, 2 reject)",
                 &[],
             ),
             registry,

@@ -129,6 +129,11 @@ pub mod stream {
     /// The fault injector's stream (crash/outage/straggler/boot draws).
     pub const FAULTS: u64 = 0xFA017;
 
+    /// The reliability guardrails' stream (retry backoff jitter). Kept
+    /// separate from [`FAULTS`] so enabling guardrails never perturbs
+    /// the fault timeline, and vice versa.
+    pub const GUARDRAILS: u64 = 0x6A4D5;
+
     /// Grid cells pack their coordinates into one stream ID. Bit 63
     /// flags the grid namespace so packed coordinates can never collide
     /// with the fixed IDs or the per-replica band above.
@@ -160,7 +165,7 @@ mod tests {
         // corner-heavy sample of the grid-cell namespace must be
         // pairwise distinct: a collision would make two "independent"
         // components draw identical randomness from the same base seed.
-        let mut ids: Vec<u64> = vec![stream::ROUTER, stream::FAULTS];
+        let mut ids: Vec<u64> = vec![stream::ROUTER, stream::FAULTS, stream::GUARDRAILS];
         ids.extend((0..4096).map(stream::replica));
         for &mi in &[0usize, 1, 7, 255] {
             for &ti in &[0usize, 1, 15, 1023] {

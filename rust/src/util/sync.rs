@@ -1,0 +1,64 @@
+//! Poison-tolerant synchronization helpers.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking holder into a cascade:
+//! every later locker panics on the poison error even though the
+//! protected data (counters, ring buffers, token buckets) is still
+//! structurally valid — none of our critical sections leave partial
+//! states behind on unwind. [`lock`] recovers the guard from a poisoned
+//! mutex instead, so a single wrecked request handler cannot take down
+//! the metrics endpoint or the whole serving surface with it.
+//!
+//! `scripts/check.sh` greps non-test sources for `lock().unwrap()` to
+//! keep new poison-panicking sites from creeping back in.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Acquire `m`, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `Condvar::wait_timeout` with the same poison recovery as [`lock`].
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, timeout)) => (g, timeout.timed_out()),
+        Err(poisoned) => {
+            let (g, timeout) = poisoned.into_inner();
+            (g, timeout.timed_out())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Mutex::new(5u32);
+        // Poison the mutex by panicking while holding the guard.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(m.is_poisoned());
+        let mut g = lock(&m);
+        *g += 1;
+        assert_eq!(*g, 6);
+    }
+
+    #[test]
+    fn wait_timeout_times_out() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock(&m);
+        let (_g, timed_out) = wait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(timed_out);
+    }
+}

@@ -534,6 +534,78 @@ fn chaos_fleet_summary_bit_identical_parallel_vs_sequential() {
     );
 }
 
+/// The guardrail variant of the fleet determinism pin: retries (backoff
+/// + jitter from the dedicated GUARDRAILS rng stream) and hedging (race
+/// resolution, loser cancellation, duplicate voiding) under full chaos
+/// must still be bit-identical between serial and parallel stepping —
+/// every guardrail decision reads only thread-invariant state.
+#[test]
+fn guardrail_fleet_summary_bit_identical_parallel_vs_sequential() {
+    use econoserve::fleet::{self, FleetConfig};
+    use econoserve::trace::{TraceGen, TraceSpec};
+    let mut cfg = mini_cfg(4096);
+    cfg.seed = 37;
+    let gen = TraceGen::new(TraceSpec::sharegpt());
+    let items = gen.generate(400, 2.0, 1024, 37);
+    let run_with = |threads: usize| {
+        let mut fc = FleetConfig::new(cfg.clone(), "econoserve", "sharegpt");
+        fc.oracle = true;
+        fc.router = "least-kvc".to_string();
+        fc.autoscaler = "reactive".to_string();
+        fc.init_replicas = 2;
+        fc.min_replicas = 2;
+        fc.max_replicas = 4;
+        fc.boot_latency = 5.0;
+        fc.max_sim_time = 2_000.0;
+        fc.faults = "full-chaos".to_string();
+        fc.guardrails = "retry+hedge".to_string();
+        fc.threads = threads;
+        fleet::run(&fc, &items)
+    };
+    let serial = run_with(1);
+    let parallel = run_with(4);
+    assert!(
+        serial.summary.faults.retried > 0,
+        "no retries fired — the guardrail pin is vacuous"
+    );
+    assert_eq!(
+        serial.summary, parallel.summary,
+        "guardrail FleetSummary diverged between serial and parallel stepping"
+    );
+    assert_eq!(
+        serial.metrics, parallel.metrics,
+        "guardrail telemetry snapshot diverged between serial and parallel stepping"
+    );
+
+    // Duplicate-corrected reconciliation: a hedge race where both copies
+    // completed bumped `requests_total{outcome=done}` twice, then the
+    // loser's completion was voided out of the summary. The monotonic
+    // counter therefore exceeds n_done by EXACTLY the duplicate count.
+    use econoserve::telemetry::Snapshot;
+    let snap = Snapshot::parse(&serial.metrics).expect("fleet metrics parse");
+    let dup = snap
+        .value("econoserve_hedges_total", &[("outcome", "duplicate")])
+        .expect("hedges_total{duplicate} present");
+    assert_eq!(
+        snap.value("econoserve_requests_total", &[("outcome", "done")]),
+        Some(serial.summary.n_done as f64 + dup),
+        "requests_total{{outcome=done}} != n_done + hedge duplicates"
+    );
+    assert_eq!(
+        snap.value("econoserve_retries_total", &[]),
+        Some(serial.summary.faults.retried as f64),
+        "retries_total != faults.retried"
+    );
+    assert_eq!(
+        snap.value("econoserve_hedges_total", &[("outcome", "won")]),
+        Some(serial.summary.faults.hedges_won as f64),
+        "hedges_total{{outcome=won}} != faults.hedges_won"
+    );
+    // The generalized conservation identity, under chaos + guardrails.
+    let s = &serial.summary;
+    assert_eq!(s.n_total, s.n_done + s.faults.lost + s.faults.aborted);
+}
+
 /// `exp::run_grid` with the faults axis emits bit-identical JSON rows
 /// at 1 and 4 threads, and each fleet row carries its fault profile.
 #[test]

@@ -290,33 +290,41 @@ fn chaos_cfg(cfg: &SystemConfig, profile: &str) -> FleetConfig {
 
 #[test]
 fn chaos_conserves_requests_under_every_profile() {
-    // The accounting identity: every submitted request ends in exactly
-    // one terminal state — completed, or lost to a crash (fleets reject
-    // nothing) — under every shipped fault profile, health-aware and
-    // health-blind alike.
+    // The generalized accounting identity: every submitted request ends
+    // in exactly one terminal state — completed, lost to a crash with no
+    // retry budget left, or aborted by a guardrail (deadline abort or
+    // brownout shed) — under every shipped fault profile crossed with
+    // every guardrail mode. Health-blind coverage rides along on the
+    // modes that exercised it before guardrails existed.
     let cfg = test_cfg();
     let items = diurnal_items(&cfg, 3.0, 200.0, 17);
     for profile in fleet::all_profiles() {
-        for health_aware in [true, false] {
-            let mut fc = chaos_cfg(&cfg, profile);
-            fc.health_aware = health_aware;
-            let res = fleet::run(&fc, &items);
-            let s = &res.summary;
-            assert_eq!(
-                s.n_total,
-                s.n_done + s.faults.lost,
-                "{profile} (aware={health_aware}): conservation broke \
-                 (done {} + lost {} != submitted {})",
-                s.n_done,
-                s.faults.lost,
-                s.n_total
-            );
-            assert!(s.peak_replicas <= fc.max_replicas);
-            let routed: usize = res.replicas.iter().map(|l| l.routed).sum();
-            assert_eq!(routed, s.n_routed, "{profile}: routing counts disagree");
-            if profile == "none" {
-                assert!(s.faults.is_zero(), "fault-free run tallied faults");
-                assert_eq!(s.n_done, s.n_total);
+        for mode in econoserve::reliability::all_modes() {
+            let aware_values: &[bool] =
+                if mode == "off" || mode == "full" { &[true, false] } else { &[true] };
+            for &health_aware in aware_values {
+                let mut fc = chaos_cfg(&cfg, profile);
+                fc.health_aware = health_aware;
+                fc.guardrails = mode.to_string();
+                let res = fleet::run(&fc, &items);
+                let s = &res.summary;
+                assert_eq!(
+                    s.n_total,
+                    s.n_done + s.faults.lost + s.faults.aborted,
+                    "{profile}/{mode} (aware={health_aware}): conservation broke \
+                     (done {} + lost {} + aborted {} != submitted {})",
+                    s.n_done,
+                    s.faults.lost,
+                    s.faults.aborted,
+                    s.n_total
+                );
+                assert!(s.peak_replicas <= fc.max_replicas);
+                let routed: usize = res.replicas.iter().map(|l| l.routed).sum();
+                assert_eq!(routed, s.n_routed, "{profile}/{mode}: routing counts disagree");
+                if profile == "none" && mode == "off" {
+                    assert!(s.faults.is_zero(), "fault-free run tallied faults");
+                    assert_eq!(s.n_done, s.n_total);
+                }
             }
         }
     }
@@ -338,6 +346,14 @@ fn chaos_runs_are_reproducible_per_seed() {
         assert_eq!(x.rerouted, y.rerouted);
         assert_eq!(x.crashed_at, y.crashed_at);
     }
+    // And with every guardrail armed on top: retry jitter, hedge races
+    // and brownout tiers are all seed-derived, so the summary must stay
+    // bit-identical run to run.
+    let mut gfc = chaos_cfg(&cfg, "full-chaos");
+    gfc.guardrails = "full".to_string();
+    let ga = fleet::run(&gfc, &items);
+    let gb = fleet::run(&gfc, &items);
+    assert_eq!(ga.summary, gb.summary, "guardrail chaos run not reproducible per seed");
 }
 
 #[test]
@@ -388,4 +404,70 @@ fn chaos_run_compares_against_a_fault_free_baseline() {
     assert!(out.chaos.faults.crashes > 0, "chaos run saw no crashes");
     assert!(out.goodput_retention() > 0.0 && out.goodput_retention().is_finite());
     assert!(out.ssr_retention() > 0.0 && out.ssr_retention().is_finite());
+}
+
+// ---------------------------------------------------------------------
+// Reliability guardrails
+// ---------------------------------------------------------------------
+
+#[test]
+fn guardrails_beat_bare_rerouting_under_crashes() {
+    // The acceptance pin: under the crashes profile with health-aware
+    // routing, retry+hedge+abort must strictly beat guardrails-off on
+    // BOTH goodput and SSR. The mechanism: deadline aborts free KVC held
+    // by provably hopeless requests (they could never land in-SLO, so
+    // culling them costs nothing and speeds every survivor), hedges let
+    // a crash-doomed request's copy finish elsewhere, and retries put
+    // crash-displaced work back with its ORIGINAL deadline. A capacity
+    // pinch (diurnal peak over a 2-replica fleet, slow reboots) makes
+    // the freed KVC matter.
+    let cfg = test_cfg();
+    let items = diurnal_items(&cfg, 4.0, 240.0, 47);
+    let mut off = chaos_cfg(&cfg, "crashes");
+    off.init_replicas = 2;
+    off.min_replicas = 2;
+    off.max_replicas = 2;
+    off.boot_latency = 25.0;
+    let mut guarded = off.clone();
+    guarded.guardrails = "retry+hedge+abort".to_string();
+    let a = fleet::run(&off, &items).summary;
+    let g = fleet::run(&guarded, &items).summary;
+
+    assert!(a.faults.crashes > 0, "no crashes fired in the window");
+    assert_eq!(a.faults.retried, 0, "guardrails-off run retried requests");
+    assert_eq!(a.faults.aborted, 0, "guardrails-off run aborted requests");
+    assert!(
+        g.goodput_rps > a.goodput_rps,
+        "guardrails goodput {:.3} did not beat off {:.3}",
+        g.goodput_rps,
+        a.goodput_rps
+    );
+    assert!(g.ssr > a.ssr, "guardrails SSR {:.3} did not beat off {:.3}", g.ssr, a.ssr);
+    assert!(g.faults.recovered > 0, "no displaced request was recovered by a retry");
+    assert!(g.faults.retried >= g.faults.recovered);
+    // The generalized conservation identity holds exactly on both sides.
+    assert_eq!(a.n_total, a.n_done + a.faults.lost + a.faults.aborted);
+    assert_eq!(g.n_total, g.n_done + g.faults.lost + g.faults.aborted);
+}
+
+#[test]
+fn hedge_outcomes_reconcile_and_deadlines_survive_retries() {
+    // Hedging under full chaos: every launched hedge resolves to exactly
+    // one of won/lost/duplicate (no copy leaks), and retried requests
+    // keep their original deadline — a recovered request that lands
+    // in-SLO does so against arrival + slo_budget(rl), not against its
+    // re-injection time (checked indirectly: SSR can only count n_total
+    // requests, and the identity stays exact while hedges duplicate
+    // work).
+    let cfg = test_cfg();
+    let items = diurnal_items(&cfg, 3.0, 200.0, 53);
+    let mut fc = chaos_cfg(&cfg, "full-chaos");
+    fc.guardrails = "retry+hedge".to_string();
+    let res = fleet::run(&fc, &items);
+    let s = &res.summary;
+    assert_eq!(s.n_total, s.n_done + s.faults.lost + s.faults.aborted);
+    assert_eq!(s.n_total, items.len());
+    assert!(s.slo_ok <= s.n_done, "SLO-ok exceeded completions: duplicate leaked");
+    assert!(s.faults.hedges_won <= s.faults.retried + items.len());
+    check_invariants(&fc, &res);
 }

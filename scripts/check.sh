@@ -9,6 +9,14 @@
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
+# Poison-tolerance lint: production code takes mutexes via
+# util::sync::lock (recover the data, don't cascade the panic). The
+# helper's own file is the single allowed mention of the raw idiom.
+if grep -rn --include='*.rs' -F 'lock().unwrap()' src | grep -v '^src/util/sync.rs:'; then
+    echo "check.sh: raw lock().unwrap() found; use util::sync::lock" >&2
+    exit 1
+fi
+
 cargo build --release ${CARGO_FLAGS:-}
 # Runs every registered suite, including the fleet-layer tests
 # (tests/fleet.rs) and the trace arrival-process property tests.
@@ -27,6 +35,15 @@ cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- sweep \
 cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- fleet \
     --chaos crashes --trace alpaca --workload poisson --rate 3 \
     --duration 120 --replicas 2 --min 2 --max 3 --oracle
+# Guardrails smoke: retry + hedge under crashes end-to-end, and the
+# merged snapshot (retries/hedges/aborts/brownout families included)
+# must survive the strict promlint round-trip.
+GUARD_OUT="${TMPDIR:-/tmp}/econoserve_guardrails_smoke.prom"
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- fleet \
+    --chaos crashes --guardrails retry+hedge --trace alpaca \
+    --workload poisson --rate 3 --duration 120 --replicas 2 --min 2 \
+    --max 3 --oracle --metrics-out "$GUARD_OUT"
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- promlint "$GUARD_OUT"
 # Telemetry smoke: a fleet run's merged registry snapshot must be
 # canonical Prometheus exposition text (promlint = strict re-parse +
 # byte-identical re-render).
