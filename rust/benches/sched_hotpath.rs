@@ -11,7 +11,11 @@
 //!
 //! Modes: `FAST=1` benches default pairings at the 1k depth only plus
 //! one `fleet_routing` case (the CI short mode); the full run covers the
-//! supported grid at every depth and the whole fleet router axis
+//! supported grid at every depth and the whole fleet router axis.
+//! Every default pairing also gets a `+trace` row at the headline depth
+//! (FAST mode included): the same plan+apply loop with the span-trace
+//! recorder enabled, so tracing's hot-path overhead is a tracked,
+//! gateable number rather than folklore
 //! (`fleet_routing+<router>`: per-arrival snapshot+route cost of the
 //! fleet front door over a 4-replica fleet; `+chaos` variants route the
 //! same fleet with half the replicas marked unhealthy, the health-aware
@@ -34,6 +38,7 @@ use econoserve::engine::{Engine, SimEngine};
 use econoserve::figures::common;
 use econoserve::fleet::router::{self, ReplicaSnapshot};
 use econoserve::sched::plan_iteration;
+use econoserve::telemetry::TraceConfig;
 use econoserve::util::bench::{black_box, time_fn};
 use econoserve::util::rng::{derive_seed, stream};
 use std::time::{Duration, Instant};
@@ -72,11 +77,11 @@ struct Row {
 /// front-door routing case (`guardrails` adds the brownout pressure
 /// computation + admission check the reliability layer runs per event).
 enum Task {
-    Combo { combo: String, depth: usize },
+    Combo { combo: String, depth: usize, trace: bool },
     Routing { router: &'static str, depth: usize, chaos: bool, guardrails: bool },
 }
 
-fn bench_combo(combo: &str, depth: usize, fast: bool) -> (Row, String) {
+fn bench_combo(combo: &str, depth: usize, trace: bool, fast: bool) -> (Row, String) {
     let cfg = common::cfg("opt-13b", "sharegpt");
     // Build a world mid-overload: `depth` queued requests.
     let items = common::workload(&cfg, "sharegpt", depth as f64 / 2.0, 2.0, 7);
@@ -85,9 +90,14 @@ fn bench_combo(combo: &str, depth: usize, fast: bool) -> (Row, String) {
         cfg.block_size,
         cfg.seed,
     ));
+    let trace_seed = derive_seed(cfg.seed, stream::TRACE);
     let mut world = World::new(cfg, &items, pred);
     let sys = econoserve::sched::by_name(combo).unwrap();
     world.set_allocator(sys.alloc);
+    if trace {
+        // Full sampling: the worst-case per-iteration recording cost.
+        world.enable_tracing(TraceConfig::new(trace_seed), 0, combo);
+    }
     let mut sched = sys.sched;
     world.clock = 2.0;
     world.drain_arrivals();
@@ -121,9 +131,10 @@ fn bench_combo(combo: &str, depth: usize, fast: bool) -> (Row, String) {
         min_iters,
         min_time,
     );
-    let report = res.report(combo);
+    let name = if trace { format!("{combo}+trace") } else { combo.to_string() };
+    let report = res.report(&name);
     let row = Row {
-        combo: combo.to_string(),
+        combo: name,
         depth,
         mean_s: res.samples.mean(),
         p50_s: res.samples.p50(),
@@ -234,8 +245,20 @@ fn main() {
         // Default pairing first, then the rest of the supported axis.
         let default = econoserve::sched::default_alloc(sched).unwrap();
         for &depth in depths {
-            tasks.push(Task::Combo { combo: format!("{sched}+{default}"), depth });
+            tasks.push(Task::Combo {
+                combo: format!("{sched}+{default}"),
+                depth,
+                trace: false,
+            });
         }
+        // Trace-on twin of the default pairing at the headline depth
+        // (FAST included): trace-off vs trace-on is the recorder's
+        // hot-path overhead.
+        tasks.push(Task::Combo {
+            combo: format!("{sched}+{default}"),
+            depth: HEADLINE_DEPTH,
+            trace: true,
+        });
         if fast {
             continue;
         }
@@ -250,6 +273,7 @@ fn main() {
                 tasks.push(Task::Combo {
                     combo: format!("{sched}+{alloc}"),
                     depth: HEADLINE_DEPTH,
+                    trace: false,
                 });
             } else {
                 println!("  {sched}+{alloc}: skipped (needs admission-complete lease)");
@@ -289,7 +313,7 @@ fn main() {
     let t0 = Instant::now();
     let results: Vec<(Row, String)> =
         econoserve::exp::map_indexed(&tasks, sweep_threads, |_, task| match task {
-            Task::Combo { combo, depth } => bench_combo(combo, *depth, fast),
+            Task::Combo { combo, depth, trace } => bench_combo(combo, *depth, *trace, fast),
             Task::Routing { router, depth, chaos, guardrails } => {
                 bench_fleet_routing(router, *depth, *chaos, *guardrails, fast)
             }

@@ -55,6 +55,11 @@ pub struct RunResult {
     /// the end of the run (`econoserve sweep --metrics-out` surfaces
     /// this; see `docs/metrics-dictionary.md`).
     pub metrics: String,
+    /// The finished span-trace document when tracing was enabled on the
+    /// world (`--trace-out`); `None` otherwise.
+    pub trace: Option<crate::telemetry::TraceDoc>,
+    /// The sim-side request log as JSONL when enabled (`--log-out`).
+    pub reqlog: Option<String>,
 }
 
 /// Drive `world` with `sched` and `engine` until completion or limits,
@@ -169,6 +174,8 @@ pub fn run_admitted(
         wall_time: wall_start.elapsed().as_secs_f64(),
         rejected,
         metrics: world.metrics_text(),
+        trace: world.take_trace(),
+        reqlog: world.reqlog().map(|l| l.render_jsonl()),
     }
 }
 
@@ -378,11 +385,29 @@ pub mod harness {
         oracle: bool,
         limits: RunLimits,
     ) -> RunResult {
+        simulate_traced(cfg, system, trace, items, oracle, limits, None)
+    }
+
+    /// As [`simulate`], with optional span tracing: when `tracing` is
+    /// `Some`, the world records request-lifecycle spans (pid 0) and the
+    /// result carries the finished `TraceDoc`.
+    pub fn simulate_traced(
+        cfg: &SystemConfig,
+        system: &str,
+        trace: &str,
+        items: &[TraceItem],
+        oracle: bool,
+        limits: RunLimits,
+        tracing: Option<crate::telemetry::TraceConfig>,
+    ) -> RunResult {
         let pred = predictor_for(cfg, trace, oracle);
         let mut world = World::new(cfg.clone(), items, pred);
         let sys = crate::sched::by_name(system)
             .unwrap_or_else(|| panic!("unknown system '{system}'"));
         world.set_allocator(sys.alloc);
+        if let Some(tc) = tracing {
+            world.enable_tracing(tc, 0, system);
+        }
         let mut sched = sys.sched;
         let engine = SimEngine::new();
         let res = run(&mut world, sched.as_mut(), &engine, limits);

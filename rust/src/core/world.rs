@@ -22,6 +22,9 @@ use crate::config::SystemConfig;
 use crate::kvc::Allocator;
 use crate::metrics::Collector;
 use crate::predictor::Predictor;
+use crate::telemetry::reqlog::RequestLog;
+use crate::telemetry::span::{Outcome, SkipReason, SpanState};
+use crate::telemetry::trace::{TraceConfig, TraceDoc, TraceRecorder};
 use crate::telemetry::SimMetrics;
 use crate::trace::TraceItem;
 
@@ -122,6 +125,16 @@ pub struct World {
     /// (config, seed); the fleet merges rendered snapshots in replica-id
     /// order at finalize.
     tel: SimMetrics,
+    /// Optional request-lifecycle span recorder (`--trace-out`). Owned
+    /// per world and updated single-threaded like `tel`, so the trace
+    /// bytes stay a pure function of (config, seed); the fleet merges
+    /// finished [`TraceDoc`]s in replica-id order. `None` costs one
+    /// branch per hook.
+    tracer: Option<Box<TraceRecorder>>,
+    /// Optional bounded request log (`--log-out`): the same structured
+    /// event ring the HTTP server keeps, fed from the sim lifecycle
+    /// hooks.
+    reqlog: Option<RequestLog>,
 }
 
 impl World {
@@ -166,6 +179,8 @@ impl World {
             spare_events: Events::default(),
             spare_plan: BatchPlan::default(),
             tel: SimMetrics::new(),
+            tracer: None,
+            reqlog: None,
         }
     }
 
@@ -177,6 +192,91 @@ impl World {
     /// Canonical Prometheus text for this world's registry.
     pub fn metrics_text(&self) -> String {
         self.tel.render()
+    }
+
+    /// Turn on request-lifecycle span tracing for this world. `pid` tags
+    /// every event (fleet: the replica id; single worlds: 0); `system`
+    /// keys the skip-reason aggregates (`sched+alloc`). Already-seeded
+    /// requests are registered at their arrival time, so enabling right
+    /// after `World::new` traces the whole population.
+    pub fn enable_tracing(&mut self, cfg: TraceConfig, pid: u32, system: &str) {
+        let mut tr = Box::new(TraceRecorder::new(cfg, pid, system));
+        for rec in &self.recs {
+            if !rec.is_done() {
+                let r = &rec.req;
+                tr.on_submit(r.id, r.arrival, r.arrival, r.prompt_len as u64, r.true_rl as u64);
+            }
+        }
+        self.tracer = Some(tr);
+    }
+
+    /// The active span recorder, if tracing is enabled.
+    pub fn tracer(&self) -> Option<&TraceRecorder> {
+        self.tracer.as_deref()
+    }
+
+    /// Detach the recorder and finish it into its mergeable document.
+    pub fn take_trace(&mut self) -> Option<TraceDoc> {
+        self.tracer.take().map(|tr| tr.finish())
+    }
+
+    /// Turn on the sim-side bounded request log (`cap` = ring capacity,
+    /// 0 = count-only), fed from the same lifecycle hooks as tracing.
+    pub fn enable_reqlog(&mut self, cap: usize) {
+        let log = RequestLog::with_capacity(cap);
+        for rec in &self.recs {
+            if !rec.is_done() {
+                let r = &rec.req;
+                log.log(
+                    r.id as u64,
+                    r.arrival,
+                    "submit",
+                    format!("prompt={} true_rl={}", r.prompt_len, r.true_rl),
+                );
+            }
+        }
+        self.reqlog = Some(log);
+    }
+
+    /// The sim-side request log, if enabled.
+    pub fn reqlog(&self) -> Option<&RequestLog> {
+        self.reqlog.as_ref()
+    }
+
+    // ------------------------------------------------------------------
+    // Tracing hooks (each is one branch when tracing is off)
+    // ------------------------------------------------------------------
+
+    fn trace_transition(&mut self, id: ReqId, t: Time, next: SpanState) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.transition(id, t, next);
+        }
+    }
+
+    fn trace_terminal(&mut self, id: ReqId, t: Time, outcome: Outcome) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.terminal(id, t, outcome);
+        }
+        if let Some(log) = self.reqlog.as_ref() {
+            log.log(id as u64, t, outcome.as_str(), String::new());
+        }
+    }
+
+    pub(crate) fn trace_skip(&mut self, id: ReqId, t: Time, reason: SkipReason) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.skip(id, t, reason);
+        }
+    }
+
+    fn trace_lease(&mut self, id: ReqId, t: Time, name: &'static str) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.lease_event(id, t, name);
+        }
+    }
+
+    /// Is span tracing enabled (drives the skip-classification pass)?
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracer.is_some()
     }
 
     /// Add an arrived request to the active index (idempotent).
@@ -251,7 +351,15 @@ impl World {
     pub fn begin_iter(&mut self) -> IterCtx<'_> {
         let spare = std::mem::take(&mut self.spare_events);
         let events = std::mem::replace(&mut self.events, spare);
-        IterCtx { w: self, events, preempted: Vec::new(), evicted: Vec::new() }
+        let failures_at = self.kvc.stats().failures;
+        IterCtx {
+            w: self,
+            events,
+            preempted: Vec::new(),
+            evicted: Vec::new(),
+            failures_at,
+            noted_skips: Vec::new(),
+        }
     }
 
     /// Return an executed plan's buffers for reuse by the next
@@ -287,6 +395,22 @@ impl World {
         self.recs.push(rec);
         self.pred_ready.push(ready);
         self.active_pos.push(usize::MAX);
+        if let Some(tr) = self.tracer.as_mut() {
+            // Register at the ORIGINAL arrival: retry/hedge copies keep
+            // their logical request's content triple, so the sampling
+            // decision follows the request across replicas.
+            let r = &self.recs[id].req;
+            tr.on_submit(id, r.arrival, r.arrival, r.prompt_len as u64, r.true_rl as u64);
+        }
+        if let Some(log) = self.reqlog.as_ref() {
+            let r = &self.recs[id].req;
+            log.log(
+                id as u64,
+                r.arrival,
+                "submit",
+                format!("prompt={} true_rl={}", r.prompt_len, r.true_rl),
+            );
+        }
         if it.arrival <= self.clock {
             self.inbox.push_back(id);
             self.index_activate(id);
@@ -338,6 +462,8 @@ impl World {
         self.done_count += 1;
         self.index_deactivate(id);
         self.tel.requests_rejected.inc();
+        let now = self.clock;
+        self.trace_terminal(id, now, Outcome::Rejected);
     }
 
     /// Kill this world (fleet-layer replica crash): every request that
@@ -357,6 +483,7 @@ impl World {
         // timestamp order, so the re-route feed stays deterministic.
         victims.sort_unstable();
         let mut items = Vec::with_capacity(victims.len());
+        let now = self.clock;
         for id in victims {
             self.kvc.release(id);
             let rec = &mut self.recs[id];
@@ -364,6 +491,9 @@ impl World {
             rec.kvc_held = 0;
             self.done_count += 1;
             self.index_deactivate(id);
+            // Not-yet-arrived victims close at their (future) arrival:
+            // an empty lifecycle, not a negative span.
+            self.trace_terminal(id, now, Outcome::Lost);
             let req = &self.recs[id].req;
             items.push(TraceItem {
                 arrival: req.arrival,
@@ -442,6 +572,9 @@ impl World {
         self.done_count += 1;
         self.index_deactivate(id);
         self.tel.requests_cancelled.inc();
+        let now = self.clock;
+        self.trace_lease(id, now, "kvc_release");
+        self.trace_terminal(id, now, Outcome::Cancelled);
         let req = &self.recs[id].req;
         TraceItem { arrival: req.arrival, prompt_len: req.prompt_len, true_rl: req.true_rl }
     }
@@ -495,6 +628,8 @@ impl World {
                 self.done_count += 1;
                 self.index_deactivate(id);
                 self.tel.requests_cancelled.inc();
+                let now = self.clock;
+                self.trace_terminal(id, now, Outcome::Cancelled);
                 true
             }
             Phase::Decoding if !self.events.recompute_done.contains(&id) => {
@@ -564,6 +699,8 @@ impl World {
         }
         self.col.preemptions += 1;
         self.tel.preemptions.inc();
+        self.trace_lease(id, now, "kvc_release");
+        self.trace_transition(id, now, SpanState::Preempted);
         orphans
     }
 
@@ -601,15 +738,32 @@ impl World {
     /// `self.events` for the next planning step.
     pub fn apply_plan(&mut self, plan: &BatchPlan, dur: f64, gpu_util: f64) {
         self.events.clear();
+        let t0 = self.clock;
         let end = self.clock + dur;
         let mut prefill_tokens = 0u64;
         let mut decode_tokens = 0u64;
+        let mut prefill_n = 0u64;
+        let mut decode_n = 0u64;
+
+        // Batch membership spans: every task's request enters its
+        // prefill/decode segment at iteration start (closed at `end` by
+        // the requeue pass below, or by its terminal hook).
+        if self.tracer.is_some() {
+            for task in &plan.tasks {
+                let state = match *task {
+                    BatchTask::Prefill { .. } => SpanState::Prefill,
+                    BatchTask::Decode { .. } => SpanState::Decode,
+                };
+                self.trace_transition(task.id(), t0, state);
+            }
+        }
 
         for task in &plan.tasks {
             match *task {
                 BatchTask::Prefill { id, chunk } => {
                     debug_assert!(chunk > 0);
                     prefill_tokens += chunk as u64;
+                    prefill_n += 1;
                     if self.recs[id].lost_kv > 0 {
                         // Recompute pass for offload-free-preempted KV.
                         let applied = chunk.min(self.recs[id].lost_kv);
@@ -655,6 +809,7 @@ impl World {
                     // Write the KV of the previously generated token, then
                     // produce the next one.
                     decode_tokens += 1;
+                    decode_n += 1;
                     self.write_kv(id, 1);
                     let done = {
                         let rec = &mut self.recs[id];
@@ -692,6 +847,21 @@ impl World {
                 for g in over {
                     self.evict_guest(g);
                 }
+            }
+        }
+
+        // Close batch membership: survivors leave the batch at `end` and
+        // wait (`queued`) until their next iteration; completed requests
+        // were closed by their terminal hook and evicted guests by the
+        // preemption hook.
+        if self.tracer.is_some() {
+            for task in &plan.tasks {
+                let id = task.id();
+                let rec = &self.recs[id];
+                if rec.is_done() || rec.phase == Phase::Preempted {
+                    continue;
+                }
+                self.trace_transition(id, end, SpanState::Queued);
             }
         }
 
@@ -766,6 +936,20 @@ impl World {
         self.tel.alloc_granted.add(tally.granted as u64);
         self.tel.alloc_hosted.add(tally.hosted as u64);
         self.tel.alloc_exhausted.add(tally.exhausted as u64);
+        // Scheduler-track iteration record: batch composition plus this
+        // iteration's KVC lease tally (`AllocOutcome` grants/hosted
+        // placements/exhaustions).
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.iteration(
+                t0,
+                end,
+                prefill_n,
+                decode_n,
+                tally.granted as u64,
+                tally.hosted as u64,
+                tally.exhausted as u64,
+            );
+        }
         // Queue depth: arrived-and-unfinished requests that were not in
         // this iteration's batch (one task per request in a plan).
         self.tel
@@ -817,6 +1001,8 @@ impl World {
         if let Some(t) = rec.mean_tbt() {
             self.tel.tbt.observe(t);
         }
+        self.trace_lease(id, at, "kvc_release");
+        self.trace_terminal(id, at, Outcome::Done);
     }
 
     /// Force-evict a hosted guest whose backing disappeared (host head
@@ -841,6 +1027,8 @@ impl World {
         self.col.preemptions += 1;
         self.col.pipeline_evictions += 1;
         self.tel.preemptions.inc();
+        self.trace_lease(g, now, "kvc_evict");
+        self.trace_transition(g, now, SpanState::Preempted);
     }
 }
 
@@ -861,6 +1049,13 @@ pub struct IterCtx<'w> {
     pub events: Events,
     preempted: Vec<(ReqId, PreemptKind)>,
     evicted: Vec<ReqId>,
+    /// Cumulative allocator-failure count at context open; a delta by
+    /// plan time means some allocation failed THIS iteration, which is
+    /// what classifies skipped queued work as `kvc_exhausted`.
+    failures_at: u64,
+    /// Requests the scheduler explicitly explained via
+    /// [`IterCtx::note_skip`]; exempt from the central classification.
+    noted_skips: Vec<ReqId>,
 }
 
 impl IterCtx<'_> {
@@ -939,6 +1134,7 @@ impl IterCtx<'_> {
         if matches!(rec.phase, Phase::Decoding | Phase::Prefilling) {
             rec.phase = Phase::Preempted;
             rec.preempted_since.get_or_insert(now);
+            self.w.trace_transition(id, now, SpanState::Preempted);
         }
     }
 
@@ -952,6 +1148,8 @@ impl IterCtx<'_> {
         rec.preempt_count += 1;
         self.w.col.preemptions += 1;
         self.w.tel.preemptions.inc();
+        // Offload-free requeue keeps the lease: waiting, not preempted.
+        self.w.trace_transition(id, now, SpanState::Queued);
     }
 
     /// Revoke a guest's borrowed space (host trimmed / guest repredicted):
@@ -960,6 +1158,8 @@ impl IterCtx<'_> {
         let dropped = self.w.kvc.drop_guest(g);
         self.w.recs[g].lost_kv += dropped;
         self.evicted.push(g);
+        let now = self.w.clock;
+        self.w.trace_lease(g, now, "kvc_evict");
         dropped
     }
 
@@ -986,9 +1186,75 @@ impl IterCtx<'_> {
         plan
     }
 
+    /// Optional trace sink: a scheduler that *knows* why it skipped a
+    /// queued request this iteration records the reason here, overriding
+    /// the central classification in [`IterCtx::finish_into`] for that
+    /// request. No-op when tracing is off; no scheduler is required to
+    /// call it — the shared plumbing classifies every skip by default.
+    pub fn note_skip(&mut self, id: ReqId, reason: SkipReason) {
+        if !self.w.tracing_enabled() {
+            return;
+        }
+        let now = self.w.clock;
+        self.w.trace_skip(id, now, reason);
+        self.noted_skips.push(id);
+    }
+
     /// Fold the recorded preemptions/evictions into the finished plan and
     /// hand the (now consumed) events buffer back to the world for reuse.
+    ///
+    /// When tracing is on, this is also where the per-iteration
+    /// **scheduler decision records** are emitted: every active request
+    /// the (non-empty) plan skipped gets a reason — shared plumbing, so
+    /// all schedulers produce decision provenance without per-scheduler
+    /// edits. Classification:
+    ///  * `waiting_held` — not in a runnable wait (`GtQueued` waiting for
+    ///    its decode group, or `Preempted` awaiting restore);
+    ///  * `kvc_exhausted` — still queued for prefill while some KVC
+    ///    allocation failed this iteration (the cache is the binding
+    ///    constraint);
+    ///  * `ordering` — a later-arrived request was planned ahead of it
+    ///    (priority/SJF/slack bypass);
+    ///  * `batch_full` — everything else: the batch ran without it.
     pub fn finish_into(mut self, plan: &mut BatchPlan) {
+        if self.w.tracing_enabled() && !plan.tasks.is_empty() {
+            let kvc_failed = self.w.kvc.stats().failures > self.failures_at;
+            let mut planned: Vec<ReqId> = plan.tasks.iter().map(|t| t.id()).collect();
+            planned.sort_unstable();
+            let mut max_arr = f64::NEG_INFINITY;
+            for &id in &planned {
+                max_arr = max_arr.max(self.w.recs[id].req.arrival);
+            }
+            let mut skipped: Vec<ReqId> = self
+                .w
+                .active
+                .iter()
+                .copied()
+                .filter(|id| {
+                    planned.binary_search(id).is_err() && !self.noted_skips.contains(id)
+                })
+                .collect();
+            skipped.sort_unstable();
+            let now = self.w.clock;
+            for id in skipped {
+                let rec = &self.w.recs[id];
+                let reason = match rec.phase {
+                    Phase::Done => continue,
+                    Phase::GtQueued | Phase::Preempted => SkipReason::WaitingHeld,
+                    Phase::PtQueued => {
+                        if kvc_failed {
+                            SkipReason::KvcExhausted
+                        } else if max_arr > rec.req.arrival {
+                            SkipReason::Ordering
+                        } else {
+                            SkipReason::BatchFull
+                        }
+                    }
+                    Phase::Prefilling | Phase::Decoding => SkipReason::BatchFull,
+                };
+                self.w.trace_skip(id, now, reason);
+            }
+        }
         plan.preempted.extend(self.preempted.drain(..));
         plan.evicted.extend(self.evicted.drain(..));
         self.events.clear();

@@ -22,6 +22,7 @@
 use crate::coordinator::{harness, RunLimits};
 use crate::fleet::{self, FleetConfig};
 use crate::figures::common;
+use crate::telemetry::{TraceConfig, TraceDoc};
 use crate::util::json::{obj, Json};
 use crate::util::rng::{derive_seed, stream};
 
@@ -62,6 +63,11 @@ pub struct GridSpec {
     pub oracle: bool,
     /// Worker threads (0 = `ECONOSERVE_THREADS` / available parallelism).
     pub threads: usize,
+    /// Record span traces: every cell runs with a recorder (seeded from
+    /// its own cell seed via `stream::TRACE`) and [`SweepResult::trace`]
+    /// carries the merged document, cells in grid order with disjoint
+    /// pid bands (`econoserve sweep --trace-out`).
+    pub trace: bool,
 }
 
 impl Default for GridSpec {
@@ -82,6 +88,7 @@ impl Default for GridSpec {
             max_time: common::MAX_TIME,
             oracle: false,
             threads: 0,
+            trace: false,
         }
     }
 }
@@ -113,7 +120,7 @@ impl GridSpec {
     /// are rejected up front — a typoed axis name (`"seed"` for
     /// `"seeds"`) must fail immediately, not silently sweep defaults.
     pub fn from_json(doc: &Json) -> Result<GridSpec, String> {
-        const KNOWN: [&str; 15] = [
+        const KNOWN: [&str; 16] = [
             "systems",
             "models",
             "traces",
@@ -129,6 +136,7 @@ impl GridSpec {
             "max_time",
             "oracle",
             "threads",
+            "trace",
         ];
         match doc {
             Json::Obj(m) => {
@@ -199,6 +207,9 @@ impl GridSpec {
         }
         if let Some(v) = doc.get("threads") {
             spec.threads = v.as_usize().ok_or("'threads' must be an integer")?;
+        }
+        if let Some(v) = doc.get("trace") {
+            spec.trace = v.as_bool().ok_or("'trace' must be a boolean")?;
         }
         spec.validate()?;
         Ok(spec)
@@ -354,6 +365,12 @@ pub struct SweepResult {
     /// simulated quantities only, so — like `rows` — this string is
     /// bit-identical at any thread count.
     pub metrics: String,
+    /// Merged span trace (`GridSpec::trace` enabled): cell documents in
+    /// grid order, each cell's pids shifted into its own band so replica
+    /// tracks never collide across cells. Simulated time only, so the
+    /// rendered bytes are bit-identical at any thread count
+    /// (`econoserve sweep --trace-out`).
+    pub trace: Option<TraceDoc>,
 }
 
 impl SweepResult {
@@ -383,13 +400,14 @@ pub fn run_grid(spec: &GridSpec) -> SweepResult {
     let cells = spec.cells();
     let threads = super::resolve_threads(spec.threads).min(cells.len().max(1));
     let t0 = std::time::Instant::now();
-    let outs = super::map_indexed(&cells, threads, |_, cell| run_cell(cell, spec));
-    // Merge per-cell registries in grid order (map_indexed collects in
-    // input order, so the merge sequence — and thus the rendered text —
-    // is independent of thread count).
+    let outs = super::map_indexed(&cells, threads, |i, cell| run_cell(i, cell, spec));
+    // Merge per-cell registries (and trace documents) in grid order
+    // (map_indexed collects in input order, so the merge sequence — and
+    // thus the rendered text — is independent of thread count).
     let mut rows = Vec::with_capacity(outs.len());
     let mut merged: Option<crate::telemetry::Snapshot> = None;
-    for (row, metrics) in outs {
+    let mut trace: Option<TraceDoc> = None;
+    for (row, metrics, doc) in outs {
         rows.push(row);
         let snap = crate::telemetry::Snapshot::parse(&metrics)
             .expect("cell registry render is valid exposition text");
@@ -397,17 +415,31 @@ pub fn run_grid(spec: &GridSpec) -> SweepResult {
             None => merged = Some(snap),
             Some(m) => m.merge(&snap).expect("cells share one metric vocabulary"),
         }
+        if let Some(d) = doc {
+            match &mut trace {
+                None => trace = Some(d),
+                Some(t) => t.merge(d),
+            }
+        }
     }
     let metrics = merged.map(|m| m.render()).unwrap_or_default();
-    SweepResult { rows, threads, wall_s: t0.elapsed().as_secs_f64(), metrics }
+    SweepResult { rows, threads, wall_s: t0.elapsed().as_secs_f64(), metrics, trace }
 }
 
-fn run_cell(cell: &Cell, spec: &GridSpec) -> (Json, String) {
+/// Disjoint pid band per cell: replica ids stay far below this, so cell
+/// `i`'s tracks land in `[i * PID_BAND, (i + 1) * PID_BAND)`.
+const PID_BAND: u32 = 10_000;
+
+fn run_cell(cell_idx: usize, cell: &Cell, spec: &GridSpec) -> (Json, String, Option<TraceDoc>) {
     let mut cfg = common::cfg(&cell.model, &cell.trace);
     cfg.seed = cell.cell_seed;
     // Never charge measured scheduler wall-clock into the simulated
     // clock in sweep cells: rows must be a pure function of the spec.
     cfg.sched_time_scale = 0.0;
+    // Cell-seeded sampling stream: the same cell samples the same
+    // requests whatever the grid shape or thread count.
+    let tracing =
+        spec.trace.then(|| TraceConfig::new(derive_seed(cfg.seed, stream::TRACE)));
     let items = common::workload(&cfg, &cell.trace, cell.rate, spec.duration, cfg.seed);
     let mut row = vec![
         ("system", Json::from(cell.system.as_str())),
@@ -440,8 +472,13 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> (Json, String) {
             }
             // Cell-level fan-out owns the cores; replicas step serially.
             fc.threads = 1;
+            fc.tracing = tracing;
             let res = fleet::run(&fc, &items);
             let metrics = res.metrics;
+            let trace = res.trace_doc.map(|mut d| {
+                d.shift_pids(cell_idx as u32 * PID_BAND);
+                d
+            });
             let s = res.summary;
             row.extend([
                 ("router", Json::from(router.as_str())),
@@ -467,18 +504,24 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> (Json, String) {
                 ("hedges_won", Json::from(s.faults.hedges_won)),
                 ("aborted", Json::from(s.faults.aborted)),
             ]);
-            (obj(row), metrics)
+            (obj(row), metrics, trace)
         }
         _ => {
-            let res = harness::simulate(
+            let res = harness::simulate_traced(
                 &cfg,
                 &cell.system,
                 &cell.trace,
                 &items,
                 spec.oracle,
                 RunLimits::for_time(spec.max_time),
+                tracing,
             );
             let metrics = res.metrics;
+            let trace = res.trace.map(|mut d| {
+                d.name_process(0, &cell.system);
+                d.shift_pids(cell_idx as u32 * PID_BAND);
+                d
+            });
             let s = res.summary;
             row.extend([
                 ("n_done", Json::from(s.n_done)),
@@ -491,7 +534,7 @@ fn run_cell(cell: &Cell, spec: &GridSpec) -> (Json, String) {
                 ("gpu_util", Json::from(s.gpu_util)),
                 ("preemptions", Json::from(s.preemptions as usize)),
             ]);
-            (obj(row), metrics)
+            (obj(row), metrics, trace)
         }
     }
 }

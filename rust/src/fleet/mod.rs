@@ -107,6 +107,21 @@ pub struct FleetConfig {
     /// let CPU contention bias the simulated clocks, so auto mode (0)
     /// stays serial and only an explicit `threads > 1` opts in.
     pub threads: usize,
+    /// Span tracing (`None` = off). When set, every replica world gets a
+    /// [`crate::telemetry::TraceRecorder`] (pid = replica id) and the
+    /// event loop records routing/boot/crash/drain provenance on the
+    /// replicas' control tracks; the per-replica documents are merged in
+    /// replica-id order at finalize, so [`FleetResult::trace_doc`] is
+    /// bit-identical at any `threads` setting. Callers pass a seed that
+    /// is already stream-separated
+    /// (`derive_seed(cfg.seed, stream::TRACE)`).
+    pub tracing: Option<crate::telemetry::TraceConfig>,
+    /// Per-replica bounded request-log capacity (0 = off). When set,
+    /// each replica world keeps a [`crate::telemetry::reqlog::RequestLog`]
+    /// and [`FleetResult::reqlog`] carries the merged JSONL (replica-id
+    /// order, each line tagged with its replica) for
+    /// `econoserve fleet --log-out`.
+    pub reqlog_capacity: usize,
 }
 
 impl FleetConfig {
@@ -131,6 +146,8 @@ impl FleetConfig {
             guardrails: "off".to_string(),
             max_sim_time: f64::INFINITY,
             threads: 0,
+            tracing: None,
+            reqlog_capacity: 0,
         }
     }
 
@@ -285,6 +302,15 @@ pub struct FleetResult {
     /// Replica registries are single-threaded by construction, so this
     /// string is bit-identical at any `threads` setting.
     pub metrics: String,
+    /// Merged span trace (`FleetConfig::tracing` enabled): per-replica
+    /// documents in replica-id order plus the control-track events, a
+    /// pure function of (config, seed) — bit-identical at any `threads`
+    /// setting (`econoserve fleet --trace-out`).
+    pub trace_doc: Option<crate::telemetry::TraceDoc>,
+    /// Merged per-replica request-log JSONL (`FleetConfig::reqlog_capacity`
+    /// > 0), each line tagged `"replica":<id>`
+    /// (`econoserve fleet --log-out`).
+    pub reqlog: Option<String>,
 }
 
 /// A chaos run paired with its fault-free twin: the same fleet config

@@ -58,6 +58,8 @@ use std::collections::BTreeMap;
 use crate::coordinator::Stepper;
 use crate::core::ReqId;
 use crate::reliability::{self, Brownout, DisplaceOrigin, GuardrailConfig, GuardrailStats};
+use crate::telemetry::span::{to_us, TraceEvent, FLEET_TID};
+use crate::telemetry::trace::{TraceDoc, TraceRecorder};
 use crate::trace::TraceItem;
 use crate::util::rng::{derive_seed, stream, Rng};
 use crate::util::stats::Samples;
@@ -87,6 +89,12 @@ impl Replica {
         cfg.seed = derive_seed(fc.cfg.seed, stream::replica(id));
         let mut stepper = Stepper::new(cfg, &fc.system, &fc.trace, fc.oracle, &[]);
         stepper.sync_clock(now);
+        if let Some(tc) = fc.tracing {
+            stepper.world.enable_tracing(tc, id as u32, &fc.system);
+        }
+        if fc.reqlog_capacity > 0 {
+            stepper.world.enable_reqlog(fc.reqlog_capacity);
+        }
         Replica {
             stepper,
             state: if latency <= 0.0 { ReplicaState::Active } else { ReplicaState::Booting },
@@ -510,6 +518,28 @@ fn advance_live(replicas: &mut [Replica], horizon: f64, threads: usize) {
     }
 }
 
+/// Push one control-track instant (pid = the replica the event
+/// concerns, tid = the reserved fleet-control track). No-op when
+/// tracing is off, so the untraced loop carries zero overhead.
+fn ctrl_instant(ctrl: &mut Option<Box<TraceRecorder>>, name: &'static str, t: f64, pid: usize) {
+    if let Some(tr) = ctrl.as_mut() {
+        tr.push_raw(TraceEvent::instant(name, to_us(t), pid as u32, FLEET_TID));
+    }
+}
+
+/// Push one control-track span (boot warm-ups, drains).
+fn ctrl_span(
+    ctrl: &mut Option<Box<TraceRecorder>>,
+    name: &'static str,
+    t0: f64,
+    t1: f64,
+    pid: usize,
+) {
+    if let Some(tr) = ctrl.as_mut() {
+        tr.push_raw(TraceEvent::span(name, to_us(t0), to_us(t1), pid as u32, FLEET_TID));
+    }
+}
+
 /// Crash one replica and stage its unfinished requests, tagged with the
 /// dead replica's index (the guardrail layer needs the provenance to
 /// collapse hedge pairs); the caller settles them via
@@ -520,7 +550,9 @@ fn kill_replica(
     t: f64,
     displaced: &mut Vec<(usize, TraceItem)>,
     tally: &mut FaultTally,
+    ctrl: &mut Option<Box<TraceRecorder>>,
 ) {
+    ctrl_instant(ctrl, "crash", t, rid);
     let lost = r.crash(t);
     displaced.extend(lost.into_iter().map(|it| (rid, it)));
     tally.crashes += 1;
@@ -530,6 +562,7 @@ fn kill_replica(
 /// resolution (`pick % candidates`) reads simulation state that is
 /// thread-invariant, so the outcome is bit-identical at any thread
 /// count. Returns how many replicas were killed by this event.
+#[allow(clippy::too_many_arguments)]
 fn apply_fault(
     ev: faults::FaultEvent,
     replicas: &mut [Replica],
@@ -537,6 +570,7 @@ fn apply_fault(
     displaced: &mut Vec<(usize, TraceItem)>,
     tally: &mut FaultTally,
     t: f64,
+    ctrl: &mut Option<Box<TraceRecorder>>,
 ) -> usize {
     let mut killed = 0usize;
     match ev.kind {
@@ -553,7 +587,7 @@ fn apply_fault(
             if let Some(&victim) =
                 candidates.get((ev.pick % candidates.len().max(1) as u64) as usize)
             {
-                kill_replica(victim, &mut replicas[victim], t, displaced, tally);
+                kill_replica(victim, &mut replicas[victim], t, displaced, tally, ctrl);
                 killed = 1;
             }
         }
@@ -564,7 +598,7 @@ fn apply_fault(
             let zone = (ev.pick % profile.zones.max(1) as u64) as usize;
             for (id, r) in replicas.iter_mut().enumerate() {
                 if !r.state.is_terminal() && id % profile.zones.max(1) == zone {
-                    kill_replica(id, r, t, displaced, tally);
+                    kill_replica(id, r, t, displaced, tally, ctrl);
                     killed += 1;
                 }
             }
@@ -642,9 +676,19 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
     } else {
         crate::exp::resolve_threads(fc.threads)
     };
+    // Fleet-control span recorder: routing/boot/crash/drain provenance
+    // on the replicas' control tracks (plus brownout sheds, which have
+    // no replica and ride on pid 0). Single-threaded like everything
+    // else in the event loop, merged into the replica documents at
+    // finalize — so the trace bytes stay thread-invariant.
+    let mut ctrl: Option<Box<TraceRecorder>> =
+        fc.tracing.map(|tc| Box::new(TraceRecorder::new(tc, 0, "fleet")));
     let init = fc.init_replicas.clamp(fc.min_replicas, fc.max_replicas);
     let mut replicas: Vec<Replica> =
         (0..init).map(|i| Replica::boot(fc, i, 0.0, 0.0, false)).collect();
+    for id in 0..init {
+        ctrl_span(&mut ctrl, "boot", 0.0, 0.0, id);
+    }
     let mut boots = init;
     let mut routed = 0usize;
     let mut peak = init;
@@ -693,7 +737,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
         clock = t;
 
         advance_live(&mut replicas, t, threads);
-        for r in &mut replicas {
+        for (id, r) in replicas.iter_mut().enumerate() {
             if r.state == ReplicaState::Booting && r.log.routable_at <= t {
                 if r.doomed {
                     // The warm-up was paid for; the replica never
@@ -703,6 +747,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                     r.log.crashed_at = Some(r.log.routable_at);
                     tally.boot_failures += 1;
                     crashed_since_tick += 1;
+                    ctrl_instant(&mut ctrl, "crash", r.log.routable_at, id);
                 } else {
                     r.state = ReplicaState::Active;
                 }
@@ -726,8 +771,15 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                 }
             }
             while let Some(ev) = injector.pop_due(t) {
-                let killed =
-                    apply_fault(ev, &mut replicas, &profile, &mut displaced, &mut tally, t);
+                let killed = apply_fault(
+                    ev,
+                    &mut replicas,
+                    &profile,
+                    &mut displaced,
+                    &mut tally,
+                    t,
+                    &mut ctrl,
+                );
                 crashed_since_tick += killed;
             }
             // Settle crash-displaced requests: through the guardrail
@@ -769,6 +821,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                     continue;
                 }
                 let pick = snaps[router.route(&snaps)].id;
+                ctrl_instant(&mut ctrl, "route", t, pick);
                 let r = &mut replicas[pick];
                 debug_assert_eq!(r.state, ReplicaState::Active);
                 r.stepper.inject(&it);
@@ -789,6 +842,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                     let id = replicas.len();
                     let doomed = injector.boot_fails();
                     replicas.push(Replica::boot(fc, id, t, fc.boot_latency, doomed));
+                    ctrl_span(&mut ctrl, "boot", t, t + fc.boot_latency, id);
                     boots += 1;
                     serving += 1;
                 }
@@ -833,6 +887,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                     continue;
                 }
                 let pick = snaps[router.route(&snaps)].id;
+                ctrl_instant(&mut ctrl, "retry", t, pick);
                 let r = &mut replicas[pick];
                 debug_assert_eq!(r.state, ReplicaState::Active);
                 let id = r.stepper.inject(&e.item);
@@ -878,6 +933,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                     continue;
                 }
                 let pick = snaps[router.route(&snaps)].id;
+                ctrl_instant(&mut ctrl, "hedge", t, pick);
                 let r = &mut replicas[pick];
                 let hid = r.stepper.inject(&item);
                 r.log.rerouted += 1;
@@ -898,6 +954,11 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                 // Tier 1 sheds the batch class, tier 2 rejects all. In
                 // the served system this surfaces as HTTP 503 +
                 // Retry-After; here the arrival is terminal.
+                if let Some(tr) = ctrl.as_mut() {
+                    // Shed before it ever got a request id: counted
+                    // under the `brownout_shed` skip reason.
+                    tr.shed(items[i].arrival);
+                }
                 tally.aborted += 1;
                 gr.stats.aborted_brownout += 1;
                 i += 1;
@@ -927,6 +988,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                 continue;
             }
             let pick = snaps[router.route(&snaps)].id;
+            ctrl_instant(&mut ctrl, "route", items[i].arrival, pick);
             let r = &mut replicas[pick];
             r.log.routed += 1;
             r.log.first_routed_at.get_or_insert(items[i].arrival);
@@ -1018,6 +1080,7 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
                         let id = replicas.len();
                         let doomed = chaos && injector.boot_fails();
                         replicas.push(Replica::boot(fc, id, t, fc.boot_latency, doomed));
+                        ctrl_span(&mut ctrl, "boot", t, t + fc.boot_latency, id);
                         boots += 1;
                     }
                 } else if target < serving {
@@ -1087,13 +1150,25 @@ pub fn run(fc: &FleetConfig, items: &[TraceItem]) -> FleetResult {
         r.retire_if_drained(clock);
     }
 
-    finalize(fc, &replicas, items.len(), routed, clock, boots, peak, floor, tally, &gr.stats)
+    finalize(
+        fc,
+        &mut replicas,
+        items.len(),
+        routed,
+        clock,
+        boots,
+        peak,
+        floor,
+        tally,
+        &gr.stats,
+        ctrl,
+    )
 }
 
 #[allow(clippy::too_many_arguments)]
 fn finalize(
     fc: &FleetConfig,
-    replicas: &[Replica],
+    replicas: &mut [Replica],
     n_total: usize,
     n_routed: usize,
     end_time: f64,
@@ -1102,13 +1177,14 @@ fn finalize(
     floor: usize,
     tally: FaultTally,
     gstats: &GuardrailStats,
+    ctrl: Option<Box<TraceRecorder>>,
 ) -> FleetResult {
     let gpus = fc.cfg.profile.gpus_per_replica as f64;
     let mut jct = Samples::new();
     let mut n_done = 0usize;
     let mut slo_ok = 0usize;
     let mut last_done = 0.0f64;
-    for r in replicas {
+    for r in replicas.iter() {
         // Requests lost to a crash carry `done_at = None` (no `jct()`),
         // so they are excluded here and count as SLO misses — and a
         // re-routed (or hedged: the loser's completion is voided)
@@ -1140,7 +1216,7 @@ fn finalize(
     let mut retirements = 0usize;
     let mut per_replica = Vec::with_capacity(replicas.len());
     let mut logs = Vec::with_capacity(replicas.len());
-    for r in replicas {
+    for r in replicas.iter() {
         // A crashed replica's GPUs are released at the crash.
         let life_end = r.log.crashed_at.or(r.log.retired_at).unwrap_or(span);
         gpu_seconds += (life_end - r.log.ordered_at).max(0.0) * gpus;
@@ -1152,6 +1228,54 @@ fn finalize(
     }
     let gpu_hours = gpu_seconds / 3600.0;
     let metrics = fleet_metrics_text(replicas, boots, retirements, &tally, gstats);
+    // Assemble the merged span trace: per-replica documents in
+    // replica-id order (each named for Perfetto's track labels), then
+    // the control recorder's routing/boot/crash/drain events, with
+    // drain spans materialized from the lifecycle logs now that both
+    // endpoints are known. Pure single-threaded bookkeeping over
+    // thread-invariant state, so the bytes never depend on `threads`.
+    let trace_doc = fc.tracing.map(|tc| {
+        let mut doc = TraceDoc::new(tc.sample);
+        for (id, r) in replicas.iter_mut().enumerate() {
+            doc.name_process(id as u32, &format!("replica-{id}"));
+            if let Some(d) = r.stepper.world.take_trace() {
+                doc.merge(d);
+            }
+        }
+        if let Some(mut tr) = ctrl {
+            for (id, r) in replicas.iter().enumerate() {
+                if let (Some(d0), Some(d1)) = (r.log.drain_at, r.log.retired_at) {
+                    tr.push_raw(TraceEvent::span(
+                        "drain",
+                        to_us(d0),
+                        to_us(d1),
+                        id as u32,
+                        FLEET_TID,
+                    ));
+                }
+            }
+            doc.merge(tr.finish());
+        }
+        doc
+    });
+    // Merged request-log JSONL, replica-id order, each line tagged with
+    // the replica that served it (per-world ids collide across replicas).
+    let reqlog = if fc.reqlog_capacity > 0 {
+        let mut out = String::new();
+        for (id, r) in replicas.iter().enumerate() {
+            if let Some(log) = r.stepper.world.reqlog() {
+                for ev in log.recent(usize::MAX) {
+                    let line = ev.to_json_line();
+                    out.push_str(&format!("{{\"replica\":{id},"));
+                    out.push_str(&line[1..]);
+                    out.push('\n');
+                }
+            }
+        }
+        Some(out)
+    } else {
+        None
+    };
     FleetResult {
         summary: FleetSummary {
             n_total,
@@ -1180,6 +1304,8 @@ fn finalize(
         per_replica,
         replicas: logs,
         metrics,
+        trace_doc,
+        reqlog,
     }
 }
 

@@ -15,6 +15,13 @@
 //!   promlint  — strict-parse a Prometheus text file (as written by
 //!               `fleet`/`sweep --metrics-out` or scraped from
 //!               `GET /metrics`) and verify it re-renders canonically.
+//!   tracelint — validate a lifecycle trace (as written by `fleet`/`sweep
+//!               --trace-out`): span conservation per request track, and
+//!               optionally reconcile span outcomes against a Prometheus
+//!               metrics file.
+//!   trace-report — per-request time-attribution table from a trace
+//!               (queued / prefill / decode / stalled-on-KVC / preempted)
+//!               plus the per-scheduler skip-reason breakdown.
 //!
 //! Run `econoserve <subcommand> --help` for options.
 
@@ -23,9 +30,11 @@ use econoserve::config::{ModelProfile, SystemConfig};
 use econoserve::coordinator::{harness, RunLimits};
 use econoserve::exp::{self, GridSpec};
 use econoserve::fleet::{self, FleetConfig};
+use econoserve::telemetry::{trace as tracing, TraceConfig, TraceDoc};
 use econoserve::trace::{self, ArrivalProcess, TraceGen, TraceSpec};
 use econoserve::util::cli::Cli;
 use econoserve::util::json::Json;
+use econoserve::util::rng::{derive_seed, stream};
 
 fn main() {
     let mut args = std::env::args().skip(1);
@@ -40,9 +49,12 @@ fn main() {
         "fleet" => cmd_fleet(rest),
         "figures" => cmd_figures(rest),
         "promlint" => cmd_promlint(rest),
+        "tracelint" => cmd_tracelint(rest),
+        "trace-report" => cmd_trace_report(rest),
         _ => {
             eprintln!(
-                "usage: econoserve <simulate|serve|sweep|trace|capacity|fleet|figures|promlint> [options]\n\
+                "usage: econoserve <simulate|serve|sweep|trace|capacity|fleet|figures|promlint|\
+                 tracelint|trace-report> [options]\n\
                  try: econoserve simulate --help"
             );
             2
@@ -211,6 +223,12 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
         "",
         "write the merged telemetry registry (Prometheus text, all cells in grid order) here",
     )
+    .opt(
+        "trace-out",
+        "",
+        "write the merged lifecycle trace (all cells in grid order, pids banded per cell) \
+         here; '.jsonl' extension selects JSONL, anything else Chrome trace-event JSON",
+    )
     .flag("oracle", "use ground-truth response lengths");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -220,7 +238,7 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
         }
     };
     let grid_path = a.get("grid");
-    let spec = if !grid_path.is_empty() {
+    let mut spec = if !grid_path.is_empty() {
         match Json::parse_file(grid_path).and_then(|doc| GridSpec::from_json(&doc)) {
             Ok(s) => s,
             Err(e) => {
@@ -262,6 +280,10 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
         }
         spec
     };
+    // --trace-out implies tracing even when the grid file left it off.
+    if !a.get("trace-out").is_empty() {
+        spec.trace = true;
+    }
     // Progress on stderr: stdout stays pure JSON when --out is empty.
     let n_cells = spec.cells().len();
     eprintln!(
@@ -292,7 +314,26 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
         }
         eprintln!("sweep: telemetry -> {metrics_out}");
     }
+    let trace_out = a.get("trace-out");
+    if !trace_out.is_empty() {
+        let Some(doc) = res.trace.as_ref() else {
+            eprintln!("sweep: no trace collected (internal error)");
+            return 1;
+        };
+        if let Err(e) = write_trace(doc, trace_out) {
+            eprintln!("write {trace_out}: {e}");
+            return 1;
+        }
+        eprintln!("sweep: trace ({} events) -> {trace_out}", doc.events.len());
+    }
     0
+}
+
+/// Write a trace document: Chrome trace-event JSON (Perfetto-loadable)
+/// by default, JSONL when the path ends in `.jsonl`.
+fn write_trace(doc: &TraceDoc, path: &str) -> std::io::Result<()> {
+    let text = if path.ends_with(".jsonl") { doc.to_jsonl() } else { doc.to_chrome_string() };
+    std::fs::write(path, text)
 }
 
 /// The simulation stack is std-only; only `serve` needs the native
@@ -574,6 +615,24 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
          (in --chaos comparison mode: the telemetry of one run under the profile \
          with the configured router and guardrails)",
     )
+    .opt(
+        "trace-out",
+        "",
+        "write the request-lifecycle trace here (same run as --metrics-out); '.jsonl' \
+         extension selects JSONL, anything else Chrome trace-event JSON (Perfetto-loadable)",
+    )
+    .opt(
+        "trace-sample",
+        "1",
+        "head-sampling fraction for per-request spans in --trace-out (0..=1, seeded, \
+         content-keyed: identical across runs/threads; aggregate counts stay exact)",
+    )
+    .opt(
+        "log-out",
+        "",
+        "write the bounded per-replica request logs (JSONL, one object per event with a \
+         'replica' tag) here",
+    )
     .flag("oracle", "use ground-truth response lengths")
     .flag(
         "compare-static",
@@ -649,6 +708,22 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
         return 2;
     }
     fc.guardrails = guard_name.to_string();
+    let trace_out = a.get("trace-out");
+    let log_out = a.get("log-out");
+    let sample = a.f64("trace-sample");
+    if !(0.0..=1.0).contains(&sample) {
+        eprintln!("--trace-sample must be in 0..=1");
+        return 2;
+    }
+    if !trace_out.is_empty() {
+        // The trace rng stream is derived from the workload seed, so the
+        // same seed yields the same sampled request set at any sample < 1.
+        fc.tracing =
+            Some(TraceConfig::new(derive_seed(cfg.seed, stream::TRACE)).with_sample(sample));
+    }
+    if !log_out.is_empty() {
+        fc.reqlog_capacity = 4096;
+    }
     if profile.is_active() {
         fc.faults = chaos_name.to_string();
         println!(
@@ -678,6 +753,10 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
         for router in econoserve::fleet::all_routers() {
             let mut rc = fc.clone();
             rc.router = router.to_string();
+            // Artifacts come from the dedicated run below, not the
+            // comparison table's many fleets.
+            rc.tracing = None;
+            rc.reqlog_capacity = 0;
             let out = fleet::chaos_run(&rc, &items);
             let f = &out.chaos.faults;
             println!(
@@ -698,6 +777,8 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
         // routing table and losses are never re-provisioned.
         let mut bc = fc.clone();
         bc.health_aware = false;
+        bc.tracing = None;
+        bc.reqlog_capacity = 0;
         let blind = fleet::chaos_run(&bc, &items);
         println!(
             "  {:<14} {:>9.1} {:>9.1}   (router={}, corpses look routable, losses unseen)",
@@ -707,16 +788,25 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
             fc.router,
         );
         let metrics_out = a.get("metrics-out");
-        if !metrics_out.is_empty() {
+        if !metrics_out.is_empty() || !trace_out.is_empty() || !log_out.is_empty() {
             // One more run with the configured router + guardrails under
-            // the profile: its merged telemetry is the exported artifact
-            // (the comparison table above runs many fleets).
+            // the profile: its merged telemetry/trace/log are the exported
+            // artifacts (the comparison table above runs many fleets).
             let res = fleet::run(&fc, &items);
-            if let Err(e) = std::fs::write(metrics_out, &res.metrics) {
-                eprintln!("write {metrics_out}: {e}");
-                return 1;
+            if !metrics_out.is_empty() {
+                if let Err(e) = std::fs::write(metrics_out, &res.metrics) {
+                    eprintln!("write {metrics_out}: {e}");
+                    return 1;
+                }
+                println!(
+                    "  telemetry (router={}, guardrails={guard_name}) -> {metrics_out}",
+                    fc.router
+                );
             }
-            println!("  telemetry (router={}, guardrails={guard_name}) -> {metrics_out}", fc.router);
+            let code = write_fleet_artifacts(&res, trace_out, log_out);
+            if code != 0 {
+                return code;
+            }
         }
         return 0;
     }
@@ -741,6 +831,10 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
         }
         println!("  telemetry -> {metrics_out}");
     }
+    let code = write_fleet_artifacts(&res, trace_out, log_out);
+    if code != 0 {
+        return code;
+    }
     print_fleet_summary(a.get("autoscaler"), &res.summary);
     for (id, log) in res.replicas.iter().enumerate() {
         println!(
@@ -760,6 +854,8 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
         // dedicated stream, so the comparison is apples to apples).
         let mut oc = fc.clone();
         oc.guardrails = "off".to_string();
+        oc.tracing = None;
+        oc.reqlog_capacity = 0;
         let off = fleet::run(&oc, &items);
         print_fleet_summary("guardrails-off", &off.summary);
         let s = &res.summary;
@@ -779,6 +875,8 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
     }
     if a.bool("compare-static") {
         let mut sc = fc.clone();
+        sc.tracing = None;
+        sc.reqlog_capacity = 0;
         sc.autoscaler = "static-k".to_string();
         sc.init_replicas = max_replicas;
         sc.min_replicas = max_replicas;
@@ -889,6 +987,132 @@ fn cmd_promlint(argv: Vec<String>) -> i32 {
         snap.sample_count()
     );
     0
+}
+
+/// Write the `--trace-out` / `--log-out` artifacts of a fleet run.
+fn write_fleet_artifacts(res: &fleet::FleetResult, trace_out: &str, log_out: &str) -> i32 {
+    if !trace_out.is_empty() {
+        let Some(doc) = res.trace_doc.as_ref() else {
+            eprintln!("fleet: no trace collected (internal error)");
+            return 1;
+        };
+        if let Err(e) = write_trace(doc, trace_out) {
+            eprintln!("write {trace_out}: {e}");
+            return 1;
+        }
+        println!("  trace ({} events, sample {}) -> {trace_out}", doc.events.len(), doc.sample);
+    }
+    if !log_out.is_empty() {
+        let text = res.reqlog.as_deref().unwrap_or("");
+        if let Err(e) = std::fs::write(log_out, text) {
+            eprintln!("write {log_out}: {e}");
+            return 1;
+        }
+        println!("  request log ({} lines) -> {log_out}", text.lines().count());
+    }
+    0
+}
+
+fn cmd_tracelint(argv: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "econoserve tracelint",
+        "validate a lifecycle trace written by `fleet`/`sweep --trace-out` (Chrome \
+         trace-event JSON or JSONL): every request track's spans must partition \
+         [submit, finish] with no overlap or gap on the sim clock, terminal outcomes \
+         must be unique, and (at sample >= 1) the per-track span census must equal the \
+         embedded aggregate outcome counters; with --metrics, span outcomes are also \
+         reconciled against `econoserve_requests_total{outcome=...}`",
+    )
+    .opt("file", "", "trace file to lint (required)")
+    .opt("metrics", "", "Prometheus text file from the SAME run to reconcile against");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let path = a.get("file");
+    if path.is_empty() {
+        eprintln!("tracelint: --file is required");
+        return 2;
+    }
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("tracelint: read {path}: {e}");
+            return 1;
+        }
+    };
+    let rep = match tracing::lint(&text) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("tracelint: {path}: {e}");
+            return 1;
+        }
+    };
+    let metrics_path = a.get("metrics");
+    if !metrics_path.is_empty() {
+        let mtext = match std::fs::read_to_string(metrics_path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("tracelint: read {metrics_path}: {e}");
+                return 1;
+            }
+        };
+        if let Err(e) = tracing::reconcile(&rep, &mtext) {
+            eprintln!("tracelint: {path} vs {metrics_path}: {e}");
+            return 1;
+        }
+        println!("tracelint: outcomes reconcile with {metrics_path}");
+    }
+    let [done, rejected, cancelled, lost] = rep.meta_outcomes;
+    println!(
+        "tracelint: {path}: OK ({} events, {} request tracks, sample {}, dropped {})\n  \
+         outcomes: done {done} rejected {rejected} cancelled {cancelled} lost {lost}",
+        rep.events, rep.request_tracks, rep.sample, rep.dropped,
+    );
+    0
+}
+
+fn cmd_trace_report(argv: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "econoserve trace-report",
+        "per-request time attribution from a lifecycle trace: each traced request's \
+         lifetime split across queued / prefill / decode / stalled-on-KVC / preempted, \
+         plus the per-scheduler skip-reason breakdown (kvc_exhausted vs batch_full vs \
+         ordering vs waiting_held vs brownout_shed)",
+    )
+    .opt("file", "", "trace file to report on (required)");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let path = a.get("file");
+    if path.is_empty() {
+        eprintln!("trace-report: --file is required");
+        return 2;
+    }
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trace-report: read {path}: {e}");
+            return 1;
+        }
+    };
+    match tracing::report(&text) {
+        Ok(table) => {
+            print!("{table}");
+            0
+        }
+        Err(e) => {
+            eprintln!("trace-report: {path}: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_figures(argv: Vec<String>) -> i32 {

@@ -172,6 +172,14 @@ pub(crate) fn swap_out_latest(
 /// Run one planning step: open the iteration context, let the scheduler
 /// plan, and fold its preemption/eviction record into the plan. This is
 /// the only way a scheduler touches a [`World`].
+///
+/// When span tracing is enabled this shared path also emits the
+/// per-iteration scheduler decision records: `IterCtx::finish_into`
+/// classifies every queued request the plan skipped (`kvc_exhausted` /
+/// `batch_full` / `ordering` / `waiting_held`), so all schedulers get
+/// decision provenance without per-scheduler edits; a scheduler can
+/// override the classification for a request it knows better about via
+/// `IterCtx::note_skip`.
 pub fn plan_iteration(world: &mut World, sched: &mut dyn Scheduler) -> BatchPlan {
     let mut ctx = world.begin_iter();
     let mut plan = sched.plan(&mut ctx);

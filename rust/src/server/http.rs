@@ -26,6 +26,11 @@
 //!   GET  /metrics         -> Prometheus text exposition of the shared
 //!                         registry (same family names as the simulator's
 //!                         `--metrics-out`; see docs/metrics-dictionary.md)
+//!   GET  /trace           -> Chrome trace-event JSON of the wall-clock
+//!                         request-lifecycle spans recorded so far (same
+//!                         span schema as the simulator's `--trace-out`;
+//!                         timestamps are seconds since server start;
+//!                         see docs/API.md "Tracing")
 //!   GET  /health          -> 200 "ok"
 //!
 //! Errors are structured: {"error": msg, "kind": stable_kind} with the
@@ -64,7 +69,9 @@ use crate::api::{
     DrainGate, RequestHandle, ServeError, StreamEvent, SubmitOptions, TokenBucketLimiter,
 };
 use crate::runtime::{ModelDims, PjrtModel};
-use crate::telemetry::{Registry, RequestLog, ServerMetrics};
+use crate::telemetry::{
+    Outcome, Registry, RequestLog, ServerMetrics, SpanState, TraceConfig, TraceRecorder,
+};
 use crate::util::json::{obj, Json};
 
 enum EngineCmd {
@@ -85,6 +92,11 @@ struct Ctx {
     brownout: crate::reliability::HttpBrownout,
     /// Epoch of the rate-limiter clock.
     origin: Instant,
+    /// Wall-clock lifecycle spans (pid 0, tid = request id), scraped at
+    /// `GET /trace`. Timestamps are seconds since `origin`, so the spans
+    /// share the simulator's schema and tooling (`tracelint`,
+    /// `trace-report`).
+    tracer: Mutex<TraceRecorder>,
 }
 
 /// Handle to a running HTTP server (engine thread + acceptor thread).
@@ -125,6 +137,7 @@ impl HttpServer {
             limiter: Mutex::new(TokenBucketLimiter::new(cfg.rate_limit)),
             brownout: cfg.brownout,
             origin: Instant::now(),
+            tracer: Mutex::new(TraceRecorder::new(TraceConfig::new(0), 0, "http")),
         });
 
         // Engine thread: owns the model (PjRtModel is !Send — the PJRT
@@ -186,6 +199,12 @@ impl HttpServer {
     /// Canonical Prometheus text of the server's registry.
     pub fn metrics_text(&self) -> String {
         self.ctx.tel.registry().render()
+    }
+
+    /// Chrome trace-event JSON of the wall-clock lifecycle spans
+    /// recorded so far (the same document `GET /trace` serves).
+    pub fn trace_text(&self) -> String {
+        crate::util::sync::lock(&self.ctx.tracer).doc().to_chrome_string()
     }
 
     /// The structured per-request event log.
@@ -332,6 +351,7 @@ fn route_label(path: &str) -> &'static str {
     match path {
         "/health" => "/health",
         "/metrics" => "/metrics",
+        "/trace" => "/trace",
         "/v1/stats" => "/v1/stats",
         "/v1/info" => "/v1/info",
         "/v1/models" => "/v1/models",
@@ -392,6 +412,9 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
         reader.read_exact(&mut body)?;
     }
     let label = route_label(&path);
+    // Arrival time on the server's wall clock — the submit edge of this
+    // request's lifecycle spans.
+    let t0 = ctx.origin.elapsed().as_secs_f64();
 
     // Drain gate: during shutdown, in-flight connections finish while
     // new ones are refused here. The guard is held for the whole
@@ -439,7 +462,7 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
         return match parse_submit(&body).and_then(|o| submit_to_engine(&ctx.tx, o)) {
             Ok(handle) => {
                 ctx.tel.http_observe(label, 200);
-                stream_response(stream, handle)
+                stream_response(stream, handle, ctx, t0)
             }
             Err(e) => {
                 ctx.tel.http_observe(label, e.http_status());
@@ -448,15 +471,28 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
         };
     }
     if method == "POST" && path == "/v1/completions" {
-        return handle_completions(stream, &body, ctx, label);
+        return handle_completions(stream, &body, ctx, label, t0);
     }
     if method == "GET" && path == "/metrics" {
+        // Surface request-log ring evictions as a counter: the log's own
+        // drop count is authoritative, so top the counter up to it here
+        // (monotonic — evictions only grow).
+        let dropped = ctx.log.dropped();
+        let seen = ctx.tel.reqlog_dropped.get();
+        if dropped > seen {
+            ctx.tel.reqlog_dropped.add(dropped - seen);
+        }
         let text = ctx.tel.registry().render();
         ctx.tel.http_observe(label, 200);
         return respond_typed(stream, 200, "text/plain; version=0.0.4", &text);
     }
+    if method == "GET" && path == "/trace" {
+        let text = crate::util::sync::lock(&ctx.tracer).doc().to_chrome_string();
+        ctx.tel.http_observe(label, 200);
+        return respond_typed(stream, 200, "application/json", &text);
+    }
 
-    let (status, payload) = route(&method, &path, &body, &ctx.tx).unwrap_or_else(|e| {
+    let (status, payload) = route(&method, &path, &body, ctx, t0).unwrap_or_else(|e| {
         let err = ServeError::Internal(format!("{e:#}"));
         (err.http_status(), error_json(&err))
     });
@@ -464,10 +500,44 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
     respond(stream, status, &payload.to_string())
 }
 
+/// Record a finished request's wall-clock lifecycle on the server's
+/// trace: queued from arrival to first token, decode from first token to
+/// completion, then the terminal outcome — the same span schema the
+/// simulator emits (docs/API.md "Tracing"), with timestamps in seconds
+/// since server start.
+fn trace_completion(ctx: &Ctx, t0: f64, c: &crate::api::Completion) {
+    let id = c.id as usize;
+    let mut tr = crate::util::sync::lock(&ctx.tracer);
+    tr.on_submit_sampled(id, t0, true);
+    if c.ttft_s > 0.0 && c.latency_s > c.ttft_s {
+        tr.transition(id, t0 + c.ttft_s, SpanState::Decode);
+    }
+    let outcome = match c.finish {
+        crate::api::FinishReason::Error => Outcome::Lost,
+        crate::api::FinishReason::Cancelled => Outcome::Cancelled,
+        crate::api::FinishReason::Rejected => Outcome::Rejected,
+        _ => Outcome::Done,
+    };
+    tr.terminal(id, t0 + c.latency_s.max(c.ttft_s).max(0.0), outcome);
+}
+
+/// As [`trace_completion`] for a request that died in `wait()` without a
+/// completion record (engine fault or mid-flight cancellation).
+fn trace_wait_error(ctx: &Ctx, t0: f64, id: u64, e: &ServeError) {
+    let now = ctx.origin.elapsed().as_secs_f64();
+    let mut tr = crate::util::sync::lock(&ctx.tracer);
+    tr.on_submit_sampled(id as usize, t0, true);
+    let outcome = match e {
+        ServeError::Cancelled => Outcome::Cancelled,
+        _ => Outcome::Lost,
+    };
+    tr.terminal(id as usize, now.max(t0), outcome);
+}
+
 /// Write one chunked-transfer NDJSON event stream: a chunk per token,
 /// then a terminal completion chunk. A failed write means the client is
 /// gone — cancel the request so the engine frees its slot.
-fn stream_response(mut stream: TcpStream, handle: RequestHandle) -> Result<()> {
+fn stream_response(mut stream: TcpStream, handle: RequestHandle, ctx: &Ctx, t0: f64) -> Result<()> {
     write!(
         stream,
         "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
@@ -485,6 +555,7 @@ fn stream_response(mut stream: TcpStream, handle: RequestHandle) -> Result<()> {
                 false,
             ),
             StreamEvent::Finished(c) => {
+                trace_completion(ctx, t0, c);
                 let mut o = completion_json(c);
                 if let Json::Obj(m) = &mut o {
                     m.insert("done".into(), Json::Bool(true));
@@ -524,6 +595,7 @@ fn handle_completions(
     body: &[u8],
     ctx: &Ctx,
     label: &'static str,
+    t0: f64,
 ) -> Result<()> {
     let reply = |stream: TcpStream, e: ServeError, ctx: &Ctx| {
         ctx.tel.http_observe(label, e.http_status());
@@ -578,9 +650,9 @@ fn handle_completions(
     };
     ctx.tel.http_observe(label, 200);
     if want_stream {
-        completions_sse(stream, handle, &model_name)
+        completions_sse(stream, handle, &model_name, ctx, t0)
     } else {
-        completions_blocking(stream, handle, &model_name, n_prompt)
+        completions_blocking(stream, handle, &model_name, n_prompt, ctx, t0)
     }
 }
 
@@ -605,13 +677,18 @@ fn completions_blocking(
     handle: RequestHandle,
     model: &str,
     n_prompt: usize,
+    ctx: &Ctx,
+    t0: f64,
 ) -> Result<()> {
+    let rid = handle.id();
     match handle.wait() {
         Ok(c) if c.finish == crate::api::FinishReason::Error => {
+            trace_completion(ctx, t0, &c);
             let e = ServeError::Internal("engine failed mid-generation".into());
             respond(stream, e.http_status(), &error_json(&e).to_string())
         }
         Ok(c) => {
+            trace_completion(ctx, t0, &c);
             let n_out = c.tokens.len();
             let doc = obj([
                 ("id", Json::from(format!("cmpl-{}", c.id))),
@@ -636,13 +713,22 @@ fn completions_blocking(
             ]);
             respond(stream, 200, &doc.to_string())
         }
-        Err(e) => respond(stream, e.http_status(), &error_json(&e).to_string()),
+        Err(e) => {
+            trace_wait_error(ctx, t0, rid, &e);
+            respond(stream, e.http_status(), &error_json(&e).to_string())
+        }
     }
 }
 
 /// Server-sent events variant: one `data: {...}` frame per token, then a
 /// final frame carrying the finish_reason, then `data: [DONE]`.
-fn completions_sse(mut stream: TcpStream, handle: RequestHandle, model: &str) -> Result<()> {
+fn completions_sse(
+    mut stream: TcpStream,
+    handle: RequestHandle,
+    model: &str,
+    ctx: &Ctx,
+    t0: f64,
+) -> Result<()> {
     write!(
         stream,
         "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
@@ -675,6 +761,7 @@ fn completions_sse(mut stream: TcpStream, handle: RequestHandle, model: &str) ->
                 (frame(id, Json::from(detokenize(&[t.token])), None), false)
             }
             StreamEvent::Finished(c) => {
+                trace_completion(ctx, t0, c);
                 (frame(id, Json::from(""), Some(openai_finish(c.finish))), true)
             }
         };
@@ -692,12 +779,8 @@ fn completions_sse(mut stream: TcpStream, handle: RequestHandle, model: &str) ->
     Ok(())
 }
 
-fn route(
-    method: &str,
-    path: &str,
-    body: &[u8],
-    tx: &mpsc::Sender<EngineCmd>,
-) -> Result<(u16, Json)> {
+fn route(method: &str, path: &str, body: &[u8], ctx: &Ctx, t0: f64) -> Result<(u16, Json)> {
+    let tx = &ctx.tx;
     match (method, path) {
         ("GET", "/health") => Ok((200, Json::from("ok"))),
         ("GET", "/v1/stats") => {
@@ -754,14 +837,24 @@ fn route(
         )),
         ("POST", "/v1/generate") => {
             match parse_submit(body).and_then(|o| submit_to_engine(tx, o)) {
-                Ok(handle) => match handle.wait() {
-                    Ok(c) if c.finish == crate::api::FinishReason::Error => {
-                        let e = ServeError::Internal("engine failed mid-generation".into());
-                        Ok((e.http_status(), error_json(&e)))
+                Ok(handle) => {
+                    let rid = handle.id();
+                    match handle.wait() {
+                        Ok(c) if c.finish == crate::api::FinishReason::Error => {
+                            trace_completion(ctx, t0, &c);
+                            let e = ServeError::Internal("engine failed mid-generation".into());
+                            Ok((e.http_status(), error_json(&e)))
+                        }
+                        Ok(c) => {
+                            trace_completion(ctx, t0, &c);
+                            Ok((200, completion_json(&c)))
+                        }
+                        Err(e) => {
+                            trace_wait_error(ctx, t0, rid, &e);
+                            Ok((e.http_status(), error_json(&e)))
+                        }
                     }
-                    Ok(c) => Ok((200, completion_json(&c))),
-                    Err(e) => Ok((e.http_status(), error_json(&e))),
-                },
+                }
                 Err(e) => Ok((e.http_status(), error_json(&e))),
             }
         }

@@ -23,6 +23,9 @@
 //!  * [`vocab`] — the pre-registered metric families shared by the sim
 //!    ([`SimMetrics`]) and the server ([`ServerMetrics`]); see
 //!    `docs/metrics-dictionary.md` for the full dictionary.
+//!  * [`span`] / [`trace`] — request-lifecycle span tracing with
+//!    scheduler decision provenance (Chrome trace-event / JSONL
+//!    export); see the "Tracing" section of `docs/API.md`.
 //!
 //! Determinism contract: sim-side metric values are pure functions of
 //! (config, seed). Each replica `World` owns its own registry and
@@ -31,11 +34,15 @@
 //! at any worker-thread count.
 
 pub mod reqlog;
+pub mod span;
 pub mod text;
+pub mod trace;
 pub mod vocab;
 
 pub use reqlog::{RequestEvent, RequestLog};
+pub use span::{Outcome, SkipReason, SpanState};
 pub use text::Snapshot;
+pub use trace::{TraceConfig, TraceDoc, TraceRecorder};
 pub use vocab::{FleetMetrics, ServerMetrics, SimMetrics};
 
 use std::collections::BTreeMap;

@@ -1,0 +1,367 @@
+//! The span model behind [`super::trace`]: typed lifecycle states,
+//! terminal outcomes, scheduler skip reasons, and the single event
+//! record both export formats (Chrome trace-event JSON and JSONL)
+//! serialize.
+//!
+//! Times are recorded as **integer microseconds** (`ts_us`/`dur_us`).
+//! Rounding happens once, at the moment a segment boundary is recorded,
+//! so two segments sharing an f64 boundary share the same integer
+//! microsecond — adjacent spans are *exactly* contiguous and
+//! `econoserve tracelint` can check the partition property with `==`,
+//! not an epsilon. Integer times also make the rendered bytes
+//! platform-independent, which the 1-vs-N-thread bit-identical trace
+//! test pins.
+
+/// What a traced request is doing during one span. These five states
+/// partition every traced request's `[submit, finish]` window on the
+/// simulated clock (the span-conservation property in `tests/trace.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanState {
+    /// Waiting for a batch slot (inbox or scheduler-internal queue).
+    Queued,
+    /// Member of an executed iteration's prefill set.
+    Prefill,
+    /// Member of an executed iteration's decode set.
+    Decode,
+    /// Waiting while the KV cache is the binding constraint: the
+    /// scheduler skipped it with reason `kvc_exhausted` and it has not
+    /// been scheduled since.
+    StalledKvc,
+    /// Preempted out of the running batch (swap or drop-recompute),
+    /// lease released, waiting to be restored.
+    Preempted,
+}
+
+impl SpanState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanState::Queued => "queued",
+            SpanState::Prefill => "prefill",
+            SpanState::Decode => "decode",
+            SpanState::StalledKvc => "stalled_kvc",
+            SpanState::Preempted => "preempted",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "queued" => Some(SpanState::Queued),
+            "prefill" => Some(SpanState::Prefill),
+            "decode" => Some(SpanState::Decode),
+            "stalled_kvc" => Some(SpanState::StalledKvc),
+            "preempted" => Some(SpanState::Preempted),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [SpanState; 5] = [
+        SpanState::Queued,
+        SpanState::Prefill,
+        SpanState::Decode,
+        SpanState::StalledKvc,
+        SpanState::Preempted,
+    ];
+}
+
+/// Terminal outcome of a traced request. `Done`/`Rejected`/`Cancelled`
+/// reconcile 1:1 with `econoserve_requests_total{outcome=...}`; `Lost`
+/// is trace-only (crash victims increment no sim counter — the fleet
+/// accounts for them at the fleet level).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Done,
+    Rejected,
+    Cancelled,
+    Lost,
+}
+
+impl Outcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Outcome::Done => "done",
+            Outcome::Rejected => "rejected",
+            Outcome::Cancelled => "cancelled",
+            Outcome::Lost => "lost",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "done" => Some(Outcome::Done),
+            "rejected" => Some(Outcome::Rejected),
+            "cancelled" => Some(Outcome::Cancelled),
+            "lost" => Some(Outcome::Lost),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [Outcome; 4] =
+        [Outcome::Done, Outcome::Rejected, Outcome::Cancelled, Outcome::Lost];
+}
+
+/// Why the scheduler skipped a queued request in an executed iteration.
+/// Emitted centrally from `IterCtx::finish_into` (every scheduler gets
+/// the records through the shared `plan_iteration` plumbing) except
+/// `BrownoutShed`, which the fleet front door emits at arrival time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SkipReason {
+    /// A KVC allocation failed this iteration: the cache, not the batch,
+    /// is the binding constraint.
+    KvcExhausted,
+    /// The batch ran without it and no later-arrived request bypassed
+    /// it: capacity, not ordering, held it back.
+    BatchFull,
+    /// A later-arrived request was scheduled ahead of it (priority /
+    /// SJF / slack ordering), or the scheduler formed no batch at all
+    /// while holding it (e.g. a synchronous group boundary).
+    Ordering,
+    /// Shed by the brownout admission gate before routing.
+    BrownoutShed,
+    /// Held in a non-runnable wait state: prefill finished and the
+    /// request waits for its decode group, or it is preempted awaiting
+    /// restore.
+    WaitingHeld,
+}
+
+impl SkipReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SkipReason::KvcExhausted => "kvc_exhausted",
+            SkipReason::BatchFull => "batch_full",
+            SkipReason::Ordering => "ordering",
+            SkipReason::BrownoutShed => "brownout_shed",
+            SkipReason::WaitingHeld => "waiting_held",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "kvc_exhausted" => Some(SkipReason::KvcExhausted),
+            "batch_full" => Some(SkipReason::BatchFull),
+            "ordering" => Some(SkipReason::Ordering),
+            "brownout_shed" => Some(SkipReason::BrownoutShed),
+            "waiting_held" => Some(SkipReason::WaitingHeld),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [SkipReason; 5] = [
+        SkipReason::KvcExhausted,
+        SkipReason::BatchFull,
+        SkipReason::Ordering,
+        SkipReason::BrownoutShed,
+        SkipReason::WaitingHeld,
+    ];
+}
+
+/// Chrome trace-event phase. `X` = complete span (ts + dur), `I` =
+/// instant, `M` = metadata (process/thread naming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventPhase {
+    Complete,
+    Instant,
+    Meta,
+}
+
+impl EventPhase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventPhase::Complete => "X",
+            EventPhase::Instant => "i",
+            EventPhase::Meta => "M",
+        }
+    }
+}
+
+/// One event argument value (kept typed so numbers render as numbers).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    U64(u64),
+    Str(String),
+}
+
+impl ArgValue {
+    fn render(&self, out: &mut String) {
+        match self {
+            ArgValue::U64(n) => out.push_str(&n.to_string()),
+            ArgValue::Str(s) => {
+                out.push('"');
+                out.push_str(&escape_json(s));
+                out.push('"');
+            }
+        }
+    }
+}
+
+/// The thread id of the per-replica scheduler decision track (one past
+/// the `u32` request-id space, so it can never collide with a request).
+pub const SCHED_TID: u64 = 1 << 32;
+/// The thread id of the fleet control track (routing/boot/crash/drain).
+pub const FLEET_TID: u64 = (1 << 32) + 1;
+
+/// One trace event: the unit both export formats serialize. Requests
+/// map to `tid = request id` within `pid = replica`; the scheduler and
+/// fleet control tracks use the reserved tids above.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub ph: EventPhase,
+    /// Microseconds (sim clock for sim traces, wall clock for the HTTP
+    /// server's) — integer so contiguity checks are exact.
+    pub ts_us: u64,
+    /// Only meaningful for `EventPhase::Complete`.
+    pub dur_us: u64,
+    pub pid: u32,
+    pub tid: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// Round a time in seconds to integer microseconds (the single rounding
+/// point of the tracing layer).
+pub fn to_us(t_s: f64) -> u64 {
+    (t_s * 1e6).round().max(0.0) as u64
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl TraceEvent {
+    pub fn span(
+        name: &'static str,
+        t0_us: u64,
+        t1_us: u64,
+        pid: u32,
+        tid: u64,
+    ) -> TraceEvent {
+        TraceEvent {
+            name,
+            ph: EventPhase::Complete,
+            ts_us: t0_us,
+            dur_us: t1_us.saturating_sub(t0_us),
+            pid,
+            tid,
+            args: Vec::new(),
+        }
+    }
+
+    pub fn instant(name: &'static str, ts_us: u64, pid: u32, tid: u64) -> TraceEvent {
+        TraceEvent { name, ph: EventPhase::Instant, ts_us, dur_us: 0, pid, tid, args: Vec::new() }
+    }
+
+    pub fn meta(name: &'static str, pid: u32, tid: u64, value: &str) -> TraceEvent {
+        TraceEvent {
+            name,
+            ph: EventPhase::Meta,
+            ts_us: 0,
+            dur_us: 0,
+            pid,
+            tid,
+            args: vec![("name", ArgValue::Str(value.to_string()))],
+        }
+    }
+
+    pub fn with_arg(mut self, key: &'static str, value: ArgValue) -> TraceEvent {
+        self.args.push((key, value));
+        self
+    }
+
+    /// Render as one Chrome trace-event JSON object (stable key order,
+    /// integer times — byte-deterministic).
+    pub fn render(&self, out: &mut String) {
+        out.push_str("{\"name\":\"");
+        out.push_str(self.name);
+        out.push_str("\",\"ph\":\"");
+        out.push_str(self.ph.as_str());
+        out.push_str("\",\"ts\":");
+        out.push_str(&self.ts_us.to_string());
+        if self.ph == EventPhase::Complete {
+            out.push_str(",\"dur\":");
+            out.push_str(&self.dur_us.to_string());
+        }
+        out.push_str(",\"pid\":");
+        out.push_str(&self.pid.to_string());
+        out.push_str(",\"tid\":");
+        out.push_str(&self.tid.to_string());
+        if !self.args.is_empty() {
+            out.push_str(",\"args\":{");
+            for (i, (k, v)) in self.args.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('"');
+                out.push_str(k);
+                out.push_str("\":");
+                v.render(out);
+            }
+            out.push('}');
+        }
+        out.push('}');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_round_trips() {
+        for s in SpanState::ALL {
+            assert_eq!(SpanState::parse(s.as_str()), Some(s));
+        }
+        for o in Outcome::ALL {
+            assert_eq!(Outcome::parse(o.as_str()), Some(o));
+        }
+        for r in SkipReason::ALL {
+            assert_eq!(SkipReason::parse(r.as_str()), Some(r));
+        }
+        assert_eq!(SpanState::parse("nope"), None);
+    }
+
+    #[test]
+    fn rounding_is_single_point_and_contiguous() {
+        // Two segments sharing an f64 boundary share the integer
+        // microsecond, so spans built from the same boundary are exactly
+        // contiguous.
+        let t = 1.2345678;
+        let a = TraceEvent::span("queued", to_us(0.5), to_us(t), 0, 7);
+        let b = TraceEvent::span("decode", to_us(t), to_us(2.0), 0, 7);
+        assert_eq!(a.ts_us + a.dur_us, b.ts_us);
+    }
+
+    #[test]
+    fn event_renders_stable_json() {
+        let mut s = String::new();
+        TraceEvent::span("decode", 10, 25, 1, 42)
+            .with_arg("n", ArgValue::U64(3))
+            .with_arg("why", ArgValue::Str("a\"b".into()))
+            .render(&mut s);
+        assert_eq!(
+            s,
+            "{\"name\":\"decode\",\"ph\":\"X\",\"ts\":10,\"dur\":15,\"pid\":1,\"tid\":42,\
+             \"args\":{\"n\":3,\"why\":\"a\\\"b\"}}"
+        );
+        let mut i = String::new();
+        TraceEvent::instant("crash", 5, 2, FLEET_TID).render(&mut i);
+        assert!(!i.contains("dur"), "{i}");
+    }
+
+    #[test]
+    fn reserved_tids_clear_request_space() {
+        assert!(SCHED_TID > u32::MAX as u64);
+        assert!(FLEET_TID > u32::MAX as u64);
+        assert_ne!(SCHED_TID, FLEET_TID);
+    }
+}

@@ -96,8 +96,42 @@ impl Snapshot {
     }
 
     /// Add every sample of `other` into this snapshot. Family kinds must
-    /// agree; families unique to either side are unioned.
+    /// agree, histogram families present on both sides must agree on
+    /// their per-series bucket layout (summed cumulative buckets are
+    /// only meaningful over identical `le` bounds), and families unique
+    /// to either side are unioned.
     pub fn merge(&mut self, other: &Snapshot) -> Result<(), String> {
+        // Bucket-layout consistency first, before any mutation: for each
+        // histogram family both sides carry, every series (base label
+        // set) present in both must expose the same `le` bounds.
+        for (name, meta) in &other.metas {
+            if meta.kind != MetricKind::Histogram {
+                continue;
+            }
+            match self.metas.get(name) {
+                Some(mine) if mine.kind == MetricKind::Histogram => {}
+                _ => continue, // absent, or a kind mismatch reported below
+            }
+            let a = self.bucket_layout(name);
+            let b = other.bucket_layout(name);
+            for (base, bounds) in &b {
+                if let Some(have) = a.get(base) {
+                    if have != bounds {
+                        let series = if base.render().is_empty() {
+                            "{}".to_string()
+                        } else {
+                            base.render()
+                        };
+                        return Err(format!(
+                            "family '{name}' bucket layout mismatch (series {series}): \
+                             le bounds [{}] vs [{}]",
+                            have.join(","),
+                            bounds.join(","),
+                        ));
+                    }
+                }
+            }
+        }
         for (name, meta) in &other.metas {
             match self.metas.get(name) {
                 Some(mine) if mine.kind != meta.kind => {
@@ -117,6 +151,37 @@ impl Snapshot {
             *self.samples.entry((name.clone(), ls.clone())).or_insert(0.0) += v;
         }
         Ok(())
+    }
+
+    /// The `le` bounds of a histogram family's `_bucket` samples,
+    /// grouped by base label set (labels minus `le`) and sorted by
+    /// numeric bound.
+    fn bucket_layout(&self, family: &str) -> BTreeMap<LabelSet, Vec<String>> {
+        let sample = format!("{family}_bucket");
+        let mut out: BTreeMap<LabelSet, Vec<String>> = BTreeMap::new();
+        for ((_, ls), _) in self
+            .samples
+            .range((sample.clone(), LabelSet::empty())..=(sample, max_label_set()))
+        {
+            let mut base = Vec::new();
+            let mut le = String::new();
+            for (k, v) in ls.pairs() {
+                if k == "le" {
+                    le = v.clone();
+                } else {
+                    base.push((k.clone(), v.clone()));
+                }
+            }
+            out.entry(LabelSet::from_owned(base)).or_default().push(le);
+        }
+        for bounds in out.values_mut() {
+            bounds.sort_by(|a, b| {
+                parse_value(a)
+                    .unwrap_or(f64::INFINITY)
+                    .total_cmp(&parse_value(b).unwrap_or(f64::INFINITY))
+            });
+        }
+        out
     }
 
     /// Look up one sample value (for reconciliation tests). For
@@ -402,6 +467,30 @@ mod tests {
         ba.merge(&parse(&reg_a)).unwrap();
         assert_eq!(ab.render(), ba.render());
         assert_eq!(ab.value("x_total", &[]), Some(42.0));
+    }
+
+    #[test]
+    fn merge_rejects_bucket_layout_mismatch() {
+        let mk = |start: f64| {
+            let reg = Registry::new();
+            let h = reg.histogram("h_seconds", "h", Buckets::exponential(start, 2.0, 3), &[]);
+            h.observe(1.0);
+            Snapshot::parse(&reg.render()).unwrap()
+        };
+        let mut a = mk(0.5);
+        let err = a.merge(&mk(0.25)).unwrap_err();
+        assert!(err.contains("h_seconds"), "error must name the family: {err}");
+        assert!(err.contains("bucket layout"), "{err}");
+        // Identical layouts still merge, and sum.
+        let mut a = mk(0.5);
+        a.merge(&mk(0.5)).unwrap();
+        assert_eq!(a.value("h_seconds_count", &[]), Some(2.0));
+        // A histogram family unique to one side is unioned untouched.
+        let mut a = mk(0.5);
+        let reg = Registry::new();
+        reg.counter("c_total", "c", &[]).inc();
+        a.merge(&Snapshot::parse(&reg.render()).unwrap()).unwrap();
+        assert_eq!(a.value("c_total", &[]), Some(1.0));
     }
 
     #[test]

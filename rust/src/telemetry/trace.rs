@@ -1,0 +1,976 @@
+//! Deterministic, bounded span recorder over simulated time (and, for
+//! the HTTP server, wall time) — the request-lifecycle tracing layer.
+//!
+//! A [`TraceRecorder`] lives inside one `World` (pid = replica id) or
+//! one control loop (the fleet event loop, the HTTP server). It keeps a
+//! tiny per-request state machine — [`SpanState`] — and turns every
+//! state change into a Chrome trace-event `X` span, so each traced
+//! request's spans *partition* `[submit, finish]` with no gap or
+//! overlap (the span-conservation property pinned in `tests/trace.rs`).
+//! Scheduler decision records ("why was this queued request skipped?")
+//! arrive through [`TraceRecorder::skip`] from the shared
+//! `IterCtx::finish_into` plumbing, so all schedulers emit them without
+//! per-scheduler edits.
+//!
+//! Determinism contract: recorders are per-world single-threaded state,
+//! timestamps are integer microseconds of the simulated clock, and the
+//! fleet merges per-replica documents in replica-id order — so the
+//! rendered bytes are a pure function of (config, seed), bit-identical
+//! at any `ECONOSERVE_THREADS` (pinned in `tests/equivalence.rs`).
+//! Head-sampling draws from the dedicated `stream::TRACE` rng stream
+//! and hashes *request content* (arrival, prompt length, true response
+//! length), so a retry or hedge copy of a sampled request is sampled on
+//! every replica it visits, at every thread count.
+//!
+//! Outcome totals ([`TraceDoc::outcomes`]) are counted for **all**
+//! requests, sampled or not, which is what lets `econoserve tracelint`
+//! reconcile a trace against `econoserve_requests_total{outcome}` even
+//! for sampled million-request runs.
+
+use super::span::{
+    to_us, ArgValue, Outcome, SkipReason, SpanState, TraceEvent, FLEET_TID, SCHED_TID,
+};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Config + sampling
+// ---------------------------------------------------------------------------
+
+/// Tracing knobs. `seed` must already be stream-separated (callers pass
+/// `derive_seed(cfg.seed, stream::TRACE)`), so two worlds with the same
+/// base seed sample the same logical requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceConfig {
+    /// Head-sampling rate in `[0, 1]`: fraction of requests that get
+    /// per-span events. Aggregate outcome/skip totals always cover all
+    /// requests.
+    pub sample: f64,
+    /// Hard cap on buffered events; beyond it events are dropped and
+    /// counted (`TraceDoc::dropped`), never reallocated unboundedly.
+    pub max_events: usize,
+    /// Stream-separated sampling seed (`derive_seed(seed, stream::TRACE)`).
+    pub seed: u64,
+}
+
+impl TraceConfig {
+    pub fn new(seed: u64) -> Self {
+        TraceConfig { sample: 1.0, max_events: 1_000_000, seed }
+    }
+
+    pub fn with_sample(mut self, sample: f64) -> Self {
+        self.sample = sample.clamp(0.0, 1.0);
+        self
+    }
+}
+
+/// Content hash used for head-sampling: identical for every copy of the
+/// same logical request (retry and hedge copies keep the original
+/// arrival/prompt/response-length triple), independent of replica,
+/// thread count, and submission order.
+pub fn sample_key(seed: u64, arrival: f64, prompt_len: u64, true_rl: u64) -> u64 {
+    let a = Rng::new(seed ^ arrival.to_bits()).next_u64();
+    Rng::new(a ^ (prompt_len << 32) ^ true_rl).next_u64()
+}
+
+fn sample_threshold(sample: f64) -> u128 {
+    if sample >= 1.0 {
+        1u128 << 64
+    } else if sample <= 0.0 {
+        0
+    } else {
+        (sample * (1u128 << 64) as f64) as u128
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recorder
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct ReqState {
+    sampled: bool,
+    state: SpanState,
+    /// Start of the open segment, in seconds on the recorder's clock.
+    since: f64,
+    closed: bool,
+}
+
+/// Per-world (or per-control-loop) span recorder. Single-threaded by
+/// construction; the fleet merges finished [`TraceDoc`]s in replica-id
+/// order instead of sharing one recorder.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    cfg: TraceConfig,
+    threshold: u128,
+    pid: u32,
+    system: String,
+    states: Vec<Option<ReqState>>,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+    outcomes: [u64; 4],
+    skips: [u64; 5],
+}
+
+impl TraceRecorder {
+    pub fn new(cfg: TraceConfig, pid: u32, system: &str) -> Self {
+        TraceRecorder {
+            cfg,
+            threshold: sample_threshold(cfg.sample),
+            pid,
+            system: system.to_string(),
+            states: Vec::new(),
+            events: Vec::new(),
+            dropped: 0,
+            outcomes: [0; 4],
+            skips: [0; 5],
+        }
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn events_len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Would a request with this content triple get per-span events?
+    pub fn sampled_content(&self, arrival: f64, prompt_len: u64, true_rl: u64) -> bool {
+        (sample_key(self.cfg.seed, arrival, prompt_len, true_rl) as u128) < self.threshold
+    }
+
+    pub fn is_sampled(&self, id: usize) -> bool {
+        matches!(self.states.get(id), Some(Some(s)) if s.sampled)
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() >= self.cfg.max_events {
+            self.dropped += 1;
+        } else {
+            self.events.push(ev);
+        }
+    }
+
+    fn slot(&mut self, id: usize) -> &mut Option<ReqState> {
+        if id >= self.states.len() {
+            self.states.resize(id + 1, None);
+        }
+        &mut self.states[id]
+    }
+
+    /// Register a request at submit time, deciding sampling from its
+    /// content triple. Idempotent per id.
+    pub fn on_submit(&mut self, id: usize, t: f64, arrival: f64, prompt_len: u64, true_rl: u64) {
+        let sampled = self.sampled_content(arrival, prompt_len, true_rl);
+        self.on_submit_sampled(id, t, sampled);
+    }
+
+    /// Register a request with an explicit sampling decision (the HTTP
+    /// server traces every request it is asked to).
+    pub fn on_submit_sampled(&mut self, id: usize, t: f64, sampled: bool) {
+        let slot = self.slot(id);
+        if slot.is_none() {
+            *slot = Some(ReqState { sampled, state: SpanState::Queued, since: t, closed: false });
+        }
+    }
+
+    /// Close the open segment (if it rounds to a nonzero duration) and
+    /// open a new one in `next`. Called from `World::apply_plan` and the
+    /// preemption/eviction hooks; monotone `t` keeps the partition exact.
+    pub fn transition(&mut self, id: usize, t: f64, next: SpanState) {
+        let pid = self.pid;
+        let Some(Some(st)) = self.states.get_mut(id) else { return };
+        if st.closed {
+            return;
+        }
+        let (t0, t1) = (to_us(st.since), to_us(t));
+        let emit = st.sampled && t1 > t0;
+        let name = st.state.as_str();
+        st.state = next;
+        st.since = t;
+        if emit {
+            self.push(TraceEvent::span(name, t0, t1, pid, id as u64));
+        }
+    }
+
+    /// Terminal outcome: closes the final segment, emits the outcome
+    /// instant (sampled requests), and counts the outcome for **all**
+    /// requests — the totals `tracelint` reconciles against
+    /// `requests_total{outcome}`.
+    pub fn terminal(&mut self, id: usize, t: f64, outcome: Outcome) {
+        let pid = self.pid;
+        let idx = outcome as usize;
+        let Some(Some(st)) = self.states.get_mut(id) else {
+            self.outcomes[idx] += 1;
+            return;
+        };
+        if st.closed {
+            return;
+        }
+        st.closed = true;
+        self.outcomes[idx] += 1;
+        if !st.sampled {
+            return;
+        }
+        // Crash victims that never arrived close at their (future)
+        // submit time: an empty partition, not a negative span.
+        let end = if t > st.since { t } else { st.since };
+        let (t0, t1) = (to_us(st.since), to_us(end));
+        let name = st.state.as_str();
+        if t1 > t0 {
+            self.push(TraceEvent::span(name, t0, t1, pid, id as u64));
+        }
+        self.push(TraceEvent::instant(outcome.as_str(), t1, pid, id as u64));
+    }
+
+    /// Scheduler decision record: the request was queued and skipped
+    /// this iteration for `reason`. Counted for all requests; sampled
+    /// requests additionally get an instant on their track, and their
+    /// waiting segment is relabelled between `queued` and `stalled_kvc`
+    /// so waiting time is attributed to the binding resource.
+    pub fn skip(&mut self, id: usize, t: f64, reason: SkipReason) {
+        self.skips[reason as usize] += 1;
+        let Some(Some(st)) = self.states.get(id) else { return };
+        if st.closed {
+            return;
+        }
+        match (reason, st.state) {
+            (SkipReason::KvcExhausted, SpanState::Queued) => {
+                self.transition(id, t, SpanState::StalledKvc);
+            }
+            (SkipReason::BatchFull | SkipReason::Ordering, SpanState::StalledKvc) => {
+                self.transition(id, t, SpanState::Queued);
+            }
+            _ => {}
+        }
+        let Some(Some(st)) = self.states.get(id) else { return };
+        if st.sampled {
+            let ev = TraceEvent::instant("skip", to_us(t), self.pid, id as u64)
+                .with_arg("reason", ArgValue::Str(reason.as_str().to_string()));
+            self.push(ev);
+        }
+    }
+
+    /// A request was shed before it ever got an id (brownout admission
+    /// gate): counted under `brownout_shed` with an instant on the
+    /// control track.
+    pub fn shed(&mut self, t: f64) {
+        self.skips[SkipReason::BrownoutShed as usize] += 1;
+        let ev = TraceEvent::instant("skip", to_us(t), self.pid, FLEET_TID)
+            .with_arg("reason", ArgValue::Str(SkipReason::BrownoutShed.as_str().to_string()));
+        self.push(ev);
+    }
+
+    /// Per-iteration record on the scheduler track: batch composition
+    /// (prefill vs decode membership) and the iteration's KVC lease
+    /// tally (granted / hosted / exhausted `AllocOutcome`s).
+    #[allow(clippy::too_many_arguments)]
+    pub fn iteration(
+        &mut self,
+        t0: f64,
+        t1: f64,
+        prefill: u64,
+        decode: u64,
+        granted: u64,
+        hosted: u64,
+        exhausted: u64,
+    ) {
+        let ev = TraceEvent::span("iteration", to_us(t0), to_us(t1), self.pid, SCHED_TID)
+            .with_arg("prefill", ArgValue::U64(prefill))
+            .with_arg("decode", ArgValue::U64(decode))
+            .with_arg("kvc_granted", ArgValue::U64(granted))
+            .with_arg("kvc_hosted", ArgValue::U64(hosted))
+            .with_arg("kvc_exhausted", ArgValue::U64(exhausted));
+        self.push(ev);
+    }
+
+    /// KVC lease-release / eviction marker on a sampled request's track
+    /// (lease grants are visible in the iteration record's tally).
+    pub fn lease_event(&mut self, id: usize, t: f64, name: &'static str) {
+        if self.is_sampled(id) {
+            self.push(TraceEvent::instant(name, to_us(t), self.pid, id as u64));
+        }
+    }
+
+    /// Raw event escape hatch for control tracks (fleet routing, boot,
+    /// crash, drain; HTTP connection events).
+    pub fn push_raw(&mut self, ev: TraceEvent) {
+        self.push(ev);
+    }
+
+    /// Finish: consume the recorder into its mergeable document.
+    pub fn finish(self) -> TraceDoc {
+        let mut skips = std::collections::BTreeMap::new();
+        if self.skips.iter().any(|&n| n > 0) {
+            skips.insert(self.system.clone(), self.skips);
+        }
+        TraceDoc {
+            events: self.events,
+            outcomes: self.outcomes,
+            skips,
+            dropped: self.dropped,
+            sample: self.cfg.sample,
+        }
+    }
+
+    /// Snapshot without consuming (the HTTP server's `GET /trace`).
+    pub fn doc(&self) -> TraceDoc {
+        self.clone().finish()
+    }
+
+    pub fn outcomes(&self) -> [u64; 4] {
+        self.outcomes
+    }
+
+    pub fn skip_counts(&self) -> [u64; 5] {
+        self.skips
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Document: merge + export
+// ---------------------------------------------------------------------------
+
+/// A finished trace: events plus the aggregate metadata the exports
+/// embed. Mergeable (fleet: replica docs in id order; sweep: cell docs
+/// in grid order with pid offsets), so the merged bytes stay a pure
+/// function of (config, seed).
+#[derive(Debug, Clone, Default)]
+pub struct TraceDoc {
+    pub events: Vec<TraceEvent>,
+    /// Terminal outcomes for all requests: done/rejected/cancelled/lost.
+    pub outcomes: [u64; 4],
+    /// Skip-reason totals keyed by system name (`sched+alloc`), so a
+    /// merged sweep document keeps a per-scheduler breakdown.
+    pub skips: std::collections::BTreeMap<String, [u64; 5]>,
+    pub dropped: u64,
+    pub sample: f64,
+}
+
+impl TraceDoc {
+    pub fn new(sample: f64) -> Self {
+        TraceDoc { sample, ..TraceDoc::default() }
+    }
+
+    /// Shift every pid by `offset` (sweep cells get disjoint pid bands).
+    pub fn shift_pids(&mut self, offset: u32) {
+        for ev in &mut self.events {
+            ev.pid += offset;
+        }
+    }
+
+    /// Name a process (replica / cell) for Perfetto's track labels.
+    pub fn name_process(&mut self, pid: u32, name: &str) {
+        self.events.push(TraceEvent::meta("process_name", pid, 0, name));
+        self.events.push(TraceEvent::meta("thread_name", pid, SCHED_TID, "scheduler"));
+        self.events.push(TraceEvent::meta("thread_name", pid, FLEET_TID, "control"));
+    }
+
+    pub fn merge(&mut self, other: TraceDoc) {
+        self.events.extend(other.events);
+        for i in 0..4 {
+            self.outcomes[i] += other.outcomes[i];
+        }
+        for (sys, counts) in other.skips {
+            let slot = self.skips.entry(sys).or_insert([0; 5]);
+            for i in 0..5 {
+                slot[i] += counts[i];
+            }
+        }
+        self.dropped += other.dropped;
+    }
+
+    fn render_meta(&self, out: &mut String) {
+        // Shortest-round-trip f64 Display is deterministic and parses
+        // back exactly; 0 and 1 render without a decimal point.
+        out.push_str("{\"sample\":");
+        out.push_str(&self.sample.to_string());
+        out.push_str(",\"dropped_events\":");
+        out.push_str(&self.dropped.to_string());
+        out.push_str(",\"outcomes\":{");
+        for (i, o) in Outcome::ALL.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            out.push_str(o.as_str());
+            out.push_str("\":");
+            out.push_str(&self.outcomes[*o as usize].to_string());
+        }
+        out.push_str("},\"skips\":{");
+        for (i, (sys, counts)) in self.skips.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            out.push_str(sys);
+            out.push_str("\":{");
+            for (j, r) in SkipReason::ALL.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push('"');
+                out.push_str(r.as_str());
+                out.push_str("\":");
+                out.push_str(&counts[*r as usize].to_string());
+            }
+            out.push('}');
+        }
+        out.push_str("}}");
+    }
+
+    /// Chrome trace-event JSON (object form, Perfetto-loadable). The
+    /// aggregate metadata rides in a top-level `econoserve` key, which
+    /// the format explicitly allows and viewers ignore.
+    pub fn to_chrome_string(&self) -> String {
+        let mut out = String::with_capacity(64 + self.events.len() * 96);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"econoserve\":");
+        self.render_meta(&mut out);
+        out.push_str(",\"traceEvents\":[");
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('\n');
+            ev.render(&mut out);
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// JSONL export: one metadata header line (`{"meta":...}`), then one
+    /// event object per line — the streaming-friendly flavor.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::with_capacity(32 + self.events.len() * 96);
+        out.push_str("{\"meta\":");
+        self.render_meta(&mut out);
+        out.push_str("}\n");
+        for ev in &self.events {
+            ev.render(&mut out);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lint
+// ---------------------------------------------------------------------------
+
+/// What `lint` verified, for reporting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LintReport {
+    pub events: usize,
+    pub request_tracks: usize,
+    /// Outcome instants found on request tracks (sampled requests only).
+    pub span_outcomes: [u64; 4],
+    /// Aggregate outcome totals from the embedded metadata (all
+    /// requests).
+    pub meta_outcomes: [u64; 4],
+    pub sample: f64,
+    pub dropped: u64,
+}
+
+fn ev_u64(ev: &Json, key: &str) -> Result<u64, String> {
+    ev.get(key)
+        .and_then(|v| v.as_i64())
+        .and_then(|v| u64::try_from(v).ok())
+        .ok_or_else(|| format!("event missing non-negative integer '{}'", key))
+}
+
+/// Strict structural check of a Chrome trace-event document produced by
+/// [`TraceDoc::to_chrome_string`]:
+///
+/// * every event has a known phase, name vocabulary, and integer times;
+/// * per request track, `X` spans are **exactly contiguous** (each
+///   starts at the previous end — the span-conservation property) and
+///   carry only [`SpanState`] names;
+/// * at most one terminal-outcome instant per track, positioned at the
+///   final span's end;
+/// * scheduler/control tracks are monotone (spans never overlap);
+/// * when nothing was dropped and sampling is 1.0, outcome instants
+///   reconcile with the metadata outcome totals.
+///
+/// Contiguity/outcome-position checks are skipped when
+/// `dropped_events > 0` (the cap cuts spans mid-lifecycle by design).
+pub fn lint(text: &str) -> Result<LintReport, String> {
+    let doc = Json::parse(text)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing 'traceEvents' array")?;
+    let meta = doc.get("econoserve").ok_or("missing 'econoserve' metadata object")?;
+    let mut rep = LintReport {
+        events: events.len(),
+        sample: meta.at(&["sample"]).ok().and_then(|v| v.as_f64()).ok_or("meta missing sample")?,
+        dropped: meta
+            .at(&["dropped_events"])
+            .ok()
+            .and_then(|v| v.as_i64())
+            .ok_or("meta missing dropped_events")? as u64,
+        ..LintReport::default()
+    };
+    for (i, o) in Outcome::ALL.iter().enumerate() {
+        rep.meta_outcomes[i] = meta
+            .at(&["outcomes", o.as_str()])
+            .map_err(|e| format!("meta outcomes: {}", e))?
+            .as_i64()
+            .ok_or_else(|| format!("meta outcome '{}' not an integer", o.as_str()))?
+            as u64;
+    }
+    if let Some(Json::Obj(systems)) = meta.get("skips") {
+        for (sys, counts) in systems {
+            for r in SkipReason::ALL {
+                counts
+                    .get(r.as_str())
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| format!("meta skips[{}] missing '{}'", sys, r.as_str()))?;
+            }
+        }
+    } else {
+        return Err("meta missing 'skips' object".into());
+    }
+
+    // (pid, tid) -> list of (ts, dur, name) X spans, plus instants.
+    use std::collections::BTreeMap;
+    let mut spans: BTreeMap<(u64, u64), Vec<(u64, u64, String)>> = BTreeMap::new();
+    let mut instants: BTreeMap<(u64, u64), Vec<(u64, String, Option<String>)>> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let fail = |msg: String| format!("event #{}: {}", i, msg);
+        let name = ev
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| fail("missing string 'name'".into()))?
+            .to_string();
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| fail("missing string 'ph'".into()))?;
+        let pid = ev_u64(ev, "pid").map_err(&fail)?;
+        let tid = ev_u64(ev, "tid").map_err(&fail)?;
+        match ph {
+            "M" => continue,
+            "X" => {
+                let ts = ev_u64(ev, "ts").map_err(&fail)?;
+                let dur = ev_u64(ev, "dur").map_err(&fail)?;
+                let request_track = tid <= u32::MAX as u64;
+                if request_track && SpanState::parse(&name).is_none() {
+                    return Err(fail(format!("unknown span state '{}' on request track", name)));
+                }
+                if !request_track && name != "iteration" && !CONTROL_SPANS.contains(&name.as_str())
+                {
+                    return Err(fail(format!("unknown control span '{}'", name)));
+                }
+                spans.entry((pid, tid)).or_default().push((ts, dur, name));
+            }
+            "i" => {
+                let ts = ev_u64(ev, "ts").map_err(&fail)?;
+                let reason = ev
+                    .at(&["args", "reason"])
+                    .ok()
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string());
+                if name == "skip" {
+                    let r = reason
+                        .as_deref()
+                        .ok_or_else(|| fail("skip instant missing args.reason".into()))?;
+                    if SkipReason::parse(r).is_none() {
+                        return Err(fail(format!("unknown skip reason '{}'", r)));
+                    }
+                } else if Outcome::parse(&name).is_none()
+                    && !CONTROL_INSTANTS.contains(&name.as_str())
+                {
+                    return Err(fail(format!("unknown instant '{}'", name)));
+                }
+                instants.entry((pid, tid)).or_default().push((ts, name, reason));
+            }
+            other => return Err(fail(format!("unknown phase '{}'", other))),
+        }
+    }
+
+    let strict = rep.dropped == 0;
+    for ((pid, tid), track) in &spans {
+        let request_track = *tid <= u32::MAX as u64;
+        if request_track {
+            rep.request_tracks += 1;
+        }
+        let mut end = 0u64;
+        for (j, (ts, dur, name)) in track.iter().enumerate() {
+            if strict && request_track && j > 0 && *ts != end {
+                return Err(format!(
+                    "track pid={} tid={}: span '{}' starts at {} but previous ends at {} \
+                     (gap/overlap in lifecycle partition)",
+                    pid, tid, name, ts, end
+                ));
+            }
+            if *ts < end && strict {
+                return Err(format!(
+                    "track pid={} tid={}: span '{}' at {} overlaps previous end {}",
+                    pid, tid, name, ts, end
+                ));
+            }
+            end = ts + dur;
+        }
+    }
+    for ((pid, tid), track) in &instants {
+        let request_track = *tid <= u32::MAX as u64;
+        if !request_track {
+            continue;
+        }
+        let mut terminal: Option<(u64, Outcome)> = None;
+        for (ts, name, _) in track {
+            if let Some(o) = Outcome::parse(name) {
+                if terminal.is_some() {
+                    return Err(format!(
+                        "track pid={} tid={}: multiple terminal outcomes",
+                        pid, tid
+                    ));
+                }
+                terminal = Some((*ts, o));
+                rep.span_outcomes[o as usize] += 1;
+            }
+        }
+        if strict {
+            if let (Some((ts, _)), Some(track_spans)) = (terminal, spans.get(&(*pid, *tid))) {
+                let end = track_spans.last().map(|(t, d, _)| t + d).unwrap_or(ts);
+                if ts != end {
+                    return Err(format!(
+                        "track pid={} tid={}: outcome at {} but spans end at {}",
+                        pid, tid, ts, end
+                    ));
+                }
+            }
+        }
+    }
+    if strict && rep.sample >= 1.0 && rep.span_outcomes != rep.meta_outcomes {
+        return Err(format!(
+            "outcome instants {:?} disagree with metadata outcome totals {:?} at sample=1",
+            rep.span_outcomes, rep.meta_outcomes
+        ));
+    }
+    Ok(rep)
+}
+
+const CONTROL_SPANS: [&str; 2] = ["boot", "drain"];
+const CONTROL_INSTANTS: [&str; 6] = ["route", "crash", "retry", "hedge", "kvc_release", "kvc_evict"];
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// Render the per-request time-attribution table plus the
+/// per-scheduler skip-reason breakdown — "where did each request's
+/// lifetime go, and what was the binding constraint?".
+pub fn report(text: &str) -> Result<String, String> {
+    let rep = lint(text)?;
+    let doc = Json::parse(text)?;
+    let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap_or(&[]);
+
+    use std::collections::BTreeMap;
+    // (pid, tid) -> [us per state; 5], outcome
+    let mut rows: BTreeMap<(u64, u64), ([u64; 5], Option<&str>)> = BTreeMap::new();
+    for ev in events {
+        let (Some(name), Some(ph)) =
+            (ev.get("name").and_then(|v| v.as_str()), ev.get("ph").and_then(|v| v.as_str()))
+        else {
+            continue;
+        };
+        let pid = ev_u64(ev, "pid").unwrap_or(0);
+        let tid = ev_u64(ev, "tid").unwrap_or(0);
+        if tid > u32::MAX as u64 {
+            continue;
+        }
+        let row = rows.entry((pid, tid)).or_default();
+        match ph {
+            "X" => {
+                if let Some(state) = SpanState::parse(name) {
+                    row.0[state as usize] += ev_u64(ev, "dur").unwrap_or(0);
+                }
+            }
+            "i" => {
+                if Outcome::parse(name).is_some() {
+                    row.1 = Some(name);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace-report: {} events, {} traced requests (sample={}, dropped={})\n\n",
+        rep.events, rows.len(), rep.sample, rep.dropped
+    ));
+    out.push_str(
+        "request          total_ms   queued  prefill   decode  stalled_kvc  preempted  outcome\n",
+    );
+    const MAX_ROWS: usize = 40;
+    let ms = |us: u64| us as f64 / 1e3;
+    let mut totals = [0u64; 5];
+    for (i, ((pid, tid), (per_state, outcome))) in rows.iter().enumerate() {
+        for (t, v) in totals.iter_mut().zip(per_state) {
+            *t += v;
+        }
+        if i >= MAX_ROWS {
+            continue;
+        }
+        let total: u64 = per_state.iter().sum();
+        out.push_str(&format!(
+            "{:<16} {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>12.1} {:>10.1}  {}\n",
+            format!("{}:{}", pid, tid),
+            ms(total),
+            ms(per_state[SpanState::Queued as usize]),
+            ms(per_state[SpanState::Prefill as usize]),
+            ms(per_state[SpanState::Decode as usize]),
+            ms(per_state[SpanState::StalledKvc as usize]),
+            ms(per_state[SpanState::Preempted as usize]),
+            outcome.unwrap_or("-"),
+        ));
+    }
+    if rows.len() > MAX_ROWS {
+        out.push_str(&format!("... ({} more requests)\n", rows.len() - MAX_ROWS));
+    }
+    let grand: u64 = totals.iter().sum();
+    out.push_str(&format!(
+        "{:<16} {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>12.1} {:>10.1}\n",
+        "TOTAL",
+        ms(grand),
+        ms(totals[SpanState::Queued as usize]),
+        ms(totals[SpanState::Prefill as usize]),
+        ms(totals[SpanState::Decode as usize]),
+        ms(totals[SpanState::StalledKvc as usize]),
+        ms(totals[SpanState::Preempted as usize]),
+    ));
+
+    out.push_str("\noutcomes (all requests): ");
+    for (i, o) in Outcome::ALL.iter().enumerate() {
+        if i > 0 {
+            out.push_str("  ");
+        }
+        out.push_str(&format!("{}={}", o.as_str(), rep.meta_outcomes[*o as usize]));
+    }
+    out.push('\n');
+
+    out.push_str("\nscheduler skip decisions (request-iterations, by reason):\n");
+    if let Ok(Json::Obj(systems)) = doc.at(&["econoserve", "skips"]) {
+        if systems.is_empty() {
+            out.push_str("  (none recorded)\n");
+        }
+        for (sys, counts) in systems {
+            out.push_str(&format!("  {:<28}", sys));
+            for r in SkipReason::ALL {
+                let n = counts.get(r.as_str()).and_then(|v| v.as_i64()).unwrap_or(0);
+                out.push_str(&format!(" {}={}", r.as_str(), n));
+            }
+            out.push('\n');
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Reconciliation helper
+// ---------------------------------------------------------------------------
+
+/// Read one counter sample from canonical Prometheus exposition text
+/// (as produced by `Registry::render`): `prom_counter(text,
+/// "econoserve_requests_total", "{outcome=\"done\"}")`. Pass `""` for
+/// unlabelled families.
+pub fn prom_counter(text: &str, family: &str, labels: &str) -> Option<u64> {
+    let needle = format!("{}{} ", family, labels);
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(&needle) {
+            return rest.trim().parse::<f64>().ok().map(|v| v as u64);
+        }
+    }
+    None
+}
+
+/// Check that a trace's aggregate outcome totals reconcile with the
+/// `econoserve_requests_total{outcome}` counters of a metrics snapshot.
+/// `lost` is trace-only (crash victims increment no sim counter), so
+/// only done/rejected/cancelled participate.
+pub fn reconcile(rep: &LintReport, metrics_text: &str) -> Result<(), String> {
+    for (o, idx) in
+        [(Outcome::Done, 0usize), (Outcome::Rejected, 1), (Outcome::Cancelled, 2)]
+    {
+        let labels = format!("{{outcome=\"{}\"}}", o.as_str());
+        let counter =
+            prom_counter(metrics_text, "econoserve_requests_total", &labels).unwrap_or(0);
+        if counter != rep.meta_outcomes[idx] {
+            return Err(format!(
+                "trace outcome '{}' = {} but requests_total{} = {}",
+                o.as_str(),
+                rep.meta_outcomes[idx],
+                labels,
+                counter
+            ));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_doc() -> TraceDoc {
+        let mut r = TraceRecorder::new(TraceConfig::new(7), 0, "orca+max");
+        r.on_submit(0, 0.0, 0.0, 64, 8);
+        r.skip(0, 0.5, SkipReason::BatchFull);
+        r.transition(0, 1.0, SpanState::Prefill);
+        r.transition(0, 1.5, SpanState::Queued);
+        r.skip(0, 1.5, SkipReason::KvcExhausted);
+        r.transition(0, 2.0, SpanState::Decode);
+        r.iteration(1.0, 1.5, 1, 0, 2, 1, 1);
+        r.terminal(0, 3.0, Outcome::Done);
+        r.on_submit(1, 0.25, 0.25, 32, 4);
+        r.terminal(1, 0.25, Outcome::Rejected);
+        let mut doc = r.finish();
+        doc.name_process(0, "replica0");
+        doc
+    }
+
+    #[test]
+    fn recorder_partitions_lifecycle_and_lints() {
+        let doc = mini_doc();
+        assert_eq!(doc.outcomes, [1, 1, 0, 0]);
+        assert_eq!(doc.skips["orca+max"][SkipReason::BatchFull as usize], 1);
+        assert_eq!(doc.skips["orca+max"][SkipReason::KvcExhausted as usize], 1);
+        let text = doc.to_chrome_string();
+        let rep = lint(&text).expect("lint");
+        assert_eq!(rep.span_outcomes, [1, 1, 0, 0]);
+        assert_eq!(rep.meta_outcomes, [1, 1, 0, 0]);
+        assert_eq!(rep.request_tracks, 1); // request 1 has zero-length life
+        // The kvc_exhausted skip relabelled the waiting segment.
+        assert!(text.contains("\"stalled_kvc\""), "{text}");
+    }
+
+    #[test]
+    fn lint_rejects_gap_and_overlap() {
+        let mut doc = TraceDoc::new(1.0);
+        doc.events.push(TraceEvent::span("queued", 0, 10, 0, 1));
+        doc.events.push(TraceEvent::span("decode", 12, 20, 0, 1));
+        let err = lint(&doc.to_chrome_string()).unwrap_err();
+        assert!(err.contains("gap/overlap"), "{err}");
+
+        let mut doc2 = TraceDoc::new(1.0);
+        doc2.events.push(TraceEvent::span("queued", 0, 10, 0, 1));
+        doc2.events.push(TraceEvent::span("queued", 5, 10, 0, 1));
+        assert!(lint(&doc2.to_chrome_string()).is_err());
+    }
+
+    #[test]
+    fn lint_rejects_unknown_vocabulary() {
+        let mut doc = TraceDoc::new(1.0);
+        doc.events.push(TraceEvent::span("mystery", 0, 10, 0, 1));
+        let err = lint(&doc.to_chrome_string()).unwrap_err();
+        assert!(err.contains("unknown span state"), "{err}");
+    }
+
+    #[test]
+    fn sampling_is_content_deterministic() {
+        let cfg = TraceConfig::new(42).with_sample(0.5);
+        let r1 = TraceRecorder::new(cfg, 0, "s");
+        let r2 = TraceRecorder::new(cfg, 3, "s");
+        let mut kept = 0;
+        for i in 0..1000u64 {
+            let (arr, pl, rl) = (i as f64 * 0.1, 64 + i, 8 + i % 32);
+            assert_eq!(r1.sampled_content(arr, pl, rl), r2.sampled_content(arr, pl, rl));
+            kept += r1.sampled_content(arr, pl, rl) as u64;
+        }
+        // Head sampling at 0.5 keeps roughly half.
+        assert!((300..700).contains(&kept), "kept={kept}");
+        // Unsampled requests still count in aggregates.
+        let mut r = TraceRecorder::new(TraceConfig::new(42).with_sample(0.0), 0, "s");
+        r.on_submit(0, 0.0, 0.0, 64, 8);
+        r.terminal(0, 1.0, Outcome::Done);
+        let doc = r.finish();
+        assert_eq!(doc.outcomes[0], 1);
+        assert!(doc.events.is_empty());
+    }
+
+    #[test]
+    fn event_cap_drops_and_counts() {
+        let mut cfg = TraceConfig::new(1);
+        cfg.max_events = 2;
+        let mut r = TraceRecorder::new(cfg, 0, "s");
+        r.on_submit(0, 0.0, 0.0, 1, 1);
+        r.transition(0, 1.0, SpanState::Prefill);
+        r.transition(0, 2.0, SpanState::Decode);
+        r.terminal(0, 3.0, Outcome::Done);
+        let doc = r.finish();
+        assert_eq!(doc.events.len(), 2);
+        assert_eq!(doc.dropped, 2);
+        // Capped docs still lint (contiguity checks relax).
+        lint(&doc.to_chrome_string()).expect("lint capped doc");
+    }
+
+    #[test]
+    fn merge_shifts_pids_and_sums_aggregates() {
+        let mut a = mini_doc();
+        let mut b = mini_doc();
+        b.shift_pids(10_000);
+        a.merge(b);
+        assert_eq!(a.outcomes, [2, 2, 0, 0]);
+        assert_eq!(a.skips["orca+max"][SkipReason::BatchFull as usize], 2);
+        let rep = lint(&a.to_chrome_string()).expect("merged lint");
+        assert_eq!(rep.request_tracks, 2);
+    }
+
+    #[test]
+    fn jsonl_mirrors_chrome_events() {
+        let doc = mini_doc();
+        let jsonl = doc.to_jsonl();
+        let mut lines = jsonl.lines();
+        let head = Json::parse(lines.next().unwrap()).expect("meta line");
+        assert!(head.get("meta").is_some());
+        let n = lines.clone().count();
+        assert_eq!(n, doc.events.len());
+        for line in lines {
+            Json::parse(line).expect("event line");
+        }
+    }
+
+    #[test]
+    fn report_attributes_time() {
+        let text = mini_doc().to_chrome_string();
+        let rendered = report(&text).expect("report");
+        assert!(rendered.contains("stalled_kvc"), "{rendered}");
+        assert!(rendered.contains("orca+max"), "{rendered}");
+        assert!(rendered.contains("done=1"), "{rendered}");
+    }
+
+    #[test]
+    fn prom_counter_reads_canonical_text() {
+        let text = "# TYPE econoserve_requests_total counter\n\
+                    econoserve_requests_total{outcome=\"done\"} 42\n\
+                    econoserve_preemptions_total 7\n";
+        assert_eq!(
+            prom_counter(text, "econoserve_requests_total", "{outcome=\"done\"}"),
+            Some(42)
+        );
+        assert_eq!(prom_counter(text, "econoserve_preemptions_total", ""), Some(7));
+        assert_eq!(prom_counter(text, "econoserve_nope_total", ""), None);
+    }
+
+    #[test]
+    fn reconcile_matches_and_mismatches() {
+        let rep = LintReport { meta_outcomes: [42, 3, 1, 5], ..LintReport::default() };
+        let ok = "econoserve_requests_total{outcome=\"cancelled\"} 1\n\
+                  econoserve_requests_total{outcome=\"done\"} 42\n\
+                  econoserve_requests_total{outcome=\"rejected\"} 3\n";
+        reconcile(&rep, ok).expect("reconciles");
+        let bad = ok.replace(" 42", " 41");
+        assert!(reconcile(&rep, &bad).unwrap_err().contains("done"));
+    }
+}

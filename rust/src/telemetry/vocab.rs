@@ -330,6 +330,10 @@ pub struct ServerMetrics {
     pub rate_limited: Counter,
     /// `econoserve_http_connections_active` — open client connections.
     pub connections_active: Gauge,
+    /// `econoserve_reqlog_dropped_total` — request-log events evicted by
+    /// the bounded ring (synced from `RequestLog::dropped()` before each
+    /// scrape, so the counter stays monotonic and matches the log).
+    pub reqlog_dropped: Counter,
 }
 
 impl ServerMetrics {
@@ -348,7 +352,17 @@ impl ServerMetrics {
             "Open client connections",
             &[],
         );
-        ServerMetrics { core: SimMetrics::on(registry), rate_limited, connections_active }
+        let reqlog_dropped = registry.counter(
+            "econoserve_reqlog_dropped_total",
+            "Request-log events evicted by the bounded ring",
+            &[],
+        );
+        ServerMetrics {
+            core: SimMetrics::on(registry),
+            rate_limited,
+            connections_active,
+            reqlog_dropped,
+        }
     }
 
     pub fn registry(&self) -> &Arc<Registry> {

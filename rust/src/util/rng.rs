@@ -134,6 +134,12 @@ pub mod stream {
     /// the fault timeline, and vice versa.
     pub const GUARDRAILS: u64 = 0x6A4D5;
 
+    /// The span recorder's head-sampling stream
+    /// (`telemetry::trace::sample_key`). Dedicated so enabling tracing
+    /// never perturbs any simulation draw, and sampling decisions are
+    /// identical at every thread count.
+    pub const TRACE: u64 = 0x7AACE;
+
     /// Grid cells pack their coordinates into one stream ID. Bit 63
     /// flags the grid namespace so packed coordinates can never collide
     /// with the fixed IDs or the per-replica band above.
@@ -165,7 +171,8 @@ mod tests {
         // corner-heavy sample of the grid-cell namespace must be
         // pairwise distinct: a collision would make two "independent"
         // components draw identical randomness from the same base seed.
-        let mut ids: Vec<u64> = vec![stream::ROUTER, stream::FAULTS, stream::GUARDRAILS];
+        let mut ids: Vec<u64> =
+            vec![stream::ROUTER, stream::FAULTS, stream::GUARDRAILS, stream::TRACE];
         ids.extend((0..4096).map(stream::replica));
         for &mi in &[0usize, 1, 7, 255] {
             for &ti in &[0usize, 1, 15, 1023] {

@@ -606,6 +606,44 @@ fn guardrail_fleet_summary_bit_identical_parallel_vs_sequential() {
     assert_eq!(s.n_total, s.n_done + s.faults.lost + s.faults.aborted);
 }
 
+/// The merged fleet span trace is a pure function of (config, seed):
+/// the exported Chrome-format bytes must be identical at 1 and 4
+/// worker threads (per-replica recorders are single-threaded and the
+/// merge runs in replica-id order at finalize).
+#[test]
+fn fleet_trace_bytes_bit_identical_across_thread_counts() {
+    use econoserve::fleet::{self, FleetConfig};
+    use econoserve::telemetry::TraceConfig;
+    use econoserve::trace::{TraceGen, TraceSpec};
+    use econoserve::util::rng::{derive_seed, stream};
+    let mut cfg = mini_cfg(4096);
+    cfg.seed = 37;
+    let gen = TraceGen::new(TraceSpec::sharegpt());
+    let items = gen.generate(400, 2.0, 1024, 37);
+    let run_with = |threads: usize| {
+        let mut fc = FleetConfig::new(cfg.clone(), "econoserve", "sharegpt");
+        fc.oracle = true;
+        fc.router = "least-kvc".to_string();
+        fc.autoscaler = "reactive".to_string();
+        fc.init_replicas = 2;
+        fc.min_replicas = 2;
+        fc.max_replicas = 4;
+        fc.boot_latency = 5.0;
+        fc.max_sim_time = 2_000.0;
+        fc.faults = "full-chaos".to_string();
+        fc.guardrails = "retry+hedge".to_string();
+        fc.tracing = Some(TraceConfig::new(derive_seed(cfg.seed, stream::TRACE)));
+        fc.threads = threads;
+        fleet::run(&fc, &items)
+    };
+    let serial = run_with(1);
+    let parallel = run_with(4);
+    let a = serial.trace_doc.expect("tracing enabled").to_chrome_string();
+    let b = parallel.trace_doc.expect("tracing enabled").to_chrome_string();
+    assert!(!a.is_empty(), "serial trace is empty");
+    assert_eq!(a, b, "fleet trace bytes diverged between serial and parallel stepping");
+}
+
 /// `exp::run_grid` with the faults axis emits bit-identical JSON rows
 /// at 1 and 4 threads, and each fleet row carries its fault profile.
 #[test]

@@ -1,0 +1,185 @@
+//! Span-trace conservation properties: for every supported sched×alloc
+//! registry combo, the lifecycle trace must partition each request's
+//! lifetime exactly (lint's contiguity check), and the trace's aggregate
+//! outcome totals must reconcile with `requests_total{outcome}` — under
+//! plain runs, under sampling, and under full-chaos fleet runs with
+//! retry+hedge guardrails.
+
+use econoserve::config::{ModelProfile, SystemConfig};
+use econoserve::coordinator::{harness, RunLimits};
+use econoserve::telemetry::trace::{lint, reconcile, report};
+use econoserve::telemetry::TraceConfig;
+use econoserve::trace::TraceItem;
+use econoserve::util::prop::sized;
+use econoserve::util::rng::{derive_seed, stream, Rng};
+
+/// Same mini profile as tests/equivalence.rs: opt-13b scaled down so
+/// runs finish in milliseconds while still exercising KVC pressure.
+fn mini_cfg(kvc_tokens: u64) -> SystemConfig {
+    let mut profile = ModelProfile::opt_13b();
+    profile.kvc_bytes = 819_200 * kvc_tokens;
+    profile.max_total_len = 1024;
+    let mut cfg = SystemConfig::new(profile);
+    cfg.t_p = 0.05;
+    cfg.t_g = 0.022;
+    cfg.sched_time_scale = 0.0;
+    cfg
+}
+
+fn random_items(rng: &mut Rng, n: usize, max_len: u32) -> Vec<TraceItem> {
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(5.0);
+            let prompt_len = 1 + sized(rng, (max_len / 3) as usize) as u32;
+            let true_rl = 1 + sized(rng, (max_len - prompt_len).min(300) as usize) as u32;
+            TraceItem { arrival: t, prompt_len, true_rl }
+        })
+        .collect()
+}
+
+/// The supported sched×alloc grid (mirrors tests/equivalence.rs and
+/// benches/sched_hotpath.rs).
+fn supported_combos() -> Vec<String> {
+    let mut combos = Vec::new();
+    for (sched, allocs) in [
+        ("orca", &["max", "pipelined-max"][..]),
+        ("fastserve", &["max", "pipelined-max"][..]),
+        ("vllm", &["block", "exact", "pipelined-block", "pipelined-exact"][..]),
+        ("sarathi", &["block", "exact", "pipelined-block", "pipelined-exact"][..]),
+        ("multires", &["exact", "pipelined-exact", "max"][..]),
+        ("sync_coupled", &["exact", "pipelined-exact", "max"][..]),
+        ("srtf", &["max", "pipelined-max"][..]),
+        ("econoserve-d", &["exact"][..]),
+        ("econoserve-sd", &["exact"][..]),
+        ("econoserve-sdo", &["exact"][..]),
+        ("econoserve", &["exact", "pipelined-exact", "max"][..]),
+    ] {
+        for a in allocs {
+            combos.push(format!("{sched}+{a}"));
+        }
+    }
+    combos
+}
+
+/// Every registry combo's trace must lint clean (exact lifetime
+/// partition, one terminal per request) and reconcile with the run's
+/// own `requests_total{outcome}` counters. The classification lives in
+/// `IterCtx::finish_into`, so this is the pin that no scheduler escapes
+/// the central emission path.
+#[test]
+fn every_combo_trace_partitions_lifecycles() {
+    let mut rng = Rng::new(0x7AACE);
+    let items = random_items(&mut rng, 25, 600);
+    for combo in supported_combos() {
+        let cfg = mini_cfg(4096);
+        let tc = TraceConfig::new(derive_seed(cfg.seed, stream::TRACE));
+        let res = harness::simulate_traced(
+            &cfg,
+            &combo,
+            "sharegpt",
+            &items,
+            true,
+            RunLimits::for_time(5_000.0),
+            Some(tc),
+        );
+        let doc = res.trace.as_ref().expect("tracing was enabled");
+        let text = doc.to_chrome_string();
+        let rep = lint(&text).unwrap_or_else(|e| panic!("{combo}: lint failed: {e}"));
+        assert!(rep.request_tracks > 0, "{combo}: no request tracks recorded");
+        let total: u64 = rep.meta_outcomes.iter().sum();
+        assert_eq!(total as usize, items.len(), "{combo}: outcome totals must cover every request");
+        reconcile(&rep, &res.metrics).unwrap_or_else(|e| panic!("{combo}: reconcile failed: {e}"));
+    }
+}
+
+/// Head sampling is an event-volume knob, never an accounting knob: the
+/// aggregate outcome and skip totals are counted for ALL requests, so
+/// they must be identical at sample 1.0 and sample 0.25, while the
+/// per-request event volume shrinks.
+#[test]
+fn sampling_preserves_aggregates_and_shrinks_event_volume() {
+    let mut rng = Rng::new(0x5a11);
+    let items = random_items(&mut rng, 60, 600);
+    let cfg = mini_cfg(4096);
+    let run = |sample: f64| {
+        let tc = TraceConfig::new(derive_seed(cfg.seed, stream::TRACE)).with_sample(sample);
+        harness::simulate_traced(
+            &cfg,
+            "econoserve",
+            "sharegpt",
+            &items,
+            true,
+            RunLimits::for_time(5_000.0),
+            Some(tc),
+        )
+    };
+    let full = run(1.0);
+    let part = run(0.25);
+    let fdoc = full.trace.as_ref().unwrap();
+    let pdoc = part.trace.as_ref().unwrap();
+    let frep = lint(&fdoc.to_chrome_string()).expect("full trace lints");
+    let prep = lint(&pdoc.to_chrome_string()).expect("sampled trace lints");
+    assert_eq!(
+        frep.meta_outcomes, prep.meta_outcomes,
+        "aggregate outcome totals must be sampling-independent"
+    );
+    assert_eq!(fdoc.skips, pdoc.skips, "skip-reason totals must be sampling-independent");
+    assert!(
+        prep.request_tracks < frep.request_tracks,
+        "0.25 sampling must trace fewer requests ({} vs {})",
+        prep.request_tracks,
+        frep.request_tracks
+    );
+    assert!(prep.request_tracks > 0, "head sampling at 0.25 should keep some requests");
+}
+
+/// Full-chaos × retry+hedge fleet: the merged fleet trace must still
+/// lint clean (crash-severed lifecycles close as `lost`, retries reopen
+/// fresh tracks), reconcile with the fleet's requests_total counters
+/// (done includes voided hedge duplicates on both sides), carry
+/// scheduler decision records, and render an attribution report. The
+/// per-replica request log rides along tagged by replica id.
+#[test]
+fn chaos_guardrail_fleet_trace_lints_and_reconciles() {
+    use econoserve::fleet::{self, FleetConfig};
+    use econoserve::trace::{TraceGen, TraceSpec};
+    let mut cfg = mini_cfg(4096);
+    cfg.seed = 37;
+    let gen = TraceGen::new(TraceSpec::sharegpt());
+    let items = gen.generate(400, 2.0, 1024, 37);
+    let mut fc = FleetConfig::new(cfg.clone(), "econoserve", "sharegpt");
+    fc.oracle = true;
+    fc.router = "least-kvc".to_string();
+    fc.autoscaler = "reactive".to_string();
+    fc.init_replicas = 2;
+    fc.min_replicas = 2;
+    fc.max_replicas = 4;
+    fc.boot_latency = 5.0;
+    fc.max_sim_time = 2_000.0;
+    fc.faults = "full-chaos".to_string();
+    fc.guardrails = "retry+hedge".to_string();
+    fc.tracing = Some(TraceConfig::new(derive_seed(cfg.seed, stream::TRACE)));
+    fc.reqlog_capacity = 256;
+    let res = fleet::run(&fc, &items);
+
+    let doc = res.trace_doc.as_ref().expect("fleet tracing was enabled");
+    let text = doc.to_chrome_string();
+    let rep = lint(&text).unwrap_or_else(|e| panic!("chaos fleet trace lint failed: {e}"));
+    assert!(rep.request_tracks > 0, "no request tracks in the fleet trace");
+    reconcile(&rep, &res.metrics)
+        .unwrap_or_else(|e| panic!("fleet trace/metrics reconcile failed: {e}"));
+
+    let skip_total: u64 = doc.skips.values().flat_map(|c| c.iter()).sum();
+    assert!(skip_total > 0, "chaos fleet recorded no scheduler decision records");
+
+    let table = report(&text).expect("trace-report renders");
+    assert!(table.contains("TOTAL"), "attribution table missing TOTAL row");
+
+    let log = res.reqlog.as_ref().expect("reqlog was enabled");
+    assert!(!log.is_empty(), "request log is empty");
+    assert!(
+        log.lines().all(|l| l.starts_with("{\"replica\":")),
+        "every reqlog line must be tagged with its replica id"
+    );
+}

@@ -44,6 +44,21 @@ cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- fleet \
     --workload poisson --rate 3 --duration 120 --replicas 2 --min 2 \
     --max 3 --oracle --metrics-out "$GUARD_OUT"
 cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- promlint "$GUARD_OUT"
+# Trace smoke: a chaos + guardrails fleet run with span tracing on must
+# produce a Chrome-format trace that lints clean (exact per-request
+# lifetime partition, unique terminals) AND reconciles with the same
+# run's requests_total{outcome} counters, and the attribution report
+# must render. (tracelint parses the Chrome form, not .jsonl.)
+TRACE_OUT="${TMPDIR:-/tmp}/econoserve_trace_smoke.json"
+TRACE_METRICS="${TMPDIR:-/tmp}/econoserve_trace_smoke.prom"
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- fleet \
+    --chaos crashes --guardrails retry+hedge --trace alpaca \
+    --workload poisson --rate 3 --duration 120 --replicas 2 --min 2 \
+    --max 3 --oracle --trace-out "$TRACE_OUT" --metrics-out "$TRACE_METRICS"
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- tracelint \
+    --file "$TRACE_OUT" --metrics "$TRACE_METRICS"
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- trace-report \
+    --file "$TRACE_OUT"
 # Telemetry smoke: a fleet run's merged registry snapshot must be
 # canonical Prometheus exposition text (promlint = strict re-parse +
 # byte-identical re-render).
