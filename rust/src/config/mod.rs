@@ -191,6 +191,18 @@ pub struct SystemConfig {
     /// pipelining. Beyond it, new PT prefills pause (backlog stays in the
     /// KVC-free PT queue).
     pub gt_stage_frac: f64,
+    /// Multiplicative bias applied by `SimPredictor` (1.0 = calibrated;
+    /// `< 1` systematically under-predicts). CLI: `--predictor-bias`.
+    pub predictor_bias: f64,
+    /// Predictor fault-injection profile (`predictor::faults::by_name`
+    /// registry; `"none"` = no wrapper, bit-identical to pre-chaos
+    /// builds). CLI: `--predictor-faults`.
+    pub predictor_faults: String,
+    /// KVC headroom mode (`reliability::headroom::HeadroomConfig::parse`
+    /// grammar): `"static"` keeps `padding_ratio` fixed; `"adaptive"`
+    /// steers it online toward a target under-provision rate and bounds
+    /// overrun evictions per iteration. CLI: `--headroom`.
+    pub headroom: String,
     /// Seed for all stochastic components.
     pub seed: u64,
 }
@@ -210,6 +222,9 @@ impl SystemConfig {
             t_p: 0.05,
             t_g: 0.02,
             gt_stage_frac: 0.05,
+            predictor_bias: 1.0,
+            predictor_faults: "none".to_string(),
+            headroom: "static".to_string(),
             seed: 42,
         }
     }
@@ -224,7 +239,14 @@ impl SystemConfig {
 
     /// Apply padding to a raw RL prediction (at least one token).
     pub fn pad_prediction(&self, raw: u32) -> u32 {
-        ((raw as f64 * (1.0 + self.padding_ratio)).ceil() as u32).max(1)
+        Self::pad_with(raw, self.padding_ratio)
+    }
+
+    /// Padding with an explicit ratio — the adaptive headroom controller
+    /// (`reliability::headroom`) substitutes its steered ratio for the
+    /// static `padding_ratio` through this.
+    pub fn pad_with(raw: u32, ratio: f64) -> u32 {
+        ((raw as f64 * (1.0 + ratio)).ceil() as u32).max(1)
     }
 
     /// The JCT SLO for a request with true RL `rl` (absolute deadline is

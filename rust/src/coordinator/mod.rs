@@ -168,8 +168,10 @@ pub fn run_admitted(
     }
 
     let end_time = world.clock;
+    let mut summary = summarize(&world.recs, &world.col, end_time);
+    (summary.n_pred, summary.n_close) = world.predictor_accuracy();
     RunResult {
-        summary: summarize(&world.recs, &world.col, end_time),
+        summary,
         end_time,
         wall_time: wall_start.elapsed().as_secs_f64(),
         rejected,
@@ -347,7 +349,9 @@ impl Stepper {
     /// fleet-wide span as the time base (so per-replica throughputs are
     /// comparable and sum correctly).
     pub fn summary_at(&self, end_time: f64) -> Summary {
-        summarize(&self.world.recs, &self.world.col, end_time)
+        let mut s = summarize(&self.world.recs, &self.world.col, end_time);
+        (s.n_pred, s.n_close) = self.world.predictor_accuracy();
+        s
     }
 
     /// Canonical Prometheus text of this replica's telemetry registry.
@@ -364,12 +368,38 @@ pub mod harness {
     use crate::predictor::{OraclePredictor, Predictor, SimPredictor};
     use crate::trace::TraceItem;
 
-    /// Predictor selection for experiment drivers.
+    /// Predictor selection for experiment drivers: the base predictor
+    /// (oracle, or the per-trace calibrated [`SimPredictor`] with
+    /// `cfg.predictor_bias` applied), composed with the
+    /// [`crate::predictor::faults::FaultyPredictor`] wrapper when
+    /// `cfg.predictor_faults` names an active profile. The fault
+    /// timeline draws its seed from the dedicated
+    /// [`stream::PREDICTOR`](crate::util::rng::stream) namespace, so
+    /// enabling predictor chaos never perturbs the workload, router,
+    /// replica-fault, or guardrail streams.
     pub fn predictor_for(cfg: &SystemConfig, trace: &str, oracle: bool) -> Box<dyn Predictor> {
-        if oracle {
+        let inner: Box<dyn Predictor> = if oracle {
             Box::new(OraclePredictor::new(cfg.block_size))
         } else {
-            Box::new(SimPredictor::for_trace(trace, cfg.block_size, cfg.seed))
+            Box::new(
+                SimPredictor::for_trace(trace, cfg.block_size, cfg.seed)
+                    .with_bias(cfg.predictor_bias),
+            )
+        };
+        let profile = crate::predictor::faults::by_name(&cfg.predictor_faults)
+            .unwrap_or_else(|| {
+                panic!("unknown predictor fault profile '{}'", cfg.predictor_faults)
+            });
+        if profile.is_active() {
+            let seed = crate::util::rng::derive_seed(cfg.seed, crate::util::rng::stream::PREDICTOR);
+            Box::new(crate::predictor::faults::FaultyPredictor::new(
+                inner,
+                profile,
+                seed,
+                cfg.block_size,
+            ))
+        } else {
+            inner
         }
     }
 

@@ -84,6 +84,14 @@ pub struct ReqRec {
     /// `generated` value at the time of the last (re)prediction; the
     /// *remaining* predicted tokens are `predicted_rl - (generated - base)`.
     pub predicted_base: u32,
+    /// Most recent *raw* (pre-padding) prediction — what the predictor
+    /// said before headroom was applied. Feeds the misprediction tracker
+    /// (`reliability::headroom`) with the unpadded signed error.
+    pub predicted_raw: u32,
+    /// The first padded prediction made at admission. Under/over
+    /// provisioning verdicts compare this (not re-predictions) against
+    /// the truth, matching the paper's Fig 5a accounting.
+    pub predicted_initial: u32,
     /// KVC tokens this request currently HOLDS (its own allocation;
     /// excludes space borrowed from a host via KVC pipelining).
     pub kvc_held: u32,
@@ -121,6 +129,8 @@ impl ReqRec {
             generated: 0,
             predicted_rl: 0,
             predicted_base: 0,
+            predicted_raw: 0,
+            predicted_initial: 0,
             kvc_held: 0,
             first_token_at: None,
             exec_start_at: None,

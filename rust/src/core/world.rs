@@ -15,6 +15,7 @@
 //!    the only code that executes a plan against the pool; schedulers
 //!    never touch block accounting directly.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 
 use super::{BatchPlan, BatchTask, Phase, PreemptKind, ReqId, ReqRec, Request, Time};
@@ -22,6 +23,7 @@ use crate::config::SystemConfig;
 use crate::kvc::Allocator;
 use crate::metrics::Collector;
 use crate::predictor::Predictor;
+use crate::reliability::headroom::{Headroom, HeadroomConfig};
 use crate::telemetry::reqlog::RequestLog;
 use crate::telemetry::span::{Outcome, SkipReason, SpanState};
 use crate::telemetry::trace::{TraceConfig, TraceDoc, TraceRecorder};
@@ -66,6 +68,7 @@ impl Events {
 fn build_rec(
     cfg: &SystemConfig,
     predictor: &mut dyn Predictor,
+    pad_ratio: f64,
     id: ReqId,
     it: &TraceItem,
 ) -> (ReqRec, Time) {
@@ -79,8 +82,11 @@ fn build_rec(
         deadline,
     };
     let mut rec = ReqRec::new(req);
+    predictor.observe_request(it.arrival, rec.req.prompt_len);
     let raw = predictor.predict_raw(id, true_rl);
-    rec.predicted_rl = cfg.pad_prediction(raw);
+    rec.predicted_raw = raw;
+    rec.predicted_rl = SystemConfig::pad_with(raw, pad_ratio);
+    rec.predicted_initial = rec.predicted_rl;
     (rec, it.arrival + predictor.latency())
 }
 
@@ -135,6 +141,17 @@ pub struct World {
     /// event ring the HTTP server keeps, fed from the sim lifecycle
     /// hooks.
     reqlog: Option<RequestLog>,
+    /// Adaptive headroom controller (`cfg.headroom == "adaptive"`): the
+    /// online misprediction tracker steering the padding ratio and the
+    /// per-iteration eviction budget. `None` (the `"static"` default)
+    /// keeps the sweet-spot constant and an unbounded budget — runs are
+    /// then bit-identical to pre-headroom builds.
+    headroom: Option<Headroom>,
+    /// Predictor-accuracy counts already exported to `tel` —
+    /// `(close, off)` — so the monotone `predictions_total` top-up can
+    /// run from `&self` (metrics render) and `&mut self` (apply_plan)
+    /// without double counting.
+    acc_exported: Cell<(u64, u64)>,
 }
 
 impl World {
@@ -143,10 +160,15 @@ impl World {
     /// allocator is `exact`; install the scheduler's pairing with
     /// [`World::set_allocator`] (the harness does this from the registry).
     pub fn new(cfg: SystemConfig, items: &[TraceItem], mut predictor: Box<dyn Predictor>) -> Self {
+        let hcfg = HeadroomConfig::parse(&cfg.headroom)
+            .unwrap_or_else(|| panic!("unknown headroom mode '{}'", cfg.headroom));
+        let headroom =
+            hcfg.is_active().then(|| Headroom::new(hcfg, cfg.padding_ratio));
+        let pad0 = headroom.as_ref().map_or(cfg.padding_ratio, |h| h.pad());
         let mut recs = Vec::with_capacity(items.len());
         let mut pred_ready = Vec::with_capacity(items.len());
         for (id, it) in items.iter().enumerate() {
-            let (rec, ready) = build_rec(&cfg, predictor.as_mut(), id, it);
+            let (rec, ready) = build_rec(&cfg, predictor.as_mut(), pad0, id, it);
             recs.push(rec);
             pred_ready.push(ready);
         }
@@ -181,6 +203,8 @@ impl World {
             tel: SimMetrics::new(),
             tracer: None,
             reqlog: None,
+            headroom,
+            acc_exported: Cell::new((0, 0)),
         }
     }
 
@@ -189,9 +213,43 @@ impl World {
         &self.tel
     }
 
-    /// Canonical Prometheus text for this world's registry.
+    /// Canonical Prometheus text for this world's registry. Syncs the
+    /// predictor-accuracy counters first so `predictions_total` is
+    /// current at any scrape point, not just after an iteration.
     pub fn metrics_text(&self) -> String {
+        self.sync_prediction_counters();
         self.tel.render()
+    }
+
+    /// The padding ratio in force right now: the adaptive controller's
+    /// steered value, or the configured static sweet spot.
+    pub fn current_pad(&self) -> f64 {
+        self.headroom.as_ref().map_or(self.cfg.padding_ratio, |h| h.pad())
+    }
+
+    /// The adaptive headroom controller, if enabled.
+    pub fn headroom(&self) -> Option<&Headroom> {
+        self.headroom.as_ref()
+    }
+
+    /// The predictor's lifetime accuracy accounting `(n_pred, n_close)`
+    /// — includes re-predictions and (when a fault wrapper is installed)
+    /// outage fallbacks.
+    pub fn predictor_accuracy(&self) -> (u64, u64) {
+        self.predictor.accuracy()
+    }
+
+    /// Top up `econoserve_predictions_total{verdict}` from the
+    /// predictor's own monotone accounting. Counters have interior
+    /// mutability, so this works from `&self`; the cursor cell prevents
+    /// double export.
+    fn sync_prediction_counters(&self) {
+        let (n_pred, n_close) = self.predictor.accuracy();
+        let n_off = n_pred - n_close;
+        let (close_seen, off_seen) = self.acc_exported.get();
+        self.tel.pred_close.add(n_close - close_seen);
+        self.tel.pred_off.add(n_off - off_seen);
+        self.acc_exported.set((n_close, n_off));
     }
 
     /// Turn on request-lifecycle span tracing for this world. `pid` tags
@@ -372,13 +430,32 @@ impl World {
     /// Re-predict the REMAINING response length of an under-provisioned
     /// request (padded + quantized like the initial prediction). Updates
     /// the record and returns the new remaining prediction.
+    ///
+    /// A re-prediction only happens because the previous prediction was
+    /// outrun, so this is also a misprediction-tracker feed point: the
+    /// previous raw prediction's realized (so far) signed log error goes
+    /// into the headroom ring with an under-provision mark. Together with
+    /// the completion-time feed this double-weights sustained
+    /// misprediction — deliberate, so the tiered fallback escalates
+    /// faster than the completion rate alone would allow.
     pub fn re_predict(&mut self, id: ReqId) -> u32 {
         let rec = &self.recs[id];
         let true_remaining = rec.true_remaining().max(1);
+        if let Some(h) = self.headroom.as_mut() {
+            // Tokens the previous raw prediction actually had to cover:
+            // what was generated since its base plus what is still left.
+            let actual = (rec.req.true_rl.saturating_sub(rec.predicted_base)).max(1);
+            let err = (actual as f64 / rec.predicted_raw.max(1) as f64).ln();
+            h.observe(err, true);
+        }
+        let pad = self.current_pad();
+        let rec = &self.recs[id];
+        self.predictor.observe_request(self.clock, rec.req.prompt_len);
         let raw = self.predictor.predict_raw(id, true_remaining);
-        let padded = self.cfg.pad_prediction(raw);
+        let padded = SystemConfig::pad_with(raw, pad);
         let rec = &mut self.recs[id];
         rec.predicted_base = rec.generated;
+        rec.predicted_raw = raw;
         rec.predicted_rl = padded;
         padded
     }
@@ -391,7 +468,8 @@ impl World {
     /// request into the inbox (already due) or the future-arrivals feed.
     pub fn push_item(&mut self, it: &TraceItem) -> ReqId {
         let id = self.recs.len();
-        let (rec, ready) = build_rec(&self.cfg, self.predictor.as_mut(), id, it);
+        let pad = self.current_pad();
+        let (rec, ready) = build_rec(&self.cfg, self.predictor.as_mut(), pad, id, it);
         self.recs.push(rec);
         self.pred_ready.push(ready);
         self.active_pos.push(usize::MAX);
@@ -837,6 +915,19 @@ impl World {
         // Host write-head vs guest overrun sweep. Runs after all tasks so
         // an eviction decision cannot be clobbered by the guest's own
         // decode task later in the same batch.
+        //
+        // Eviction-storm containment: with adaptive headroom enabled the
+        // sweep evicts at most `eviction_budget()` guests per iteration.
+        // `overrun_guests` is a pure query, so a deferred guest simply
+        // reappears in the next iteration's sweep (one decode step later;
+        // the host writes into already-reserved span space meanwhile), and
+        // by then the re-predictions triggered by this iteration's
+        // evictions have usually relieved the pressure — backpressure
+        // instead of a requeue avalanche.
+        let evict_budget =
+            self.headroom.as_ref().map_or(u32::MAX, |h| h.eviction_budget());
+        let mut evicted_now = 0u32;
+        let mut deferred = false;
         for task in &plan.tasks {
             if let BatchTask::Decode { id } = *task {
                 if self.recs[id].is_done() {
@@ -845,9 +936,20 @@ impl World {
                 let head = self.recs[id].generated - self.recs[id].gt_span_base;
                 let over = self.kvc.overrun_guests(id, head);
                 for g in over {
+                    if evicted_now >= evict_budget {
+                        deferred = true;
+                        self.trace_lease(g, t0, "kvc_evict_deferred");
+                        continue;
+                    }
+                    evicted_now += 1;
                     self.evict_guest(g);
                 }
             }
+        }
+        self.col.max_iter_evictions = self.col.max_iter_evictions.max(evicted_now as u64);
+        if deferred {
+            self.col.eviction_storms += 1;
+            self.tel.eviction_storms.inc();
         }
 
         // Close batch membership: survivors leave the batch at `end` and
@@ -936,6 +1038,8 @@ impl World {
         self.tel.alloc_granted.add(tally.granted as u64);
         self.tel.alloc_hosted.add(tally.hosted as u64);
         self.tel.alloc_exhausted.add(tally.exhausted as u64);
+        self.tel.padding_ratio.set(self.current_pad());
+        self.sync_prediction_counters();
         // Scheduler-track iteration record: batch composition plus this
         // iteration's KVC lease tally (`AllocOutcome` grants/hosted
         // placements/exhaustions).
@@ -985,6 +1089,24 @@ impl World {
         self.done_count += 1;
         self.index_deactivate(id);
         self.events.completed.push(id);
+        // Misprediction accounting at the ground-truth moment. The
+        // provisioning verdict compares the INITIAL padded prediction to
+        // the truth (Fig 5a); the tracker ingests the signed log error of
+        // the most recent raw prediction against what it actually had to
+        // cover (tokens generated past its base).
+        let rec = &self.recs[id];
+        let under = rec.predicted_initial < rec.req.true_rl;
+        let actual = (rec.req.true_rl.saturating_sub(rec.predicted_base)).max(1);
+        let ratio = actual as f64 / rec.predicted_raw.max(1) as f64;
+        if under {
+            self.tel.pred_under.inc();
+        } else {
+            self.tel.pred_over.inc();
+        }
+        self.tel.prediction_error.observe(ratio);
+        if let Some(h) = self.headroom.as_mut() {
+            h.observe(ratio.ln(), under);
+        }
         let rec = &self.recs[id];
         self.tel.requests_done.inc();
         if rec.met_slo() {

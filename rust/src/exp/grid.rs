@@ -53,6 +53,14 @@ pub struct GridSpec {
     /// `"retry+hedge"`, `"full"`). Empty ⇒ `["off"]`; requires the
     /// fleet axes.
     pub guardrails: Vec<String>,
+    /// Predictor fault-profile axis (`predictor::faults::by_name`
+    /// names). A `SystemConfig` knob, so it works for single AND fleet
+    /// cells. Empty ⇒ `["none"]`.
+    pub predictor_faults: Vec<String>,
+    /// KVC padding-mode axis (`reliability::headroom` grammar:
+    /// `"static"` | `"adaptive"`). A `SystemConfig` knob, so it works
+    /// for single AND fleet cells. Empty ⇒ `["static"]`.
+    pub headroom: Vec<String>,
     /// Fleet size bound for fleet cells (`static-k` fixes the fleet at
     /// this size; scaling policies move within `[1, replicas]`).
     pub replicas: usize,
@@ -83,6 +91,8 @@ impl Default for GridSpec {
             autoscalers: Vec::new(),
             faults: Vec::new(),
             guardrails: Vec::new(),
+            predictor_faults: Vec::new(),
+            headroom: Vec::new(),
             replicas: 2,
             duration: common::DURATION,
             max_time: common::MAX_TIME,
@@ -108,6 +118,10 @@ pub struct Cell {
     pub faults: Option<String>,
     /// Guardrail mode (`Some` only for fleet cells; `"off"` by default).
     pub guardrails: Option<String>,
+    /// Predictor fault profile (every cell kind; `"none"` = faultless).
+    pub predictor_faults: String,
+    /// KVC padding mode (every cell kind; `"static"` = sweet spot).
+    pub headroom: String,
     /// Per-cell RNG stream: a pure function of (seed, model/trace/rate
     /// coordinates) — shared by every system at this point, independent
     /// of grid order and thread count.
@@ -120,7 +134,7 @@ impl GridSpec {
     /// are rejected up front — a typoed axis name (`"seed"` for
     /// `"seeds"`) must fail immediately, not silently sweep defaults.
     pub fn from_json(doc: &Json) -> Result<GridSpec, String> {
-        const KNOWN: [&str; 16] = [
+        const KNOWN: [&str; 18] = [
             "systems",
             "models",
             "traces",
@@ -131,6 +145,8 @@ impl GridSpec {
             "autoscalers",
             "faults",
             "guardrails",
+            "predictor_faults",
+            "headroom",
             "replicas",
             "duration",
             "max_time",
@@ -172,6 +188,8 @@ impl GridSpec {
         strings("autoscalers", &mut spec.autoscalers)?;
         strings("faults", &mut spec.faults)?;
         strings("guardrails", &mut spec.guardrails)?;
+        strings("predictor_faults", &mut spec.predictor_faults)?;
+        strings("headroom", &mut spec.headroom)?;
         if let Some(v) = doc.get("rates") {
             let arr = v.as_arr().ok_or("'rates' must be an array")?;
             spec.rates = arr
@@ -253,6 +271,16 @@ impl GridSpec {
                 return Err(format!("unknown guardrail mode '{g}'"));
             }
         }
+        for p in &self.predictor_faults {
+            if crate::predictor::faults::by_name(p).is_none() {
+                return Err(format!("unknown predictor fault profile '{p}'"));
+            }
+        }
+        for h in &self.headroom {
+            if crate::reliability::headroom::HeadroomConfig::parse(h).is_none() {
+                return Err(format!("unknown headroom mode '{h}'"));
+            }
+        }
         if self.routers.is_empty() != self.autoscalers.is_empty() {
             return Err("'routers' and 'autoscalers' must be set together".to_string());
         }
@@ -314,6 +342,19 @@ impl GridSpec {
     /// Enumerate the cross-product in deterministic grid order.
     pub fn cells(&self) -> Vec<Cell> {
         let axis = self.fleet_axis();
+        // Config-level axes (work for single and fleet cells alike);
+        // innermost, so the default (one-point) axes leave the grid order
+        // of pre-existing specs untouched.
+        let pfaults: Vec<String> = if self.predictor_faults.is_empty() {
+            vec!["none".to_string()]
+        } else {
+            self.predictor_faults.clone()
+        };
+        let headrooms: Vec<String> = if self.headroom.is_empty() {
+            vec!["static".to_string()]
+        } else {
+            self.headroom.clone()
+        };
         let mut cells = Vec::new();
         for (mi, model) in self.models.iter().enumerate() {
             for (ti, trace) in self.traces.iter().enumerate() {
@@ -330,18 +371,24 @@ impl GridSpec {
                         let cell_seed = derive_seed(seed, stream::grid_cell(mi, ti, ri));
                         for system in &self.systems {
                             for (router, autoscaler, faults, guardrails) in &axis {
-                                cells.push(Cell {
-                                    system: system.clone(),
-                                    model: model.clone(),
-                                    trace: trace.clone(),
-                                    rate,
-                                    seed,
-                                    router: router.clone(),
-                                    autoscaler: autoscaler.clone(),
-                                    faults: faults.clone(),
-                                    guardrails: guardrails.clone(),
-                                    cell_seed,
-                                });
+                                for pf in &pfaults {
+                                    for hr in &headrooms {
+                                        cells.push(Cell {
+                                            system: system.clone(),
+                                            model: model.clone(),
+                                            trace: trace.clone(),
+                                            rate,
+                                            seed,
+                                            router: router.clone(),
+                                            autoscaler: autoscaler.clone(),
+                                            faults: faults.clone(),
+                                            guardrails: guardrails.clone(),
+                                            predictor_faults: pf.clone(),
+                                            headroom: hr.clone(),
+                                            cell_seed,
+                                        });
+                                    }
+                                }
                             }
                         }
                     }
@@ -436,6 +483,10 @@ fn run_cell(cell_idx: usize, cell: &Cell, spec: &GridSpec) -> (Json, String, Opt
     // Never charge measured scheduler wall-clock into the simulated
     // clock in sweep cells: rows must be a pure function of the spec.
     cfg.sched_time_scale = 0.0;
+    // Config-level robustness axes flow to every replica's predictor and
+    // headroom controller through the cfg clone.
+    cfg.predictor_faults = cell.predictor_faults.clone();
+    cfg.headroom = cell.headroom.clone();
     // Cell-seeded sampling stream: the same cell samples the same
     // requests whatever the grid shape or thread count.
     let tracing =
@@ -448,6 +499,8 @@ fn run_cell(cell_idx: usize, cell: &Cell, spec: &GridSpec) -> (Json, String, Opt
         ("rate", Json::from(cell.rate)),
         ("seed", Json::from(cell.seed as usize)),
         ("n", Json::from(items.len())),
+        ("predictor_faults", Json::from(cell.predictor_faults.as_str())),
+        ("headroom", Json::from(cell.headroom.as_str())),
     ];
     match (&cell.router, &cell.autoscaler) {
         (Some(router), Some(autoscaler)) => {
@@ -610,10 +663,47 @@ mod tests {
         assert!(GridSpec::from_json(&bad_guard).unwrap_err().contains("guardrail mode"));
         let orphan_guard = Json::parse(r#"{"guardrails": ["retry"]}"#).unwrap();
         assert!(GridSpec::from_json(&orphan_guard).is_err());
+        // Predictor-fault and headroom axes are validated but do NOT
+        // require the fleet axes (they are SystemConfig knobs).
+        let bad_pf = Json::parse(r#"{"predictor_faults": ["meteor-strike"]}"#).unwrap();
+        assert!(GridSpec::from_json(&bad_pf)
+            .unwrap_err()
+            .contains("predictor fault profile"));
+        let bad_hr = Json::parse(r#"{"headroom": ["galactic"]}"#).unwrap();
+        assert!(GridSpec::from_json(&bad_hr).unwrap_err().contains("headroom mode"));
+        let single_pf = Json::parse(
+            r#"{"predictor_faults": ["none", "regime-shift"], "headroom": ["static", "adaptive"]}"#,
+        )
+        .unwrap();
+        let spec = GridSpec::from_json(&single_pf).unwrap();
+        assert_eq!(spec.predictor_faults.len(), 2);
+        assert_eq!(spec.headroom.len(), 2);
         // Typoed keys fail fast instead of silently sweeping defaults.
         let typo = Json::parse(r#"{"seed": [1, 2]}"#).unwrap();
         assert!(GridSpec::from_json(&typo).unwrap_err().contains("unknown key 'seed'"));
         assert!(GridSpec::from_json(&Json::parse("[1]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn predictor_axes_multiply_cells_and_share_the_workload_seed() {
+        let mut spec = tiny_spec();
+        spec.predictor_faults = vec!["none".to_string(), "regime-shift".to_string()];
+        spec.headroom = vec!["static".to_string(), "adaptive".to_string()];
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        // headroom-minor within predictor-faults.
+        assert_eq!(
+            (cells[0].predictor_faults.as_str(), cells[0].headroom.as_str()),
+            ("none", "static")
+        );
+        assert_eq!(
+            (cells[1].predictor_faults.as_str(), cells[1].headroom.as_str()),
+            ("none", "adaptive")
+        );
+        assert_eq!(cells[3].predictor_faults.as_str(), "regime-shift");
+        // Robustness variants at one grid point share the workload
+        // stream: the comparison isolates the axis under test.
+        assert!(cells.windows(2).all(|w| w[0].cell_seed == w[1].cell_seed));
     }
 
     #[test]

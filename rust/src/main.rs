@@ -195,8 +195,9 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
         "grid",
         "",
         "JSON grid-spec file (keys: systems, models, traces, rates, rate_points, seeds, \
-         routers, autoscalers, faults, guardrails, replicas, duration, max_time, oracle, \
-         threads); when set, the inline axis options below are ignored",
+         routers, autoscalers, faults, guardrails, predictor_faults, headroom, replicas, \
+         duration, max_time, oracle, threads); when set, the inline axis options below \
+         are ignored",
     )
     .opt("systems", "econoserve", "comma list of systems ('<sched>' or '<sched>+<alloc>')")
     .opt("model", "opt-13b", "comma list of model profiles")
@@ -212,6 +213,18 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
         "",
         "comma list of reliability guardrail modes for fleet cells, e.g. off,retry+hedge \
          (empty = off)",
+    )
+    .opt(
+        "predictor-faults",
+        "",
+        "comma list of predictor fault profiles, e.g. none,regime-shift (empty = none); \
+         works for single AND fleet cells",
+    )
+    .opt(
+        "headroom",
+        "",
+        "comma list of KVC padding modes, e.g. static,adaptive (empty = static); works \
+         for single AND fleet cells",
     )
     .opt("replicas", "2", "fleet size bound for fleet cells")
     .opt("duration", "30", "workload duration, simulated seconds")
@@ -268,11 +281,14 @@ fn cmd_sweep(argv: Vec<String>) -> i32 {
             autoscalers: a.str_list("autoscalers"),
             faults: a.str_list("faults"),
             guardrails: a.str_list("guardrails"),
+            predictor_faults: a.str_list("predictor-faults"),
+            headroom: a.str_list("headroom"),
             replicas: a.usize("replicas"),
             duration: a.f64("duration"),
             max_time: a.f64("max-time"),
             oracle: a.bool("oracle"),
             threads: a.usize("threads"),
+            trace: false,
         };
         if let Err(e) = spec.validate() {
             eprintln!("bad sweep spec: {e}");
@@ -609,6 +625,26 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
          run is printed alongside for comparison",
     )
     .opt(
+        "predictor-bias",
+        "1",
+        "multiplicative RL-predictor bias (< 1 systematically under-predicts, > 1 \
+         over-predicts; 1 = calibrated)",
+    )
+    .opt(
+        "predictor-faults",
+        "none",
+        "predictor fault profile (none | bias-drift | heavy-tail | regime-shift | outage | \
+         full-chaos); timelines are seeded from the dedicated predictor rng stream, so \
+         enabling them never perturbs the workload/router/chaos streams",
+    )
+    .opt(
+        "headroom",
+        "static",
+        "KVC padding mode: static (the per-trace sweet-spot constant) | adaptive (online \
+         misprediction tracker steers the padding ratio and bounds per-iteration \
+         overrun evictions)",
+    )
+    .opt(
         "metrics-out",
         "",
         "write the fleet's merged telemetry registry (Prometheus text) here \
@@ -658,6 +694,30 @@ fn cmd_fleet(argv: Vec<String>) -> i32 {
     let trace_name = a.get("trace");
     let mut cfg = calibrated_cfg(a.get("model"), trace_name);
     cfg.seed = a.u64("seed");
+    let pf_name = a.get("predictor-faults");
+    if econoserve::predictor::faults::by_name(pf_name).is_none() {
+        eprintln!(
+            "unknown predictor fault profile '{pf_name}' (expected one of {:?})",
+            econoserve::predictor::faults::all_profiles()
+        );
+        return 2;
+    }
+    let headroom_name = a.get("headroom");
+    if econoserve::reliability::headroom::HeadroomConfig::parse(headroom_name).is_none() {
+        eprintln!(
+            "unknown headroom mode '{headroom_name}' (expected one of {:?})",
+            econoserve::reliability::headroom::HeadroomConfig::all_modes()
+        );
+        return 2;
+    }
+    let bias = a.f64("predictor-bias");
+    if bias <= 0.0 {
+        eprintln!("--predictor-bias must be positive");
+        return 2;
+    }
+    cfg.predictor_bias = bias;
+    cfg.predictor_faults = pf_name.to_string();
+    cfg.headroom = headroom_name.to_string();
     let spec = TraceSpec::by_name(trace_name).expect("unknown trace");
     let cap = cfg.capacity_estimate(&spec);
     let mean_rate =

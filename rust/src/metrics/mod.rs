@@ -76,6 +76,13 @@ pub struct Collector {
     pub preemptions: u64,
     pub swap_preemptions: u64,
     pub pipeline_evictions: u64,
+    /// Largest number of overrun-guest evictions executed in any single
+    /// iteration (the eviction-storm containment bound: with adaptive
+    /// headroom this never exceeds the configured per-iteration budget).
+    pub max_iter_evictions: u64,
+    /// Iterations whose overrun sweep hit the eviction budget and had to
+    /// defer at least one eviction to the next iteration.
+    pub eviction_storms: u64,
     /// Cumulative typed allocation outcomes, folded in per iteration by
     /// `World::apply_plan` from the allocator's `AllocTally`.
     pub alloc_granted: u64,
@@ -118,6 +125,8 @@ impl Collector {
             preemptions: 0,
             swap_preemptions: 0,
             pipeline_evictions: 0,
+            max_iter_evictions: 0,
+            eviction_storms: 0,
             alloc_granted: 0,
             alloc_hosted: 0,
             alloc_exhausted: 0,
@@ -200,6 +209,15 @@ pub struct Summary {
     pub alloc_failure_frac: f64,
     pub preemptions: u64,
     pub pipeline_evictions: u64,
+    /// Worst single-iteration overrun-eviction count (storm bound).
+    pub max_iter_evictions: u64,
+    /// Iterations that saturated the per-iteration eviction budget.
+    pub eviction_storms: u64,
+    /// RL predictions issued / "close" verdicts (within one quantum of
+    /// the quantized truth). Filled by callers that own the predictor
+    /// (`summarize` itself never sees it); zeros otherwise.
+    pub n_pred: u64,
+    pub n_close: u64,
     /// Scheduling overhead as a fraction of total busy time.
     pub sched_overhead_frac: f64,
     pub sched_time_mean: f64,
@@ -262,6 +280,10 @@ pub fn summarize(recs: &[ReqRec], col: &Collector, end_time: Time) -> Summary {
         alloc_failure_frac: col.alloc_failed_reqs.len() as f64 / recs.len().max(1) as f64,
         preemptions: col.preemptions,
         pipeline_evictions: col.pipeline_evictions,
+        max_iter_evictions: col.max_iter_evictions,
+        eviction_storms: col.eviction_storms,
+        n_pred: 0,
+        n_close: 0,
         sched_overhead_frac: col.sched_time_total / (col.busy_time + col.sched_time_total).max(1e-9),
         sched_time_mean: 0.0,
         iterations: col.iterations,

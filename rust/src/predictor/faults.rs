@@ -1,0 +1,537 @@
+//! Deterministic predictor fault injection: chaos profiles for the RL
+//! prediction resource (the robustness mirror of `fleet::faults`).
+//!
+//! EconoServe reserves KVC up-front for the *predicted* response length
+//! (§2.3, §3.3.2), which makes the predictor a single point of failure:
+//! a drifting, heavy-tailed, stale, or unavailable predictor turns §3.2
+//! pipelining into an eviction storm. A [`PredictorFaultProfile`] names
+//! a reproducible degradation scenario; [`FaultyPredictor`] applies it
+//! as a composable wrapper over any inner [`Predictor`]:
+//!
+//!  * **bias-drift** — jittered-periodic episodes during which every
+//!    prediction is scaled by a factor sampled from a low band (the
+//!    dangerous, under-predicting direction: calibration decays between
+//!    retrains).
+//!  * **heavy-tail** — per-prediction chance of a blunder: the estimate
+//!    is multiplied or divided by a large factor with equal odds (the
+//!    error distribution grows the tails a log-normal lacks).
+//!  * **regime-shift** — step episodes where the workload's length
+//!    regime moved but the predictor did not: predictions scale by a
+//!    fixed stale-model factor for the episode.
+//!  * **outage** — the predictor server is unreachable for a window; the
+//!    wrapper falls back to a conservative prompt-proportional estimate
+//!    (long prompts tend to long answers; over-provisioning beats
+//!    triggering eviction cascades).
+//!  * **full-chaos** — all of the above at moderated rates.
+//!
+//! Episode timelines draw from a dedicated RNG stream
+//! (`stream::PREDICTOR` off the per-world seed), so they are pure
+//! functions of (profile, seed) — enabling predictor chaos never
+//! perturbs the workload, router, replica-fault, or guardrail draws, and
+//! runs are bit-identical at any thread count (pinned in
+//! tests/equivalence.rs).
+
+use crate::core::ReqId;
+use crate::util::rng::{derive_seed, Rng};
+
+use super::Predictor;
+
+/// One named predictor degradation scenario. Fields with `every == 0`
+/// (or `tail_prob == 0`) disable that fault process entirely — its RNG
+/// sub-stream is never consumed, so `none` is exactly a no-op.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictorFaultProfile {
+    pub name: &'static str,
+    /// Mean seconds between bias-drift episodes (0 = never).
+    pub drift_every: f64,
+    /// Length of one drift episode (seconds).
+    pub drift_len: f64,
+    /// Multiplicative bias band `[lo, hi]` sampled once per episode.
+    pub drift_lo: f64,
+    pub drift_hi: f64,
+    /// Per-prediction probability of a heavy-tail blunder (0 = never).
+    pub tail_prob: f64,
+    /// Blunder magnitude: the prediction is multiplied or divided by
+    /// this factor with equal odds.
+    pub tail_factor: f64,
+    /// Mean seconds between regime-shift episodes (0 = never).
+    pub shift_every: f64,
+    /// Length of one shift episode (seconds).
+    pub shift_len: f64,
+    /// Stale-model scale applied to predictions during a shift.
+    pub shift_factor: f64,
+    /// Mean seconds between predictor outages (0 = never).
+    pub outage_every: f64,
+    /// Length of one outage window (seconds).
+    pub outage_len: f64,
+    /// Outage fallback: estimate = `prompt_len * fallback_scale`
+    /// (quantized up), deliberately conservative.
+    pub fallback_scale: f64,
+}
+
+impl PredictorFaultProfile {
+    /// Whether this profile injects anything at all. The harness only
+    /// wraps the inner predictor when active, so `none` runs are
+    /// bit-identical to builds without this module.
+    pub fn is_active(&self) -> bool {
+        self.drift_every > 0.0
+            || self.tail_prob > 0.0
+            || self.shift_every > 0.0
+            || self.outage_every > 0.0
+    }
+}
+
+const NONE: PredictorFaultProfile = PredictorFaultProfile {
+    name: "none",
+    drift_every: 0.0,
+    drift_len: 0.0,
+    drift_lo: 1.0,
+    drift_hi: 1.0,
+    tail_prob: 0.0,
+    tail_factor: 1.0,
+    shift_every: 0.0,
+    shift_len: 0.0,
+    shift_factor: 1.0,
+    outage_every: 0.0,
+    outage_len: 0.0,
+    fallback_scale: 2.0,
+};
+
+/// The profile registry (`--predictor-faults` on the CLI and the
+/// `predictor_faults` grid axis resolve names against this).
+pub const PROFILES: [PredictorFaultProfile; 6] = [
+    NONE,
+    PredictorFaultProfile {
+        name: "bias-drift",
+        drift_every: 120.0,
+        drift_len: 60.0,
+        drift_lo: 0.65,
+        drift_hi: 0.9,
+        ..NONE
+    },
+    PredictorFaultProfile { name: "heavy-tail", tail_prob: 0.08, tail_factor: 4.0, ..NONE },
+    PredictorFaultProfile {
+        name: "regime-shift",
+        shift_every: 60.0,
+        shift_len: 30.0,
+        shift_factor: 0.6,
+        ..NONE
+    },
+    PredictorFaultProfile { name: "outage", outage_every: 150.0, outage_len: 45.0, ..NONE },
+    PredictorFaultProfile {
+        name: "full-chaos",
+        drift_every: 240.0,
+        drift_len: 60.0,
+        drift_lo: 0.7,
+        drift_hi: 0.9,
+        tail_prob: 0.04,
+        tail_factor: 3.0,
+        shift_every: 180.0,
+        shift_len: 40.0,
+        shift_factor: 0.7,
+        outage_every: 300.0,
+        outage_len: 30.0,
+        ..NONE
+    },
+];
+
+/// Resolve a profile by registry name.
+pub fn by_name(name: &str) -> Option<PredictorFaultProfile> {
+    PROFILES.iter().find(|p| p.name == name).copied()
+}
+
+/// All registry names, `"none"` first.
+pub fn all_profiles() -> Vec<&'static str> {
+    PROFILES.iter().map(|p| p.name).collect()
+}
+
+/// The episode kind an event belongs to (outages have no factor — the
+/// fallback estimate takes over entirely).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Drift,
+    Shift,
+    Outage,
+}
+
+impl FaultKind {
+    fn rank(self) -> u8 {
+        match self {
+            FaultKind::Drift => 0,
+            FaultKind::Shift => 1,
+            FaultKind::Outage => 2,
+        }
+    }
+}
+
+/// One scheduled fault episode: active over `[at, at + len)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: f64,
+    pub len: f64,
+    pub kind: FaultKind,
+    /// Multiplicative factor applied to predictions during the episode
+    /// (1.0 and unused for outages).
+    pub factor: f64,
+}
+
+/// A jittered-periodic episode process (mirrors `fleet::faults`'s event
+/// processes): episode `k` starts uniformly inside the middle half of
+/// period `k`, and its factor is drawn eagerly with the start time so
+/// the stream position is a pure function of the episode index.
+#[derive(Debug, Clone)]
+struct Episodes {
+    kind: FaultKind,
+    every: f64,
+    len: f64,
+    lo: f64,
+    hi: f64,
+    k: u64,
+    rng: Rng,
+    /// Most recently started episode (may have ended already).
+    cur: Option<FaultEvent>,
+    /// Next scheduled episode.
+    next: Option<FaultEvent>,
+}
+
+impl Episodes {
+    fn new(kind: FaultKind, every: f64, len: f64, lo: f64, hi: f64, seed: u64) -> Self {
+        let mut ep =
+            Episodes { kind, every, len, lo, hi, k: 0, rng: Rng::new(seed), cur: None, next: None };
+        if every > 0.0 {
+            ep.next = Some(ep.draw());
+        }
+        ep
+    }
+
+    fn draw(&mut self) -> FaultEvent {
+        let at = (self.k as f64 + 0.25 + 0.5 * self.rng.f64()) * self.every;
+        let factor = self.lo + self.rng.f64() * (self.hi - self.lo);
+        self.k += 1;
+        FaultEvent { at, len: self.len, kind: self.kind, factor }
+    }
+
+    /// Move the cursor forward: every episode whose start has passed
+    /// becomes the current one. Time must be fed monotonically.
+    fn advance_to(&mut self, t: f64) {
+        while let Some(ev) = self.next {
+            if ev.at > t {
+                break;
+            }
+            self.cur = Some(ev);
+            self.next = Some(self.draw());
+        }
+    }
+
+    /// The episode active at `t`, if any.
+    fn active(&self, t: f64) -> Option<FaultEvent> {
+        self.cur.filter(|ev| t < ev.at + ev.len)
+    }
+}
+
+/// Sub-stream indices off the wrapper seed (mirrors
+/// `fleet::faults::Injector`): each fault process owns an independent
+/// stream, so profiles sharing a process kind share its episode
+/// timeline at the same seed.
+const SUB_DRIFT: u64 = 0;
+const SUB_SHIFT: u64 = 1;
+const SUB_OUTAGE: u64 = 2;
+const SUB_TAIL: u64 = 3;
+
+fn episodes_for(profile: &PredictorFaultProfile, seed: u64) -> (Episodes, Episodes, Episodes) {
+    (
+        Episodes::new(
+            FaultKind::Drift,
+            profile.drift_every,
+            profile.drift_len,
+            profile.drift_lo,
+            profile.drift_hi,
+            derive_seed(seed, SUB_DRIFT),
+        ),
+        Episodes::new(
+            FaultKind::Shift,
+            profile.shift_every,
+            profile.shift_len,
+            profile.shift_factor,
+            profile.shift_factor,
+            derive_seed(seed, SUB_SHIFT),
+        ),
+        Episodes::new(
+            FaultKind::Outage,
+            profile.outage_every,
+            profile.outage_len,
+            1.0,
+            1.0,
+            derive_seed(seed, SUB_OUTAGE),
+        ),
+    )
+}
+
+/// The full episode timeline of `(profile, seed)` up to `horizon`,
+/// ordered by start time (ties broken drift < shift < outage). A pure
+/// function — calling it neither requires nor perturbs a wrapper, which
+/// is what makes "bit-identical at any thread count" testable directly.
+pub fn timeline(profile: &PredictorFaultProfile, seed: u64, horizon: f64) -> Vec<FaultEvent> {
+    let (drift, shift, outage) = episodes_for(profile, seed);
+    let mut events = Vec::new();
+    for mut ep in [drift, shift, outage] {
+        while let Some(ev) = ep.next {
+            if ev.at >= horizon {
+                break;
+            }
+            events.push(ev);
+            ep.cur = Some(ev);
+            ep.next = Some(ep.draw());
+        }
+    }
+    events.sort_by(|a, b| {
+        a.at.partial_cmp(&b.at).unwrap().then(a.kind.rank().cmp(&b.kind.rank()))
+    });
+    events
+}
+
+/// Composable fault wrapper over any inner predictor. Construct only
+/// for active profiles (the harness skips the wrapper for `none`, so
+/// fault-free runs stay bit-identical to pre-chaos builds).
+///
+/// The wrapper tracks its own `(n_pred, n_close)` accuracy against the
+/// quantized truth — measuring the *faulted* estimates, which is the
+/// degradation `econoserve_predictions_total{verdict}` should surface —
+/// and keeps the inner predictor's RNG stream untouched during outages
+/// (the server being down consumes no model randomness).
+pub struct FaultyPredictor {
+    inner: Box<dyn Predictor>,
+    profile: PredictorFaultProfile,
+    drift: Episodes,
+    shift: Episodes,
+    outage: Episodes,
+    tail_rng: Rng,
+    quantum: u32,
+    /// Monotone simulated-time cursor (re-routed arrivals may be
+    /// observed "in the past"; episodes never rewind).
+    now: f64,
+    prompt_len: u32,
+    n_pred: u64,
+    n_close: u64,
+    outage_fallbacks: u64,
+}
+
+impl FaultyPredictor {
+    pub fn new(
+        inner: Box<dyn Predictor>,
+        profile: PredictorFaultProfile,
+        seed: u64,
+        quantum: u32,
+    ) -> Self {
+        let (drift, shift, outage) = episodes_for(&profile, seed);
+        FaultyPredictor {
+            inner,
+            profile,
+            drift,
+            shift,
+            outage,
+            tail_rng: Rng::new(derive_seed(seed, SUB_TAIL)),
+            quantum: quantum.max(1),
+            now: 0.0,
+            prompt_len: 1,
+            n_pred: 0,
+            n_close: 0,
+            outage_fallbacks: 0,
+        }
+    }
+
+    /// Predictions served by the outage fallback instead of the model.
+    pub fn outage_fallbacks(&self) -> u64 {
+        self.outage_fallbacks
+    }
+
+    fn quantize(&self, x: f64) -> u32 {
+        let q = self.quantum as f64;
+        ((x / q).ceil() * q).max(q) as u32
+    }
+}
+
+impl Predictor for FaultyPredictor {
+    fn observe_request(&mut self, now: f64, prompt_len: u32) {
+        self.now = self.now.max(now);
+        self.prompt_len = prompt_len.max(1);
+        let t = self.now;
+        self.drift.advance_to(t);
+        self.shift.advance_to(t);
+        self.outage.advance_to(t);
+        self.inner.observe_request(now, prompt_len);
+    }
+
+    fn predict_raw(&mut self, id: ReqId, true_rl: u32) -> u32 {
+        let pred = if self.outage.active(self.now).is_some() {
+            // Predictor unreachable: conservative prompt-proportional
+            // fallback. The inner predictor is not consulted, so its
+            // error stream does not advance.
+            self.outage_fallbacks += 1;
+            self.quantize(self.prompt_len as f64 * self.profile.fallback_scale)
+        } else {
+            let mut p = self.inner.predict_raw(id, true_rl) as f64;
+            if let Some(ev) = self.drift.active(self.now) {
+                p *= ev.factor;
+            }
+            if let Some(ev) = self.shift.active(self.now) {
+                p *= ev.factor;
+            }
+            if self.profile.tail_prob > 0.0 && self.tail_rng.chance(self.profile.tail_prob) {
+                p = if self.tail_rng.chance(0.5) {
+                    p / self.profile.tail_factor
+                } else {
+                    p * self.profile.tail_factor
+                };
+            }
+            self.quantize(p)
+        };
+        self.n_pred += 1;
+        if pred.abs_diff(self.quantize(true_rl as f64)) <= self.quantum {
+            self.n_close += 1;
+        }
+        pred
+    }
+
+    fn latency(&self) -> f64 {
+        self.inner.latency()
+    }
+
+    fn accuracy(&self) -> (u64, u64) {
+        (self.n_pred, self.n_close)
+    }
+
+    fn name(&self) -> &'static str {
+        "faulted"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::OraclePredictor;
+
+    #[test]
+    fn registry_resolves_every_profile() {
+        assert_eq!(all_profiles().len(), PROFILES.len());
+        assert_eq!(all_profiles()[0], "none");
+        for name in all_profiles() {
+            let p = by_name(name).unwrap();
+            assert_eq!(p.name, name);
+            assert_eq!(p.is_active(), name != "none");
+        }
+        assert!(by_name("meteor-strike").is_none());
+    }
+
+    #[test]
+    fn none_profile_has_empty_timeline() {
+        assert!(timeline(&by_name("none").unwrap(), 42, 1e6).is_empty());
+    }
+
+    #[test]
+    fn timelines_are_seed_deterministic() {
+        for name in all_profiles() {
+            let p = by_name(name).unwrap();
+            let a = timeline(&p, 7, 2000.0);
+            let b = timeline(&p, 7, 2000.0);
+            assert_eq!(a, b, "{name}: same (profile, seed) must give the same timeline");
+            if p.is_active() {
+                let c = timeline(&p, 8, 2000.0);
+                assert_ne!(a, c, "{name}: different seeds must differ");
+            }
+        }
+    }
+
+    #[test]
+    fn events_are_ordered_and_inside_their_jitter_windows() {
+        let p = by_name("regime-shift").unwrap();
+        let evs = timeline(&p, 42, 10.0 * p.shift_every);
+        assert!(evs.len() >= 8, "expected ~10 episodes, got {}", evs.len());
+        for (k, ev) in evs.iter().enumerate() {
+            assert_eq!(ev.kind, FaultKind::Shift);
+            assert_eq!(ev.len, p.shift_len);
+            let lo = (k as f64 + 0.25) * p.shift_every;
+            let hi = (k as f64 + 0.75) * p.shift_every;
+            assert!(
+                ev.at >= lo && ev.at < hi,
+                "episode {k} at {} outside jitter window [{lo}, {hi})",
+                ev.at
+            );
+        }
+    }
+
+    #[test]
+    fn full_chaos_interleaves_kinds_in_order() {
+        let evs = timeline(&by_name("full-chaos").unwrap(), 13, 3000.0);
+        let kinds: std::collections::HashSet<u8> = evs.iter().map(|e| e.kind.rank()).collect();
+        assert_eq!(kinds.len(), 3, "all three episode kinds must appear");
+        for w in evs.windows(2) {
+            assert!(w[0].at <= w[1].at, "timeline must be ordered by start time");
+        }
+    }
+
+    #[test]
+    fn drift_scales_predictions_down_during_episodes() {
+        let p = by_name("bias-drift").unwrap();
+        let ev = timeline(&p, 5, 1000.0)[0];
+        let mut f = FaultyPredictor::new(Box::new(OraclePredictor::new(1)), p, 5, 1);
+        // Before the episode: passthrough.
+        f.observe_request(ev.at - 1.0, 100);
+        assert_eq!(f.predict_raw(0, 1000), 1000);
+        // Inside: scaled by the episode factor (within the profile band).
+        f.observe_request(ev.at + 0.5 * ev.len, 100);
+        let scaled = f.predict_raw(1, 1000);
+        assert_eq!(scaled, (1000.0 * ev.factor).ceil() as u32);
+        assert!(ev.factor >= p.drift_lo && ev.factor <= p.drift_hi);
+        // After: passthrough again.
+        f.observe_request(ev.at + ev.len + 0.1, 100);
+        assert_eq!(f.predict_raw(2, 1000), 1000);
+        let (n, close) = f.accuracy();
+        assert_eq!(n, 3);
+        assert_eq!(close, 2, "only the in-episode prediction is off");
+    }
+
+    #[test]
+    fn outage_falls_back_to_prompt_proportional_estimate() {
+        let p = by_name("outage").unwrap();
+        let ev = timeline(&p, 11, 2000.0)[0];
+        assert_eq!(ev.kind, FaultKind::Outage);
+        let mut f = FaultyPredictor::new(Box::new(OraclePredictor::new(32)), p, 11, 32);
+        f.observe_request(ev.at + 1.0, 200);
+        let pred = f.predict_raw(0, 64);
+        let want = ((200.0 * p.fallback_scale) / 32.0).ceil() as u32 * 32;
+        assert_eq!(pred, want, "fallback must be prompt-proportional and quantized");
+        assert_eq!(f.outage_fallbacks(), 1);
+        // Past the window the oracle answers again.
+        f.observe_request(ev.at + ev.len + 1.0, 200);
+        assert_eq!(f.predict_raw(1, 64), 64);
+        assert_eq!(f.outage_fallbacks(), 1);
+    }
+
+    #[test]
+    fn heavy_tail_blunders_at_roughly_profile_probability() {
+        let p = by_name("heavy-tail").unwrap();
+        let mut f = FaultyPredictor::new(Box::new(OraclePredictor::new(1)), p, 3, 1);
+        f.observe_request(0.0, 50);
+        let n = 20_000;
+        let mut blunders = 0;
+        for i in 0..n {
+            let pred = f.predict_raw(i, 400);
+            if pred != 400 {
+                blunders += 1;
+                assert!(
+                    pred == 100 || pred == 1600,
+                    "tail blunder must be x{} or /{}: {pred}",
+                    p.tail_factor,
+                    p.tail_factor
+                );
+            }
+        }
+        let frac = blunders as f64 / n as f64;
+        assert!(
+            (frac - p.tail_prob).abs() < 0.02,
+            "blunder rate {frac} vs tail_prob {}",
+            p.tail_prob
+        );
+    }
+}

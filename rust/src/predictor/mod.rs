@@ -21,6 +21,8 @@
 //! groups (Fig 2) non-trivial. [`OraclePredictor`] returns the truth
 //! (the paper's *Oracle* variant).
 
+pub mod faults;
+
 use crate::core::ReqId;
 use crate::util::rng::Rng;
 
@@ -30,10 +32,25 @@ pub trait Predictor: Send {
     /// `true_rl`. Implementations must be deterministic per (seed, id).
     fn predict_raw(&mut self, id: ReqId, true_rl: u32) -> u32;
 
+    /// Request context for the next `predict_raw` call: the simulated
+    /// time of the prediction and the request's prompt length. The world
+    /// calls this before every (re-)prediction; the fault wrapper
+    /// ([`faults::FaultyPredictor`]) uses it to evaluate its episode
+    /// timeline and to build the outage fallback estimate. Plain
+    /// predictors ignore it.
+    fn observe_request(&mut self, _now: f64, _prompt_len: u32) {}
+
     /// Latency of one prediction (the paper measures ~0.921 s on its
     /// separate 4-GPU predictor server; overlapped with queueing/prefill).
     fn latency(&self) -> f64 {
         0.0
+    }
+
+    /// Accuracy accounting `(n_pred, n_close)`: total predictions made
+    /// and those within one quantum of the quantized truth. `(0, 0)` for
+    /// predictors that do not track it (the oracle is always exact).
+    fn accuracy(&self) -> (u64, u64) {
+        (0, 0)
     }
 
     fn name(&self) -> &'static str;
@@ -76,6 +93,14 @@ impl SimPredictor {
         Self::new(sigma, quantum, seed)
     }
 
+    /// Set the multiplicative bias (`SystemConfig::predictor_bias`):
+    /// `< 1` systematically under-predicts, `> 1` over-predicts.
+    pub fn with_bias(mut self, bias: f64) -> Self {
+        debug_assert!(bias > 0.0, "predictor bias must be positive: {bias}");
+        self.bias = bias;
+        self
+    }
+
     fn quantize(&self, x: f64) -> u32 {
         let q = self.quantum as f64;
         ((x / q).ceil() * q).max(q) as u32
@@ -95,6 +120,10 @@ impl Predictor for SimPredictor {
 
     fn latency(&self) -> f64 {
         self.latency
+    }
+
+    fn accuracy(&self) -> (u64, u64) {
+        (self.n_pred, self.n_close)
     }
 
     fn name(&self) -> &'static str {
@@ -153,6 +182,25 @@ mod tests {
         }
         let frac = under as f64 / n as f64;
         assert!((0.10..0.17).contains(&frac), "under-provision frac {frac}");
+    }
+
+    #[test]
+    fn bias_shifts_predictions_multiplicatively() {
+        // Same seed, bias 0.5 vs unbiased: the biased predictor's mean
+        // prediction should sit near half the unbiased one.
+        let mut plain = SimPredictor::new(0.05, 1, 99);
+        let mut biased = SimPredictor::new(0.05, 1, 99).with_bias(0.5);
+        let (mut sum_p, mut sum_b) = (0u64, 0u64);
+        for i in 0..2000 {
+            sum_p += plain.predict_raw(i, 400) as u64;
+            sum_b += biased.predict_raw(i, 400) as u64;
+        }
+        let ratio = sum_b as f64 / sum_p as f64;
+        assert!((ratio - 0.5).abs() < 0.02, "bias ratio {ratio}");
+        // A strong bias destroys closeness accounting.
+        let (n, close) = biased.accuracy();
+        assert_eq!(n, 2000);
+        assert_eq!(close, 0, "bias 0.5 should never land within one quantum");
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Adaptive KVC headroom: an online misprediction tracker driving the
+//! padding ratio toward a target under-provision rate.
+//!
+//! The paper picks `padding_ratio` per trace offline (sweet spots §2.3,
+//! Fig 15a) and holds it constant. That is the right call when the
+//! predictor's error process is stationary and calibrated — and exactly
+//! wrong when it drifts, grows tails, or goes stale
+//! (`predictor::faults`): a static pad then either under-provisions
+//! (reached-prediction storms, guest evictions, requeue livelock) or
+//! wastes KVC. This module closes the loop:
+//!
+//!  * [`Headroom`] keeps a bounded ring of **signed log prediction
+//!    errors** `ln(true_rl / raw_prediction)` — positive means the
+//!    predictor under-shot — fed at request completion and at
+//!    overrun-eviction time.
+//!  * Every [`HeadroomConfig::window`] observations the controller sets
+//!    the pad from the ring's `(1 - target_under)` quantile: the padding
+//!    that would have left exactly the target fraction of requests
+//!    under-provisioned. A deadband (hysteresis) suppresses twitchy
+//!    updates; clamps bound the steered ratio.
+//!  * A tiered fallback (mirroring [`super::Brownout`]'s
+//!    escalate-fast / clear-slow shape) reacts to *sustained*
+//!    misprediction faster than the quantile can: tier 1 over-pads, tier
+//!    2 pads to the clamp and halves the per-iteration eviction budget —
+//!    the request's reserved span becomes the conservative class before
+//!    evictions cascade.
+//!
+//! Pure arithmetic over simulated quantities — no RNG, no wall clock —
+//! so adaptive decisions are bit-identical at any thread count (pinned
+//! in tests/equivalence.rs).
+
+/// Knobs for the adaptive headroom controller. Parse a mode string with
+/// [`HeadroomConfig::parse`]; `off()` keeps the static sweet-spot
+/// constant and leaves runs bit-identical to pre-headroom builds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HeadroomConfig {
+    /// Master switch: steer `padding_ratio` online.
+    pub adaptive: bool,
+    /// Under-provision rate the controller steers toward (the paper's
+    /// sweet spots sit near ~10% under, Fig 5a).
+    pub target_under: f64,
+    /// Clamp bounds on the steered padding ratio.
+    pub min_pad: f64,
+    pub max_pad: f64,
+    /// The pad only moves when the desired value differs by more than
+    /// this (absolute padding units) — hysteresis against twitching.
+    pub deadband: f64,
+    /// Observations per controller step.
+    pub window: u32,
+    /// Overrun guest evictions allowed per iteration (tier 2 halves it).
+    pub evict_budget: u32,
+    /// Windowed under-rate at/above which the fallback escalates a tier.
+    pub escalate_under: f64,
+    /// Windowed under-rate at/below which it steps back down. The gap to
+    /// `escalate_under` is the no-flap band.
+    pub clear_under: f64,
+}
+
+/// Ring capacity for the streaming quantile (bounded memory; must be
+/// >= any config's `window` so a full window is always in the ring).
+const RING: usize = 256;
+
+/// Highest fallback tier.
+const MAX_LEVEL: u8 = 2;
+
+/// Tier-1 over-padding multiplier.
+const TIER1_PAD_BOOST: f64 = 1.5;
+
+impl HeadroomConfig {
+    /// Adaptive steering off: the static `padding_ratio` stands and the
+    /// eviction budget is unlimited.
+    pub fn off() -> Self {
+        HeadroomConfig { adaptive: false, ..Self::adaptive() }
+    }
+
+    /// The `"adaptive"` mode defaults.
+    pub fn adaptive() -> Self {
+        HeadroomConfig {
+            adaptive: true,
+            target_under: 0.10,
+            min_pad: 0.02,
+            max_pad: 1.0,
+            deadband: 0.02,
+            window: 64,
+            evict_budget: 4,
+            escalate_under: 0.30,
+            clear_under: 0.15,
+        }
+    }
+
+    /// Parse a headroom mode (`SystemConfig::headroom` / `--headroom`):
+    /// `""`, `"off"` and `"static"` keep the sweet-spot constant,
+    /// `"adaptive"` enables the controller. `None` on unknown names.
+    pub fn parse(mode: &str) -> Option<Self> {
+        match mode {
+            "" | "off" | "static" => Some(Self::off()),
+            "adaptive" => Some(Self::adaptive()),
+            _ => None,
+        }
+    }
+
+    /// Registry names for CLI help and grid validation.
+    pub fn all_modes() -> [&'static str; 2] {
+        ["static", "adaptive"]
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.adaptive
+    }
+}
+
+/// The online misprediction tracker + adaptive padding controller.
+#[derive(Debug, Clone)]
+pub struct Headroom {
+    cfg: HeadroomConfig,
+    /// Bounded ring of signed log errors (streaming quantile source).
+    ring: Vec<f64>,
+    pos: usize,
+    /// Observations and under-provision marks in the current window.
+    window_n: u32,
+    window_under: u32,
+    /// Steered base padding ratio (before the tier bump).
+    pad: f64,
+    level: u8,
+    peak: u8,
+    /// Lifetime counters for telemetry reconciliation.
+    pub under_events: u64,
+    pub over_events: u64,
+    pub adjustments: u64,
+}
+
+impl Headroom {
+    /// Start at the configured static sweet spot; the first full window
+    /// takes over from there.
+    pub fn new(cfg: HeadroomConfig, initial_pad: f64) -> Self {
+        debug_assert!(cfg.window as usize <= RING, "window larger than the quantile ring");
+        Headroom {
+            cfg,
+            ring: Vec::with_capacity(RING),
+            pos: 0,
+            window_n: 0,
+            window_under: 0,
+            pad: initial_pad.clamp(cfg.min_pad, cfg.max_pad),
+            level: 0,
+            peak: 0,
+            under_events: 0,
+            over_events: 0,
+            adjustments: 0,
+        }
+    }
+
+    /// The effective padding ratio for the next prediction, tier bump
+    /// applied: tier 1 over-pads, tier 2 sits at the clamp.
+    pub fn pad(&self) -> f64 {
+        let p = match self.level {
+            0 => self.pad,
+            1 => self.pad * TIER1_PAD_BOOST,
+            _ => self.cfg.max_pad,
+        };
+        p.clamp(self.cfg.min_pad, self.cfg.max_pad)
+    }
+
+    /// Overrun guest evictions allowed in one iteration.
+    pub fn eviction_budget(&self) -> u32 {
+        if self.level >= MAX_LEVEL {
+            (self.cfg.evict_budget / 2).max(1)
+        } else {
+            self.cfg.evict_budget.max(1)
+        }
+    }
+
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Highest tier reached over the run.
+    pub fn peak_level(&self) -> u8 {
+        self.peak
+    }
+
+    /// Feed one observation: the signed log error of a raw prediction
+    /// (`ln(true / raw)`, positive = under-shot) and whether the padded
+    /// reservation actually under-provisioned. Called at completion for
+    /// every request, and again at overrun-eviction time — the double
+    /// weight on storms is deliberate (sustained misprediction should
+    /// escalate faster than its completion rate alone).
+    pub fn observe(&mut self, signed_log_err: f64, under: bool) {
+        if self.ring.len() < RING {
+            self.ring.push(signed_log_err);
+        } else {
+            self.ring[self.pos] = signed_log_err;
+        }
+        self.pos = (self.pos + 1) % RING;
+        self.window_n += 1;
+        if under {
+            self.window_under += 1;
+            self.under_events += 1;
+        } else {
+            self.over_events += 1;
+        }
+        if self.window_n >= self.cfg.window {
+            self.step();
+        }
+    }
+
+    /// One controller step at the window boundary.
+    fn step(&mut self) {
+        let under_rate = self.window_under as f64 / self.window_n.max(1) as f64;
+        self.window_n = 0;
+        self.window_under = 0;
+
+        // Quantile target: the pad that would have left `target_under`
+        // of the ring's errors above it.
+        let mut sorted = self.ring.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((1.0 - self.cfg.target_under) * (sorted.len() - 1) as f64).round() as usize;
+        let desired = (sorted[idx].exp() - 1.0).clamp(self.cfg.min_pad, self.cfg.max_pad);
+        if (desired - self.pad).abs() > self.cfg.deadband {
+            self.pad = desired;
+            self.adjustments += 1;
+        }
+
+        // Tiered fallback: escalate on a bad window immediately, clear
+        // only once the windowed rate falls through the no-flap band.
+        if under_rate >= self.cfg.escalate_under {
+            self.level = (self.level + 1).min(MAX_LEVEL);
+            self.peak = self.peak.max(self.level);
+        } else if under_rate <= self.cfg.clear_under && self.level > 0 {
+            self.level -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parse_grammar_and_registry() {
+        assert!(!HeadroomConfig::parse("").unwrap().adaptive);
+        assert!(!HeadroomConfig::parse("off").unwrap().adaptive);
+        assert!(!HeadroomConfig::parse("static").unwrap().adaptive);
+        assert!(HeadroomConfig::parse("adaptive").unwrap().adaptive);
+        assert!(HeadroomConfig::parse("galactic").is_none());
+        for m in HeadroomConfig::all_modes() {
+            assert!(HeadroomConfig::parse(m).is_some(), "{m}");
+        }
+    }
+
+    #[test]
+    fn pad_stays_inside_clamps_and_deadband_suppresses_noise() {
+        let cfg = HeadroomConfig::adaptive();
+        let mut h = Headroom::new(cfg, 0.15);
+        // Tiny stationary errors: the desired pad (~0) clamps to min_pad.
+        for _ in 0..(cfg.window * 4) {
+            h.observe(0.001, false);
+        }
+        assert!((h.pad() - cfg.min_pad).abs() < 1e-12, "pad {} != min", h.pad());
+        let adj = h.adjustments;
+        // Errors matching the current pad exactly: inside the deadband,
+        // no further adjustment.
+        let q = (1.0 + h.pad()).ln();
+        for _ in 0..(cfg.window * 4) {
+            h.observe(q, false);
+        }
+        assert_eq!(h.adjustments, adj, "deadband must suppress no-op steps");
+        // Huge errors: clamp at max_pad, never beyond.
+        for _ in 0..(cfg.window * 4) {
+            h.observe(3.0, true);
+        }
+        assert!(h.pad() <= cfg.max_pad + 1e-12);
+    }
+
+    #[test]
+    fn sustained_under_escalates_and_recovery_clears_with_hysteresis() {
+        let cfg = HeadroomConfig::adaptive();
+        let mut h = Headroom::new(cfg, 0.15);
+        // Every observation under-shoots: two bad windows reach tier 2.
+        for _ in 0..(cfg.window * 2) {
+            h.observe(0.8, true);
+        }
+        assert_eq!(h.level(), 2);
+        assert_eq!(h.peak_level(), 2);
+        assert_eq!(h.eviction_budget(), (cfg.evict_budget / 2).max(1));
+        // A clean window steps down one tier at a time, not to zero.
+        for _ in 0..cfg.window {
+            h.observe(0.0, false);
+        }
+        assert_eq!(h.level(), 1);
+        assert_eq!(h.eviction_budget(), cfg.evict_budget);
+        for _ in 0..cfg.window {
+            h.observe(0.0, false);
+        }
+        assert_eq!(h.level(), 0);
+        assert_eq!(h.peak_level(), 2, "peak is sticky");
+    }
+
+    #[test]
+    fn controller_converges_to_target_under_rate_on_stationary_errors() {
+        // Property: on a stationary log-normal error process (the
+        // SimPredictor's own model, sigma = sharegpt), the realized
+        // under-provision rate converges to target_under. The fixed
+        // point is pad* = exp(q_{1-target}(err)) - 1: by construction
+        // P(err > ln(1 + pad*)) = target.
+        let cfg = HeadroomConfig::adaptive();
+        let sigma = 0.127;
+        let mut rng = Rng::new(901);
+        let mut h = Headroom::new(cfg, 0.15);
+        // Burn-in: let the ring fill and the pad settle.
+        for _ in 0..(RING * 4) {
+            let err = -(rng.normal() * sigma);
+            h.observe(err, err > (1.0 + h.pad()).ln());
+        }
+        let mut n = 0u32;
+        let mut under = 0u32;
+        for _ in 0..20_000 {
+            let err = -(rng.normal() * sigma);
+            let is_under = err > (1.0 + h.pad()).ln();
+            h.observe(err, is_under);
+            n += 1;
+            if is_under {
+                under += 1;
+            }
+        }
+        let rate = under as f64 / n as f64;
+        assert!(
+            (rate - cfg.target_under).abs() < 0.05,
+            "realized under rate {rate} vs target {}",
+            cfg.target_under
+        );
+        // And the settled pad matches the analytic fixed point
+        // exp(z_{0.9} * sigma) - 1 ~ 0.177 for sigma 0.127.
+        let analytic = (1.2816 * sigma).exp() - 1.0;
+        assert!(
+            (h.pad() - analytic).abs() < 0.08,
+            "settled pad {} vs analytic {analytic}",
+            h.pad()
+        );
+        assert_eq!(h.level(), 0, "a calibrated process must not trip the fallback");
+        assert_eq!(h.under_events + h.over_events, (RING * 4) as u64 + 20_000);
+    }
+}

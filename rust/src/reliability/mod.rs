@@ -36,6 +36,8 @@
 //! equivalence suite pins fleet summaries and merged telemetry
 //! bit-identical at any thread count with all guardrails enabled.
 
+pub mod headroom;
+
 use crate::trace::TraceItem;
 
 /// Tunable guardrail switches + knobs. Parse a mode string with

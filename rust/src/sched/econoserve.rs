@@ -998,6 +998,58 @@ mod tests {
     }
 
     #[test]
+    fn heavy_tail_overruns_evict_requeue_and_complete() {
+        // The organic variant of the forced §3.2 failure path above:
+        // under the heavy-tail predictor fault profile (per-prediction
+        // 4x blunders in either direction), divided predictions
+        // under-reserve spans — hosts reach their prediction end and are
+        // rescued or re-queued, and heads plow through guests riding in
+        // their tails. With adaptive headroom live, the whole
+        // overrun → evict → requeue → completion lifecycle must still
+        // finish every request, with evictions inside the budget.
+        use crate::predictor::faults::{by_name, FaultyPredictor};
+        use crate::util::rng::{derive_seed, stream};
+        let items: Vec<TraceItem> = (0..150)
+            .map(|i| TraceItem {
+                arrival: i as f64 * 0.01,
+                prompt_len: 16,
+                true_rl: 60 + (i as u32 % 5) * 40,
+            })
+            .collect();
+        let mut profile = ModelProfile::opt_13b();
+        profile.kvc_bytes = 819_200 * 4096;
+        let mut cfg = SystemConfig::new(profile);
+        cfg.padding_ratio = 0.10;
+        cfg.reserve_frac = 0.05;
+        cfg.headroom = "adaptive".to_string();
+        let fp = by_name("heavy-tail").expect("registry profile");
+        let pred = Box::new(FaultyPredictor::new(
+            Box::new(OraclePredictor::new(32)),
+            fp,
+            derive_seed(7, stream::PREDICTOR),
+            32,
+        ));
+        let mut w = World::new(cfg, &items, pred);
+        w.set_allocator("pipelined-exact");
+        let mut s = EconoServe::full();
+        let e = SimEngine::new();
+        let res = run(&mut w, &mut s, &e, RunLimits::default());
+        assert_eq!(res.summary.n_done, 150, "heavy-tail run incomplete");
+        assert!(
+            s.reserve_rescues + s.requeues > 0,
+            "4x blunders triggered no misprediction handling"
+        );
+        assert!(
+            w.col.max_iter_evictions <= 4,
+            "eviction budget violated: {} in one iteration",
+            w.col.max_iter_evictions
+        );
+        // Clean exit: no leaked guests or leases after the storm.
+        assert_eq!(w.kvc().guest_count(), 0);
+        assert_eq!(w.kvc().total_allocated(), 0);
+    }
+
+    #[test]
     fn all_variants_complete() {
         let items: Vec<TraceItem> = (0..25)
             .map(|i| TraceItem {

@@ -45,6 +45,26 @@ pub struct SimMetrics {
     pub alloc_exhausted: Counter,
     /// `econoserve_preemptions_total`.
     pub preemptions: Counter,
+    /// `econoserve_predictions_total{verdict="close"|"off"}` — RL
+    /// predictions made, split by whether they landed within one quantum
+    /// of the quantized truth (synced from the predictor's own
+    /// accounting, so fault-wrapper fallbacks are counted too).
+    pub pred_close: Counter,
+    pub pred_off: Counter,
+    /// `econoserve_prediction_provision_total{outcome="under"|"over"}` —
+    /// completed requests whose initial padded prediction under- or
+    /// over-provisioned the true RL (Fig 5a accounting).
+    pub pred_under: Counter,
+    pub pred_over: Counter,
+    /// `econoserve_prediction_error_ratio` — true/raw-predicted RL ratio
+    /// at completion (1.0 = exact; > 1 the predictor under-shot).
+    pub prediction_error: Histogram,
+    /// `econoserve_padding_ratio` — the padding ratio in force (static
+    /// sweet spot, or the adaptive headroom controller's current value).
+    pub padding_ratio: Gauge,
+    /// `econoserve_eviction_storms_total` — iterations whose overrun
+    /// sweep hit the eviction budget and deferred at least one eviction.
+    pub eviction_storms: Counter,
     /// `econoserve_batch_occupancy` — tasks per executed iteration.
     pub batch_occupancy: Histogram,
     /// `econoserve_kvc_utilization` — written-KVC fraction per iteration.
@@ -126,6 +146,42 @@ impl SimMetrics {
             preemptions: r.counter(
                 "econoserve_preemptions_total",
                 "Requests preempted out of the running batch",
+                &[],
+            ),
+            pred_close: r.counter(
+                "econoserve_predictions_total",
+                "RL predictions by closeness verdict",
+                &[("verdict", "close")],
+            ),
+            pred_off: r.counter(
+                "econoserve_predictions_total",
+                "RL predictions by closeness verdict",
+                &[("verdict", "off")],
+            ),
+            pred_under: r.counter(
+                "econoserve_prediction_provision_total",
+                "Completed requests by initial provisioning verdict",
+                &[("outcome", "under")],
+            ),
+            pred_over: r.counter(
+                "econoserve_prediction_provision_total",
+                "Completed requests by initial provisioning verdict",
+                &[("outcome", "over")],
+            ),
+            prediction_error: r.histogram(
+                "econoserve_prediction_error_ratio",
+                "True RL / raw predicted RL at completion",
+                Buckets::exponential(0.125, 2.0, 8),
+                &[],
+            ),
+            padding_ratio: r.gauge(
+                "econoserve_padding_ratio",
+                "Padding ratio in force (static or adaptive)",
+                &[],
+            ),
+            eviction_storms: r.counter(
+                "econoserve_eviction_storms_total",
+                "Iterations whose overrun sweep hit the eviction budget",
                 &[],
             ),
             batch_occupancy: r.histogram(

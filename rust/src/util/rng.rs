@@ -140,6 +140,12 @@ pub mod stream {
     /// identical at every thread count.
     pub const TRACE: u64 = 0x7AACE;
 
+    /// The predictor fault injector's stream (`predictor::faults`):
+    /// drift/shift/outage timelines and heavy-tail draws. Dedicated so
+    /// enabling predictor chaos never perturbs the workload, router,
+    /// replica-fault, or guardrail streams — and vice versa.
+    pub const PREDICTOR: u64 = 0x9ED1C7;
+
     /// Grid cells pack their coordinates into one stream ID. Bit 63
     /// flags the grid namespace so packed coordinates can never collide
     /// with the fixed IDs or the per-replica band above.
@@ -171,8 +177,13 @@ mod tests {
         // corner-heavy sample of the grid-cell namespace must be
         // pairwise distinct: a collision would make two "independent"
         // components draw identical randomness from the same base seed.
-        let mut ids: Vec<u64> =
-            vec![stream::ROUTER, stream::FAULTS, stream::GUARDRAILS, stream::TRACE];
+        let mut ids: Vec<u64> = vec![
+            stream::ROUTER,
+            stream::FAULTS,
+            stream::GUARDRAILS,
+            stream::TRACE,
+            stream::PREDICTOR,
+        ];
         ids.extend((0..4096).map(stream::replica));
         for &mi in &[0usize, 1, 7, 255] {
             for &ti in &[0usize, 1, 15, 1023] {

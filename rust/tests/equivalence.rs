@@ -644,6 +644,106 @@ fn fleet_trace_bytes_bit_identical_across_thread_counts() {
     assert_eq!(a, b, "fleet trace bytes diverged between serial and parallel stepping");
 }
 
+// ---------------------------------------------------------------------
+// Predictor faults + adaptive headroom: resilience is deterministic too
+// ---------------------------------------------------------------------
+
+/// A predictor fault profile compiles into a timeline that is a pure
+/// function of (profile, seed) — the predictor-side mirror of the fleet
+/// fault pin above.
+#[test]
+fn predictor_fault_timelines_are_pure_functions_of_profile_and_seed() {
+    use econoserve::predictor::faults;
+    for name in faults::all_profiles() {
+        let p = faults::by_name(name).unwrap();
+        let a = faults::timeline(&p, 0xC0FFEE, 1_000.0);
+        let b = faults::timeline(&p, 0xC0FFEE, 1_000.0);
+        assert_eq!(a, b, "{name}: timeline not reproducible per seed");
+        if !a.is_empty() {
+            let c = faults::timeline(&p, 0xBEEF, 1_000.0);
+            assert_ne!(a, c, "{name}: timeline ignores the seed");
+        }
+    }
+}
+
+/// The prediction-fault variant of the fleet determinism pin: with
+/// regime-shift predictor chaos AND the adaptive headroom controller
+/// live, serial (threads=1) and parallel (threads=4) replica stepping
+/// still yield the SAME summary, lifecycle log, and telemetry text —
+/// fault timelines and every adaptive padding/eviction-budget decision
+/// read only thread-invariant state. Plus the predictions_total
+/// reconciliation: the merged registry's verdict counters must equal
+/// the per-replica summaries' independent accounting.
+#[test]
+fn prediction_fault_fleet_bit_identical_and_counters_reconcile() {
+    use econoserve::fleet::{self, FleetConfig};
+    use econoserve::trace::{TraceGen, TraceSpec};
+    let mut cfg = mini_cfg(4096);
+    cfg.seed = 41;
+    cfg.predictor_faults = "regime-shift".to_string();
+    cfg.headroom = "adaptive".to_string();
+    let gen = TraceGen::new(TraceSpec::sharegpt());
+    let items = gen.generate(400, 2.0, 1024, 41);
+    let run_with = |threads: usize| {
+        let mut fc = FleetConfig::new(cfg.clone(), "econoserve", "sharegpt");
+        fc.oracle = false;
+        fc.router = "least-kvc".to_string();
+        fc.autoscaler = "reactive".to_string();
+        fc.init_replicas = 2;
+        fc.min_replicas = 2;
+        fc.max_replicas = 3;
+        fc.boot_latency = 5.0;
+        fc.max_sim_time = 2_000.0;
+        fc.threads = threads;
+        fleet::run(&fc, &items)
+    };
+    let serial = run_with(1);
+    let parallel = run_with(4);
+    assert_eq!(
+        serial.summary, parallel.summary,
+        "prediction-fault FleetSummary diverged between serial and parallel stepping"
+    );
+    assert_eq!(
+        format!("{:?}", serial.replicas),
+        format!("{:?}", parallel.replicas),
+        "prediction-fault replica lifecycle logs diverged"
+    );
+    assert_eq!(
+        serial.metrics, parallel.metrics,
+        "prediction-fault telemetry snapshot diverged between serial and parallel stepping"
+    );
+
+    use econoserve::telemetry::Snapshot;
+    let snap = Snapshot::parse(&serial.metrics).expect("fleet metrics parse");
+    let close = snap
+        .value("econoserve_predictions_total", &[("verdict", "close")])
+        .expect("predictions_total{close} present");
+    let off = snap
+        .value("econoserve_predictions_total", &[("verdict", "off")])
+        .expect("predictions_total{off} present");
+    assert!(close + off > 0.0, "no predictions issued — the pin is vacuous");
+    let sum_pred: u64 = serial.per_replica.iter().map(|s| s.n_pred).sum();
+    let sum_close: u64 = serial.per_replica.iter().map(|s| s.n_close).sum();
+    assert_eq!(
+        close + off,
+        sum_pred as f64,
+        "predictions_total != sum of per-replica summary n_pred"
+    );
+    assert_eq!(close, sum_close as f64, "predictions_total{{close}} != summary n_close");
+
+    // Non-vacuity for the resilience machinery itself: regime-shift
+    // under-provisioning was observed and the adaptive gauge moved off
+    // the static sweet spot.
+    let under = snap
+        .value("econoserve_prediction_provision_total", &[("outcome", "under")])
+        .expect("provision_total{under} present");
+    assert!(under > 0.0, "regime-shift run saw no under-provisioning — pin is vacuous");
+    assert!(
+        snap.value("econoserve_padding_ratio", &[]).is_some(),
+        "adaptive padding gauge missing"
+    );
+}
+
 /// `exp::run_grid` with the faults axis emits bit-identical JSON rows
 /// at 1 and 4 threads, and each fleet row carries its fault profile.
 #[test]

@@ -59,6 +59,21 @@ cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- tracelint \
     --file "$TRACE_OUT" --metrics "$TRACE_METRICS"
 cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- trace-report \
     --file "$TRACE_OUT"
+# Prediction-fault resilience smoke: a fleet under regime-shift
+# predictor chaos with the adaptive headroom controller live must
+# produce a metrics snapshot (prediction verdict/provision families,
+# padding gauge, eviction-storm counter included) that survives strict
+# promlint AND a span trace that lints clean against the same run's
+# counters — the --predictor-faults / --headroom axes end-to-end.
+HEADROOM_OUT="${TMPDIR:-/tmp}/econoserve_headroom_smoke.prom"
+HEADROOM_TRACE="${TMPDIR:-/tmp}/econoserve_headroom_smoke.json"
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- fleet \
+    --predictor-faults regime-shift --headroom adaptive --trace sharegpt \
+    --workload poisson --rate 3 --duration 120 --replicas 2 --min 2 \
+    --max 3 --oracle --metrics-out "$HEADROOM_OUT" --trace-out "$HEADROOM_TRACE"
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- promlint "$HEADROOM_OUT"
+cargo run --release ${CARGO_FLAGS:-} --bin econoserve -- tracelint \
+    --file "$HEADROOM_TRACE" --metrics "$HEADROOM_OUT"
 # Telemetry smoke: a fleet run's merged registry snapshot must be
 # canonical Prometheus exposition text (promlint = strict re-parse +
 # byte-identical re-render).
